@@ -1,0 +1,157 @@
+//! END-TO-END DRIVER: the full system on a real workload.
+//!
+//! All layers compose here:
+//!  - L3 coordinator spawns a TCP KV cluster, routes a mixed write/read
+//!    workload, scales out under load, decommissions a node;
+//!  - the PJRT runtime (L2/L1 AOT artifacts from jax+pallas) performs the
+//!    bulk placement analytics (histogram + movement plan) and is
+//!    cross-checked against the live cluster's ground truth;
+//!  - latency/throughput and the paper's uniformity metric are reported.
+//!
+//! Requires `make artifacts` for the runtime section (degrades with a
+//! notice if missing). Run: `cargo run --release --example e2e_kv_cluster`
+
+use asura::coordinator::Coordinator;
+use asura::prng::fold64;
+use asura::runtime::{BulkPlacer, Engine};
+use asura::stats::{Histogram, Summary};
+use asura::workload::{Op, TraceGen};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let nodes = 16u32;
+    let keys = 20_000u64;
+
+    // ---- cluster up -----------------------------------------------------
+    let mut coord = Coordinator::new(1);
+    let t0 = Instant::now();
+    for i in 0..nodes {
+        coord.spawn_node(i, 1.0)?;
+    }
+    println!(
+        "[e2e] cluster up: {nodes} TCP nodes in {:.0} ms (epoch {})",
+        t0.elapsed().as_secs_f64() * 1e3,
+        coord.epoch()
+    );
+
+    // ---- serve a mixed workload ------------------------------------------
+    let trace = TraceGen {
+        keys,
+        value_size: 64,
+        read_ops: keys * 2,
+        zipf_alpha: 1.0,
+        seed: 0xE2E,
+    };
+    let mut set_lat = Summary::new();
+    let mut get_lat = Summary::new();
+    let value = vec![7u8; 64];
+    let t0 = Instant::now();
+    let mut hits = 0u64;
+    for op in trace.ops() {
+        match op {
+            Op::Set { key, .. } => {
+                let t = Instant::now();
+                coord.set(key, &value)?;
+                set_lat.push(t.elapsed().as_nanos() as f64);
+            }
+            Op::Get { key } => {
+                let t = Instant::now();
+                if coord.get(key)?.is_some() {
+                    hits += 1;
+                }
+                get_lat.push(t.elapsed().as_nanos() as f64);
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total_ops = set_lat.len() + get_lat.len();
+    println!(
+        "[e2e] {total_ops} ops in {wall:.2}s = {:.0} ops/s  (hit rate {:.1}%)",
+        total_ops as f64 / wall,
+        100.0 * hits as f64 / get_lat.len() as f64
+    );
+    println!(
+        "[e2e] set latency: p50 {:.0} µs  p99 {:.0} µs   get: p50 {:.0} µs  p99 {:.0} µs",
+        set_lat.percentile(50.0) / 1e3,
+        set_lat.percentile(99.0) / 1e3,
+        get_lat.percentile(50.0) / 1e3,
+        get_lat.percentile(99.0) / 1e3
+    );
+
+    // ---- uniformity (Table III metric) ------------------------------------
+    let counts = coord.node_key_counts()?;
+    let hist = Histogram::from_counts(counts.clone());
+    println!(
+        "[e2e] stored-key max variability across {nodes} nodes: {:.2}%",
+        hist.max_variability_pct()
+    );
+
+    // ---- PJRT bulk analytics cross-check ----------------------------------
+    match Engine::open_default() {
+        Ok(engine) => {
+            let mut bulk = BulkPlacer::new(engine);
+            let trace_keys: Vec<u32> = TraceGen {
+                keys,
+                value_size: 64,
+                read_ops: 0,
+                zipf_alpha: 1.0,
+                seed: 0xE2E,
+            }
+            .ops()
+            .filter_map(|op| match op {
+                Op::Set { key, .. } => Some(fold64(key)),
+                _ => None,
+            })
+            .collect();
+            let t0 = Instant::now();
+            let hist = bulk.hist(coord.placer().table(), &trace_keys)?;
+            println!(
+                "[e2e] PJRT bulk placement of {} keys in {:.0} ms ({} unresolved lanes)",
+                trace_keys.len(),
+                t0.elapsed().as_secs_f64() * 1e3,
+                hist.unresolved
+            );
+            // Ground truth: the artifact's node histogram must equal the
+            // live cluster's per-node key counts.
+            for &(node, want) in &counts {
+                let got = hist.node_counts[node as usize] as u64;
+                assert_eq!(got, want, "node {node}: artifact {got} vs cluster {want}");
+            }
+            println!("[e2e] artifact node histogram == live cluster counts ✓");
+
+            // Movement plan for the upcoming scale-out, computed by the
+            // two-epoch artifact before we touch the cluster.
+            let before = coord.placer().table().clone();
+            let mut probe = coord.placer().clone();
+            asura::algo::Membership::add_node(&mut probe, nodes, 1.0);
+            let plan = bulk.movement(&before, probe.table(), &trace_keys)?;
+            println!(
+                "[e2e] planned movement for +1 node: {} of {} keys ({:.2}%, optimal {:.2}%)",
+                plan.moved,
+                trace_keys.len(),
+                100.0 * plan.moved as f64 / trace_keys.len() as f64,
+                100.0 / (nodes + 1) as f64
+            );
+        }
+        Err(e) => println!("[e2e] PJRT analytics skipped: {e:#} (run `make artifacts`)"),
+    }
+
+    // ---- scale out + decommission under verification ----------------------
+    let report = coord.spawn_node(nodes, 1.0)?;
+    println!(
+        "[e2e] scale-out: checked {} keys, moved {} over the wire",
+        report.checked, report.moved
+    );
+    let report = coord.decommission(3)?;
+    println!(
+        "[e2e] decommission node 3: checked {}, moved {}",
+        report.checked, report.moved
+    );
+    let readable = coord.verify_all_readable()?;
+    println!(
+        "[e2e] verified {readable} keys readable; metrics: {}",
+        coord.metrics.render()
+    );
+    println!("[e2e] OK");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: the ASURA public API in 60 lines.
+//!
+//! Builds a weighted segment table, places data, shows capacity-
+//! proportional distribution and optimal movement on scale-out.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use asura::algo::asura::AsuraPlacer;
+use asura::algo::{Membership, Placer};
+use asura::stats::Histogram;
+
+fn main() {
+    // STEP 1 (paper §2.A): assign nodes to segments by capacity.
+    // Node 0: 1.5 units, node 1: 0.7, node 2: 1.0 — the paper's Fig. 3.
+    let mut placer = AsuraPlacer::new();
+    placer.add_node(0, 1.5);
+    placer.add_node(1, 0.7);
+    placer.add_node(2, 1.0);
+    println!("segment table: m={} segments", placer.table().m());
+    for node in placer.nodes() {
+        println!(
+            "  node {node}: segments {:?}, weight {:.2}",
+            placer.table().segments_of(node),
+            placer.weight_of(node)
+        );
+    }
+
+    // STEP 2: the distribution stage — a pure function of (id, table).
+    for id in [42u64, 0xDEAD_BEEF, 7_000_000_000] {
+        println!("datum {id:>12} -> node {}", placer.place(id));
+    }
+
+    // Distribution follows capacity.
+    let ids = 300_000u64;
+    let hist = Histogram::collect(&placer, 0..ids);
+    println!("\nplaced {ids} data:");
+    for &(node, count) in hist.counts() {
+        let share = 100.0 * count as f64 / ids as f64;
+        let want = 100.0 * placer.weight_of(node) / 3.2;
+        println!("  node {node}: {count} ({share:.2}%, capacity share {want:.2}%)");
+    }
+    println!(
+        "weighted max variability: {:.2}%",
+        hist.max_variability_weighted_pct(&placer)
+    );
+
+    // Optimal movement: adding a node moves data only *to* it.
+    let before: Vec<u32> = (0..50_000u64).map(|i| placer.place(i)).collect();
+    placer.add_node(3, 1.0);
+    let mut moved = 0;
+    for (i, &b) in before.iter().enumerate() {
+        let a = placer.place(i as u64);
+        assert!(a == b || a == 3, "optimal movement violated");
+        if a != b {
+            moved += 1;
+        }
+    }
+    println!(
+        "\nadded node 3 (1.0 units): {moved} of 50000 moved ({:.2}%; its capacity share is {:.2}%)",
+        100.0 * moved as f64 / 50_000.0,
+        100.0 * 1.0 / 4.2
+    );
+
+    // Replication: first R hits on distinct nodes (§5.A).
+    let mut replicas = Vec::new();
+    placer.place_replicas(42, 3, &mut replicas);
+    println!("datum 42 replica set: {replicas:?}");
+}

@@ -1,0 +1,100 @@
+"""AOT lowering: jax (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Run once at build time (``make artifacts``); python never executes on the
+request path. The interchange format is **HLO text**, not a serialized
+``HloModuleProto``: jax >= 0.5 emits protos with 64-bit instruction ids
+that the runtime's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each artifact is lowered with ``return_tuple=True``; the Rust side
+unwraps the tuple. A ``manifest.json`` records shapes so the runtime can
+validate its inputs before compiling.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Artifact shape points: (batch, segments). The coordinator picks the
+# smallest variant that fits; the harnesses use the big one.
+VARIANTS = [
+    (4096, 4096),
+    (1024, 256),
+]
+STRAW_VARIANTS = [
+    (1024, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the version-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def build_artifacts():
+    """Yield (name, lowered) pairs for every artifact."""
+    for b, m in VARIANTS:
+        yield (
+            f"asura_place_b{b}_m{m}",
+            jax.jit(model.place_fn).lower(u32(b), u32(m), u32(1)),
+            {"inputs": [[b], [m], [1]], "outputs": [[b]]},
+        )
+        yield (
+            f"asura_hist_b{b}_m{m}",
+            jax.jit(model.hist_fn).lower(u32(b), u32(m), u32(1), u32(m)),
+            {"inputs": [[b], [m], [1], [m]], "outputs": [[b], [m], [m], [1]]},
+        )
+        yield (
+            f"asura_move_b{b}_m{m}",
+            jax.jit(model.movement_fn).lower(u32(b), u32(m), u32(1), u32(m), u32(1)),
+            {"inputs": [[b], [m], [1], [m], [1]], "outputs": [[b], [b], [1]]},
+        )
+    for b, n in STRAW_VARIANTS:
+        yield (
+            f"straw_place_b{b}_n{n}",
+            jax.jit(model.straw_fn).lower(u32(b), u32(n), u32(n)),
+            {"inputs": [[b], [n], [n]], "outputs": [[b]]},
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, lowered, shapes in build_artifacts():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {"file": f"{name}.hlo.txt", **shapes, "dtype": "u32"}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Generate cross-layer golden vectors into testdata/.
+
+The JSON this emits is committed and consumed by BOTH test suites:
+pytest asserts the kernels reproduce it; `cargo test` asserts the Rust
+scalar path reproduces it. Any drift in the placement contract breaks one
+side visibly.
+
+Usage: cd python && python -m compile.gen_golden
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .kernels import ref
+
+
+def main() -> None:
+    out = {}
+
+    out["fmix32"] = [
+        {"input": x, "output": ref.fmix32(x)}
+        for x in [0, 1, 2, 0xDEADBEEF, 0xFFFFFFFF, 12345, 0x80000000]
+    ]
+    out["fold64"] = [
+        {"input_lo": x & 0xFFFFFFFF, "input_hi": x >> 32, "output": ref.fold64(x)}
+        for x in [0, 1, 0xABCDEF0123456789, 2**64 - 1, 424242]
+    ]
+    out["level_seed"] = [
+        {"id32": i, "level": l, "output": ref.level_seed(i, l)}
+        for i in [0, 7, 0xCAFEBABE]
+        for l in [0, 1, 5, 23]
+    ]
+    out["draw_pair"] = [
+        {"seed": s, "t": t, "hi": ref.draw_pair(s, t)[0], "lo": ref.draw_pair(s, t)[1]}
+        for s in [0, 42, 0xFEEDFACE]
+        for t in [0, 1, 1000]
+    ]
+
+    tables = {
+        "equal7": [1.0] * 7,
+        "hetero": [0.5, 1.0, 2.0, 4.0, 0.25],
+        "big100": [1.0] * 100,
+        "fig3": [1.5, 0.7, 1.0],  # paper Fig. 3 capacities (A, B, C)
+    }
+    out["asura"] = {}
+    for name, caps in tables.items():
+        lens, owners = ref.segment_table(caps)
+        ids = list(range(64)) + [0xFFFFFFFF, 0x12345678]
+        out["asura"][name] = {
+            "caps": caps,
+            "lens_q24": lens,
+            "owners": owners,
+            "placements": [
+                {"id32": i, "seg": ref.asura_place(i, lens)} for i in ids
+            ],
+            "counted": [
+                {
+                    "id32": i,
+                    "seg": ref.asura_place_counted(i, lens)[0],
+                    "draws": ref.asura_place_counted(i, lens)[1],
+                }
+                for i in ids[:16]
+            ],
+            "replicas3": [
+                {"id32": i, "segs": ref.asura_replicas(i, lens, owners, min(3, len(caps)))}
+                for i in ids[:16]
+            ],
+        }
+
+    node_ids = list(range(16))
+    factors = [65536] * 16
+    out["straw"] = {
+        "node_ids": node_ids,
+        "factors": factors,
+        "placements": [
+            {"id32": i, "node": ref.straw_place(i, node_ids, factors)}
+            for i in range(64)
+        ],
+    }
+
+    ring = ref.chash_ring([(n, 1.0) for n in range(8)], 100)
+    out["chash"] = {
+        "nodes": 8,
+        "vnodes": 100,
+        "ring_len": len(ring),
+        "ring_head": [[p, n] for p, n in ring[:8]],
+        "placements": [
+            {"id32": i, "node": ref.chash_place(i, ring)} for i in range(64)
+        ],
+    }
+
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "testdata")
+    os.makedirs(path, exist_ok=True)
+    target = os.path.join(path, "golden_placements.json")
+    with open(target, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"wrote {target}")
+
+
+if __name__ == "__main__":
+    main()

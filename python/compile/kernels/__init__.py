@@ -1,0 +1,10 @@
+"""Pallas kernels (L1) and the pure-python placement oracle.
+
+uint64 straw values require x64 support; enable it before any kernel is
+traced. All placement-relevant dtypes are explicit, so this does not
+change any cross-layer bit pattern.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

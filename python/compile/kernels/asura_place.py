@@ -1,0 +1,204 @@
+"""L1: batched ASURA placement as a Pallas kernel.
+
+The paper's distribution stage is an unbounded scalar loop; the TPU-shaped
+reformulation (DESIGN.md §Hardware-Adaptation) runs it as a fixed-trip
+vectorized state machine:
+
+- the ID batch is tiled into VMEM blocks (`BlockSpec`), the Q24
+  segment-length table stays resident (M * 4 bytes << VMEM);
+- each `fori_loop` trip executes one *primitive draw* per lane: a pair of
+  fmix32 taps, a variable shift for the integer part, and three masks
+  (reject / descend / emit) updating per-lane state;
+- per-level stream positions are a (B, LEVELS) u32 counter matrix — this
+  is why the PRNG is counter-based (a stateful generator could not be
+  vectorized this way);
+- lanes freeze when they hit; after MAX_STEPS any unresolved lane reports
+  INVALID (0xFFFFFFFF) and the Rust scalar path finishes it. With a
+  covered fraction >= 1/4 (guaranteed: the top range is < 2x the line and
+  holes only shrink it further), P(unresolved) <= (3/4)^(MAX_STEPS/levels)
+  — measured in the pytest suite.
+
+Everything is u32: placement bits match ``ref.py`` and the Rust scalar
+path exactly.
+
+`interpret=True` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so the kernel is lowered to plain HLO. On a real TPU
+the same kernel body compiles with interpret=False.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MASK32 = 0xFFFFFFFF
+PHI32 = 0x9E3779B9
+TAG_HI = 0x85EBCA6B
+TAG_LO = 0xC2B2AE35
+LEVEL_SEED_BASE = 0x0A5152A0
+INVALID = 0xFFFFFFFF
+
+# Levels representable in the kernel: ranges up to 16 * 2^(KLEVELS-1).
+# KLEVELS=24 covers m up to 2^27 segments — far beyond any artifact size.
+KLEVELS = 24
+# Primitive draws per lane before declaring INVALID.
+MAX_STEPS = 64
+# Default batch tile.
+BLOCK = 512
+
+
+def _fmix32(h):
+    h = h ^ (h >> 16)
+    h = h * 0x85EBCA6B
+    h = h ^ (h >> 13)
+    h = h * 0xC2B2AE35
+    h = h ^ (h >> 16)
+    return h
+
+
+def _level_seed(id32, level):
+    return _fmix32(id32 ^ _fmix32(LEVEL_SEED_BASE + level * PHI32))
+
+
+def _asura_kernel(ids_ref, lens_ref, m_ref, out_ref, *, max_steps: int):
+    ids = ids_ref[...].astype(jnp.uint32)  # (B,)
+    lens = lens_ref[...].astype(jnp.uint32)  # (M,)
+    m = m_ref[0].astype(jnp.uint32)
+    b = ids.shape[0]
+    mseg = lens.shape[0]
+
+    lvl = jnp.arange(KLEVELS, dtype=jnp.uint32)
+    # top = smallest l with 16<<l >= m  ==  count of l with 16<<l < m.
+    top = jnp.sum(((jnp.uint32(16) << lvl) < m).astype(jnp.uint32))
+
+    level0 = jnp.full((b,), top, jnp.uint32)
+    pos0 = jnp.zeros((b, KLEVELS), jnp.uint32)
+    done0 = jnp.zeros((b,), jnp.bool_)
+    res0 = jnp.full((b,), INVALID, jnp.uint32)
+
+    def body(carry):
+        step, level, pos, done, result = carry
+        k = jnp.uint32(4) + level
+        seed = _level_seed(ids, level)
+        t = jnp.take_along_axis(pos, level[:, None].astype(jnp.int32), axis=1)[:, 0]
+        base = seed ^ (t * PHI32)
+        hi = _fmix32(base ^ TAG_HI)
+        lo = _fmix32(base ^ TAG_LO)
+        int_part = hi >> (jnp.uint32(32) - k)
+        frac = lo >> jnp.uint32(8)
+
+        reject = int_part >= m
+        descend = (~reject) & (level > jnp.uint32(0)) & (hi < jnp.uint32(0x80000000))
+        emit = (~reject) & (~descend)
+        idx = jnp.minimum(int_part, jnp.uint32(mseg - 1)).astype(jnp.int32)
+        seg_len = lens[idx]
+        hit = emit & (frac < seg_len)
+
+        act = ~done
+        onehot = (lvl[None, :] == level[:, None]) & act[:, None]
+        pos = pos + onehot.astype(jnp.uint32)
+        new_level = jnp.where(
+            descend,
+            level - jnp.uint32(1),
+            jnp.where(emit & (~hit), jnp.full_like(level, top), level),
+        )
+        level = jnp.where(act, new_level, level)
+        result = jnp.where(act & hit, int_part, result)
+        done = done | hit
+        return step + 1, level, pos, done, result
+
+    def cond(carry):
+        step, _, _, done, _ = carry
+        # Early exit once every lane resolved (§Perf: the expected max
+        # over a block is ~log(B)/-log(miss) ≈ 10-15 steps, far below
+        # the MAX_STEPS bound).
+        return (step < max_steps) & (~jnp.all(done))
+
+    _, _, _, _, result = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), level0, pos0, done0, res0)
+    )
+    out_ref[...] = result
+
+
+@functools.partial(jax.jit, static_argnames=("block", "max_steps"))
+def asura_place_batch(ids, lens_q24, m, *, block: int = BLOCK, max_steps: int = MAX_STEPS):
+    """Place a batch of u32 ids over the segment line.
+
+    Args:
+      ids: (B,) uint32 folded datum ids; B must be a multiple of `block`.
+      lens_q24: (M,) uint32 segment lengths (Q24; 0 = hole). Entries at
+        index >= m are ignored (pad with 0).
+      m: (1,) uint32 — maximum segment number + 1 (m <= M).
+
+    Returns:
+      (B,) uint32 segment numbers; INVALID where unresolved.
+    """
+    b = ids.shape[0]
+    mseg = lens_q24.shape[0]
+    block = min(block, b)
+    assert b % block == 0, f"batch {b} not a multiple of block {block}"
+    grid = (b // block,)
+    return pl.pallas_call(
+        functools.partial(_asura_kernel, max_steps=max_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((mseg,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(ids, lens_q24, m)
+
+
+def asura_place_batch_jnp(ids, lens_q24, m, *, max_steps: int = MAX_STEPS):
+    """Pure-jnp vectorized reference of the same state machine (no
+    pallas) — the L2-level oracle the pytest suite checks the kernel
+    against, and a fallback lowering path."""
+    ids = ids.astype(jnp.uint32)
+    lens = lens_q24.astype(jnp.uint32)
+    m_s = m[0].astype(jnp.uint32)
+    b = ids.shape[0]
+    mseg = lens.shape[0]
+    lvl = jnp.arange(KLEVELS, dtype=jnp.uint32)
+    top = jnp.sum(((jnp.uint32(16) << lvl) < m_s).astype(jnp.uint32))
+
+    def body(_, carry):
+        level, pos, done, result = carry
+        k = jnp.uint32(4) + level
+        seed = _level_seed(ids, level)
+        t = jnp.take_along_axis(pos, level[:, None].astype(jnp.int32), axis=1)[:, 0]
+        base = seed ^ (t * PHI32)
+        hi = _fmix32(base ^ TAG_HI)
+        lo = _fmix32(base ^ TAG_LO)
+        int_part = hi >> (jnp.uint32(32) - k)
+        frac = lo >> jnp.uint32(8)
+        reject = int_part >= m_s
+        descend = (~reject) & (level > jnp.uint32(0)) & (hi < jnp.uint32(0x80000000))
+        emit = (~reject) & (~descend)
+        idx = jnp.minimum(int_part, jnp.uint32(mseg - 1)).astype(jnp.int32)
+        hit = emit & (frac < lens[idx])
+        act = ~done
+        pos = pos + ((lvl[None, :] == level[:, None]) & act[:, None]).astype(jnp.uint32)
+        new_level = jnp.where(
+            descend,
+            level - jnp.uint32(1),
+            jnp.where(emit & (~hit), jnp.full_like(level, top), level),
+        )
+        level = jnp.where(act, new_level, level)
+        result = jnp.where(act & hit, int_part, result)
+        done = done | hit
+        return level, pos, done, result
+
+    init = (
+        jnp.full((b,), top, jnp.uint32),
+        jnp.zeros((b, KLEVELS), jnp.uint32),
+        jnp.zeros((b,), jnp.bool_),
+        jnp.full((b,), INVALID, jnp.uint32),
+    )
+    _, _, _, result = jax.lax.fori_loop(0, max_steps, body, init)
+    return result

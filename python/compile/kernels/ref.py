@@ -1,0 +1,240 @@
+"""Pure-python oracle for the cross-layer placement contract.
+
+This file is the *normative reference* shared by all three layers:
+
+- ``rust/src/prng.rs`` + ``rust/src/algo/asura/`` implement the identical
+  u32 integer arithmetic for the scalar request path (L3);
+- ``kernels/asura_place.py`` implements it as a vectorized Pallas kernel
+  (L1) that lowers into the L2 jax graphs;
+- this module implements it in plain python ints so pytest (and the
+  committed golden vectors under ``testdata/``) can pin all of them to the
+  same bits.
+
+Everything here is exact u32 arithmetic — no floats touch a placement
+decision. See DESIGN.md §Cross-layer determinism.
+"""
+
+from __future__ import annotations
+
+MASK32 = 0xFFFFFFFF
+PHI32 = 0x9E3779B9
+TAG_HI = 0x85EBCA6B
+TAG_LO = 0xC2B2AE35
+LEVEL_SEED_BASE = 0x0A5152A0
+Q24_ONE = 1 << 24
+INVALID = 0xFFFFFFFF
+MAX_LEVELS = 29  # mirrors rust::algo::asura::rng::MAX_LEVELS
+
+
+def fmix32(h: int) -> int:
+    """MurmurHash3 32-bit finalizer (bit-for-bit the Rust fmix32)."""
+    h &= MASK32
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & MASK32
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & MASK32
+    h ^= h >> 16
+    return h
+
+
+def fold64(id64: int) -> int:
+    """Fold a 64-bit datum ID onto the 32-bit placement domain."""
+    return fmix32((id64 & MASK32) ^ fmix32((id64 >> 32) & MASK32))
+
+
+def level_seed(id32: int, level: int) -> int:
+    """Seed of the per-(datum, level) stream."""
+    return fmix32(id32 ^ fmix32((LEVEL_SEED_BASE + level * PHI32) & MASK32))
+
+
+def draw_pair(seed: int, t: int) -> tuple[int, int]:
+    """Draw ``t`` of a stream: (hi, lo) pair of u32s."""
+    base = (seed ^ ((t * PHI32) & MASK32)) & MASK32
+    return fmix32(base ^ TAG_HI), fmix32(base ^ TAG_LO)
+
+
+def hash2(a: int, b: int) -> int:
+    """Keyed hash used by the baselines (ring points, straw draws)."""
+    return fmix32(a ^ fmix32(b ^ TAG_HI))
+
+
+def top_level_for(m: int) -> int:
+    """Smallest level l with 16 * 2**l >= m."""
+    l = 0
+    while l < MAX_LEVELS - 1 and (16 << l) < m:
+        l += 1
+    return l
+
+
+def asura_numbers(id32: int, m: int, top: int | None = None):
+    """Generator of (int_part, frac_q24, was_rejected) ASURA random
+    numbers for datum ``id32`` over the line [0, m).
+
+    ``top`` may exceed the natural top level to model §2.D range
+    extension. Rejected values (int_part >= m) are yielded too so the
+    metadata tests can observe anterior candidates.
+    """
+    if top is None:
+        top = top_level_for(m)
+    pos = [0] * (top + 1)
+    level = top
+    while True:
+        k = 4 + level
+        seed = level_seed(id32, level)
+        hi, lo = draw_pair(seed, pos[level])
+        pos[level] += 1
+        int_part = hi >> (32 - k)
+        frac = lo >> 8
+        if int_part >= m:
+            yield int_part, frac, True
+            continue
+        if level > 0 and hi < 0x80000000:
+            level -= 1
+            continue
+        yield int_part, frac, False
+        level = top
+
+
+def asura_place(id32: int, lens_q24: list[int], max_steps: int | None = None) -> int:
+    """STEP 2 of ASURA: the segment that stores ``id32``.
+
+    ``lens_q24[s]`` is the Q24 length of segment ``s`` (0 = hole).
+    If ``max_steps`` is given, gives up after that many *primitive draws*
+    and returns INVALID — this models the kernel's fixed trip count.
+    """
+    m = len(lens_q24)
+    assert m >= 1
+    top = top_level_for(m)
+    pos = [0] * (top + 1)
+    level = top
+    steps = 0
+    while True:
+        steps += 1
+        if max_steps is not None and steps > max_steps:
+            return INVALID
+        k = 4 + level
+        seed = level_seed(id32, level)
+        hi, lo = draw_pair(seed, pos[level])
+        pos[level] += 1
+        int_part = hi >> (32 - k)
+        if int_part >= m:
+            continue
+        if level > 0 and hi < 0x80000000:
+            level -= 1
+            continue
+        if (lo >> 8) < lens_q24[int_part]:
+            return int_part
+        level = top
+
+
+def asura_place_counted(id32: int, lens_q24: list[int]) -> tuple[int, int]:
+    """Placement plus the number of primitive draws (Appendix B)."""
+    m = len(lens_q24)
+    top = top_level_for(m)
+    pos = [0] * (top + 1)
+    level = top
+    steps = 0
+    while True:
+        steps += 1
+        k = 4 + level
+        seed = level_seed(id32, level)
+        hi, lo = draw_pair(seed, pos[level])
+        pos[level] += 1
+        int_part = hi >> (32 - k)
+        if int_part >= m:
+            continue
+        if level > 0 and hi < 0x80000000:
+            level -= 1
+            continue
+        if (lo >> 8) < lens_q24[int_part]:
+            return int_part, steps
+        level = top
+
+
+def asura_replicas(id32: int, lens_q24: list[int], owners: list[int], r: int) -> list[int]:
+    """First ``r`` hit segments with pairwise-distinct owners (§5.A)."""
+    m = len(lens_q24)
+    segs: list[int] = []
+    nodes: list[int] = []
+    for int_part, frac, rejected in asura_numbers(id32, m):
+        if rejected or frac >= lens_q24[int_part]:
+            continue
+        owner = owners[int_part]
+        if owner in nodes:
+            continue
+        nodes.append(owner)
+        segs.append(int_part)
+        if len(segs) == r:
+            return segs
+
+
+def straw_place(id32: int, node_ids: list[int], factors_16_16: list[int]) -> int:
+    """Straw Buckets: node with the max straw-scaled draw (48-bit value).
+
+    Ties break toward the smaller node id — same rule as the Rust
+    implementation and the kernel's argmax-over-ascending-ids.
+    """
+    best_v = -1
+    best_n = None
+    for node, factor in zip(node_ids, factors_16_16):
+        node, factor = int(node), int(factor)
+        v = hash2(int(id32), node) * factor
+        if v > best_v or (v == best_v and (best_n is None or node < best_n)):
+            best_v, best_n = v, node
+    return best_n
+
+
+def chash_place(id32: int, ring: list[tuple[int, int]]) -> int:
+    """Consistent Hashing successor lookup. ``ring`` is sorted
+    (point, node). Mirrors rust/src/algo/chash.rs."""
+    key = fmix32(id32 ^ 0xC0FFEE01)
+    lo, hi = 0, len(ring)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if ring[mid][0] < key:
+            lo = mid + 1
+        else:
+            hi = mid
+    return ring[lo % len(ring)][1]
+
+
+def chash_ring(node_caps: list[tuple[int, float]], vnodes_per_unit: int) -> list[tuple[int, int]]:
+    """Build a Consistent Hashing ring (mirrors ConsistentHash::add_node)."""
+    ring = []
+    for node, cap in node_caps:
+        count = max(1, round(vnodes_per_unit * cap))
+        for v in range(count):
+            ring.append((hash2(node, v), node))
+    ring.sort()
+    return ring
+
+
+def q24_from_float(x: float) -> int:
+    """Quantize [0,1] to Q24, round-to-nearest, positive never 0
+    (mirrors fixed::Q24::from_f64)."""
+    c = min(max(x, 0.0), 1.0)
+    q = round(c * Q24_ONE)
+    if c > 0.0 and q == 0:
+        return 1
+    return min(q, Q24_ONE)
+
+
+def segment_table(caps: list[float]) -> tuple[list[int], list[int]]:
+    """Build (lens_q24, owners) for nodes 0..len(caps)-1 added in order
+    with the smallest-unused rule on an empty table (mirrors
+    SegmentTable::add_node on a fresh table)."""
+    lens: list[int] = []
+    owners: list[int] = []
+    for node, cap in enumerate(caps):
+        full = int(cap)
+        for _ in range(full):
+            lens.append(Q24_ONE)
+            owners.append(node)
+        rem = cap - full
+        if rem > 0:
+            lens.append(q24_from_float(rem))
+            owners.append(node)
+        if full == 0 and rem <= 0:
+            lens.append(1)
+            owners.append(node)
+    return lens, owners

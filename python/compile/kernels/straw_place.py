@@ -1,0 +1,79 @@
+"""L1: batched Straw Buckets placement as a Pallas kernel.
+
+Straw is embarrassingly parallel over (datum, node): each lane hashes the
+datum against every node, scales by the node's straw factor, and the max
+wins — a (BLOCK, N) VPU tile with an argmax reduction (DESIGN.md
+§Hardware-Adaptation). Straw values are 48-bit (u32 hash x 16.16 factor),
+carried in uint64.
+
+Tie-break: node ids are passed sorted ascending, so argmax's first-max
+rule selects the smallest node id — identical to the Rust comparator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TAG_HI = 0x85EBCA6B
+
+BLOCK = 256
+
+
+def _fmix32(h):
+    h = h ^ (h >> 16)
+    h = h * 0x85EBCA6B
+    h = h ^ (h >> 13)
+    h = h * 0xC2B2AE35
+    h = h ^ (h >> 16)
+    return h
+
+
+def _hash2(a, b):
+    return _fmix32(a ^ _fmix32(b ^ TAG_HI))
+
+
+def _straw_kernel(ids_ref, nodes_ref, factors_ref, out_ref):
+    ids = ids_ref[...].astype(jnp.uint32)  # (B,)
+    nodes = nodes_ref[...].astype(jnp.uint32)  # (N,) ascending; padding at end
+    factors = factors_ref[...].astype(jnp.uint32)  # (N,) 16.16; 0 = padding
+    draws = _hash2(ids[:, None], nodes[None, :])  # (B, N)
+    values = draws.astype(jnp.uint64) * factors[None, :].astype(jnp.uint64)
+    # Padding (factor 0) yields value 0; give real nodes a +1 floor so a
+    # zero-hash real node still beats padding.
+    values = values + (factors[None, :] > 0).astype(jnp.uint64)
+    winner = jnp.argmax(values, axis=1).astype(jnp.int32)  # first max = smallest id
+    out_ref[...] = nodes[winner]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def straw_place_batch(ids, node_ids, factors_16_16, *, block: int = BLOCK):
+    """Straw placement for a batch of u32 ids.
+
+    Args:
+      ids: (B,) uint32; B multiple of `block`.
+      node_ids: (N,) uint32, ascending, padded with trailing entries whose
+        factor is 0.
+      factors_16_16: (N,) uint32 straw factors (Ceph 0x10000 convention).
+
+    Returns:
+      (B,) uint32 winning node ids.
+    """
+    b = ids.shape[0]
+    n = node_ids.shape[0]
+    assert b % block == 0
+    return pl.pallas_call(
+        _straw_kernel,
+        grid=(b // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint32),
+        interpret=True,
+    )(ids, node_ids, factors_16_16)

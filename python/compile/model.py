@@ -1,0 +1,85 @@
+"""L2: the jax compute graphs the Rust runtime executes via PJRT.
+
+Three graphs, all built on the L1 Pallas kernels and lowered once by
+``aot.py`` to HLO text under ``artifacts/``:
+
+- **place**: batch ASURA placement — ids -> segment numbers.
+- **hist**: placement + per-node histogram. The histogram is formulated
+  as one-hot matmuls (MXU-shaped on real hardware, DESIGN.md
+  §Hardware-Adaptation): segment counts = ones @ onehot(segs), node
+  counts = seg_counts @ onehot(owners).
+- **movement**: two-epoch placement (before/after a membership change) +
+  moved mask and count — the bulk rebalance planner.
+
+A fourth graph wraps the Straw kernel for the baseline's bulk path.
+
+Boundary dtypes are u32 (natively supported by the xla crate); all
+internal arithmetic is the same u32 contract as ``kernels/ref.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.asura_place import INVALID, asura_place_batch
+from .kernels.straw_place import straw_place_batch
+
+# Sentinel owner for holes (mirrors rust segments::NO_SEG).
+NO_OWNER = jnp.uint32(0xFFFFFFFF)
+
+
+def place_fn(ids, lens_q24, m):
+    """ids (B,) u32, lens (M,) u32, m (1,) u32 -> segs (B,) u32."""
+    return (asura_place_batch(ids, lens_q24, m),)
+
+
+def _histogram(segs, lens_q24, owners):
+    """Segment + node histograms from a placement vector.
+
+    CPU formulation: scatter-adds (`.at[].add`) — XLA CPU lowers these to
+    tight loops, vs the O(B*M) one-hot intermediate (measured 8x slower
+    at B=M=4096; EXPERIMENTS.md §Perf). On a real TPU the MXU-shaped
+    alternative is `ones(1,B) @ one_hot(segs, M)` — one fused matmul —
+    which is what DESIGN.md §Hardware-Adaptation describes; switch here
+    when targeting interpret=False.
+    """
+    mseg = lens_q24.shape[0]
+    valid = (segs != INVALID).astype(jnp.uint32)  # (B,)
+    idx = jnp.where(segs == INVALID, jnp.uint32(0), segs).astype(jnp.int32)
+    seg_counts = jnp.zeros(mseg, jnp.uint32).at[idx].add(valid)
+    own_valid = (owners != NO_OWNER).astype(jnp.uint32)  # (M,)
+    own_idx = jnp.where(owners == NO_OWNER, jnp.uint32(0), owners).astype(jnp.int32)
+    node_counts = jnp.zeros(mseg, jnp.uint32).at[own_idx].add(seg_counts * own_valid)
+    return seg_counts, node_counts
+
+
+def hist_fn(ids, lens_q24, m, owners):
+    """-> (segs (B,), seg_counts (M,), node_counts (M,), unresolved (1,)).
+
+    ``owners[s]`` is the node owning segment s (NO_OWNER for holes);
+    ``node_counts`` is indexed by node id (node ids < M assumed for the
+    bulk-analytics path).
+    """
+    segs = asura_place_batch(ids, lens_q24, m)
+    seg_counts, node_counts = _histogram(segs, lens_q24, owners)
+    unresolved = jnp.sum((segs == INVALID).astype(jnp.uint32)).astype(jnp.uint32)[None]
+    return segs, seg_counts, node_counts, unresolved
+
+
+def movement_fn(ids, lens_before, m_before, lens_after, m_after):
+    """-> (segs_before (B,), segs_after (B,), moved_count (1,)).
+
+    Optimal-movement analytics: by the paper's §2.A proof the moved set on
+    addition is exactly the data whose placement differs between epochs.
+    """
+    before = asura_place_batch(ids, lens_before, m_before)
+    after = asura_place_batch(ids, lens_after, m_after)
+    moved = (before != after) & (before != INVALID) & (after != INVALID)
+    return before, after, jnp.sum(moved.astype(jnp.uint32)).astype(jnp.uint32)[None]
+
+
+def straw_fn(ids, node_ids, factors):
+    """Baseline bulk path: ids (B,), node_ids (N,), factors (N,) ->
+    winners (B,)."""
+    return (straw_place_batch(ids, node_ids, factors),)

@@ -1,0 +1,76 @@
+"""L1 kernel resource estimate (DESIGN.md §Perf).
+
+interpret=True gives CPU-numpy timings only, which say nothing about TPU
+behaviour — so the kernel is profiled *structurally*: VMEM bytes per
+block (must sit far below ~16 MB/core), bytes moved HBM<->VMEM per grid
+step, and arithmetic intensity. Run at build time:
+
+    cd python && python -m compile.perf_estimate
+"""
+
+from __future__ import annotations
+
+from .kernels.asura_place import BLOCK, KLEVELS, MAX_STEPS
+
+VMEM_BYTES = 16 * 2**20  # v4/v5 class core
+
+
+def asura_kernel_estimate(block: int = BLOCK, mseg: int = 4096, max_steps: int = MAX_STEPS):
+    u32 = 4
+    resident = {
+        "ids block": block * u32,
+        "lens table": mseg * u32,
+        "pos matrix (B,KLEVELS)": block * KLEVELS * u32,
+        "level/done/result/state": block * u32 * 4,
+        "scratch (draw temporaries ~6 vectors)": block * u32 * 6,
+    }
+    total = sum(resident.values())
+    # Per primitive draw, per lane: ~2 fmix32 (10 int-ops each) + seed
+    # fmix pair + masks ≈ 50 int-ops; one 4 B gather from the resident
+    # table. HBM traffic per grid step: the ids block in, result out
+    # (the lens table is loaded once per core, amortized over the grid).
+    ops_per_lane = 50 * max_steps  # upper bound; early-exit cuts ~5x
+    hbm_bytes = 2 * block * u32
+    intensity = ops_per_lane * block / hbm_bytes
+    return resident, total, intensity
+
+
+def straw_kernel_estimate(block: int = 256, n: int = 256):
+    u32 = 4
+    resident = {
+        "ids block": block * u32,
+        "node/factor tables": 2 * n * u32,
+        "draw matrix (B,N) u32": block * n * u32,
+        "values (B,N) u64": block * n * 8,
+    }
+    total = sum(resident.values())
+    ops = 25 * block * n  # hash + mul + compare per (lane, node)
+    hbm = 2 * block * u32
+    return resident, total, ops / hbm
+
+
+def main() -> None:
+    print("== asura_place kernel (per grid step) ==")
+    resident, total, intensity = asura_kernel_estimate()
+    for k, v in resident.items():
+        print(f"  {k:<40} {v/1024:>8.1f} KiB")
+    print(f"  {'TOTAL VMEM':<40} {total/1024:>8.1f} KiB  "
+          f"({100*total/VMEM_BYTES:.2f}% of a 16 MiB core)")
+    print(f"  arithmetic intensity ≈ {intensity:,.0f} int-ops/HBM-byte "
+          f"(compute-bound on any TPU; VPU-only, no MXU needed)")
+
+    print("\n== straw_place kernel (per grid step) ==")
+    resident, total, intensity = straw_kernel_estimate()
+    for k, v in resident.items():
+        print(f"  {k:<40} {v/1024:>8.1f} KiB")
+    print(f"  {'TOTAL VMEM':<40} {total/1024:>8.1f} KiB  "
+          f"({100*total/VMEM_BYTES:.2f}% of a 16 MiB core)")
+    print(f"  arithmetic intensity ≈ {intensity:,.0f} int-ops/HBM-byte")
+
+    print("\nheadroom: block could grow ~64x before VMEM pressure; on CPU the")
+    print("PJRT path is gated by interpret-lowered while_loop overhead instead")
+    print("(measured in rust/benches/runtime_batch.rs; EXPERIMENTS.md §Perf).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Render results/*.csv into the EXPERIMENTS.md tables.
+
+Regenerates the paper's figures as markdown series (the repo has no
+plotting stack; the CSV is the figure, this is the caption).
+
+Usage: python -m compile.report [--results ../results]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+
+
+def load(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return list(csv.DictReader(f))
+
+
+def fig5(rows):
+    print("### Fig. 5 — calculation time (ns/op) vs N\n")
+    algos = sorted({r["algo"] for r in rows}, key=lambda a: (a != "asura", a))
+    ns = sorted({int(r["n"]) for r in rows})
+    print("| n | " + " | ".join(algos) + " |")
+    print("|" + "---|" * (len(algos) + 1))
+    table = {(r["algo"], int(r["n"])): float(r["mean_ns"]) for r in rows}
+    for n in ns:
+        cells = [f"{table[(a, n)]:.0f}" if (a, n) in table else "—" for a in algos]
+        print(f"| {n} | " + " | ".join(cells) + " |")
+    print()
+
+
+def uniformity(rows, nodes):
+    print(f"### Fig. {6 + [100, 1000, 10000].index(nodes)} — max variability %, {nodes} nodes\n")
+    algos = sorted({r["algo"] for r in rows}, key=lambda a: (a != "asura", a))
+    dpns = sorted({int(r["data_per_node"]) for r in rows})
+    print("| data/node | " + " | ".join(algos) + " |")
+    print("|" + "---|" * (len(algos) + 1))
+    table = {
+        (r["algo"], int(r["data_per_node"])): float(r["mean_maxvar_pct"]) for r in rows
+    }
+    for d in dpns:
+        cells = [f"{table[(a, d)]:.3f}" if (a, d) in table else "—" for a in algos]
+        print(f"| {d} | " + " | ".join(cells) + " |")
+    print()
+
+
+def simple(rows, title, cols):
+    print(f"### {title}\n")
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in rows:
+        print("| " + " | ".join(r[c] for c in cols) + " |")
+    print()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="../results")
+    args = ap.parse_args()
+    d = args.results
+
+    if rows := load(os.path.join(d, "fig5.csv")):
+        fig5(rows)
+    for nodes, name in [(100, "fig6.csv"), (1000, "fig7.csv"), (10000, "fig8.csv")]:
+        if rows := load(os.path.join(d, name)):
+            uniformity(rows, nodes)
+    if rows := load(os.path.join(d, "table2.csv")):
+        simple(rows, "Table II — memory", ["algo", "nodes", "vnodes", "paper_bytes", "actual_bytes"])
+    if rows := load(os.path.join(d, "table3.csv")):
+        simple(rows, "Table III — actual usage", ["algo", "run", "writes", "wall_s", "ops_per_s", "maxvar_pct"])
+    if rows := load(os.path.join(d, "appendix_b.csv")):
+        simple(rows, "Appendix B — draws per placement", ["m", "hole_ratio", "mean_draws", "expected_draws"])
+    if rows := load(os.path.join(d, "movement.csv")):
+        simple(rows, "Movement / §2.D acceleration", ["algo", "op", "moved_frac", "optimal_frac", "stray_moves", "checked_frac"])
+    if rows := load(os.path.join(d, "flexible.csv")):
+        simple(rows, "§3.E flexible distribution", ["algo", "nodes", "keys", "weighted_maxvar_pct"])
+
+
+if __name__ == "__main__":
+    main()

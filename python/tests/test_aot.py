@@ -1,0 +1,61 @@
+"""AOT pipeline sanity: jax -> StableHLO -> XlaComputation -> HLO text.
+
+Guards the interchange contract the Rust runtime depends on (HLO text,
+tuple returns, u32 boundary dtypes) without re-lowering every artifact
+variant (the Makefile does that)."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.aot import build_artifacts, to_hlo_text, u32
+
+
+def test_small_place_artifact_lowers_to_hlo_text():
+    lowered = jax.jit(model.place_fn).lower(u32(256), u32(64), u32(1))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "u32[256]" in text, "ids input shape missing"
+    assert "u32[64]" in text, "lens input shape missing"
+    # return_tuple=True: root computation returns a tuple
+    assert "(u32[256])" in text or "tuple" in text.lower()
+
+
+def test_hist_artifact_has_four_outputs():
+    lowered = jax.jit(model.hist_fn).lower(u32(256), u32(64), u32(1), u32(64))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    # outputs: segs(256), seg_counts(64), node_counts(64), unresolved(1)
+    assert "u32[256]" in text and "u32[1]" in text
+
+
+def test_build_artifacts_covers_manifest_names():
+    names = [name for name, _, _ in iter_build()]
+    assert "asura_place_b4096_m4096" in names
+    assert "asura_hist_b1024_m256" in names
+    assert "asura_move_b1024_m256" in names
+    assert "straw_place_b1024_n256" in names
+
+
+def iter_build():
+    # build_artifacts lowers lazily per yield; just walking the generator
+    # confirms every variant traces (no shape errors) without the
+    # expensive HLO serialization.
+    return list(build_artifacts())
+
+
+def test_movement_graph_traces_with_distinct_epochs():
+    lowered = jax.jit(model.movement_fn).lower(
+        u32(256), u32(64), u32(1), u32(64), u32(1)
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+def test_boundary_dtype_is_u32():
+    (segs,) = model.place_fn(
+        jnp.zeros(512, jnp.uint32),
+        jnp.full(16, 1 << 24, jnp.uint32),
+        jnp.array([16], jnp.uint32),
+    )
+    assert segs.dtype == jnp.uint32

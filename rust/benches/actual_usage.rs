@@ -1,0 +1,16 @@
+//! Bench: Table III (reduced) — end-to-end writes through the TCP
+//! router for all three algorithms. The paper-scale run (100 nodes,
+//! 1 M writes, 10 runs) is `asura experiment table3 --full`.
+
+use asura::experiments::actual_usage::{run, ActualUsageConfig};
+
+fn main() {
+    println!("== Table III (reduced): 20 nodes, 20k one-byte writes ==");
+    let cfg = ActualUsageConfig {
+        nodes: 20,
+        writes: 20_000,
+        runs: 1,
+        vnodes: 100,
+    };
+    run(&cfg, None).expect("table3 bench");
+}

@@ -1,0 +1,59 @@
+//! Bench: Fig. 5 — distribution-stage calculation time vs node count.
+//!
+//! `cargo bench --bench calc_time` prints the paper's series (CH at
+//! VN ∈ {1,100,10000}, Straw, ASURA) for a ladder of node counts, plus
+//! the ASURA large-N scalability points.
+
+use asura::algo::asura::AsuraPlacer;
+use asura::algo::chash::ConsistentHash;
+use asura::algo::straw::StrawBuckets;
+use asura::algo::{Membership, Placer};
+use asura::bench::{bb, Bench};
+use asura::experiments::id_batch;
+
+fn main() {
+    let bench = Bench::default();
+    let ids = id_batch(4096, 0xF165);
+    println!("== Fig.5: distribution-stage calculation time ==");
+
+    for n in [1usize, 10, 100, 400, 1200] {
+        for vn in [1usize, 100, 10_000] {
+            let nodes: Vec<(u32, f64)> = (0..n as u32).map(|i| (i, 1.0)).collect();
+            let ch = ConsistentHash::with_nodes(vn, &nodes);
+            let m = bench.run_with_inputs(&format!("chash_vn{vn}/n{n}"), &ids, |id| {
+                bb(ch.place(bb(id)));
+            });
+            println!("{}", m.report());
+        }
+        if n <= 400 {
+            let mut straw = StrawBuckets::new();
+            for i in 0..n as u32 {
+                straw.add_node(i, 1.0);
+            }
+            let m = bench.run_with_inputs(&format!("straw/n{n}"), &ids, |id| {
+                bb(straw.place(bb(id)));
+            });
+            println!("{}", m.report());
+        }
+        let mut asura = AsuraPlacer::new();
+        for i in 0..n as u32 {
+            asura.add_node(i, 1.0);
+        }
+        let m = bench.run_with_inputs(&format!("asura/n{n}"), &ids, |id| {
+            bb(asura.place(bb(id)));
+        });
+        println!("{}", m.report());
+    }
+
+    println!("\n== ASURA scalability (paper: 0.73 µs at 10^8 nodes) ==");
+    for n in [1_000_000usize, 10_000_000] {
+        let mut asura = AsuraPlacer::new();
+        for i in 0..n as u32 {
+            asura.add_node(i, 1.0);
+        }
+        let m = bench.run_with_inputs(&format!("asura/n{n}"), &ids, |id| {
+            bb(asura.place(bb(id)));
+        });
+        println!("{}", m.report());
+    }
+}

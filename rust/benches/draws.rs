@@ -1,0 +1,19 @@
+//! Bench: Appendix B — expected primitive-draw count per placement is
+//! O(1) in the number of nodes (and the placement latency with it).
+
+use asura::experiments::appendix_b::{expected_draws, run, AppendixBConfig};
+
+fn main() {
+    println!("== Appendix B: draws per placement vs line length ==");
+    let cfg = AppendixBConfig {
+        line_lengths: vec![10, 100, 1_000, 10_000, 100_000],
+        hole_ratios: vec![0.0, 0.1, 0.3],
+        samples: 100_000,
+    };
+    run(&cfg, None).expect("appendix b bench");
+    println!(
+        "\nclosed-form bounds (alpha=2): full line in [{:.2}, {:.2}] draws",
+        expected_draws(16, 0.0),
+        expected_draws(17, 0.0)
+    );
+}

@@ -1,0 +1,56 @@
+//! Bench: PJRT bulk placement (the L1 kernel through the AOT path) vs
+//! the scalar Rust hot loop — the batch-analytics trade-off the
+//! coordinator exploits (DESIGN.md §Perf).
+//!
+//! Requires `make artifacts`; prints a notice and exits cleanly if they
+//! are missing (benches must not fail the suite on a cold tree).
+
+use asura::algo::asura::AsuraPlacer;
+use asura::algo::Membership;
+use asura::experiments::id_batch;
+use asura::prng::fold64;
+use asura::runtime::{BulkPlacer, Engine};
+use std::time::Instant;
+
+fn main() {
+    println!("== runtime: PJRT batch placement vs scalar loop ==");
+    let dir = std::env::var("ASURA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = match Engine::open(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIP: {e:#}");
+            return;
+        }
+    };
+    let mut bulk = BulkPlacer::new(engine); // b4096_m4096 variant
+    let mut placer = AsuraPlacer::new();
+    for i in 0..1000u32 {
+        placer.add_node(i, 1.0);
+    }
+    let ids32: Vec<u32> = id_batch(65_536, 0xBA7C4).iter().map(|&x| fold64(x)).collect();
+
+    // Warm the executable cache (first call compiles).
+    bulk.place(placer.table(), &ids32[..4096]).unwrap();
+
+    let t0 = Instant::now();
+    let segs = bulk.place(placer.table(), &ids32).unwrap();
+    let pjrt = t0.elapsed();
+    let t0 = Instant::now();
+    let scalar: Vec<u32> = ids32.iter().map(|&id| placer.place_seg32(id)).collect();
+    let scalar_dt = t0.elapsed();
+    assert_eq!(segs, scalar, "cross-layer placement mismatch");
+
+    let n = ids32.len() as f64;
+    println!(
+        "PJRT  : {:>10.1} ns/key  ({:.1} ms for {} keys)",
+        pjrt.as_nanos() as f64 / n,
+        pjrt.as_secs_f64() * 1e3,
+        ids32.len()
+    );
+    println!(
+        "scalar: {:>10.1} ns/key  ({:.1} ms)",
+        scalar_dt.as_nanos() as f64 / n,
+        scalar_dt.as_secs_f64() * 1e3
+    );
+    println!("(interpret-mode pallas on CPU: structure, not speed, is the target — see DESIGN.md §Hardware-Adaptation)");
+}

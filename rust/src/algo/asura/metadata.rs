@@ -1,0 +1,275 @@
+//! §2.D metadata: accelerated detection of data affected by node
+//! addition/removal.
+//!
+//! The paper stores, per datum:
+//! - the **ADDITION NUMBER** — the floor of the smallest ASURA random
+//!   number that (a) was generated *anterior to* the finally selected
+//!   number and (b) points at an unused segment number. When a node is
+//!   later added at that segment number, the datum either moves to it or
+//!   recomputes its metadata. If no anterior number exists, the random
+//!   number range is extended until one does.
+//! - **N REMOVE NUMBERS** (N = replication factor) — the floors of the N
+//!   selecting hits. When a node owning one of those segments is removed,
+//!   the datum must move/re-replicate.
+//!
+//! Soundness extension (documented in DESIGN.md): the paper's single
+//! ADDITION NUMBER is sound while segment numbers are assigned
+//! monotonically (pure growth). Once removals free smaller integers, a
+//! single number can go stale. We therefore keep the full *anterior floor
+//! set* below an extension `horizon` (one doubled range beyond the line at
+//! computation time) and derive the paper's single number on demand; the
+//! rebalancer indexes the set. Memory accounting in the Table II harness
+//! reports both variants.
+
+use super::placer::AsuraPlacer;
+use super::rng::AsuraRng;
+use super::segments::SegId;
+use crate::algo::{id32_of, DatumId, NodeId};
+
+/// Result of re-evaluating a datum after a membership change.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MetaOutcome {
+    /// Placement unchanged; metadata refreshed.
+    Unchanged,
+    /// Datum's replica set changed: it must move/copy.
+    Moved { old: Vec<NodeId>, new: Vec<NodeId> },
+}
+
+/// Per-datum placement metadata (paper §2.D).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DatumMeta {
+    /// Segments of the selecting hits, in selection order (primary first).
+    pub replica_segs: Vec<SegId>,
+    /// Floors of the selecting hits — the paper's REMOVE NUMBERS.
+    pub remove_numbers: Vec<u32>,
+    /// Floors of every anterior (pre-final-hit) ASURA number below
+    /// `horizon`, ascending, deduplicated. Superset of the paper's single
+    /// ADDITION NUMBER; see module docs.
+    pub anterior_floors: Vec<u32>,
+    /// All anterior floors `< horizon` are recorded; a future addition at
+    /// a segment number `≥ horizon` requires refreshing this metadata.
+    pub horizon: u32,
+}
+
+impl DatumMeta {
+    /// The paper's single ADDITION NUMBER: smallest anterior floor that is
+    /// *currently* unused in `placer`'s table. `None` when every recorded
+    /// anterior floor is in use (refresh against a wider horizon).
+    pub fn addition_number(&self, placer: &AsuraPlacer) -> Option<u32> {
+        self.anterior_floors
+            .iter()
+            .copied()
+            .find(|&f| f >= placer.table().m() || placer.table().owner(f).is_none())
+    }
+
+    /// Paper-equivalent metadata footprint: `(N + 1) × 4` bytes
+    /// (N remove numbers + 1 addition number), per §5.D.
+    pub fn memory_bytes_paper(&self) -> usize {
+        (self.remove_numbers.len() + 1) * 4
+    }
+
+    /// Footprint of the sound set-variant actually stored.
+    pub fn memory_bytes_actual(&self) -> usize {
+        (self.replica_segs.len() + self.remove_numbers.len() + self.anterior_floors.len() + 1) * 4
+    }
+
+    /// Would adding a node at segment `seg` possibly affect this datum?
+    pub fn affected_by_addition(&self, seg: SegId) -> bool {
+        seg >= self.horizon || self.anterior_floors.binary_search(&seg).is_ok()
+    }
+
+    /// Would removing a node that owned `segs` affect this datum?
+    pub fn affected_by_removal(&self, segs: &[SegId]) -> bool {
+        self.remove_numbers.iter().any(|n| segs.contains(n))
+    }
+}
+
+/// Compute placement + §2.D metadata for `id` with `replicas` copies.
+pub fn compute_meta(placer: &AsuraPlacer, id: DatumId, replicas: usize) -> DatumMeta {
+    compute_meta32(placer, id32_of(id), replicas)
+}
+
+/// u32-domain variant (used by tests pinning cross-layer vectors).
+pub fn compute_meta32(placer: &AsuraPlacer, id32: u32, replicas: usize) -> DatumMeta {
+    let table = placer.table();
+    assert!(replicas >= 1 && replicas <= table.node_count());
+    let m = table.m();
+
+    // Pass 1 at the natural top level; extend the range (§2.D "ASURA
+    // random numbers are extended beyond their own range") until at least
+    // one anterior floor below the horizon is unused-or-beyond-m, so the
+    // derived ADDITION NUMBER exists.
+    let natural_top = super::rng::top_level_for(m);
+    let mut ext = 0u32;
+    loop {
+        let top = natural_top + ext;
+        let horizon = (16u64 << top).min(u32::MAX as u64) as u32;
+        let mut rng = AsuraRng::with_top(id32, m, top);
+        let mut replica_segs = Vec::with_capacity(replicas);
+        let mut owners: Vec<NodeId> = Vec::with_capacity(replicas);
+        let mut anterior: Vec<u32> = Vec::new();
+        let mut have_unused_anterior = false;
+
+        while replica_segs.len() < replicas {
+            let (x, rejected, _) = rng.next_number_or_rejected();
+            if !rejected && x.frac < table.len_q24(x.int_part) {
+                let owner = table.owner(x.int_part).expect("hit has owner");
+                if owners.contains(&owner) {
+                    // Duplicate-node hit (§5.A): consumed, not selecting.
+                    // Its floor is in use, so it is not an addition
+                    // candidate *today*, but it is recorded below like any
+                    // anterior number so a future free-and-reassign of the
+                    // floor still triggers a recalc.
+                    anterior.push(x.int_part);
+                    continue;
+                }
+                owners.push(owner);
+                replica_segs.push(x.int_part);
+            } else {
+                // Anterior candidate: a rejected number (floor ≥ m) or an
+                // emitted miss. The paper's single ADDITION NUMBER only
+                // considers *unused* floors; the sound set-variant records
+                // all of them (module docs).
+                let floor = x.int_part;
+                anterior.push(floor);
+                if floor >= m || table.owner(floor).is_none() {
+                    have_unused_anterior = true;
+                }
+            }
+        }
+
+        if !have_unused_anterior && (16u64 << top) < u32::MAX as u64 {
+            ext += 1; // extend the range and retry (hits are prefix-stable)
+            continue;
+        }
+        anterior.sort_unstable();
+        anterior.dedup();
+        let remove_numbers = replica_segs.clone();
+        return DatumMeta {
+            replica_segs,
+            remove_numbers,
+            anterior_floors: anterior,
+            horizon,
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Membership, Placer};
+
+    fn cluster(n: u32) -> AsuraPlacer {
+        let mut p = AsuraPlacer::new();
+        for i in 0..n {
+            p.add_node(i, 1.0);
+        }
+        p
+    }
+
+    #[test]
+    fn meta_matches_placer_decisions() {
+        let p = cluster(9);
+        let mut out = Vec::new();
+        for id in 0..2000u64 {
+            let meta = compute_meta(&p, id, 3);
+            p.place_replicas(id, 3, &mut out);
+            let owners: Vec<NodeId> = meta
+                .replica_segs
+                .iter()
+                .map(|&s| p.table().owner(s).unwrap())
+                .collect();
+            assert_eq!(owners, out, "id={id}");
+            assert_eq!(meta.remove_numbers, meta.replica_segs);
+        }
+    }
+
+    #[test]
+    fn addition_number_exists_after_extension() {
+        let p = cluster(4); // m=4, line fully covered — anterior numbers
+                            // require rejected values (floors in [4,16)).
+        for id in 0..500u64 {
+            let meta = compute_meta(&p, id, 1);
+            let a = meta.addition_number(&p);
+            assert!(a.is_some(), "id={id}");
+            let a = a.unwrap();
+            assert!(a >= 4 || p.table().owner(a).is_none());
+        }
+    }
+
+    /// The §2.D protocol: when a node is added at segment q, the set of
+    /// data whose placement changes is exactly ⊆ {data flagged by
+    /// affected_by_addition(q)}.
+    #[test]
+    fn addition_triggers_cover_all_movers() {
+        let mut p = cluster(8);
+        let ids: Vec<u64> = (0..8000).collect();
+        let metas: Vec<DatumMeta> = ids.iter().map(|&i| compute_meta(&p, i, 1)).collect();
+        let before: Vec<NodeId> = ids.iter().map(|&i| p.place(i)).collect();
+        // Addition assigns the smallest unused segment number = 8.
+        p.add_node(99, 1.0);
+        assert_eq!(p.table().segments_of(99), &[8]);
+        for (i, &id) in ids.iter().enumerate() {
+            let after = p.place(id);
+            if after != before[i] {
+                assert!(
+                    metas[i].affected_by_addition(8),
+                    "mover id={id} was not flagged; meta={:?}",
+                    metas[i]
+                );
+            }
+        }
+    }
+
+    /// Same for removal: movers are exactly ⊆ {flagged by remove numbers}.
+    #[test]
+    fn removal_triggers_cover_all_movers() {
+        let mut p = cluster(8);
+        let ids: Vec<u64> = (0..8000).collect();
+        let metas: Vec<DatumMeta> = ids.iter().map(|&i| compute_meta(&p, i, 2)).collect();
+        let before: Vec<Vec<NodeId>> = ids
+            .iter()
+            .map(|&i| {
+                let mut v = Vec::new();
+                p.place_replicas(i, 2, &mut v);
+                v
+            })
+            .collect();
+        let victim_segs = p.table().segments_of(5).to_vec();
+        p.remove_node(5);
+        let mut v = Vec::new();
+        for (i, &id) in ids.iter().enumerate() {
+            p.place_replicas(id, 2, &mut v);
+            if v != before[i] {
+                assert!(
+                    metas[i].affected_by_removal(&victim_segs),
+                    "mover id={id} not flagged"
+                );
+            }
+        }
+    }
+
+    /// Addition triggers are not vacuous: flagged data where the new
+    /// segment's length covers the anterior fraction actually move.
+    #[test]
+    fn some_flagged_data_actually_move() {
+        let mut p = cluster(8);
+        let ids: Vec<u64> = (0..8000).collect();
+        let before: Vec<NodeId> = ids.iter().map(|&i| p.place(i)).collect();
+        p.add_node(99, 1.0);
+        let moved = ids
+            .iter()
+            .enumerate()
+            .filter(|(i, &id)| p.place(id) != before[*i])
+            .count();
+        assert!(moved > 0, "a full-length added segment must attract data");
+    }
+
+    #[test]
+    fn paper_memory_accounting() {
+        let p = cluster(6);
+        let meta = compute_meta(&p, 7, 3);
+        assert_eq!(meta.memory_bytes_paper(), 16); // (3 + 1) × 4
+        assert!(meta.memory_bytes_actual() >= meta.memory_bytes_paper());
+    }
+}

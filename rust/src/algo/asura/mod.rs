@@ -1,0 +1,26 @@
+//! ASURA — Advanced Scalable and Uniform storage by Random number
+//! Algorithm (paper §2).
+//!
+//! The module mirrors the paper's structure:
+//! - [`segments`] — STEP 1: node ↔ segment assignment on the number line
+//!   (§2.A rules 1–4, plus the §2.D smallest-unused-integer rule for
+//!   additions).
+//! - [`rng`] — §2.B/2.C: ASURA random numbers, the multi-level
+//!   range-extensible sequence, exposed as an explicit state machine so
+//!   the placer, the property tests and the Pallas kernel share one
+//!   normative definition.
+//! - [`placer`] — STEP 2: the distribution stage (draw until a segment is
+//!   hit), replication (§5.A distinct-node rule) and the [`crate::algo::Placer`]
+//!   implementation.
+//! - [`metadata`] — §2.D: ADDITION NUMBER / REMOVE NUMBERS acceleration
+//!   for node addition and removal.
+
+pub mod metadata;
+pub mod placer;
+pub mod rng;
+pub mod segments;
+
+pub use metadata::{DatumMeta, MetaOutcome};
+pub use placer::AsuraPlacer;
+pub use rng::{AsuraNumber, AsuraRng, DrawEvent, MAX_LEVELS};
+pub use segments::{SegId, SegmentTable, NO_SEG};

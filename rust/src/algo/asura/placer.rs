@@ -1,0 +1,315 @@
+//! STEP 2 of ASURA: the distribution stage (paper §2.A) and replication
+//! (§5.A).
+//!
+//! ASURA random numbers are drawn until one lands inside a segment; the
+//! owner of that segment stores the datum. Replication keeps drawing and
+//! takes the first `R` hits on *distinct nodes* (the duplicate check of
+//! §5.A — a node may own several segments, and the same node must not be
+//! chosen as both data-storing and data-replicating node).
+
+use super::rng::AsuraRng;
+use super::segments::{SegId, SegmentTable};
+use crate::algo::{id32_of, DatumId, Membership, NodeId, Placer};
+
+/// ASURA as a cluster placement strategy.
+///
+/// Wraps a [`SegmentTable`] (STEP 1 state — the only state the algorithm
+/// shares across the cluster) and implements the distribution stage.
+#[derive(Clone, Debug, Default)]
+pub struct AsuraPlacer {
+    table: SegmentTable,
+}
+
+impl AsuraPlacer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_table(table: SegmentTable) -> Self {
+        Self { table }
+    }
+
+    pub fn table(&self) -> &SegmentTable {
+        &self.table
+    }
+
+    /// Distribution stage on the segment domain: the segment that stores
+    /// `id32`. This is the hot path — the paper's 0.6 µs claim.
+    ///
+    /// Hand-specialized variant of the [`AsuraRng`] machine (same
+    /// normative semantics, asserted equal by `counted_placement_matches_
+    /// uncounted` and the golden vectors): seeds are computed lazily per
+    /// level, draws stay in registers, and the dominant top-level path
+    /// avoids the event-enum round trip (§Perf log in EXPERIMENTS.md).
+    #[inline]
+    pub fn place_seg32(&self, id32: u32) -> SegId {
+        use crate::prng::{draw_pair, level_seed};
+        use super::rng::{top_level_for, MAX_LEVELS};
+        debug_assert!(!self.table.is_empty(), "placement on empty cluster");
+        let m = self.table.m();
+        let lens = self.table.lens_raw_slice();
+        let top = top_level_for(m);
+        let mut pos = [0u32; MAX_LEVELS];
+        let mut seeds = [0u32; MAX_LEVELS];
+        let mut seeded = 0u32;
+        let mut level = top;
+        loop {
+            let bit = 1u32 << level;
+            if seeded & bit == 0 {
+                seeds[level as usize] = level_seed(id32, level);
+                seeded |= bit;
+            }
+            let t = pos[level as usize];
+            pos[level as usize] = t + 1;
+            let (hi, lo) = draw_pair(seeds[level as usize], t);
+            let int_part = hi >> (28 - level);
+            if int_part >= m {
+                continue; // rejection (top level only)
+            }
+            if level > 0 && hi < 0x8000_0000 {
+                level -= 1; // defer to the next-narrower generator
+                continue;
+            }
+            // Emitted ASURA number: hit test.
+            if (lo >> 8) < lens[int_part as usize].0 {
+                return int_part;
+            }
+            level = top;
+        }
+    }
+
+    /// Like [`Self::place_seg32`] but also returns the number of
+    /// primitive draws consumed (Appendix-B accounting).
+    pub fn place_seg32_counted(&self, id32: u32) -> (SegId, u32) {
+        let mut rng = AsuraRng::new(id32, self.table.m());
+        let mut draws = 0u32;
+        loop {
+            let (x, d) = rng.next_number();
+            draws += d;
+            if x.frac < self.table.len_q24(x.int_part) {
+                return (x.int_part, draws);
+            }
+        }
+    }
+
+    /// First `replicas` segments whose owners are pairwise distinct.
+    pub fn place_replica_segs32(&self, id32: u32, replicas: usize, out: &mut Vec<SegId>) {
+        out.clear();
+        assert!(
+            replicas <= self.table.node_count(),
+            "requested {replicas} replicas from {} nodes",
+            self.table.node_count()
+        );
+        let mut rng = AsuraRng::new(id32, self.table.m());
+        let mut owners: Vec<NodeId> = Vec::with_capacity(replicas);
+        while out.len() < replicas {
+            let (x, _) = rng.next_number();
+            if x.frac < self.table.len_q24(x.int_part) {
+                let owner = self
+                    .table
+                    .owner(x.int_part)
+                    .expect("hit segment must have an owner");
+                if !owners.contains(&owner) {
+                    owners.push(owner);
+                    out.push(x.int_part);
+                }
+            }
+        }
+    }
+}
+
+impl Membership for AsuraPlacer {
+    fn add_node(&mut self, node: NodeId, capacity: f64) {
+        self.table.add_node(node, capacity);
+    }
+
+    fn remove_node(&mut self, node: NodeId) {
+        self.table.remove_node(node);
+    }
+}
+
+impl Placer for AsuraPlacer {
+    fn name(&self) -> &'static str {
+        "asura"
+    }
+
+    #[inline]
+    fn place(&self, id: DatumId) -> NodeId {
+        let seg = self.place_seg32(id32_of(id));
+        self.table.owner(seg).expect("hit segment must have an owner")
+    }
+
+    fn place_replicas(&self, id: DatumId, replicas: usize, out: &mut Vec<NodeId>) {
+        let mut segs = Vec::with_capacity(replicas);
+        self.place_replica_segs32(id32_of(id), replicas, &mut segs);
+        out.clear();
+        out.extend(segs.iter().map(|&s| self.table.owner(s).unwrap()));
+    }
+
+    fn node_count(&self) -> usize {
+        self.table.node_count()
+    }
+
+    fn weight_of(&self, node: NodeId) -> f64 {
+        self.table.weight_of(node)
+    }
+
+    fn nodes(&self) -> Vec<NodeId> {
+        self.table.nodes().collect()
+    }
+
+    fn memory_bytes_paper(&self) -> usize {
+        self.table.memory_bytes_paper()
+    }
+
+    fn memory_bytes_actual(&self) -> usize {
+        self.table.memory_bytes_actual()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::total_weight;
+
+    fn cluster(n: u32) -> AsuraPlacer {
+        let mut p = AsuraPlacer::new();
+        for i in 0..n {
+            p.add_node(i, 1.0);
+        }
+        p
+    }
+
+    #[test]
+    fn places_every_id_on_a_live_node() {
+        let p = cluster(13);
+        for id in 0..5000u64 {
+            assert!(p.place(id) < 13);
+        }
+    }
+
+    #[test]
+    fn distribution_tracks_equal_capacity() {
+        let n = 16u32;
+        let p = cluster(n);
+        let ids = 64_000u64;
+        let mut counts = vec![0u32; n as usize];
+        for id in 0..ids {
+            counts[p.place(id) as usize] += 1;
+        }
+        let mean = ids as f64 / n as f64;
+        for (node, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - mean).abs() < 6.0 * mean.sqrt(),
+                "node {node}: {c} vs {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn distribution_tracks_heterogeneous_capacity() {
+        // Paper §2.A characteristic 1 / §3.E flexible distribution:
+        // node i gets weight (i+1)/Σ.
+        let mut p = AsuraPlacer::new();
+        let caps = [0.5, 1.0, 2.0, 4.0];
+        for (i, &c) in caps.iter().enumerate() {
+            p.add_node(i as u32, c);
+        }
+        let total: f64 = total_weight(&p);
+        let ids = 120_000u64;
+        let mut counts = vec![0u64; caps.len()];
+        for id in 0..ids {
+            counts[p.place(id) as usize] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let expect = ids as f64 * caps[i] / total;
+            let sigma = (expect * (1.0 - caps[i] / total)).sqrt();
+            assert!(
+                (c as f64 - expect).abs() < 6.0 * sigma,
+                "node {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    /// Paper §2.A characteristic 2: node addition moves data *only* to the
+    /// added node, and moves only ≈ its capacity share.
+    #[test]
+    fn optimal_movement_on_addition() {
+        let mut p = cluster(10);
+        let ids: Vec<u64> = (0..40_000).collect();
+        let before: Vec<NodeId> = ids.iter().map(|&i| p.place(i)).collect();
+        p.add_node(10, 1.0);
+        let mut moved = 0u64;
+        for (i, &id) in ids.iter().enumerate() {
+            let after = p.place(id);
+            if after != before[i] {
+                assert_eq!(after, 10, "datum {id} moved to an old node");
+                moved += 1;
+            }
+        }
+        let expect = ids.len() as f64 / 11.0;
+        assert!(
+            (moved as f64 - expect).abs() < 6.0 * expect.sqrt(),
+            "moved {moved} vs expected {expect}"
+        );
+    }
+
+    /// Paper §2.A characteristic 3: node removal moves *only* the removed
+    /// node's data.
+    #[test]
+    fn optimal_movement_on_removal() {
+        let mut p = cluster(10);
+        let ids: Vec<u64> = (0..40_000).collect();
+        let before: Vec<NodeId> = ids.iter().map(|&i| p.place(i)).collect();
+        p.remove_node(3);
+        for (i, &id) in ids.iter().enumerate() {
+            let after = p.place(id);
+            if before[i] != 3 {
+                assert_eq!(after, before[i], "datum {id} moved needlessly");
+            } else {
+                assert_ne!(after, 3);
+            }
+        }
+    }
+
+    /// Add-then-remove returns exactly to the original placement
+    /// (determinism of the whole pipeline under membership round-trip).
+    #[test]
+    fn membership_roundtrip_restores_placement() {
+        let mut p = cluster(8);
+        let before: Vec<NodeId> = (0..5000u64).map(|i| p.place(i)).collect();
+        p.add_node(8, 2.5);
+        p.remove_node(8);
+        let after: Vec<NodeId> = (0..5000u64).map(|i| p.place(i)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn replicas_respect_capacity_of_removal() {
+        let p = cluster(5);
+        let mut out = Vec::new();
+        p.place_replicas(42, 5, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5, "all nodes used when R = N");
+    }
+
+    #[test]
+    #[should_panic(expected = "replicas")]
+    fn too_many_replicas_panics() {
+        let p = cluster(2);
+        let mut out = Vec::new();
+        p.place_replicas(1, 3, &mut out);
+    }
+
+    #[test]
+    fn counted_placement_matches_uncounted() {
+        let p = cluster(23);
+        for id in 0..2000u32 {
+            let (seg, draws) = p.place_seg32_counted(id);
+            assert_eq!(seg, p.place_seg32(id));
+            assert!(draws >= 1);
+        }
+    }
+}

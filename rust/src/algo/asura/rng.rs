@@ -1,0 +1,304 @@
+//! ASURA random numbers (paper §2.B) and their generation (§2.C).
+//!
+//! An ASURA random number sequence for a datum is a merged sequence drawn
+//! from nested generators: level `l` covers `[0, 16·2^l)` (the paper's
+//! `DEFAULT_MAXIMUM_RANDOM_NUMBER = 16` appears as `c_max` seeding in the
+//! pseudocode). A draw from the widest generator that lands inside the
+//! next-narrower range *defers* to that generator, recursively — this is
+//! what makes the sequence's prefix invariant under range extension
+//! (§2.B), which in turn yields optimal data movement.
+//!
+//! Integer formulation (normative across Rust / Pallas / jnp — DESIGN.md):
+//! with `k = 4 + level` so the range is `2^k`,
+//!   `int_part = hi >> (32 − k)`       (top `k` bits of the `hi` draw)
+//!   `frac     = lo >> 8`              (Q24)
+//!   descend  ⟺ `level > 0 ∧ hi < 2^31` (value < half the range)
+//!   reject   ⟺ `int_part ≥ m`          (the pseudocode's inner do-while;
+//!                                       only reachable at the top level)
+//!
+//! Rejection is placement-equivalent to "emit and miss" because both
+//! consume one top-level draw and return to the top level; it merely
+//! skips a wasted hit test (see `reject_equals_emit_and_miss` test).
+
+use crate::prng::{draw_pair, level_seed};
+
+/// Enough levels for ranges up to 2^32 (level 28 ⇒ k = 32).
+pub const MAX_LEVELS: usize = 29;
+
+/// One emitted ASURA random number: `value = int_part + frac/2^24`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AsuraNumber {
+    pub int_part: u32,
+    pub frac: u32, // Q24
+}
+
+impl AsuraNumber {
+    pub fn to_f64(self) -> f64 {
+        self.int_part as f64 + self.frac as f64 / (1u32 << 24) as f64
+    }
+}
+
+/// What a single primitive draw did (exposed for tests, the §2.D
+/// metadata collector, and Appendix-B draw accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrawEvent {
+    /// Value ≥ `m`: rejected at the current (top) level.
+    Rejected(AsuraNumber),
+    /// Value below half the range: deferred to the next-narrower level.
+    Descended,
+    /// An ASURA random number was emitted.
+    Emitted(AsuraNumber),
+}
+
+/// The per-datum ASURA random number generator.
+///
+/// Holds per-level stream positions; draws are counter-based
+/// ([`crate::prng::draw_pair`]), so the machine is cheap to construct
+/// (lazy per-level seeds) and exactly reproducible.
+#[derive(Clone, Debug)]
+pub struct AsuraRng {
+    id32: u32,
+    top: u32,
+    m: u32,
+    pos: [u32; MAX_LEVELS],
+    seeds: [u32; MAX_LEVELS],
+    seeded: u32, // bitmask of initialized seeds (pseudocode's control_variable_is_used)
+    level: u32,
+}
+
+/// Top level for a line `[0, m)`: smallest `l` with `16·2^l ≥ m`.
+#[inline]
+pub fn top_level_for(m: u32) -> u32 {
+    let mut l = 0u32;
+    while l < (MAX_LEVELS as u32 - 1) && (16u64 << l) < m as u64 {
+        l += 1;
+    }
+    l
+}
+
+impl AsuraRng {
+    /// Machine for datum `id32` over the line `[0, m)`, `m ≥ 1`.
+    pub fn new(id32: u32, m: u32) -> Self {
+        Self::with_top(id32, m, top_level_for(m))
+    }
+
+    /// Machine with an explicitly extended top level (`top ≥
+    /// top_level_for(m)`) — used by the §2.D ADDITION-NUMBER range
+    /// extension and by the prefix-stability property tests.
+    pub fn with_top(id32: u32, m: u32, top: u32) -> Self {
+        debug_assert!(m >= 1);
+        debug_assert!(top >= top_level_for(m));
+        debug_assert!((top as usize) < MAX_LEVELS);
+        Self {
+            id32,
+            top,
+            m,
+            pos: [0; MAX_LEVELS],
+            seeds: [0; MAX_LEVELS],
+            seeded: 0,
+            level: top,
+        }
+    }
+
+    pub fn top(&self) -> u32 {
+        self.top
+    }
+
+    /// Range of the top level (`c_max` in the pseudocode) as f64.
+    pub fn range(&self) -> f64 {
+        (16u64 << self.top) as f64
+    }
+
+    #[inline(always)]
+    fn seed_at(&mut self, level: u32) -> u32 {
+        let bit = 1u32 << level;
+        if self.seeded & bit == 0 {
+            self.seeds[level as usize] = level_seed(self.id32, level);
+            self.seeded |= bit;
+        }
+        self.seeds[level as usize]
+    }
+
+    /// Execute one primitive draw and advance the machine.
+    #[inline]
+    pub fn step(&mut self) -> DrawEvent {
+        let level = self.level;
+        let k = 4 + level;
+        let seed = self.seed_at(level);
+        let t = self.pos[level as usize];
+        self.pos[level as usize] = t + 1;
+        let (hi, lo) = draw_pair(seed, t);
+        let int_part = hi >> (32 - k);
+        let frac = lo >> 8;
+        if int_part >= self.m {
+            // Inner do-while of the pseudocode; stay at this level.
+            return DrawEvent::Rejected(AsuraNumber { int_part, frac });
+        }
+        if level > 0 && hi < 0x8000_0000 {
+            // Value lies within the next-narrower generator's range:
+            // defer (paper §2.C step 3).
+            self.level = level - 1;
+            return DrawEvent::Descended;
+        }
+        // Emitted; the *next* ASURA number restarts from the top.
+        self.level = self.top;
+        DrawEvent::Emitted(AsuraNumber { int_part, frac })
+    }
+
+    /// Produce the next ASURA random number (looping over primitive
+    /// draws). Also returns the number of primitive draws consumed
+    /// (Appendix-B accounting).
+    pub fn next_number(&mut self) -> (AsuraNumber, u32) {
+        let mut draws = 0u32;
+        loop {
+            draws += 1;
+            match self.step() {
+                DrawEvent::Emitted(x) => return (x, draws),
+                DrawEvent::Rejected(_) | DrawEvent::Descended => continue,
+            }
+        }
+    }
+
+    /// Emit-all variant used by §2.D metadata: like [`Self::next_number`]
+    /// but *also* surfaces rejected values (which are exactly the
+    /// anterior candidates beyond the current line). Returns
+    /// `(number, was_rejected, draws)`.
+    pub fn next_number_or_rejected(&mut self) -> (AsuraNumber, bool, u32) {
+        let mut draws = 0u32;
+        loop {
+            draws += 1;
+            match self.step() {
+                DrawEvent::Emitted(x) => return (x, false, draws),
+                DrawEvent::Rejected(x) => return (x, true, draws),
+                DrawEvent::Descended => continue,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::fold64;
+
+    #[test]
+    fn top_level_matches_definition() {
+        assert_eq!(top_level_for(1), 0);
+        assert_eq!(top_level_for(16), 0);
+        assert_eq!(top_level_for(17), 1);
+        assert_eq!(top_level_for(32), 1);
+        assert_eq!(top_level_for(33), 2);
+        assert_eq!(top_level_for(100_000_000), 23); // 16·2^23 ≈ 1.34e8
+    }
+
+    #[test]
+    fn numbers_are_below_m_and_reproducible() {
+        for id in 0..200u64 {
+            let id32 = fold64(id);
+            let mut a = AsuraRng::new(id32, 37);
+            let mut b = AsuraRng::new(id32, 37);
+            for _ in 0..20 {
+                let (xa, _) = a.next_number();
+                let (xb, _) = b.next_number();
+                assert_eq!(xa, xb);
+                assert!(xa.int_part < 37);
+            }
+        }
+    }
+
+    /// The heart of §2.B: extending the range inserts numbers ≥ the old
+    /// range but leaves the sub-range subsequence identical in value and
+    /// order. This is the property the optimal-movement proof rests on.
+    #[test]
+    fn prefix_stability_under_range_extension() {
+        let m = 37; // top level 2, c = 64
+        for id in 0..100u64 {
+            let id32 = fold64(id);
+            let base_top = top_level_for(m);
+            let mut base = AsuraRng::with_top(id32, m, base_top);
+            let base_seq: Vec<AsuraNumber> =
+                (0..30).map(|_| base.next_number().0).collect();
+
+            for ext in 1..=3u32 {
+                // Extended machine over a *wider* line: make m' = full
+                // extended range so nothing is rejected, then filter.
+                let m_ext = (16u64 << (base_top + ext)).min(u32::MAX as u64) as u32;
+                let mut wide = AsuraRng::with_top(id32, m_ext, base_top + ext);
+                let mut filtered = Vec::new();
+                // Draw until we have 30 sub-range numbers.
+                while filtered.len() < 30 {
+                    let (x, _) = wide.next_number();
+                    if x.int_part < m {
+                        filtered.push(x);
+                    }
+                }
+                // Base machine rejects ≥ m at top; the wide machine
+                // filtered to < m must agree exactly.
+                assert_eq!(filtered, base_seq, "id={id} ext={ext}");
+            }
+        }
+    }
+
+    /// Rejection (`int_part ≥ m`) must be placement-equivalent to
+    /// emitting the number and missing: same consumption, same
+    /// subsequent stream.
+    #[test]
+    fn reject_equals_emit_and_miss() {
+        let m_small = 20; // top level 1 (range 32) — rejections occur
+        let m_full = 32; // same top level, no rejections
+        for id in 0..100u64 {
+            let id32 = fold64(id);
+            let mut rej = AsuraRng::new(id32, m_small);
+            let mut all = AsuraRng::new(id32, m_full);
+            assert_eq!(rej.top(), all.top());
+            let mut seq_rej = Vec::new();
+            let mut seq_all = Vec::new();
+            while seq_rej.len() < 25 {
+                let (x, _) = rej.next_number();
+                seq_rej.push(x);
+            }
+            while seq_all.len() < 25 {
+                let (x, _) = all.next_number();
+                if x.int_part < m_small {
+                    seq_all.push(x);
+                }
+            }
+            assert_eq!(seq_rej, seq_all, "id={id}");
+        }
+    }
+
+    #[test]
+    fn values_cover_the_full_line() {
+        // Homogeneity smoke check: bucket int parts over many ids.
+        let m = 24u32;
+        let mut counts = vec![0u32; m as usize];
+        for id in 0..20_000u64 {
+            let mut rng = AsuraRng::new(fold64(id), m);
+            let (x, _) = rng.next_number();
+            counts[x.int_part as usize] += 1;
+        }
+        let mean = 20_000.0 / m as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - mean).abs() < 6.0 * mean.sqrt(),
+                "int {i} count {c} vs mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn draw_counts_are_bounded_in_expectation() {
+        // Appendix B: expected primitive draws ≈ (c/covered)·(α/(α−1)).
+        // With a full line (no holes) and α=2 the bound is ≈ 2·c/m ≤ 4.
+        let m = 1000u32;
+        let mut total = 0u64;
+        let ids = 20_000u64;
+        for id in 0..ids {
+            let mut rng = AsuraRng::new(fold64(id), m);
+            let (_, d) = rng.next_number();
+            total += d as u64;
+        }
+        let mean = total as f64 / ids as f64;
+        assert!(mean < 4.5, "mean draws {mean}");
+    }
+}

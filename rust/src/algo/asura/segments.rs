@@ -1,0 +1,317 @@
+//! STEP 1 of ASURA: assignment of nodes to segments on the number line
+//! (paper §2.A).
+//!
+//! Rules implemented (§2.A):
+//! 1. A node is assigned one or more segments in proportion to its
+//!    capacity (capacity unit 1.0 ⇒ one full segment of length 1.0).
+//! 2. Existing node↔segment correspondences never change on membership
+//!    updates (only new assignments / removals).
+//! 3. Segments start at integer points; the segment number is the start.
+//! 4. Segment length ≤ 1.0 (Q24-quantized, see [`crate::fixed`]).
+//!
+//! Additions follow §2.D: each new segment takes the **smallest unused
+//! segment number**, which is what makes the ADDITION-NUMBER metadata
+//! protocol sound.
+
+use crate::algo::NodeId;
+use crate::fixed::Q24;
+use std::collections::BTreeMap;
+
+/// Segment number (the integer starting point on the number line).
+pub type SegId = u32;
+
+/// Sentinel owner for holes.
+pub const NO_SEG: u32 = u32::MAX;
+
+/// The node ↔ segment table: the *entire* shared state of ASURA
+/// (paper Table II: `8N` bytes — node id + segment length per segment).
+#[derive(Clone, Debug, Default)]
+pub struct SegmentTable {
+    /// `lens[s]` = length of segment `s` in Q24; 0 ⇒ hole.
+    lens: Vec<Q24>,
+    /// `owners[s]` = owning node, or `NO_SEG` for a hole.
+    owners: Vec<NodeId>,
+    /// node → its segments (ascending).
+    by_node: BTreeMap<NodeId, Vec<SegId>>,
+    /// Smallest-unused-integer free list: segment numbers `< lens.len()`
+    /// currently unassigned, kept sorted ascending.
+    free: Vec<SegId>,
+}
+
+impl SegmentTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `maximum_segment_number_plus_1` from the paper's pseudocode:
+    /// the number line `[0, m)` that draws must fall into.
+    pub fn m(&self) -> u32 {
+        self.lens.len() as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_node.is_empty()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.by_node.len()
+    }
+
+    pub fn segment_count(&self) -> usize {
+        self.lens.len() - self.free.len()
+    }
+
+    pub fn len_q24(&self, seg: SegId) -> u32 {
+        self.lens.get(seg as usize).map_or(0, |q| q.0)
+    }
+
+    pub fn owner(&self, seg: SegId) -> Option<NodeId> {
+        match self.owners.get(seg as usize) {
+            Some(&o) if o != NO_SEG => Some(o),
+            _ => None,
+        }
+    }
+
+    pub fn segments_of(&self, node: NodeId) -> &[SegId] {
+        self.by_node.get(&node).map_or(&[], |v| v.as_slice())
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.by_node.keys().copied()
+    }
+
+    pub fn contains_node(&self, node: NodeId) -> bool {
+        self.by_node.contains_key(&node)
+    }
+
+    /// Total assigned length of a node (its placement weight).
+    pub fn weight_of(&self, node: NodeId) -> f64 {
+        self.segments_of(node)
+            .iter()
+            .map(|&s| self.lens[s as usize].to_f64())
+            .sum()
+    }
+
+    /// Total covered length `n − h` (paper Appendix B notation).
+    pub fn covered(&self) -> f64 {
+        self.lens.iter().map(|q| q.to_f64()).sum()
+    }
+
+    /// Hole ratio `h / n` over the line `[0, m)` — drives the expected
+    /// draw count (Appendix B).
+    pub fn hole_ratio(&self) -> f64 {
+        if self.lens.is_empty() {
+            return 0.0;
+        }
+        1.0 - self.covered() / self.lens.len() as f64
+    }
+
+    /// Raw Q24 length slice (runtime marshalling for the PJRT artifacts).
+    pub fn lens_q24_raw(&self) -> Vec<u32> {
+        self.lens.iter().map(|q| q.0).collect()
+    }
+
+    /// Borrowed length slice (hot-path placement).
+    #[inline(always)]
+    pub fn lens_raw_slice(&self) -> &[Q24] {
+        &self.lens
+    }
+
+    /// Owner slice with `NO_SEG` holes (runtime marshalling).
+    pub fn owners_raw(&self) -> &[NodeId] {
+        &self.owners
+    }
+
+    fn take_smallest_unused(&mut self) -> SegId {
+        if let Some(&s) = self.free.first() {
+            self.free.remove(0);
+            s
+        } else {
+            let s = self.lens.len() as SegId;
+            self.lens.push(Q24::ZERO);
+            self.owners.push(NO_SEG);
+            s
+        }
+    }
+
+    fn assign(&mut self, node: NodeId, len: Q24) -> SegId {
+        let s = self.take_smallest_unused();
+        self.lens[s as usize] = len;
+        self.owners[s as usize] = node;
+        self.by_node.entry(node).or_default().push(s);
+        s
+    }
+
+    /// Add a node with `capacity` units (1 unit = one full segment).
+    /// Returns the assigned segment numbers.
+    ///
+    /// Capacity `2.5` assigns two full segments plus one of length `0.5`,
+    /// exactly as the paper's Fig. 3 example (Node_A, 1.5 TB ⇒ one full +
+    /// one half segment).
+    pub fn add_node(&mut self, node: NodeId, capacity: f64) -> Vec<SegId> {
+        assert!(capacity > 0.0, "node capacity must be positive");
+        assert!(
+            !self.by_node.contains_key(&node),
+            "node {node} already present"
+        );
+        let mut segs = Vec::new();
+        let full = capacity.floor() as u64;
+        for _ in 0..full {
+            segs.push(self.assign(node, Q24::ONE));
+        }
+        let rem = capacity - full as f64;
+        if rem > 0.0 {
+            segs.push(self.assign(node, Q24::from_f64(rem)));
+        }
+        if segs.is_empty() {
+            // capacity < 1 ulp of a unit still gets one minimal segment
+            segs.push(self.assign(node, Q24(1)));
+        }
+        segs
+    }
+
+    /// Remove a node; its segment numbers become holes and return to the
+    /// smallest-unused pool. Trailing holes are trimmed so `m` (and with
+    /// it the ASURA random-number range) can shrink (§2.B).
+    pub fn remove_node(&mut self, node: NodeId) -> Vec<SegId> {
+        let Some(segs) = self.by_node.remove(&node) else {
+            return Vec::new();
+        };
+        for &s in &segs {
+            self.lens[s as usize] = Q24::ZERO;
+            self.owners[s as usize] = NO_SEG;
+            let pos = self.free.partition_point(|&f| f < s);
+            self.free.insert(pos, s);
+        }
+        // Trim trailing holes (range shrink).
+        while let Some(&last) = self.owners.last() {
+            if last != NO_SEG {
+                break;
+            }
+            self.owners.pop();
+            self.lens.pop();
+            let m = self.lens.len() as SegId;
+            if let Some(&f) = self.free.last() {
+                if f == m {
+                    self.free.pop();
+                }
+            }
+        }
+        segs
+    }
+
+    /// Paper-equivalent resident state: 8 bytes per segment entry
+    /// (4-byte owner id + 4-byte length), matching Table II's `8N`.
+    pub fn memory_bytes_paper(&self) -> usize {
+        8 * self.lens.len()
+    }
+
+    /// Actually allocated bytes of the live structures.
+    pub fn memory_bytes_actual(&self) -> usize {
+        self.lens.capacity() * std::mem::size_of::<Q24>()
+            + self.owners.capacity() * std::mem::size_of::<NodeId>()
+            + self.free.capacity() * std::mem::size_of::<SegId>()
+            + self
+                .by_node
+                .values()
+                .map(|v| v.capacity() * std::mem::size_of::<SegId>() + 24)
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_example_layout() {
+        // Paper Fig. 3: A=1.5 TB, C=1.0 TB, B=0.7 TB added in the order
+        // that yields A:{0 (1.0), 2 (0.5)}, C:{1 (1.0)}, B:{3 (0.7)}.
+        let mut t = SegmentTable::new();
+        // A takes 0 (full); C takes 1 (full); A's half → next unused is 2...
+        // The paper does not fix an insertion order; reproduce the layout
+        // by adding A (1.5) then C (1.0) then B (0.7):
+        let a = t.add_node(0, 1.5);
+        let c = t.add_node(2, 1.0);
+        let b = t.add_node(1, 0.7);
+        assert_eq!(a, vec![0, 1]); // full then half — contiguous smallest-unused
+        assert_eq!(c, vec![2]);
+        assert_eq!(b, vec![3]);
+        assert_eq!(t.len_q24(0), Q24::ONE.0);
+        assert_eq!(t.len_q24(1), Q24::from_f64(0.5).0);
+        assert_eq!(t.len_q24(3), Q24::from_f64(0.7).0);
+        assert_eq!(t.m(), 4);
+        assert!((t.weight_of(0) - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn smallest_unused_rule_on_addition() {
+        let mut t = SegmentTable::new();
+        t.add_node(10, 1.0); // seg 0
+        t.add_node(11, 1.0); // seg 1
+        t.add_node(12, 1.0); // seg 2
+        t.remove_node(11); // hole at 1
+        let segs = t.add_node(13, 1.0);
+        assert_eq!(segs, vec![1], "must reuse the smallest unused integer");
+    }
+
+    #[test]
+    fn removal_creates_holes_and_trims_range() {
+        let mut t = SegmentTable::new();
+        t.add_node(0, 1.0);
+        t.add_node(1, 1.0);
+        t.add_node(2, 1.0);
+        assert_eq!(t.m(), 3);
+        t.remove_node(2);
+        assert_eq!(t.m(), 2, "trailing hole trimmed, range shrinks");
+        t.remove_node(0);
+        assert_eq!(t.m(), 2, "interior hole kept");
+        assert_eq!(t.owner(0), None);
+        assert!((t.hole_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn existing_assignments_never_change() {
+        let mut t = SegmentTable::new();
+        t.add_node(0, 2.3);
+        let before: Vec<_> = t.segments_of(0).to_vec();
+        t.add_node(1, 1.0);
+        t.add_node(2, 0.5);
+        t.remove_node(1);
+        t.add_node(3, 4.0);
+        assert_eq!(t.segments_of(0), before.as_slice());
+    }
+
+    #[test]
+    fn weight_tracks_capacity() {
+        let mut t = SegmentTable::new();
+        t.add_node(7, 3.25);
+        assert!((t.weight_of(7) - 3.25).abs() < 1e-6);
+        assert_eq!(t.segments_of(7).len(), 4);
+    }
+
+    #[test]
+    fn paper_memory_accounting_is_8_per_segment() {
+        let mut t = SegmentTable::new();
+        for i in 0..100 {
+            t.add_node(i, 1.0);
+        }
+        assert_eq!(t.memory_bytes_paper(), 800);
+    }
+
+    #[test]
+    fn tiny_capacity_still_gets_a_segment() {
+        let mut t = SegmentTable::new();
+        let segs = t.add_node(0, 1e-9);
+        assert_eq!(segs.len(), 1);
+        assert!(t.len_q24(segs[0]) >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already present")]
+    fn duplicate_node_panics() {
+        let mut t = SegmentTable::new();
+        t.add_node(0, 1.0);
+        t.add_node(0, 1.0);
+    }
+}

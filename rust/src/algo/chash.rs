@@ -1,0 +1,291 @@
+//! Consistent Hashing with virtual nodes (Karger et al. [5]; paper §1,
+//! Fig. 1) — the primary baseline.
+//!
+//! Nodes are hashed onto a u32 ring, `V` times each (virtual nodes). A
+//! datum's hash point is owned by the first node point at or after it
+//! (wrapping). Initial stage: O(NV log NV) sort; distribution stage:
+//! O(log NV) binary search — exactly the paper's accounting (§3.B).
+//! Weighted capacities get proportionally many virtual nodes (§3.E
+//! "coarse" flexibility).
+
+use crate::algo::{id32_of, DatumId, Membership, NodeId, Placer};
+use crate::prng::{fmix32, hash2};
+use std::collections::BTreeMap;
+
+/// Domain-separation seed for datum points on the ring.
+const DATUM_SEED: u32 = 0xC0FF_EE01;
+
+#[derive(Clone, Debug)]
+pub struct ConsistentHash {
+    /// Virtual nodes per capacity unit.
+    vnodes_per_unit: usize,
+    /// Ring: (point, node), sorted by point then node (deterministic tie
+    /// break on the rare point collision).
+    ring: Vec<(u32, NodeId)>,
+    /// node → capacity (drives its virtual-node count).
+    weights: BTreeMap<NodeId, f64>,
+}
+
+impl ConsistentHash {
+    /// `vnodes` virtual nodes per capacity unit (the paper sweeps
+    /// V ∈ {1, 100, 10000}).
+    pub fn new(vnodes: usize) -> Self {
+        assert!(vnodes >= 1);
+        Self {
+            vnodes_per_unit: vnodes,
+            ring: Vec::new(),
+            weights: BTreeMap::new(),
+        }
+    }
+
+    pub fn vnodes_per_unit(&self) -> usize {
+        self.vnodes_per_unit
+    }
+
+    /// Bulk constructor: add every node, sort the ring once.
+    ///
+    /// `add_node` re-sorts after each insertion (the paper's initial
+    /// stage is per-change); building a large ring node-by-node is
+    /// O(N²V log NV). Use this for experiment setup — it is the
+    /// O(NV log NV) initial stage the paper accounts for.
+    pub fn with_nodes(vnodes: usize, nodes: &[(NodeId, f64)]) -> Self {
+        let mut ch = Self::new(vnodes);
+        for &(node, capacity) in nodes {
+            assert!(capacity > 0.0);
+            assert!(!ch.weights.contains_key(&node), "node {node} duplicated");
+            let count = ch.vnode_count(capacity);
+            ch.ring.reserve(count);
+            for v in 0..count as u32 {
+                ch.ring.push((Self::point(node, v), node));
+            }
+            ch.weights.insert(node, capacity);
+        }
+        ch.ring.sort_unstable();
+        ch
+    }
+
+    /// Virtual node count for a capacity (≥ 1).
+    fn vnode_count(&self, capacity: f64) -> usize {
+        ((self.vnodes_per_unit as f64 * capacity).round() as usize).max(1)
+    }
+
+    /// Ring point of virtual node `v` of `node`.
+    #[inline]
+    fn point(node: NodeId, v: u32) -> u32 {
+        hash2(node, v)
+    }
+
+    /// Distribution stage: successor lookup on the ring.
+    #[inline]
+    pub fn place32(&self, id32: u32) -> NodeId {
+        debug_assert!(!self.ring.is_empty(), "placement on empty ring");
+        let key = fmix32(id32 ^ DATUM_SEED);
+        // First ring point with point >= key, wrapping to ring[0].
+        let idx = self.ring.partition_point(|&(p, _)| p < key);
+        let (_, node) = if idx == self.ring.len() {
+            self.ring[0]
+        } else {
+            self.ring[idx]
+        };
+        node
+    }
+
+    pub fn ring_len(&self) -> usize {
+        self.ring.len()
+    }
+}
+
+impl Membership for ConsistentHash {
+    fn add_node(&mut self, node: NodeId, capacity: f64) {
+        assert!(capacity > 0.0);
+        assert!(!self.weights.contains_key(&node), "node {node} already present");
+        let count = self.vnode_count(capacity);
+        self.ring.reserve(count);
+        for v in 0..count as u32 {
+            self.ring.push((Self::point(node, v), node));
+        }
+        // Initial stage: the paper sorts with Quicksort; Vec::sort_unstable
+        // is the idiomatic equivalent.
+        self.ring.sort_unstable();
+        self.weights.insert(node, capacity);
+    }
+
+    fn remove_node(&mut self, node: NodeId) {
+        if self.weights.remove(&node).is_none() {
+            return;
+        }
+        self.ring.retain(|&(_, n)| n != node);
+    }
+}
+
+impl Placer for ConsistentHash {
+    fn name(&self) -> &'static str {
+        "chash"
+    }
+
+    #[inline]
+    fn place(&self, id: DatumId) -> NodeId {
+        self.place32(id32_of(id))
+    }
+
+    fn place_replicas(&self, id: DatumId, replicas: usize, out: &mut Vec<NodeId>) {
+        out.clear();
+        assert!(replicas <= self.weights.len());
+        // Walk the ring from the datum's successor, skipping virtual nodes
+        // of already-selected physical nodes (§5.A duplicate check).
+        let key = fmix32(id32_of(id) ^ DATUM_SEED);
+        let start = self.ring.partition_point(|&(p, _)| p < key);
+        let len = self.ring.len();
+        let mut i = 0usize;
+        while out.len() < replicas {
+            debug_assert!(i < 2 * len, "ring walk failed to find replicas");
+            let (_, node) = self.ring[(start + i) % len];
+            if !out.contains(&node) {
+                out.push(node);
+            }
+            i += 1;
+        }
+    }
+
+    fn node_count(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn weight_of(&self, node: NodeId) -> f64 {
+        // Effective weight is the realized virtual-node share.
+        self.weights
+            .get(&node)
+            .map(|&c| self.vnode_count(c) as f64 / self.vnodes_per_unit as f64)
+            .unwrap_or(0.0)
+    }
+
+    fn nodes(&self) -> Vec<NodeId> {
+        self.weights.keys().copied().collect()
+    }
+
+    /// Paper Table II: `8NV` bytes — a 4-byte hash + 4-byte node id per
+    /// virtual node.
+    fn memory_bytes_paper(&self) -> usize {
+        8 * self.ring.len()
+    }
+
+    fn memory_bytes_actual(&self) -> usize {
+        self.ring.capacity() * std::mem::size_of::<(u32, NodeId)>() + self.weights.len() * 24
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring(n: u32, v: usize) -> ConsistentHash {
+        let mut c = ConsistentHash::new(v);
+        for i in 0..n {
+            c.add_node(i, 1.0);
+        }
+        c
+    }
+
+    #[test]
+    fn ring_size_is_n_times_v() {
+        let c = ring(10, 100);
+        assert_eq!(c.ring_len(), 1000);
+        assert_eq!(c.memory_bytes_paper(), 8000);
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_in_range() {
+        let c = ring(12, 50);
+        for id in 0..3000u64 {
+            let n = c.place(id);
+            assert!(n < 12);
+            assert_eq!(n, c.place(id));
+        }
+    }
+
+    /// The defining Consistent Hashing property: adding a node only moves
+    /// data *to* that node (monotone consistency).
+    #[test]
+    fn optimal_movement_on_addition() {
+        let mut c = ring(9, 64);
+        let before: Vec<NodeId> = (0..20_000u64).map(|i| c.place(i)).collect();
+        c.add_node(9, 1.0);
+        for (i, b) in before.iter().enumerate() {
+            let a = c.place(i as u64);
+            assert!(a == *b || a == 9, "datum {i} moved to an old node");
+        }
+    }
+
+    #[test]
+    fn optimal_movement_on_removal() {
+        let mut c = ring(9, 64);
+        let before: Vec<NodeId> = (0..20_000u64).map(|i| c.place(i)).collect();
+        c.remove_node(4);
+        for (i, b) in before.iter().enumerate() {
+            let a = c.place(i as u64);
+            if *b != 4 {
+                assert_eq!(a, *b, "datum {i} moved needlessly");
+            } else {
+                assert_ne!(a, 4);
+            }
+        }
+    }
+
+    /// Paper §3.D "double variability": with few virtual nodes the spread
+    /// is wide; with many it tightens. Verify the ordering (this is the
+    /// mechanism behind Figs 6–8).
+    #[test]
+    fn more_virtual_nodes_tighten_distribution() {
+        let ids = 100_000u64;
+        let spread = |v: usize| -> f64 {
+            let c = ring(20, v);
+            let mut counts = vec![0u64; 20];
+            for id in 0..ids {
+                counts[c.place(id) as usize] += 1;
+            }
+            let mean = ids as f64 / 20.0;
+            counts
+                .iter()
+                .map(|&x| (x as f64 - mean).abs() / mean)
+                .fold(0.0, f64::max)
+        };
+        let s1 = spread(1);
+        let s100 = spread(100);
+        assert!(
+            s100 < s1,
+            "VN=100 spread {s100} should beat VN=1 spread {s1}"
+        );
+    }
+
+    #[test]
+    fn weighted_nodes_get_proportional_share() {
+        let mut c = ConsistentHash::new(200);
+        c.add_node(0, 1.0);
+        c.add_node(1, 3.0);
+        let ids = 80_000u64;
+        let mut counts = [0u64; 2];
+        for id in 0..ids {
+            counts[c.place(id) as usize] += 1;
+        }
+        let ratio = counts[1] as f64 / ids as f64;
+        assert!((ratio - 0.75).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn replicas_distinct() {
+        let c = ring(8, 32);
+        let mut out = Vec::new();
+        for id in 0..500u64 {
+            c.place_replicas(id, 3, &mut out);
+            assert_eq!(out.len(), 3);
+            assert!(out[0] != out[1] && out[1] != out[2] && out[0] != out[2]);
+        }
+    }
+
+    #[test]
+    fn remove_absent_node_is_noop() {
+        let mut c = ring(3, 10);
+        c.remove_node(77);
+        assert_eq!(c.node_count(), 3);
+    }
+}

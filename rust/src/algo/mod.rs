@@ -1,0 +1,138 @@
+//! Placement algorithms: ASURA (the paper's contribution) and the two
+//! baselines it is evaluated against — Consistent Hashing (Karger et al.)
+//! and Straw Buckets from CRUSH (Weil et al.) — plus a table-management
+//! baseline used to motivate algorithm management (paper §Intro).
+//!
+//! Every algorithm implements [`Placer`], so the cluster, coordinator and
+//! experiment harnesses are generic over the distribution strategy.
+
+pub mod asura;
+pub mod chash;
+pub mod spoca;
+pub mod straw;
+pub mod table;
+
+use crate::prng::fold64;
+
+/// Identifier of a datum (the key being placed). 64-bit externally;
+/// placement folds it onto u32 (see [`crate::prng::fold64`]).
+pub type DatumId = u64;
+
+/// Identifier of a storage node.
+pub type NodeId = u32;
+
+/// Sentinel for "no node".
+pub const NO_NODE: NodeId = u32::MAX;
+
+/// A placement decision strategy for a storage cluster.
+///
+/// The *distribution stage* of the paper: map a datum ID to the node (or
+/// replica set) that stores it. Implementations must be deterministic
+/// functions of `(id, current membership)`.
+pub trait Placer: Send + Sync {
+    /// Short algorithm name used in experiment output (`asura`, `chash`,
+    /// `straw`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Primary data-storing node for `id`.
+    fn place(&self, id: DatumId) -> NodeId;
+
+    /// First `replicas` *distinct* data-storing nodes for `id`, in
+    /// selection order (primary first). Pushes onto `out` (cleared first).
+    ///
+    /// Panics if `replicas` exceeds the number of live nodes.
+    fn place_replicas(&self, id: DatumId, replicas: usize, out: &mut Vec<NodeId>);
+
+    /// Number of live nodes.
+    fn node_count(&self) -> usize;
+
+    /// Relative placement weight of `node` (∝ capacity). Used by the
+    /// harnesses to compute expected distributions.
+    fn weight_of(&self, node: NodeId) -> f64;
+
+    /// Live node ids (ascending).
+    fn nodes(&self) -> Vec<NodeId>;
+
+    /// Bytes of state the algorithm must keep resident and synchronized
+    /// across the cluster — the paper's Table II accounting (node ids +
+    /// per-node placement state). This is the *paper-equivalent* figure;
+    /// `memory_bytes_actual` reports what this implementation allocates.
+    fn memory_bytes_paper(&self) -> usize;
+
+    /// Actually allocated bytes of the live structures.
+    fn memory_bytes_actual(&self) -> usize;
+}
+
+/// Membership mutation API shared by the algorithms (all three support
+/// incremental add/remove — that is the premise of the paper's
+/// optimal-movement comparison).
+pub trait Membership {
+    /// Add a node with the given capacity (1.0 = one capacity unit; ASURA
+    /// maps one unit to one full segment).
+    fn add_node(&mut self, node: NodeId, capacity: f64);
+    /// Remove a node. No-op if absent.
+    fn remove_node(&mut self, node: NodeId);
+}
+
+/// Fold a datum ID to the u32 placement domain (shared helper).
+#[inline(always)]
+pub fn id32_of(id: DatumId) -> u32 {
+    fold64(id)
+}
+
+/// Convenience: total weight over all nodes.
+pub fn total_weight<P: Placer + ?Sized>(p: &P) -> f64 {
+    p.nodes().iter().map(|&n| p.weight_of(n)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::asura::AsuraPlacer;
+    use crate::algo::chash::ConsistentHash;
+    use crate::algo::straw::StrawBuckets;
+
+    fn all_placers(n: usize) -> Vec<Box<dyn Placer>> {
+        let mut asura = AsuraPlacer::new();
+        let mut ch = ConsistentHash::new(100);
+        let mut straw = StrawBuckets::new();
+        for i in 0..n as u32 {
+            asura.add_node(i, 1.0);
+            ch.add_node(i, 1.0);
+            straw.add_node(i, 1.0);
+        }
+        vec![Box::new(asura), Box::new(ch), Box::new(straw)]
+    }
+
+    #[test]
+    fn all_algorithms_place_within_membership() {
+        for p in all_placers(7) {
+            for id in 0..2000u64 {
+                let n = p.place(id);
+                assert!(n < 7, "{} placed {} on node {}", p.name(), id, n);
+            }
+        }
+    }
+
+    #[test]
+    fn all_algorithms_are_deterministic() {
+        for p in all_placers(5) {
+            for id in [0u64, 1, 99, u64::MAX] {
+                assert_eq!(p.place(id), p.place(id), "{}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn replicas_are_distinct_and_start_with_primary() {
+        let mut out = Vec::new();
+        for p in all_placers(6) {
+            for id in 0..500u64 {
+                p.place_replicas(id, 3, &mut out);
+                assert_eq!(out.len(), 3, "{}", p.name());
+                assert_eq!(out[0], p.place(id), "{}", p.name());
+                assert!(out[0] != out[1] && out[1] != out[2] && out[0] != out[2]);
+            }
+        }
+    }
+}

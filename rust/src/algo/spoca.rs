@@ -1,0 +1,252 @@
+//! SPOCA (Chawla et al. [11]) — ASURA's closest relative and the paper's
+//! §1 foil: "SPOCA suffers from a trade-off between scalability and
+//! efficiency because the length of the line used by SPOCA is determined
+//! in advance. ASURA is similar to SPOCA. However, ASURA supports
+//! scalability and efficiency at the same time."
+//!
+//! SPOCA assigns nodes segments on a **fixed-length** line chosen at
+//! deployment time and hashes the datum repeatedly until a draw lands in
+//! a segment. Consequences this implementation makes measurable
+//! (`asura experiment spoca`):
+//!
+//! - *Efficiency*: expected draws = line / covered. Provisioning a big
+//!   line for future growth makes every placement proportionally slower.
+//! - *Scalability*: once the line is full, **no node can be added** —
+//!   `add_node` fails. ASURA's nested generator ranges (§2.B) remove the
+//!   trade-off: its expected draws stay in [2, 4) forever.
+//!
+//! Same counter-based PRNG and Q24 hit test as ASURA, so the comparison
+//! isolates exactly the line-sizing decision.
+
+use crate::algo::{id32_of, DatumId, Membership, NodeId, Placer};
+use crate::fixed::Q24;
+use crate::prng::{draw_pair, fmix32};
+use std::collections::BTreeMap;
+
+/// Domain separation for SPOCA's draw stream.
+const SPOCA_SEED: u32 = 0x5B0C_A000;
+
+#[derive(Clone, Debug)]
+pub struct Spoca {
+    /// log2 of the fixed line length (line = 2^k segments, k ≤ 28).
+    k: u32,
+    lens: Vec<Q24>,
+    owners: Vec<NodeId>,
+    by_node: BTreeMap<NodeId, Vec<u32>>,
+}
+
+impl Spoca {
+    /// A line of `2^log2_line` segments, fixed for the system's lifetime.
+    pub fn new(log2_line: u32) -> Self {
+        assert!((4..=28).contains(&log2_line), "line must be 2^4..2^28");
+        let line = 1usize << log2_line;
+        Self {
+            k: log2_line,
+            lens: vec![Q24::ZERO; line],
+            owners: vec![u32::MAX; line],
+            by_node: BTreeMap::new(),
+        }
+    }
+
+    pub fn line_len(&self) -> usize {
+        self.lens.len()
+    }
+
+    pub fn covered(&self) -> f64 {
+        self.lens.iter().map(|q| q.to_f64()).sum()
+    }
+
+    /// Remaining whole-segment slots.
+    pub fn free_segments(&self) -> usize {
+        self.owners.iter().filter(|&&o| o == u32::MAX).count()
+    }
+
+    fn take_unused(&mut self) -> Option<u32> {
+        self.owners.iter().position(|&o| o == u32::MAX).map(|s| s as u32)
+    }
+
+    /// Placement with draw accounting (the efficiency measurement).
+    pub fn place_seg32_counted(&self, id32: u32) -> (u32, u32) {
+        debug_assert!(!self.by_node.is_empty(), "placement on empty SPOCA line");
+        let seed = fmix32(id32 ^ SPOCA_SEED);
+        let mut t = 0u32;
+        loop {
+            let (hi, lo) = draw_pair(seed, t);
+            t += 1;
+            let seg = hi >> (32 - self.k);
+            if (lo >> 8) < self.lens[seg as usize].0 {
+                return (seg, t);
+            }
+        }
+    }
+}
+
+impl Membership for Spoca {
+    /// Fails (panics) when the pre-sized line is exhausted — the
+    /// scalability wall the paper contrasts ASURA against. Use
+    /// [`Spoca::free_segments`] to probe first.
+    fn add_node(&mut self, node: NodeId, capacity: f64) {
+        assert!(capacity > 0.0);
+        assert!(!self.by_node.contains_key(&node), "node {node} already present");
+        let mut remaining = capacity;
+        let mut segs = Vec::new();
+        while remaining > 0.0 {
+            let Some(s) = self.take_unused() else {
+                // Roll back partial assignment, then refuse.
+                for &s in &segs {
+                    self.lens[s as usize] = Q24::ZERO;
+                    self.owners[s as usize] = u32::MAX;
+                }
+                panic!("SPOCA line exhausted: cannot add node {node} (fixed line of {} segments)",
+                       self.lens.len());
+            };
+            let take = remaining.min(1.0);
+            self.lens[s as usize] = Q24::from_f64(take);
+            self.owners[s as usize] = node;
+            segs.push(s);
+            remaining -= take;
+        }
+        self.by_node.insert(node, segs);
+    }
+
+    fn remove_node(&mut self, node: NodeId) {
+        let Some(segs) = self.by_node.remove(&node) else { return };
+        for s in segs {
+            self.lens[s as usize] = Q24::ZERO;
+            self.owners[s as usize] = u32::MAX;
+        }
+    }
+}
+
+impl Placer for Spoca {
+    fn name(&self) -> &'static str {
+        "spoca"
+    }
+
+    fn place(&self, id: DatumId) -> NodeId {
+        let (seg, _) = self.place_seg32_counted(id32_of(id));
+        self.owners[seg as usize]
+    }
+
+    fn place_replicas(&self, id: DatumId, replicas: usize, out: &mut Vec<NodeId>) {
+        out.clear();
+        assert!(replicas <= self.by_node.len());
+        let seed = fmix32(id32_of(id) ^ SPOCA_SEED);
+        let mut t = 0u32;
+        while out.len() < replicas {
+            let (hi, lo) = draw_pair(seed, t);
+            t += 1;
+            let seg = hi >> (32 - self.k);
+            if (lo >> 8) < self.lens[seg as usize].0 {
+                let owner = self.owners[seg as usize];
+                if !out.contains(&owner) {
+                    out.push(owner);
+                }
+            }
+        }
+    }
+
+    fn node_count(&self) -> usize {
+        self.by_node.len()
+    }
+
+    fn weight_of(&self, node: NodeId) -> f64 {
+        self.by_node
+            .get(&node)
+            .map(|segs| segs.iter().map(|&s| self.lens[s as usize].to_f64()).sum())
+            .unwrap_or(0.0)
+    }
+
+    fn nodes(&self) -> Vec<NodeId> {
+        self.by_node.keys().copied().collect()
+    }
+
+    fn memory_bytes_paper(&self) -> usize {
+        8 * self.lens.len() // the whole pre-sized line must be resident
+    }
+
+    fn memory_bytes_actual(&self) -> usize {
+        self.lens.capacity() * 4 + self.owners.capacity() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(k: u32, nodes: u32) -> Spoca {
+        let mut s = Spoca::new(k);
+        for i in 0..nodes {
+            s.add_node(i, 1.0);
+        }
+        s
+    }
+
+    #[test]
+    fn places_within_membership() {
+        let s = line(6, 10);
+        for id in 0..2000u64 {
+            assert!(s.place(id) < 10);
+        }
+    }
+
+    #[test]
+    fn optimal_movement_on_addition() {
+        let mut s = line(6, 10);
+        let before: Vec<NodeId> = (0..10_000u64).map(|i| s.place(i)).collect();
+        s.add_node(10, 1.0);
+        for (i, &b) in before.iter().enumerate() {
+            let a = s.place(i as u64);
+            assert!(a == b || a == 10, "stray move of {i}");
+        }
+    }
+
+    #[test]
+    fn efficiency_degrades_with_line_slack() {
+        // 8 nodes on a 16-slot line vs the same 8 on a 4096-slot line:
+        // expected draws scale with line/covered (the paper's point).
+        let tight = line(4, 8);
+        let slack = line(12, 8);
+        let mean = |s: &Spoca| -> f64 {
+            let total: u64 = (0..4000u32)
+                .map(|id| s.place_seg32_counted(fmix32(id)).1 as u64)
+                .sum();
+            total as f64 / 4000.0
+        };
+        let (m_tight, m_slack) = (mean(&tight), mean(&slack));
+        assert!(m_tight < 3.0, "tight line mean draws {m_tight}");
+        assert!(
+            m_slack > 50.0 * m_tight / 2.0,
+            "slack line should be ~2^8x worse: {m_slack} vs {m_tight}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "line exhausted")]
+    fn scalability_wall_when_line_full() {
+        let mut s = line(4, 16); // 16-slot line, full
+        s.add_node(16, 1.0);
+    }
+
+    #[test]
+    fn removal_frees_slots_for_reuse() {
+        let mut s = line(4, 16);
+        s.remove_node(3);
+        assert_eq!(s.free_segments(), 1);
+        s.add_node(99, 1.0); // reuses the slot
+        assert_eq!(s.free_segments(), 0);
+    }
+
+    #[test]
+    fn replicas_distinct() {
+        let s = line(6, 8);
+        let mut out = Vec::new();
+        for id in 0..200u64 {
+            s.place_replicas(id, 3, &mut out);
+            let mut d = out.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), 3);
+        }
+    }
+}

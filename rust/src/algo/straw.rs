@@ -1,0 +1,343 @@
+//! Straw Buckets from CRUSH (Weil et al. [6]; paper §1, Fig. 2) — the
+//! second baseline — plus Straw2 (the exact-weight successor from Ceph)
+//! as an extension.
+//!
+//! Each node draws an independent hash for the datum; the node with the
+//! largest (straw-scaled) draw stores it. Distribution stage is O(N) —
+//! the linear growth the paper measures in Fig. 5. Add/remove is
+//! trivially optimal: a new node only wins the data for which its straw
+//! is the global maximum; a removed node's data redistribute by the
+//! second-largest straw.
+//!
+//! Weighting: classic straw scales each node's draw by a precomputed
+//! straw factor (Ceph's `crush_calc_straw` — only approximately
+//! weight-proportional, the known straw flaw). Straw2 computes
+//! `ln(u)/w` which is exactly weight-proportional (exponential order
+//! statistics). The paper notes straw handles capacity "in a limited
+//! case" (§3.E) — both variants are provided so the ablation bench can
+//! quantify that limitation.
+
+use crate::algo::{id32_of, DatumId, Membership, NodeId, Placer};
+use crate::prng::hash2;
+use std::collections::BTreeMap;
+
+/// Straw scaling factors, 16.16 fixed point (Ceph's 0x10000 convention).
+#[derive(Clone, Debug)]
+struct Straws {
+    nodes: Vec<NodeId>,
+    factors: Vec<u32>, // straw factor per node, 16.16
+}
+
+/// Classic straw-factor computation, following Ceph's `crush_calc_straw`:
+/// items sorted by weight ascending; the lightest gets straw 1.0, and each
+/// heavier class gets its straw scaled so the probability mass below it
+/// matches the weight it should absorb.
+fn calc_straws(weights: &BTreeMap<NodeId, f64>) -> Straws {
+    let mut items: Vec<(f64, NodeId)> = weights.iter().map(|(&n, &w)| (w, n)).collect();
+    items.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let size = items.len();
+    let nodes: Vec<NodeId> = items.iter().map(|x| x.1).collect();
+    let mut factors = vec![0u32; size];
+
+    let mut straw = 1.0f64;
+    let mut numleft = size as f64;
+    let mut wbelow = 0.0f64;
+    let mut lastw = 0.0f64;
+    let mut i = 0usize;
+    while i < size {
+        if items[i].0 == 0.0 {
+            factors[i] = 0;
+            i += 1;
+            continue;
+        }
+        factors[i] = (straw * 65536.0) as u32;
+        i += 1;
+        if i == size {
+            break;
+        }
+        // Items of equal weight share the same straw factor.
+        if items[i].0 == items[i - 1].0 {
+            continue;
+        }
+        // Adjust the straw for the next (heavier) weight class so the win
+        // probability below it absorbs the right mass (Ceph builder.c).
+        wbelow += (items[i - 1].0 - lastw) * numleft;
+        numleft = (size - i) as f64;
+        let wnext = numleft * (items[i].0 - items[i - 1].0);
+        let pbelow = wbelow / (wbelow + wnext);
+        straw *= (1.0 / pbelow).powf(0.25);
+        lastw = items[i - 1].0;
+    }
+    Straws { nodes, factors }
+}
+
+/// Which straw formulation to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrawVariant {
+    /// Classic CRUSH straw buckets (the paper's baseline).
+    Straw,
+    /// Straw2: exact weight proportionality via `ln(u)/w`.
+    Straw2,
+}
+
+#[derive(Clone, Debug)]
+pub struct StrawBuckets {
+    variant: StrawVariant,
+    weights: BTreeMap<NodeId, f64>,
+    straws: Straws,
+}
+
+impl StrawBuckets {
+    /// Classic straw (the paper's comparator).
+    pub fn new() -> Self {
+        Self::with_variant(StrawVariant::Straw)
+    }
+
+    pub fn with_variant(variant: StrawVariant) -> Self {
+        Self {
+            variant,
+            weights: BTreeMap::new(),
+            straws: Straws {
+                nodes: Vec::new(),
+                factors: Vec::new(),
+            },
+        }
+    }
+
+    pub fn variant(&self) -> StrawVariant {
+        self.variant
+    }
+
+    /// Distribution stage: O(N) max-scan over per-node draws (paper Fig. 2).
+    #[inline]
+    pub fn place32(&self, id32: u32) -> NodeId {
+        debug_assert!(!self.straws.nodes.is_empty());
+        match self.variant {
+            StrawVariant::Straw => {
+                let mut best = (0u64, NodeId::MAX);
+                for (i, &node) in self.straws.nodes.iter().enumerate() {
+                    let draw = hash2(id32, node) as u64;
+                    let v = draw * self.straws.factors[i] as u64; // 48-bit straw value
+                    if v > best.0 || (v == best.0 && node < best.1) {
+                        best = (v, node);
+                    }
+                }
+                best.1
+            }
+            StrawVariant::Straw2 => {
+                let mut best = (f64::NEG_INFINITY, NodeId::MAX);
+                for (&node, &w) in self.weights.iter() {
+                    let u = (hash2(id32, node) as f64 + 0.5) / 4294967296.0;
+                    let v = u.ln() / w; // max of ln(u)/w ⇒ exact weighting
+                    if v > best.0 || (v == best.0 && node < best.1) {
+                        best = (v, node);
+                    }
+                }
+                best.1
+            }
+        }
+    }
+}
+
+impl Default for StrawBuckets {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Membership for StrawBuckets {
+    fn add_node(&mut self, node: NodeId, capacity: f64) {
+        assert!(capacity > 0.0);
+        assert!(!self.weights.contains_key(&node), "node {node} already present");
+        self.weights.insert(node, capacity);
+        self.straws = calc_straws(&self.weights);
+    }
+
+    fn remove_node(&mut self, node: NodeId) {
+        if self.weights.remove(&node).is_some() {
+            self.straws = calc_straws(&self.weights);
+        }
+    }
+}
+
+impl Placer for StrawBuckets {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            StrawVariant::Straw => "straw",
+            StrawVariant::Straw2 => "straw2",
+        }
+    }
+
+    #[inline]
+    fn place(&self, id: DatumId) -> NodeId {
+        self.place32(id32_of(id))
+    }
+
+    fn place_replicas(&self, id: DatumId, replicas: usize, out: &mut Vec<NodeId>) {
+        out.clear();
+        assert!(replicas <= self.weights.len());
+        // Rank nodes by straw value; take the top R (§5.A: straw picks
+        // the second-highest as the replica "naturally").
+        let id32 = id32_of(id);
+        let mut ranked: Vec<(u64, NodeId)> = match self.variant {
+            StrawVariant::Straw => self
+                .straws
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| (hash2(id32, n) as u64 * self.straws.factors[i] as u64, n))
+                .collect(),
+            StrawVariant::Straw2 => self
+                .weights
+                .iter()
+                .map(|(&n, &w)| {
+                    let u = (hash2(id32, n) as f64 + 0.5) / 4294967296.0;
+                    // Order-preserving map of ln(u)/w (negative) to u64.
+                    let v = (u.ln() / w * -1e15) as u64;
+                    (u64::MAX - v, n)
+                })
+                .collect(),
+        };
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        out.extend(ranked.iter().take(replicas).map(|&(_, n)| n));
+    }
+
+    fn node_count(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn weight_of(&self, node: NodeId) -> f64 {
+        // Report nominal weight; classic straw only realizes it
+        // approximately (quantified by the ablation bench).
+        self.weights.get(&node).copied().unwrap_or(0.0)
+    }
+
+    fn nodes(&self) -> Vec<NodeId> {
+        self.weights.keys().copied().collect()
+    }
+
+    /// Paper Table II accounting: node ids only ⇒ O(N). We count id +
+    /// straw factor per node (8N), symmetrical with the other entries.
+    fn memory_bytes_paper(&self) -> usize {
+        8 * self.weights.len()
+    }
+
+    fn memory_bytes_actual(&self) -> usize {
+        self.weights.len() * 24
+            + self.straws.nodes.capacity() * 4
+            + self.straws.factors.capacity() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bucket(n: u32) -> StrawBuckets {
+        let mut s = StrawBuckets::new();
+        for i in 0..n {
+            s.add_node(i, 1.0);
+        }
+        s
+    }
+
+    #[test]
+    fn equal_weights_get_equal_straws() {
+        let s = bucket(5);
+        assert!(s.straws.factors.iter().all(|&f| f == 65536));
+    }
+
+    #[test]
+    fn placement_deterministic_in_range() {
+        let s = bucket(11);
+        for id in 0..3000u64 {
+            let n = s.place(id);
+            assert!(n < 11);
+            assert_eq!(n, s.place(id));
+        }
+    }
+
+    /// Straw's defining property (what earns it "optimal movement" in the
+    /// paper): adding a node moves data only to it.
+    #[test]
+    fn optimal_movement_on_addition() {
+        let mut s = bucket(7);
+        let before: Vec<NodeId> = (0..20_000u64).map(|i| s.place(i)).collect();
+        s.add_node(7, 1.0);
+        for (i, b) in before.iter().enumerate() {
+            let a = s.place(i as u64);
+            assert!(a == *b || a == 7, "datum {i}: {b} -> {a}");
+        }
+    }
+
+    #[test]
+    fn optimal_movement_on_removal() {
+        let mut s = bucket(7);
+        let before: Vec<NodeId> = (0..20_000u64).map(|i| s.place(i)).collect();
+        s.remove_node(2);
+        for (i, b) in before.iter().enumerate() {
+            let a = s.place(i as u64);
+            if *b != 2 {
+                assert_eq!(a, *b);
+            } else {
+                assert_ne!(a, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn equal_weight_distribution_is_uniform() {
+        let s = bucket(10);
+        let ids = 100_000u64;
+        let mut counts = vec![0u64; 10];
+        for id in 0..ids {
+            counts[s.place(id) as usize] += 1;
+        }
+        let mean = ids as f64 / 10.0;
+        for &c in &counts {
+            assert!((c as f64 - mean).abs() < 6.0 * mean.sqrt());
+        }
+    }
+
+    /// Straw2 realizes weights exactly (in expectation); classic straw
+    /// only approximately — the §3.E "limited case".
+    #[test]
+    fn straw2_weighted_share() {
+        let mut s = StrawBuckets::with_variant(StrawVariant::Straw2);
+        s.add_node(0, 1.0);
+        s.add_node(1, 2.0);
+        s.add_node(2, 1.0);
+        let ids = 100_000u64;
+        let mut counts = [0u64; 3];
+        for id in 0..ids {
+            counts[s.place(id) as usize] += 1;
+        }
+        let share = counts[1] as f64 / ids as f64;
+        assert!((share - 0.5).abs() < 0.02, "straw2 share {share}");
+    }
+
+    #[test]
+    fn straw2_optimal_movement_on_addition() {
+        let mut s = StrawBuckets::with_variant(StrawVariant::Straw2);
+        for i in 0..6 {
+            s.add_node(i, 1.0 + i as f64 * 0.5);
+        }
+        let before: Vec<NodeId> = (0..10_000u64).map(|i| s.place(i)).collect();
+        s.add_node(6, 2.0);
+        for (i, b) in before.iter().enumerate() {
+            let a = s.place(i as u64);
+            assert!(a == *b || a == 6);
+        }
+    }
+
+    #[test]
+    fn replicas_distinct_and_primary_first() {
+        let s = bucket(9);
+        let mut out = Vec::new();
+        for id in 0..500u64 {
+            s.place_replicas(id, 3, &mut out);
+            assert_eq!(out[0], s.place(id));
+            assert!(out[0] != out[1] && out[1] != out[2] && out[0] != out[2]);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Table management baseline (paper §Intro): the combination of every
+//! datum ID with its storing node is memorized explicitly.
+//!
+//! Included to substantiate the paper's motivating arithmetic — 10 PB in
+//! 1 MB units ⇒ 10^10 entries ⇒ 80 GB of table — and to give the Table II
+//! harness a third column. Placement of *new* data uses round-robin by
+//! remaining capacity (a typical table-managed design); lookups are exact.
+
+use crate::algo::{DatumId, Membership, NodeId, Placer};
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Explicit datum→node table with capacity-aware assignment of new data.
+pub struct TableManagement {
+    weights: BTreeMap<NodeId, f64>,
+    /// Assigned bytes-equivalent per node (placement pressure).
+    load: Mutex<BTreeMap<NodeId, u64>>,
+    /// The big table.
+    map: Mutex<HashMap<DatumId, NodeId>>,
+}
+
+impl TableManagement {
+    pub fn new() -> Self {
+        Self {
+            weights: BTreeMap::new(),
+            load: Mutex::new(BTreeMap::new()),
+            map: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn entries(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+impl Default for TableManagement {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Membership for TableManagement {
+    fn add_node(&mut self, node: NodeId, capacity: f64) {
+        assert!(capacity > 0.0);
+        self.weights.insert(node, capacity);
+        self.load.lock().unwrap().insert(node, 0);
+    }
+
+    fn remove_node(&mut self, node: NodeId) {
+        self.weights.remove(&node);
+        self.load.lock().unwrap().remove(&node);
+        // Re-assign orphaned data to the least-loaded nodes.
+        let mut map = self.map.lock().unwrap();
+        let orphans: Vec<DatumId> = map
+            .iter()
+            .filter(|(_, &n)| n == node)
+            .map(|(&d, _)| d)
+            .collect();
+        let mut load = self.load.lock().unwrap();
+        for d in orphans {
+            let (&target, _) = load
+                .iter()
+                .min_by(|a, b| {
+                    let la = *a.1 as f64 / self.weights[a.0];
+                    let lb = *b.1 as f64 / self.weights[b.0];
+                    la.partial_cmp(&lb).unwrap()
+                })
+                .expect("cluster empty");
+            map.insert(d, target);
+            *load.get_mut(&target).unwrap() += 1;
+        }
+    }
+}
+
+impl Placer for TableManagement {
+    fn name(&self) -> &'static str {
+        "table"
+    }
+
+    fn place(&self, id: DatumId) -> NodeId {
+        if let Some(&n) = self.map.lock().unwrap().get(&id) {
+            return n;
+        }
+        // First sight of this datum: assign to the least relatively
+        // loaded node and memorize.
+        let mut load = self.load.lock().unwrap();
+        let (&target, _) = load
+            .iter()
+            .min_by(|a, b| {
+                let la = *a.1 as f64 / self.weights[a.0];
+                let lb = *b.1 as f64 / self.weights[b.0];
+                la.partial_cmp(&lb).unwrap()
+            })
+            .expect("cluster empty");
+        *load.get_mut(&target).unwrap() += 1;
+        self.map.lock().unwrap().insert(id, target);
+        target
+    }
+
+    fn place_replicas(&self, id: DatumId, replicas: usize, out: &mut Vec<NodeId>) {
+        out.clear();
+        assert!(replicas <= self.weights.len());
+        let primary = self.place(id);
+        out.push(primary);
+        // Deterministic secondary assignment: next node ids cyclically.
+        let nodes: Vec<NodeId> = self.weights.keys().copied().collect();
+        let start = nodes.iter().position(|&n| n == primary).unwrap();
+        let mut i = 1usize;
+        while out.len() < replicas {
+            let n = nodes[(start + i) % nodes.len()];
+            if !out.contains(&n) {
+                out.push(n);
+            }
+            i += 1;
+        }
+    }
+
+    fn node_count(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn weight_of(&self, node: NodeId) -> f64 {
+        self.weights.get(&node).copied().unwrap_or(0.0)
+    }
+
+    fn nodes(&self) -> Vec<NodeId> {
+        self.weights.keys().copied().collect()
+    }
+
+    /// Paper §Intro accounting: 8 bytes per datum entry.
+    fn memory_bytes_paper(&self) -> usize {
+        8 * self.map.lock().unwrap().len()
+    }
+
+    fn memory_bytes_actual(&self) -> usize {
+        let map = self.map.lock().unwrap();
+        map.capacity() * (std::mem::size_of::<(DatumId, NodeId)>() + 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_grows_with_data_not_nodes() {
+        let mut t = TableManagement::new();
+        t.add_node(0, 1.0);
+        t.add_node(1, 1.0);
+        for id in 0..1000u64 {
+            t.place(id);
+        }
+        assert_eq!(t.entries(), 1000);
+        assert_eq!(t.memory_bytes_paper(), 8000);
+    }
+
+    #[test]
+    fn lookups_are_sticky() {
+        let mut t = TableManagement::new();
+        t.add_node(0, 1.0);
+        t.add_node(1, 1.0);
+        let first: Vec<NodeId> = (0..500u64).map(|i| t.place(i)).collect();
+        let second: Vec<NodeId> = (0..500u64).map(|i| t.place(i)).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn balances_by_capacity() {
+        let mut t = TableManagement::new();
+        t.add_node(0, 1.0);
+        t.add_node(1, 3.0);
+        for id in 0..4000u64 {
+            t.place(id);
+        }
+        let mut counts = [0u64; 2];
+        for id in 0..4000u64 {
+            counts[t.place(id) as usize] += 1;
+        }
+        assert!((counts[1] as f64 / 4000.0 - 0.75).abs() < 0.01);
+    }
+
+    #[test]
+    fn removal_reassigns_orphans() {
+        let mut t = TableManagement::new();
+        t.add_node(0, 1.0);
+        t.add_node(1, 1.0);
+        for id in 0..100u64 {
+            t.place(id);
+        }
+        t.remove_node(0);
+        for id in 0..100u64 {
+            assert_eq!(t.place(id), 1);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Micro/meso benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmed, repeated, outlier-trimmed wall-clock measurement with
+//! mean/median/σ reporting — enough statistical hygiene to regenerate the
+//! paper's timing figures (Fig. 5, Table III) credibly. All bench binaries
+//! under `rust/benches/` are `harness = false` and drive this module.
+
+use crate::stats::Summary;
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement: per-iteration nanoseconds.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Mean ns/iter over samples (after trimming).
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12.1} ns/iter (median {:>10.1}, σ {:>8.1}, {} × {} iters)",
+            self.name, self.mean_ns, self.median_ns, self.stddev_ns, self.samples, self.iters_per_sample
+        )
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    /// Target wall time per sample.
+    pub sample_time: Duration,
+    /// Number of samples.
+    pub samples: usize,
+    /// Warmup time before sampling.
+    pub warmup: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            sample_time: Duration::from_millis(80),
+            samples: 12,
+            warmup: Duration::from_millis(120),
+        }
+    }
+}
+
+impl Bench {
+    /// Quick preset for smoke benches / CI.
+    pub fn quick() -> Self {
+        Self {
+            sample_time: Duration::from_millis(20),
+            samples: 6,
+            warmup: Duration::from_millis(30),
+        }
+    }
+
+    /// Measure `f` (one logical iteration per call).
+    ///
+    /// Calibrates iterations per sample to hit `sample_time`, runs
+    /// `samples` samples, trims the top/bottom 10% and reports.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup + calibration.
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let iters = ((self.sample_time.as_nanos() as f64 / per_iter).ceil() as u64).max(1);
+
+        let mut s = Summary::new();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / iters as f64;
+            s.push(dt);
+        }
+        let trimmed = trim(&s, 0.1);
+        Measurement {
+            name: name.to_string(),
+            mean_ns: trimmed.mean(),
+            median_ns: trimmed.percentile(50.0),
+            stddev_ns: trimmed.stddev(),
+            samples: self.samples,
+            iters_per_sample: iters,
+        }
+    }
+
+    /// Measure with a per-iteration input drawn from `inputs` cyclically
+    /// (keeps the optimizer honest and exercises varied code paths, like
+    /// the paper's "1,000,000 loops for different inputs").
+    pub fn run_with_inputs<T: Copy, F: FnMut(T)>(
+        &self,
+        name: &str,
+        inputs: &[T],
+        mut f: F,
+    ) -> Measurement {
+        assert!(!inputs.is_empty());
+        let mut i = 0usize;
+        self.run(name, move || {
+            f(black_box(inputs[i]));
+            i = (i + 1) % inputs.len();
+        })
+    }
+}
+
+fn trim(s: &Summary, frac: f64) -> Summary {
+    let lo = s.percentile(100.0 * frac);
+    let hi = s.percentile(100.0 * (1.0 - frac));
+    let mut out = Summary::new();
+    for i in 0..s.len() {
+        let x = s.percentile(100.0 * i as f64 / (s.len().max(2) - 1) as f64);
+        if x >= lo && x <= hi {
+            out.push(x);
+        }
+    }
+    if out.is_empty() {
+        s.clone()
+    } else {
+        out
+    }
+}
+
+/// Re-export for bench binaries.
+pub use std::hint::black_box as bb;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench {
+            sample_time: Duration::from_millis(2),
+            samples: 4,
+            warmup: Duration::from_millis(2),
+        };
+        let mut x = 0u64;
+        let m = b.run("noop-ish", || {
+            x = x.wrapping_add(bb(1));
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters_per_sample >= 1);
+        bb(x);
+    }
+
+    #[test]
+    fn run_with_inputs_cycles() {
+        let b = Bench {
+            sample_time: Duration::from_millis(2),
+            samples: 3,
+            warmup: Duration::from_millis(2),
+        };
+        let inputs = [1u64, 2, 3];
+        let mut sum = 0u64;
+        let m = b.run_with_inputs("cycle", &inputs, |x| {
+            sum = sum.wrapping_add(x);
+        });
+        assert!(m.mean_ns > 0.0);
+        bb(sum);
+    }
+
+    #[test]
+    fn report_formats() {
+        let m = Measurement {
+            name: "x".into(),
+            mean_ns: 1.5,
+            median_ns: 1.4,
+            stddev_ns: 0.1,
+            samples: 3,
+            iters_per_sample: 10,
+        };
+        assert!(m.report().contains("ns/iter"));
+    }
+}

@@ -1,0 +1,505 @@
+//! Storage-cluster substrate: in-process nodes + data migration under
+//! membership changes.
+//!
+//! [`Cluster`] is generic over the placement [`Strategy`] and performs
+//! full-recompute rebalancing (every stored key's placement is
+//! re-evaluated — the baseline the paper says "involves a high processing
+//! cost"). [`AsuraCluster`] layers the §2.D metadata acceleration on top:
+//! only keys flagged by the [`rebalance::MetaIndex`] are re-evaluated.
+//! The `movement` experiment quantifies the difference.
+
+pub mod node;
+pub mod rebalance;
+
+use crate::algo::asura::AsuraPlacer;
+use crate::algo::{DatumId, Membership, NodeId, Placer};
+use crate::stats::Histogram;
+use node::StorageNode;
+use rebalance::MetaIndex;
+use std::collections::{HashMap, HashSet};
+
+/// A placement strategy usable by a cluster: placement + membership.
+pub trait Strategy: Placer + Membership {}
+impl<T: Placer + Membership> Strategy for T {}
+
+/// What a rebalance did.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MigrationReport {
+    /// Keys whose placement was re-evaluated.
+    pub checked: usize,
+    /// Keys whose replica set changed (data moved/copied).
+    pub moved: usize,
+    /// Bytes transferred between nodes.
+    pub bytes_moved: u64,
+    /// Total keys in the cluster at rebalance time.
+    pub total_keys: usize,
+}
+
+/// In-process storage cluster with replication.
+pub struct Cluster<S: Strategy> {
+    strategy: S,
+    nodes: HashMap<NodeId, StorageNode>,
+    /// Simulator bookkeeping only (NOT part of any placement algorithm):
+    /// the universe of stored keys, for migration enumeration.
+    keys: HashSet<DatumId>,
+    replicas: usize,
+    epoch: u64,
+}
+
+impl<S: Strategy> Cluster<S> {
+    pub fn new(strategy: S, replicas: usize) -> Self {
+        assert!(replicas >= 1);
+        Self {
+            strategy,
+            nodes: HashMap::new(),
+            keys: HashSet::new(),
+            replicas,
+            epoch: 0,
+        }
+    }
+
+    pub fn strategy(&self) -> &S {
+        &self.strategy
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn key_count(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn node_ids(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.nodes.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn node(&self, id: NodeId) -> Option<&StorageNode> {
+        self.nodes.get(&id)
+    }
+
+    fn effective_replicas(&self) -> usize {
+        self.replicas.min(self.nodes.len())
+    }
+
+    fn replica_set(&self, key: DatumId) -> Vec<NodeId> {
+        let mut out = Vec::with_capacity(self.replicas);
+        self.strategy
+            .place_replicas(key, self.effective_replicas(), &mut out);
+        out
+    }
+
+    /// Store a value (written to all replicas).
+    pub fn set(&mut self, key: DatumId, value: Vec<u8>) {
+        assert!(!self.nodes.is_empty(), "set on empty cluster");
+        let targets = self.replica_set(key);
+        for &n in &targets {
+            self.nodes.get_mut(&n).unwrap().set(key, value.clone());
+        }
+        self.keys.insert(key);
+    }
+
+    /// Read a value (primary first, then replicas).
+    pub fn get(&mut self, key: DatumId) -> Option<Vec<u8>> {
+        let targets = self.replica_set(key);
+        for &n in &targets {
+            if let Some(v) = self.nodes.get_mut(&n).unwrap().get(key) {
+                return Some(v.to_vec());
+            }
+        }
+        None
+    }
+
+    pub fn delete(&mut self, key: DatumId) {
+        for n in self.nodes.values_mut() {
+            n.remove(key);
+        }
+        self.keys.remove(&key);
+    }
+
+    /// Re-evaluate `candidates` and migrate any key whose replica set
+    /// changed. `old_sets` maps key → replica set before the change.
+    fn migrate(
+        &mut self,
+        candidates: &HashSet<DatumId>,
+        old_sets: &HashMap<DatumId, Vec<NodeId>>,
+    ) -> MigrationReport {
+        let mut report = MigrationReport {
+            checked: candidates.len(),
+            total_keys: self.keys.len(),
+            ..Default::default()
+        };
+        for &key in candidates {
+            let new_set = self.replica_set(key);
+            let old_set = &old_sets[&key];
+            if *old_set == new_set {
+                continue;
+            }
+            report.moved += 1;
+            // Fetch the value from any surviving holder.
+            let value = old_set
+                .iter()
+                .chain(new_set.iter())
+                .find_map(|n| {
+                    self.nodes
+                        .get(n)
+                        .and_then(|node| node.peek(key))
+                        .map(|v| v.to_vec())
+                })
+                .expect("datum lost during migration");
+            for &n in old_set {
+                if !new_set.contains(&n) {
+                    if let Some(node) = self.nodes.get_mut(&n) {
+                        if node.remove(key).is_some() {
+                            node.migrations_out += 1;
+                            report.bytes_moved += value.len() as u64;
+                        }
+                    }
+                }
+            }
+            for &n in &new_set {
+                if !old_set.contains(&n) {
+                    let node = self.nodes.get_mut(&n).unwrap();
+                    node.set(key, value.clone());
+                    node.migrations_in += 1;
+                }
+            }
+        }
+        report
+    }
+
+    fn snapshot_sets(
+        &self,
+        keys: impl Iterator<Item = DatumId>,
+    ) -> HashMap<DatumId, Vec<NodeId>> {
+        keys.map(|k| (k, self.replica_set(k))).collect()
+    }
+
+    /// Add a storage node: update the strategy, then migrate (full
+    /// recompute — every key is checked).
+    pub fn add_node(&mut self, id: NodeId, capacity: f64) -> MigrationReport {
+        let candidates: HashSet<DatumId> = self.keys.iter().copied().collect();
+        let old_sets = self.snapshot_sets(candidates.iter().copied());
+        self.strategy.add_node(id, capacity);
+        self.nodes.insert(id, StorageNode::new());
+        self.epoch += 1;
+        self.migrate(&candidates, &old_sets)
+    }
+
+    /// Remove a storage node (drain + migrate, full recompute).
+    pub fn remove_node(&mut self, id: NodeId) -> MigrationReport {
+        let candidates: HashSet<DatumId> = self.keys.iter().copied().collect();
+        let old_sets = self.snapshot_sets(candidates.iter().copied());
+        self.strategy.remove_node(id);
+        self.epoch += 1;
+        let report = self.migrate(&candidates, &old_sets);
+        let drained = self.nodes.remove(&id);
+        debug_assert!(
+            drained.map(|n| n.is_empty()).unwrap_or(true),
+            "removed node still holds data"
+        );
+        report
+    }
+
+    /// Per-node stored-key histogram (uniformity measurements).
+    pub fn histogram(&self) -> Histogram {
+        let mut counts: Vec<(NodeId, u64)> = self
+            .nodes
+            .iter()
+            .map(|(&n, s)| (n, s.len() as u64))
+            .collect();
+        counts.sort_unstable();
+        Histogram::from_counts(counts)
+    }
+
+    /// Invariant check: every key present on exactly its replica set.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        for &key in &self.keys {
+            let want = self.replica_set(key);
+            for (&nid, node) in &self.nodes {
+                let has = node.contains(key);
+                let should = want.contains(&nid);
+                if has != should {
+                    return Err(format!("key {key}: node {nid} has={has} should={should}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// ASURA cluster with §2.D metadata-accelerated rebalancing.
+pub struct AsuraCluster {
+    inner: Cluster<AsuraPlacer>,
+    index: MetaIndex,
+}
+
+impl AsuraCluster {
+    pub fn new(replicas: usize) -> Self {
+        Self {
+            inner: Cluster::new(AsuraPlacer::new(), replicas),
+            index: MetaIndex::new(replicas),
+        }
+    }
+
+    pub fn cluster(&self) -> &Cluster<AsuraPlacer> {
+        &self.inner
+    }
+
+    pub fn index(&self) -> &MetaIndex {
+        &self.index
+    }
+
+    pub fn set(&mut self, key: DatumId, value: Vec<u8>) {
+        self.inner.set(key, value);
+        self.index.insert(self.inner.strategy(), key);
+    }
+
+    pub fn get(&mut self, key: DatumId) -> Option<Vec<u8>> {
+        self.inner.get(key)
+    }
+
+    pub fn delete(&mut self, key: DatumId) {
+        self.inner.delete(key);
+        self.index.remove_key(key);
+    }
+
+    /// Accelerated addition: only keys flagged by the ADDITION-NUMBER /
+    /// horizon index are re-evaluated.
+    pub fn add_node(&mut self, id: NodeId, capacity: f64) -> MigrationReport {
+        // Predict the segments the new node will take (smallest-unused),
+        // by probing a clone of the table.
+        let mut probe = self.inner.strategy().clone();
+        probe.add_node(id, capacity);
+        let new_segs = probe.table().segments_of(id).to_vec();
+
+        let candidates = self.index.affected_by_addition(&new_segs);
+        let old_sets = self.inner.snapshot_sets(candidates.iter().copied());
+        self.inner.strategy.add_node(id, capacity);
+        debug_assert_eq!(self.inner.strategy.table().segments_of(id), &new_segs[..]);
+        self.inner.nodes.insert(id, StorageNode::new());
+        self.inner.epoch += 1;
+        let report = self.inner.migrate(&candidates, &old_sets);
+        // Refresh metadata for every checked key (moved or not: their
+        // ADDITION NUMBER may have been consumed — §2.D "the datum moves
+        // ... or the ADDITION NUMBER is recalculated").
+        for &k in &candidates {
+            self.index.insert(self.inner.strategy(), k);
+        }
+        report
+    }
+
+    /// Accelerated removal: only keys flagged by REMOVE NUMBERS are
+    /// re-evaluated.
+    pub fn remove_node(&mut self, id: NodeId) -> MigrationReport {
+        let victim_segs = self.inner.strategy().table().segments_of(id).to_vec();
+        let candidates = self.index.affected_by_removal(&victim_segs);
+        let old_sets = self.inner.snapshot_sets(candidates.iter().copied());
+        self.inner.strategy.remove_node(id);
+        self.inner.epoch += 1;
+        let report = self.inner.migrate(&candidates, &old_sets);
+        let drained = self.inner.nodes.remove(&id);
+        debug_assert!(
+            drained.map(|n| n.is_empty()).unwrap_or(true),
+            "removed node still holds data"
+        );
+        for &k in &candidates {
+            self.index.insert(self.inner.strategy(), k);
+        }
+        report
+    }
+
+    pub fn check_consistency(&self) -> Result<(), String> {
+        self.inner.check_consistency()
+    }
+
+    pub fn histogram(&self) -> Histogram {
+        self.inner.histogram()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::chash::ConsistentHash;
+    use crate::algo::straw::StrawBuckets;
+
+    fn fill<S: Strategy>(c: &mut Cluster<S>, n: u64) {
+        for k in 0..n {
+            c.set(k, vec![k as u8; 8]);
+        }
+    }
+
+    #[test]
+    fn set_get_roundtrip_all_strategies() {
+        let mut asura = Cluster::new(AsuraPlacer::new(), 1);
+        let mut ch = Cluster::new(ConsistentHash::new(50), 1);
+        let mut straw = Cluster::new(StrawBuckets::new(), 1);
+        for i in 0..5 {
+            asura.add_node(i, 1.0);
+            ch.add_node(i, 1.0);
+            straw.add_node(i, 1.0);
+        }
+        fill(&mut asura, 200);
+        fill(&mut ch, 200);
+        fill(&mut straw, 200);
+        for k in 0..200 {
+            assert_eq!(asura.get(k), Some(vec![k as u8; 8]));
+            assert_eq!(ch.get(k), Some(vec![k as u8; 8]));
+            assert_eq!(straw.get(k), Some(vec![k as u8; 8]));
+        }
+    }
+
+    #[test]
+    fn replication_stores_r_copies() {
+        let mut c = Cluster::new(AsuraPlacer::new(), 3);
+        for i in 0..6 {
+            c.add_node(i, 1.0);
+        }
+        fill(&mut c, 300);
+        let total: usize = c.node_ids().iter().map(|&n| c.node(n).unwrap().len()).sum();
+        assert_eq!(total, 900);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn addition_migrates_only_to_new_node() {
+        let mut c = Cluster::new(AsuraPlacer::new(), 1);
+        for i in 0..8 {
+            c.add_node(i, 1.0);
+        }
+        fill(&mut c, 4000);
+        let report = c.add_node(8, 1.0);
+        assert_eq!(report.checked, 4000, "generic cluster checks everything");
+        let expect = 4000.0 / 9.0;
+        assert!(
+            (report.moved as f64 - expect).abs() < 6.0 * expect.sqrt(),
+            "moved {}",
+            report.moved
+        );
+        assert_eq!(c.node(8).unwrap().len(), report.moved);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn removal_drains_exactly_the_victim() {
+        let mut c = Cluster::new(AsuraPlacer::new(), 2);
+        for i in 0..8 {
+            c.add_node(i, 1.0);
+        }
+        fill(&mut c, 2000);
+        let report = c.remove_node(3);
+        assert!(report.moved > 0);
+        assert!(c.node(3).is_none());
+        c.check_consistency().unwrap();
+        for k in 0..2000 {
+            assert!(c.get(k).is_some(), "key {k} lost");
+        }
+    }
+
+    #[test]
+    fn asura_cluster_acceleration_checks_fewer_keys() {
+        let mut acc = AsuraCluster::new(1);
+        let mut full = Cluster::new(AsuraPlacer::new(), 1);
+        for i in 0..10 {
+            acc.add_node(i, 1.0);
+            full.add_node(i, 1.0);
+        }
+        for k in 0..3000u64 {
+            acc.set(k, vec![1; 4]);
+            full.set(k, vec![1; 4]);
+        }
+        let ra = acc.add_node(10, 1.0);
+        let rf = full.add_node(10, 1.0);
+        assert_eq!(ra.moved, rf.moved, "same movement either way");
+        assert!(
+            ra.checked < rf.checked / 2,
+            "acceleration: {} vs {}",
+            ra.checked,
+            rf.checked
+        );
+        acc.check_consistency().unwrap();
+        full.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn asura_cluster_accelerated_removal_is_consistent() {
+        let mut acc = AsuraCluster::new(2);
+        for i in 0..8 {
+            acc.add_node(i, 1.0);
+        }
+        for k in 0..2000u64 {
+            acc.set(k, vec![2; 4]);
+        }
+        let report = acc.remove_node(5);
+        assert!(report.checked < 2000, "removal checked {}", report.checked);
+        acc.check_consistency().unwrap();
+        for k in 0..2000 {
+            assert!(acc.get(k).is_some(), "key {k} lost after removal");
+        }
+    }
+
+    #[test]
+    fn repeated_membership_churn_stays_consistent() {
+        let mut acc = AsuraCluster::new(2);
+        for i in 0..5 {
+            acc.add_node(i, 1.0 + i as f64 * 0.3);
+        }
+        for k in 0..800u64 {
+            acc.set(k, vec![3; 4]);
+        }
+        acc.add_node(5, 2.0);
+        acc.remove_node(1);
+        acc.add_node(6, 0.5);
+        acc.remove_node(5);
+        acc.add_node(7, 1.5);
+        acc.check_consistency().unwrap();
+        for k in 0..800 {
+            assert!(acc.get(k).is_some(), "key {k} lost after churn");
+        }
+    }
+
+    #[test]
+    fn histogram_counts_stored_keys() {
+        let mut c = Cluster::new(AsuraPlacer::new(), 1);
+        for i in 0..4 {
+            c.add_node(i, 1.0);
+        }
+        fill(&mut c, 1000);
+        let h = c.histogram();
+        assert_eq!(h.total(), 1000);
+        assert!(h.max_variability_pct() < 30.0);
+    }
+
+    #[test]
+    fn delete_removes_everywhere() {
+        let mut c = Cluster::new(AsuraPlacer::new(), 2);
+        for i in 0..4 {
+            c.add_node(i, 1.0);
+        }
+        c.set(7, vec![1, 2, 3]);
+        c.delete(7);
+        assert_eq!(c.get(7), None);
+        assert_eq!(c.key_count(), 0);
+        c.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn weighted_cluster_distributes_by_capacity() {
+        let mut c = Cluster::new(AsuraPlacer::new(), 1);
+        c.add_node(0, 1.0);
+        c.add_node(1, 3.0);
+        fill(&mut c, 8000);
+        let h = c.histogram();
+        let counts = h.counts();
+        let share = counts[1].1 as f64 / 8000.0;
+        assert!((share - 0.75).abs() < 0.03, "share {share}");
+        assert!(h.max_variability_weighted_pct(c.strategy()) < 10.0);
+    }
+}

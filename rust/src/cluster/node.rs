@@ -1,0 +1,112 @@
+//! In-memory storage node: the unit the distribution algorithms place
+//! data onto. Used directly by the in-process cluster simulator and
+//! wrapped by the TCP server (`net::server`) for the networked cluster.
+
+use std::collections::HashMap;
+
+/// A single storage node's state.
+#[derive(Debug, Default)]
+pub struct StorageNode {
+    data: HashMap<u64, Vec<u8>>,
+    used_bytes: u64,
+    /// Lifetime counters.
+    pub sets: u64,
+    pub gets: u64,
+    pub hits: u64,
+    pub migrations_in: u64,
+    pub migrations_out: u64,
+}
+
+impl StorageNode {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, key: u64, value: Vec<u8>) {
+        self.sets += 1;
+        let new_len = value.len() as u64;
+        if let Some(old) = self.data.insert(key, value) {
+            self.used_bytes -= old.len() as u64;
+        }
+        self.used_bytes += new_len;
+    }
+
+    pub fn get(&mut self, key: u64) -> Option<&[u8]> {
+        self.gets += 1;
+        let v = self.data.get(&key).map(|v| v.as_slice());
+        if v.is_some() {
+            self.hits += 1;
+        }
+        v
+    }
+
+    pub fn peek(&self, key: u64) -> Option<&[u8]> {
+        self.data.get(&key).map(|v| v.as_slice())
+    }
+
+    pub fn remove(&mut self, key: u64) -> Option<Vec<u8>> {
+        let v = self.data.remove(&key);
+        if let Some(ref val) = v {
+            self.used_bytes -= val.len() as u64;
+        }
+        v
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.data.contains_key(&key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = u64> + '_ {
+        self.data.keys().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut n = StorageNode::new();
+        n.set(1, b"hello".to_vec());
+        assert_eq!(n.get(1), Some(&b"hello"[..]));
+        assert_eq!(n.get(2), None);
+        assert_eq!(n.hits, 1);
+        assert_eq!(n.gets, 2);
+    }
+
+    #[test]
+    fn used_bytes_tracks_overwrites_and_removals() {
+        let mut n = StorageNode::new();
+        n.set(1, vec![0; 100]);
+        assert_eq!(n.used_bytes(), 100);
+        n.set(1, vec![0; 40]);
+        assert_eq!(n.used_bytes(), 40);
+        n.remove(1);
+        assert_eq!(n.used_bytes(), 0);
+        assert!(n.is_empty());
+    }
+
+    #[test]
+    fn keys_iterates_everything() {
+        let mut n = StorageNode::new();
+        for k in 0..50u64 {
+            n.set(k, vec![1]);
+        }
+        let mut ks: Vec<u64> = n.keys().collect();
+        ks.sort_unstable();
+        assert_eq!(ks, (0..50).collect::<Vec<u64>>());
+    }
+}

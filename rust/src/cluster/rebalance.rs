@@ -1,0 +1,236 @@
+//! §2.D metadata-accelerated rebalance planning.
+//!
+//! The naive way to find data that must move after a membership change is
+//! to recompute the placement of *every* stored datum. The paper's
+//! acceleration stores (N+1) numbers per datum and only recomputes the
+//! flagged ones. [`MetaIndex`] maintains the inverted indexes:
+//!
+//! - `addition`: anterior floor → keys (fires when a node is added at
+//!   that segment number);
+//! - `removal`: remove-number floor → keys (fires when the segment's
+//!   owner is removed);
+//! - `horizon`: keys ordered by metadata horizon (fire when the line
+//!   grows past a datum's recorded extension range — rare: requires the
+//!   cluster to double).
+
+use crate::algo::asura::metadata::{compute_meta, DatumMeta};
+use crate::algo::asura::{AsuraPlacer, SegId};
+use crate::algo::DatumId;
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// Inverted metadata index over the stored keys.
+#[derive(Debug, Default)]
+pub struct MetaIndex {
+    metas: HashMap<DatumId, DatumMeta>,
+    addition: HashMap<u32, HashSet<DatumId>>,
+    removal: HashMap<u32, HashSet<DatumId>>,
+    horizon: BTreeMap<u32, HashSet<DatumId>>,
+    replicas: usize,
+}
+
+impl MetaIndex {
+    pub fn new(replicas: usize) -> Self {
+        Self {
+            replicas: replicas.max(1),
+            ..Default::default()
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metas.is_empty()
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn meta(&self, key: DatumId) -> Option<&DatumMeta> {
+        self.metas.get(&key)
+    }
+
+    /// Paper-equivalent metadata bytes: (N+1) × 4 per datum (§5.D).
+    pub fn memory_bytes_paper(&self) -> usize {
+        self.metas.values().map(|m| m.memory_bytes_paper()).sum()
+    }
+
+    /// Bytes of the sound set-variant actually stored.
+    pub fn memory_bytes_actual(&self) -> usize {
+        self.metas.values().map(|m| m.memory_bytes_actual()).sum()
+    }
+
+    /// (Re)compute and index metadata for `key`.
+    pub fn insert(&mut self, placer: &AsuraPlacer, key: DatumId) {
+        self.remove_key(key);
+        let meta = compute_meta(placer, key, self.replicas.min(placer.table().node_count()));
+        for &f in &meta.anterior_floors {
+            self.addition.entry(f).or_default().insert(key);
+        }
+        for &f in &meta.remove_numbers {
+            self.removal.entry(f).or_default().insert(key);
+        }
+        self.horizon.entry(meta.horizon).or_default().insert(key);
+        self.metas.insert(key, meta);
+    }
+
+    /// Drop a key from the index (datum deleted).
+    pub fn remove_key(&mut self, key: DatumId) {
+        let Some(meta) = self.metas.remove(&key) else {
+            return;
+        };
+        for &f in &meta.anterior_floors {
+            if let Some(s) = self.addition.get_mut(&f) {
+                s.remove(&key);
+                if s.is_empty() {
+                    self.addition.remove(&f);
+                }
+            }
+        }
+        for &f in &meta.remove_numbers {
+            if let Some(s) = self.removal.get_mut(&f) {
+                s.remove(&key);
+                if s.is_empty() {
+                    self.removal.remove(&f);
+                }
+            }
+        }
+        if let Some(s) = self.horizon.get_mut(&meta.horizon) {
+            s.remove(&key);
+            if s.is_empty() {
+                self.horizon.remove(&meta.horizon);
+            }
+        }
+    }
+
+    /// Keys whose placement may change when a node is **added** at
+    /// `segs` — the §2.D ADDITION NUMBER trigger (plus the horizon
+    /// refresh set). Everything *not* returned provably keeps its
+    /// placement (tested in `cluster/mod.rs` and `tests/properties.rs`).
+    pub fn affected_by_addition(&self, segs: &[SegId]) -> HashSet<DatumId> {
+        let mut out = HashSet::new();
+        let mut max_seg = 0;
+        for &s in segs {
+            if let Some(keys) = self.addition.get(&s) {
+                out.extend(keys.iter().copied());
+            }
+            max_seg = max_seg.max(s);
+        }
+        // Horizon refresh: data whose recorded anterior set does not
+        // extend to the new segment number.
+        for (_, keys) in self.horizon.range(..=max_seg) {
+            out.extend(keys.iter().copied());
+        }
+        out
+    }
+
+    /// Keys that must move (or re-replicate) when the owner of `segs`
+    /// is **removed** — the REMOVE NUMBERS trigger.
+    pub fn affected_by_removal(&self, segs: &[SegId]) -> HashSet<DatumId> {
+        let mut out = HashSet::new();
+        for &s in segs {
+            if let Some(keys) = self.removal.get(&s) {
+                out.extend(keys.iter().copied());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Membership, Placer};
+
+    fn cluster(n: u32) -> AsuraPlacer {
+        let mut p = AsuraPlacer::new();
+        for i in 0..n {
+            p.add_node(i, 1.0);
+        }
+        p
+    }
+
+    #[test]
+    fn index_tracks_inserts_and_removals() {
+        let p = cluster(6);
+        let mut idx = MetaIndex::new(1);
+        for k in 0..100u64 {
+            idx.insert(&p, k);
+        }
+        assert_eq!(idx.len(), 100);
+        idx.remove_key(50);
+        assert_eq!(idx.len(), 99);
+        assert!(idx.meta(50).is_none());
+        // Re-insert is idempotent.
+        idx.insert(&p, 51);
+        assert_eq!(idx.len(), 99);
+    }
+
+    #[test]
+    fn addition_trigger_is_sound() {
+        // Every key whose placement changes must be in the affected set.
+        let mut p = cluster(8);
+        let mut idx = MetaIndex::new(1);
+        let keys: Vec<u64> = (0..4000).collect();
+        for &k in &keys {
+            idx.insert(&p, k);
+        }
+        let before: Vec<_> = keys.iter().map(|&k| p.place(k)).collect();
+        p.add_node(99, 1.0);
+        let new_segs = p.table().segments_of(99).to_vec();
+        let affected = idx.affected_by_addition(&new_segs);
+        for (i, &k) in keys.iter().enumerate() {
+            if p.place(k) != before[i] {
+                assert!(affected.contains(&k), "mover {k} missed by index");
+            }
+        }
+        // And the acceleration is real: affected ≪ total.
+        assert!(
+            affected.len() < keys.len() / 2,
+            "index flagged {} of {}",
+            affected.len(),
+            keys.len()
+        );
+    }
+
+    #[test]
+    fn removal_trigger_is_sound() {
+        let mut p = cluster(8);
+        let mut idx = MetaIndex::new(2);
+        let keys: Vec<u64> = (0..3000).collect();
+        for &k in &keys {
+            idx.insert(&p, k);
+        }
+        let mut v = Vec::new();
+        let before: Vec<Vec<_>> = keys
+            .iter()
+            .map(|&k| {
+                p.place_replicas(k, 2, &mut v);
+                v.clone()
+            })
+            .collect();
+        let victim_segs = p.table().segments_of(3).to_vec();
+        p.remove_node(3);
+        let affected = idx.affected_by_removal(&victim_segs);
+        for (i, &k) in keys.iter().enumerate() {
+            p.place_replicas(k, 2, &mut v);
+            if v != before[i] {
+                assert!(affected.contains(&k), "mover {k} missed by index");
+            }
+        }
+        assert!(affected.len() < keys.len());
+    }
+
+    #[test]
+    fn memory_accounting_scales_with_keys() {
+        let p = cluster(4);
+        let mut idx = MetaIndex::new(3);
+        for k in 0..10u64 {
+            idx.insert(&p, k);
+        }
+        assert_eq!(idx.memory_bytes_paper(), 10 * (3 + 1) * 4);
+        assert!(idx.memory_bytes_actual() >= idx.memory_bytes_paper());
+    }
+}

@@ -1,0 +1,59 @@
+//! Operational metrics: cheap atomic counters + formatted snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Coordinator metrics snapshot.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub sets: Counter,
+    pub gets: Counter,
+    pub rebalances: Counter,
+    pub keys_moved: Counter,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "sets={} gets={} rebalances={} keys_moved={}",
+            self.sets.get(),
+            self.gets.get(),
+            self.rebalances.get(),
+            self.keys_moved.get()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_count() {
+        let m = Metrics::new();
+        m.sets.inc();
+        m.sets.add(4);
+        assert_eq!(m.sets.get(), 5);
+        assert!(m.render().contains("sets=5"));
+    }
+}

@@ -1,0 +1,332 @@
+//! L3 coordinator: the "temporary central node" of paper §2.D.
+//!
+//! Owns the networked cluster's control plane: membership epochs, the
+//! shared node↔segment table, rebalance orchestration (migrating data
+//! between node servers over the wire), and operational metrics. The
+//! data plane (per-op routing) lives in [`crate::net::router`]; the
+//! coordinator hands epoched placer snapshots to routers.
+//!
+//! The paper notes that any node can take the coordination role and the
+//! correspondence table is tiny (Table II: 8N bytes), so coordination is
+//! not a SPOF; here the role is a plain struct the leader process holds.
+
+pub mod metrics;
+
+use crate::algo::asura::AsuraPlacer;
+use crate::algo::{DatumId, Membership, NodeId, Placer};
+use crate::cluster::rebalance::MetaIndex;
+use crate::cluster::MigrationReport;
+use crate::net::client::Conn;
+use crate::net::server::NodeServer;
+use metrics::Metrics;
+use std::collections::HashMap;
+use std::net::SocketAddr;
+
+/// A storage node under coordination: server handle + control conn.
+struct Member {
+    addr: SocketAddr,
+    conn: Conn,
+    /// In-process server handle (when the coordinator spawned it).
+    server: Option<NodeServer>,
+}
+
+/// The coordinator process state.
+pub struct Coordinator {
+    placer: AsuraPlacer,
+    members: HashMap<NodeId, Member>,
+    index: MetaIndex,
+    epoch: u64,
+    replicas: usize,
+    pub metrics: Metrics,
+    /// Keys under management (coordinator-side registry used only to
+    /// drive migrations; the authoritative data lives on the nodes).
+    keys: Vec<DatumId>,
+}
+
+impl Coordinator {
+    pub fn new(replicas: usize) -> Self {
+        Self {
+            placer: AsuraPlacer::new(),
+            members: HashMap::new(),
+            index: MetaIndex::new(replicas),
+            epoch: 0,
+            replicas: replicas.max(1),
+            metrics: Metrics::new(),
+            keys: Vec::new(),
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn placer(&self) -> &AsuraPlacer {
+        &self.placer
+    }
+
+    pub fn node_addrs(&self) -> Vec<(NodeId, SocketAddr)> {
+        let mut v: Vec<(NodeId, SocketAddr)> =
+            self.members.iter().map(|(&n, m)| (n, m.addr)).collect();
+        v.sort_unstable_by_key(|&(n, _)| n);
+        v
+    }
+
+    pub fn key_count(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Spawn an in-process node server and join it to the cluster.
+    pub fn spawn_node(&mut self, id: NodeId, capacity: f64) -> anyhow::Result<MigrationReport> {
+        let server = NodeServer::spawn()?;
+        let addr = server.addr();
+        self.join_node(id, capacity, addr, Some(server))
+    }
+
+    /// Join an externally started node server.
+    pub fn join_external(
+        &mut self,
+        id: NodeId,
+        capacity: f64,
+        addr: SocketAddr,
+    ) -> anyhow::Result<MigrationReport> {
+        self.join_node(id, capacity, addr, None)
+    }
+
+    fn join_node(
+        &mut self,
+        id: NodeId,
+        capacity: f64,
+        addr: SocketAddr,
+        server: Option<NodeServer>,
+    ) -> anyhow::Result<MigrationReport> {
+        anyhow::ensure!(!self.members.contains_key(&id), "node {id} already joined");
+        let conn = Conn::connect(addr)?;
+        // Predict the new node's segments for the accelerated plan.
+        let mut probe = self.placer.clone();
+        probe.add_node(id, capacity);
+        let new_segs = probe.table().segments_of(id).to_vec();
+        let candidates = self.index.affected_by_addition(&new_segs);
+
+        let old_sets = self.snapshot_sets(candidates.iter().copied());
+        self.placer.add_node(id, capacity);
+        self.members.insert(id, Member { addr, conn, server });
+        self.epoch += 1;
+        let report = self.migrate(candidates.into_iter().collect(), old_sets)?;
+        self.metrics.rebalances.inc();
+        self.metrics.keys_moved.add(report.moved as u64);
+        Ok(report)
+    }
+
+    /// Decommission a node: migrate its data away, drop it from the
+    /// table, shut its server down (when owned).
+    pub fn decommission(&mut self, id: NodeId) -> anyhow::Result<MigrationReport> {
+        anyhow::ensure!(self.members.contains_key(&id), "node {id} not joined");
+        let victim_segs = self.placer.table().segments_of(id).to_vec();
+        let candidates: Vec<DatumId> = self
+            .index
+            .affected_by_removal(&victim_segs)
+            .into_iter()
+            .collect();
+        let old_sets = self.snapshot_sets(candidates.iter().copied());
+        self.placer.remove_node(id);
+        self.epoch += 1;
+        let report = self.migrate(candidates, old_sets)?;
+        if let Some(mut member) = self.members.remove(&id) {
+            if let Some(ref mut s) = member.server {
+                s.shutdown();
+            }
+        }
+        self.metrics.rebalances.inc();
+        self.metrics.keys_moved.add(report.moved as u64);
+        Ok(report)
+    }
+
+    fn effective_replicas(&self) -> usize {
+        self.replicas.min(self.placer.node_count())
+    }
+
+    fn replica_set(&self, key: DatumId) -> Vec<NodeId> {
+        let mut out = Vec::with_capacity(self.replicas);
+        self.placer
+            .place_replicas(key, self.effective_replicas(), &mut out);
+        out
+    }
+
+    fn snapshot_sets(
+        &self,
+        keys: impl Iterator<Item = DatumId>,
+    ) -> HashMap<DatumId, Vec<NodeId>> {
+        keys.map(|k| (k, self.replica_set(k))).collect()
+    }
+
+    /// Execute a migration plan over the wire.
+    fn migrate(
+        &mut self,
+        candidates: Vec<DatumId>,
+        old_sets: HashMap<DatumId, Vec<NodeId>>,
+    ) -> anyhow::Result<MigrationReport> {
+        let mut report = MigrationReport {
+            checked: candidates.len(),
+            total_keys: self.keys.len(),
+            ..Default::default()
+        };
+        for key in candidates {
+            let new_set = self.replica_set(key);
+            let old_set = &old_sets[&key];
+            if *old_set == new_set {
+                self.index.insert(&self.placer, key);
+                continue;
+            }
+            report.moved += 1;
+            // Fetch from a surviving holder.
+            let mut value = None;
+            for n in old_set {
+                if let Some(m) = self.members.get_mut(n) {
+                    if let Some(v) = m.conn.get(key)? {
+                        value = Some(v);
+                        break;
+                    }
+                }
+            }
+            let value =
+                value.ok_or_else(|| anyhow::anyhow!("datum {key} lost during migration"))?;
+            report.bytes_moved += value.len() as u64 * (new_set.len() as u64);
+            for n in old_set {
+                if !new_set.contains(n) {
+                    if let Some(m) = self.members.get_mut(n) {
+                        m.conn.del(key)?;
+                    }
+                }
+            }
+            for n in &new_set {
+                if !old_set.contains(n) {
+                    let m = self
+                        .members
+                        .get_mut(n)
+                        .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
+                    m.conn.set(key, value.clone())?;
+                }
+            }
+            self.index.insert(&self.placer, key);
+        }
+        Ok(report)
+    }
+
+    /// Data-plane write through the coordinator's own connections.
+    /// (High-throughput clients use their own [`crate::net::Router`];
+    /// this path also maintains the §2.D metadata index.)
+    pub fn set(&mut self, key: DatumId, value: &[u8]) -> anyhow::Result<()> {
+        let targets = self.replica_set(key);
+        for n in &targets {
+            let m = self
+                .members
+                .get_mut(n)
+                .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
+            m.conn.set(key, value.to_vec())?;
+        }
+        self.index.insert(&self.placer, key);
+        self.keys.push(key);
+        self.metrics.sets.inc();
+        Ok(())
+    }
+
+    pub fn get(&mut self, key: DatumId) -> anyhow::Result<Option<Vec<u8>>> {
+        self.metrics.gets.inc();
+        for n in self.replica_set(key) {
+            let m = self
+                .members
+                .get_mut(&n)
+                .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
+            if let Some(v) = m.conn.get(key)? {
+                return Ok(Some(v));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Per-node key counts straight from the nodes (ground truth for the
+    /// uniformity experiments).
+    pub fn node_key_counts(&mut self) -> anyhow::Result<Vec<(NodeId, u64)>> {
+        let mut out = Vec::with_capacity(self.members.len());
+        let mut ids: Vec<NodeId> = self.members.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let (keys, _, _, _) = self.members.get_mut(&id).unwrap().conn.stats()?;
+            out.push((id, keys));
+        }
+        Ok(out)
+    }
+
+    /// Verify every registered key is readable (post-rebalance check).
+    pub fn verify_all_readable(&mut self) -> anyhow::Result<usize> {
+        let keys = self.keys.clone();
+        let mut ok = 0;
+        for key in keys {
+            if self.get(key)?.is_some() {
+                ok += 1;
+            } else {
+                anyhow::bail!("key {key} unreadable");
+            }
+        }
+        Ok(ok)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coordinator_lifecycle_with_migration() {
+        let mut coord = Coordinator::new(1);
+        for i in 0..4 {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        assert_eq!(coord.epoch(), 4);
+        for k in 0..300u64 {
+            coord.set(k, &k.to_le_bytes()).unwrap();
+        }
+        // Join a fifth node: data migrates to it over the wire.
+        let report = coord.spawn_node(4, 1.0).unwrap();
+        assert!(report.moved > 20, "moved {}", report.moved);
+        assert!(report.checked < 300, "accelerated plan checked {}", report.checked);
+        assert_eq!(coord.verify_all_readable().unwrap(), 300);
+        let counts = coord.node_key_counts().unwrap();
+        let on_new = counts.iter().find(|&&(n, _)| n == 4).unwrap().1;
+        assert_eq!(on_new as usize, report.moved);
+
+        // Decommission node 2: everything stays readable.
+        let report = coord.decommission(2).unwrap();
+        assert!(report.moved > 0);
+        assert_eq!(coord.verify_all_readable().unwrap(), 300);
+        let counts = coord.node_key_counts().unwrap();
+        assert!(counts.iter().all(|&(n, _)| n != 2));
+        let total: u64 = counts.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 300);
+    }
+
+    #[test]
+    fn replicated_coordinator_survives_decommission() {
+        let mut coord = Coordinator::new(2);
+        for i in 0..5 {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        for k in 0..200u64 {
+            coord.set(k, b"payload").unwrap();
+        }
+        coord.decommission(1).unwrap();
+        assert_eq!(coord.verify_all_readable().unwrap(), 200);
+        // Every key still has 2 replicas.
+        let counts = coord.node_key_counts().unwrap();
+        let total: u64 = counts.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn rejects_duplicate_join_and_unknown_decommission() {
+        let mut coord = Coordinator::new(1);
+        coord.spawn_node(0, 1.0).unwrap();
+        assert!(coord.spawn_node(0, 1.0).is_err());
+        assert!(coord.decommission(9).is_err());
+    }
+}

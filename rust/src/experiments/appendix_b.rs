@@ -1,0 +1,127 @@
+//! Appendix B — O(1) distribution-stage cost: the expected number of
+//! primitive draws per placement approaches a constant as the line grows,
+//! governed only by the hole ratio h/n.
+//!
+//! We sweep the line length m and the hole ratio, measure the empirical
+//! mean draw count, and print it next to the paper's closed form
+//! (Eq. 5): `(S·α^x / (n−h)) · (α/(α−1) − 1/(α^x(α−1)))` with S=16, α=2.
+//!
+//! Output rows: `m,hole_ratio,mean_draws,expected_draws,max_draws`.
+
+use crate::algo::asura::rng::top_level_for;
+use crate::algo::asura::AsuraPlacer;
+use crate::algo::Membership;
+use crate::prng::SplitMix64;
+use crate::util::csv::CsvWriter;
+
+pub struct AppendixBConfig {
+    pub line_lengths: Vec<u32>,
+    pub hole_ratios: Vec<f64>,
+    pub samples: u64,
+}
+
+impl Default for AppendixBConfig {
+    fn default() -> Self {
+        Self {
+            line_lengths: vec![10, 100, 1_000, 10_000, 100_000, 1_000_000],
+            hole_ratios: vec![0.0, 0.1, 0.3],
+            samples: 200_000,
+        }
+    }
+}
+
+/// Paper Eq. (5) with S=16, α=2, per-segment coverage `1−h/n`.
+pub fn expected_draws(m: u32, hole_ratio: f64) -> f64 {
+    let s = 16.0f64;
+    let alpha = 2.0f64;
+    let x = top_level_for(m) as f64;
+    let range = s * alpha.powf(x);
+    let covered = m as f64 * (1.0 - hole_ratio);
+    (range / covered) * (alpha / (alpha - 1.0) - 1.0 / (alpha.powf(x) * (alpha - 1.0)))
+}
+
+/// Build a cluster of `m` nodes whose segments each have length
+/// `1 − hole_ratio` (uniformly distributed holes).
+fn cluster_with_holes(m: u32, hole_ratio: f64) -> AsuraPlacer {
+    let mut p = AsuraPlacer::new();
+    let len = (1.0 - hole_ratio).max(1e-6);
+    for i in 0..m {
+        p.add_node(i, len);
+    }
+    p
+}
+
+pub fn run(cfg: &AppendixBConfig, out_path: Option<&str>) -> std::io::Result<()> {
+    let mut out = CsvWriter::create(out_path)?;
+    out.row(&["m", "hole_ratio", "mean_draws", "expected_draws", "max_draws"])?;
+    for &h in &cfg.hole_ratios {
+        for &m in &cfg.line_lengths {
+            let placer = cluster_with_holes(m, h);
+            let mut rng = SplitMix64::new(0xAB_0001);
+            let mut total = 0u64;
+            let mut max = 0u32;
+            for _ in 0..cfg.samples {
+                let id32 = crate::prng::fold64(rng.next_u64());
+                let (_, draws) = placer.place_seg32_counted(id32);
+                total += draws as u64;
+                max = max.max(draws);
+            }
+            let mean = total as f64 / cfg.samples as f64;
+            out.row(&[
+                &m.to_string(),
+                &format!("{h:.2}"),
+                &format!("{mean:.4}"),
+                &format!("{:.4}", expected_draws(m, h)),
+                &max.to_string(),
+            ])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empirical_mean_matches_closed_form() {
+        for (m, h) in [(100u32, 0.0), (1000, 0.3), (64, 0.1)] {
+            let placer = cluster_with_holes(m, h);
+            let mut rng = SplitMix64::new(1);
+            let samples = 30_000u64;
+            let mut total = 0u64;
+            for _ in 0..samples {
+                let id32 = crate::prng::fold64(rng.next_u64());
+                total += placer.place_seg32_counted(id32).1 as u64;
+            }
+            let mean = total as f64 / samples as f64;
+            let expect = expected_draws(m, h);
+            assert!(
+                (mean - expect).abs() / expect < 0.08,
+                "m={m} h={h}: mean {mean:.3} vs expected {expect:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn draw_count_independent_of_scale() {
+        // The O(1) claim: mean draws at m=100 vs m=100_000 at equal
+        // hole ratio stays within the same doubling-position band [2, 4].
+        for m in [100u32, 10_000, 100_000] {
+            let e = expected_draws(m, 0.0);
+            assert!((1.9..4.2).contains(&e), "m={m}: {e}");
+        }
+    }
+
+    #[test]
+    fn csv_runs() {
+        let path = std::env::temp_dir().join("asura_appb_test.csv");
+        let cfg = AppendixBConfig {
+            line_lengths: vec![10, 100],
+            hole_ratios: vec![0.0],
+            samples: 5_000,
+        };
+        run(&cfg, Some(path.to_str().unwrap())).unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().lines().count() == 3);
+    }
+}

@@ -1,0 +1,172 @@
+//! Fig. 5 — distribution-stage calculation time vs number of nodes.
+//!
+//! Paper series: Consistent Hashing with VN ∈ {1, 100, 10000} (sub-µs,
+//! logarithmic growth), Straw Buckets (0.82 µs × N, linear — off the
+//! chart past a handful of nodes), ASURA (~0.6 µs flat). Plus the
+//! headline scalability point: ASURA at 10^8 nodes, 0.73 µs.
+//!
+//! Output rows: `n,algo,mean_ns,median_ns,stddev_ns,init_ms`.
+
+use crate::algo::asura::AsuraPlacer;
+use crate::algo::chash::ConsistentHash;
+use crate::algo::straw::StrawBuckets;
+use crate::algo::{Membership, Placer};
+use crate::bench::{bb, Bench};
+use crate::util::csv::CsvWriter;
+use std::time::Instant;
+
+pub struct Fig5Config {
+    /// Node counts to sweep (paper: 1..1200).
+    pub node_counts: Vec<usize>,
+    /// Straw is O(N); skip it past this point (the paper likewise stops
+    /// plotting it once it leaves the chart area).
+    pub straw_cap: usize,
+    /// Virtual-node counts for Consistent Hashing.
+    pub vnode_counts: Vec<usize>,
+    /// Extra ASURA scalability points (node counts).
+    pub asura_scale: Vec<usize>,
+    pub bench: Bench,
+}
+
+impl Default for Fig5Config {
+    fn default() -> Self {
+        Self {
+            node_counts: vec![1, 2, 5, 10, 20, 50, 100, 200, 400, 800, 1200],
+            straw_cap: 1200,
+            vnode_counts: vec![1, 100, 10_000],
+            asura_scale: vec![1_000_000, 10_000_000],
+            bench: Bench::default(),
+        }
+    }
+}
+
+impl Fig5Config {
+    pub fn quick() -> Self {
+        Self {
+            node_counts: vec![1, 10, 100, 400],
+            straw_cap: 100,
+            vnode_counts: vec![1, 100],
+            asura_scale: vec![100_000],
+            bench: Bench::quick(),
+        }
+    }
+
+    /// The paper's 10^8-node headline point (≈1.6 GB of table).
+    pub fn huge(mut self) -> Self {
+        self.asura_scale.push(100_000_000);
+        self
+    }
+}
+
+fn bench_placer<P: Placer>(
+    cfg: &Fig5Config,
+    out: &mut CsvWriter,
+    n: usize,
+    placer: &P,
+    init_ms: f64,
+    ids: &[u64],
+) -> std::io::Result<()> {
+    let m = cfg.bench.run_with_inputs(
+        &format!("{}/n{}", placer.name(), n),
+        ids,
+        |id| {
+            bb(placer.place(bb(id)));
+        },
+    );
+    out.row(&[
+        &n.to_string(),
+        placer.name(),
+        &format!("{:.1}", m.mean_ns),
+        &format!("{:.1}", m.median_ns),
+        &format!("{:.1}", m.stddev_ns),
+        &format!("{init_ms:.2}"),
+    ])
+}
+
+pub fn run(cfg: &Fig5Config, out_path: Option<&str>) -> std::io::Result<()> {
+    let mut out = CsvWriter::create(out_path)?;
+    out.row(&["n", "algo", "mean_ns", "median_ns", "stddev_ns", "init_ms"])?;
+    let ids = super::id_batch(4096, 0xF16_5);
+
+    for &n in &cfg.node_counts {
+        // Consistent Hashing at each virtual-node count.
+        for &vn in &cfg.vnode_counts {
+            let t0 = Instant::now();
+            let nodes: Vec<(u32, f64)> = (0..n as u32).map(|i| (i, 1.0)).collect();
+            let ch = ConsistentHash::with_nodes(vn, &nodes);
+            let init_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let m = cfg
+                .bench
+                .run_with_inputs(&format!("chash_vn{vn}/n{n}"), &ids, |id| {
+                    bb(ch.place(bb(id)));
+                });
+            out.row(&[
+                &n.to_string(),
+                &format!("chash_vn{vn}"),
+                &format!("{:.1}", m.mean_ns),
+                &format!("{:.1}", m.median_ns),
+                &format!("{:.1}", m.stddev_ns),
+                &format!("{init_ms:.2}"),
+            ])?;
+        }
+
+        // Straw (linear — capped like the paper's chart area).
+        if n <= cfg.straw_cap {
+            let t0 = Instant::now();
+            let mut straw = StrawBuckets::new();
+            for i in 0..n as u32 {
+                straw.add_node(i, 1.0);
+            }
+            let init_ms = t0.elapsed().as_secs_f64() * 1e3;
+            bench_placer(cfg, &mut out, n, &straw, init_ms, &ids)?;
+        }
+
+        // ASURA.
+        let t0 = Instant::now();
+        let mut asura = AsuraPlacer::new();
+        for i in 0..n as u32 {
+            asura.add_node(i, 1.0);
+        }
+        let init_ms = t0.elapsed().as_secs_f64() * 1e3;
+        bench_placer(cfg, &mut out, n, &asura, init_ms, &ids)?;
+    }
+
+    // ASURA scalability points (the 10^8-node claim).
+    for &n in &cfg.asura_scale {
+        let t0 = Instant::now();
+        let mut asura = AsuraPlacer::new();
+        for i in 0..n as u32 {
+            asura.add_node(i, 1.0);
+        }
+        let init_ms = t0.elapsed().as_secs_f64() * 1e3;
+        bench_placer(cfg, &mut out, n, &asura, init_ms, &ids)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_writes_csv() {
+        let dir = std::env::temp_dir().join("asura_fig5_test.csv");
+        let cfg = Fig5Config {
+            node_counts: vec![1, 10],
+            straw_cap: 10,
+            vnode_counts: vec![1],
+            asura_scale: vec![],
+            bench: Bench {
+                sample_time: std::time::Duration::from_millis(2),
+                samples: 3,
+                warmup: std::time::Duration::from_millis(2),
+            },
+        };
+        run(&cfg, Some(dir.to_str().unwrap())).unwrap();
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert!(text.lines().count() >= 7); // header + 2n × (ch + straw + asura)
+        assert!(text.contains("asura"));
+        assert!(text.contains("chash_vn1"));
+        assert!(text.contains("straw"));
+    }
+}

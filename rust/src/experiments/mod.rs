@@ -1,0 +1,102 @@
+//! Evaluation harness: one module per table/figure of the paper
+//! (DESIGN.md carries the experiment index).
+//!
+//! Every experiment emits CSV (stdout or `--out`) whose rows mirror the
+//! series the paper plots, so the figures can be regenerated directly.
+//! Absolute timings rescale with hardware; the *shape* (who wins, growth
+//! orders, crossovers) is the reproduction target — see EXPERIMENTS.md.
+
+pub mod actual_usage;
+pub mod appendix_b;
+pub mod fig5;
+pub mod flexible;
+pub mod memory;
+pub mod movement;
+pub mod spoca_ablation;
+pub mod uniformity;
+
+use crate::algo::{NodeId, Placer};
+use crate::prng::SplitMix64;
+
+/// Count placements per node over `total` uniform random ids, in
+/// parallel across available cores. Returns counts in `placer.nodes()`
+/// order.
+pub fn parallel_counts<P: Placer + Sync + ?Sized>(
+    placer: &P,
+    total: u64,
+    seed: u64,
+) -> Vec<(NodeId, u64)> {
+    let nodes = placer.nodes();
+    let max_node = nodes.iter().copied().max().unwrap_or(0) as usize;
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 16) as u64;
+    let per = total / threads;
+    let extra = total % threads;
+
+    let partials: Vec<Vec<u64>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let n = per + if t < extra { 1 } else { 0 };
+            let h = s.spawn(move || {
+                let mut rng = SplitMix64::new(seed ^ (t.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+                let mut counts = vec![0u64; max_node + 1];
+                for _ in 0..n {
+                    counts[placer.place(rng.next_u64()) as usize] += 1;
+                }
+                counts
+            });
+            handles.push(h);
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut dense = vec![0u64; max_node + 1];
+    for p in partials {
+        for (i, c) in p.into_iter().enumerate() {
+            dense[i] += c;
+        }
+    }
+    nodes.into_iter().map(|n| (n, dense[n as usize])).collect()
+}
+
+/// Pre-generate a deterministic id batch.
+pub fn id_batch(n: usize, seed: u64) -> Vec<u64> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::asura::AsuraPlacer;
+    use crate::algo::Membership;
+
+    #[test]
+    fn parallel_counts_sum_to_total() {
+        let mut p = AsuraPlacer::new();
+        for i in 0..7 {
+            p.add_node(i, 1.0);
+        }
+        let counts = parallel_counts(&p, 10_000, 42);
+        let total: u64 = counts.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, 10_000);
+        assert_eq!(counts.len(), 7);
+    }
+
+    #[test]
+    fn parallel_counts_deterministic_per_seed() {
+        let mut p = AsuraPlacer::new();
+        for i in 0..5 {
+            p.add_node(i, 1.0);
+        }
+        assert_eq!(parallel_counts(&p, 5000, 7), parallel_counts(&p, 5000, 7));
+    }
+
+    #[test]
+    fn id_batch_deterministic() {
+        assert_eq!(id_batch(10, 3), id_batch(10, 3));
+        assert_ne!(id_batch(10, 3), id_batch(10, 4));
+    }
+}

@@ -1,0 +1,95 @@
+//! Q24 fixed-point fractions on the ASURA number line.
+//!
+//! The paper places segments on a real number line with lengths in
+//! `(0, 1]`. We quantize lengths to 24 fractional bits so that every
+//! segment-hit test is an exact u32 integer comparison — identical in
+//! Rust, in the Pallas kernel and in the jnp oracle (DESIGN.md
+//! §Substitutions). 2^-24 granularity is far finer than any realistic
+//! capacity quantum.
+
+/// Number of fractional bits.
+pub const FRAC_BITS: u32 = 24;
+/// Fixed-point representation of 1.0 (a full segment).
+pub const ONE_Q24: u32 = 1 << FRAC_BITS;
+
+/// A Q24 fraction in `[0, 1]` (segment length or draw fraction).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug, Hash)]
+pub struct Q24(pub u32);
+
+impl Q24 {
+    pub const ZERO: Q24 = Q24(0);
+    pub const ONE: Q24 = Q24(ONE_Q24);
+
+    /// Quantize an `f64` in `[0, 1]` to Q24 (round to nearest).
+    ///
+    /// Values are clamped; a strictly positive input never quantizes to
+    /// zero (a node with any capacity keeps a nonzero segment).
+    pub fn from_f64(x: f64) -> Q24 {
+        let c = x.clamp(0.0, 1.0);
+        let q = (c * ONE_Q24 as f64).round() as u32;
+        if c > 0.0 && q == 0 {
+            Q24(1)
+        } else {
+            Q24(q.min(ONE_Q24))
+        }
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.0 as f64 / ONE_Q24 as f64
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Saturating add within `[0, 1]`.
+    pub fn saturating_add(self, other: Q24) -> Q24 {
+        Q24((self.0 + other.0).min(ONE_Q24))
+    }
+}
+
+/// Fraction of a draw: the top 24 bits of the `lo` half of a pair draw.
+#[inline(always)]
+pub fn frac_from_lo(lo: u32) -> u32 {
+    lo >> 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_dyadics() {
+        for x in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            assert_eq!(Q24::from_f64(x).to_f64(), x);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        assert_eq!(Q24::from_f64(-3.0), Q24::ZERO);
+        assert_eq!(Q24::from_f64(7.5), Q24::ONE);
+    }
+
+    #[test]
+    fn positive_never_quantizes_to_zero() {
+        assert_eq!(Q24::from_f64(1e-12), Q24(1));
+    }
+
+    #[test]
+    fn frac_takes_top_24_bits() {
+        assert_eq!(frac_from_lo(0xFFFF_FFFF), (1 << 24) - 1);
+        assert_eq!(frac_from_lo(0x0000_00FF), 0);
+        assert_eq!(frac_from_lo(0x8000_0000), 1 << 23);
+    }
+
+    #[test]
+    fn ordering_matches_reals() {
+        assert!(Q24::from_f64(0.3) < Q24::from_f64(0.31));
+    }
+
+    #[test]
+    fn saturating_add_caps_at_one() {
+        assert_eq!(Q24::from_f64(0.75).saturating_add(Q24::from_f64(0.75)), Q24::ONE);
+    }
+}

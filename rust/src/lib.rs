@@ -1,0 +1,29 @@
+//! # ASURA — Scalable and Uniform Data Distribution for Storage Clusters
+//!
+//! A full reproduction of Ishikawa's ASURA paper (2013) as a three-layer
+//! system:
+//!
+//! - **L3 (this crate)**: the storage-cluster coordinator — placement
+//!   algorithms ([`algo`]), the cluster substrate ([`cluster`]), a
+//!   memcached-like KV network layer ([`net`]), the coordinator
+//!   ([`coordinator`]), and the paper's complete evaluation harness
+//!   ([`experiments`]).
+//! - **L2/L1 (build-time python, `python/compile/`)**: JAX batch-placement
+//!   graphs with Pallas kernels, AOT-lowered to HLO text and executed from
+//!   Rust via PJRT ([`runtime`]). Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod algo;
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod experiments;
+pub mod fixed;
+pub mod net;
+pub mod prng;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,315 @@
+//! `asura` — leader entrypoint + CLI.
+//!
+//! ```text
+//! asura experiment <name> [flags]   regenerate a paper table/figure
+//!     fig5        [--quick|--huge] [--out csv]
+//!     uniformity  --nodes N [--full] [--out csv]
+//!     table2      [--nodes N --vnodes V] [--out csv]
+//!     table3      [--full] [--nodes N --writes W --runs R] [--out csv]
+//!     appendixb   [--samples S] [--out csv]
+//!     movement    [--nodes N --keys K] [--out csv]
+//!     flexible    [--nodes N --keys K] [--out csv]
+//!     spoca       [--nodes N] [--out csv]           SPOCA trade-off ablation
+//! asura serve   --nodes N [--replicas R --keys K]   demo cluster lifecycle
+//!               --config cluster.json               (weighted membership)
+//!               --join 0=host:port,1=host:port      (external node daemons)
+//! asura node    --port P                            standalone storage node
+//! asura place   --id X --nodes N [--algo asura|chash|straw]
+//! asura info    [--artifacts DIR]                   PJRT + artifact info
+//! ```
+
+use asura::algo::asura::AsuraPlacer;
+use asura::algo::chash::ConsistentHash;
+use asura::algo::straw::StrawBuckets;
+use asura::algo::{Membership, Placer};
+use asura::bench::Bench;
+use asura::coordinator::Coordinator;
+use asura::experiments as exp;
+use asura::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "experiment" => run_experiment(&args),
+        "serve" => run_serve(&args),
+        "node" => run_node(&args),
+        "place" => run_place(&args),
+        "info" => run_info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!("asura — reproduction of 'ASURA: Scalable and Uniform Data Distribution");
+    println!("Algorithm for Storage Clusters' (Ishikawa, 2013).\n");
+    println!("usage: asura <experiment|serve|place|info> [flags]   (see rust/src/main.rs docs)");
+}
+
+fn run_experiment(args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("experiment name required"))?;
+    let out = args.get("out");
+    match name {
+        "fig5" => {
+            let mut cfg = if args.has("quick") {
+                exp::fig5::Fig5Config::quick()
+            } else {
+                exp::fig5::Fig5Config::default()
+            };
+            if args.has("huge") {
+                cfg = cfg.huge();
+            }
+            exp::fig5::run(&cfg, out)?;
+        }
+        "uniformity" => {
+            let nodes = args.get_u64("nodes", 100) as usize;
+            let cfg = exp::uniformity::UniformityConfig::for_nodes(nodes, args.has("full"));
+            exp::uniformity::run(&cfg, out)?;
+        }
+        "table2" => {
+            let cfg = exp::memory::MemoryConfig {
+                nodes: args.get_u64("nodes", 10_000) as usize,
+                vnodes: args.get_u64("vnodes", 100) as usize,
+                table_entries: args.get_u64("entries", 1_000_000),
+            };
+            exp::memory::run(&cfg, out)?;
+        }
+        "table3" => {
+            let mut cfg = if args.has("full") {
+                exp::actual_usage::ActualUsageConfig::full()
+            } else {
+                exp::actual_usage::ActualUsageConfig::default()
+            };
+            cfg.nodes = args.get_u64("nodes", cfg.nodes as u64) as usize;
+            cfg.writes = args.get_u64("writes", cfg.writes);
+            cfg.runs = args.get_u64("runs", cfg.runs as u64) as u32;
+            exp::actual_usage::run(&cfg, out)?;
+        }
+        "appendixb" => {
+            let mut cfg = exp::appendix_b::AppendixBConfig::default();
+            cfg.samples = args.get_u64("samples", cfg.samples);
+            exp::appendix_b::run(&cfg, out)?;
+        }
+        "movement" => {
+            let cfg = exp::movement::MovementConfig {
+                nodes: args.get_u64("nodes", 10) as u32,
+                keys: args.get_u64("keys", 100_000),
+                vnodes: args.get_u64("vnodes", 100) as usize,
+            };
+            exp::movement::run(&cfg, out)?;
+        }
+        "spoca" => {
+            let cfg = exp::spoca_ablation::SpocaConfig {
+                nodes: args.get_u64("nodes", 16) as u32,
+                log2_lines: vec![4, 6, 8, 10, 12, 14],
+                samples: args.get_u64("samples", 20_000) as u32,
+            };
+            exp::spoca_ablation::run(&cfg, out)?;
+        }
+        "flexible" => {
+            let cfg = exp::flexible::FlexibleConfig {
+                nodes: args.get_u64("nodes", 40) as u32,
+                keys: args.get_u64("keys", 2_000_000),
+                vnodes: args.get_u64("vnodes", 100) as usize,
+            };
+            exp::flexible::run(&cfg, out)?;
+        }
+        other => anyhow::bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+/// Standalone storage-node daemon: `asura node --port 7001`. A leader
+/// elsewhere joins it with `asura serve --join 0=127.0.0.1:7001,...`.
+fn run_node(args: &Args) -> anyhow::Result<()> {
+    let port = args.get_u64("port", 0) as u16;
+    let server = asura::net::server::NodeServer::spawn_on(("127.0.0.1", port))?;
+    println!("asura node listening on {}", server.addr());
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Parse `--join 0=127.0.0.1:7001,1=127.0.0.1:7002` membership lists.
+fn parse_join(list: &str) -> anyhow::Result<Vec<(u32, std::net::SocketAddr)>> {
+    list.split(',')
+        .map(|entry| {
+            let (id, addr) = entry
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--join expects id=host:port, got {entry:?}"))?;
+            Ok((id.trim().parse()?, addr.trim().parse()?))
+        })
+        .collect()
+}
+
+/// Cluster config file: `{"replicas": R, "nodes": [{"id": 0, "capacity": 1.5}, ...]}`.
+fn load_cluster_config(path: &str) -> anyhow::Result<(usize, Vec<(u32, f64)>)> {
+    use asura::util::json;
+    let text = std::fs::read_to_string(path)?;
+    let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let replicas = v
+        .get("replicas")
+        .and_then(|r| r.as_u64())
+        .unwrap_or(1)
+        .max(1) as usize;
+    let nodes = v
+        .get("nodes")
+        .and_then(|n| n.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("{path}: missing nodes array"))?
+        .iter()
+        .map(|n| {
+            let id = n
+                .get("id")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("node missing id"))? as u32;
+            let cap = n.get("capacity").and_then(|x| x.as_f64()).unwrap_or(1.0);
+            anyhow::ensure!(cap > 0.0, "node {id}: capacity must be positive");
+            Ok((id, cap))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    anyhow::ensure!(!nodes.is_empty(), "{path}: empty cluster");
+    Ok((replicas, nodes))
+}
+
+/// Demo: spin up a coordinated TCP cluster, write a workload, scale out,
+/// decommission, print metrics.
+fn run_serve(args: &Args) -> anyhow::Result<()> {
+    let (replicas, members) = if let Some(cfg) = args.get("config") {
+        load_cluster_config(cfg)?
+    } else {
+        let nodes = args.get_u64("nodes", 8) as u32;
+        let replicas = args.get_u64("replicas", 1) as usize;
+        (replicas, (0..nodes).map(|i| (i, 1.0)).collect())
+    };
+    let keys = args.get_u64("keys", 10_000);
+    let mut coord = Coordinator::new(replicas);
+    let members: Vec<(u32, f64)> = if let Some(join) = args.get("join") {
+        // External node processes (`asura node --port ...`).
+        anyhow::ensure!(
+            args.get("config").is_none(),
+            "--join and --config are mutually exclusive; joined nodes default to capacity 1.0"
+        );
+        let addrs = parse_join(join)?;
+        for &(i, addr) in &addrs {
+            coord.join_external(i, 1.0, addr)?;
+        }
+        addrs.iter().map(|&(i, _)| (i, 1.0)).collect()
+    } else {
+        for &(i, cap) in &members {
+            coord.spawn_node(i, cap)?;
+        }
+        members
+    };
+    let nodes = members.len() as u32;
+    println!(
+        "cluster up: {nodes} nodes, replicas={replicas}, epoch={}",
+        coord.epoch()
+    );
+    let t0 = std::time::Instant::now();
+    for k in 0..keys {
+        coord.set(k, &k.to_le_bytes())?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("wrote {keys} keys in {dt:.2}s ({:.0} ops/s)", keys as f64 / dt);
+
+    let new_id = members.iter().map(|&(i, _)| i).max().unwrap_or(0) + 1;
+    let report = coord.spawn_node(new_id, 1.0)?;
+    println!(
+        "scale-out +node {new_id}: checked {} / {} keys, moved {} ({:.2}% vs optimal {:.2}%)",
+        report.checked,
+        keys,
+        report.moved,
+        100.0 * report.moved as f64 / keys as f64,
+        100.0 / (nodes + 1) as f64,
+    );
+    let victim = members[members.len() / 2].0;
+    let report = coord.decommission(victim)?;
+    println!(
+        "decommission node {victim}: checked {}, moved {}",
+        report.checked, report.moved
+    );
+    coord.verify_all_readable()?;
+    println!(
+        "all {keys} keys readable; metrics: {}",
+        coord.metrics.render()
+    );
+    let counts = coord.node_key_counts()?;
+    let hist = asura::stats::Histogram::from_counts(counts);
+    println!(
+        "max variability: {:.2}% (capacity-weighted: {:.2}%)",
+        hist.max_variability_pct(),
+        hist.max_variability_weighted_pct(coord.placer())
+    );
+    Ok(())
+}
+
+fn run_place(args: &Args) -> anyhow::Result<()> {
+    let id = args.get_u64("id", 0);
+    let nodes = args.get_u64("nodes", 10) as u32;
+    let algo = args.get_or("algo", "asura");
+    let node = match algo {
+        "asura" => {
+            let mut p = AsuraPlacer::new();
+            for i in 0..nodes {
+                p.add_node(i, 1.0);
+            }
+            p.place(id)
+        }
+        "chash" => {
+            let mut p = ConsistentHash::new(args.get_u64("vnodes", 100) as usize);
+            for i in 0..nodes {
+                p.add_node(i, 1.0);
+            }
+            p.place(id)
+        }
+        "straw" => {
+            let mut p = StrawBuckets::new();
+            for i in 0..nodes {
+                p.add_node(i, 1.0);
+            }
+            p.place(id)
+        }
+        other => anyhow::bail!("unknown algo {other:?}"),
+    };
+    println!("{algo}: id {id} -> node {node} (of {nodes})");
+    Ok(())
+}
+
+fn run_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    match asura::runtime::Engine::open(dir) {
+        Ok(engine) => {
+            println!("PJRT platform: {}", engine.platform());
+            let mut names = engine.artifact_names();
+            names.sort();
+            println!("artifacts ({}):", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("no artifacts: {e:#}"),
+    }
+    // Quick self-check timing (the paper's headline numbers).
+    let mut p = AsuraPlacer::new();
+    for i in 0..1000 {
+        p.add_node(i, 1.0);
+    }
+    let ids = asura::experiments::id_batch(1024, 1);
+    let m = Bench::quick().run_with_inputs("asura/n1000", &ids, |id| {
+        std::hint::black_box(p.place(std::hint::black_box(id)));
+    });
+    println!("asura placement @1000 nodes: {:.0} ns/op", m.mean_ns);
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Client connection to a storage-node server.
+
+use super::protocol::{read_response, write_request, Request, Response};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// A persistent connection (one per node, pooled by the router).
+pub struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Conn {
+    pub fn connect(addr: SocketAddr) -> std::io::Result<Conn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Conn {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn call(&mut self, req: &Request) -> std::io::Result<Response> {
+        write_request(&mut self.writer, req)?;
+        self.writer.flush()?;
+        read_response(&mut self.reader)
+    }
+
+    pub fn set(&mut self, key: u64, value: Vec<u8>) -> std::io::Result<()> {
+        match self.call(&Request::Set { key, value })? {
+            Response::Stored => Ok(()),
+            other => Err(bad(other)),
+        }
+    }
+
+    pub fn get(&mut self, key: u64) -> std::io::Result<Option<Vec<u8>>> {
+        match self.call(&Request::Get { key })? {
+            Response::Value(v) => Ok(Some(v)),
+            Response::NotFound => Ok(None),
+            other => Err(bad(other)),
+        }
+    }
+
+    pub fn del(&mut self, key: u64) -> std::io::Result<bool> {
+        match self.call(&Request::Del { key })? {
+            Response::Deleted => Ok(true),
+            Response::NotFound => Ok(false),
+            other => Err(bad(other)),
+        }
+    }
+
+    pub fn stats(&mut self) -> std::io::Result<(u64, u64, u64, u64)> {
+        match self.call(&Request::Stats)? {
+            Response::Stats {
+                keys,
+                bytes,
+                sets,
+                gets,
+            } => Ok((keys, bytes, sets, gets)),
+            other => Err(bad(other)),
+        }
+    }
+
+    pub fn ping(&mut self) -> std::io::Result<()> {
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(bad(other)),
+        }
+    }
+}
+
+fn bad(resp: Response) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("unexpected response {resp:?}"),
+    )
+}

@@ -1,0 +1,18 @@
+//! Networked KV cluster: a memcached-like text protocol over TCP, a
+//! threaded storage-node server and a placement-aware client/router.
+//!
+//! This substitutes for the paper's §5.E testbed (memcached-1.4.13 +
+//! libmemcached): the Table III experiment writes 1 M data through the
+//! router to 100 node servers and measures wall time + distribution
+//! uniformity. Loopback TCP preserves the per-op protocol path
+//! (serialize → syscall → parse) while removing cross-machine noise.
+
+pub mod client;
+pub mod protocol;
+pub mod router;
+pub mod server;
+
+pub use client::Conn;
+pub use protocol::{Request, Response};
+pub use router::Router;
+pub use server::NodeServer;

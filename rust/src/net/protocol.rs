@@ -1,0 +1,245 @@
+//! Wire protocol: memcached-flavoured, line-oriented, binary-safe
+//! payloads.
+//!
+//! ```text
+//! SET <key-hex> <len>\n<len bytes>\n     -> STORED\n
+//! GET <key-hex>\n                        -> VALUE <len>\n<bytes>\n | NOT_FOUND\n
+//! DEL <key-hex>\n                        -> DELETED\n | NOT_FOUND\n
+//! STATS\n                                -> STATS <keys> <bytes> <sets> <gets>\n
+//! PING\n                                 -> PONG\n
+//! QUIT\n                                 -> (close)
+//! ```
+
+use std::io::{BufRead, Write};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    Set { key: u64, value: Vec<u8> },
+    Get { key: u64 },
+    Del { key: u64 },
+    Stats,
+    Ping,
+    Quit,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Response {
+    Stored,
+    Value(Vec<u8>),
+    NotFound,
+    Deleted,
+    Stats {
+        keys: u64,
+        bytes: u64,
+        sets: u64,
+        gets: u64,
+    },
+    Pong,
+    Error(String),
+}
+
+/// Read one request; `Ok(None)` on clean EOF.
+pub fn read_request<R: BufRead>(r: &mut R) -> std::io::Result<Option<Request>> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Ok(None);
+    }
+    let line = line.trim_end();
+    let mut parts = line.split(' ');
+    let cmd = parts.next().unwrap_or("");
+    let parse_key = |p: Option<&str>| -> Result<u64, std::io::Error> {
+        p.and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad key"))
+    };
+    match cmd {
+        "SET" => {
+            let key = parse_key(parts.next())?;
+            let len: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad len"))?;
+            if len > 64 << 20 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "value too large",
+                ));
+            }
+            let mut value = vec![0u8; len];
+            r.read_exact(&mut value)?;
+            let mut nl = [0u8; 1];
+            r.read_exact(&mut nl)?; // trailing newline
+            Ok(Some(Request::Set { key, value }))
+        }
+        "GET" => Ok(Some(Request::Get {
+            key: parse_key(parts.next())?,
+        })),
+        "DEL" => Ok(Some(Request::Del {
+            key: parse_key(parts.next())?,
+        })),
+        "STATS" => Ok(Some(Request::Stats)),
+        "PING" => Ok(Some(Request::Ping)),
+        "QUIT" => Ok(Some(Request::Quit)),
+        other => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unknown command {other:?}"),
+        )),
+    }
+}
+
+pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> {
+    match req {
+        Request::Set { key, value } => {
+            write!(w, "SET {key:x} {}\n", value.len())?;
+            w.write_all(value)?;
+            w.write_all(b"\n")
+        }
+        Request::Get { key } => write!(w, "GET {key:x}\n"),
+        Request::Del { key } => write!(w, "DEL {key:x}\n"),
+        Request::Stats => w.write_all(b"STATS\n"),
+        Request::Ping => w.write_all(b"PING\n"),
+        Request::Quit => w.write_all(b"QUIT\n"),
+    }
+}
+
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<()> {
+    match resp {
+        Response::Stored => w.write_all(b"STORED\n"),
+        Response::Value(v) => {
+            write!(w, "VALUE {}\n", v.len())?;
+            w.write_all(v)?;
+            w.write_all(b"\n")
+        }
+        Response::NotFound => w.write_all(b"NOT_FOUND\n"),
+        Response::Deleted => w.write_all(b"DELETED\n"),
+        Response::Stats {
+            keys,
+            bytes,
+            sets,
+            gets,
+        } => write!(w, "STATS {keys} {bytes} {sets} {gets}\n"),
+        Response::Pong => w.write_all(b"PONG\n"),
+        Response::Error(e) => write!(w, "ERROR {}\n", e.replace('\n', " ")),
+    }
+}
+
+pub fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<Response> {
+    let mut line = String::new();
+    if r.read_line(&mut line)? == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "connection closed",
+        ));
+    }
+    let line = line.trim_end();
+    let mut parts = line.split(' ');
+    match parts.next().unwrap_or("") {
+        "STORED" => Ok(Response::Stored),
+        "NOT_FOUND" => Ok(Response::NotFound),
+        "DELETED" => Ok(Response::Deleted),
+        "PONG" => Ok(Response::Pong),
+        "VALUE" => {
+            let len: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad len"))?;
+            let mut value = vec![0u8; len];
+            r.read_exact(&mut value)?;
+            let mut nl = [0u8; 1];
+            r.read_exact(&mut nl)?;
+            Ok(Response::Value(value))
+        }
+        "STATS" => {
+            let mut next = || -> std::io::Result<u64> {
+                parts
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad stat"))
+            };
+            Ok(Response::Stats {
+                keys: next()?,
+                bytes: next()?,
+                sets: next()?,
+                gets: next()?,
+            })
+        }
+        "ERROR" => Ok(Response::Error(parts.collect::<Vec<_>>().join(" "))),
+        other => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad response {other:?}"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn roundtrip_req(req: Request) -> Request {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let mut r = BufReader::new(&buf[..]);
+        read_request(&mut r).unwrap().unwrap()
+    }
+
+    fn roundtrip_resp(resp: Response) -> Response {
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let mut r = BufReader::new(&buf[..]);
+        read_response(&mut r).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        for req in [
+            Request::Set {
+                key: 0xDEADBEEF,
+                value: b"binary\n\0data".to_vec(),
+            },
+            Request::Set {
+                key: 1,
+                value: vec![],
+            },
+            Request::Get { key: u64::MAX },
+            Request::Del { key: 0 },
+            Request::Stats,
+            Request::Ping,
+            Request::Quit,
+        ] {
+            assert_eq!(roundtrip_req(req.clone()), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        for resp in [
+            Response::Stored,
+            Response::Value(b"x\ny".to_vec()),
+            Response::Value(vec![]),
+            Response::NotFound,
+            Response::Deleted,
+            Response::Stats {
+                keys: 1,
+                bytes: 2,
+                sets: 3,
+                gets: 4,
+            },
+            Response::Pong,
+            Response::Error("boom".into()),
+        ] {
+            assert_eq!(roundtrip_resp(resp.clone()), resp);
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_command() {
+        let mut r = BufReader::new(&b"FROB 123\n"[..]);
+        assert!(read_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn eof_is_clean_none() {
+        let mut r = BufReader::new(&b""[..]);
+        assert!(read_request(&mut r).unwrap().is_none());
+    }
+}

@@ -1,0 +1,176 @@
+//! Placement-aware router: the client-side half of the storage cluster.
+//!
+//! The router owns one persistent connection per node and forwards each
+//! op to the node(s) chosen by the placement strategy — exactly the
+//! paper's §5.E setup, where libmemcached was modified to route via
+//! Consistent Hashing / Straw / ASURA. The placement call sits on the
+//! request path, so its latency (Fig. 5) is amortized against the TCP
+//! round trip (Table III).
+
+use super::client::Conn;
+use crate::algo::{DatumId, NodeId, Placer};
+use std::collections::HashMap;
+use std::net::SocketAddr;
+
+pub struct Router<P: Placer> {
+    placer: P,
+    conns: HashMap<NodeId, Conn>,
+    replicas: usize,
+    scratch: Vec<NodeId>,
+}
+
+impl<P: Placer> Router<P> {
+    /// Connect to every node in `addrs` (node id → server address).
+    pub fn connect(placer: P, addrs: &[(NodeId, SocketAddr)], replicas: usize) -> std::io::Result<Self> {
+        assert!(replicas >= 1);
+        let mut conns = HashMap::with_capacity(addrs.len());
+        for &(node, addr) in addrs {
+            conns.insert(node, Conn::connect(addr)?);
+        }
+        Ok(Router {
+            placer,
+            conns,
+            replicas,
+            scratch: Vec::new(),
+        })
+    }
+
+    pub fn placer(&self) -> &P {
+        &self.placer
+    }
+
+    fn effective_replicas(&self) -> usize {
+        self.replicas.min(self.placer.node_count())
+    }
+
+    /// Write to all replicas.
+    pub fn set(&mut self, key: DatumId, value: &[u8]) -> std::io::Result<()> {
+        let r = self.effective_replicas();
+        if r == 1 {
+            let node = self.placer.place(key);
+            return self.conn(node)?.set(key, value.to_vec());
+        }
+        let mut targets = std::mem::take(&mut self.scratch);
+        self.placer.place_replicas(key, r, &mut targets);
+        let mut result = Ok(());
+        for &node in &targets {
+            if let Err(e) = self.conn(node).and_then(|c| c.set(key, value.to_vec())) {
+                result = Err(e);
+                break;
+            }
+        }
+        self.scratch = targets;
+        result
+    }
+
+    /// Read (primary, then replicas).
+    pub fn get(&mut self, key: DatumId) -> std::io::Result<Option<Vec<u8>>> {
+        let r = self.effective_replicas();
+        if r == 1 {
+            let node = self.placer.place(key);
+            return self.conn(node)?.get(key);
+        }
+        let mut targets = std::mem::take(&mut self.scratch);
+        self.placer.place_replicas(key, r, &mut targets);
+        let mut out = Ok(None);
+        for &node in &targets {
+            match self.conn(node).and_then(|c| c.get(key)) {
+                Ok(Some(v)) => {
+                    out = Ok(Some(v));
+                    break;
+                }
+                Ok(None) => continue,
+                Err(e) => {
+                    out = Err(e);
+                    break;
+                }
+            }
+        }
+        self.scratch = targets;
+        out
+    }
+
+    /// Per-node (keys, bytes) via STATS.
+    pub fn stats(&mut self) -> std::io::Result<Vec<(NodeId, u64, u64)>> {
+        let mut out = Vec::with_capacity(self.conns.len());
+        let mut ids: Vec<NodeId> = self.conns.keys().copied().collect();
+        ids.sort_unstable();
+        for node in ids {
+            let (keys, bytes, _, _) = self.conns.get_mut(&node).unwrap().stats()?;
+            out.push((node, keys, bytes));
+        }
+        Ok(out)
+    }
+
+    fn conn(&mut self, node: NodeId) -> std::io::Result<&mut Conn> {
+        self.conns.get_mut(&node).ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("no connection for node {node}"),
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::asura::AsuraPlacer;
+    use crate::algo::Membership;
+    use crate::net::server::NodeServer;
+
+    #[test]
+    fn routes_by_placement_and_reads_back() {
+        let servers: Vec<NodeServer> = (0..4).map(|_| NodeServer::spawn().unwrap()).collect();
+        let mut placer = AsuraPlacer::new();
+        let addrs: Vec<(NodeId, SocketAddr)> = servers
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i as NodeId, s.addr()))
+            .collect();
+        for (i, _) in &addrs {
+            placer.add_node(*i, 1.0);
+        }
+        let expected = placer.clone();
+        let mut router = Router::connect(placer, &addrs, 1).unwrap();
+        for k in 0..400u64 {
+            router.set(k, &k.to_le_bytes()).unwrap();
+        }
+        for k in 0..400u64 {
+            assert_eq!(router.get(k).unwrap(), Some(k.to_le_bytes().to_vec()));
+        }
+        // Keys landed exactly where the placer says.
+        for (i, s) in servers.iter().enumerate() {
+            let store = s.store();
+            let store = store.lock().unwrap();
+            for key in store.keys() {
+                assert_eq!(expected.place(key), i as NodeId);
+            }
+        }
+        let total: usize = servers.iter().map(|s| s.key_count()).sum();
+        assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn replicated_routing_writes_r_copies() {
+        let servers: Vec<NodeServer> = (0..5).map(|_| NodeServer::spawn().unwrap()).collect();
+        let mut placer = AsuraPlacer::new();
+        let addrs: Vec<(NodeId, SocketAddr)> = servers
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i as NodeId, s.addr()))
+            .collect();
+        for (i, _) in &addrs {
+            placer.add_node(*i, 1.0);
+        }
+        let mut router = Router::connect(placer, &addrs, 3).unwrap();
+        for k in 0..100u64 {
+            router.set(k, b"abc").unwrap();
+        }
+        let total: usize = servers.iter().map(|s| s.key_count()).sum();
+        assert_eq!(total, 300);
+        for k in 0..100u64 {
+            assert_eq!(router.get(k).unwrap(), Some(b"abc".to_vec()));
+        }
+    }
+}

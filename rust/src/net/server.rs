@@ -1,0 +1,171 @@
+//! Threaded storage-node TCP server (the memcached stand-in).
+
+use super::protocol::{read_request, write_response, Request, Response};
+use crate::cluster::node::StorageNode;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A running storage-node server.
+pub struct NodeServer {
+    addr: SocketAddr,
+    store: Arc<Mutex<StorageNode>>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl NodeServer {
+    /// Bind on 127.0.0.1 (ephemeral port) and start accepting.
+    pub fn spawn() -> std::io::Result<NodeServer> {
+        Self::spawn_on(("127.0.0.1", 0))
+    }
+
+    /// Bind on an explicit address (standalone `asura node` processes).
+    pub fn spawn_on(addr: impl std::net::ToSocketAddrs) -> std::io::Result<NodeServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let store = Arc::new(Mutex::new(StorageNode::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let store2 = store.clone();
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("node-{}", addr.port()))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { break };
+                    let store3 = store2.clone();
+                    std::thread::spawn(move || {
+                        let _ = serve_conn(stream, store3);
+                    });
+                }
+            })?;
+        Ok(NodeServer {
+            addr,
+            store,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Direct handle to the backing store (stats, invariant checks).
+    pub fn store(&self) -> Arc<Mutex<StorageNode>> {
+        self.store.clone()
+    }
+
+    pub fn key_count(&self) -> usize {
+        self.store.lock().unwrap().len()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Poke the acceptor so it observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for NodeServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(stream: TcpStream, store: Arc<Mutex<StorageNode>>) -> std::io::Result<()> {
+    stream.set_nodelay(true)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                let _ = write_response(&mut writer, &Response::Error(e.to_string()));
+                let _ = writer.flush();
+                return Err(e);
+            }
+        };
+        let resp = match req {
+            Request::Set { key, value } => {
+                store.lock().unwrap().set(key, value);
+                Response::Stored
+            }
+            Request::Get { key } => match store.lock().unwrap().get(key) {
+                Some(v) => Response::Value(v.to_vec()),
+                None => Response::NotFound,
+            },
+            Request::Del { key } => match store.lock().unwrap().remove(key) {
+                Some(_) => Response::Deleted,
+                None => Response::NotFound,
+            },
+            Request::Stats => {
+                let s = store.lock().unwrap();
+                Response::Stats {
+                    keys: s.len() as u64,
+                    bytes: s.used_bytes(),
+                    sets: s.sets,
+                    gets: s.gets,
+                }
+            }
+            Request::Ping => Response::Pong,
+            Request::Quit => {
+                return Ok(());
+            }
+        };
+        write_response(&mut writer, &resp)?;
+        writer.flush()?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::client::Conn;
+
+    #[test]
+    fn server_serves_set_get_del_stats() {
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect(server.addr()).unwrap();
+        assert_eq!(c.ping().unwrap(), ());
+        c.set(42, b"value!".to_vec()).unwrap();
+        assert_eq!(c.get(42).unwrap(), Some(b"value!".to_vec()));
+        assert_eq!(c.get(43).unwrap(), None);
+        let (keys, bytes, sets, _gets) = c.stats().unwrap();
+        assert_eq!((keys, bytes, sets), (1, 6, 1));
+        assert!(c.del(42).unwrap());
+        assert!(!c.del(42).unwrap());
+        assert_eq!(server.key_count(), 0);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = NodeServer::spawn().unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut c = Conn::connect(addr).unwrap();
+                    for i in 0..100u64 {
+                        let key = t * 1000 + i;
+                        c.set(key, vec![t as u8; 16]).unwrap();
+                        assert_eq!(c.get(key).unwrap(), Some(vec![t as u8; 16]));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.key_count(), 800);
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT client + artifact loading.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact plus the shape signature from `manifest.json`.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+impl Executable {
+    /// Execute with u32 buffers; validates shapes against the manifest.
+    pub fn run_u32(&self, inputs: &[&[u32]]) -> Result<Vec<Vec<u32>>> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, shape)) in inputs.iter().zip(&self.input_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                bail!(
+                    "{}: input {i} length {} != manifest shape {:?}",
+                    self.name,
+                    buf.len(),
+                    shape
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshape input {i} of {}", self.name))?,
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let elems = result.to_tuple()?;
+        let mut out = Vec::with_capacity(elems.len());
+        for (i, lit) in elems.into_iter().enumerate() {
+            let v: Vec<u32> = lit
+                .to_vec()
+                .with_context(|| format!("output {i} of {} as u32", self.name))?;
+            out.push(v);
+        }
+        if out.len() != self.output_shapes.len() {
+            bail!(
+                "{}: manifest promises {} outputs, artifact returned {}",
+                self.name,
+                self.output_shapes.len(),
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT CPU engine holding every loaded artifact.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    manifest: Json,
+    cache: HashMap<String, Executable>,
+}
+
+impl Engine {
+    /// Open the engine over an artifacts directory (built by
+    /// `make artifacts`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            artifacts_dir: dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifacts location: `$ASURA_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Engine> {
+        let dir = std::env::var("ASURA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names present in the manifest.
+    pub fn artifact_names(&self) -> Vec<String> {
+        match &self.manifest {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    fn shapes(entry: &Json, key: &str) -> Result<Vec<Vec<usize>>> {
+        entry
+            .get(key)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest entry missing {key}"))?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .ok_or_else(|| anyhow!("bad shape"))
+                    .map(|dims| dims.iter().filter_map(|d| d.as_u64()).map(|d| d as usize).collect())
+            })
+            .collect()
+    }
+
+    /// Load (compile) an artifact by manifest name; cached.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let path = self.artifacts_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            let input_shapes = Self::shapes(entry, "inputs")?;
+            let output_shapes = Self::shapes(entry, "outputs")?;
+            self.cache.insert(
+                name.to_string(),
+                Executable {
+                    exe,
+                    name: name.to_string(),
+                    input_shapes,
+                    output_shapes,
+                },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+}

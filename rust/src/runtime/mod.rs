@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the Rust request path.
+//!
+//! This is the only bridge between L3 and the L2/L1 python build
+//! products; python itself never runs here. The interchange is HLO
+//! *text* (see `python/compile/aot.py` for why not serialized protos).
+//!
+//! [`Engine`] owns the PJRT CPU client and the compiled executables;
+//! [`BulkPlacer`] is the typed facade the coordinator uses for bulk
+//! placement, histogram analytics and two-epoch movement planning.
+
+pub mod engine;
+pub mod placer;
+
+pub use engine::{Engine, Executable};
+pub use placer::{BulkPlacer, HistResult, MoveResult};

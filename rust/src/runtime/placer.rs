@@ -1,0 +1,227 @@
+//! Typed facade over the placement artifacts.
+//!
+//! [`BulkPlacer`] marshals a [`SegmentTable`] and an ID batch into the
+//! fixed artifact shapes (padding/chunking as needed), executes via
+//! [`Engine`], and post-processes: any `INVALID` lane (kernel step-budget
+//! exhausted, probability ≲ 1e-6 per lane) is resolved by the scalar
+//! Rust path so callers always receive a complete placement.
+
+use super::engine::Engine;
+use crate::algo::asura::{AsuraPlacer, SegmentTable, NO_SEG};
+use crate::algo::NodeId;
+use anyhow::{bail, Result};
+
+/// Kernel sentinel for an unresolved lane.
+pub const INVALID: u32 = 0xFFFF_FFFF;
+
+/// Result of a bulk histogram run.
+#[derive(Clone, Debug)]
+pub struct HistResult {
+    pub segs: Vec<u32>,
+    pub seg_counts: Vec<u32>,
+    /// Indexed by node id (see model.hist_fn); only entries for live
+    /// nodes are meaningful.
+    pub node_counts: Vec<u32>,
+    pub unresolved: u32,
+}
+
+/// Result of a two-epoch movement run.
+#[derive(Clone, Debug)]
+pub struct MoveResult {
+    pub before: Vec<u32>,
+    pub after: Vec<u32>,
+    pub moved: u64,
+}
+
+/// Bulk placement over PJRT with scalar fallback.
+pub struct BulkPlacer {
+    engine: Engine,
+    batch: usize,
+    mseg: usize,
+}
+
+impl BulkPlacer {
+    /// Use the `b4096_m4096` artifact variant (the default analytics
+    /// shape).
+    pub fn new(engine: Engine) -> Self {
+        Self::with_variant(engine, 4096, 4096)
+    }
+
+    pub fn with_variant(engine: Engine, batch: usize, mseg: usize) -> Self {
+        Self { engine, batch, mseg }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn marshal_table(&self, table: &SegmentTable) -> Result<(Vec<u32>, Vec<u32>, Vec<u32>)> {
+        let m = table.m() as usize;
+        if m > self.mseg {
+            bail!(
+                "segment table m={m} exceeds artifact capacity {} — regenerate artifacts with a larger M",
+                self.mseg
+            );
+        }
+        let mut lens = table.lens_q24_raw();
+        lens.resize(self.mseg, 0);
+        let mut owners: Vec<u32> = table.owners_raw().to_vec();
+        owners.resize(self.mseg, NO_SEG);
+        Ok((lens, owners, vec![m as u32]))
+    }
+
+    fn pad_ids(&self, ids: &[u32]) -> Vec<u32> {
+        let mut padded = ids.to_vec();
+        let rem = padded.len() % self.batch;
+        if rem != 0 {
+            // Pad with id 0 — results for the pad tail are discarded.
+            padded.resize(padded.len() + self.batch - rem, 0);
+        }
+        padded
+    }
+
+    /// Bulk placement of `ids` (u32 placement domain) over `table`.
+    /// INVALID lanes are resolved with the scalar path.
+    pub fn place(&mut self, table: &SegmentTable, ids: &[u32]) -> Result<Vec<u32>> {
+        let (lens, _, m) = self.marshal_table(table)?;
+        let padded = self.pad_ids(ids);
+        let name = format!("asura_place_b{}_m{}", self.batch, self.mseg);
+        let exe = self.engine.load(&name)?;
+        let mut segs = Vec::with_capacity(padded.len());
+        for chunk in padded.chunks(self.batch) {
+            let out = exe.run_u32(&[chunk, &lens, &m])?;
+            segs.extend_from_slice(&out[0]);
+        }
+        segs.truncate(ids.len());
+        // Scalar fallback for unresolved lanes.
+        let fallback = AsuraPlacer::from_table(table.clone());
+        for (i, seg) in segs.iter_mut().enumerate() {
+            if *seg == INVALID {
+                *seg = fallback.place_seg32(ids[i]);
+            }
+        }
+        Ok(segs)
+    }
+
+    /// Bulk placement + histograms.
+    pub fn hist(&mut self, table: &SegmentTable, ids: &[u32]) -> Result<HistResult> {
+        let (lens, owners, m) = self.marshal_table(table)?;
+        let padded = self.pad_ids(ids);
+        let name = format!("asura_hist_b{}_m{}", self.batch, self.mseg);
+        let exe = self.engine.load(&name)?;
+        let mut segs = Vec::with_capacity(padded.len());
+        let mut seg_counts = vec![0u32; self.mseg];
+        let mut node_counts = vec![0u32; self.mseg];
+        let mut unresolved = 0u32;
+        let full_chunks = ids.len() / self.batch;
+        for (ci, chunk) in padded.chunks(self.batch).enumerate() {
+            let out = exe.run_u32(&[chunk, &lens, &m, &owners])?;
+            segs.extend_from_slice(&out[0]);
+            // The last (padded) chunk's histogram would count pad lanes;
+            // recount it scalar-side instead.
+            if ci < full_chunks {
+                for (a, b) in seg_counts.iter_mut().zip(&out[1]) {
+                    *a += b;
+                }
+                for (a, b) in node_counts.iter_mut().zip(&out[2]) {
+                    *a += b;
+                }
+                unresolved += out[3][0];
+            }
+        }
+        segs.truncate(ids.len());
+        // Scalar fallback + tail recount.
+        let fallback = AsuraPlacer::from_table(table.clone());
+        for (i, seg) in segs.iter_mut().enumerate() {
+            if *seg == INVALID {
+                unresolved += 1;
+                *seg = fallback.place_seg32(ids[i]);
+            }
+            if i >= full_chunks * self.batch {
+                seg_counts[*seg as usize] += 1;
+                if let Some(owner) = table.owner(*seg) {
+                    node_counts[owner as usize] += 1;
+                }
+            }
+        }
+        Ok(HistResult {
+            segs,
+            seg_counts,
+            node_counts,
+            unresolved,
+        })
+    }
+
+    /// Two-epoch movement plan: placements under `before` and `after`
+    /// tables plus the moved count (rebalance planning).
+    pub fn movement(
+        &mut self,
+        before: &SegmentTable,
+        after: &SegmentTable,
+        ids: &[u32],
+    ) -> Result<MoveResult> {
+        let (lens_b, _, m_b) = self.marshal_table(before)?;
+        let (lens_a, _, m_a) = self.marshal_table(after)?;
+        let padded = self.pad_ids(ids);
+        let name = format!("asura_move_b{}_m{}", self.batch, self.mseg);
+        let exe = self.engine.load(&name)?;
+        let mut segs_b = Vec::with_capacity(padded.len());
+        let mut segs_a = Vec::with_capacity(padded.len());
+        for chunk in padded.chunks(self.batch) {
+            let out = exe.run_u32(&[chunk, &lens_b, &m_b, &lens_a, &m_a])?;
+            segs_b.extend_from_slice(&out[0]);
+            segs_a.extend_from_slice(&out[1]);
+        }
+        segs_b.truncate(ids.len());
+        segs_a.truncate(ids.len());
+        let fb_b = AsuraPlacer::from_table(before.clone());
+        let fb_a = AsuraPlacer::from_table(after.clone());
+        let mut moved = 0u64;
+        for i in 0..ids.len() {
+            if segs_b[i] == INVALID {
+                segs_b[i] = fb_b.place_seg32(ids[i]);
+            }
+            if segs_a[i] == INVALID {
+                segs_a[i] = fb_a.place_seg32(ids[i]);
+            }
+            if segs_b[i] != segs_a[i] {
+                moved += 1;
+            }
+        }
+        Ok(MoveResult {
+            before: segs_b,
+            after: segs_a,
+            moved,
+        })
+    }
+
+    /// Straw bulk path (baseline analytics).
+    pub fn straw(
+        &mut self,
+        node_ids: &[NodeId],
+        factors: &[u32],
+        ids: &[u32],
+    ) -> Result<Vec<u32>> {
+        let (b, n) = (1024usize, 256usize);
+        if node_ids.len() > n {
+            bail!("straw artifact capacity {n} exceeded");
+        }
+        let mut nodes_pad = node_ids.to_vec();
+        nodes_pad.resize(n, 0);
+        let mut fact_pad = factors.to_vec();
+        fact_pad.resize(n, 0);
+        let mut padded = ids.to_vec();
+        let rem = padded.len() % b;
+        if rem != 0 {
+            padded.resize(padded.len() + b - rem, 0);
+        }
+        let exe = self.engine.load(&format!("straw_place_b{b}_n{n}"))?;
+        let mut out_all = Vec::with_capacity(padded.len());
+        for chunk in padded.chunks(b) {
+            let out = exe.run_u32(&[chunk, &nodes_pad, &fact_pad])?;
+            out_all.extend_from_slice(&out[0]);
+        }
+        out_all.truncate(ids.len());
+        Ok(out_all)
+    }
+}

@@ -1,0 +1,236 @@
+//! Distribution and latency statistics used by the evaluation harnesses.
+//!
+//! The paper's uniformity metric (Figs 6–8, Table III) is **maximum
+//! variability**: the largest relative deviation of any node's datum
+//! count from the mean, in percent. §5.B converts it to extra nodes: a
+//! system whose algorithm has maximum variability `v` needs `v/(1−v)`
+//! more nodes to reach the same usable capacity.
+
+use crate::algo::{NodeId, Placer};
+
+/// Placement histogram over nodes.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    counts: Vec<(NodeId, u64)>,
+}
+
+impl Histogram {
+    /// Count placements of `ids` under `placer`.
+    pub fn collect<P: Placer + ?Sized>(placer: &P, ids: impl Iterator<Item = u64>) -> Self {
+        let nodes = placer.nodes();
+        let max = nodes.iter().copied().max().unwrap_or(0) as usize;
+        let mut dense = vec![0u64; max + 1];
+        for id in ids {
+            dense[placer.place(id) as usize] += 1;
+        }
+        Histogram {
+            counts: nodes.into_iter().map(|n| (n, dense[n as usize])).collect(),
+        }
+    }
+
+    pub fn from_counts(counts: Vec<(NodeId, u64)>) -> Self {
+        Histogram { counts }
+    }
+
+    pub fn counts(&self) -> &[(NodeId, u64)] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|&(_, c)| c).sum()
+    }
+
+    /// Maximum variability in percent against the *uniform* expectation
+    /// (the paper's metric; capacities equal).
+    pub fn max_variability_pct(&self) -> f64 {
+        let n = self.counts.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mean = self.total() as f64 / n as f64;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        self.counts
+            .iter()
+            .map(|&(_, c)| (c as f64 - mean).abs() / mean)
+            .fold(0.0, f64::max)
+            * 100.0
+    }
+
+    /// Maximum variability against *weighted* expectations (flexible
+    /// distribution, §3.E): deviation of each node's count from its
+    /// capacity share.
+    pub fn max_variability_weighted_pct<P: Placer + ?Sized>(&self, placer: &P) -> f64 {
+        let total = self.total() as f64;
+        let wsum: f64 = self.counts.iter().map(|&(n, _)| placer.weight_of(n)).sum();
+        if total == 0.0 || wsum == 0.0 {
+            return 0.0;
+        }
+        self.counts
+            .iter()
+            .map(|&(n, c)| {
+                let expect = total * placer.weight_of(n) / wsum;
+                if expect == 0.0 {
+                    0.0
+                } else {
+                    (c as f64 - expect).abs() / expect
+                }
+            })
+            .fold(0.0, f64::max)
+            * 100.0
+    }
+
+    /// Pearson chi-square statistic against uniform expectations
+    /// (secondary uniformity check; d.o.f. = n−1).
+    pub fn chi_square_uniform(&self) -> f64 {
+        let n = self.counts.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let mean = self.total() as f64 / n as f64;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        self.counts
+            .iter()
+            .map(|&(_, c)| {
+                let d = c as f64 - mean;
+                d * d / mean
+            })
+            .sum()
+    }
+}
+
+/// Paper §5.B: extra node factor required at maximum variability `v`
+/// (fraction, not percent): a 10% spread needs 11.1% more nodes.
+pub fn extra_nodes_factor(max_variability_fraction: f64) -> f64 {
+    let v = max_variability_fraction;
+    if v >= 1.0 {
+        return f64::INFINITY;
+    }
+    v / (1.0 - v)
+}
+
+/// Streaming summary for latencies / timings (ns domain).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Percentile by nearest-rank on a sorted copy (q in [0,100]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::asura::AsuraPlacer;
+    use crate::algo::Membership;
+
+    #[test]
+    fn max_variability_of_perfect_split_is_zero() {
+        let h = Histogram::from_counts(vec![(0, 100), (1, 100), (2, 100)]);
+        assert_eq!(h.max_variability_pct(), 0.0);
+        assert_eq!(h.chi_square_uniform(), 0.0);
+    }
+
+    #[test]
+    fn max_variability_detects_skew() {
+        let h = Histogram::from_counts(vec![(0, 150), (1, 50), (2, 100)]);
+        // mean 100; max |dev| = 50 ⇒ 50%
+        assert!((h.max_variability_pct() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_variability_uses_capacity_shares() {
+        let mut p = AsuraPlacer::new();
+        p.add_node(0, 1.0);
+        p.add_node(1, 3.0);
+        // Exactly proportional counts ⇒ 0 weighted variability.
+        let h = Histogram::from_counts(vec![(0, 250), (1, 750)]);
+        assert!(h.max_variability_weighted_pct(&p) < 1e-9);
+        // But huge *unweighted* variability.
+        assert!(h.max_variability_pct() > 40.0);
+    }
+
+    #[test]
+    fn extra_nodes_matches_paper_example() {
+        // §5.B: 10% maximum variability ⇒ 11.1% extra nodes.
+        assert!((extra_nodes_factor(0.10) - 0.1111).abs() < 1e-3);
+    }
+
+    #[test]
+    fn collect_covers_all_nodes() {
+        let mut p = AsuraPlacer::new();
+        for i in 0..5 {
+            p.add_node(i, 1.0);
+        }
+        let h = Histogram::collect(&p, 0..10_000u64);
+        assert_eq!(h.counts().len(), 5);
+        assert_eq!(h.total(), 10_000);
+        assert!(h.max_variability_pct() < 20.0);
+    }
+
+    #[test]
+    fn summary_statistics() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert!((s.stddev() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,469 @@
+//! Self-contained utility substrates.
+//!
+//! The offline build environment has no `serde`/`clap`/`criterion`, so the
+//! pieces of them this project needs are implemented here: a small JSON
+//! parser/writer (configs, golden vectors, experiment output), a
+//! flag-style CLI argument parser, and a CSV writer.
+
+pub mod json {
+    //! Minimal JSON: full parser + writer for the subset this project
+    //! emits (objects, arrays, strings, f64 numbers, bools, null).
+
+    use std::collections::BTreeMap;
+    use std::fmt;
+
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Json {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Json>),
+        Obj(BTreeMap<String, Json>),
+    }
+
+    impl Json {
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Json::Num(x) => Some(*x),
+                _ => None,
+            }
+        }
+
+        pub fn as_u64(&self) -> Option<u64> {
+            self.as_f64().map(|x| x as u64)
+        }
+
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Json::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        pub fn as_arr(&self) -> Option<&[Json]> {
+            match self {
+                Json::Arr(v) => Some(v),
+                _ => None,
+            }
+        }
+
+        pub fn get(&self, key: &str) -> Option<&Json> {
+            match self {
+                Json::Obj(m) => m.get(key),
+                _ => None,
+            }
+        }
+
+        pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+            Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+        }
+    }
+
+    impl fmt::Display for Json {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            match self {
+                Json::Null => write!(f, "null"),
+                Json::Bool(b) => write!(f, "{b}"),
+                Json::Num(x) => {
+                    if x.fract() == 0.0 && x.abs() < 9e15 {
+                        write!(f, "{}", *x as i64)
+                    } else {
+                        write!(f, "{x}")
+                    }
+                }
+                Json::Str(s) => {
+                    write!(f, "\"")?;
+                    for c in s.chars() {
+                        match c {
+                            '"' => write!(f, "\\\"")?,
+                            '\\' => write!(f, "\\\\")?,
+                            '\n' => write!(f, "\\n")?,
+                            '\t' => write!(f, "\\t")?,
+                            '\r' => write!(f, "\\r")?,
+                            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+                            c => write!(f, "{c}")?,
+                        }
+                    }
+                    write!(f, "\"")
+                }
+                Json::Arr(v) => {
+                    write!(f, "[")?;
+                    for (i, x) in v.iter().enumerate() {
+                        if i > 0 {
+                            write!(f, ",")?;
+                        }
+                        write!(f, "{x}")?;
+                    }
+                    write!(f, "]")
+                }
+                Json::Obj(m) => {
+                    write!(f, "{{")?;
+                    for (i, (k, v)) in m.iter().enumerate() {
+                        if i > 0 {
+                            write!(f, ",")?;
+                        }
+                        write!(f, "{}:{}", Json::Str(k.clone()), v)?;
+                    }
+                    write!(f, "}}")
+                }
+            }
+        }
+    }
+
+    pub fn parse(input: &str) -> Result<Json, String> {
+        let mut p = Parser {
+            bytes: input.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing garbage at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        bytes: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Parser<'a> {
+        fn peek(&self) -> Option<u8> {
+            self.bytes.get(self.pos).copied()
+        }
+
+        fn bump(&mut self) -> Option<u8> {
+            let b = self.peek();
+            if b.is_some() {
+                self.pos += 1;
+            }
+            b
+        }
+
+        fn skip_ws(&mut self) {
+            while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+                self.pos += 1;
+            }
+        }
+
+        fn expect(&mut self, b: u8) -> Result<(), String> {
+            if self.bump() == Some(b) {
+                Ok(())
+            } else {
+                Err(format!("expected '{}' at byte {}", b as char, self.pos))
+            }
+        }
+
+        fn lit(&mut self, s: &str, v: Json) -> Result<Json, String> {
+            if self.bytes[self.pos..].starts_with(s.as_bytes()) {
+                self.pos += s.len();
+                Ok(v)
+            } else {
+                Err(format!("bad literal at byte {}", self.pos))
+            }
+        }
+
+        fn value(&mut self) -> Result<Json, String> {
+            self.skip_ws();
+            match self.peek() {
+                Some(b'n') => self.lit("null", Json::Null),
+                Some(b't') => self.lit("true", Json::Bool(true)),
+                Some(b'f') => self.lit("false", Json::Bool(false)),
+                Some(b'"') => Ok(Json::Str(self.string()?)),
+                Some(b'[') => self.array(),
+                Some(b'{') => self.object(),
+                Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+                other => Err(format!("unexpected {other:?} at byte {}", self.pos)),
+            }
+        }
+
+        fn string(&mut self) -> Result<String, String> {
+            self.expect(b'"')?;
+            let mut out = String::new();
+            loop {
+                match self.bump() {
+                    None => return Err("unterminated string".into()),
+                    Some(b'"') => return Ok(out),
+                    Some(b'\\') => match self.bump() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let mut code = 0u32;
+                            for _ in 0..4 {
+                                let d = self.bump().ok_or("bad \\u escape")?;
+                                code = code * 16
+                                    + (d as char).to_digit(16).ok_or("bad hex digit")?;
+                            }
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => return Err(format!("bad escape {other:?}")),
+                    },
+                    Some(c) if c < 0x80 => out.push(c as char),
+                    Some(c) => {
+                        // Re-decode multibyte UTF-8.
+                        let start = self.pos - 1;
+                        let width = match c {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            _ => 4,
+                        };
+                        self.pos = start + width;
+                        let s = std::str::from_utf8(&self.bytes[start..self.pos.min(self.bytes.len())])
+                            .map_err(|e| e.to_string())?;
+                        out.push_str(s);
+                    }
+                }
+            }
+        }
+
+        fn number(&mut self) -> Result<Json, String> {
+            let start = self.pos;
+            if self.peek() == Some(b'-') {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+            if self.peek() == Some(b'.') {
+                self.pos += 1;
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+            }
+            if matches!(self.peek(), Some(b'e' | b'E')) {
+                self.pos += 1;
+                if matches!(self.peek(), Some(b'+' | b'-')) {
+                    self.pos += 1;
+                }
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+            }
+            let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+            s.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|e| format!("bad number {s}: {e}"))
+        }
+
+        fn array(&mut self) -> Result<Json, String> {
+            self.expect(b'[')?;
+            let mut v = Vec::new();
+            self.skip_ws();
+            if self.peek() == Some(b']') {
+                self.pos += 1;
+                return Ok(Json::Arr(v));
+            }
+            loop {
+                v.push(self.value()?);
+                self.skip_ws();
+                match self.bump() {
+                    Some(b',') => continue,
+                    Some(b']') => return Ok(Json::Arr(v)),
+                    other => return Err(format!("expected , or ] got {other:?}")),
+                }
+            }
+        }
+
+        fn object(&mut self) -> Result<Json, String> {
+            self.expect(b'{')?;
+            let mut m = std::collections::BTreeMap::new();
+            self.skip_ws();
+            if self.peek() == Some(b'}') {
+                self.pos += 1;
+                return Ok(Json::Obj(m));
+            }
+            loop {
+                self.skip_ws();
+                let k = self.string()?;
+                self.skip_ws();
+                self.expect(b':')?;
+                let v = self.value()?;
+                m.insert(k, v);
+                self.skip_ws();
+                match self.bump() {
+                    Some(b',') => continue,
+                    Some(b'}') => return Ok(Json::Obj(m)),
+                    other => return Err(format!("expected , or }} got {other:?}")),
+                }
+            }
+        }
+    }
+}
+
+pub mod cli {
+    //! Flag-style argument parsing: `--name value`, `--flag`, positionals.
+
+    use std::collections::BTreeMap;
+
+    #[derive(Clone, Debug, Default)]
+    pub struct Args {
+        pub positional: Vec<String>,
+        flags: BTreeMap<String, String>,
+    }
+
+    impl Args {
+        /// Parse from an iterator of raw arguments (program name excluded).
+        pub fn parse(raw: impl Iterator<Item = String>) -> Args {
+            let raw: Vec<String> = raw.collect();
+            let mut out = Args::default();
+            let mut i = 0;
+            while i < raw.len() {
+                let a = &raw[i];
+                if let Some(name) = a.strip_prefix("--") {
+                    if let Some((k, v)) = name.split_once('=') {
+                        out.flags.insert(k.to_string(), v.to_string());
+                    } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                        out.flags.insert(name.to_string(), raw[i + 1].clone());
+                        i += 1;
+                    } else {
+                        out.flags.insert(name.to_string(), "true".to_string());
+                    }
+                } else {
+                    out.positional.push(a.clone());
+                }
+                i += 1;
+            }
+            out
+        }
+
+        pub fn from_env() -> Args {
+            Self::parse(std::env::args().skip(1))
+        }
+
+        pub fn has(&self, name: &str) -> bool {
+            self.flags.contains_key(name)
+        }
+
+        pub fn get(&self, name: &str) -> Option<&str> {
+            self.flags.get(name).map(|s| s.as_str())
+        }
+
+        pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+            self.get(name).unwrap_or(default)
+        }
+
+        pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+            self.get(name)
+                .map(|s| {
+                    s.parse()
+                        .unwrap_or_else(|_| panic!("--{name} expects an integer, got {s}"))
+                })
+                .unwrap_or(default)
+        }
+
+        pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+            self.get(name)
+                .map(|s| {
+                    s.parse()
+                        .unwrap_or_else(|_| panic!("--{name} expects a number, got {s}"))
+                })
+                .unwrap_or(default)
+        }
+    }
+}
+
+pub mod csv {
+    //! CSV writing for experiment output (paper tables/figures as rows).
+
+    use std::io::Write;
+    use std::path::Path;
+
+    pub struct CsvWriter {
+        out: Box<dyn Write>,
+    }
+
+    impl CsvWriter {
+        /// To file if `path` is Some, otherwise stdout.
+        pub fn create(path: Option<&str>) -> std::io::Result<CsvWriter> {
+            let out: Box<dyn Write> = match path {
+                Some(p) => {
+                    if let Some(dir) = Path::new(p).parent() {
+                        if !dir.as_os_str().is_empty() {
+                            std::fs::create_dir_all(dir)?;
+                        }
+                    }
+                    Box::new(std::fs::File::create(p)?)
+                }
+                None => Box::new(std::io::stdout()),
+            };
+            Ok(CsvWriter { out })
+        }
+
+        pub fn row(&mut self, fields: &[&str]) -> std::io::Result<()> {
+            let mut first = true;
+            for f in fields {
+                if !first {
+                    write!(self.out, ",")?;
+                }
+                first = false;
+                if f.contains(',') || f.contains('"') {
+                    write!(self.out, "\"{}\"", f.replace('"', "\"\""))?;
+                } else {
+                    write!(self.out, "{f}")?;
+                }
+            }
+            writeln!(self.out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cli::Args;
+    use super::json::parse;
+
+    #[test]
+    fn json_roundtrip() {
+        let src = r#"{"a":[1,2.5,-3],"b":"x\"y","c":true,"d":null,"e":{"k":1e3}}"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[1].as_f64(), Some(2.5));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x\"y"));
+        assert_eq!(v.get("e").unwrap().get("k").unwrap().as_f64(), Some(1000.0));
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("hello").is_err());
+        assert!(parse("{}extra").is_err());
+    }
+
+    #[test]
+    fn json_unicode_string() {
+        let v = parse("\"café naïve\"").unwrap();
+        assert_eq!(v.as_str(), Some("café naïve"));
+    }
+
+    #[test]
+    fn json_big_int_precision() {
+        let v = parse("4294967295").unwrap();
+        assert_eq!(v.as_u64(), Some(4294967295));
+    }
+
+    #[test]
+    fn cli_parses_flags_and_positionals() {
+        let a = Args::parse(
+            ["experiment", "fig5", "--out", "x.csv", "--huge", "--n=12"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.positional, vec!["experiment", "fig5"]);
+        assert_eq!(a.get("out"), Some("x.csv"));
+        assert!(a.has("huge"));
+        assert_eq!(a.get_u64("n", 0), 12);
+        assert_eq!(a.get_u64("absent", 7), 7);
+        assert_eq!(a.get_f64("absent_f", 0.5), 0.5);
+    }
+}

@@ -1,0 +1,187 @@
+//! Workload generation for the evaluation harnesses.
+//!
+//! The paper's quantitative tests draw uniformly random datum IDs; §5.C
+//! discusses variable data sizes and access frequencies, which we model
+//! with Zipf-distributed sizes/popularity so the `heterogeneous` example
+//! and the ablation benches can exercise them.
+
+use crate::prng::SplitMix64;
+
+/// Uniformly random 64-bit datum IDs (reproducible by seed).
+pub struct UniformIds {
+    rng: SplitMix64,
+}
+
+impl UniformIds {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: SplitMix64::new(seed),
+        }
+    }
+}
+
+impl Iterator for UniformIds {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        Some(self.rng.next_u64())
+    }
+}
+
+/// Zipf(α) sampler over ranks `0..n` via inverse-CDF on a precomputed
+/// table (exact, O(log n) per sample; table built once).
+pub struct Zipf {
+    cdf: Vec<f64>,
+    rng: SplitMix64,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64, seed: u64) -> Self {
+        assert!(n >= 1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(alpha);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Self {
+            cdf,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    /// Sample a rank in `0..n` (rank 0 most popular).
+    pub fn sample(&mut self) -> usize {
+        let u = self.rng.next_f64();
+        self.cdf.partition_point(|&c| c < u)
+    }
+}
+
+/// A synthetic KV write/read trace entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Op {
+    Set { key: u64, size: u32 },
+    Get { key: u64 },
+}
+
+/// Trace generator: `writes` sets over a key space, then a read phase
+/// with Zipf popularity (hot keys) — the shape of the paper's §5.E
+/// workload plus the §5.C skew discussion.
+pub struct TraceGen {
+    pub keys: u64,
+    pub value_size: u32,
+    pub read_ops: u64,
+    pub zipf_alpha: f64,
+    pub seed: u64,
+}
+
+impl TraceGen {
+    /// The paper's Table III workload: 1,000,000 writes of 1-byte data.
+    pub fn paper_table3() -> Self {
+        Self {
+            keys: 1_000_000,
+            value_size: 1,
+            read_ops: 0,
+            zipf_alpha: 1.0,
+            seed: 0x7AB1_E003,
+        }
+    }
+
+    pub fn ops(&self) -> impl Iterator<Item = Op> + '_ {
+        let write_rng = SplitMix64::new(self.seed);
+        let mut keybuf = KeyStream {
+            rng: write_rng,
+            remaining: self.keys,
+        };
+        let mut writes = Vec::with_capacity(self.keys as usize);
+        while let Some(k) = keybuf.next() {
+            writes.push(k);
+        }
+        let mut zipf = Zipf::new(self.keys.max(1) as usize, self.zipf_alpha, self.seed ^ 0xFF);
+        let reads: Vec<Op> = (0..self.read_ops)
+            .map(|_| Op::Get {
+                key: writes[zipf.sample()],
+            })
+            .collect();
+        writes
+            .into_iter()
+            .map(move |key| Op::Set {
+                key,
+                size: self.value_size,
+            })
+            .chain(reads)
+    }
+}
+
+struct KeyStream {
+    rng: SplitMix64,
+    remaining: u64,
+}
+
+impl Iterator for KeyStream {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        Some(self.rng.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_ids_reproducible() {
+        let a: Vec<u64> = UniformIds::new(1).take(10).collect();
+        let b: Vec<u64> = UniformIds::new(1).take(10).collect();
+        let c: Vec<u64> = UniformIds::new(2).take(10).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn zipf_rank0_is_most_popular() {
+        let mut z = Zipf::new(100, 1.0, 42);
+        let mut counts = vec![0u64; 100];
+        for _ in 0..50_000 {
+            counts[z.sample()] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[90]);
+    }
+
+    #[test]
+    fn zipf_alpha_zero_is_uniform() {
+        let mut z = Zipf::new(10, 0.0, 7);
+        let mut counts = vec![0u64; 10];
+        for _ in 0..100_000 {
+            counts[z.sample()] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{c}");
+        }
+    }
+
+    #[test]
+    fn paper_trace_shape() {
+        let t = TraceGen {
+            keys: 1000,
+            value_size: 1,
+            read_ops: 500,
+            zipf_alpha: 1.0,
+            seed: 3,
+        };
+        let ops: Vec<Op> = t.ops().collect();
+        assert_eq!(ops.len(), 1500);
+        assert!(matches!(ops[0], Op::Set { size: 1, .. }));
+        assert!(matches!(ops[1400], Op::Get { .. }));
+    }
+}

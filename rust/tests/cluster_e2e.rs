@@ -1,0 +1,163 @@
+//! Integration: the networked cluster end to end — coordinator, TCP
+//! node servers, router, migration over the wire, failure handling.
+
+use asura::algo::asura::AsuraPlacer;
+use asura::algo::chash::ConsistentHash;
+use asura::algo::straw::StrawBuckets;
+use asura::algo::{Membership, NodeId, Placer};
+use asura::coordinator::Coordinator;
+use asura::net::router::Router;
+use asura::net::server::NodeServer;
+use asura::stats::Histogram;
+use std::net::SocketAddr;
+
+fn spawn_cluster(n: usize) -> (Vec<NodeServer>, Vec<(NodeId, SocketAddr)>) {
+    let servers: Vec<NodeServer> = (0..n).map(|_| NodeServer::spawn().unwrap()).collect();
+    let addrs = servers
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i as NodeId, s.addr()))
+        .collect();
+    (servers, addrs)
+}
+
+#[test]
+fn router_uniformity_matches_paper_ordering() {
+    // Miniature Table III: ASURA and Straw beat CH@VN=32 on uniformity.
+    let writes = 6_000u64;
+    let nodes = 12;
+    let mut results = Vec::new();
+    for algo in ["chash", "straw", "asura"] {
+        let (servers, addrs) = spawn_cluster(nodes);
+        let maxvar = match algo {
+            "chash" => {
+                let mut p = ConsistentHash::new(32);
+                for &(i, _) in &addrs {
+                    p.add_node(i, 1.0);
+                }
+                run_writes(p, &addrs, writes)
+            }
+            "straw" => {
+                let mut p = StrawBuckets::new();
+                for &(i, _) in &addrs {
+                    p.add_node(i, 1.0);
+                }
+                run_writes(p, &addrs, writes)
+            }
+            _ => {
+                let mut p = AsuraPlacer::new();
+                for &(i, _) in &addrs {
+                    p.add_node(i, 1.0);
+                }
+                run_writes(p, &addrs, writes)
+            }
+        };
+        results.push((algo, maxvar));
+        drop(servers);
+    }
+    let get = |name: &str| results.iter().find(|&&(a, _)| a == name).unwrap().1;
+    assert!(
+        get("asura") < get("chash"),
+        "asura {:.2}% should beat chash {:.2}%",
+        get("asura"),
+        get("chash")
+    );
+    assert!(
+        get("straw") < get("chash"),
+        "straw should beat chash on uniformity"
+    );
+}
+
+fn run_writes<P: Placer>(placer: P, addrs: &[(NodeId, SocketAddr)], writes: u64) -> f64 {
+    let mut router = Router::connect(placer, addrs, 1).unwrap();
+    let mut rng = asura::prng::SplitMix64::new(0x7E57);
+    for _ in 0..writes {
+        router.set(rng.next_u64(), &[1u8]).unwrap();
+    }
+    let stats = router.stats().unwrap();
+    let counts: Vec<(NodeId, u64)> = stats.iter().map(|&(n, k, _)| (n, k)).collect();
+    Histogram::from_counts(counts).max_variability_pct()
+}
+
+#[test]
+fn coordinator_scale_out_preserves_optimality_over_the_wire() {
+    let mut coord = Coordinator::new(1);
+    for i in 0..6 {
+        coord.spawn_node(i, 1.0).unwrap();
+    }
+    let keys = 2_000u64;
+    for k in 0..keys {
+        coord.set(k, &k.to_le_bytes()).unwrap();
+    }
+    let before = coord.node_key_counts().unwrap();
+    let report = coord.spawn_node(6, 1.0).unwrap();
+    let after = coord.node_key_counts().unwrap();
+    // Old nodes only lost keys (monotone drain toward the new node).
+    for (&(n, b), &(n2, a)) in before.iter().zip(after.iter()) {
+        assert_eq!(n, n2);
+        assert!(a <= b, "node {n} grew during scale-out ({b} -> {a})");
+    }
+    let new_count = after.iter().find(|&&(n, _)| n == 6).unwrap().1;
+    assert_eq!(new_count as usize, report.moved);
+    // Moved ≈ 1/7 of keys.
+    let expect = keys as f64 / 7.0;
+    assert!(
+        (report.moved as f64 - expect).abs() < 6.0 * expect.sqrt(),
+        "moved {}",
+        report.moved
+    );
+    coord.verify_all_readable().unwrap();
+}
+
+#[test]
+fn coordinator_heterogeneous_capacities_balance_bytes() {
+    let mut coord = Coordinator::new(1);
+    coord.spawn_node(0, 1.0).unwrap();
+    coord.spawn_node(1, 2.0).unwrap();
+    coord.spawn_node(2, 1.0).unwrap();
+    for k in 0..4_000u64 {
+        coord.set(k, b"0123456789abcdef").unwrap();
+    }
+    let counts = coord.node_key_counts().unwrap();
+    let total: u64 = counts.iter().map(|&(_, c)| c).sum();
+    let share1 = counts.iter().find(|&&(n, _)| n == 1).unwrap().1 as f64 / total as f64;
+    assert!((share1 - 0.5).abs() < 0.05, "2x node share {share1}");
+}
+
+#[test]
+fn router_errors_cleanly_on_unknown_node() {
+    let (servers, addrs) = spawn_cluster(2);
+    // Placer knows 3 nodes; router only has connections for 2.
+    let mut p = AsuraPlacer::new();
+    for i in 0..3 {
+        p.add_node(i, 1.0);
+    }
+    let mut router = Router::connect(p, &addrs, 1).unwrap();
+    let mut hit_missing = false;
+    for k in 0..200u64 {
+        match router.set(k, &[0]) {
+            Ok(()) => {}
+            Err(e) => {
+                assert_eq!(e.kind(), std::io::ErrorKind::NotFound);
+                hit_missing = true;
+            }
+        }
+    }
+    assert!(hit_missing, "some keys must route to the unknown node");
+    drop(servers);
+}
+
+#[test]
+fn node_server_survives_malformed_input() {
+    let server = NodeServer::spawn().unwrap();
+    // Raw garbage on one connection...
+    {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(server.addr()).unwrap();
+        s.write_all(b"GARBAGE COMMAND\n").unwrap();
+    }
+    // ...must not take the server down for others.
+    let mut c = asura::net::client::Conn::connect(server.addr()).unwrap();
+    c.set(1, b"ok".to_vec()).unwrap();
+    assert_eq!(c.get(1).unwrap(), Some(b"ok".to_vec()));
+}

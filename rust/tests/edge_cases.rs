@@ -1,0 +1,163 @@
+//! Edge cases and failure paths across the stack.
+
+use asura::algo::asura::rng::{top_level_for, AsuraRng};
+use asura::algo::asura::AsuraPlacer;
+use asura::algo::chash::ConsistentHash;
+use asura::algo::straw::{StrawBuckets, StrawVariant};
+use asura::algo::{Membership, Placer};
+use asura::cluster::Cluster;
+use asura::runtime::Engine;
+
+#[test]
+fn single_node_cluster_gets_everything() {
+    let mut asura = AsuraPlacer::new();
+    asura.add_node(7, 0.3);
+    let mut ch = ConsistentHash::new(100);
+    ch.add_node(7, 0.3);
+    let mut straw = StrawBuckets::new();
+    straw.add_node(7, 0.3);
+    for id in 0..500u64 {
+        assert_eq!(asura.place(id), 7);
+        assert_eq!(ch.place(id), 7);
+        assert_eq!(straw.place(id), 7);
+    }
+}
+
+/// Crossing the 16-segment boundary changes the ASURA random number
+/// range (top level 0 → 1). Placement of old data must be unaffected
+/// going up (§2.B extension) and restored coming back down (shrink).
+#[test]
+fn range_extension_boundary_roundtrip() {
+    let mut p = AsuraPlacer::new();
+    for i in 0..16 {
+        p.add_node(i, 1.0);
+    }
+    assert_eq!(top_level_for(p.table().m()), 0);
+    let before: Vec<u32> = (0..20_000u64).map(|i| p.place(i)).collect();
+    p.add_node(16, 1.0); // m=17 → top level 1: range doubles
+    assert_eq!(top_level_for(p.table().m()), 1);
+    for (i, &b) in before.iter().enumerate() {
+        let a = p.place(i as u64);
+        assert!(a == b || a == 16, "extension moved {i} to an old node");
+    }
+    p.remove_node(16); // trailing hole trimmed → range shrinks back
+    assert_eq!(top_level_for(p.table().m()), 0);
+    let after: Vec<u32> = (0..20_000u64).map(|i| p.place(i)).collect();
+    assert_eq!(before, after, "shrink must restore placement exactly");
+}
+
+#[test]
+fn extreme_capacity_ratio_still_places_proportionally() {
+    let mut p = AsuraPlacer::new();
+    p.add_node(0, 0.001); // 1000:1 capacity ratio
+    p.add_node(1, 1.0);
+    let mut counts = [0u64; 2];
+    for id in 0..300_000u64 {
+        counts[p.place(id) as usize] += 1;
+    }
+    let share0 = counts[0] as f64 / 300_000.0;
+    let want = 0.001 / 1.001;
+    assert!(
+        (share0 - want).abs() < 5.0 * (want / 300_000.0f64).sqrt() + 2e-4,
+        "tiny node share {share0} vs {want}"
+    );
+}
+
+#[test]
+fn asura_rng_wide_line_smoke() {
+    // Lines far beyond any artifact capacity (level ~23).
+    let m = 100_000_000u32;
+    let mut rng = AsuraRng::new(0xFEED, m);
+    for _ in 0..50 {
+        let (x, _) = rng.next_number();
+        assert!(x.int_part < m);
+    }
+}
+
+#[test]
+fn straw2_replicas_distinct_under_weights() {
+    let mut s = StrawBuckets::with_variant(StrawVariant::Straw2);
+    for i in 0..6 {
+        s.add_node(i, 0.5 + i as f64);
+    }
+    let mut out = Vec::new();
+    for id in 0..300u64 {
+        s.place_replicas(id, 4, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+        assert_eq!(out[0], s.place(id));
+    }
+}
+
+#[test]
+fn cluster_replicas_capped_by_node_count() {
+    // Ask for 3 replicas on a 2-node cluster: caps to 2, no panic.
+    let mut c = Cluster::new(AsuraPlacer::new(), 3);
+    c.add_node(0, 1.0);
+    c.add_node(1, 1.0);
+    c.set(1, vec![9]);
+    assert_eq!(c.get(1), Some(vec![9]));
+    let total: usize = c.node_ids().iter().map(|&n| c.node(n).unwrap().len()).sum();
+    assert_eq!(total, 2);
+    // Growing the cluster re-establishes the full replica count on
+    // rebalance.
+    c.add_node(2, 1.0);
+    c.check_consistency().unwrap();
+    let total: usize = c.node_ids().iter().map(|&n| c.node(n).unwrap().len()).sum();
+    assert_eq!(total, 3);
+}
+
+#[test]
+fn engine_open_missing_dir_errors_helpfully() {
+    let Err(err) = Engine::open("/nonexistent/asura-artifacts") else {
+        panic!("open of missing dir must fail");
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn engine_rejects_unknown_artifact() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let Ok(mut engine) = Engine::open(&dir) else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    assert!(engine.load("no_such_artifact").is_err());
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join("asura_corrupt_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), b"{not json").unwrap();
+    assert!(Engine::open(&dir).is_err());
+}
+
+#[test]
+fn removing_every_node_then_rebuilding_works() {
+    let mut p = AsuraPlacer::new();
+    for i in 0..4 {
+        p.add_node(i, 1.0);
+    }
+    for i in 0..4 {
+        p.remove_node(i);
+    }
+    assert_eq!(p.node_count(), 0);
+    assert_eq!(p.table().m(), 0);
+    p.add_node(9, 2.0);
+    assert_eq!(p.place(123), 9);
+}
+
+#[test]
+fn chash_remove_to_single_vnode_ring_still_works() {
+    let mut ch = ConsistentHash::new(1);
+    ch.add_node(0, 1.0);
+    ch.add_node(1, 1.0);
+    ch.remove_node(0);
+    for id in 0..100u64 {
+        assert_eq!(ch.place(id), 1);
+    }
+}

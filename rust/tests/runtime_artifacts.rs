@@ -1,0 +1,145 @@
+//! Runtime integration: the PJRT-executed artifacts must agree with the
+//! Rust scalar path on every lane, and the analytics outputs must be
+//! internally consistent. Requires `make artifacts` (skips with a clear
+//! message otherwise).
+
+use asura::algo::asura::AsuraPlacer;
+use asura::algo::{Membership, Placer};
+use asura::prng::fold64;
+use asura::runtime::{BulkPlacer, Engine};
+
+fn engine_or_skip() -> Option<Engine> {
+    let dir = std::env::var("ASURA_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    match Engine::open(&dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP runtime tests: {err:#}");
+            None
+        }
+    }
+}
+
+fn cluster(n: u32) -> AsuraPlacer {
+    let mut p = AsuraPlacer::new();
+    for i in 0..n {
+        p.add_node(i, 1.0);
+    }
+    p
+}
+
+#[test]
+fn bulk_place_matches_scalar() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut bulk = BulkPlacer::with_variant(engine, 1024, 256);
+    let placer = cluster(37);
+    let ids: Vec<u32> = (0..3000u64).map(fold64).collect();
+    let segs = bulk.place(placer.table(), &ids).unwrap();
+    for (i, &id32) in ids.iter().enumerate() {
+        assert_eq!(segs[i], placer.place_seg32(id32), "lane {i}");
+    }
+}
+
+#[test]
+fn bulk_place_heterogeneous_capacities() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut bulk = BulkPlacer::with_variant(engine, 1024, 256);
+    let mut placer = AsuraPlacer::new();
+    for (i, cap) in [0.5, 1.0, 2.5, 4.0, 0.25].iter().enumerate() {
+        placer.add_node(i as u32, *cap);
+    }
+    let ids: Vec<u32> = (0..2048u64).map(fold64).collect();
+    let segs = bulk.place(placer.table(), &ids).unwrap();
+    for (i, &id32) in ids.iter().enumerate() {
+        assert_eq!(segs[i], placer.place_seg32(id32));
+    }
+}
+
+#[test]
+fn bulk_hist_counts_are_consistent() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut bulk = BulkPlacer::with_variant(engine, 1024, 256);
+    let placer = cluster(16);
+    let ids: Vec<u32> = (0..4096u64).map(fold64).collect();
+    let hist = bulk.hist(placer.table(), &ids).unwrap();
+    assert_eq!(hist.segs.len(), ids.len());
+    // Histogram equals direct recount.
+    let mut seg_counts = vec![0u32; 256];
+    for &s in &hist.segs {
+        seg_counts[s as usize] += 1;
+    }
+    assert_eq!(&hist.seg_counts[..], &seg_counts[..]);
+    let total: u64 = hist.node_counts.iter().map(|&c| c as u64).sum();
+    assert_eq!(total, ids.len() as u64);
+    // Node counts equal scalar placement counts.
+    let mut node_counts = vec![0u32; 256];
+    for &id in &ids {
+        node_counts[placer.table().owner(placer.place_seg32(id)).unwrap() as usize] += 1;
+    }
+    assert_eq!(&hist.node_counts[..16], &node_counts[..16]);
+}
+
+#[test]
+fn bulk_movement_matches_membership_change() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut bulk = BulkPlacer::with_variant(engine, 1024, 256);
+    let before = cluster(10);
+    let mut after = before.clone();
+    after.add_node(10, 1.0);
+    let ids: Vec<u32> = (0..4096u64).map(fold64).collect();
+    let mv = bulk.movement(before.table(), after.table(), &ids).unwrap();
+    let mut moved = 0u64;
+    for (i, &id) in ids.iter().enumerate() {
+        let b = before.place_seg32(id);
+        let a = after.place_seg32(id);
+        assert_eq!(mv.before[i], b);
+        assert_eq!(mv.after[i], a);
+        if b != a {
+            moved += 1;
+            // optimal movement: every mover goes to the new node's segment
+            assert_eq!(after.table().owner(a), Some(10));
+        }
+    }
+    assert_eq!(mv.moved, moved);
+    let frac = moved as f64 / ids.len() as f64;
+    assert!((frac - 1.0 / 11.0).abs() < 0.03, "moved fraction {frac}");
+}
+
+#[test]
+fn bulk_straw_matches_scalar() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut bulk = BulkPlacer::with_variant(engine, 1024, 256);
+    let mut straw = asura::algo::straw::StrawBuckets::new();
+    for i in 0..20u32 {
+        straw.add_node(i, 1.0);
+    }
+    let node_ids: Vec<u32> = (0..20).collect();
+    let factors = vec![65536u32; 20];
+    let ids: Vec<u32> = (0..2000u64).map(fold64).collect();
+    let got = bulk.straw(&node_ids, &factors, &ids).unwrap();
+    for (i, &id) in ids.iter().enumerate() {
+        assert_eq!(got[i], straw.place32(id), "lane {i}");
+    }
+}
+
+#[test]
+fn engine_reports_artifacts_and_platform() {
+    let Some(mut engine) = engine_or_skip() else { return };
+    assert!(engine.platform().to_lowercase().contains("cpu")
+        || !engine.platform().is_empty());
+    let names = engine.artifact_names();
+    assert!(names.iter().any(|n| n.starts_with("asura_place")));
+    // Loading twice hits the cache (same pointer-compiled executable).
+    engine.load("asura_place_b1024_m256").unwrap();
+    engine.load("asura_place_b1024_m256").unwrap();
+}
+
+#[test]
+fn oversized_table_is_rejected() {
+    let Some(engine) = engine_or_skip() else { return };
+    let mut bulk = BulkPlacer::with_variant(engine, 1024, 256);
+    let placer = cluster(300); // 300 segments > 256 capacity
+    let err = bulk.place(placer.table(), &[1, 2, 3]).unwrap_err();
+    assert!(err.to_string().contains("capacity"), "{err}");
+}
