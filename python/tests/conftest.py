@@ -1,5 +1,21 @@
+import importlib.util
 import os
 import sys
 
 # Make `compile` importable when pytest runs from python/ or the repo root.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _missing(module):
+    return importlib.util.find_spec(module) is None
+
+
+# Skip-if-no-deps: the suite must collect cleanly on hosts (and CI runners)
+# without the optional scientific stack, instead of erroring at import.
+collect_ignore = []
+if _missing("jax"):
+    collect_ignore += ["test_aot.py", "test_kernel.py", "test_model.py", "test_ref.py"]
+if _missing("hypothesis"):
+    for name in ("test_kernel.py", "test_ref.py"):
+        if name not in collect_ignore:
+            collect_ignore.append(name)

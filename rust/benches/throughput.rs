@@ -1,0 +1,21 @@
+//! Bench: concurrent data-plane throughput — the seed single-threaded
+//! `Router` vs the epoch-snapshot `RouterPool` (8 workers, pipeline
+//! depth 32) on the uniform, zipf and churn-during-rebalance scenarios.
+//!
+//! Emits `BENCH_throughput.json` next to the working directory so later
+//! PRs have a perf trajectory to regress against. The paper-era claim
+//! this extends: placement is sub-microsecond (Fig. 5), so the wire path
+//! must be batched and sharded before placement cost is even visible.
+
+use asura::loadgen::{run_suite, uniform_speedup, SuiteConfig};
+
+fn main() {
+    println!("== throughput: single-threaded router vs RouterPool ==");
+    let cfg = SuiteConfig::default();
+    let reports = run_suite(&cfg).expect("throughput suite");
+    match uniform_speedup(&reports) {
+        Some(s) if s >= 4.0 => println!("OK: speedup {s:.1}x meets the 4x floor"),
+        Some(s) => println!("WARNING: speedup {s:.1}x below the 4x floor on this host"),
+        None => println!("WARNING: baseline missing from reports"),
+    }
+}

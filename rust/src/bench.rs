@@ -25,7 +25,12 @@ impl Measurement {
     pub fn report(&self) -> String {
         format!(
             "{:<40} {:>12.1} ns/iter (median {:>10.1}, σ {:>8.1}, {} × {} iters)",
-            self.name, self.mean_ns, self.median_ns, self.stddev_ns, self.samples, self.iters_per_sample
+            self.name,
+            self.mean_ns,
+            self.median_ns,
+            self.stddev_ns,
+            self.samples,
+            self.iters_per_sample
         )
     }
 }

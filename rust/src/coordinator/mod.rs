@@ -9,8 +9,21 @@
 //! The paper notes that any node can take the coordination role and the
 //! correspondence table is tiny (Table II: 8N bytes), so coordination is
 //! not a SPOF; here the role is a plain struct the leader process holds.
+//!
+//! ## Concurrent data plane
+//!
+//! Every membership epoch is published as an immutable
+//! [`snapshot::PlacerSnapshot`] through a shared [`snapshot::SnapshotCell`]
+//! ([`Coordinator::snapshot_cell`]), which router threads read lock-free
+//! while rebalance proceeds. Migration is two-phase around the swap:
+//! values are **copied** to their new holders first, the new snapshot is
+//! **published**, and only then are the old copies **deleted** — so a
+//! reader routing by either the old or the new epoch finds every datum,
+//! and a reader that races the delete phase recovers with one
+//! refresh-and-retry (see `net::pool`).
 
 pub mod metrics;
+pub mod snapshot;
 
 use crate::algo::asura::AsuraPlacer;
 use crate::algo::{DatumId, Membership, NodeId, Placer};
@@ -19,8 +32,10 @@ use crate::cluster::MigrationReport;
 use crate::net::client::Conn;
 use crate::net::server::NodeServer;
 use metrics::Metrics;
+use snapshot::{PlacerSnapshot, SnapshotCell};
 use std::collections::HashMap;
 use std::net::SocketAddr;
+use std::sync::Arc;
 
 /// A storage node under coordination: server handle + control conn.
 struct Member {
@@ -30,6 +45,14 @@ struct Member {
     server: Option<NodeServer>,
 }
 
+/// A key mid-migration: copied to `new_set`, not yet deleted from the
+/// `old_set` members it is leaving.
+struct PendingMove {
+    key: DatumId,
+    old_set: Vec<NodeId>,
+    new_set: Vec<NodeId>,
+}
+
 /// The coordinator process state.
 pub struct Coordinator {
     placer: AsuraPlacer,
@@ -37,6 +60,7 @@ pub struct Coordinator {
     index: MetaIndex,
     epoch: u64,
     replicas: usize,
+    cell: Arc<SnapshotCell>,
     pub metrics: Metrics,
     /// Keys under management (coordinator-side registry used only to
     /// drive migrations; the authoritative data lives on the nodes).
@@ -45,12 +69,14 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(replicas: usize) -> Self {
+        let replicas = replicas.max(1);
         Self {
             placer: AsuraPlacer::new(),
             members: HashMap::new(),
             index: MetaIndex::new(replicas),
             epoch: 0,
-            replicas: replicas.max(1),
+            replicas,
+            cell: SnapshotCell::new(PlacerSnapshot::empty(replicas)),
             metrics: Metrics::new(),
             keys: Vec::new(),
         }
@@ -58,6 +84,37 @@ impl Coordinator {
 
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// The publication point router threads subscribe to.
+    pub fn snapshot_cell(&self) -> Arc<SnapshotCell> {
+        Arc::clone(&self.cell)
+    }
+
+    /// The currently published snapshot.
+    pub fn snapshot(&self) -> Arc<PlacerSnapshot> {
+        self.cell.load()
+    }
+
+    /// Publish the current epoch as an immutable snapshot. Addresses are
+    /// derived from the placer's membership so snapshot coherence holds
+    /// even while `members` still carries a draining node.
+    fn publish_snapshot(&self) {
+        let addrs: Vec<(NodeId, SocketAddr)> = self
+            .placer
+            .nodes()
+            .into_iter()
+            .map(|n| {
+                let m = self.members.get(&n).expect("placer node without member");
+                (n, m.addr)
+            })
+            .collect();
+        self.cell.publish(PlacerSnapshot {
+            epoch: self.epoch,
+            placer: self.placer.clone(),
+            addrs,
+            replicas: self.replicas,
+        });
     }
 
     pub fn placer(&self) -> &AsuraPlacer {
@@ -117,6 +174,22 @@ impl Coordinator {
         Ok(report)
     }
 
+    /// Two-phase migration around snapshot publication: copy every moved
+    /// key to its new holders, publish the new epoch, then delete the old
+    /// copies. Readers on the pre-swap snapshot keep hitting the old
+    /// holders until the delete phase; readers that race a delete recover
+    /// with one refresh-and-retry.
+    fn migrate(
+        &mut self,
+        candidates: Vec<DatumId>,
+        old_sets: HashMap<DatumId, Vec<NodeId>>,
+    ) -> anyhow::Result<MigrationReport> {
+        let (moves, report) = self.copy_phase(candidates, &old_sets)?;
+        self.publish_snapshot();
+        self.delete_phase(moves)?;
+        Ok(report)
+    }
+
     /// Decommission a node: migrate its data away, drop it from the
     /// table, shut its server down (when owned).
     pub fn decommission(&mut self, id: NodeId) -> anyhow::Result<MigrationReport> {
@@ -159,22 +232,27 @@ impl Coordinator {
         keys.map(|k| (k, self.replica_set(k))).collect()
     }
 
-    /// Execute a migration plan over the wire.
-    fn migrate(
+    /// Copy phase: fetch each moved key from a surviving holder and store
+    /// it on every *new* holder. Old copies are left in place for the
+    /// still-routing pre-swap readers.
+    fn copy_phase(
         &mut self,
         candidates: Vec<DatumId>,
-        old_sets: HashMap<DatumId, Vec<NodeId>>,
-    ) -> anyhow::Result<MigrationReport> {
+        old_sets: &HashMap<DatumId, Vec<NodeId>>,
+    ) -> anyhow::Result<(Vec<PendingMove>, MigrationReport)> {
         let mut report = MigrationReport {
             checked: candidates.len(),
             total_keys: self.keys.len(),
             ..Default::default()
         };
+        let mut moves = Vec::new();
         for key in candidates {
             let new_set = self.replica_set(key);
             let old_set = &old_sets[&key];
+            // Refresh metadata under the post-change placer whether or not
+            // the key moves (its ADDITION NUMBER may have been consumed).
+            self.index.insert(&self.placer, key);
             if *old_set == new_set {
-                self.index.insert(&self.placer, key);
                 continue;
             }
             report.moved += 1;
@@ -191,13 +269,6 @@ impl Coordinator {
             let value =
                 value.ok_or_else(|| anyhow::anyhow!("datum {key} lost during migration"))?;
             report.bytes_moved += value.len() as u64 * (new_set.len() as u64);
-            for n in old_set {
-                if !new_set.contains(n) {
-                    if let Some(m) = self.members.get_mut(n) {
-                        m.conn.del(key)?;
-                    }
-                }
-            }
             for n in &new_set {
                 if !old_set.contains(n) {
                     let m = self
@@ -207,9 +278,28 @@ impl Coordinator {
                     m.conn.set(key, value.clone())?;
                 }
             }
-            self.index.insert(&self.placer, key);
+            moves.push(PendingMove {
+                key,
+                old_set: old_set.clone(),
+                new_set,
+            });
         }
-        Ok(report)
+        Ok((moves, report))
+    }
+
+    /// Delete phase: drop the copies left behind on the old holders. Runs
+    /// strictly after the new snapshot is published.
+    fn delete_phase(&mut self, moves: Vec<PendingMove>) -> anyhow::Result<()> {
+        for mv in moves {
+            for n in &mv.old_set {
+                if !mv.new_set.contains(n) {
+                    if let Some(m) = self.members.get_mut(n) {
+                        m.conn.del(mv.key)?;
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Data-plane write through the coordinator's own connections.
@@ -274,6 +364,7 @@ impl Coordinator {
 
 #[cfg(test)]
 mod tests {
+    use super::snapshot::SnapshotReader;
     use super::*;
 
     #[test]
@@ -320,6 +411,34 @@ mod tests {
         let counts = coord.node_key_counts().unwrap();
         let total: u64 = counts.iter().map(|&(_, c)| c).sum();
         assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn snapshots_publish_on_every_epoch() {
+        let mut coord = Coordinator::new(1);
+        assert_eq!(coord.snapshot().epoch, 0);
+        for i in 0..3 {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        let snap = coord.snapshot();
+        assert_eq!(snap.epoch, 3);
+        assert_eq!(snap.placer.node_count(), 3);
+        assert!(snap.is_coherent());
+        for k in 0..50u64 {
+            coord.set(k, b"v").unwrap();
+        }
+        let cell = coord.snapshot_cell();
+        let mut reader = SnapshotReader::new(Arc::clone(&cell));
+        assert_eq!(reader.current().epoch, 3);
+        coord.spawn_node(3, 1.0).unwrap();
+        assert_eq!(reader.current().epoch, 4);
+        assert!(reader.current().addr_of(3).is_some());
+        coord.decommission(0).unwrap();
+        let snap = reader.current();
+        assert_eq!(snap.epoch, 5);
+        assert!(snap.addr_of(0).is_none());
+        assert!(snap.is_coherent());
+        assert_eq!(coord.verify_all_readable().unwrap(), 50);
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Epoch-snapshot publication: the coordinator's concurrent data-plane
+//! contract.
+//!
+//! The control plane (membership changes, migration) and the data plane
+//! (per-op placement) meet at exactly one point: an immutable
+//! [`PlacerSnapshot`] — placer + epoch + node→address map — published
+//! through a [`SnapshotCell`] by atomic `Arc` swap. Any number of router
+//! threads read placement without coordinating with the control plane:
+//!
+//! - a snapshot is immutable after publication, so a reader can never
+//!   observe a torn state (placer from epoch *e*, addresses from *e+1*);
+//! - [`SnapshotReader`] caches the current `Arc` per thread and revalidates
+//!   with a single atomic generation load per op, so the steady-state hot
+//!   path takes no lock and touches no shared cache line besides the
+//!   generation counter;
+//! - publication is a pointer swap under a briefly-held write lock, so
+//!   rebalance never stalls behind the data plane.
+//!
+//! This is the same shape as RisingWave's versioned vnode mappings and
+//! the cluster-map swap in Ceph-style systems: readers pin a version,
+//! writers publish the next one, and correctness across the swap is
+//! handled by the migration protocol (copy → publish → delete; see
+//! [`crate::coordinator::Coordinator`]).
+
+use crate::algo::asura::AsuraPlacer;
+use crate::algo::{DatumId, NodeId, Placer};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// One immutable epoch of cluster state: everything the data plane needs
+/// to route an op.
+#[derive(Clone, Debug)]
+pub struct PlacerSnapshot {
+    /// Membership epoch this snapshot was built from (monotone).
+    pub epoch: u64,
+    /// The placement function at this epoch.
+    pub placer: AsuraPlacer,
+    /// Node id → server address, ascending by node id.
+    pub addrs: Vec<(NodeId, SocketAddr)>,
+    /// Replication factor the cluster was configured with.
+    pub replicas: usize,
+}
+
+impl PlacerSnapshot {
+    /// Empty pre-membership snapshot (epoch 0, no nodes).
+    pub fn empty(replicas: usize) -> Self {
+        PlacerSnapshot {
+            epoch: 0,
+            placer: AsuraPlacer::new(),
+            addrs: Vec::new(),
+            replicas: replicas.max(1),
+        }
+    }
+
+    /// Address of `node`, if it is a member at this epoch.
+    pub fn addr_of(&self, node: NodeId) -> Option<SocketAddr> {
+        self.addrs
+            .binary_search_by_key(&node, |&(n, _)| n)
+            .ok()
+            .map(|i| self.addrs[i].1)
+    }
+
+    /// Replica set of `key` at this epoch (primary first), capped at the
+    /// live node count.
+    pub fn replica_set(&self, key: DatumId, out: &mut Vec<NodeId>) {
+        let r = self.replicas.min(self.placer.node_count());
+        self.placer.place_replicas(key, r, out);
+    }
+
+    /// Internal consistency check (used by the linearizability tests):
+    /// the address map and the placer must describe the same membership.
+    pub fn is_coherent(&self) -> bool {
+        let placer_nodes = self.placer.nodes();
+        placer_nodes.len() == self.addrs.len()
+            && placer_nodes
+                .iter()
+                .zip(self.addrs.iter())
+                .all(|(&p, &(a, _))| p == a)
+    }
+}
+
+/// Shared publication point: single writer (the coordinator), any number
+/// of concurrent readers.
+pub struct SnapshotCell {
+    generation: AtomicU64,
+    slot: RwLock<Arc<PlacerSnapshot>>,
+}
+
+impl SnapshotCell {
+    pub fn new(initial: PlacerSnapshot) -> Arc<SnapshotCell> {
+        Arc::new(SnapshotCell {
+            generation: AtomicU64::new(0),
+            slot: RwLock::new(Arc::new(initial)),
+        })
+    }
+
+    /// Publish a new snapshot. Epochs must be monotone — the single
+    /// writer (the coordinator) guarantees this; debug builds assert it.
+    pub fn publish(&self, snapshot: PlacerSnapshot) {
+        let next = Arc::new(snapshot);
+        let mut slot = self.slot.write().expect("snapshot lock poisoned");
+        debug_assert!(
+            next.epoch >= slot.epoch,
+            "epoch regression: {} -> {}",
+            slot.epoch,
+            next.epoch
+        );
+        *slot = next;
+        drop(slot);
+        // Readers revalidate on this counter; bumping it after the swap
+        // means a reader that sees the new generation is guaranteed to
+        // load the new (or a newer) snapshot.
+        self.generation.fetch_add(1, Ordering::Release);
+    }
+
+    /// Current snapshot (clones the `Arc`, does not copy the placer).
+    pub fn load(&self) -> Arc<PlacerSnapshot> {
+        self.slot.read().expect("snapshot lock poisoned").clone()
+    }
+
+    /// Publication counter. Changes whenever a snapshot is published.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+}
+
+/// Per-thread cached view of the published snapshot.
+///
+/// `current()` is the data-plane hot path: one atomic load, and only on
+/// a generation change (a rebalance) the read-lock refresh.
+pub struct SnapshotReader {
+    cell: Arc<SnapshotCell>,
+    cached: Arc<PlacerSnapshot>,
+    generation: u64,
+}
+
+impl SnapshotReader {
+    /// Fresh reader handle for a data-plane thread.
+    pub fn new(cell: Arc<SnapshotCell>) -> SnapshotReader {
+        SnapshotReader {
+            generation: cell.generation(),
+            cached: cell.load(),
+            cell,
+        }
+    }
+
+    /// The freshest published snapshot.
+    pub fn current(&mut self) -> &Arc<PlacerSnapshot> {
+        let published = self.cell.generation();
+        if published != self.generation {
+            self.cached = self.cell.load();
+            self.generation = published;
+        }
+        &self.cached
+    }
+
+    /// Force a refresh (used by retry paths that suspect a stale view).
+    pub fn refresh(&mut self) -> &Arc<PlacerSnapshot> {
+        self.generation = self.cell.generation();
+        self.cached = self.cell.load();
+        &self.cached
+    }
+
+    /// The snapshot this reader last observed, without revalidating.
+    pub fn pinned(&self) -> &Arc<PlacerSnapshot> {
+        &self.cached
+    }
+
+    /// Generation the reader last observed (sampled at refresh time).
+    pub fn observed_generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Live generation of the underlying cell. Optimistic retry loops
+    /// compare this against [`Self::observed_generation`] to detect a
+    /// publication that raced their probe.
+    pub fn cell_generation(&self) -> u64 {
+        self.cell.generation()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::Membership;
+
+    fn snapshot_with_nodes(epoch: u64, n: u32) -> PlacerSnapshot {
+        let mut placer = AsuraPlacer::new();
+        let mut addrs = Vec::new();
+        for i in 0..n {
+            placer.add_node(i, 1.0);
+            addrs.push((i, format!("127.0.0.1:{}", 7000 + i).parse().unwrap()));
+        }
+        PlacerSnapshot {
+            epoch,
+            placer,
+            addrs,
+            replicas: 1,
+        }
+    }
+
+    #[test]
+    fn publish_and_load_roundtrip() {
+        let cell = SnapshotCell::new(PlacerSnapshot::empty(1));
+        assert_eq!(cell.load().epoch, 0);
+        cell.publish(snapshot_with_nodes(3, 5));
+        let snap = cell.load();
+        assert_eq!(snap.epoch, 3);
+        assert_eq!(snap.placer.node_count(), 5);
+        assert!(snap.is_coherent());
+        assert_eq!(snap.addr_of(2), Some("127.0.0.1:7002".parse().unwrap()));
+        assert_eq!(snap.addr_of(9), None);
+    }
+
+    #[test]
+    fn reader_revalidates_only_on_generation_change() {
+        let cell = SnapshotCell::new(snapshot_with_nodes(1, 2));
+        let mut reader = SnapshotReader::new(Arc::clone(&cell));
+        assert_eq!(reader.current().epoch, 1);
+        assert_eq!(reader.pinned().epoch, 1);
+        cell.publish(snapshot_with_nodes(2, 3));
+        // Pinned view is stale until the next current() call.
+        assert_eq!(reader.pinned().epoch, 1);
+        assert_eq!(reader.current().epoch, 2);
+        assert_eq!(reader.current().placer.node_count(), 3);
+    }
+
+    #[test]
+    fn concurrent_readers_never_observe_torn_snapshots() {
+        // Writer publishes epochs 1..=64 where epoch e has e nodes; readers
+        // hammer current() and assert every observed snapshot is coherent
+        // (node count == epoch, addrs match placer) and epochs are monotone.
+        let cell = SnapshotCell::new(snapshot_with_nodes(0, 0));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let cell = Arc::clone(&cell);
+            let stop = Arc::clone(&stop);
+            handles.push(std::thread::spawn(move || {
+                let mut reader = SnapshotReader::new(Arc::clone(&cell));
+                let mut last_epoch = 0u64;
+                let mut observed = 0u64;
+                loop {
+                    let snap = reader.current();
+                    assert!(snap.is_coherent(), "torn snapshot at epoch {}", snap.epoch);
+                    assert_eq!(snap.placer.node_count() as u64, snap.epoch);
+                    assert!(snap.epoch >= last_epoch, "epoch went backwards");
+                    last_epoch = snap.epoch;
+                    observed += 1;
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                observed
+            }));
+        }
+        for e in 1..=64u32 {
+            cell.publish(snapshot_with_nodes(e as u64, e));
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            assert!(h.join().unwrap() > 0);
+        }
+        assert_eq!(cell.load().epoch, 64);
+    }
+}

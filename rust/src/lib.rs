@@ -5,9 +5,11 @@
 //!
 //! - **L3 (this crate)**: the storage-cluster coordinator — placement
 //!   algorithms ([`algo`]), the cluster substrate ([`cluster`]), a
-//!   memcached-like KV network layer ([`net`]), the coordinator
-//!   ([`coordinator`]), and the paper's complete evaluation harness
-//!   ([`experiments`]).
+//!   memcached-like KV network layer ([`net`]) with a concurrent
+//!   epoch-snapshot data plane ([`coordinator::snapshot`],
+//!   [`net::pool`]), the coordinator ([`coordinator`]), the paper's
+//!   complete evaluation harness ([`experiments`]) and a closed-loop
+//!   throughput harness ([`loadgen`]).
 //! - **L2/L1 (build-time python, `python/compile/`)**: JAX batch-placement
 //!   graphs with Pallas kernels, AOT-lowered to HLO text and executed from
 //!   Rust via PJRT ([`runtime`]). Python never runs on the request path.
@@ -21,6 +23,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod experiments;
 pub mod fixed;
+pub mod loadgen;
 pub mod net;
 pub mod prng;
 pub mod runtime;

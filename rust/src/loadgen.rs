@@ -1,0 +1,405 @@
+//! Closed-loop throughput harness: drive a [`Scenario`] against the seed
+//! single-threaded [`Router`] or the concurrent [`RouterPool`] and report
+//! ops/sec and tail latency per scenario.
+//!
+//! This is the measurement substrate behind `asura bench-serve` and
+//! `cargo bench --bench throughput`. Results serialize to
+//! `BENCH_throughput.json` so successive PRs can regress against a
+//! recorded trajectory.
+
+use crate::algo::Placer;
+use crate::coordinator::Coordinator;
+use crate::net::pool::{PoolConfig, RouterPool};
+use crate::net::router::Router;
+use crate::stats::Summary;
+use crate::util::json::Json;
+use crate::workload::{value_for, Op, Scenario};
+use std::time::Instant;
+
+/// One measured (scenario, engine) cell.
+#[derive(Clone, Debug)]
+pub struct ThroughputReport {
+    pub scenario: String,
+    /// `router` (seed single-threaded baseline) or `pool_w{W}_d{D}`.
+    pub engine: String,
+    pub ops: u64,
+    pub wall_s: f64,
+    pub ops_per_sec: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// GETs that needed a snapshot refresh + replay (epoch races).
+    pub retried: u64,
+    /// GETs missing even after the replay — must be 0 on a correct run.
+    pub lost: u64,
+    /// Membership epochs observed while the ops executed (min, max).
+    pub epochs: (u64, u64),
+}
+
+impl ThroughputReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<8} {:<14} {:>9} ops {:>10.0} ops/s  p50 {:>7.0} µs  p99 {:>7.0} µs  \
+             retried {:>3}  lost {:>2}  epochs {}..{}",
+            self.scenario,
+            self.engine,
+            self.ops,
+            self.ops_per_sec,
+            self.p50_us,
+            self.p99_us,
+            self.retried,
+            self.lost,
+            self.epochs.0,
+            self.epochs.1
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("ops", Json::Num(self.ops as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("ops_per_sec", Json::Num(self.ops_per_sec)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("retried", Json::Num(self.retried as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("epoch_min", Json::Num(self.epochs.0 as f64)),
+            ("epoch_max", Json::Num(self.epochs.1 as f64)),
+        ])
+    }
+}
+
+fn report(
+    scenario: &str,
+    engine: String,
+    ops: u64,
+    wall_s: f64,
+    latency: &Summary,
+    retried_lost: (u64, u64),
+    epochs: (u64, u64),
+) -> ThroughputReport {
+    ThroughputReport {
+        scenario: scenario.to_string(),
+        engine,
+        ops,
+        wall_s,
+        ops_per_sec: if wall_s > 0.0 { ops as f64 / wall_s } else { 0.0 },
+        p50_us: latency.percentile(50.0) / 1e3,
+        p99_us: latency.percentile(99.0) / 1e3,
+        retried: retried_lost.0,
+        lost: retried_lost.1,
+        epochs,
+    }
+}
+
+/// Split a trace into its write and read phases. Concurrent engines need
+/// the barrier: with one flat stream, a worker could execute a read
+/// before another worker has executed its write.
+fn split_phases(ops: Vec<Op>) -> (Vec<Op>, Vec<Op>) {
+    ops.into_iter().partition(|op| matches!(op, Op::Set { .. }))
+}
+
+/// Drive `ops` one blocking round trip at a time through the seed
+/// [`Router`] — the baseline the pool is measured against.
+pub fn run_router_baseline(
+    coord: &Coordinator,
+    ops: Vec<Op>,
+    scenario: &str,
+) -> anyhow::Result<ThroughputReport> {
+    let snap = coord.snapshot();
+    let mut router = Router::connect(snap.placer.clone(), &snap.addrs, snap.replicas)?;
+    let mut latency = Summary::new();
+    let (sets, gets) = split_phases(ops);
+    let total = (sets.len() + gets.len()) as u64;
+    let mut lost = 0u64;
+    let t0 = Instant::now();
+    for op in sets.into_iter().chain(gets) {
+        let t = Instant::now();
+        match op {
+            Op::Set { key, size } => router.set(key, &value_for(key, size))?,
+            Op::Get { key } => {
+                if router.get(key)?.is_none() {
+                    lost += 1;
+                }
+            }
+        }
+        latency.push(t.elapsed().as_nanos() as f64);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let epochs = (snap.epoch, snap.epoch);
+    Ok(report(
+        scenario,
+        "router".to_string(),
+        total,
+        wall_s,
+        &latency,
+        (0, lost),
+        epochs,
+    ))
+}
+
+/// Drive `ops` through a [`RouterPool`] (write phase, barrier, read
+/// phase with hit verification).
+pub fn run_pool(
+    coord: &Coordinator,
+    cfg: &PoolConfig,
+    ops: Vec<Op>,
+    scenario: &str,
+) -> anyhow::Result<ThroughputReport> {
+    let cell = coord.snapshot_cell();
+    let engine = format!("pool_w{}_d{}", cfg.workers, cfg.pipeline_depth);
+    let pool = RouterPool::connect(
+        &cell,
+        PoolConfig {
+            verify_hits: true,
+            ..cfg.clone()
+        },
+    )?;
+    let (sets, gets) = split_phases(ops);
+    let t0 = Instant::now();
+    let mut res = pool.run(sets)?;
+    let reads = pool.run(gets)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let epochs = (res.epoch_min.min(reads.epoch_min), res.epoch_max.max(reads.epoch_max));
+    res.latency.absorb(&reads.latency);
+    Ok(report(
+        scenario,
+        engine,
+        res.ops + reads.ops,
+        wall_s,
+        &res.latency,
+        (res.retried + reads.retried, res.lost + reads.lost),
+        epochs,
+    ))
+}
+
+/// The churn scenario: preload through the coordinator, then race a
+/// read-only pool batch against membership changes (`add_node` followed
+/// by a decommission — two epoch bumps with live migration).
+pub fn run_churn(
+    coord: &mut Coordinator,
+    cfg: &PoolConfig,
+    scenario: &Scenario,
+    seed: u64,
+) -> anyhow::Result<ThroughputReport> {
+    for &k in &scenario.preload_keys(seed) {
+        coord.set(k, &value_for(k, 16))?;
+    }
+    let ops = scenario.ops(seed);
+    let total = ops.len() as u64;
+    let cell = coord.snapshot_cell();
+    let engine = format!("pool_w{}_d{}", cfg.workers, cfg.pipeline_depth);
+    let pool = RouterPool::connect(
+        &cell,
+        PoolConfig {
+            verify_hits: true,
+            ..cfg.clone()
+        },
+    )?;
+    let t0 = Instant::now();
+    let pending = pool.submit(ops);
+    // Membership churn racing the in-flight batch: grow by one node,
+    // then decommission one of the originals.
+    let members: Vec<u32> = coord.placer().nodes();
+    let new_id = members.iter().max().copied().unwrap_or(0) + 1;
+    coord.spawn_node(new_id, 1.0)?;
+    coord.decommission(members[0])?;
+    let res = pending.wait()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    anyhow::ensure!(res.ops == total, "churn batch dropped ops");
+    Ok(report(
+        scenario.name(),
+        engine,
+        res.ops,
+        wall_s,
+        &res.latency,
+        (res.retried, res.lost),
+        (res.epoch_min, res.epoch_max),
+    ))
+}
+
+/// Full-suite configuration (CLI `bench-serve` and the bench binary).
+#[derive(Clone, Debug)]
+pub struct SuiteConfig {
+    pub nodes: u32,
+    pub keys: u64,
+    pub read_ops: u64,
+    pub value_size: u32,
+    pub workers: usize,
+    pub pipeline_depth: usize,
+    pub zipf_alpha: f64,
+    pub seed: u64,
+    /// Where to write the JSON trajectory (`None` = don't).
+    pub out_json: Option<String>,
+}
+
+impl Default for SuiteConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 8,
+            keys: 4_000,
+            read_ops: 16_000,
+            value_size: 16,
+            workers: 8,
+            pipeline_depth: 32,
+            zipf_alpha: 1.0,
+            seed: 0xA5,
+            out_json: Some("BENCH_throughput.json".to_string()),
+        }
+    }
+}
+
+/// Run the three scenarios (uniform baseline + pool, zipf pool, churn
+/// pool), print one line each, emit the JSON trajectory, and return the
+/// reports. The headline number is the pool-vs-router speedup on the
+/// uniform scenario.
+pub fn run_suite(cfg: &SuiteConfig) -> anyhow::Result<Vec<ThroughputReport>> {
+    let pool_cfg = PoolConfig {
+        workers: cfg.workers,
+        pipeline_depth: cfg.pipeline_depth,
+        verify_hits: true,
+    };
+    let mut reports = Vec::new();
+
+    // -- uniform: seed router baseline vs pool on identical op streams --
+    let uniform = Scenario::Uniform {
+        keys: cfg.keys,
+        value_size: cfg.value_size,
+        read_ops: cfg.read_ops,
+    };
+    {
+        let mut coord = Coordinator::new(1);
+        for i in 0..cfg.nodes {
+            coord.spawn_node(i, 1.0)?;
+        }
+        let r = run_router_baseline(&coord, uniform.ops(cfg.seed), uniform.name())?;
+        println!("{}", r.line());
+        reports.push(r);
+        let r = run_pool(&coord, &pool_cfg, uniform.ops(cfg.seed), uniform.name())?;
+        println!("{}", r.line());
+        reports.push(r);
+    }
+
+    // -- zipf popularity through the pool --
+    let zipf = Scenario::Zipf {
+        keys: cfg.keys,
+        value_size: cfg.value_size,
+        read_ops: cfg.read_ops,
+        alpha: cfg.zipf_alpha,
+    };
+    {
+        let mut coord = Coordinator::new(1);
+        for i in 0..cfg.nodes {
+            coord.spawn_node(i, 1.0)?;
+        }
+        let r = run_pool(&coord, &pool_cfg, zipf.ops(cfg.seed), zipf.name())?;
+        println!("{}", r.line());
+        reports.push(r);
+    }
+
+    // -- reads racing membership churn --
+    let churn = Scenario::Churn {
+        keys: cfg.keys,
+        read_ops: cfg.read_ops,
+    };
+    {
+        let mut coord = Coordinator::new(1);
+        for i in 0..cfg.nodes {
+            coord.spawn_node(i, 1.0)?;
+        }
+        let r = run_churn(&mut coord, &pool_cfg, &churn, cfg.seed)?;
+        println!("{}", r.line());
+        reports.push(r);
+    }
+
+    if let Some(speedup) = uniform_speedup(&reports) {
+        println!(
+            "pool speedup vs single-threaded router (uniform): {speedup:.1}x \
+             ({} workers × depth {})",
+            cfg.workers, cfg.pipeline_depth
+        );
+    }
+    let lost: u64 = reports.iter().map(|r| r.lost).sum();
+    if lost > 0 {
+        anyhow::bail!("{lost} ops lost across the suite — data-plane bug");
+    }
+    if let Some(path) = &cfg.out_json {
+        write_json(path, cfg, &reports)?;
+        println!("wrote {path}");
+    }
+    Ok(reports)
+}
+
+/// Pool-vs-router ops/sec ratio on the uniform scenario, if both ran.
+pub fn uniform_speedup(reports: &[ThroughputReport]) -> Option<f64> {
+    let base = reports
+        .iter()
+        .find(|r| r.scenario == "uniform" && r.engine == "router")?;
+    let pool = reports
+        .iter()
+        .find(|r| r.scenario == "uniform" && r.engine.starts_with("pool"))?;
+    if base.ops_per_sec > 0.0 {
+        Some(pool.ops_per_sec / base.ops_per_sec)
+    } else {
+        None
+    }
+}
+
+/// Serialize the suite to the perf-trajectory JSON file.
+pub fn write_json(
+    path: &str,
+    cfg: &SuiteConfig,
+    reports: &[ThroughputReport],
+) -> anyhow::Result<()> {
+    let results: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+    let mut fields = vec![
+        ("bench", Json::Str("throughput".to_string())),
+        ("nodes", Json::Num(cfg.nodes as f64)),
+        ("keys", Json::Num(cfg.keys as f64)),
+        ("read_ops", Json::Num(cfg.read_ops as f64)),
+        ("value_size", Json::Num(cfg.value_size as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("pipeline_depth", Json::Num(cfg.pipeline_depth as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("results", Json::Arr(results)),
+    ];
+    if let Some(speedup) = uniform_speedup(reports) {
+        fields.push(("uniform_speedup_pool_vs_router", Json::Num(speedup)));
+    }
+    std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_runs_small_and_emits_json() {
+        let dir = std::env::temp_dir().join("asura_loadgen_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_throughput.json");
+        let cfg = SuiteConfig {
+            nodes: 3,
+            keys: 120,
+            read_ops: 240,
+            value_size: 8,
+            workers: 2,
+            pipeline_depth: 8,
+            out_json: Some(path.to_str().unwrap().to_string()),
+            ..Default::default()
+        };
+        let reports = run_suite(&cfg).unwrap();
+        assert_eq!(reports.len(), 4);
+        assert!(reports.iter().all(|r| r.lost == 0));
+        assert!(reports.iter().all(|r| r.ops > 0));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("throughput"));
+        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 4);
+        let churn = &v.get("results").unwrap().as_arr().unwrap()[3];
+        assert_eq!(churn.get("scenario").unwrap().as_str(), Some("churn"));
+        assert_eq!(churn.get("lost").unwrap().as_u64(), Some(0));
+    }
+}

@@ -13,6 +13,9 @@
 //! asura serve   --nodes N [--replicas R --keys K]   demo cluster lifecycle
 //!               --config cluster.json               (weighted membership)
 //!               --join 0=host:port,1=host:port      (external node daemons)
+//! asura bench-serve [--nodes N --keys K --reads R]  throughput harness:
+//!               [--workers W --depth D --seed S]    single Router vs
+//!               [--out BENCH_throughput.json]       RouterPool, 3 scenarios
 //! asura node    --port P                            standalone storage node
 //! asura place   --id X --nodes N [--algo asura|chash|straw]
 //! asura info    [--artifacts DIR]                   PJRT + artifact info
@@ -33,6 +36,7 @@ fn main() {
     let result = match cmd {
         "experiment" => run_experiment(&args),
         "serve" => run_serve(&args),
+        "bench-serve" => run_bench_serve(&args),
         "node" => run_node(&args),
         "place" => run_place(&args),
         "info" => run_info(&args),
@@ -97,8 +101,11 @@ fn run_experiment(args: &Args) -> anyhow::Result<()> {
             exp::actual_usage::run(&cfg, out)?;
         }
         "appendixb" => {
-            let mut cfg = exp::appendix_b::AppendixBConfig::default();
-            cfg.samples = args.get_u64("samples", cfg.samples);
+            let default = exp::appendix_b::AppendixBConfig::default();
+            let cfg = exp::appendix_b::AppendixBConfig {
+                samples: args.get_u64("samples", default.samples),
+                ..default
+            };
             exp::appendix_b::run(&cfg, out)?;
         }
         "movement" => {
@@ -252,6 +259,36 @@ fn run_serve(args: &Args) -> anyhow::Result<()> {
         hist.max_variability_pct(),
         hist.max_variability_weighted_pct(coord.placer())
     );
+    Ok(())
+}
+
+/// Throughput harness: seed single-threaded `Router` vs the concurrent
+/// `RouterPool` across the uniform / zipf / churn scenarios, emitting the
+/// `BENCH_throughput.json` perf trajectory.
+fn run_bench_serve(args: &Args) -> anyhow::Result<()> {
+    let default = asura::loadgen::SuiteConfig::default();
+    let cfg = asura::loadgen::SuiteConfig {
+        nodes: args.get_u64("nodes", default.nodes as u64) as u32,
+        keys: args.get_u64("keys", default.keys),
+        read_ops: args.get_u64("reads", default.read_ops),
+        value_size: args.get_u64("value-size", default.value_size as u64) as u32,
+        workers: args.get_u64("workers", default.workers as u64) as usize,
+        pipeline_depth: args.get_u64("depth", default.pipeline_depth as u64) as usize,
+        zipf_alpha: args.get_f64("alpha", default.zipf_alpha),
+        seed: args.get_u64("seed", default.seed),
+        out_json: Some(
+            args.get_or("out", default.out_json.as_deref().unwrap_or("BENCH_throughput.json"))
+                .to_string(),
+        ),
+    };
+    anyhow::ensure!(cfg.nodes >= 1, "--nodes must be >= 1");
+    anyhow::ensure!(cfg.keys >= 1, "--keys must be >= 1");
+    println!(
+        "bench-serve: {} nodes, {} keys, {} reads, {} workers × depth {}",
+        cfg.nodes, cfg.keys, cfg.read_ops, cfg.workers, cfg.pipeline_depth
+    );
+    let reports = asura::loadgen::run_suite(&cfg)?;
+    anyhow::ensure!(!reports.is_empty(), "no scenarios ran");
     Ok(())
 }
 

@@ -67,6 +67,25 @@ impl Conn {
             other => Err(bad(other)),
         }
     }
+
+    /// Pipeline a batch: write every request back-to-back, flush once,
+    /// then read the responses in order.
+    ///
+    /// The text protocol is self-delimiting, so any number of requests may
+    /// be in flight on one connection and the server answers strictly in
+    /// request order — this turns N blocking round trips into one. The
+    /// returned vector aligns index-for-index with `reqs`.
+    pub fn pipeline(&mut self, reqs: &[Request]) -> std::io::Result<Vec<Response>> {
+        for req in reqs {
+            write_request(&mut self.writer, req)?;
+        }
+        self.writer.flush()?;
+        let mut out = Vec::with_capacity(reqs.len());
+        for _ in reqs {
+            out.push(read_response(&mut self.reader)?);
+        }
+        Ok(out)
+    }
 }
 
 fn bad(resp: Response) -> std::io::Error {

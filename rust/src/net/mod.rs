@@ -8,11 +8,13 @@
 //! (serialize → syscall → parse) while removing cross-machine noise.
 
 pub mod client;
+pub mod pool;
 pub mod protocol;
 pub mod router;
 pub mod server;
 
 pub use client::Conn;
+pub use pool::{BatchResult, PoolConfig, RouterPool};
 pub use protocol::{Request, Response};
 pub use router::Router;
 pub use server::NodeServer;

@@ -1,0 +1,578 @@
+//! `RouterPool`: the concurrent, pipelined data plane.
+//!
+//! The seed [`super::router::Router`] is a single thread issuing one
+//! blocking round trip per op. This module shards that work across N
+//! worker threads, each owning its own persistent connections and a
+//! [`SnapshotReader`] onto the coordinator's epoch snapshots:
+//!
+//! - **snapshot reads are lock-free** on the steady-state path (one atomic
+//!   generation load per op group; see [`crate::coordinator::snapshot`]);
+//! - **ops are pipelined**: each worker partitions an op group by target
+//!   node and flushes up to `pipeline_depth` requests per connection in a
+//!   single round trip ([`Conn::pipeline`]);
+//! - **epoch bumps are survived by reads**: a GET that misses because it
+//!   raced the delete phase of a migration refreshes the snapshot and
+//!   replays against the new epoch's replica set; only an op that *still*
+//!   misses counts as lost ([`BatchResult::lost`] — zero across a clean
+//!   rebalance).
+//!
+//! **Known limit:** SETs concurrent with a *live* migration are not
+//! fenced — a write landing on a holder between the migration's copy and
+//! delete phases can be superseded by the migrated (older) copy, and
+//! pool-written keys are not in the coordinator's migration registry.
+//! The churn scenarios therefore race reads only; write fencing is a
+//! ROADMAP open item ("Writer registry").
+
+use super::client::Conn;
+use super::protocol::{Request, Response};
+use crate::algo::{DatumId, NodeId, Placer};
+use crate::coordinator::snapshot::{SnapshotCell, SnapshotReader};
+use crate::stats::Summary;
+use crate::workload::{value_for, Op};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Bound on replay rounds in the retry paths. Defensive only: each
+/// extra round requires another concurrent epoch publication, so the
+/// loops terminate as soon as churn does.
+const MAX_REPLAYS: usize = 8;
+
+/// Pool sizing and behavior knobs.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Worker threads, each with its own connections to every node.
+    pub workers: usize,
+    /// Max requests in flight per connection per flush.
+    pub pipeline_depth: usize,
+    /// Treat a GET miss as a routing anomaly: refresh the snapshot and
+    /// replay against the fresh replica set, counting survivors in
+    /// [`BatchResult::lost`]. Scenario drivers enable this when every
+    /// read targets a previously written key.
+    pub verify_hits: bool,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            workers: 8,
+            pipeline_depth: 32,
+            verify_hits: false,
+        }
+    }
+}
+
+/// Aggregated outcome of an op batch.
+#[derive(Clone, Debug, Default)]
+pub struct BatchResult {
+    pub ops: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// GETs that needed a snapshot refresh + replay to find their datum
+    /// (reads that raced a migration's delete phase).
+    pub retried: u64,
+    /// GETs still missing after the replay — misrouted or lost data.
+    pub lost: u64,
+    /// Lowest / highest membership epoch observed while executing.
+    pub epoch_min: u64,
+    pub epoch_max: u64,
+    /// Per-op latency samples in nanoseconds: the round-trip time of the
+    /// flush that carried the op, or, for a retried GET, the wall time of
+    /// its replay. Replicated SETs contribute one sample per target node.
+    pub latency: Summary,
+}
+
+impl BatchResult {
+    fn new() -> Self {
+        BatchResult {
+            epoch_min: u64::MAX,
+            ..Default::default()
+        }
+    }
+
+    fn note_epoch(&mut self, epoch: u64) {
+        self.epoch_min = self.epoch_min.min(epoch);
+        self.epoch_max = self.epoch_max.max(epoch);
+    }
+
+    fn merge(&mut self, other: &BatchResult) {
+        self.ops += other.ops;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.retried += other.retried;
+        self.lost += other.lost;
+        self.epoch_min = self.epoch_min.min(other.epoch_min);
+        self.epoch_max = self.epoch_max.max(other.epoch_max);
+        self.latency.absorb(&other.latency);
+    }
+}
+
+enum Job {
+    Run(Vec<Op>, mpsc::Sender<std::io::Result<BatchResult>>),
+}
+
+/// Handle to a batch in flight; `wait` collects every worker's result.
+pub struct PendingBatch {
+    rx: mpsc::Receiver<std::io::Result<BatchResult>>,
+    expected: usize,
+}
+
+impl PendingBatch {
+    pub fn wait(self) -> std::io::Result<BatchResult> {
+        let mut out = BatchResult::new();
+        for _ in 0..self.expected {
+            let part = self
+                .rx
+                .recv()
+                .map_err(|_| other_err("pool worker died before reporting".to_string()))??;
+            out.merge(&part);
+        }
+        Ok(out)
+    }
+}
+
+struct WorkerHandle {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.tx.take(); // closing the channel stops the worker loop
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Sharded, pipelined router pool over a snapshot cell.
+pub struct RouterPool {
+    workers: Vec<WorkerHandle>,
+}
+
+impl RouterPool {
+    /// Spawn `cfg.workers` router threads subscribed to `cell`.
+    /// Connections are opened lazily per worker as ops route to nodes.
+    pub fn connect(cell: &Arc<SnapshotCell>, cfg: PoolConfig) -> std::io::Result<RouterPool> {
+        assert!(cfg.workers >= 1, "pool needs at least one worker");
+        assert!(cfg.pipeline_depth >= 1, "pipeline depth must be >= 1");
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let reader = SnapshotReader::new(Arc::clone(cell));
+            let cfg = cfg.clone();
+            let (tx, rx) = mpsc::channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("router-{w}"))
+                .spawn(move || worker_loop(reader, rx, cfg))?;
+            workers.push(WorkerHandle {
+                tx: Some(tx),
+                handle: Some(handle),
+            });
+        }
+        Ok(RouterPool { workers })
+    }
+
+    /// Shard `ops` across the workers and return without blocking; call
+    /// [`PendingBatch::wait`] to collect. Per-worker op order is
+    /// preserved (op i and op j of one shard execute in order).
+    pub fn submit(&self, ops: Vec<Op>) -> PendingBatch {
+        let (tx, rx) = mpsc::channel();
+        let shard = ops.len().div_ceil(self.workers.len()).max(1);
+        let mut expected = 0;
+        for (w, chunk) in ops.chunks(shard).enumerate() {
+            self.workers[w]
+                .tx
+                .as_ref()
+                .expect("pool live")
+                .send(Job::Run(chunk.to_vec(), tx.clone()))
+                .expect("pool worker died");
+            expected += 1;
+        }
+        PendingBatch { rx, expected }
+    }
+
+    /// Execute `ops` to completion across the pool.
+    pub fn run(&self, ops: Vec<Op>) -> std::io::Result<BatchResult> {
+        self.submit(ops).wait()
+    }
+}
+
+fn worker_loop(reader: SnapshotReader, rx: mpsc::Receiver<Job>, cfg: PoolConfig) {
+    let mut worker = Worker {
+        reader,
+        conns: HashMap::new(),
+        cfg,
+    };
+    while let Ok(Job::Run(ops, done)) = rx.recv() {
+        let _ = done.send(worker.run_ops(&ops));
+    }
+}
+
+struct Worker {
+    reader: SnapshotReader,
+    conns: HashMap<NodeId, (SocketAddr, Conn)>,
+    cfg: PoolConfig,
+}
+
+impl Worker {
+    /// Connection to `node`, (re)established if absent or re-addressed.
+    fn conn(&mut self, node: NodeId, addr: SocketAddr) -> std::io::Result<&mut Conn> {
+        match self.conns.entry(node) {
+            Entry::Occupied(e) => {
+                let slot = e.into_mut();
+                if slot.0 != addr {
+                    *slot = (addr, Conn::connect(addr)?);
+                }
+                Ok(&mut slot.1)
+            }
+            Entry::Vacant(v) => Ok(&mut v.insert((addr, Conn::connect(addr)?)).1),
+        }
+    }
+
+    fn run_ops(&mut self, ops: &[Op]) -> std::io::Result<BatchResult> {
+        let mut res = BatchResult::new();
+        for group in ops.chunks(self.cfg.pipeline_depth) {
+            self.run_group(group, &mut res)?;
+        }
+        Ok(res)
+    }
+
+    /// Execute one pipeline-depth group under a single snapshot.
+    fn run_group(&mut self, group: &[Op], res: &mut BatchResult) -> std::io::Result<()> {
+        let snap = Arc::clone(self.reader.current());
+        // Staleness baseline for this group: replay paths may refresh the
+        // reader mid-group, but the group keeps routing by `snap`, so
+        // "stale" must be judged against the generation `snap` was
+        // pinned at — not the reader's latest refresh.
+        let group_generation = self.reader.observed_generation();
+        res.note_epoch(snap.epoch);
+        if snap.placer.node_count() == 0 {
+            return Err(other_err("no live nodes in the published snapshot".to_string()));
+        }
+        // Partition by target node, preserving per-node op order. A SET
+        // fans out to its full replica set; a GET targets the primary.
+        let mut by_node: HashMap<NodeId, Vec<Request>> = HashMap::new();
+        let mut replicas: Vec<NodeId> = Vec::new();
+        for op in group {
+            match *op {
+                Op::Set { key, size } => {
+                    snap.replica_set(key, &mut replicas);
+                    for &n in &replicas {
+                        by_node.entry(n).or_default().push(Request::Set {
+                            key,
+                            value: value_for(key, size),
+                        });
+                    }
+                }
+                Op::Get { key } => {
+                    by_node
+                        .entry(snap.placer.place(key))
+                        .or_default()
+                        .push(Request::Get { key });
+                }
+            }
+        }
+        res.ops += group.len() as u64;
+        // One pipelined round trip per node; the flush RTT is every
+        // carried op's latency sample.
+        let mut node_ids: Vec<NodeId> = by_node.keys().copied().collect();
+        node_ids.sort_unstable();
+        let mut missed: Vec<DatumId> = Vec::new();
+        for node in node_ids {
+            let reqs = &by_node[&node];
+            let addr = snap
+                .addr_of(node)
+                .ok_or_else(|| other_err(format!("no address for node {node}")))?;
+            match self.flush_node(node, addr, reqs, res, &mut missed) {
+                Ok(()) => {}
+                Err(e)
+                    if is_conn_error(&e)
+                        && self.reader.cell_generation() != group_generation =>
+                {
+                    // Stale route: this group's snapshot predates an epoch
+                    // bump and the node may have left the cluster (its
+                    // listener is gone). Replay the node's ops one by one
+                    // under the fresh snapshot.
+                    self.replay_node_group(reqs, res, &mut missed)?;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Misses under verify_hits: replay over the freshest replica set
+        // (the datum may have migrated under us).
+        for key in missed {
+            res.retried += 1;
+            if self.replay_get(key, res)? {
+                res.hits += 1;
+            } else {
+                res.misses += 1;
+                res.lost += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// One pipelined round trip to `node`; on failure the connection is
+    /// discarded so the next contact reconnects.
+    fn flush_node(
+        &mut self,
+        node: NodeId,
+        addr: SocketAddr,
+        reqs: &[Request],
+        res: &mut BatchResult,
+        missed: &mut Vec<DatumId>,
+    ) -> std::io::Result<()> {
+        let t0 = Instant::now();
+        let resps = match self.conn(node, addr).and_then(|c| c.pipeline(reqs)) {
+            Ok(resps) => resps,
+            Err(e) => {
+                self.conns.remove(&node);
+                return Err(e);
+            }
+        };
+        let rtt_ns = t0.elapsed().as_nanos() as f64;
+        for (req, resp) in reqs.iter().zip(&resps) {
+            match (req, resp) {
+                (Request::Set { .. }, Response::Stored) => res.latency.push(rtt_ns),
+                (Request::Get { .. }, Response::Value(_)) => {
+                    res.hits += 1;
+                    res.latency.push(rtt_ns);
+                }
+                (Request::Get { key }, Response::NotFound) => {
+                    if self.cfg.verify_hits {
+                        // Latency for a deferred GET is recorded by its
+                        // replay, not here — one sample per op.
+                        missed.push(*key);
+                    } else {
+                        res.misses += 1;
+                        res.latency.push(rtt_ns);
+                    }
+                }
+                (_, resp) => {
+                    return Err(other_err(format!("unexpected response {resp:?}")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fallback for a node-group whose flush failed on a stale route:
+    /// re-execute each op individually under the freshest snapshot.
+    fn replay_node_group(
+        &mut self,
+        reqs: &[Request],
+        res: &mut BatchResult,
+        missed: &mut Vec<DatumId>,
+    ) -> std::io::Result<()> {
+        for req in reqs {
+            match req {
+                Request::Set { key, value } => self.replay_set(*key, value, res)?,
+                Request::Get { key } => {
+                    if self.cfg.verify_hits {
+                        // Deferred to the caller's miss loop (counted as
+                        // retried there); no I/O happens for it here.
+                        missed.push(*key);
+                    } else if self.replay_get(*key, res)? {
+                        res.hits += 1;
+                    } else {
+                        res.misses += 1;
+                    }
+                }
+                other => {
+                    return Err(other_err(format!("unexpected request in replay {other:?}")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Replay a SET against the freshest replica set, going around again
+    /// if membership changes under the probe. A target unreachable while
+    /// membership is stable is a real error — failing loudly beats
+    /// silently dropping a write. (This recovers *routing* races only;
+    /// see the module doc for the unfenced write-vs-migration window.)
+    fn replay_set(
+        &mut self,
+        key: DatumId,
+        value: &[u8],
+        res: &mut BatchResult,
+    ) -> std::io::Result<()> {
+        let t0 = Instant::now();
+        let mut replicas: Vec<NodeId> = Vec::new();
+        let mut last_err: Option<std::io::Error> = None;
+        for _ in 0..MAX_REPLAYS {
+            let snap = Arc::clone(self.reader.refresh());
+            res.note_epoch(snap.epoch);
+            snap.replica_set(key, &mut replicas);
+            let mut all_stored = true;
+            for &n in &replicas {
+                let addr = snap
+                    .addr_of(n)
+                    .ok_or_else(|| other_err(format!("no address for node {n}")))?;
+                match self.conn(n, addr).and_then(|c| c.set(key, value.to_vec())) {
+                    Ok(()) => {}
+                    Err(e) if is_conn_error(&e) => {
+                        self.conns.remove(&n);
+                        all_stored = false;
+                        last_err = Some(e);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if all_stored {
+                res.latency.push(t0.elapsed().as_nanos() as f64);
+                return Ok(());
+            }
+            if self.reader.cell_generation() == self.reader.observed_generation() {
+                break;
+            }
+        }
+        Err(last_err
+            .unwrap_or_else(|| other_err(format!("set {key} could not reach its replica set"))))
+    }
+
+    /// Replay a missed GET against the freshest snapshot. If a new
+    /// snapshot lands *while* we probe (a second migration's delete phase
+    /// racing the replay), probe again under it — a miss only counts once
+    /// the membership has been stable across a full probe. A replica that
+    /// is unreachable is skipped the same way (it likely just left the
+    /// cluster); the generation check decides whether to go around again.
+    fn replay_get(&mut self, key: DatumId, res: &mut BatchResult) -> std::io::Result<bool> {
+        let t0 = Instant::now();
+        let mut replicas: Vec<NodeId> = Vec::new();
+        let mut found = false;
+        'rounds: for _ in 0..MAX_REPLAYS {
+            let snap = Arc::clone(self.reader.refresh());
+            res.note_epoch(snap.epoch);
+            snap.replica_set(key, &mut replicas);
+            for &n in &replicas {
+                let addr = snap
+                    .addr_of(n)
+                    .ok_or_else(|| other_err(format!("no address for node {n}")))?;
+                match self.conn(n, addr).and_then(|c| c.get(key)) {
+                    Ok(Some(_)) => {
+                        found = true;
+                        break 'rounds;
+                    }
+                    Ok(None) => {}
+                    Err(e) if is_conn_error(&e) => {
+                        self.conns.remove(&n);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if self.reader.cell_generation() == self.reader.observed_generation() {
+                break; // stable membership and still absent: a real miss
+            }
+        }
+        res.latency.push(t0.elapsed().as_nanos() as f64);
+        Ok(found)
+    }
+}
+
+fn other_err(msg: String) -> std::io::Error {
+    std::io::Error::other(msg)
+}
+
+/// Errors that indicate the peer (not the request) is the problem.
+fn is_conn_error(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::ConnectionRefused
+            | std::io::ErrorKind::ConnectionReset
+            | std::io::ErrorKind::ConnectionAborted
+            | std::io::ErrorKind::BrokenPipe
+            | std::io::ErrorKind::UnexpectedEof
+            | std::io::ErrorKind::TimedOut
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+
+    fn cluster(nodes: u32, replicas: usize) -> Coordinator {
+        let mut coord = Coordinator::new(replicas);
+        for i in 0..nodes {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        coord
+    }
+
+    #[test]
+    fn pool_writes_and_reads_back() {
+        let coord = cluster(4, 1);
+        let cell = coord.snapshot_cell();
+        let pool = RouterPool::connect(
+            &cell,
+            PoolConfig {
+                workers: 3,
+                pipeline_depth: 8,
+                verify_hits: true,
+            },
+        )
+        .unwrap();
+        let sets: Vec<Op> = (0..500u64).map(|key| Op::Set { key, size: 16 }).collect();
+        let res = pool.run(sets).unwrap();
+        assert_eq!(res.ops, 500);
+        assert_eq!(res.lost, 0);
+        let gets: Vec<Op> = (0..500u64).map(|key| Op::Get { key }).collect();
+        let res = pool.run(gets).unwrap();
+        assert_eq!(res.ops, 500);
+        assert_eq!(res.hits, 500);
+        assert_eq!(res.misses, 0);
+        assert_eq!(res.lost, 0);
+        assert!(res.latency.len() >= 500);
+    }
+
+    #[test]
+    fn pool_replicated_sets_reach_all_replicas() {
+        let coord = cluster(5, 2);
+        let cell = coord.snapshot_cell();
+        let pool = RouterPool::connect(&cell, PoolConfig::default()).unwrap();
+        let sets: Vec<Op> = (0..200u64).map(|key| Op::Set { key, size: 8 }).collect();
+        pool.run(sets).unwrap();
+        // Each key stored twice across the cluster.
+        let snap = cell.load();
+        let total: u64 = {
+            let mut sum = 0;
+            for &(node, addr) in &snap.addrs {
+                let mut c = Conn::connect(addr).unwrap();
+                let (keys, _, _, _) = c.stats().unwrap();
+                assert!(keys > 0, "node {node} got nothing");
+                sum += keys;
+            }
+            sum
+        };
+        assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn pool_survives_epoch_bump_between_batches() {
+        let mut coord = cluster(3, 1);
+        let cell = coord.snapshot_cell();
+        let pool = RouterPool::connect(
+            &cell,
+            PoolConfig {
+                workers: 2,
+                pipeline_depth: 4,
+                verify_hits: true,
+            },
+        )
+        .unwrap();
+        // Preload through the coordinator so migration tracks the keys.
+        for k in 0..300u64 {
+            coord.set(k, &k.to_le_bytes()).unwrap();
+        }
+        coord.spawn_node(3, 1.0).unwrap();
+        let gets: Vec<Op> = (0..300u64).map(|key| Op::Get { key }).collect();
+        let res = pool.run(gets).unwrap();
+        assert_eq!(res.hits, 300);
+        assert_eq!(res.lost, 0);
+        assert_eq!(res.epoch_max, coord.epoch());
+    }
+}

@@ -89,12 +89,12 @@ pub fn read_request<R: BufRead>(r: &mut R) -> std::io::Result<Option<Request>> {
 pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> {
     match req {
         Request::Set { key, value } => {
-            write!(w, "SET {key:x} {}\n", value.len())?;
+            writeln!(w, "SET {key:x} {}", value.len())?;
             w.write_all(value)?;
             w.write_all(b"\n")
         }
-        Request::Get { key } => write!(w, "GET {key:x}\n"),
-        Request::Del { key } => write!(w, "DEL {key:x}\n"),
+        Request::Get { key } => writeln!(w, "GET {key:x}"),
+        Request::Del { key } => writeln!(w, "DEL {key:x}"),
         Request::Stats => w.write_all(b"STATS\n"),
         Request::Ping => w.write_all(b"PING\n"),
         Request::Quit => w.write_all(b"QUIT\n"),
@@ -105,7 +105,7 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
     match resp {
         Response::Stored => w.write_all(b"STORED\n"),
         Response::Value(v) => {
-            write!(w, "VALUE {}\n", v.len())?;
+            writeln!(w, "VALUE {}", v.len())?;
             w.write_all(v)?;
             w.write_all(b"\n")
         }
@@ -116,9 +116,9 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
             bytes,
             sets,
             gets,
-        } => write!(w, "STATS {keys} {bytes} {sets} {gets}\n"),
+        } => writeln!(w, "STATS {keys} {bytes} {sets} {gets}"),
         Response::Pong => w.write_all(b"PONG\n"),
-        Response::Error(e) => write!(w, "ERROR {}\n", e.replace('\n', " ")),
+        Response::Error(e) => writeln!(w, "ERROR {}", e.replace('\n', " ")),
     }
 }
 

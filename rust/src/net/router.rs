@@ -21,7 +21,11 @@ pub struct Router<P: Placer> {
 
 impl<P: Placer> Router<P> {
     /// Connect to every node in `addrs` (node id → server address).
-    pub fn connect(placer: P, addrs: &[(NodeId, SocketAddr)], replicas: usize) -> std::io::Result<Self> {
+    pub fn connect(
+        placer: P,
+        addrs: &[(NodeId, SocketAddr)],
+        replicas: usize,
+    ) -> std::io::Result<Self> {
         assert!(replicas >= 1);
         let mut conns = HashMap::with_capacity(addrs.len());
         for &(node, addr) in addrs {

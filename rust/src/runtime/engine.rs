@@ -1,5 +1,11 @@
 //! PJRT client + artifact loading.
+//!
+//! Compiles against the `xla` binding surface; in offline builds that
+//! surface is provided by `super::xla_stub`, whose client constructor
+//! fails cleanly so every caller degrades to the scalar Rust path. To
+//! use real PJRT, point the `xla` import below at the actual bindings.
 
+use super::xla_stub as xla;
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -119,9 +125,12 @@ impl Engine {
             .ok_or_else(|| anyhow!("manifest entry missing {key}"))?
             .iter()
             .map(|s| {
-                s.as_arr()
-                    .ok_or_else(|| anyhow!("bad shape"))
-                    .map(|dims| dims.iter().filter_map(|d| d.as_u64()).map(|d| d as usize).collect())
+                s.as_arr().ok_or_else(|| anyhow!("bad shape")).map(|dims| {
+                    dims.iter()
+                        .filter_map(|d| d.as_u64())
+                        .map(|d| d as usize)
+                        .collect()
+                })
             })
             .collect()
     }

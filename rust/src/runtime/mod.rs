@@ -11,6 +11,7 @@
 
 pub mod engine;
 pub mod placer;
+mod xla_stub;
 
 pub use engine::{Engine, Executable};
 pub use placer::{BulkPlacer, HistResult, MoveResult};

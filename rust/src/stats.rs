@@ -127,6 +127,11 @@ impl Summary {
         self.samples.push(x);
     }
 
+    /// Absorb another summary's samples (merging per-thread results).
+    pub fn absorb(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+
     pub fn len(&self) -> usize {
         self.samples.len()
     }

@@ -217,7 +217,8 @@ pub mod json {
                             _ => 4,
                         };
                         self.pos = start + width;
-                        let s = std::str::from_utf8(&self.bytes[start..self.pos.min(self.bytes.len())])
+                        let end = self.pos.min(self.bytes.len());
+                        let s = std::str::from_utf8(&self.bytes[start..end])
                             .map_err(|e| e.to_string())?;
                         out.push_str(s);
                     }

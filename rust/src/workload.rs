@@ -68,6 +68,111 @@ pub enum Op {
     Get { key: u64 },
 }
 
+/// Deterministic payload for `key` (`size` bytes), shared by every
+/// driver so a read-back can be validated against the writer.
+pub fn value_for(key: u64, size: u32) -> Vec<u8> {
+    let bytes = key.to_le_bytes();
+    (0..size as usize)
+        .map(|i| bytes[i % 8] ^ (i as u8))
+        .collect()
+}
+
+/// A named, seed-deterministic op stream for the throughput harness.
+///
+/// `Uniform` and `Zipf` are self-contained write-then-read traces;
+/// `Churn` is a read-only stream over a preloaded key space, meant to be
+/// run *while* the coordinator bumps membership epochs (the rebalance
+/// race the epoch-snapshot data plane must survive).
+#[derive(Clone, Debug)]
+pub enum Scenario {
+    Uniform {
+        keys: u64,
+        value_size: u32,
+        read_ops: u64,
+    },
+    Zipf {
+        keys: u64,
+        value_size: u32,
+        read_ops: u64,
+        alpha: f64,
+    },
+    Churn {
+        keys: u64,
+        read_ops: u64,
+    },
+}
+
+impl Scenario {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Uniform { .. } => "uniform",
+            Scenario::Zipf { .. } => "zipf",
+            Scenario::Churn { .. } => "churn",
+        }
+    }
+
+    /// Keys that must be present before the op stream runs. Empty for
+    /// the self-contained scenarios (their traces start with the SETs).
+    pub fn preload_keys(&self, seed: u64) -> Vec<u64> {
+        match *self {
+            Scenario::Churn { keys, .. } => keyspace(keys, seed),
+            _ => Vec::new(),
+        }
+    }
+
+    /// The full op stream, deterministic in `seed`.
+    pub fn ops(&self, seed: u64) -> Vec<Op> {
+        match *self {
+            // α = 0 degenerates Zipf popularity to uniform, so both
+            // write-then-read scenarios share one trace construction.
+            Scenario::Uniform {
+                keys,
+                value_size,
+                read_ops,
+            }
+            | Scenario::Zipf {
+                keys,
+                value_size,
+                read_ops,
+                ..
+            } => {
+                let zipf_alpha = match *self {
+                    Scenario::Zipf { alpha, .. } => alpha,
+                    _ => 0.0,
+                };
+                TraceGen {
+                    keys,
+                    value_size,
+                    read_ops,
+                    zipf_alpha,
+                    seed,
+                }
+                .ops()
+                .collect()
+            }
+            Scenario::Churn { keys, read_ops } => {
+                assert!(
+                    keys >= 1 || read_ops == 0,
+                    "churn reads need a non-empty key space (keys={keys})"
+                );
+                let written = keyspace(keys, seed);
+                let mut rng = SplitMix64::new(seed ^ 0x00C0_FFEE);
+                (0..read_ops)
+                    .map(|_| Op::Get {
+                        key: written[rng.below(keys) as usize],
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// The deterministic key universe scenarios draw from.
+fn keyspace(n: u64, seed: u64) -> Vec<u64> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n).map(|_| rng.next_u64()).collect()
+}
+
 /// Trace generator: `writes` sets over a key space, then a read phase
 /// with Zipf popularity (hot keys) — the shape of the paper's §5.E
 /// workload plus the §5.C skew discussion.
@@ -92,13 +197,19 @@ impl TraceGen {
     }
 
     pub fn ops(&self) -> impl Iterator<Item = Op> + '_ {
+        assert!(
+            self.keys >= 1 || self.read_ops == 0,
+            "a read phase needs a non-empty key space (keys={}, read_ops={})",
+            self.keys,
+            self.read_ops
+        );
         let write_rng = SplitMix64::new(self.seed);
-        let mut keybuf = KeyStream {
+        let keybuf = KeyStream {
             rng: write_rng,
             remaining: self.keys,
         };
         let mut writes = Vec::with_capacity(self.keys as usize);
-        while let Some(k) = keybuf.next() {
+        for k in keybuf {
             writes.push(k);
         }
         let mut zipf = Zipf::new(self.keys.max(1) as usize, self.zipf_alpha, self.seed ^ 0xFF);
@@ -168,6 +279,56 @@ mod tests {
         for &c in &counts {
             assert!((c as f64 - 10_000.0).abs() < 600.0, "{c}");
         }
+    }
+
+    #[test]
+    fn scenario_ops_deterministic_by_seed() {
+        let scenarios = [
+            Scenario::Uniform {
+                keys: 100,
+                value_size: 8,
+                read_ops: 50,
+            },
+            Scenario::Zipf {
+                keys: 100,
+                value_size: 8,
+                read_ops: 50,
+                alpha: 1.0,
+            },
+            Scenario::Churn {
+                keys: 100,
+                read_ops: 50,
+            },
+        ];
+        for s in &scenarios {
+            assert_eq!(s.ops(7), s.ops(7), "{} not deterministic", s.name());
+            assert_ne!(s.ops(7), s.ops(8), "{} ignores seed", s.name());
+        }
+    }
+
+    #[test]
+    fn churn_reads_only_preloaded_keys() {
+        let s = Scenario::Churn {
+            keys: 64,
+            read_ops: 500,
+        };
+        let keys: std::collections::HashSet<u64> = s.preload_keys(3).into_iter().collect();
+        let ops = s.ops(3);
+        assert_eq!(ops.len(), 500);
+        for op in ops {
+            match op {
+                Op::Get { key } => assert!(keys.contains(&key), "key {key} never preloaded"),
+                other => panic!("churn must be read-only, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn value_for_is_deterministic_and_sized() {
+        assert_eq!(value_for(42, 16), value_for(42, 16));
+        assert_eq!(value_for(42, 16).len(), 16);
+        assert_ne!(value_for(42, 16), value_for(43, 16));
+        assert!(value_for(7, 0).is_empty());
     }
 
     #[test]

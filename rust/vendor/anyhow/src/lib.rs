@@ -1,0 +1,197 @@
+//! Vendored, offline-compatible subset of the `anyhow` error API.
+//!
+//! The build environment for this repository has no crates.io access, so
+//! the pieces of `anyhow` the project uses are implemented here as a path
+//! dependency: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`]
+//! macros and the [`Context`] extension trait. Semantics match upstream
+//! where the project relies on them:
+//!
+//! - any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! - `Display` prints the top-level message, `{:#}` prints the full
+//!   `": "`-joined cause chain (what `main.rs` uses for diagnostics);
+//! - `context`/`with_context` wrap an error with a new top-level message.
+//!
+//! If network access ever materializes, this crate can be replaced by the
+//! real `anyhow = "1"` with no source changes elsewhere.
+
+use std::fmt;
+
+/// Error type: a message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `Result` alias defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    fn wrap<M: fmt::Display>(self, message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The `": "`-joined cause chain, root-most last.
+    fn chain_string(&self) -> String {
+        let mut out = self.msg.clone();
+        let mut cur = self.source.as_deref();
+        while let Some(e) = cur {
+            out.push_str(": ");
+            out.push_str(&e.msg);
+            cur = e.source.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain_string())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(ref s) = self.source {
+            write!(f, "\n\nCaused by:\n    {}", s.chain_string())?;
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent (no type can be on both sides).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Box<Error>> = None;
+        for msg in msgs.into_iter().rev() {
+            out = Some(Box::new(Error { msg, source: out }));
+        }
+        *out.expect("at least one message")
+    }
+}
+
+/// Attach context to an error, producing an `anyhow::Result`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "inner cause")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u32> {
+            let r: std::result::Result<u32, std::io::Error> = Err(io_err());
+            let v = r?;
+            Ok(v)
+        }
+        let e = f().unwrap_err();
+        assert_eq!(e.to_string(), "inner cause");
+    }
+
+    #[test]
+    fn context_wraps_and_alternate_prints_chain() {
+        let e: Result<(), std::io::Error> = Err(io_err());
+        let e = e.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: inner cause");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky 7");
+        let e = anyhow!("plain {}", 42);
+        assert_eq!(e.to_string(), "plain 42");
+    }
+}
