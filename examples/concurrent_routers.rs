@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
             workers: 8,
             pipeline_depth: 32,
             verify_hits: true,
+            ..PoolConfig::default()
         },
     )?;
 

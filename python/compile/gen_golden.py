@@ -98,6 +98,46 @@ def main() -> None:
         json.dump(out, f, indent=1, sort_keys=True)
     print(f"wrote {target}")
 
+    target = os.path.join(path, "golden_replicas.json")
+    with open(target, "w") as f:
+        json.dump(gen_replicas(), f, indent=1, sort_keys=True)
+    print(f"wrote {target}")
+
+
+def gen_replicas() -> dict:
+    """Replica-set vectors for `rust/tests/golden_replicas.rs`: full
+    `place_replicas` node lists at RF 1..=3 on equal / weighted /
+    heterogeneous capacity tables (the fault plane's placement
+    contract)."""
+    tables = {
+        "equal9": [1.0] * 9,
+        "weighted6": [0.5, 1.0, 1.5, 2.0, 3.0, 1.0],
+        "hetero12": [0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 1.75, 2.0, 2.5, 3.0, 0.9, 1.1],
+    }
+    # Keep every id below 2**53: the Rust side's minimal JSON numbers
+    # are f64.
+    ids64 = list(range(32)) + [424242, 0x12345678, 987654321012345, 2**53 - 1]
+    out = {}
+    for name, caps in tables.items():
+        lens, owners = ref.segment_table(caps)
+        entries = []
+        for id64 in ids64:
+            id32 = ref.fold64(id64)
+            sets = {}
+            for rf in (1, 2, 3):
+                segs = ref.asura_replicas(id32, lens, owners, rf)
+                sets[str(rf)] = [owners[s] for s in segs]
+            assert sets["1"] == sets["3"][:1] and sets["2"] == sets["3"][:2]
+            assert len(set(sets["3"])) == 3
+            entries.append({"id": id64, "replicas": sets})
+        out[name] = {
+            "caps": caps,
+            "lens_q24": lens,
+            "owners": owners,
+            "placements": entries,
+        }
+    return out
+
 
 if __name__ == "__main__":
     main()

@@ -322,6 +322,77 @@ impl AsuraCluster {
     pub fn histogram(&self) -> Histogram {
         self.inner.histogram()
     }
+
+    /// Simulate a crash: drop node `id` *with its data* (no drain — what
+    /// it held is gone) and return the keys that lost a replica, found
+    /// via the accelerated REMOVE-NUMBERS trigger rather than a full
+    /// scan. The in-process mirror of the networked fault plane
+    /// ([`crate::coordinator::Coordinator::mark_dead`]), cheap enough for
+    /// property tests over random kill scripts.
+    pub fn fail_node(&mut self, id: NodeId) -> Vec<DatumId> {
+        let victim_segs = self.inner.strategy().table().segments_of(id).to_vec();
+        let candidates: Vec<DatumId> = self
+            .index
+            .affected_by_removal(&victim_segs)
+            .into_iter()
+            .collect();
+        self.inner.strategy.remove_node(id);
+        self.inner.nodes.remove(&id);
+        self.inner.epoch += 1;
+        for &k in &candidates {
+            self.index.insert(self.inner.strategy(), k);
+        }
+        candidates
+    }
+
+    /// Re-replicate `keys` (typically [`Self::fail_node`]'s return):
+    /// copy each from a surviving holder to the holders missing it, and
+    /// drop defensive strays. Returns `(repaired, lost)` — `lost` counts
+    /// keys with no surviving copy (every replica died first), which
+    /// are unregistered so the cluster stays consistent.
+    pub fn repair(&mut self, keys: &[DatumId]) -> (usize, usize) {
+        let mut repaired = 0;
+        let mut lost = 0;
+        for &key in keys {
+            let set = self.inner.replica_set(key);
+            let value = set.iter().find_map(|n| {
+                self.inner
+                    .nodes
+                    .get(n)
+                    .and_then(|node| node.peek(key))
+                    .map(|v| v.to_vec())
+            });
+            let Some(value) = value else {
+                if self.inner.keys.remove(&key) {
+                    self.index.remove_key(key);
+                    lost += 1;
+                }
+                continue;
+            };
+            let mut wrote = false;
+            for &n in &set {
+                if let Some(node) = self.inner.nodes.get_mut(&n) {
+                    if !node.contains(key) {
+                        node.set(key, value.clone());
+                        node.migrations_in += 1;
+                        wrote = true;
+                    }
+                }
+            }
+            // Hygiene: a copy on a node outside the current set (ASURA's
+            // prefix stability makes these rare, but overlapping failures
+            // can leave them).
+            for (&nid, node) in self.inner.nodes.iter_mut() {
+                if !set.contains(&nid) {
+                    node.remove(key);
+                }
+            }
+            if wrote {
+                repaired += 1;
+            }
+        }
+        (repaired, lost)
+    }
 }
 
 #[cfg(test)]
@@ -462,6 +533,65 @@ mod tests {
         acc.check_consistency().unwrap();
         for k in 0..800 {
             assert!(acc.get(k).is_some(), "key {k} lost after churn");
+        }
+    }
+
+    #[test]
+    fn fail_node_then_repair_restores_replication() {
+        let mut acc = AsuraCluster::new(2);
+        for i in 0..6 {
+            acc.add_node(i, 1.0);
+        }
+        for k in 0..1500u64 {
+            acc.set(k, vec![7; 8]);
+        }
+        let affected = acc.fail_node(2);
+        assert!(!affected.is_empty());
+        assert!(affected.len() < 1500, "accelerated candidate set");
+        let (repaired, lost) = acc.repair(&affected);
+        assert_eq!(lost, 0, "RF=2 survives a single crash");
+        assert!(repaired > 0);
+        acc.check_consistency().unwrap();
+        for k in 0..1500 {
+            assert_eq!(acc.get(k), Some(vec![7; 8]), "key {k}");
+        }
+    }
+
+    #[test]
+    fn fail_node_at_rf1_loses_exactly_the_victims_data() {
+        let mut acc = AsuraCluster::new(1);
+        for i in 0..5 {
+            acc.add_node(i, 1.0);
+        }
+        for k in 0..1000u64 {
+            acc.set(k, vec![1; 4]);
+        }
+        let on_victim = acc.cluster().node(3).unwrap().len();
+        let affected = acc.fail_node(3);
+        let (repaired, lost) = acc.repair(&affected);
+        assert_eq!(repaired, 0, "nothing to copy from at RF=1");
+        assert_eq!(lost, on_victim, "a crash at RF=1 loses the victim's share");
+        acc.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn overlapping_failures_at_rf3_survive() {
+        let mut acc = AsuraCluster::new(3);
+        for i in 0..8 {
+            acc.add_node(i, 1.0);
+        }
+        for k in 0..1200u64 {
+            acc.set(k, vec![9; 6]);
+        }
+        // Two crashes back to back, repair only after both: every key
+        // still has at least one survivor out of its three replicas.
+        let mut affected = acc.fail_node(1);
+        affected.extend(acc.fail_node(5));
+        let (_, lost) = acc.repair(&affected);
+        assert_eq!(lost, 0, "RF=3 survives two overlapping failures");
+        acc.check_consistency().unwrap();
+        for k in 0..1200 {
+            assert!(acc.get(k).is_some(), "key {k} lost");
         }
     }
 

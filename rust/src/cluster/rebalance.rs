@@ -127,7 +127,11 @@ impl MetaIndex {
     }
 
     /// Keys that must move (or re-replicate) when the owner of `segs`
-    /// is **removed** — the REMOVE NUMBERS trigger.
+    /// is **removed** — the REMOVE NUMBERS trigger. Consumed by both the
+    /// decommission planner and the fault plane's repair planner
+    /// ([`crate::coordinator::Coordinator::mark_dead`]): a node death
+    /// queues exactly this set for background re-replication, never a
+    /// full scan.
     pub fn affected_by_removal(&self, segs: &[SegId]) -> HashSet<DatumId> {
         let mut out = HashSet::new();
         for &s in segs {

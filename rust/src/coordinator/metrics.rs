@@ -26,6 +26,14 @@ pub struct Metrics {
     pub gets: Counter,
     pub rebalances: Counter,
     pub keys_moved: Counter,
+    /// Fault plane: suspect transitions observed by the detector.
+    pub suspects: Counter,
+    /// Fault plane: members declared dead and removed from placement.
+    pub deaths: Counter,
+    /// Fault plane: keys restored to full replication by repair.
+    pub keys_repaired: Counter,
+    /// Fault plane: bytes copied by repair.
+    pub repair_bytes: Counter,
 }
 
 impl Metrics {
@@ -35,11 +43,16 @@ impl Metrics {
 
     pub fn render(&self) -> String {
         format!(
-            "sets={} gets={} rebalances={} keys_moved={}",
+            "sets={} gets={} rebalances={} keys_moved={} suspects={} deaths={} \
+             keys_repaired={} repair_bytes={}",
             self.sets.get(),
             self.gets.get(),
             self.rebalances.get(),
-            self.keys_moved.get()
+            self.keys_moved.get(),
+            self.suspects.get(),
+            self.deaths.get(),
+            self.keys_repaired.get(),
+            self.repair_bytes.get()
         )
     }
 }

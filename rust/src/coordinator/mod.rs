@@ -21,19 +21,42 @@
 //! reader routing by either the old or the new epoch finds every datum,
 //! and a reader that races the delete phase recovers with one
 //! refresh-and-retry (see `net::pool`).
+//!
+//! Keys written through a [`crate::net::pool::RouterPool`] reach the
+//! coordinator via the [`registry::KeyRegistry`] write-back: drained
+//! before every plan and reconciled once more after publication, so
+//! writes racing a rebalance are not stranded on their old holders.
+//!
+//! ## Fault plane
+//!
+//! Voluntary membership changes go through [`Coordinator::spawn_node`] /
+//! [`Coordinator::decommission`] (the node participates in its own
+//! drain). *Involuntary* ones go through the fault plane: a
+//! [`crate::fault::HealthMonitor`] drives probes, the coordinator
+//! applies the verdicts ([`Coordinator::apply_health_events`]) — suspect
+//! nodes are published for read-steering without any data movement, dead
+//! nodes are removed from placement ([`Coordinator::mark_dead`]) and
+//! their lost replicas restored by paced background repair
+//! ([`Coordinator::repair_step`], audited by
+//! [`Coordinator::audit_replication`]).
 
 pub mod metrics;
+pub mod registry;
 pub mod snapshot;
 
 use crate::algo::asura::AsuraPlacer;
 use crate::algo::{DatumId, Membership, NodeId, Placer};
 use crate::cluster::rebalance::MetaIndex;
 use crate::cluster::MigrationReport;
+use crate::fault::health::HealthEvent;
+use crate::fault::repair::{RepairQueue, RepairTick, ReplicationAudit};
 use crate::net::client::Conn;
+use crate::net::pool::{PoolConfig, RouterPool};
 use crate::net::server::NodeServer;
 use metrics::Metrics;
+use registry::KeyRegistry;
 use snapshot::{PlacerSnapshot, SnapshotCell};
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::net::SocketAddr;
 use std::sync::Arc;
 
@@ -63,8 +86,20 @@ pub struct Coordinator {
     cell: Arc<SnapshotCell>,
     pub metrics: Metrics,
     /// Keys under management (coordinator-side registry used only to
-    /// drive migrations; the authoritative data lives on the nodes).
-    keys: Vec<DatumId>,
+    /// drive migrations and repair; the authoritative data lives on the
+    /// nodes).
+    keys: HashSet<DatumId>,
+    /// Members the failure detector currently distrusts.
+    suspects: BTreeSet<NodeId>,
+    /// Write-back registry shared with pool writers (drained into
+    /// `keys` + `index` before every plan).
+    registry: Arc<KeyRegistry>,
+    /// Keys pool writers acked below full RF (degraded quorum writes) —
+    /// promoted into the repair queue by the control loop even when no
+    /// death ever fires for the unreachable holder.
+    repair_hints: Arc<KeyRegistry>,
+    /// Keys awaiting re-replication after a member death.
+    repair: RepairQueue,
 }
 
 impl Coordinator {
@@ -78,7 +113,11 @@ impl Coordinator {
             replicas,
             cell: SnapshotCell::new(PlacerSnapshot::empty(replicas)),
             metrics: Metrics::new(),
-            keys: Vec::new(),
+            keys: HashSet::new(),
+            suspects: BTreeSet::new(),
+            registry: Arc::new(KeyRegistry::new()),
+            repair_hints: Arc::new(KeyRegistry::new()),
+            repair: RepairQueue::new(),
         }
     }
 
@@ -109,12 +148,50 @@ impl Coordinator {
                 (n, m.addr)
             })
             .collect();
+        let suspects: Vec<NodeId> = self
+            .suspects
+            .iter()
+            .copied()
+            .filter(|&s| addrs.binary_search_by_key(&s, |&(n, _)| n).is_ok())
+            .collect();
         self.cell.publish(PlacerSnapshot {
             epoch: self.epoch,
             placer: self.placer.clone(),
             addrs,
             replicas: self.replicas,
+            suspects,
         });
+    }
+
+    /// Registry pool writers report acked keys into; prefer
+    /// [`Self::connect_pool`], which wires it up automatically.
+    pub fn key_registry(&self) -> Arc<KeyRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Spawn a [`RouterPool`] subscribed to this coordinator's snapshots
+    /// *and* its writer registry, so pool-written keys are visible to
+    /// migration and repair planning.
+    pub fn connect_pool(&self, cfg: PoolConfig) -> std::io::Result<RouterPool> {
+        RouterPool::connect(
+            &self.cell,
+            PoolConfig {
+                registry: Some(Arc::clone(&self.registry)),
+                repair_hints: Some(Arc::clone(&self.repair_hints)),
+                ..cfg
+            },
+        )
+    }
+
+    /// Absorb pool-acked keys into the coordinator's key set + metadata
+    /// index. Runs before every plan (join/decommission/death) so the
+    /// accelerated triggers cover data-plane writes too.
+    fn sync_registry(&mut self) {
+        for key in self.registry.drain() {
+            if self.keys.insert(key) {
+                self.index.insert(&self.placer, key);
+            }
+        }
     }
 
     pub fn placer(&self) -> &AsuraPlacer {
@@ -158,6 +235,7 @@ impl Coordinator {
     ) -> anyhow::Result<MigrationReport> {
         anyhow::ensure!(!self.members.contains_key(&id), "node {id} already joined");
         let conn = Conn::connect(addr)?;
+        self.sync_registry();
         // Predict the new node's segments for the accelerated plan.
         let mut probe = self.placer.clone();
         probe.add_node(id, capacity);
@@ -165,10 +243,11 @@ impl Coordinator {
         let candidates = self.index.affected_by_addition(&new_segs);
 
         let old_sets = self.snapshot_sets(candidates.iter().copied());
+        let old_placer = self.placer.clone();
         self.placer.add_node(id, capacity);
         self.members.insert(id, Member { addr, conn, server });
         self.epoch += 1;
-        let report = self.migrate(candidates.into_iter().collect(), old_sets)?;
+        let report = self.migrate(candidates.into_iter().collect(), old_sets, &old_placer)?;
         self.metrics.rebalances.inc();
         self.metrics.keys_moved.add(report.moved as u64);
         Ok(report)
@@ -178,22 +257,105 @@ impl Coordinator {
     /// key to its new holders, publish the new epoch, then delete the old
     /// copies. Readers on the pre-swap snapshot keep hitting the old
     /// holders until the delete phase; readers that race a delete recover
-    /// with one refresh-and-retry.
+    /// with one refresh-and-retry. A final reconcile pass absorbs writers
+    /// that acked against the pre-change snapshot while the migration ran.
     fn migrate(
         &mut self,
         candidates: Vec<DatumId>,
         old_sets: HashMap<DatumId, Vec<NodeId>>,
+        old_placer: &AsuraPlacer,
     ) -> anyhow::Result<MigrationReport> {
-        let (moves, report) = self.copy_phase(candidates, &old_sets)?;
+        let (moves, mut report) = self.copy_phase(candidates, &old_sets)?;
         self.publish_snapshot();
         self.delete_phase(moves)?;
+        self.reconcile_late_writers(old_placer, &mut report);
         Ok(report)
+    }
+
+    /// Close the writer-registry race: keys acked by pool workers while
+    /// the plan + copy/publish/delete ran routed by the *pre-change*
+    /// snapshot and were invisible to the plan. Drain them now, and move
+    /// any whose replica set changed under the new epoch.
+    ///
+    /// Strictly best-effort per key: every drained key is registered in
+    /// `keys` + `index` *before* any I/O, and an unreachable holder sends
+    /// the key to the repair queue instead of aborting the drain — an
+    /// I/O error must never make later keys invisible to future planning
+    /// (that would re-open the exact stranding bug the registry closes).
+    fn reconcile_late_writers(&mut self, old_placer: &AsuraPlacer, report: &mut MigrationReport) {
+        let late = self.registry.drain();
+        let old_r = self.replicas.min(old_placer.node_count());
+        let mut old_set: Vec<NodeId> = Vec::new();
+        for key in late {
+            if !self.keys.insert(key) {
+                continue; // already managed — the plan above covered it
+            }
+            self.index.insert(&self.placer, key);
+            old_placer.place_replicas(key, old_r, &mut old_set);
+            let new_set = self.replica_set(key);
+            if old_set == new_set {
+                continue;
+            }
+            // The race may have left the value under either epoch's
+            // placement; probe old holders first, then new.
+            let mut probe: Vec<NodeId> = old_set.clone();
+            probe.extend(new_set.iter().copied().filter(|n| !old_set.contains(n)));
+            let Some(value) = self.fetch_value(key, &probe) else {
+                // Acked under a quorum whose holders are unreachable at
+                // this instant — background repair will retry it rather
+                // than failing the whole rebalance.
+                self.repair.enqueue([key]);
+                continue;
+            };
+            // Write the *entire* new set, not just new-minus-old: a key
+            // acked at a write quorum may be missing from any old-set
+            // member, and these are a handful of keys per rebalance.
+            let mut incomplete = false;
+            for n in &new_set {
+                let Some(m) = self.members.get_mut(n) else {
+                    incomplete = true;
+                    continue;
+                };
+                if m.conn.set(key, value.clone()).is_err() {
+                    incomplete = true;
+                }
+            }
+            if incomplete {
+                // Keep the old copies — they may be the only ones — and
+                // let background repair finish populating the new set.
+                self.repair.enqueue([key]);
+                continue;
+            }
+            report.moved += 1;
+            report.bytes_moved += value.len() as u64 * new_set.len() as u64;
+            for n in &old_set {
+                if !new_set.contains(n) {
+                    if let Some(m) = self.members.get_mut(n) {
+                        let _ = m.conn.del(key);
+                    }
+                }
+            }
+        }
+    }
+
+    /// First readable copy of `key` among `nodes`, tolerating members
+    /// that are gone or unreachable (the fault-plane fetch path; each
+    /// probe reconnects once via [`Self::member_get`] so a stale cached
+    /// conn never masks a live copy).
+    fn fetch_value(&mut self, key: DatumId, nodes: &[NodeId]) -> Option<Vec<u8>> {
+        for &n in nodes {
+            if let Ok(Some(v)) = self.member_get(n, key) {
+                return Some(v);
+            }
+        }
+        None
     }
 
     /// Decommission a node: migrate its data away, drop it from the
     /// table, shut its server down (when owned).
     pub fn decommission(&mut self, id: NodeId) -> anyhow::Result<MigrationReport> {
         anyhow::ensure!(self.members.contains_key(&id), "node {id} not joined");
+        self.sync_registry();
         let victim_segs = self.placer.table().segments_of(id).to_vec();
         let candidates: Vec<DatumId> = self
             .index
@@ -201,9 +363,11 @@ impl Coordinator {
             .into_iter()
             .collect();
         let old_sets = self.snapshot_sets(candidates.iter().copied());
+        let old_placer = self.placer.clone();
         self.placer.remove_node(id);
+        self.suspects.remove(&id);
         self.epoch += 1;
-        let report = self.migrate(candidates, old_sets)?;
+        let report = self.migrate(candidates, old_sets, &old_placer)?;
         if let Some(mut member) = self.members.remove(&id) {
             if let Some(ref mut s) = member.server {
                 s.shutdown();
@@ -212,6 +376,270 @@ impl Coordinator {
         self.metrics.rebalances.inc();
         self.metrics.keys_moved.add(report.moved as u64);
         Ok(report)
+    }
+
+    // ------------------------------------------------------------------
+    // Fault plane: crash simulation, detector verdicts, repair, audit.
+    // ------------------------------------------------------------------
+
+    /// Simulate a crash of an owned node: its listener and every open
+    /// connection drop immediately. Membership is *not* changed — the
+    /// failure detector has to notice, exactly as with a real crash.
+    pub fn kill_node(&mut self, id: NodeId) -> anyhow::Result<()> {
+        let m = self
+            .members
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("node {id} not joined"))?;
+        let server = m
+            .server
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("node {id} is external; kill only owned nodes"))?;
+        server.kill();
+        Ok(())
+    }
+
+    /// Detector verdict "suspect": publish it through the snapshot plane
+    /// so routers steer reads to healthy replicas. No epoch bump, no
+    /// data movement — suspicion is free.
+    pub fn mark_suspect(&mut self, id: NodeId) {
+        if self.members.contains_key(&id) && self.suspects.insert(id) {
+            self.metrics.suspects.inc();
+            self.publish_snapshot();
+        }
+    }
+
+    /// Detector verdict "recovered": lift the read steering.
+    pub fn clear_suspect(&mut self, id: NodeId) {
+        if self.suspects.remove(&id) {
+            self.publish_snapshot();
+        }
+    }
+
+    /// Detector verdict "dead": remove the node from placement and
+    /// publish the new epoch through the atomic-swap path (routers
+    /// converge without restart), then queue every key that lost a
+    /// replica — found via the §2.D removal triggers, not a full scan —
+    /// for background repair. Nothing is fetched from the dead node;
+    /// repair copies from surviving replicas. Returns the number of
+    /// keys queued.
+    pub fn mark_dead(&mut self, id: NodeId) -> anyhow::Result<usize> {
+        anyhow::ensure!(self.members.contains_key(&id), "node {id} not joined");
+        anyhow::ensure!(
+            self.placer.node_count() > 1,
+            "cannot declare the last node dead"
+        );
+        self.sync_registry();
+        let victim_segs = self.placer.table().segments_of(id).to_vec();
+        let affected: Vec<DatumId> = self
+            .index
+            .affected_by_removal(&victim_segs)
+            .into_iter()
+            .collect();
+        self.placer.remove_node(id);
+        self.suspects.remove(&id);
+        self.epoch += 1;
+        self.publish_snapshot();
+        if let Some(mut member) = self.members.remove(&id) {
+            if let Some(ref mut s) = member.server {
+                s.kill();
+            }
+        }
+        // Refresh metadata under the post-death placer and queue the
+        // repair work.
+        for &k in &affected {
+            self.index.insert(&self.placer, k);
+        }
+        let queued = affected.len();
+        self.repair.enqueue(affected);
+        self.metrics.deaths.inc();
+        self.metrics.rebalances.inc();
+        Ok(queued)
+    }
+
+    /// Promote degraded-write hints from pool workers into the repair
+    /// queue. Runs from every control-loop entry point (health events,
+    /// repair batches, audits), so a write that skipped an unreachable
+    /// holder gets its copy restored even if that holder recovers
+    /// without ever being declared dead.
+    fn drain_repair_hints(&mut self) {
+        let hints = self.repair_hints.drain();
+        if !hints.is_empty() {
+            self.repair.enqueue(hints);
+        }
+    }
+
+    /// Apply a probe round's verdicts (see [`crate::fault::HealthMonitor`]).
+    /// Returns the number of keys newly queued for repair. Each event is
+    /// applied independently: an inapplicable death (node already gone,
+    /// or the last live node — nowhere to re-replicate) is skipped, not
+    /// allowed to abort the rest of the batch.
+    pub fn apply_health_events(&mut self, events: &[HealthEvent]) -> anyhow::Result<usize> {
+        self.drain_repair_hints();
+        let mut queued = 0;
+        for e in events {
+            match *e {
+                HealthEvent::Suspected(id) => self.mark_suspect(id),
+                HealthEvent::Recovered(id) => self.clear_suspect(id),
+                HealthEvent::Died(id) => {
+                    if self.members.contains_key(&id) && self.placer.node_count() > 1 {
+                        queued += self.mark_dead(id)?;
+                    }
+                }
+            }
+        }
+        Ok(queued)
+    }
+
+    /// Keys still awaiting re-replication.
+    pub fn repair_pending(&self) -> usize {
+        self.repair.pending()
+    }
+
+    /// Queue extra keys for repair (anti-entropy: typically the
+    /// under-replicated set from [`Self::audit_replication`]).
+    pub fn enqueue_repair(&mut self, keys: impl IntoIterator<Item = DatumId>) {
+        self.repair.enqueue(keys);
+    }
+
+    /// GET through a member's control conn, reconnecting once if the
+    /// cached connection has gone stale (e.g. the node restarted).
+    /// `Err` means the member is genuinely unreachable right now.
+    fn member_get(&mut self, n: NodeId, key: DatumId) -> std::io::Result<Option<Vec<u8>>> {
+        let m = self
+            .members
+            .get_mut(&n)
+            .ok_or_else(|| std::io::Error::other(format!("no member {n}")))?;
+        match m.conn.get(key) {
+            Ok(v) => Ok(v),
+            Err(_) => {
+                m.conn = Conn::connect(m.addr)?;
+                m.conn.get(key)
+            }
+        }
+    }
+
+    /// One paced repair batch: re-replicate up to `max_keys` queued keys
+    /// from a surviving holder to the holders missing them. Bounding the
+    /// batch is the rate limit — the control loop chooses the cadence, so
+    /// foreground traffic is never starved behind a repair storm.
+    ///
+    /// A key is counted [`RepairTick::lost`] only when every holder
+    /// *answered* and none had a copy (RF genuinely exhausted). A key
+    /// whose holders are merely unreachable — or whose copy-writes fail —
+    /// is re-enqueued and counted [`RepairTick::deferred`]: either the
+    /// node comes back, or its death re-triggers the plan; repair never
+    /// silently drops a key.
+    pub fn repair_step(&mut self, max_keys: usize) -> anyhow::Result<RepairTick> {
+        self.drain_repair_hints();
+        let mut tick = RepairTick::default();
+        while tick.checked < max_keys {
+            let Some(key) = self.repair.pop() else { break };
+            tick.checked += 1;
+            let targets = self.replica_set(key);
+            // Find a surviving copy and who is missing one.
+            let mut value: Option<Vec<u8>> = None;
+            let mut missing: Vec<NodeId> = Vec::new();
+            let mut unreachable = false;
+            for &n in &targets {
+                match self.member_get(n, key) {
+                    Ok(Some(v)) => {
+                        if value.is_none() {
+                            value = Some(v);
+                        }
+                    }
+                    Ok(None) => missing.push(n),
+                    Err(_) => {
+                        unreachable = true;
+                        missing.push(n);
+                    }
+                }
+            }
+            if value.is_none() && !unreachable {
+                // Last resort before declaring RF exhausted: the copy
+                // may sit on a *former* holder (a key deferred by
+                // reconcile_late_writers keeps its old-epoch copies).
+                // Probe every member once.
+                let mut all: Vec<NodeId> = self.members.keys().copied().collect();
+                all.sort_unstable();
+                value = self.fetch_value(key, &all);
+            }
+            let Some(value) = value else {
+                if unreachable {
+                    // No copy *found*, but not every holder answered —
+                    // defer rather than declaring the datum dead.
+                    self.repair.enqueue([key]);
+                    tick.deferred += 1;
+                } else {
+                    // Every replica died before repair could run (RF
+                    // exhausted) — unrecoverable. Count it honestly and
+                    // unregister it, so audits can converge instead of
+                    // re-reporting the same dead key forever.
+                    tick.lost += 1;
+                    self.keys.remove(&key);
+                    self.index.remove_key(key);
+                }
+                continue;
+            };
+            let mut failed_write = false;
+            let mut wrote = false;
+            for n in missing {
+                if let Some(m) = self.members.get_mut(&n) {
+                    if m.conn.set(key, value.clone()).is_ok() {
+                        tick.copies += 1;
+                        tick.bytes += value.len() as u64;
+                        wrote = true;
+                    } else {
+                        failed_write = true;
+                    }
+                }
+            }
+            if failed_write {
+                // A holder refused its copy (crashing / mid-restart):
+                // keep the key queued so full RF is eventually restored.
+                // It counts as repaired only on the pass that completes
+                // it — never twice.
+                self.repair.enqueue([key]);
+                tick.deferred += 1;
+            } else if wrote {
+                tick.repaired += 1;
+            }
+        }
+        self.metrics.keys_repaired.add(tick.repaired as u64);
+        self.metrics.repair_bytes.add(tick.bytes);
+        Ok(tick)
+    }
+
+    /// Holder audit: enumerate every node's stored keys over the wire
+    /// and verify each registered key is present on its *entire* replica
+    /// set. The ground-truth check behind "repair restored full RF".
+    pub fn audit_replication(&mut self) -> anyhow::Result<ReplicationAudit> {
+        self.sync_registry();
+        self.drain_repair_hints();
+        let mut holders: HashMap<DatumId, Vec<NodeId>> = HashMap::new();
+        let mut ids: Vec<NodeId> = self.members.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let m = self.members.get_mut(&id).expect("member just listed");
+            for key in m.conn.keys()? {
+                holders.entry(key).or_default().push(id);
+            }
+        }
+        let mut audit = ReplicationAudit {
+            keys: self.keys.len(),
+            ..Default::default()
+        };
+        for &key in &self.keys {
+            let want = self.replica_set(key);
+            let have = holders.get(&key);
+            let full = want.iter().all(|n| have.is_some_and(|h| h.contains(n)));
+            if full {
+                audit.fully_replicated += 1;
+            } else {
+                audit.under_keys.push(key);
+            }
+        }
+        audit.under_keys.sort_unstable();
+        Ok(audit)
     }
 
     fn effective_replicas(&self) -> usize {
@@ -315,7 +743,7 @@ impl Coordinator {
             m.conn.set(key, value.to_vec())?;
         }
         self.index.insert(&self.placer, key);
-        self.keys.push(key);
+        self.keys.insert(key);
         self.metrics.sets.inc();
         Ok(())
     }
@@ -348,8 +776,11 @@ impl Coordinator {
     }
 
     /// Verify every registered key is readable (post-rebalance check).
+    /// Pool-written keys are absorbed first, so the check covers the
+    /// data-plane writers too.
     pub fn verify_all_readable(&mut self) -> anyhow::Result<usize> {
-        let keys = self.keys.clone();
+        self.sync_registry();
+        let keys: Vec<DatumId> = self.keys.iter().copied().collect();
         let mut ok = 0;
         for key in keys {
             if self.get(key)?.is_some() {
@@ -447,5 +878,80 @@ mod tests {
         coord.spawn_node(0, 1.0).unwrap();
         assert!(coord.spawn_node(0, 1.0).is_err());
         assert!(coord.decommission(9).is_err());
+    }
+
+    #[test]
+    fn mark_dead_republishes_and_repair_restores_full_rf() {
+        let mut coord = Coordinator::new(2);
+        for i in 0..5 {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        for k in 0..300u64 {
+            coord.set(k, b"payload").unwrap();
+        }
+        let epoch = coord.epoch();
+        coord.kill_node(2).unwrap();
+        let queued = coord.mark_dead(2).unwrap();
+        assert!(queued > 0, "a dead holder must queue repair work");
+        assert_eq!(coord.epoch(), epoch + 1);
+        let snap = coord.snapshot();
+        assert!(snap.addr_of(2).is_none());
+        assert!(snap.is_coherent());
+        // Survivors keep every key readable at RF=2 before repair runs.
+        assert_eq!(coord.verify_all_readable().unwrap(), 300);
+        // Paced repair drains the queue without losing anything...
+        while coord.repair_pending() > 0 {
+            let tick = coord.repair_step(64).unwrap();
+            assert_eq!(tick.lost, 0);
+        }
+        // ...and the over-the-wire holder audit confirms full RF.
+        let audit = coord.audit_replication().unwrap();
+        assert_eq!(audit.keys, 300);
+        assert!(audit.is_full(), "under-replicated: {:?}", audit.under_keys);
+        assert!(coord.metrics.keys_repaired.get() > 0);
+    }
+
+    #[test]
+    fn suspects_publish_without_epoch_bump() {
+        let mut coord = Coordinator::new(1);
+        for i in 0..3 {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        let epoch = coord.epoch();
+        let generation = coord.snapshot_cell().generation();
+        coord.mark_suspect(1);
+        assert_eq!(coord.epoch(), epoch, "suspicion must not move data");
+        assert!(coord.snapshot().is_suspect(1));
+        assert!(coord.snapshot_cell().generation() > generation);
+        coord.clear_suspect(1);
+        assert!(!coord.snapshot().is_suspect(1));
+        // Unknown ids are ignored.
+        coord.mark_suspect(99);
+        assert!(!coord.snapshot().is_suspect(99));
+    }
+
+    #[test]
+    fn audit_detects_and_repair_fixes_a_lost_copy() {
+        let mut coord = Coordinator::new(2);
+        for i in 0..4 {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        for k in 0..100u64 {
+            coord.set(k, b"vv").unwrap();
+        }
+        // Drop one replica behind the coordinator's back.
+        let victim_key = 42u64;
+        let holders = coord.replica_set(victim_key);
+        let addr = coord.snapshot().addr_of(holders[1]).unwrap();
+        let mut c = Conn::connect(addr).unwrap();
+        assert!(c.del(victim_key).unwrap());
+        let audit = coord.audit_replication().unwrap();
+        assert_eq!(audit.under_keys, vec![victim_key]);
+        // Anti-entropy: feed the audit back into the repair queue.
+        coord.enqueue_repair(audit.under_keys.clone());
+        let tick = coord.repair_step(10).unwrap();
+        assert_eq!(tick.repaired, 1);
+        assert_eq!(tick.lost, 0);
+        assert!(coord.audit_replication().unwrap().is_full());
     }
 }

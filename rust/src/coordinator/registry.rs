@@ -1,0 +1,103 @@
+//! Writer registry: the data-plane → control-plane write-back.
+//!
+//! `RouterPool` workers write straight to the storage nodes, bypassing
+//! the coordinator — fast, but historically those keys were invisible to
+//! the coordinator's migration and repair planners, so a write racing a
+//! rebalance could be stranded on its old holder (the ROADMAP "writer
+//! registry" open item). The fix is a shared [`KeyRegistry`]: workers
+//! register every key on SET ack, and the coordinator drains the
+//! registry into its key set + metadata index before planning any
+//! membership change (and once more after publishing, to reconcile
+//! writers that raced the migration itself — see
+//! [`crate::coordinator::Coordinator`]).
+//!
+//! The registry is deliberately dumb: a mutex'd set, locked once per
+//! pipelined flush on the writer side and drained wholesale on the
+//! (rare) control-plane side.
+
+use crate::algo::DatumId;
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+/// Concurrent set of keys acked by pool writers but not yet absorbed
+/// into the coordinator's registry.
+#[derive(Debug, Default)]
+pub struct KeyRegistry {
+    pending: Mutex<HashSet<DatumId>>,
+}
+
+impl KeyRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one acked write.
+    pub fn register(&self, key: DatumId) {
+        self.pending.lock().expect("registry poisoned").insert(key);
+    }
+
+    /// Record a flush worth of acked writes under one lock.
+    pub fn register_batch(&self, keys: &[DatumId]) {
+        if keys.is_empty() {
+            return;
+        }
+        let mut pending = self.pending.lock().expect("registry poisoned");
+        for &k in keys {
+            pending.insert(k);
+        }
+    }
+
+    /// Take every pending key (coordinator side).
+    pub fn drain(&self) -> Vec<DatumId> {
+        let mut pending = self.pending.lock().expect("registry poisoned");
+        pending.drain().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.lock().expect("registry poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_drain_roundtrip() {
+        let reg = KeyRegistry::new();
+        assert!(reg.is_empty());
+        reg.register(7);
+        reg.register(7); // idempotent
+        reg.register_batch(&[1, 2, 7]);
+        assert_eq!(reg.len(), 3);
+        let mut keys = reg.drain();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![1, 2, 7]);
+        assert!(reg.is_empty());
+        assert!(reg.drain().is_empty());
+    }
+
+    #[test]
+    fn concurrent_writers_all_land() {
+        use std::sync::Arc;
+        let reg = Arc::new(KeyRegistry::new());
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                let reg = Arc::clone(&reg);
+                std::thread::spawn(move || {
+                    for i in 0..250u64 {
+                        reg.register(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.len(), 1000);
+    }
+}

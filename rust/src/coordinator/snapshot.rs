@@ -40,6 +40,10 @@ pub struct PlacerSnapshot {
     pub addrs: Vec<(NodeId, SocketAddr)>,
     /// Replication factor the cluster was configured with.
     pub replicas: usize,
+    /// Members the failure detector currently distrusts (ascending).
+    /// Suspects are still full members — they hold data and receive
+    /// writes — but routers steer *reads* to a healthy replica first.
+    pub suspects: Vec<NodeId>,
 }
 
 impl PlacerSnapshot {
@@ -50,6 +54,7 @@ impl PlacerSnapshot {
             placer: AsuraPlacer::new(),
             addrs: Vec::new(),
             replicas: replicas.max(1),
+            suspects: Vec::new(),
         }
     }
 
@@ -66,6 +71,24 @@ impl PlacerSnapshot {
     pub fn replica_set(&self, key: DatumId, out: &mut Vec<NodeId>) {
         let r = self.replicas.min(self.placer.node_count());
         self.placer.place_replicas(key, r, out);
+    }
+
+    /// Whether the failure detector suspected `node` at publication time.
+    pub fn is_suspect(&self, node: NodeId) -> bool {
+        self.suspects.binary_search(&node).is_ok()
+    }
+
+    /// Read target for `key`: the first non-suspect holder of its
+    /// replica set, or the primary when every holder is suspect.
+    /// `scratch` receives the full replica set as a side effect.
+    pub fn read_target(&self, key: DatumId, scratch: &mut Vec<NodeId>) -> NodeId {
+        self.replica_set(key, scratch);
+        for &n in scratch.iter() {
+            if !self.is_suspect(n) {
+                return n;
+            }
+        }
+        scratch[0]
     }
 
     /// Internal consistency check (used by the linearizability tests):
@@ -197,6 +220,7 @@ mod tests {
             placer,
             addrs,
             replicas: 1,
+            suspects: Vec::new(),
         }
     }
 
@@ -211,6 +235,25 @@ mod tests {
         assert!(snap.is_coherent());
         assert_eq!(snap.addr_of(2), Some("127.0.0.1:7002".parse().unwrap()));
         assert_eq!(snap.addr_of(9), None);
+    }
+
+    #[test]
+    fn read_target_routes_around_suspects() {
+        let mut snap = snapshot_with_nodes(1, 5);
+        snap.replicas = 3;
+        let mut set = Vec::new();
+        snap.replica_set(42, &mut set);
+        let primary = set[0];
+        let mut scratch = Vec::new();
+        assert_eq!(snap.read_target(42, &mut scratch), primary);
+        snap.suspects = vec![primary];
+        assert_eq!(snap.read_target(42, &mut scratch), set[1]);
+        // Every holder suspect: fall back to the primary.
+        let mut all = set.clone();
+        all.sort_unstable();
+        snap.suspects = all;
+        assert_eq!(snap.read_target(42, &mut scratch), primary);
+        assert!(snap.is_suspect(primary));
     }
 
     #[test]

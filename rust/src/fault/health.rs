@@ -1,0 +1,247 @@
+//! Coordinator-side failure detection: heartbeat probes over the wire
+//! protocol, with a suspect grace period between "missed a probe" and
+//! "declared dead".
+//!
+//! The two-threshold design is what keeps ASURA's minimal-movement
+//! guarantee honest under real failures: a *suspect* node stays a full
+//! member (no data moves — routers merely steer reads to a healthy
+//! replica), while only a node that misses [`HealthConfig::dead_after`]
+//! consecutive probes is declared dead and removed from placement —
+//! exactly one capacity-share of data then re-replicates (see
+//! [`crate::fault::repair`]). A flapping node therefore costs zero
+//! migrations instead of a mass movement per flap.
+//!
+//! The monitor is deliberately synchronous and tick-driven: the control
+//! loop calls [`HealthMonitor::tick`] at its own cadence, which keeps
+//! detection latency explicit, deterministic to test, and free of
+//! background threads. Probes open a fresh connection per round so a
+//! wedged data connection can never mask (or fake) liveness.
+
+use crate::algo::NodeId;
+use crate::net::protocol::{read_response, write_request, Request, Response};
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Detection thresholds and probe budget.
+#[derive(Clone, Debug)]
+pub struct HealthConfig {
+    /// Consecutive missed probes before a member is suspected.
+    pub suspect_after: u32,
+    /// Consecutive missed probes before a member is declared dead.
+    /// Must be >= `suspect_after`.
+    pub dead_after: u32,
+    /// Per-probe connect/read/write timeout.
+    pub timeout: Duration,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            suspect_after: 1,
+            dead_after: 3,
+            timeout: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Detector verdict for one member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    Alive,
+    Suspect,
+    Dead,
+}
+
+/// A state transition produced by a probe round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthEvent {
+    Suspected(NodeId),
+    Recovered(NodeId),
+    Died(NodeId),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct NodeHealth {
+    state: HealthState,
+    failures: u32,
+}
+
+/// Tick-driven heartbeat prober over the current membership.
+pub struct HealthMonitor {
+    cfg: HealthConfig,
+    nodes: HashMap<NodeId, NodeHealth>,
+    /// Test hook: pending probe results to force-fail per node.
+    injected: HashMap<NodeId, u32>,
+    /// Total probes attempted (including injected failures).
+    pub probes_sent: u64,
+}
+
+impl HealthMonitor {
+    pub fn new(cfg: HealthConfig) -> Self {
+        assert!(cfg.dead_after >= cfg.suspect_after.max(1));
+        Self {
+            cfg,
+            nodes: HashMap::new(),
+            injected: HashMap::new(),
+            probes_sent: 0,
+        }
+    }
+
+    /// Current verdict for `id` (unknown members are presumed alive).
+    pub fn state_of(&self, id: NodeId) -> HealthState {
+        self.nodes.get(&id).map_or(HealthState::Alive, |h| h.state)
+    }
+
+    /// Fault injection for tests and flapping drills: the next `count`
+    /// probes to `id` fail regardless of the node's actual liveness.
+    pub fn inject_probe_failures(&mut self, id: NodeId, count: u32) {
+        *self.injected.entry(id).or_insert(0) += count;
+    }
+
+    /// One synchronous probe round over `members`, returning every state
+    /// transition. `epoch` is echoed by healthy nodes (a cheap end-to-end
+    /// check that the peer speaks the protocol, not just accepts TCP).
+    /// Members that left the membership since the last round are
+    /// forgotten, so a rejoining id starts over as alive.
+    ///
+    /// Probes run concurrently (scoped threads, one per member), so a
+    /// partitioned node that eats the full connect timeout delays the
+    /// round by one timeout, not one timeout *per* unreachable member —
+    /// detection latency stays independent of how many nodes failed.
+    pub fn tick(&mut self, members: &[(NodeId, SocketAddr)], epoch: u64) -> Vec<HealthEvent> {
+        self.nodes.retain(|id, _| members.iter().any(|&(n, _)| n == *id));
+        // Consume injected failures first (needs &mut self), then fan
+        // the real probes out.
+        let forced: Vec<bool> = members
+            .iter()
+            .map(|&(id, _)| match self.injected.get_mut(&id) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    true
+                }
+                _ => false,
+            })
+            .collect();
+        self.probes_sent += members.len() as u64;
+        let timeout = self.cfg.timeout;
+        let mut outcomes: Vec<(NodeId, bool)> = Vec::with_capacity(members.len());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = members
+                .iter()
+                .zip(&forced)
+                .map(|(&(id, addr), &forced_fail)| {
+                    s.spawn(move || (id, !forced_fail && probe(addr, epoch, timeout).is_ok()))
+                })
+                .collect();
+            for h in handles {
+                outcomes.push(h.join().expect("probe thread panicked"));
+            }
+        });
+        let mut events = Vec::new();
+        for (id, ok) in outcomes {
+            let h = self.nodes.entry(id).or_insert(NodeHealth {
+                state: HealthState::Alive,
+                failures: 0,
+            });
+            if h.state == HealthState::Dead {
+                continue; // terminal until the membership drops the id
+            }
+            if ok {
+                if h.state == HealthState::Suspect {
+                    events.push(HealthEvent::Recovered(id));
+                }
+                h.state = HealthState::Alive;
+                h.failures = 0;
+            } else {
+                h.failures += 1;
+                if h.failures >= self.cfg.dead_after {
+                    h.state = HealthState::Dead;
+                    events.push(HealthEvent::Died(id));
+                } else if h.failures >= self.cfg.suspect_after && h.state == HealthState::Alive {
+                    h.state = HealthState::Suspect;
+                    events.push(HealthEvent::Suspected(id));
+                }
+            }
+        }
+        events
+    }
+}
+
+/// One heartbeat round trip on a fresh connection, bounded by `timeout`
+/// at every step. Returns the node's (echoed epoch, key count).
+pub fn probe(addr: SocketAddr, epoch: u64, timeout: Duration) -> std::io::Result<(u64, u64)> {
+    let stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    write_request(&mut writer, &Request::Heartbeat { epoch })?;
+    writer.flush()?;
+    let mut reader = BufReader::new(stream);
+    match read_response(&mut reader)? {
+        Response::Alive { epoch, keys } => Ok((epoch, keys)),
+        other => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("bad heartbeat response {other:?}"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::server::NodeServer;
+
+    fn quick_cfg() -> HealthConfig {
+        HealthConfig {
+            suspect_after: 1,
+            dead_after: 3,
+            timeout: Duration::from_millis(200),
+        }
+    }
+
+    #[test]
+    fn probe_roundtrips_epoch_and_key_count() {
+        let server = NodeServer::spawn().unwrap();
+        let (epoch, keys) = probe(server.addr(), 17, Duration::from_millis(200)).unwrap();
+        assert_eq!((epoch, keys), (17, 0));
+    }
+
+    #[test]
+    fn killed_node_walks_suspect_then_dead() {
+        let mut server = NodeServer::spawn().unwrap();
+        let members = vec![(0u32, server.addr())];
+        let mut mon = HealthMonitor::new(quick_cfg());
+        assert!(mon.tick(&members, 1).is_empty());
+        assert_eq!(mon.state_of(0), HealthState::Alive);
+
+        server.kill();
+        assert_eq!(mon.tick(&members, 1), vec![HealthEvent::Suspected(0)]);
+        assert_eq!(mon.state_of(0), HealthState::Suspect);
+        assert!(mon.tick(&members, 1).is_empty(), "still within grace");
+        assert_eq!(mon.tick(&members, 1), vec![HealthEvent::Died(0)]);
+        assert_eq!(mon.state_of(0), HealthState::Dead);
+        // Dead is terminal while the id remains in the membership.
+        assert!(mon.tick(&members, 1).is_empty());
+        // Once the membership drops it, the id is forgotten.
+        assert!(mon.tick(&[], 1).is_empty());
+        assert_eq!(mon.state_of(0), HealthState::Alive);
+    }
+
+    #[test]
+    fn flapping_probe_recovers_without_death() {
+        let server = NodeServer::spawn().unwrap();
+        let members = vec![(3u32, server.addr())];
+        let mut mon = HealthMonitor::new(quick_cfg());
+        for _ in 0..2 {
+            mon.inject_probe_failures(3, 2); // below dead_after = 3
+            assert_eq!(mon.tick(&members, 5), vec![HealthEvent::Suspected(3)]);
+            assert!(mon.tick(&members, 5).is_empty());
+            assert_eq!(mon.tick(&members, 5), vec![HealthEvent::Recovered(3)]);
+            assert_eq!(mon.state_of(3), HealthState::Alive);
+        }
+        assert_eq!(mon.probes_sent, 6);
+    }
+}

@@ -1,0 +1,35 @@
+//! Fault-tolerance plane: the subsystem that makes the cluster survive
+//! node death under live traffic.
+//!
+//! The paper's replication story (§5.A) places R copies on pairwise
+//! distinct nodes; this module supplies the three runtime pieces that
+//! placement alone does not:
+//!
+//! 1. **Quorum I/O** (in [`crate::net::pool`]): SETs fan out to every
+//!    holder of the replica set and ack at a configurable write quorum;
+//!    GETs try the primary and fail over to surviving replicas on a
+//!    connection failure — so a dead node degrades latency, not
+//!    correctness.
+//! 2. **Failure detection** ([`health`]): a coordinator-side heartbeat
+//!    monitor walks members through alive → suspect → dead. Suspicion is
+//!    published through the epoch-snapshot plane (routers steer reads to
+//!    healthy replicas, zero data movement); death removes the node from
+//!    placement and publishes a new epoch through the same atomic-swap
+//!    path, so every router converges without restart.
+//! 3. **Background repair** ([`repair`]): the keys that lost a replica —
+//!    found via the §2.D removal triggers, not a full scan — are
+//!    re-replicated to their ASURA-chosen replacement holders at a paced
+//!    rate, with progress reported through
+//!    [`crate::coordinator::metrics`] and verified by a holder audit.
+//!
+//! The glue lives on [`crate::coordinator::Coordinator`]
+//! (`apply_health_events`, `mark_dead`, `repair_step`,
+//! `audit_replication`); the failover scenarios in
+//! [`crate::loadgen`] measure time-to-detect and time-to-full-RF end to
+//! end (`BENCH_failover.json`).
+
+pub mod health;
+pub mod repair;
+
+pub use health::{HealthConfig, HealthEvent, HealthMonitor, HealthState};
+pub use repair::{RepairQueue, RepairTick, ReplicationAudit};

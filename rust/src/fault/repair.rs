@@ -1,0 +1,173 @@
+//! Background repair bookkeeping: the queue of keys that lost a replica
+//! and the progress/audit accounting around restoring them.
+//!
+//! Planning is metadata-accelerated: when a member dies, the coordinator
+//! feeds the §2.D REMOVE-NUMBERS trigger set
+//! ([`crate::cluster::rebalance::MetaIndex::affected_by_removal`]) into a
+//! [`RepairQueue`] — only keys whose replica set actually changed are
+//! ever touched, the same acceleration the migration planner uses.
+//! Draining is paced: [`crate::coordinator::Coordinator::repair_step`]
+//! processes a bounded batch per call, so the control loop decides the
+//! repair bandwidth and foreground traffic is never starved behind a
+//! re-replication storm (the detection-vs-repair trade-off the DHT
+//! replication literature centers on).
+
+use crate::algo::DatumId;
+use std::collections::{HashSet, VecDeque};
+
+/// FIFO of keys awaiting re-replication, deduplicated (a key enqueued by
+/// two overlapping failures repairs once, against its freshest set).
+#[derive(Debug, Default)]
+pub struct RepairQueue {
+    queue: VecDeque<DatumId>,
+    queued: HashSet<DatumId>,
+}
+
+impl RepairQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn enqueue(&mut self, keys: impl IntoIterator<Item = DatumId>) {
+        for k in keys {
+            if self.queued.insert(k) {
+                self.queue.push_back(k);
+            }
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<DatumId> {
+        let k = self.queue.pop_front()?;
+        self.queued.remove(&k);
+        Some(k)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+/// What one paced repair batch did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RepairTick {
+    /// Keys examined this batch.
+    pub checked: usize,
+    /// Keys restored to their full replica set this batch (a key whose
+    /// restoration spans batches counts once, on completion).
+    pub repaired: usize,
+    /// Individual copies written.
+    pub copies: usize,
+    /// Bytes copied.
+    pub bytes: u64,
+    /// Keys with no surviving holder (unrecoverable — RF exhausted:
+    /// every holder answered and none had a copy).
+    pub lost: usize,
+    /// Keys re-enqueued because a holder was unreachable or refused its
+    /// copy — repair will retry them rather than dropping them.
+    pub deferred: usize,
+}
+
+impl RepairTick {
+    pub fn absorb(&mut self, other: &RepairTick) {
+        self.checked += other.checked;
+        self.repaired += other.repaired;
+        self.copies += other.copies;
+        self.bytes += other.bytes;
+        self.lost += other.lost;
+        self.deferred += other.deferred;
+    }
+}
+
+/// Result of a holder audit: every registered key's replica set checked
+/// against what the nodes actually hold.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ReplicationAudit {
+    /// Keys audited.
+    pub keys: usize,
+    /// Keys present on every node of their replica set.
+    pub fully_replicated: usize,
+    /// Keys missing from at least one holder (listed below).
+    pub under_keys: Vec<DatumId>,
+}
+
+impl ReplicationAudit {
+    pub fn under_replicated(&self) -> usize {
+        self.under_keys.len()
+    }
+
+    /// True when every key is at full replication factor.
+    pub fn is_full(&self) -> bool {
+        self.under_keys.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_dedupes_and_preserves_fifo() {
+        let mut q = RepairQueue::new();
+        q.enqueue([3, 1, 2]);
+        q.enqueue([1, 4]); // 1 already queued
+        assert_eq!(q.pending(), 4);
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), Some(1));
+        // Popped keys may be re-enqueued (a second failure hit them).
+        q.enqueue([1]);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn tick_absorb_accumulates() {
+        let mut total = RepairTick::default();
+        total.absorb(&RepairTick {
+            checked: 3,
+            repaired: 2,
+            copies: 2,
+            bytes: 64,
+            lost: 1,
+            deferred: 0,
+        });
+        total.absorb(&RepairTick {
+            checked: 1,
+            repaired: 1,
+            copies: 2,
+            bytes: 32,
+            lost: 0,
+            deferred: 2,
+        });
+        assert_eq!(total.checked, 4);
+        assert_eq!(total.repaired, 3);
+        assert_eq!(total.copies, 4);
+        assert_eq!(total.bytes, 96);
+        assert_eq!(total.lost, 1);
+        assert_eq!(total.deferred, 2);
+    }
+
+    #[test]
+    fn audit_accessors() {
+        let clean = ReplicationAudit {
+            keys: 10,
+            fully_replicated: 10,
+            under_keys: vec![],
+        };
+        assert!(clean.is_full());
+        assert_eq!(clean.under_replicated(), 0);
+        let degraded = ReplicationAudit {
+            keys: 10,
+            fully_replicated: 8,
+            under_keys: vec![5, 9],
+        };
+        assert!(!degraded.is_full());
+        assert_eq!(degraded.under_replicated(), 2);
+    }
+}

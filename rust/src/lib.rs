@@ -7,9 +7,11 @@
 //!   algorithms ([`algo`]), the cluster substrate ([`cluster`]), a
 //!   memcached-like KV network layer ([`net`]) with a concurrent
 //!   epoch-snapshot data plane ([`coordinator::snapshot`],
-//!   [`net::pool`]), the coordinator ([`coordinator`]), the paper's
-//!   complete evaluation harness ([`experiments`]) and a closed-loop
-//!   throughput harness ([`loadgen`]).
+//!   [`net::pool`]), the coordinator ([`coordinator`]), a
+//!   fault-tolerance plane ([`fault`]: quorum I/O, heartbeat failure
+//!   detection, background repair), the paper's complete evaluation
+//!   harness ([`experiments`]) and a closed-loop throughput harness
+//!   ([`loadgen`]).
 //! - **L2/L1 (build-time python, `python/compile/`)**: JAX batch-placement
 //!   graphs with Pallas kernels, AOT-lowered to HLO text and executed from
 //!   Rust via PJRT ([`runtime`]). Python never runs on the request path.
@@ -22,6 +24,7 @@ pub mod bench;
 pub mod cluster;
 pub mod coordinator;
 pub mod experiments;
+pub mod fault;
 pub mod fixed;
 pub mod loadgen;
 pub mod net;

@@ -1,20 +1,26 @@
-//! Closed-loop throughput harness: drive a [`Scenario`] against the seed
-//! single-threaded [`Router`] or the concurrent [`RouterPool`] and report
-//! ops/sec and tail latency per scenario.
+//! Closed-loop throughput + fault harness: drive a [`Scenario`] against
+//! the seed single-threaded [`Router`] or the concurrent [`RouterPool`]
+//! and report ops/sec and tail latency per scenario — plus the
+//! fault-plane drivers ([`run_failover`], [`run_flapping`]) that race
+//! live traffic against a node crash and measure time-to-detect and
+//! time-to-full-RF.
 //!
-//! This is the measurement substrate behind `asura bench-serve` and
-//! `cargo bench --bench throughput`. Results serialize to
-//! `BENCH_throughput.json` so successive PRs can regress against a
-//! recorded trajectory.
+//! This is the measurement substrate behind `asura bench-serve` /
+//! `asura bench-failover` and `cargo bench --bench throughput`. Results
+//! serialize to `BENCH_throughput.json` and `BENCH_failover.json` so
+//! successive PRs can regress against a recorded trajectory.
 
-use crate::algo::Placer;
+use crate::algo::{NodeId, Placer};
 use crate::coordinator::Coordinator;
-use crate::net::pool::{PoolConfig, RouterPool};
+use crate::fault::health::{HealthConfig, HealthEvent, HealthMonitor};
+use crate::net::pool::{BatchResult, PoolConfig, RouterPool};
 use crate::net::router::Router;
 use crate::stats::Summary;
 use crate::util::json::Json;
-use crate::workload::{value_for, Op, Scenario};
-use std::time::Instant;
+use crate::workload::{value_for, Op, Scenario, FAILOVER_VALUE_SIZE};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// One measured (scenario, engine) cell.
 #[derive(Clone, Debug)]
@@ -147,15 +153,11 @@ pub fn run_pool(
     ops: Vec<Op>,
     scenario: &str,
 ) -> anyhow::Result<ThroughputReport> {
-    let cell = coord.snapshot_cell();
     let engine = format!("pool_w{}_d{}", cfg.workers, cfg.pipeline_depth);
-    let pool = RouterPool::connect(
-        &cell,
-        PoolConfig {
-            verify_hits: true,
-            ..cfg.clone()
-        },
-    )?;
+    let pool = coord.connect_pool(PoolConfig {
+        verify_hits: true,
+        ..cfg.clone()
+    })?;
     let (sets, gets) = split_phases(ops);
     let t0 = Instant::now();
     let mut res = pool.run(sets)?;
@@ -188,15 +190,11 @@ pub fn run_churn(
     }
     let ops = scenario.ops(seed);
     let total = ops.len() as u64;
-    let cell = coord.snapshot_cell();
     let engine = format!("pool_w{}_d{}", cfg.workers, cfg.pipeline_depth);
-    let pool = RouterPool::connect(
-        &cell,
-        PoolConfig {
-            verify_hits: true,
-            ..cfg.clone()
-        },
-    )?;
+    let pool = coord.connect_pool(PoolConfig {
+        verify_hits: true,
+        ..cfg.clone()
+    })?;
     let t0 = Instant::now();
     let pending = pool.submit(ops);
     // Membership churn racing the in-flight batch: grow by one node,
@@ -223,6 +221,8 @@ pub fn run_churn(
 #[derive(Clone, Debug)]
 pub struct SuiteConfig {
     pub nodes: u32,
+    /// Replication factor every scenario's cluster runs at.
+    pub replicas: usize,
     pub keys: u64,
     pub read_ops: u64,
     pub value_size: u32,
@@ -238,6 +238,7 @@ impl Default for SuiteConfig {
     fn default() -> Self {
         Self {
             nodes: 8,
+            replicas: 1,
             keys: 4_000,
             read_ops: 16_000,
             value_size: 16,
@@ -259,6 +260,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> anyhow::Result<Vec<ThroughputReport>> {
         workers: cfg.workers,
         pipeline_depth: cfg.pipeline_depth,
         verify_hits: true,
+        ..PoolConfig::default()
     };
     let mut reports = Vec::new();
 
@@ -269,7 +271,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> anyhow::Result<Vec<ThroughputReport>> {
         read_ops: cfg.read_ops,
     };
     {
-        let mut coord = Coordinator::new(1);
+        let mut coord = Coordinator::new(cfg.replicas);
         for i in 0..cfg.nodes {
             coord.spawn_node(i, 1.0)?;
         }
@@ -289,7 +291,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> anyhow::Result<Vec<ThroughputReport>> {
         alpha: cfg.zipf_alpha,
     };
     {
-        let mut coord = Coordinator::new(1);
+        let mut coord = Coordinator::new(cfg.replicas);
         for i in 0..cfg.nodes {
             coord.spawn_node(i, 1.0)?;
         }
@@ -304,7 +306,7 @@ pub fn run_suite(cfg: &SuiteConfig) -> anyhow::Result<Vec<ThroughputReport>> {
         read_ops: cfg.read_ops,
     };
     {
-        let mut coord = Coordinator::new(1);
+        let mut coord = Coordinator::new(cfg.replicas);
         for i in 0..cfg.nodes {
             coord.spawn_node(i, 1.0)?;
         }
@@ -361,12 +363,477 @@ pub fn write_json(
         ("value_size", Json::Num(cfg.value_size as f64)),
         ("workers", Json::Num(cfg.workers as f64)),
         ("pipeline_depth", Json::Num(cfg.pipeline_depth as f64)),
+        ("replicas", Json::Num(cfg.replicas as f64)),
         ("seed", Json::Num(cfg.seed as f64)),
         ("results", Json::Arr(results)),
     ];
     if let Some(speedup) = uniform_speedup(reports) {
         fields.push(("uniform_speedup_pool_vs_router", Json::Num(speedup)));
     }
+    std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Fault-plane scenarios: kill-node-during-traffic and flapping-node.
+// ---------------------------------------------------------------------
+
+/// Configuration for the failover/flapping drivers (`asura
+/// bench-failover`).
+#[derive(Clone, Debug)]
+pub struct FailoverConfig {
+    pub nodes: u32,
+    pub replicas: usize,
+    /// Replica acks a SET needs while a holder is down (1..=replicas).
+    pub write_quorum: usize,
+    pub keys: u64,
+    /// Ops per driver round (the driver loops rounds until the fault
+    /// story completes, so total traffic is a multiple of this).
+    pub read_ops: u64,
+    pub workers: usize,
+    pub pipeline_depth: usize,
+    /// Detector thresholds (consecutive missed probes).
+    pub suspect_after: u32,
+    pub dead_after: u32,
+    /// Control-loop cadence between probe rounds.
+    pub probe_interval_ms: u64,
+    /// Per-probe connect/read timeout. Generous by default: a loaded CI
+    /// host must not turn a slow-but-alive node into a false death
+    /// mid-flap.
+    pub probe_timeout_ms: u64,
+    /// Keys re-replicated per repair batch (the repair rate limit)...
+    pub repair_batch: usize,
+    /// ...and the pause between batches.
+    pub repair_interval_ms: u64,
+    pub seed: u64,
+    /// Where to write `BENCH_failover.json` (`None` = don't).
+    pub out_json: Option<String>,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 6,
+            replicas: 3,
+            write_quorum: 2,
+            keys: 2_000,
+            read_ops: 4_000,
+            workers: 4,
+            pipeline_depth: 16,
+            suspect_after: 1,
+            dead_after: 3,
+            probe_interval_ms: 20,
+            probe_timeout_ms: 500,
+            repair_batch: 128,
+            repair_interval_ms: 2,
+            seed: 0xFA11,
+            out_json: Some("BENCH_failover.json".to_string()),
+        }
+    }
+}
+
+/// One measured fault scenario.
+#[derive(Clone, Debug)]
+pub struct FailoverReport {
+    pub scenario: String,
+    pub nodes: u32,
+    pub replicas: usize,
+    pub write_quorum: usize,
+    /// Ops driven while the fault story played out.
+    pub ops: u64,
+    pub hits: u64,
+    /// Ops recovered via replica failover after a connection failure.
+    pub failovers: u64,
+    /// GETs that replayed after a routing race (epoch bumps).
+    pub retried: u64,
+    /// SETs acked below full RF (quorum met; repair owed a copy).
+    pub degraded_writes: u64,
+    /// Reads that found nothing anywhere — must be 0.
+    pub lost: u64,
+    /// Suspect transitions the detector reported.
+    pub suspect_events: u64,
+    /// Kill → death verdict published (0 for flapping: never declared).
+    pub detect_ms: f64,
+    /// Kill → every key back at full RF, audit-verified (0 for flapping).
+    pub time_to_full_rf_ms: f64,
+    /// Keys the repair plane restored.
+    pub repaired_keys: u64,
+    /// Keys with no surviving replica (RF exhausted) — must be 0.
+    pub lost_keys: u64,
+    /// Post-repair holder audit: total keys / still-under-replicated.
+    pub audit_keys: u64,
+    pub audit_under: u64,
+    /// Membership epochs the traffic observed (min, max).
+    pub epochs: (u64, u64),
+}
+
+impl FailoverReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<9} rf={} q={} {:>8} ops  failover {:>4}  degraded {:>4}  lost {:>2}  \
+             detect {:>6.1} ms  full-rf {:>7.1} ms  repaired {:>5}  audit {}/{}  epochs {}..{}",
+            self.scenario,
+            self.replicas,
+            self.write_quorum,
+            self.ops,
+            self.failovers,
+            self.degraded_writes,
+            self.lost,
+            self.detect_ms,
+            self.time_to_full_rf_ms,
+            self.repaired_keys,
+            self.audit_keys - self.audit_under,
+            self.audit_keys,
+            self.epochs.0,
+            self.epochs.1
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("write_quorum", Json::Num(self.write_quorum as f64)),
+            ("ops", Json::Num(self.ops as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("retried", Json::Num(self.retried as f64)),
+            ("degraded_writes", Json::Num(self.degraded_writes as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("suspect_events", Json::Num(self.suspect_events as f64)),
+            ("time_to_detect_ms", Json::Num(self.detect_ms)),
+            ("time_to_full_rf_ms", Json::Num(self.time_to_full_rf_ms)),
+            ("repaired_keys", Json::Num(self.repaired_keys as f64)),
+            ("lost_keys", Json::Num(self.lost_keys as f64)),
+            ("audit_keys", Json::Num(self.audit_keys as f64)),
+            ("audit_under", Json::Num(self.audit_under as f64)),
+            ("epoch_min", Json::Num(self.epochs.0 as f64)),
+            ("epoch_max", Json::Num(self.epochs.1 as f64)),
+        ])
+    }
+}
+
+/// Continuous traffic: replay the op stream through the pool, round
+/// after round, until `stop` is raised; the aggregate counters come back
+/// through the join handle. At least one full round always runs.
+fn drive_until(
+    pool: RouterPool,
+    ops: Vec<Op>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<std::io::Result<BatchResult>> {
+    std::thread::spawn(move || {
+        let mut agg = BatchResult::new();
+        loop {
+            let res = pool.run(ops.clone())?;
+            agg.merge(&res);
+            if stop.load(Ordering::Acquire) {
+                return Ok(agg);
+            }
+        }
+    })
+}
+
+fn join_driver(
+    driver: std::thread::JoinHandle<std::io::Result<BatchResult>>,
+) -> anyhow::Result<BatchResult> {
+    let res = driver
+        .join()
+        .map_err(|_| anyhow::anyhow!("traffic driver panicked"))??;
+    Ok(res)
+}
+
+fn build_cluster(cfg: &FailoverConfig, scenario: &Scenario) -> anyhow::Result<Coordinator> {
+    anyhow::ensure!(
+        (cfg.nodes as usize) > cfg.replicas,
+        "need more nodes than replicas to survive a death"
+    );
+    anyhow::ensure!(
+        cfg.write_quorum >= 1 && cfg.write_quorum <= cfg.replicas,
+        "write quorum must be within 1..=replicas"
+    );
+    anyhow::ensure!(
+        cfg.suspect_after >= 1 && cfg.suspect_after < cfg.dead_after,
+        "need suspect_after in 1..dead_after (a flap must be observable without a death)"
+    );
+    let mut coord = Coordinator::new(cfg.replicas);
+    for i in 0..cfg.nodes {
+        coord.spawn_node(i, 1.0)?;
+    }
+    for &k in &scenario.preload_keys(cfg.seed) {
+        coord.set(k, &value_for(k, FAILOVER_VALUE_SIZE))?;
+    }
+    Ok(coord)
+}
+
+fn monitor_for(cfg: &FailoverConfig) -> HealthMonitor {
+    HealthMonitor::new(HealthConfig {
+        suspect_after: cfg.suspect_after,
+        dead_after: cfg.dead_after,
+        timeout: Duration::from_millis(cfg.probe_timeout_ms.max(1)),
+    })
+}
+
+/// Kill-node-during-traffic: preload at RF, drive a mixed read/rewrite
+/// storm, crash one holder under it, and measure the full fault story —
+/// time for the detector to declare it dead (a new epoch every router
+/// converges on), then time for paced background repair to restore full
+/// replication factor, verified by an over-the-wire holder audit. Zero
+/// reads may fail at any point.
+pub fn run_failover(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
+    let scenario = Scenario::Failover {
+        keys: cfg.keys,
+        read_ops: cfg.read_ops,
+        write_every: 8,
+    };
+    let mut coord = build_cluster(cfg, &scenario)?;
+    let pool = coord.connect_pool(PoolConfig {
+        workers: cfg.workers,
+        pipeline_depth: cfg.pipeline_depth,
+        verify_hits: true,
+        write_quorum: cfg.write_quorum,
+        ..PoolConfig::default() // registry + repair hints wired by connect_pool
+    })?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
+
+    // Let traffic flow, then crash a replica holder under it.
+    std::thread::sleep(Duration::from_millis(cfg.probe_interval_ms.max(5)));
+    let victim: NodeId = cfg.nodes / 2;
+    let t_kill = Instant::now();
+    coord.kill_node(victim)?;
+
+    // Detection loop: probe until the victim is declared dead; each
+    // verdict is applied immediately (suspects steer reads, death
+    // publishes the new epoch + queues repair).
+    let mut monitor = monitor_for(cfg);
+    let mut suspect_events = 0u64;
+    let detect_ms = loop {
+        let events = monitor.tick(&coord.node_addrs(), coord.epoch());
+        suspect_events += events
+            .iter()
+            .filter(|e| matches!(e, HealthEvent::Suspected(_)))
+            .count() as u64;
+        let died = events.iter().any(|e| matches!(e, HealthEvent::Died(_)));
+        coord.apply_health_events(&events)?;
+        if died {
+            break t_kill.elapsed().as_secs_f64() * 1e3;
+        }
+        anyhow::ensure!(
+            t_kill.elapsed() < Duration::from_secs(30),
+            "failure detection never fired"
+        );
+        std::thread::sleep(Duration::from_millis(cfg.probe_interval_ms));
+    };
+
+    // Paced background repair under the still-running traffic.
+    let mut repaired = 0u64;
+    let mut lost_keys = 0u64;
+    let t_repair = Instant::now();
+    while coord.repair_pending() > 0 {
+        anyhow::ensure!(
+            t_repair.elapsed() < Duration::from_secs(60),
+            "repair did not converge ({} keys still pending)",
+            coord.repair_pending()
+        );
+        let tick = coord.repair_step(cfg.repair_batch)?;
+        repaired += tick.repaired as u64;
+        lost_keys += tick.lost as u64;
+        std::thread::sleep(Duration::from_millis(cfg.repair_interval_ms));
+    }
+    // Stamp full-RF when the repair queue first drains — the quiesce
+    // below waits out an arbitrary amount of in-flight traffic and must
+    // not pollute the headline metric. Extended only if the post-quiesce
+    // audit finds stragglers and more repair actually runs.
+    let mut time_to_full_rf_ms = t_kill.elapsed().as_secs_f64() * 1e3;
+
+    // Quiesce traffic, then audit holders; writes that raced the death
+    // window may owe a copy — feed them back until the audit is clean.
+    stop.store(true, Ordering::Release);
+    let res = join_driver(driver)?;
+    let audit = {
+        let mut attempt = 0;
+        loop {
+            let audit = coord.audit_replication()?;
+            if audit.is_full() {
+                break audit;
+            }
+            attempt += 1;
+            anyhow::ensure!(
+                attempt <= 5,
+                "audit still finds {} under-replicated keys",
+                audit.under_replicated()
+            );
+            coord.enqueue_repair(audit.under_keys.iter().copied());
+            // Fresh budget: this drain must not inherit whatever the
+            // main repair loop already spent.
+            let t_post = Instant::now();
+            while coord.repair_pending() > 0 {
+                anyhow::ensure!(
+                    t_post.elapsed() < Duration::from_secs(60),
+                    "post-audit repair did not converge"
+                );
+                let tick = coord.repair_step(cfg.repair_batch)?;
+                repaired += tick.repaired as u64;
+                lost_keys += tick.lost as u64;
+            }
+            time_to_full_rf_ms = t_kill.elapsed().as_secs_f64() * 1e3;
+        }
+    };
+
+    Ok(FailoverReport {
+        scenario: scenario.name().to_string(),
+        nodes: cfg.nodes,
+        replicas: cfg.replicas,
+        write_quorum: cfg.write_quorum,
+        ops: res.ops,
+        hits: res.hits,
+        failovers: res.failovers,
+        retried: res.retried,
+        degraded_writes: res.degraded_writes,
+        lost: res.lost,
+        suspect_events,
+        detect_ms,
+        time_to_full_rf_ms,
+        repaired_keys: repaired,
+        lost_keys,
+        audit_keys: audit.keys as u64,
+        audit_under: audit.under_replicated() as u64,
+        epochs: (res.epoch_min, res.epoch_max),
+    })
+}
+
+/// Flapping-node: same cluster and traffic, but the fault is a node the
+/// detector repeatedly *suspects* (injected probe failures below the
+/// death threshold) and that keeps recovering. The measured claim is the
+/// inverse of failover's: zero epochs published, zero keys moved, zero
+/// reads failed — a flapping node must never trigger data movement.
+pub fn run_flapping(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
+    let scenario = Scenario::Flapping {
+        keys: cfg.keys,
+        read_ops: cfg.read_ops,
+    };
+    let mut coord = build_cluster(cfg, &scenario)?;
+    let pool = coord.connect_pool(PoolConfig {
+        workers: cfg.workers,
+        pipeline_depth: cfg.pipeline_depth,
+        verify_hits: true,
+        write_quorum: cfg.write_quorum,
+        ..PoolConfig::default() // registry + repair hints wired by connect_pool
+    })?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
+
+    let victim: NodeId = cfg.nodes / 2;
+    let epoch_before = coord.epoch();
+    let mut monitor = monitor_for(cfg);
+    let mut suspect_events = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        // One flap: miss dead_after-1 probes (suspect, never dead),
+        // then recover.
+        monitor.inject_probe_failures(victim, cfg.dead_after - 1);
+        loop {
+            let events = monitor.tick(&coord.node_addrs(), coord.epoch());
+            anyhow::ensure!(
+                !events.iter().any(|e| matches!(e, HealthEvent::Died(_))),
+                "flapping node was declared dead"
+            );
+            suspect_events += events
+                .iter()
+                .filter(|e| matches!(e, HealthEvent::Suspected(_)))
+                .count() as u64;
+            let recovered = events.iter().any(|e| matches!(e, HealthEvent::Recovered(_)));
+            coord.apply_health_events(&events)?;
+            if recovered {
+                break;
+            }
+            anyhow::ensure!(
+                t0.elapsed() < Duration::from_secs(30),
+                "flap never recovered"
+            );
+            std::thread::sleep(Duration::from_millis(cfg.probe_interval_ms));
+        }
+    }
+    anyhow::ensure!(
+        coord.epoch() == epoch_before,
+        "flapping must not publish a membership epoch"
+    );
+    anyhow::ensure!(
+        coord.repair_pending() == 0,
+        "flapping must not queue repair work"
+    );
+
+    stop.store(true, Ordering::Release);
+    let res = join_driver(driver)?;
+    let audit = coord.audit_replication()?;
+
+    Ok(FailoverReport {
+        scenario: scenario.name().to_string(),
+        nodes: cfg.nodes,
+        replicas: cfg.replicas,
+        write_quorum: cfg.write_quorum,
+        ops: res.ops,
+        hits: res.hits,
+        failovers: res.failovers,
+        retried: res.retried,
+        degraded_writes: res.degraded_writes,
+        lost: res.lost,
+        suspect_events,
+        detect_ms: 0.0,
+        time_to_full_rf_ms: 0.0,
+        repaired_keys: 0,
+        lost_keys: 0,
+        audit_keys: audit.keys as u64,
+        audit_under: audit.under_replicated() as u64,
+        epochs: (res.epoch_min, res.epoch_max),
+    })
+}
+
+/// Run both fault scenarios, print one line each, enforce the
+/// zero-loss/full-RF acceptance gates, and emit `BENCH_failover.json`.
+pub fn run_failover_suite(cfg: &FailoverConfig) -> anyhow::Result<Vec<FailoverReport>> {
+    let mut reports = Vec::new();
+    let r = run_failover(cfg)?;
+    println!("{}", r.line());
+    reports.push(r);
+    let r = run_flapping(cfg)?;
+    println!("{}", r.line());
+    reports.push(r);
+
+    let lost: u64 = reports.iter().map(|r| r.lost + r.lost_keys).sum();
+    anyhow::ensure!(lost == 0, "{lost} reads/keys lost across the failover suite");
+    let under: u64 = reports.iter().map(|r| r.audit_under).sum();
+    anyhow::ensure!(under == 0, "{under} keys under-replicated after repair");
+    if let Some(path) = &cfg.out_json {
+        write_failover_json(path, cfg, &reports)?;
+        println!("wrote {path}");
+    }
+    Ok(reports)
+}
+
+/// Serialize the failover suite to its perf-trajectory JSON file.
+pub fn write_failover_json(
+    path: &str,
+    cfg: &FailoverConfig,
+    reports: &[FailoverReport],
+) -> anyhow::Result<()> {
+    let results: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+    let fields = vec![
+        ("bench", Json::Str("failover".to_string())),
+        ("nodes", Json::Num(cfg.nodes as f64)),
+        ("replicas", Json::Num(cfg.replicas as f64)),
+        ("write_quorum", Json::Num(cfg.write_quorum as f64)),
+        ("keys", Json::Num(cfg.keys as f64)),
+        ("read_ops", Json::Num(cfg.read_ops as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("suspect_after", Json::Num(cfg.suspect_after as f64)),
+        ("dead_after", Json::Num(cfg.dead_after as f64)),
+        ("probe_interval_ms", Json::Num(cfg.probe_interval_ms as f64)),
+        ("repair_batch", Json::Num(cfg.repair_batch as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("results", Json::Arr(results)),
+    ];
     std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
     Ok(())
 }

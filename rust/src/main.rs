@@ -14,8 +14,13 @@
 //!               --config cluster.json               (weighted membership)
 //!               --join 0=host:port,1=host:port      (external node daemons)
 //! asura bench-serve [--nodes N --keys K --reads R]  throughput harness:
-//!               [--workers W --depth D --seed S]    single Router vs
-//!               [--out BENCH_throughput.json]       RouterPool, 3 scenarios
+//!               [--replicas R --workers W --depth D]  single Router vs
+//!               [--seed S --out BENCH_throughput.json] RouterPool, 3 scenarios
+//! asura bench-failover [--nodes N --replicas R]     fault-plane harness:
+//!               [--quorum Q --keys K --reads R]     kill-node + flapping
+//!               [--suspect-after N --dead-after N]  under live traffic,
+//!               [--repair-batch B --seed S]         time-to-detect /
+//!               [--out BENCH_failover.json]         time-to-full-RF
 //! asura node    --port P                            standalone storage node
 //! asura place   --id X --nodes N [--algo asura|chash|straw]
 //! asura info    [--artifacts DIR]                   PJRT + artifact info
@@ -37,6 +42,7 @@ fn main() {
         "experiment" => run_experiment(&args),
         "serve" => run_serve(&args),
         "bench-serve" => run_bench_serve(&args),
+        "bench-failover" => run_bench_failover(&args),
         "node" => run_node(&args),
         "place" => run_place(&args),
         "info" => run_info(&args),
@@ -269,6 +275,7 @@ fn run_bench_serve(args: &Args) -> anyhow::Result<()> {
     let default = asura::loadgen::SuiteConfig::default();
     let cfg = asura::loadgen::SuiteConfig {
         nodes: args.get_u64("nodes", default.nodes as u64) as u32,
+        replicas: args.get_u64("replicas", default.replicas as u64) as usize,
         keys: args.get_u64("keys", default.keys),
         read_ops: args.get_u64("reads", default.read_ops),
         value_size: args.get_u64("value-size", default.value_size as u64) as u32,
@@ -283,11 +290,64 @@ fn run_bench_serve(args: &Args) -> anyhow::Result<()> {
     };
     anyhow::ensure!(cfg.nodes >= 1, "--nodes must be >= 1");
     anyhow::ensure!(cfg.keys >= 1, "--keys must be >= 1");
+    anyhow::ensure!(
+        cfg.replicas >= 1 && cfg.replicas <= cfg.nodes as usize,
+        "--replicas must be within 1..=nodes"
+    );
+    anyhow::ensure!(
+        cfg.workers >= 1 && cfg.pipeline_depth >= 1,
+        "--workers and --depth must be >= 1"
+    );
     println!(
-        "bench-serve: {} nodes, {} keys, {} reads, {} workers × depth {}",
-        cfg.nodes, cfg.keys, cfg.read_ops, cfg.workers, cfg.pipeline_depth
+        "bench-serve: {} nodes, rf={}, {} keys, {} reads, {} workers × depth {}",
+        cfg.nodes, cfg.replicas, cfg.keys, cfg.read_ops, cfg.workers, cfg.pipeline_depth
     );
     let reports = asura::loadgen::run_suite(&cfg)?;
+    anyhow::ensure!(!reports.is_empty(), "no scenarios ran");
+    Ok(())
+}
+
+/// Fault-plane harness: kill-node-during-traffic + flapping-node, with
+/// time-to-detect and time-to-full-RF emitted to `BENCH_failover.json`.
+fn run_bench_failover(args: &Args) -> anyhow::Result<()> {
+    let default = asura::loadgen::FailoverConfig::default();
+    let cfg = asura::loadgen::FailoverConfig {
+        nodes: args.get_u64("nodes", default.nodes as u64) as u32,
+        replicas: args.get_u64("replicas", default.replicas as u64) as usize,
+        write_quorum: args.get_u64("quorum", default.write_quorum as u64) as usize,
+        keys: args.get_u64("keys", default.keys),
+        read_ops: args.get_u64("reads", default.read_ops),
+        workers: args.get_u64("workers", default.workers as u64) as usize,
+        pipeline_depth: args.get_u64("depth", default.pipeline_depth as u64) as usize,
+        suspect_after: args.get_u64("suspect-after", default.suspect_after as u64) as u32,
+        dead_after: args.get_u64("dead-after", default.dead_after as u64) as u32,
+        probe_interval_ms: args.get_u64("probe-ms", default.probe_interval_ms),
+        probe_timeout_ms: args.get_u64("probe-timeout-ms", default.probe_timeout_ms),
+        repair_batch: args.get_u64("repair-batch", default.repair_batch as u64) as usize,
+        repair_interval_ms: args.get_u64("repair-ms", default.repair_interval_ms),
+        seed: args.get_u64("seed", default.seed),
+        out_json: Some(
+            args.get_or("out", default.out_json.as_deref().unwrap_or("BENCH_failover.json"))
+                .to_string(),
+        ),
+    };
+    anyhow::ensure!(
+        cfg.workers >= 1 && cfg.pipeline_depth >= 1,
+        "--workers and --depth must be >= 1"
+    );
+    println!(
+        "bench-failover: {} nodes, rf={}, quorum={}, {} keys, {} reads/round, \
+         detect {}×{} ms, repair batch {}",
+        cfg.nodes,
+        cfg.replicas,
+        cfg.write_quorum,
+        cfg.keys,
+        cfg.read_ops,
+        cfg.dead_after,
+        cfg.probe_interval_ms,
+        cfg.repair_batch
+    );
+    let reports = asura::loadgen::run_failover_suite(&cfg)?;
     anyhow::ensure!(!reports.is_empty(), "no scenarios ran");
     Ok(())
 }

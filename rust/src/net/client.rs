@@ -61,6 +61,23 @@ impl Conn {
         }
     }
 
+    /// Failure-detection probe: send the coordinator's epoch, get back
+    /// the node's echo + key count.
+    pub fn heartbeat(&mut self, epoch: u64) -> std::io::Result<(u64, u64)> {
+        match self.call(&Request::Heartbeat { epoch })? {
+            Response::Alive { epoch, keys } => Ok((epoch, keys)),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// Enumerate every key the node holds (repair-plane holder audits).
+    pub fn keys(&mut self) -> std::io::Result<Vec<u64>> {
+        match self.call(&Request::Keys)? {
+            Response::KeyList(keys) => Ok(keys),
+            other => Err(bad(other)),
+        }
+    }
+
     pub fn ping(&mut self) -> std::io::Result<()> {
         match self.call(&Request::Ping)? {
             Response::Pong => Ok(()),

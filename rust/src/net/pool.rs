@@ -14,18 +14,34 @@
 //!   raced the delete phase of a migration refreshes the snapshot and
 //!   replays against the new epoch's replica set; only an op that *still*
 //!   misses counts as lost ([`BatchResult::lost`] — zero across a clean
-//!   rebalance).
+//!   rebalance);
+//! - **node death is survived by both directions** (the fault plane,
+//!   [`crate::fault`]): SETs fan out to the full replica set and ack at a
+//!   configurable [`PoolConfig::write_quorum`], so a dead replica degrades
+//!   a write instead of failing it; GETs route to the first non-suspect
+//!   holder and, on a connection failure, fail over to surviving replicas
+//!   ([`BatchResult::failovers`]);
+//! - **acked writes are registered**: with [`PoolConfig::registry`] wired
+//!   (see `Coordinator::connect_pool`), every acked SET key is written
+//!   back to the coordinator, so migration and repair planning cover
+//!   pool-written data — writes no longer strand on their old holders
+//!   when they race a rebalance.
 //!
-//! **Known limit:** SETs concurrent with a *live* migration are not
-//! fenced — a write landing on a holder between the migration's copy and
-//! delete phases can be superseded by the migrated (older) copy, and
-//! pool-written keys are not in the coordinator's migration registry.
-//! The churn scenarios therefore race reads only; write fencing is a
-//! ROADMAP open item ("Writer registry").
+//! **Known limits:** values are not versioned — for a key *already under
+//! management*, a SET racing a migration's copy window can still be
+//! superseded by the migrated copy (last-copier-wins). The harnesses
+//! write deterministic per-key values, so the scenarios are insensitive
+//! to this; value fencing would need write versioning on the nodes. And
+//! registration happens in the same call that reads a flush's acks, but
+//! a write whose ack lands in the instants between a migration's final
+//! registry drain and the worker's `register_batch` is absorbed only at
+//! the *next* plan — true write fencing against epoch bumps needs the
+//! same versioning.
 
 use super::client::Conn;
 use super::protocol::{Request, Response};
 use crate::algo::{DatumId, NodeId, Placer};
+use crate::coordinator::registry::KeyRegistry;
 use crate::coordinator::snapshot::{SnapshotCell, SnapshotReader};
 use crate::stats::Summary;
 use crate::workload::{value_for, Op};
@@ -53,6 +69,21 @@ pub struct PoolConfig {
     /// [`BatchResult::lost`]. Scenario drivers enable this when every
     /// read targets a previously written key.
     pub verify_hits: bool,
+    /// Replica acks required before a SET counts as stored. `0` means
+    /// *all* replicas (strict — any unreachable holder fails the write,
+    /// the pre-fault-plane behavior). At RF=3 a quorum of 2 keeps writes
+    /// flowing through a single-node failure; background repair restores
+    /// the missing copy once the failure is detected.
+    pub write_quorum: usize,
+    /// Writer registry for the coordinator write-back (see
+    /// [`crate::coordinator::registry`]). `None` = unregistered writes,
+    /// invisible to migration/repair planning.
+    pub registry: Option<Arc<KeyRegistry>>,
+    /// Repair-hint channel: keys acked *below* full RF (degraded quorum
+    /// writes) are reported here so the coordinator can restore their
+    /// missing copy even when the unreachable holder recovers without
+    /// ever being declared dead. Wired by `Coordinator::connect_pool`.
+    pub repair_hints: Option<Arc<KeyRegistry>>,
 }
 
 impl Default for PoolConfig {
@@ -61,6 +92,9 @@ impl Default for PoolConfig {
             workers: 8,
             pipeline_depth: 32,
             verify_hits: false,
+            write_quorum: 0,
+            registry: None,
+            repair_hints: None,
         }
     }
 }
@@ -76,6 +110,12 @@ pub struct BatchResult {
     pub retried: u64,
     /// GETs still missing after the replay — misrouted or lost data.
     pub lost: u64,
+    /// Ops recovered after a connection failure: reads served by a
+    /// surviving replica, writes re-fanned to quorum.
+    pub failovers: u64,
+    /// SETs acked by their write quorum but fewer than all replicas
+    /// (a holder was unreachable; repair owes it a copy).
+    pub degraded_writes: u64,
     /// Lowest / highest membership epoch observed while executing.
     pub epoch_min: u64,
     pub epoch_max: u64,
@@ -86,7 +126,8 @@ pub struct BatchResult {
 }
 
 impl BatchResult {
-    fn new() -> Self {
+    /// Empty result (identity element of [`Self::merge`]).
+    pub fn new() -> Self {
         BatchResult {
             epoch_min: u64::MAX,
             ..Default::default()
@@ -98,12 +139,16 @@ impl BatchResult {
         self.epoch_max = self.epoch_max.max(epoch);
     }
 
-    fn merge(&mut self, other: &BatchResult) {
+    /// Fold another batch's counters into this one (drivers aggregating
+    /// across rounds use this too).
+    pub fn merge(&mut self, other: &BatchResult) {
         self.ops += other.ops;
         self.hits += other.hits;
         self.misses += other.misses;
         self.retried += other.retried;
         self.lost += other.lost;
+        self.failovers += other.failovers;
+        self.degraded_writes += other.degraded_writes;
         self.epoch_min = self.epoch_min.min(other.epoch_min);
         self.epoch_max = self.epoch_max.max(other.epoch_max);
         self.latency.absorb(&other.latency);
@@ -243,17 +288,14 @@ impl Worker {
     /// Execute one pipeline-depth group under a single snapshot.
     fn run_group(&mut self, group: &[Op], res: &mut BatchResult) -> std::io::Result<()> {
         let snap = Arc::clone(self.reader.current());
-        // Staleness baseline for this group: replay paths may refresh the
-        // reader mid-group, but the group keeps routing by `snap`, so
-        // "stale" must be judged against the generation `snap` was
-        // pinned at — not the reader's latest refresh.
-        let group_generation = self.reader.observed_generation();
         res.note_epoch(snap.epoch);
         if snap.placer.node_count() == 0 {
             return Err(other_err("no live nodes in the published snapshot".to_string()));
         }
         // Partition by target node, preserving per-node op order. A SET
-        // fans out to its full replica set; a GET targets the primary.
+        // fans out to its full replica set; a GET targets the first
+        // non-suspect holder (the primary unless the failure detector
+        // distrusts it).
         let mut by_node: HashMap<NodeId, Vec<Request>> = HashMap::new();
         let mut replicas: Vec<NodeId> = Vec::new();
         for op in group {
@@ -268,19 +310,23 @@ impl Worker {
                     }
                 }
                 Op::Get { key } => {
-                    by_node
-                        .entry(snap.placer.place(key))
-                        .or_default()
-                        .push(Request::Get { key });
+                    let target = snap.read_target(key, &mut replicas);
+                    by_node.entry(target).or_default().push(Request::Get { key });
                 }
             }
         }
         res.ops += group.len() as u64;
         // One pipelined round trip per node; the flush RTT is every
-        // carried op's latency sample.
+        // carried op's latency sample. A flush that fails on a connection
+        // error fails the *connection*, not its ops: the peer is dead, or
+        // left the cluster under a stale route — either way SETs replay
+        // against the freshest replica set at the write quorum, and GETs
+        // fail over to surviving replicas.
         let mut node_ids: Vec<NodeId> = by_node.keys().copied().collect();
         node_ids.sort_unstable();
         let mut missed: Vec<DatumId> = Vec::new();
+        let mut failed_sets: HashMap<DatumId, Vec<u8>> = HashMap::new();
+        let mut failed_gets: Vec<DatumId> = Vec::new();
         for node in node_ids {
             let reqs = &by_node[&node];
             let addr = snap
@@ -288,17 +334,39 @@ impl Worker {
                 .ok_or_else(|| other_err(format!("no address for node {node}")))?;
             match self.flush_node(node, addr, reqs, res, &mut missed) {
                 Ok(()) => {}
-                Err(e)
-                    if is_conn_error(&e)
-                        && self.reader.cell_generation() != group_generation =>
-                {
-                    // Stale route: this group's snapshot predates an epoch
-                    // bump and the node may have left the cluster (its
-                    // listener is gone). Replay the node's ops one by one
-                    // under the fresh snapshot.
-                    self.replay_node_group(reqs, res, &mut missed)?;
+                Err(e) if is_conn_error(&e) => {
+                    for req in reqs {
+                        match req {
+                            // Keyed map: a SET that fanned out to several
+                            // failed nodes replays once (idempotent).
+                            Request::Set { key, value } => {
+                                failed_sets.insert(*key, value.clone());
+                            }
+                            Request::Get { key } => failed_gets.push(*key),
+                            other => {
+                                return Err(other_err(format!(
+                                    "unexpected request in failover {other:?}"
+                                )));
+                            }
+                        }
+                    }
                 }
                 Err(e) => return Err(e),
+            }
+        }
+        for (key, value) in failed_sets {
+            self.replay_set(key, &value, res)?;
+            res.failovers += 1;
+        }
+        for key in failed_gets {
+            if self.replay_get(key, res)? {
+                res.hits += 1;
+                res.failovers += 1;
+            } else {
+                res.misses += 1;
+                if self.cfg.verify_hits {
+                    res.lost += 1;
+                }
             }
         }
         // Misses under verify_hits: replay over the freshest replica set
@@ -316,7 +384,10 @@ impl Worker {
     }
 
     /// One pipelined round trip to `node`; on failure the connection is
-    /// discarded so the next contact reconnects.
+    /// discarded so the next contact reconnects. Acked SET keys are
+    /// written back to the registry *in the same call that read the
+    /// acks* — deferring registration any further widens the window in
+    /// which a migration's reconcile drain can miss a just-acked write.
     fn flush_node(
         &mut self,
         node: NodeId,
@@ -334,9 +405,13 @@ impl Worker {
             }
         };
         let rtt_ns = t0.elapsed().as_nanos() as f64;
+        let mut acked: Vec<DatumId> = Vec::new();
         for (req, resp) in reqs.iter().zip(&resps) {
             match (req, resp) {
-                (Request::Set { .. }, Response::Stored) => res.latency.push(rtt_ns),
+                (Request::Set { key, .. }, Response::Stored) => {
+                    res.latency.push(rtt_ns);
+                    acked.push(*key);
+                }
                 (Request::Get { .. }, Response::Value(_)) => {
                     res.hits += 1;
                     res.latency.push(rtt_ns);
@@ -356,44 +431,19 @@ impl Worker {
                 }
             }
         }
-        Ok(())
-    }
-
-    /// Fallback for a node-group whose flush failed on a stale route:
-    /// re-execute each op individually under the freshest snapshot.
-    fn replay_node_group(
-        &mut self,
-        reqs: &[Request],
-        res: &mut BatchResult,
-        missed: &mut Vec<DatumId>,
-    ) -> std::io::Result<()> {
-        for req in reqs {
-            match req {
-                Request::Set { key, value } => self.replay_set(*key, value, res)?,
-                Request::Get { key } => {
-                    if self.cfg.verify_hits {
-                        // Deferred to the caller's miss loop (counted as
-                        // retried there); no I/O happens for it here.
-                        missed.push(*key);
-                    } else if self.replay_get(*key, res)? {
-                        res.hits += 1;
-                    } else {
-                        res.misses += 1;
-                    }
-                }
-                other => {
-                    return Err(other_err(format!("unexpected request in replay {other:?}")));
-                }
-            }
+        if let Some(registry) = &self.cfg.registry {
+            registry.register_batch(&acked);
         }
         Ok(())
     }
 
     /// Replay a SET against the freshest replica set, going around again
-    /// if membership changes under the probe. A target unreachable while
-    /// membership is stable is a real error — failing loudly beats
-    /// silently dropping a write. (This recovers *routing* races only;
-    /// see the module doc for the unfenced write-vs-migration window.)
+    /// if membership changes under the probe. The write succeeds once its
+    /// quorum acks ([`PoolConfig::write_quorum`]); a holder unreachable
+    /// beyond the quorum is the repair plane's debt, counted in
+    /// [`BatchResult::degraded_writes`]. A write that cannot even reach
+    /// its quorum under stable membership fails loudly — that beats
+    /// silently dropping it.
     fn replay_set(
         &mut self,
         key: DatumId,
@@ -407,23 +457,36 @@ impl Worker {
             let snap = Arc::clone(self.reader.refresh());
             res.note_epoch(snap.epoch);
             snap.replica_set(key, &mut replicas);
-            let mut all_stored = true;
+            let mut acks = 0usize;
             for &n in &replicas {
                 let addr = snap
                     .addr_of(n)
                     .ok_or_else(|| other_err(format!("no address for node {n}")))?;
                 match self.conn(n, addr).and_then(|c| c.set(key, value.to_vec())) {
-                    Ok(()) => {}
+                    Ok(()) => acks += 1,
                     Err(e) if is_conn_error(&e) => {
                         self.conns.remove(&n);
-                        all_stored = false;
                         last_err = Some(e);
                     }
                     Err(e) => return Err(e),
                 }
             }
-            if all_stored {
+            let needed = effective_quorum(self.cfg.write_quorum, replicas.len());
+            if !replicas.is_empty() && acks >= needed {
+                if acks < replicas.len() {
+                    res.degraded_writes += 1;
+                    // The skipped holder may recover without ever being
+                    // declared dead (no removal trigger would fire) —
+                    // hint the repair plane so the copy is owed to it
+                    // either way.
+                    if let Some(hints) = &self.cfg.repair_hints {
+                        hints.register(key);
+                    }
+                }
                 res.latency.push(t0.elapsed().as_nanos() as f64);
+                if let Some(registry) = &self.cfg.registry {
+                    registry.register(key);
+                }
                 return Ok(());
             }
             if self.reader.cell_generation() == self.reader.observed_generation() {
@@ -431,23 +494,31 @@ impl Worker {
             }
         }
         Err(last_err
-            .unwrap_or_else(|| other_err(format!("set {key} could not reach its replica set"))))
+            .unwrap_or_else(|| other_err(format!("set {key} could not reach its write quorum"))))
     }
 
     /// Replay a missed GET against the freshest snapshot. If a new
     /// snapshot lands *while* we probe (a second migration's delete phase
     /// racing the replay), probe again under it — a miss only counts once
     /// the membership has been stable across a full probe. A replica that
-    /// is unreachable is skipped the same way (it likely just left the
-    /// cluster); the generation check decides whether to go around again.
+    /// is unreachable is skipped (it likely just left the cluster, or is
+    /// mid-crash); the generation check decides whether to go around
+    /// again. `Ok(false)` is only returned when at least one replica
+    /// *answered* "not found" — if every probe of the final round failed
+    /// at the connection level (e.g. the sole holder at RF=1 is dead),
+    /// that is an outage and fails loudly rather than masquerading as an
+    /// ordinary miss.
     fn replay_get(&mut self, key: DatumId, res: &mut BatchResult) -> std::io::Result<bool> {
         let t0 = Instant::now();
         let mut replicas: Vec<NodeId> = Vec::new();
         let mut found = false;
+        let mut answered = false;
+        let mut last_err: Option<std::io::Error> = None;
         'rounds: for _ in 0..MAX_REPLAYS {
             let snap = Arc::clone(self.reader.refresh());
             res.note_epoch(snap.epoch);
             snap.replica_set(key, &mut replicas);
+            answered = false;
             for &n in &replicas {
                 let addr = snap
                     .addr_of(n)
@@ -457,9 +528,10 @@ impl Worker {
                         found = true;
                         break 'rounds;
                     }
-                    Ok(None) => {}
+                    Ok(None) => answered = true,
                     Err(e) if is_conn_error(&e) => {
                         self.conns.remove(&n);
+                        last_err = Some(e);
                     }
                     Err(e) => return Err(e),
                 }
@@ -468,8 +540,22 @@ impl Worker {
                 break; // stable membership and still absent: a real miss
             }
         }
+        if !found && !answered {
+            return Err(last_err
+                .unwrap_or_else(|| other_err(format!("no replica of {key} reachable"))));
+        }
         res.latency.push(t0.elapsed().as_nanos() as f64);
         Ok(found)
+    }
+}
+
+/// Acks required for a replica set of size `r` under configured quorum
+/// `q` (`0` = all replicas).
+fn effective_quorum(q: usize, r: usize) -> usize {
+    if q == 0 {
+        r
+    } else {
+        q.min(r)
     }
 }
 
@@ -513,6 +599,7 @@ mod tests {
                 workers: 3,
                 pipeline_depth: 8,
                 verify_hits: true,
+                ..PoolConfig::default()
             },
         )
         .unwrap();
@@ -552,6 +639,30 @@ mod tests {
     }
 
     #[test]
+    fn effective_quorum_semantics() {
+        assert_eq!(effective_quorum(0, 3), 3, "0 = all replicas");
+        assert_eq!(effective_quorum(2, 3), 2);
+        assert_eq!(effective_quorum(5, 3), 3, "capped at the set size");
+        assert_eq!(effective_quorum(1, 1), 1);
+        assert_eq!(effective_quorum(0, 0), 0);
+    }
+
+    #[test]
+    fn acked_writes_land_in_the_registry() {
+        let coord = cluster(3, 2);
+        let pool = coord
+            .connect_pool(PoolConfig {
+                workers: 2,
+                pipeline_depth: 8,
+                ..PoolConfig::default()
+            })
+            .unwrap();
+        let sets: Vec<Op> = (0..100u64).map(|key| Op::Set { key, size: 4 }).collect();
+        pool.run(sets).unwrap();
+        assert_eq!(coord.key_registry().len(), 100);
+    }
+
+    #[test]
     fn pool_survives_epoch_bump_between_batches() {
         let mut coord = cluster(3, 1);
         let cell = coord.snapshot_cell();
@@ -561,6 +672,7 @@ mod tests {
                 workers: 2,
                 pipeline_depth: 4,
                 verify_hits: true,
+                ..PoolConfig::default()
             },
         )
         .unwrap();

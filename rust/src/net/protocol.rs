@@ -6,9 +6,15 @@
 //! GET <key-hex>\n                        -> VALUE <len>\n<bytes>\n | NOT_FOUND\n
 //! DEL <key-hex>\n                        -> DELETED\n | NOT_FOUND\n
 //! STATS\n                                -> STATS <keys> <bytes> <sets> <gets>\n
+//! HEARTBEAT <epoch-hex>\n                -> ALIVE <epoch-hex> <keys>\n
+//! KEYS\n                                 -> KEYS <n> <key-hex>...\n
 //! PING\n                                 -> PONG\n
 //! QUIT\n                                 -> (close)
 //! ```
+//!
+//! `HEARTBEAT` is the failure-detection probe (the node echoes the
+//! coordinator's epoch and reports its key count); `KEYS` enumerates the
+//! node's stored keys for the repair plane's holder audits.
 
 use std::io::{BufRead, Write};
 
@@ -18,6 +24,8 @@ pub enum Request {
     Get { key: u64 },
     Del { key: u64 },
     Stats,
+    Heartbeat { epoch: u64 },
+    Keys,
     Ping,
     Quit,
 }
@@ -34,6 +42,11 @@ pub enum Response {
         sets: u64,
         gets: u64,
     },
+    Alive {
+        epoch: u64,
+        keys: u64,
+    },
+    KeyList(Vec<u64>),
     Pong,
     Error(String),
 }
@@ -77,6 +90,10 @@ pub fn read_request<R: BufRead>(r: &mut R) -> std::io::Result<Option<Request>> {
             key: parse_key(parts.next())?,
         })),
         "STATS" => Ok(Some(Request::Stats)),
+        "HEARTBEAT" => Ok(Some(Request::Heartbeat {
+            epoch: parse_key(parts.next())?,
+        })),
+        "KEYS" => Ok(Some(Request::Keys)),
         "PING" => Ok(Some(Request::Ping)),
         "QUIT" => Ok(Some(Request::Quit)),
         other => Err(std::io::Error::new(
@@ -96,6 +113,8 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
         Request::Get { key } => writeln!(w, "GET {key:x}"),
         Request::Del { key } => writeln!(w, "DEL {key:x}"),
         Request::Stats => w.write_all(b"STATS\n"),
+        Request::Heartbeat { epoch } => writeln!(w, "HEARTBEAT {epoch:x}"),
+        Request::Keys => w.write_all(b"KEYS\n"),
         Request::Ping => w.write_all(b"PING\n"),
         Request::Quit => w.write_all(b"QUIT\n"),
     }
@@ -117,6 +136,14 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
             sets,
             gets,
         } => writeln!(w, "STATS {keys} {bytes} {sets} {gets}"),
+        Response::Alive { epoch, keys } => writeln!(w, "ALIVE {epoch:x} {keys}"),
+        Response::KeyList(keys) => {
+            write!(w, "KEYS {}", keys.len())?;
+            for k in keys {
+                write!(w, " {k:x}")?;
+            }
+            w.write_all(b"\n")
+        }
         Response::Pong => w.write_all(b"PONG\n"),
         Response::Error(e) => writeln!(w, "ERROR {}", e.replace('\n', " ")),
     }
@@ -162,6 +189,32 @@ pub fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<Response> {
                 gets: next()?,
             })
         }
+        "ALIVE" => {
+            let epoch = parts
+                .next()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad epoch"))?;
+            let keys: u64 = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad keys"))?;
+            Ok(Response::Alive { epoch, keys })
+        }
+        "KEYS" => {
+            let n: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad len"))?;
+            let mut keys = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                let k = parts.next().and_then(|s| u64::from_str_radix(s, 16).ok());
+                let k = k.ok_or_else(|| {
+                    std::io::Error::new(std::io::ErrorKind::InvalidData, "bad key list")
+                })?;
+                keys.push(k);
+            }
+            Ok(Response::KeyList(keys))
+        }
         "ERROR" => Ok(Response::Error(parts.collect::<Vec<_>>().join(" "))),
         other => Err(std::io::Error::new(
             std::io::ErrorKind::InvalidData,
@@ -203,6 +256,9 @@ mod tests {
             Request::Get { key: u64::MAX },
             Request::Del { key: 0 },
             Request::Stats,
+            Request::Heartbeat { epoch: 0 },
+            Request::Heartbeat { epoch: u64::MAX },
+            Request::Keys,
             Request::Ping,
             Request::Quit,
         ] {
@@ -224,6 +280,13 @@ mod tests {
                 sets: 3,
                 gets: 4,
             },
+            Response::Alive { epoch: 7, keys: 42 },
+            Response::Alive {
+                epoch: u64::MAX,
+                keys: 0,
+            },
+            Response::KeyList(vec![0, 1, u64::MAX, 0xDEADBEEF]),
+            Response::KeyList(vec![]),
             Response::Pong,
             Response::Error("boom".into()),
         ] {

@@ -3,7 +3,7 @@
 use super::protocol::{read_request, write_response, Request, Response};
 use crate::cluster::node::StorageNode;
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -14,6 +14,10 @@ pub struct NodeServer {
     store: Arc<Mutex<StorageNode>>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    /// Live accepted streams (tagged by accept order), kept so
+    /// [`Self::kill`] can sever them; each serving thread removes its
+    /// entry on exit so finished connections don't leak descriptors.
+    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
 }
 
 impl NodeServer {
@@ -28,19 +32,29 @@ impl NodeServer {
         let addr = listener.local_addr()?;
         let store = Arc::new(Mutex::new(StorageNode::new()));
         let stop = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
         let store2 = store.clone();
         let stop2 = stop.clone();
+        let conns2 = conns.clone();
         let accept_thread = std::thread::Builder::new()
             .name(format!("node-{}", addr.port()))
             .spawn(move || {
+                let mut next_id = 0u64;
                 for conn in listener.incoming() {
                     if stop2.load(Ordering::Relaxed) {
                         break;
                     }
                     let Ok(stream) = conn else { break };
+                    let id = next_id;
+                    next_id += 1;
+                    if let Ok(clone) = stream.try_clone() {
+                        conns2.lock().unwrap().push((id, clone));
+                    }
                     let store3 = store2.clone();
+                    let conns3 = conns2.clone();
                     std::thread::spawn(move || {
                         let _ = serve_conn(stream, store3);
+                        conns3.lock().unwrap().retain(|&(cid, _)| cid != id);
                     });
                 }
             })?;
@@ -49,6 +63,7 @@ impl NodeServer {
             store,
             stop,
             accept_thread: Some(accept_thread),
+            conns,
         })
     }
 
@@ -71,6 +86,17 @@ impl NodeServer {
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+    }
+
+    /// Crash simulation: stop accepting AND sever every open connection,
+    /// so peers see a connection error immediately — the failure the
+    /// detection plane must notice, as opposed to the graceful
+    /// [`Self::shutdown`] where established clients keep being served.
+    pub fn kill(&mut self) {
+        self.shutdown();
+        for (_, s) in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
         }
     }
 }
@@ -120,6 +146,14 @@ fn serve_conn(stream: TcpStream, store: Arc<Mutex<StorageNode>>) -> std::io::Res
                     gets: s.gets,
                 }
             }
+            Request::Heartbeat { epoch } => {
+                let keys = store.lock().unwrap().len() as u64;
+                Response::Alive { epoch, keys }
+            }
+            Request::Keys => {
+                let keys = store.lock().unwrap().keys().collect();
+                Response::KeyList(keys)
+            }
             Request::Ping => Response::Pong,
             Request::Quit => {
                 writer.flush()?;
@@ -158,6 +192,51 @@ mod tests {
         assert!(c.del(42).unwrap());
         assert!(!c.del(42).unwrap());
         assert_eq!(server.key_count(), 0);
+    }
+
+    #[test]
+    fn heartbeat_and_keys_ops() {
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect(server.addr()).unwrap();
+        assert_eq!(c.heartbeat(9).unwrap(), (9, 0));
+        c.set(3, b"x".to_vec()).unwrap();
+        c.set(4, b"y".to_vec()).unwrap();
+        assert_eq!(c.heartbeat(10).unwrap(), (10, 2));
+        let mut keys = c.keys().unwrap();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![3, 4]);
+    }
+
+    #[test]
+    fn kill_severs_established_connections() {
+        let mut server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect(server.addr()).unwrap();
+        c.ping().unwrap();
+        server.kill();
+        assert!(c.ping().is_err(), "killed node must drop its clients");
+        // New connections are refused (or at best never served).
+        match Conn::connect(server.addr()) {
+            Err(_) => {}
+            Ok(mut c2) => assert!(c2.ping().is_err()),
+        }
+    }
+
+    #[test]
+    fn finished_connections_are_pruned() {
+        // Heartbeat probes open a fresh connection per tick; the server
+        // must not accumulate an fd per probe for its lifetime.
+        let server = NodeServer::spawn().unwrap();
+        for _ in 0..20 {
+            let mut c = Conn::connect(server.addr()).unwrap();
+            c.ping().unwrap();
+        }
+        for _ in 0..100 {
+            if server.conns.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(server.conns.lock().unwrap().is_empty(), "closed conns leaked");
     }
 
     #[test]

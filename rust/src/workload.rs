@@ -77,12 +77,20 @@ pub fn value_for(key: u64, size: u32) -> Vec<u8> {
         .collect()
 }
 
+/// Preload/rewrite value size shared by the fault-plane scenarios and
+/// their drivers: both sides derive the payload as
+/// `value_for(key, FAILOVER_VALUE_SIZE)`, so a rewrite racing a repair
+/// copy is idempotent.
+pub const FAILOVER_VALUE_SIZE: u32 = 16;
+
 /// A named, seed-deterministic op stream for the throughput harness.
 ///
-/// `Uniform` and `Zipf` are self-contained write-then-read traces;
-/// `Churn` is a read-only stream over a preloaded key space, meant to be
-/// run *while* the coordinator bumps membership epochs (the rebalance
-/// race the epoch-snapshot data plane must survive).
+/// `Uniform` and `Zipf` are self-contained write-then-read traces. The
+/// rest read (and for `Failover`, rewrite) a preloaded key space while
+/// the driver injects the fault the scenario is named after: `Churn`
+/// races membership epochs (rebalance), `Failover` races a node crash +
+/// detection + background repair, and `Flapping` races a node the
+/// failure detector repeatedly suspects but must not kill.
 #[derive(Clone, Debug)]
 pub enum Scenario {
     Uniform {
@@ -100,6 +108,17 @@ pub enum Scenario {
         keys: u64,
         read_ops: u64,
     },
+    Failover {
+        keys: u64,
+        read_ops: u64,
+        /// Every `write_every`-th op rewrites its key instead of reading
+        /// it (0 = read-only), exercising quorum writes under failure.
+        write_every: u64,
+    },
+    Flapping {
+        keys: u64,
+        read_ops: u64,
+    },
 }
 
 impl Scenario {
@@ -108,6 +127,8 @@ impl Scenario {
             Scenario::Uniform { .. } => "uniform",
             Scenario::Zipf { .. } => "zipf",
             Scenario::Churn { .. } => "churn",
+            Scenario::Failover { .. } => "failover",
+            Scenario::Flapping { .. } => "flapping",
         }
     }
 
@@ -115,7 +136,9 @@ impl Scenario {
     /// the self-contained scenarios (their traces start with the SETs).
     pub fn preload_keys(&self, seed: u64) -> Vec<u64> {
         match *self {
-            Scenario::Churn { keys, .. } => keyspace(keys, seed),
+            Scenario::Churn { keys, .. }
+            | Scenario::Failover { keys, .. }
+            | Scenario::Flapping { keys, .. } => keyspace(keys, seed),
             _ => Vec::new(),
         }
     }
@@ -150,16 +173,42 @@ impl Scenario {
                 .ops()
                 .collect()
             }
-            Scenario::Churn { keys, read_ops } => {
+            Scenario::Churn { keys, read_ops } | Scenario::Flapping { keys, read_ops } => {
                 assert!(
                     keys >= 1 || read_ops == 0,
-                    "churn reads need a non-empty key space (keys={keys})"
+                    "{} reads need a non-empty key space (keys={keys})",
+                    self.name()
                 );
                 let written = keyspace(keys, seed);
                 let mut rng = SplitMix64::new(seed ^ 0x00C0_FFEE);
                 (0..read_ops)
                     .map(|_| Op::Get {
                         key: written[rng.below(keys) as usize],
+                    })
+                    .collect()
+            }
+            Scenario::Failover {
+                keys,
+                read_ops,
+                write_every,
+            } => {
+                assert!(
+                    keys >= 1 || read_ops == 0,
+                    "failover ops need a non-empty key space (keys={keys})"
+                );
+                let written = keyspace(keys, seed);
+                let mut rng = SplitMix64::new(seed ^ 0x00FA_110E);
+                (0..read_ops)
+                    .map(|i| {
+                        let key = written[rng.below(keys) as usize];
+                        if write_every > 0 && i % write_every == 0 {
+                            Op::Set {
+                                key,
+                                size: FAILOVER_VALUE_SIZE,
+                            }
+                        } else {
+                            Op::Get { key }
+                        }
                     })
                     .collect()
             }
@@ -299,11 +348,44 @@ mod tests {
                 keys: 100,
                 read_ops: 50,
             },
+            Scenario::Failover {
+                keys: 100,
+                read_ops: 50,
+                write_every: 8,
+            },
+            Scenario::Flapping {
+                keys: 100,
+                read_ops: 50,
+            },
         ];
         for s in &scenarios {
             assert_eq!(s.ops(7), s.ops(7), "{} not deterministic", s.name());
             assert_ne!(s.ops(7), s.ops(8), "{} ignores seed", s.name());
         }
+    }
+
+    #[test]
+    fn failover_scenario_mixes_rewrites_over_preloaded_keys() {
+        let s = Scenario::Failover {
+            keys: 64,
+            read_ops: 400,
+            write_every: 8,
+        };
+        let keys: std::collections::HashSet<u64> = s.preload_keys(5).into_iter().collect();
+        let ops = s.ops(5);
+        assert_eq!(ops.len(), 400);
+        let mut sets = 0;
+        for op in ops {
+            match op {
+                Op::Get { key } => assert!(keys.contains(&key), "key {key} never preloaded"),
+                Op::Set { key, size } => {
+                    assert!(keys.contains(&key), "rewrite of unknown key {key}");
+                    assert_eq!(size, FAILOVER_VALUE_SIZE, "rewrites must be idempotent");
+                    sets += 1;
+                }
+            }
+        }
+        assert_eq!(sets, 50, "every 8th op rewrites");
     }
 
     #[test]

@@ -126,6 +126,7 @@ fn pool_places_keys_exactly_where_the_snapshot_says() {
             workers: 4,
             pipeline_depth: 16,
             verify_hits: true,
+            ..PoolConfig::default()
         },
     )
     .unwrap();
@@ -171,6 +172,7 @@ fn churn_scenario_loses_zero_ops_across_epoch_bumps() {
             workers: 6,
             pipeline_depth: 16,
             verify_hits: true,
+            ..PoolConfig::default()
         },
     )
     .unwrap();
@@ -211,6 +213,7 @@ fn pool_scales_across_workers_consistently() {
                 workers,
                 pipeline_depth: 8,
                 verify_hits: true,
+                ..PoolConfig::default()
             },
         )
         .unwrap();

@@ -1,0 +1,176 @@
+//! Integration: the fault-tolerance plane.
+//!
+//! Covers the four contracts the fault subsystem introduces:
+//! 1. kill-one-node-at-RF=3 under live load — zero failed reads, the
+//!    detector publishes a death epoch, and paced background repair
+//!    restores full replication factor (verified by a post-repair holder
+//!    audit);
+//! 2. a flapping node is suspected but never killed — zero epochs
+//!    published, zero keys moved, zero reads failed;
+//! 3. quorum writes — SETs keep succeeding (degraded) while a replica
+//!    holder is down, and reads fail over around the dead primary;
+//! 4. the writer registry — keys written through the pool migrate with
+//!    rebalances instead of stranding on their old holders.
+
+use asura::coordinator::Coordinator;
+use asura::loadgen::{run_failover, run_failover_suite, run_flapping, FailoverConfig};
+use asura::net::pool::PoolConfig;
+use asura::workload::Op;
+
+fn quick_cfg() -> FailoverConfig {
+    FailoverConfig {
+        nodes: 5,
+        replicas: 3,
+        write_quorum: 2,
+        keys: 600,
+        read_ops: 1_200,
+        workers: 3,
+        pipeline_depth: 16,
+        probe_interval_ms: 10,
+        repair_batch: 64,
+        repair_interval_ms: 1,
+        out_json: None,
+        ..FailoverConfig::default()
+    }
+}
+
+#[test]
+fn kill_node_at_rf3_under_live_load_zero_failed_reads_full_rf_restored() {
+    // The acceptance scenario: a replica holder crashes mid-traffic; the
+    // detector declares it dead and publishes the epoch; repair restores
+    // every lost replica; not a single read fails at any point.
+    let report = run_failover(&quick_cfg()).unwrap();
+    assert_eq!(report.lost, 0, "zero failed reads across the crash");
+    assert_eq!(report.lost_keys, 0, "RF=3 must survive one death");
+    assert_eq!(report.audit_keys, 600);
+    assert_eq!(report.audit_under, 0, "holder audit: full RF restored");
+    assert!(report.detect_ms > 0.0, "detection latency must be measured");
+    assert!(
+        report.time_to_full_rf_ms >= report.detect_ms,
+        "full-RF time includes detection"
+    );
+    assert!(report.repaired_keys > 0, "the dead holder's share re-replicates");
+    assert!(
+        report.epochs.1 > report.epochs.0,
+        "traffic must observe the death epoch"
+    );
+    assert!(report.ops >= 1_200, "at least one full driver round ran");
+}
+
+#[test]
+fn flapping_node_is_suspected_but_never_triggers_data_movement() {
+    let report = run_flapping(&quick_cfg()).unwrap();
+    assert!(report.suspect_events >= 3, "each flap must raise a suspicion");
+    assert_eq!(report.lost, 0);
+    assert_eq!(
+        report.epochs.0, report.epochs.1,
+        "flapping must not publish membership epochs"
+    );
+    assert_eq!(report.repaired_keys, 0, "flapping must not move data");
+    assert_eq!(report.audit_under, 0);
+}
+
+#[test]
+fn quorum_writes_and_read_failover_with_an_undetected_dead_replica() {
+    let mut coord = Coordinator::new(3);
+    for i in 0..5 {
+        coord.spawn_node(i, 1.0).unwrap();
+    }
+    let pool = coord
+        .connect_pool(PoolConfig {
+            workers: 3,
+            pipeline_depth: 8,
+            verify_hits: true,
+            write_quorum: 2,
+            ..PoolConfig::default()
+        })
+        .unwrap();
+    // Crash a node and keep writing *before* anything detects it.
+    coord.kill_node(1).unwrap();
+    let sets: Vec<Op> = (0..300u64).map(|key| Op::Set { key, size: 8 }).collect();
+    let res = pool.run(sets).unwrap();
+    assert_eq!(res.ops, 300);
+    assert_eq!(res.lost, 0);
+    assert!(
+        res.degraded_writes > 0,
+        "keys with a replica on the dead node must ack at quorum 2/3"
+    );
+    // Reads fail over around the dead primary, still pre-detection.
+    let gets: Vec<Op> = (0..300u64).map(|key| Op::Get { key }).collect();
+    let res = pool.run(gets).unwrap();
+    assert_eq!(res.hits, 300, "every read served by a surviving replica");
+    assert_eq!(res.lost, 0);
+    assert!(res.failovers > 0, "dead primaries must fail over");
+    // Death verdict + repair: the quorum-degraded keys (registered by
+    // the pool's write-back) regain their third copy.
+    let queued = coord.mark_dead(1).unwrap();
+    assert!(queued > 0, "pool-written keys must be in the repair plan");
+    while coord.repair_pending() > 0 {
+        let tick = coord.repair_step(64).unwrap();
+        assert_eq!(tick.lost, 0);
+    }
+    let audit = coord.audit_replication().unwrap();
+    assert_eq!(audit.keys, 300);
+    assert!(audit.is_full(), "under-replicated: {:?}", audit.under_keys);
+    // And the cluster serves everything at the new epoch.
+    let gets: Vec<Op> = (0..300u64).map(|key| Op::Get { key }).collect();
+    let res = pool.run(gets).unwrap();
+    assert_eq!((res.hits, res.lost), (300, 0));
+}
+
+#[test]
+fn pool_writes_survive_a_rebalance_via_the_writer_registry() {
+    // Before the writer registry, pool-written keys were invisible to
+    // migration: a rebalance stranded them on their old holders and
+    // reads at the new epoch lost them.
+    let mut coord = Coordinator::new(1);
+    for i in 0..4 {
+        coord.spawn_node(i, 1.0).unwrap();
+    }
+    let pool = coord
+        .connect_pool(PoolConfig {
+            workers: 3,
+            pipeline_depth: 16,
+            verify_hits: true,
+            ..PoolConfig::default()
+        })
+        .unwrap();
+    let sets: Vec<Op> = (0..400u64).map(|key| Op::Set { key, size: 8 }).collect();
+    let res = pool.run(sets).unwrap();
+    assert_eq!(res.ops, 400);
+    // The join drains the registry, so migration sees the pool's keys.
+    let report = coord.spawn_node(4, 1.0).unwrap();
+    assert_eq!(coord.key_count(), 400, "registry keys absorbed at the join");
+    assert!(report.moved > 0, "the new node takes its share of pool keys");
+    let gets: Vec<Op> = (0..400u64).map(|key| Op::Get { key }).collect();
+    let res = pool.run(gets).unwrap();
+    assert_eq!(res.hits, 400, "no pool write may strand across the rebalance");
+    assert_eq!(res.lost, 0);
+    assert_eq!(coord.verify_all_readable().unwrap(), 400);
+}
+
+#[test]
+fn failover_suite_emits_the_bench_trajectory() {
+    let dir = std::env::temp_dir().join("asura_failover_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_failover.json");
+    let cfg = FailoverConfig {
+        keys: 300,
+        read_ops: 600,
+        out_json: Some(path.to_str().unwrap().to_string()),
+        ..quick_cfg()
+    };
+    let reports = run_failover_suite(&cfg).unwrap();
+    assert_eq!(reports.len(), 2);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = asura::util::json::parse(&text).unwrap();
+    assert_eq!(v.get("bench").unwrap().as_str(), Some("failover"));
+    let results = v.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].get("scenario").unwrap().as_str(), Some("failover"));
+    assert_eq!(results[0].get("lost").unwrap().as_u64(), Some(0));
+    assert!(results[0].get("time_to_detect_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(results[0].get("time_to_full_rf_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(results[1].get("scenario").unwrap().as_str(), Some("flapping"));
+    assert_eq!(results[1].get("audit_under").unwrap().as_u64(), Some(0));
+}

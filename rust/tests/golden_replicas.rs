@@ -1,0 +1,98 @@
+//! Golden-vector test for *replica* placement on weighted clusters,
+//! alongside `testdata/golden_placements.json` (which pins primary
+//! placements and RF=3 replica *segments* on small tables). This file
+//! pins the full replica-set contract — `place_replicas` node lists at
+//! RF 1..=3 — against the python oracle
+//! (`python/compile/kernels/ref.py::asura_replicas`), on equal,
+//! weighted, and heterogeneous capacity tables.
+//!
+//! Regenerate with `cd python && python -m compile.gen_golden` (the
+//! same generator that owns `golden_placements.json`); the oracle emits
+//! `{caps, lens_q24, owners, placements}` per table.
+
+use asura::algo::asura::AsuraPlacer;
+use asura::algo::{Membership, Placer};
+use asura::util::json::{parse, Json};
+
+fn golden() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../testdata/golden_replicas.json");
+    let text = std::fs::read_to_string(path).expect("golden replica vectors present");
+    parse(&text).expect("valid golden json")
+}
+
+/// Rebuild the placer from capacities in insertion order (node i = i)
+/// and assert its segment table matches the oracle's bit-for-bit before
+/// trusting any placement out of it.
+fn placer_from_golden(t: &Json) -> AsuraPlacer {
+    let caps = t.get("caps").unwrap().as_arr().unwrap();
+    let mut placer = AsuraPlacer::new();
+    for (i, c) in caps.iter().enumerate() {
+        placer.add_node(i as u32, c.as_f64().unwrap());
+    }
+    let lens: Vec<u64> = t
+        .get("lens_q24")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_u64().unwrap())
+        .collect();
+    assert_eq!(placer.table().m() as usize, lens.len(), "m mismatch vs oracle");
+    for (s, &l) in lens.iter().enumerate() {
+        assert_eq!(
+            placer.table().len_q24(s as u32) as u64,
+            l,
+            "segment {s} length mismatch vs oracle"
+        );
+    }
+    let owners: Vec<u64> = t
+        .get("owners")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_u64().unwrap())
+        .collect();
+    for (s, &o) in owners.iter().enumerate() {
+        assert_eq!(placer.table().owner(s as u32).unwrap() as u64, o);
+    }
+    placer
+}
+
+#[test]
+fn replica_sets_match_oracle_across_weighted_tables() {
+    let g = golden();
+    let Json::Obj(tables) = &g else { panic!("golden root must be an object") };
+    assert!(tables.len() >= 3, "expected several capacity tables");
+    let mut out = Vec::new();
+    for (name, t) in tables {
+        let placer = placer_from_golden(t);
+        for p in t.get("placements").unwrap().as_arr().unwrap() {
+            let id = p.get("id").unwrap().as_u64().unwrap();
+            let sets = p.get("replicas").unwrap();
+            for rf in 1usize..=3 {
+                let want: Vec<u32> = sets
+                    .get(&rf.to_string())
+                    .unwrap_or_else(|| panic!("{name}: missing rf {rf} for id {id}"))
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|x| x.as_u64().unwrap() as u32)
+                    .collect();
+                placer.place_replicas(id, rf, &mut out);
+                assert_eq!(out, want, "{name}: replicas({id}, {rf})");
+            }
+            // The golden sets are internally consistent too: primary
+            // first, prefix-stable across RF.
+            let r3: Vec<u32> = sets
+                .get("3")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_u64().unwrap() as u32)
+                .collect();
+            assert_eq!(r3[0], placer.place(id), "{name}: primary of {id}");
+        }
+    }
+}

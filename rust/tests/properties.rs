@@ -168,6 +168,81 @@ fn prop_replicas_distinct_and_consistent() {
 }
 
 #[test]
+fn prop_replica_slots_track_capacity_weights() {
+    // Replica placement invariants on *weighted* clusters: every set is
+    // pairwise distinct, and a node's frequency across replica slots
+    // tracks its capacity — heavy nodes (3x weight) must appear in
+    // strictly more sets than light ones, by a wide margin.
+    for_cases(0x5EED, 3, |rng, case| {
+        let mut asura = AsuraPlacer::new();
+        let light: Vec<NodeId> = (0..4).collect();
+        let heavy: Vec<NodeId> = vec![4, 5];
+        for &i in &light {
+            asura.add_node(i, 0.8 + rng.next_f64() * 0.4); // ~1.0
+        }
+        for &i in &heavy {
+            asura.add_node(i, 2.7 + rng.next_f64() * 0.6); // ~3.0
+        }
+        let mut counts = vec![0u64; 6];
+        let mut out = Vec::new();
+        for _ in 0..12_000 {
+            let id = rng.next_u64();
+            asura.place_replicas(id, 3, &mut out);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "case {case}: duplicate replica owner");
+            for &n in &out {
+                counts[n as usize] += 1;
+            }
+        }
+        for &h in &heavy {
+            for &l in &light {
+                assert!(
+                    counts[h as usize] * 4 > counts[l as usize] * 5,
+                    "case {case}: heavy node {h} ({}) not ahead of light node {l} ({})",
+                    counts[h as usize],
+                    counts[l as usize]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_failed_nodes_at_rf2_repair_without_loss() {
+    // Crash-and-repair on the in-process cluster: with RF>=2, any single
+    // node crash (data destroyed, no drain) is fully repairable from the
+    // survivors, and the §2.D removal triggers find every affected key.
+    for_cases(0xFA17, 6, |rng, case| {
+        let replicas = 2 + rng.below(2) as usize; // RF 2..=3
+        let nodes = (replicas as u64 + 2 + rng.below(4)) as u32;
+        let mut cluster = AsuraCluster::new(replicas);
+        for i in 0..nodes {
+            cluster.add_node(i, 0.5 + rng.next_f64() * 2.0);
+        }
+        let keys: Vec<u64> = (0..500).map(|_| rng.next_u64()).collect();
+        for &k in &keys {
+            cluster.set(k, k.to_le_bytes().to_vec());
+        }
+        let victim = rng.below(nodes as u64) as u32;
+        let affected = cluster.fail_node(victim);
+        let (_, lost) = cluster.repair(&affected);
+        assert_eq!(lost, 0, "case {case}: RF={replicas} lost data on one crash");
+        cluster
+            .check_consistency()
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        for &k in &keys {
+            assert_eq!(
+                cluster.get(k),
+                Some(k.to_le_bytes().to_vec()),
+                "case {case}: key {k} lost after crash+repair"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_cluster_churn_never_loses_data() {
     for_cases(0xC4C, 8, |rng, case| {
         let mut cluster = AsuraCluster::new(1 + rng.below(2) as usize);
