@@ -14,6 +14,7 @@ pub mod rebalance;
 use crate::algo::asura::AsuraPlacer;
 use crate::algo::{DatumId, Membership, NodeId, Placer};
 use crate::stats::Histogram;
+use crate::storage::Version;
 use node::StorageNode;
 use rebalance::MetaIndex;
 use std::collections::{HashMap, HashSet};
@@ -142,17 +143,19 @@ impl<S: Strategy> Cluster<S> {
                 continue;
             }
             report.moved += 1;
-            // Fetch the value from any surviving holder.
-            let value = old_set
-                .iter()
-                .chain(new_set.iter())
-                .find_map(|n| {
-                    self.nodes
-                        .get(n)
-                        .and_then(|node| node.peek(key))
-                        .map(|v| v.to_vec())
-                })
-                .expect("datum lost during migration");
+            // Fetch the freshest surviving copy — the max-version
+            // holder's value, never just "any survivor".
+            let mut best: Option<(Version, Vec<u8>)> = None;
+            for n in old_set.iter().chain(new_set.iter()) {
+                if let Some(node) = self.nodes.get(n) {
+                    if let Some((ver, bytes)) = node.peek_versioned(key) {
+                        if ver.beats(&best) {
+                            best = Some((ver, bytes.to_vec()));
+                        }
+                    }
+                }
+            }
+            let (version, value) = best.expect("datum lost during migration");
             for &n in old_set {
                 if !new_set.contains(&n) {
                     if let Some(node) = self.nodes.get_mut(&n) {
@@ -166,7 +169,10 @@ impl<S: Strategy> Cluster<S> {
             for &n in &new_set {
                 if !old_set.contains(&n) {
                     let node = self.nodes.get_mut(&n).unwrap();
-                    node.set(key, value.clone());
+                    // Guarded at the fetched stamp: a newer copy already
+                    // on the target (mirroring a racing live write)
+                    // survives the migration.
+                    node.vset(key, version, value.clone());
                     node.migrations_in += 1;
                 }
             }
@@ -346,23 +352,27 @@ impl AsuraCluster {
     }
 
     /// Re-replicate `keys` (typically [`Self::fail_node`]'s return):
-    /// copy each from a surviving holder to the holders missing it, and
-    /// drop defensive strays. Returns `(repaired, lost)` — `lost` counts
-    /// keys with no surviving copy (every replica died first), which
-    /// are unregistered so the cluster stays consistent.
+    /// copy each from the **max-version** holder to the holders missing
+    /// it (refreshing any stale copies alongside), and drop defensive
+    /// strays. Returns `(repaired, lost)` — `lost` counts keys with no
+    /// surviving copy (every replica died first), which are
+    /// unregistered so the cluster stays consistent.
     pub fn repair(&mut self, keys: &[DatumId]) -> (usize, usize) {
         let mut repaired = 0;
         let mut lost = 0;
         for &key in keys {
             let set = self.inner.replica_set(key);
-            let value = set.iter().find_map(|n| {
-                self.inner
-                    .nodes
-                    .get(n)
-                    .and_then(|node| node.peek(key))
-                    .map(|v| v.to_vec())
-            });
-            let Some(value) = value else {
+            let mut best: Option<(Version, Vec<u8>)> = None;
+            for n in &set {
+                if let Some(node) = self.inner.nodes.get(n) {
+                    if let Some((ver, bytes)) = node.peek_versioned(key) {
+                        if ver.beats(&best) {
+                            best = Some((ver, bytes.to_vec()));
+                        }
+                    }
+                }
+            }
+            let Some((version, value)) = best else {
                 if self.inner.keys.remove(&key) {
                     self.index.remove_key(key);
                     lost += 1;
@@ -373,8 +383,15 @@ impl AsuraCluster {
             for &n in &set {
                 if let Some(node) = self.inner.nodes.get_mut(&n) {
                     if !node.contains(key) {
-                        node.set(key, value.clone());
+                        node.vset(key, version, value.clone());
                         node.migrations_in += 1;
+                        wrote = true;
+                    } else if node.version_of(key) < Some(version) {
+                        // A surviving-but-stale copy converges on the
+                        // freshest version too (guarded, so an even
+                        // newer concurrent write would survive) — and
+                        // counts as repair work, same as a missing copy.
+                        node.vset(key, version, value.clone());
                         wrote = true;
                     }
                 }

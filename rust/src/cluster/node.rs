@@ -1,13 +1,18 @@
 //! In-memory storage node: the unit the distribution algorithms place
-//! data onto. Used directly by the in-process cluster simulator and
-//! wrapped by the TCP server (`net::server`) for the networked cluster.
+//! data onto. Used by the in-process cluster simulator; the networked
+//! cluster's TCP server serves from the lock-striped
+//! [`crate::storage::ShardedStore`] instead, but both hold the same
+//! [`VersionedValue`] entries and apply versioned writes by
+//! highest-version-wins, so the simulator mirrors the wire semantics.
 
+use crate::storage::{Version, VersionedValue};
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
 /// A single storage node's state.
 #[derive(Debug, Default)]
 pub struct StorageNode {
-    data: HashMap<u64, Vec<u8>>,
+    data: HashMap<u64, VersionedValue>,
     used_bytes: u64,
     /// Lifetime counters.
     pub sets: u64,
@@ -22,18 +27,45 @@ impl StorageNode {
         Self::default()
     }
 
-    pub fn set(&mut self, key: u64, value: Vec<u8>) {
+    /// Legacy unversioned write: stamped one sequence past the current
+    /// copy, so it always applies. Returns the stamp stored.
+    pub fn set(&mut self, key: u64, value: Vec<u8>) -> Version {
+        let version = self
+            .data
+            .get(&key)
+            .map(|v| v.version)
+            .unwrap_or(Version::ZERO)
+            .bump();
+        self.vset(key, version, value);
+        version
+    }
+
+    /// Versioned write, highest-version-wins — the same
+    /// [`VersionedValue::apply`] rule the networked `ShardedStore`
+    /// runs, so the simulator can never drift from the wire semantics.
+    /// Returns whether it applied.
+    pub fn vset(&mut self, key: u64, version: Version, value: Vec<u8>) -> bool {
         self.sets += 1;
         let new_len = value.len() as u64;
-        if let Some(old) = self.data.insert(key, value) {
-            self.used_bytes -= old.len() as u64;
+        match self.data.entry(key) {
+            Entry::Occupied(mut e) => match e.get_mut().apply(version, value) {
+                Ok(old_len) => {
+                    self.used_bytes = self.used_bytes - old_len + new_len;
+                    true
+                }
+                Err(_) => false,
+            },
+            Entry::Vacant(v) => {
+                v.insert(VersionedValue::new(version, value));
+                self.used_bytes += new_len;
+                true
+            }
         }
-        self.used_bytes += new_len;
     }
 
     pub fn get(&mut self, key: u64) -> Option<&[u8]> {
         self.gets += 1;
-        let v = self.data.get(&key).map(|v| v.as_slice());
+        let v = self.data.get(&key).map(|v| v.bytes.as_slice());
         if v.is_some() {
             self.hits += 1;
         }
@@ -41,15 +73,25 @@ impl StorageNode {
     }
 
     pub fn peek(&self, key: u64) -> Option<&[u8]> {
-        self.data.get(&key).map(|v| v.as_slice())
+        self.data.get(&key).map(|v| v.bytes.as_slice())
+    }
+
+    /// Read with the stored version, without touching counters (the
+    /// migration/repair fetch path compares these across holders).
+    pub fn peek_versioned(&self, key: u64) -> Option<(Version, &[u8])> {
+        self.data.get(&key).map(|v| (v.version, v.bytes.as_slice()))
+    }
+
+    pub fn version_of(&self, key: u64) -> Option<Version> {
+        self.data.get(&key).map(|v| v.version)
     }
 
     pub fn remove(&mut self, key: u64) -> Option<Vec<u8>> {
         let v = self.data.remove(&key);
         if let Some(ref val) = v {
-            self.used_bytes -= val.len() as u64;
+            self.used_bytes -= val.bytes.len() as u64;
         }
-        v
+        v.map(|val| val.bytes)
     }
 
     pub fn contains(&self, key: u64) -> bool {
@@ -97,6 +139,23 @@ mod tests {
         n.remove(1);
         assert_eq!(n.used_bytes(), 0);
         assert!(n.is_empty());
+    }
+
+    #[test]
+    fn versioned_writes_apply_highest_wins() {
+        let mut n = StorageNode::new();
+        assert!(n.vset(1, Version::new(2, 5), b"new".to_vec()));
+        assert!(!n.vset(1, Version::new(2, 4), b"old".to_vec()));
+        assert_eq!(n.peek(1), Some(&b"new"[..]));
+        assert_eq!(n.version_of(1), Some(Version::new(2, 5)));
+        // Legacy writes bump past whatever is stored.
+        let stamped = n.set(1, b"legacy".to_vec());
+        assert_eq!(stamped, Version::new(2, 6));
+        assert_eq!(n.peek_versioned(1), Some((stamped, &b"legacy"[..])));
+        // used_bytes ignores refused writes.
+        let before = n.used_bytes();
+        assert!(!n.vset(1, Version::ZERO, vec![0; 500]));
+        assert_eq!(n.used_bytes(), before);
     }
 
     #[test]

@@ -22,6 +22,19 @@
 //! and a reader that races the delete phase recovers with one
 //! refresh-and-retry (see `net::pool`).
 //!
+//! Both phases are **version-guarded** (see [`crate::storage`]): the
+//! copier fetches the freshest surviving replica and writes it with its
+//! original stamp, so the node's highest-version-wins rule refuses the
+//! copy wherever a racing live write already landed something newer;
+//! and the delete phase removes an old copy only if it is still at the
+//! copied version — a refused delete means a write raced the copy
+//! window, and the newer value is re-copied before the guard retries.
+//! A live `SET` racing a migration therefore always survives with the
+//! newer version, closing the last-copier-wins residual of the
+//! pre-versioned plane. Version stamps across the coordinator's own
+//! writes, every connected pool worker, and migration copies all draw
+//! from one shared [`crate::storage::WriteClock`].
+//!
 //! Keys written through a [`crate::net::pool::RouterPool`] reach the
 //! coordinator via the [`registry::KeyRegistry`] write-back: drained
 //! before every plan and reconciled once more after publication, so
@@ -52,7 +65,9 @@ use crate::fault::health::HealthEvent;
 use crate::fault::repair::{RepairQueue, RepairTick, ReplicationAudit};
 use crate::net::client::Conn;
 use crate::net::pool::{PoolConfig, RouterPool};
+use crate::net::protocol::VdelOutcome;
 use crate::net::server::NodeServer;
+use crate::storage::{Version, WriteClock};
 use metrics::Metrics;
 use registry::KeyRegistry;
 use snapshot::{PlacerSnapshot, SnapshotCell};
@@ -68,10 +83,21 @@ struct Member {
     server: Option<NodeServer>,
 }
 
-/// A key mid-migration: copied to `new_set`, not yet deleted from the
-/// `old_set` members it is leaving.
+/// Bound on re-copy rounds when a migration delete guard keeps being
+/// refused. Each extra round requires yet another live write landing on
+/// the old holder inside the delete window, so the loop converges as
+/// soon as the race does; a pathological loser is left in place and
+/// queued for repair rather than clobbered.
+const MAX_DELETE_ROUNDS: usize = 8;
+
+/// Page size for the over-the-wire holder audit's `KEYSC` walk.
+const AUDIT_PAGE: u64 = 1024;
+
+/// A key mid-migration: copied to `new_set` at `version`, not yet
+/// deleted from the `old_set` members it is leaving.
 struct PendingMove {
     key: DatumId,
+    version: Version,
     old_set: Vec<NodeId>,
     new_set: Vec<NodeId>,
 }
@@ -100,6 +126,10 @@ pub struct Coordinator {
     repair_hints: Arc<KeyRegistry>,
     /// Keys awaiting re-replication after a member death.
     repair: RepairQueue,
+    /// Version-stamp source shared with every connected pool (see
+    /// [`crate::storage::WriteClock`]): one total write order across the
+    /// control plane and all data-plane workers.
+    clock: WriteClock,
 }
 
 impl Coordinator {
@@ -118,6 +148,7 @@ impl Coordinator {
             registry: Arc::new(KeyRegistry::new()),
             repair_hints: Arc::new(KeyRegistry::new()),
             repair: RepairQueue::new(),
+            clock: WriteClock::new(),
         }
     }
 
@@ -169,15 +200,17 @@ impl Coordinator {
         Arc::clone(&self.registry)
     }
 
-    /// Spawn a [`RouterPool`] subscribed to this coordinator's snapshots
-    /// *and* its writer registry, so pool-written keys are visible to
-    /// migration and repair planning.
+    /// Spawn a [`RouterPool`] subscribed to this coordinator's snapshots,
+    /// its writer registry (so pool-written keys are visible to
+    /// migration and repair planning), and its write clock (so pool
+    /// stamps and migration guards share one version order).
     pub fn connect_pool(&self, cfg: PoolConfig) -> std::io::Result<RouterPool> {
         RouterPool::connect(
             &self.cell,
             PoolConfig {
                 registry: Some(Arc::clone(&self.registry)),
                 repair_hints: Some(Arc::clone(&self.repair_hints)),
+                clock: self.clock.clone(),
                 ..cfg
             },
         )
@@ -267,7 +300,7 @@ impl Coordinator {
     ) -> anyhow::Result<MigrationReport> {
         let (moves, mut report) = self.copy_phase(candidates, &old_sets)?;
         self.publish_snapshot();
-        self.delete_phase(moves)?;
+        self.delete_phase(moves);
         self.reconcile_late_writers(old_placer, &mut report);
         Ok(report)
     }
@@ -275,7 +308,13 @@ impl Coordinator {
     /// Close the writer-registry race: keys acked by pool workers while
     /// the plan + copy/publish/delete ran routed by the *pre-change*
     /// snapshot and were invisible to the plan. Drain them now, and move
-    /// any whose replica set changed under the new epoch.
+    /// any whose replica set changed under the new epoch — including
+    /// keys that were already under management: a racing rewrite of a
+    /// managed key may have landed on its *old* holders after the
+    /// migration's delete phase, leaving the new holders with only the
+    /// copier's older version, so every drained key whose set changed is
+    /// re-converged on its freshest copy (version-guarded, so this is
+    /// idempotent for keys the plan already handled).
     ///
     /// Strictly best-effort per key: every drained key is registered in
     /// `keys` + `index` *before* any I/O, and an unreachable holder sends
@@ -287,68 +326,171 @@ impl Coordinator {
         let old_r = self.replicas.min(old_placer.node_count());
         let mut old_set: Vec<NodeId> = Vec::new();
         for key in late {
-            if !self.keys.insert(key) {
-                continue; // already managed — the plan above covered it
+            let newly_managed = self.keys.insert(key);
+            if newly_managed {
+                self.index.insert(&self.placer, key);
             }
-            self.index.insert(&self.placer, key);
             old_placer.place_replicas(key, old_r, &mut old_set);
             let new_set = self.replica_set(key);
             if old_set == new_set {
                 continue;
             }
             // The race may have left the value under either epoch's
-            // placement; probe old holders first, then new.
+            // placement; probe old holders and new, keeping the
+            // freshest version found.
             let mut probe: Vec<NodeId> = old_set.clone();
             probe.extend(new_set.iter().copied().filter(|n| !old_set.contains(n)));
-            let Some(value) = self.fetch_value(key, &probe) else {
-                // Acked under a quorum whose holders are unreachable at
-                // this instant — background repair will retry it rather
-                // than failing the whole rebalance.
-                self.repair.enqueue([key]);
+            let Some(bytes_moved) = self.converge_key(key, &new_set, &probe, &old_set) else {
                 continue;
             };
-            // Write the *entire* new set, not just new-minus-old: a key
-            // acked at a write quorum may be missing from any old-set
-            // member, and these are a handful of keys per rebalance.
-            let mut incomplete = false;
-            for n in &new_set {
-                let Some(m) = self.members.get_mut(n) else {
-                    incomplete = true;
-                    continue;
-                };
-                if m.conn.set(key, value.clone()).is_err() {
-                    incomplete = true;
-                }
-            }
-            if incomplete {
-                // Keep the old copies — they may be the only ones — and
-                // let background repair finish populating the new set.
-                self.repair.enqueue([key]);
-                continue;
-            }
-            report.moved += 1;
-            report.bytes_moved += value.len() as u64 * new_set.len() as u64;
-            for n in &old_set {
-                if !new_set.contains(n) {
-                    if let Some(m) = self.members.get_mut(n) {
-                        let _ = m.conn.del(key);
-                    }
-                }
+            if newly_managed {
+                // Managed keys were counted by the plan's copy phase;
+                // their re-convergence here is a correction, not a move.
+                report.moved += 1;
+                report.bytes_moved += bytes_moved;
             }
         }
     }
 
-    /// First readable copy of `key` among `nodes`, tolerating members
-    /// that are gone or unreachable (the fault-plane fetch path; each
-    /// probe reconnects once via [`Self::member_get`] so a stale cached
-    /// conn never masks a live copy).
-    fn fetch_value(&mut self, key: DatumId, nodes: &[NodeId]) -> Option<Vec<u8>> {
-        for &n in nodes {
-            if let Ok(Some(v)) = self.member_get(n, key) {
-                return Some(v);
+    /// Converge one drained key onto `new_set`: fetch the freshest copy
+    /// among `probe` (max version wins), write it — version-guarded —
+    /// to every member of `new_set`, then guard-delete stragglers found
+    /// on `sweep` members outside the set. Strictly best-effort: no
+    /// surviving copy or an unreachable holder queues the key for
+    /// background repair instead of failing the caller. Returns the
+    /// bytes actually written (applied copies only — a member that
+    /// refused the guard because it already holds something newer moved
+    /// no data), `None` when the key was deferred to repair.
+    fn converge_key(
+        &mut self,
+        key: DatumId,
+        new_set: &[NodeId],
+        probe: &[NodeId],
+        sweep: &[NodeId],
+    ) -> Option<u64> {
+        let (best, holders) = self.survey_copies(key, probe);
+        let Some((version, value)) = best else {
+            // Acked under a quorum whose holders are unreachable at
+            // this instant — background repair will retry it rather
+            // than failing the whole rebalance.
+            self.repair.enqueue([key]);
+            return None;
+        };
+        // Write the *entire* new set, not just new-minus-old: a key
+        // acked at a write quorum may be missing from any member.
+        let Some(written) = self.write_copies(key, version, &value, new_set) else {
+            // Keep the old copies — they may be the only ones — and
+            // let background repair finish populating the new set.
+            self.repair.enqueue([key]);
+            return None;
+        };
+        // Sweep only members the survey saw a copy on — a blanket VDEL
+        // fan-out would cost one round trip per non-holder per key.
+        for &n in sweep {
+            if !new_set.contains(&n) && holders.contains(&n) {
+                self.guarded_delete(n, key, version, new_set);
             }
         }
-        None
+        Some(written)
+    }
+
+    /// Version-guarded fan-out of one value to every member of `set`.
+    /// Returns the bytes actually applied (a member that refused the
+    /// guard already holds something newer — nothing moved there), or
+    /// `None` when any member was missing or unreachable (the caller
+    /// defers the key to repair). The single write-the-set block the
+    /// migration hand-off and the write-reconcile paths share.
+    fn write_copies(
+        &mut self,
+        key: DatumId,
+        version: Version,
+        value: &[u8],
+        set: &[NodeId],
+    ) -> Option<u64> {
+        let mut written = 0u64;
+        let mut incomplete = false;
+        for n in set {
+            match self.members.get_mut(n) {
+                Some(m) => match m.conn.vset(key, version, value.to_vec()) {
+                    Ok(ack) => {
+                        if ack.applied {
+                            written += value.len() as u64;
+                        }
+                    }
+                    Err(_) => incomplete = true,
+                },
+                None => incomplete = true,
+            }
+        }
+        if incomplete {
+            None
+        } else {
+            Some(written)
+        }
+    }
+
+    /// Quiesce-time write convergence: drain the writer registry and
+    /// make each drained key's *current* replica set hold its freshest
+    /// copy, probing every member for it (the registry at this point
+    /// only holds keys acked since the last drain, so the probe-all is
+    /// bounded by the recent write volume, not the key count). Strays
+    /// found off the replica set are removed behind a version guard.
+    ///
+    /// This closes the final window of the write/migration race: a
+    /// write routed by a pre-migration snapshot whose ack lands *after*
+    /// the migration's own reconcile drain has its fresh value sitting
+    /// on a former holder that nothing else would ever probe. Batch
+    /// drivers call this once traffic quiesces (and the property tests
+    /// pin it); between calls, quorum reads converge such keys
+    /// opportunistically via read-repair. Infallible by construction —
+    /// every per-key failure defers to the repair queue. Returns the
+    /// number of keys reconciled.
+    pub fn reconcile_writes(&mut self) -> usize {
+        let late = self.registry.drain();
+        let mut all: Vec<NodeId> = self.members.keys().copied().collect();
+        all.sort_unstable();
+        let mut reconciled = 0usize;
+        for key in late {
+            if self.keys.insert(key) {
+                self.index.insert(&self.placer, key);
+            }
+            let new_set = self.replica_set(key);
+            if self.converge_key(key, &new_set, &all, &all).is_some() {
+                reconciled += 1;
+            }
+        }
+        reconciled
+    }
+
+    /// Freshest readable copy of `key` among `nodes` — the max-version
+    /// holder's value, not any survivor's — tolerating members that are
+    /// gone or unreachable (the fault-plane fetch path; each probe
+    /// reconnects once via [`Self::member_vget`] so a stale cached conn
+    /// never masks a live copy).
+    fn fetch_best(&mut self, key: DatumId, nodes: &[NodeId]) -> Option<(Version, Vec<u8>)> {
+        self.survey_copies(key, nodes).0
+    }
+
+    /// The scan under [`Self::fetch_best`]: freshest copy found plus
+    /// the list of members that answered with one — converge paths use
+    /// the holder list to bound their delete sweeps to nodes that
+    /// actually hold a stray copy.
+    fn survey_copies(
+        &mut self,
+        key: DatumId,
+        nodes: &[NodeId],
+    ) -> (Option<(Version, Vec<u8>)>, Vec<NodeId>) {
+        let mut best: Option<(Version, Vec<u8>)> = None;
+        let mut holders: Vec<NodeId> = Vec::new();
+        for &n in nodes {
+            if let Ok(Some((ver, bytes))) = self.member_vget(n, key) {
+                holders.push(n);
+                if ver.beats(&best) {
+                    best = Some((ver, bytes));
+                }
+            }
+        }
+        (best, holders)
     }
 
     /// Decommission a node: migrate its data away, drop it from the
@@ -501,34 +643,88 @@ impl Coordinator {
         self.repair.enqueue(keys);
     }
 
-    /// GET through a member's control conn, reconnecting once if the
-    /// cached connection has gone stale (e.g. the node restarted).
-    /// `Err` means the member is genuinely unreachable right now.
-    fn member_get(&mut self, n: NodeId, key: DatumId) -> std::io::Result<Option<Vec<u8>>> {
+    /// Versioned GET through a member's control conn, reconnecting once
+    /// if the cached connection has gone stale (e.g. the node
+    /// restarted). `Err` means the member is genuinely unreachable
+    /// right now.
+    fn member_vget(
+        &mut self,
+        n: NodeId,
+        key: DatumId,
+    ) -> std::io::Result<Option<(Version, Vec<u8>)>> {
         let m = self
             .members
             .get_mut(&n)
             .ok_or_else(|| std::io::Error::other(format!("no member {n}")))?;
-        match m.conn.get(key) {
+        match m.conn.vget(key) {
             Ok(v) => Ok(v),
             Err(_) => {
                 m.conn = Conn::connect(m.addr)?;
-                m.conn.get(key)
+                m.conn.vget(key)
             }
         }
     }
 
+    /// Remove `key`'s copy on `node` without ever clobbering a newer
+    /// write: the delete is guarded at the version the migration copied
+    /// (`VDEL`), and a refused guard means a live write landed on the
+    /// old holder after the copy was taken — the newer value is
+    /// re-copied to the current holders first, then the guard retries
+    /// at the newer version. Best-effort by design: an unreachable peer
+    /// or a still-racing writer leaves the copy in place and queues the
+    /// key for background repair instead of failing the rebalance (a
+    /// stray *stale* copy on a former holder is harmless; a stray
+    /// *fresh* copy is exactly what repair's max-version fetch exists
+    /// to reconcile).
+    fn guarded_delete(&mut self, node: NodeId, key: DatumId, copied: Version, new_set: &[NodeId]) {
+        let mut guard = copied;
+        for _ in 0..MAX_DELETE_ROUNDS {
+            let Some(m) = self.members.get_mut(&node) else {
+                return;
+            };
+            match m.conn.vdel(key, guard) {
+                Ok(VdelOutcome::Deleted) | Ok(VdelOutcome::Missing) => return,
+                Ok(VdelOutcome::Newer) => {
+                    let Ok(Some((ver, bytes))) = self.member_vget(node, key) else {
+                        // Gone or unreachable meanwhile; let repair
+                        // reconcile whatever remains.
+                        self.repair.enqueue([key]);
+                        return;
+                    };
+                    if self.write_copies(key, ver, &bytes, new_set).is_none() {
+                        // Keep the old copy — it may be the only fresh
+                        // one — and let repair finish the hand-off.
+                        self.repair.enqueue([key]);
+                        return;
+                    }
+                    guard = ver;
+                }
+                Err(_) => {
+                    self.repair.enqueue([key]);
+                    return;
+                }
+            }
+        }
+        // Outlasted by a pathological racing writer: leave the copy and
+        // let repair converge it.
+        self.repair.enqueue([key]);
+    }
+
     /// One paced repair batch: re-replicate up to `max_keys` queued keys
-    /// from a surviving holder to the holders missing them. Bounding the
-    /// batch is the rate limit — the control loop chooses the cadence, so
-    /// foreground traffic is never starved behind a repair storm.
+    /// from the **max-version** holder to the holders missing them (or
+    /// holding a stale copy). Bounding the batch is the rate limit — the
+    /// control loop chooses the cadence, so foreground traffic is never
+    /// starved behind a repair storm.
     ///
-    /// A key is counted [`RepairTick::lost`] only when every holder
-    /// *answered* and none had a copy (RF genuinely exhausted). A key
-    /// whose holders are merely unreachable — or whose copy-writes fail —
-    /// is re-enqueued and counted [`RepairTick::deferred`]: either the
-    /// node comes back, or its death re-triggers the plan; repair never
-    /// silently drops a key.
+    /// Repair never trusts "any survivor": it surveys every target's
+    /// version and propagates the freshest copy, version-guarded, so a
+    /// replica that took a write mid-repair keeps it. A key is counted
+    /// [`RepairTick::lost`] only when every holder *answered* and none
+    /// had a copy (RF genuinely exhausted). A key whose holders are
+    /// merely unreachable — or whose copy-writes fail — is re-enqueued
+    /// and counted [`RepairTick::deferred`]: either the node comes back,
+    /// or its death re-triggers the plan; repair never silently drops a
+    /// key.
     pub fn repair_step(&mut self, max_keys: usize) -> anyhow::Result<RepairTick> {
         self.drain_repair_hints();
         let mut tick = RepairTick::default();
@@ -536,16 +732,19 @@ impl Coordinator {
             let Some(key) = self.repair.pop() else { break };
             tick.checked += 1;
             let targets = self.replica_set(key);
-            // Find a surviving copy and who is missing one.
-            let mut value: Option<Vec<u8>> = None;
+            // Survey the holders: freshest copy wins; note who is
+            // missing one and who holds a stale one.
+            let mut best: Option<(Version, Vec<u8>)> = None;
             let mut missing: Vec<NodeId> = Vec::new();
+            let mut holding: Vec<(NodeId, Version)> = Vec::new();
             let mut unreachable = false;
             for &n in &targets {
-                match self.member_get(n, key) {
-                    Ok(Some(v)) => {
-                        if value.is_none() {
-                            value = Some(v);
+                match self.member_vget(n, key) {
+                    Ok(Some((ver, bytes))) => {
+                        if ver.beats(&best) {
+                            best = Some((ver, bytes));
                         }
+                        holding.push((n, ver));
                     }
                     Ok(None) => missing.push(n),
                     Err(_) => {
@@ -554,16 +753,17 @@ impl Coordinator {
                     }
                 }
             }
-            if value.is_none() && !unreachable {
+            if best.is_none() && !unreachable {
                 // Last resort before declaring RF exhausted: the copy
-                // may sit on a *former* holder (a key deferred by
-                // reconcile_late_writers keeps its old-epoch copies).
-                // Probe every member once.
+                // may sit on a *former* holder (a key deferred by a
+                // refused delete guard or by reconcile_late_writers
+                // keeps its old-epoch copies). Probe every member once,
+                // still taking the max version.
                 let mut all: Vec<NodeId> = self.members.keys().copied().collect();
                 all.sort_unstable();
-                value = self.fetch_value(key, &all);
+                best = self.fetch_best(key, &all);
             }
-            let Some(value) = value else {
+            let Some((best_ver, value)) = best else {
                 if unreachable {
                     // No copy *found*, but not every holder answered —
                     // defer rather than declaring the datum dead.
@@ -580,16 +780,30 @@ impl Coordinator {
                 }
                 continue;
             };
+            // Holders whose copy lags the freshest version (e.g. a
+            // stale old-epoch copy a deferred hand-off left behind)
+            // receive the identical refresh write as missing ones.
+            for (n, ver) in holding {
+                if ver < best_ver {
+                    missing.push(n);
+                }
+            }
             let mut failed_write = false;
             let mut wrote = false;
             for n in missing {
                 if let Some(m) = self.members.get_mut(&n) {
-                    if m.conn.set(key, value.clone()).is_ok() {
-                        tick.copies += 1;
-                        tick.bytes += value.len() as u64;
-                        wrote = true;
-                    } else {
-                        failed_write = true;
+                    match m.conn.vset(key, best_ver, value.clone()) {
+                        // Only applied copies count as moved bytes; a
+                        // refused one means the holder got something
+                        // newer on its own — nothing is owed there.
+                        Ok(ack) => {
+                            if ack.applied {
+                                tick.copies += 1;
+                                tick.bytes += value.len() as u64;
+                                wrote = true;
+                            }
+                        }
+                        Err(_) => failed_write = true,
                     }
                 }
             }
@@ -612,6 +826,9 @@ impl Coordinator {
     /// Holder audit: enumerate every node's stored keys over the wire
     /// and verify each registered key is present on its *entire* replica
     /// set. The ground-truth check behind "repair restored full RF".
+    /// Enumeration pages through the `KEYSC` cursor op, so a large node
+    /// never serializes its whole keyset into one response line (or
+    /// holds one store lock across the walk).
     pub fn audit_replication(&mut self) -> anyhow::Result<ReplicationAudit> {
         self.sync_registry();
         self.drain_repair_hints();
@@ -620,8 +837,16 @@ impl Coordinator {
         ids.sort_unstable();
         for id in ids {
             let m = self.members.get_mut(&id).expect("member just listed");
-            for key in m.conn.keys()? {
-                holders.entry(key).or_default().push(id);
+            let mut cursor: Option<u64> = None;
+            loop {
+                let (keys, next) = m.conn.keys_chunk(AUDIT_PAGE, cursor)?;
+                for key in keys {
+                    holders.entry(key).or_default().push(id);
+                }
+                match next {
+                    Some(c) => cursor = Some(c),
+                    None => break,
+                }
             }
         }
         let mut audit = ReplicationAudit {
@@ -684,18 +909,20 @@ impl Coordinator {
                 continue;
             }
             report.moved += 1;
-            // Fetch from a surviving holder.
-            let mut value = None;
+            // Fetch the freshest surviving copy (replicas can briefly
+            // diverge under racing quorum writes; max version wins).
+            let mut best: Option<(Version, Vec<u8>)> = None;
             for n in old_set {
                 if let Some(m) = self.members.get_mut(n) {
-                    if let Some(v) = m.conn.get(key)? {
-                        value = Some(v);
-                        break;
+                    if let Some((ver, bytes)) = m.conn.vget(key)? {
+                        if ver.beats(&best) {
+                            best = Some((ver, bytes));
+                        }
                     }
                 }
             }
-            let value =
-                value.ok_or_else(|| anyhow::anyhow!("datum {key} lost during migration"))?;
+            let (version, value) =
+                best.ok_or_else(|| anyhow::anyhow!("datum {key} lost during migration"))?;
             report.bytes_moved += value.len() as u64 * (new_set.len() as u64);
             for n in &new_set {
                 if !old_set.contains(n) {
@@ -703,11 +930,16 @@ impl Coordinator {
                         .members
                         .get_mut(n)
                         .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
-                    m.conn.set(key, value.clone())?;
+                    // Carries the fetched stamp, so the node's
+                    // highest-version-wins rule refuses this copy
+                    // wherever a racing live write already landed a
+                    // newer value — the copier can never clobber it.
+                    m.conn.vset(key, version, value.clone())?;
                 }
             }
             moves.push(PendingMove {
                 key,
+                version,
                 old_set: old_set.clone(),
                 new_set,
             });
@@ -715,32 +947,33 @@ impl Coordinator {
         Ok((moves, report))
     }
 
-    /// Delete phase: drop the copies left behind on the old holders. Runs
-    /// strictly after the new snapshot is published.
-    fn delete_phase(&mut self, moves: Vec<PendingMove>) -> anyhow::Result<()> {
+    /// Delete phase: drop the copies left behind on the old holders,
+    /// each delete guarded at the version that was copied
+    /// ([`Self::guarded_delete`]). Runs strictly after the new snapshot
+    /// is published.
+    fn delete_phase(&mut self, moves: Vec<PendingMove>) {
         for mv in moves {
             for n in &mv.old_set {
                 if !mv.new_set.contains(n) {
-                    if let Some(m) = self.members.get_mut(n) {
-                        m.conn.del(mv.key)?;
-                    }
+                    self.guarded_delete(*n, mv.key, mv.version, &mv.new_set);
                 }
             }
         }
-        Ok(())
     }
 
-    /// Data-plane write through the coordinator's own connections.
-    /// (High-throughput clients use their own [`crate::net::Router`];
-    /// this path also maintains the §2.D metadata index.)
+    /// Data-plane write through the coordinator's own connections,
+    /// stamped from the shared write clock. (High-throughput clients
+    /// use their own [`crate::net::Router`] or a pool; this path also
+    /// maintains the §2.D metadata index.)
     pub fn set(&mut self, key: DatumId, value: &[u8]) -> anyhow::Result<()> {
+        let version = self.clock.stamp(self.epoch);
         let targets = self.replica_set(key);
         for n in &targets {
             let m = self
                 .members
                 .get_mut(n)
                 .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
-            m.conn.set(key, value.to_vec())?;
+            m.conn.vset(key, version, value.to_vec())?;
         }
         self.index.insert(&self.placer, key);
         self.keys.insert(key);

@@ -78,17 +78,38 @@ impl PlacerSnapshot {
         self.suspects.binary_search(&node).is_ok()
     }
 
-    /// Read target for `key`: the first non-suspect holder of its
-    /// replica set, or the primary when every holder is suspect.
-    /// `scratch` receives the full replica set as a side effect.
-    pub fn read_target(&self, key: DatumId, scratch: &mut Vec<NodeId>) -> NodeId {
+    /// First `quorum` read targets for `key`: non-suspect holders in
+    /// placement order, topped up with suspects (primary first) only
+    /// when healthy replicas run short — the single replica-selection
+    /// policy every reader routes by (`quorum == 1` is the classic
+    /// read-one-target steering). `scratch` receives the full replica
+    /// set as a side effect.
+    pub fn read_targets(
+        &self,
+        key: DatumId,
+        quorum: usize,
+        scratch: &mut Vec<NodeId>,
+        out: &mut Vec<NodeId>,
+    ) {
         self.replica_set(key, scratch);
+        out.clear();
+        let q = quorum.max(1).min(scratch.len());
         for &n in scratch.iter() {
+            if out.len() == q {
+                return;
+            }
             if !self.is_suspect(n) {
-                return n;
+                out.push(n);
             }
         }
-        scratch[0]
+        for &n in scratch.iter() {
+            if out.len() == q {
+                return;
+            }
+            if self.is_suspect(n) {
+                out.push(n);
+            }
+        }
     }
 
     /// Internal consistency check (used by the linearizability tests):
@@ -237,23 +258,37 @@ mod tests {
         assert_eq!(snap.addr_of(9), None);
     }
 
+    fn first_read_target(snap: &PlacerSnapshot, key: DatumId) -> NodeId {
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        snap.read_targets(key, 1, &mut scratch, &mut out);
+        out[0]
+    }
+
     #[test]
-    fn read_target_routes_around_suspects() {
+    fn read_targets_route_around_suspects() {
         let mut snap = snapshot_with_nodes(1, 5);
         snap.replicas = 3;
         let mut set = Vec::new();
         snap.replica_set(42, &mut set);
         let primary = set[0];
-        let mut scratch = Vec::new();
-        assert_eq!(snap.read_target(42, &mut scratch), primary);
+        assert_eq!(first_read_target(&snap, 42), primary);
         snap.suspects = vec![primary];
-        assert_eq!(snap.read_target(42, &mut scratch), set[1]);
+        assert_eq!(first_read_target(&snap, 42), set[1]);
         // Every holder suspect: fall back to the primary.
         let mut all = set.clone();
         all.sort_unstable();
         snap.suspects = all;
-        assert_eq!(snap.read_target(42, &mut scratch), primary);
+        assert_eq!(first_read_target(&snap, 42), primary);
         assert!(snap.is_suspect(primary));
+        // Quorum fan-out prefers healthy replicas and caps at the set.
+        snap.suspects = vec![set[1]];
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        snap.read_targets(42, 2, &mut scratch, &mut out);
+        assert_eq!(out, vec![set[0], set[2]]);
+        snap.read_targets(42, 99, &mut scratch, &mut out);
+        assert_eq!(out.len(), 3, "capped at the replica set size");
     }
 
     #[test]

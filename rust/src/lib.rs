@@ -7,7 +7,9 @@
 //!   algorithms ([`algo`]), the cluster substrate ([`cluster`]), a
 //!   memcached-like KV network layer ([`net`]) with a concurrent
 //!   epoch-snapshot data plane ([`coordinator::snapshot`],
-//!   [`net::pool`]), the coordinator ([`coordinator`]), a
+//!   [`net::pool`]), a lock-striped versioned storage engine
+//!   ([`storage`]: `ShardedStore`, highest-version-wins writes), the
+//!   coordinator ([`coordinator`]), a
 //!   fault-tolerance plane ([`fault`]: quorum I/O, heartbeat failure
 //!   detection, background repair), the paper's complete evaluation
 //!   harness ([`experiments`]) and a closed-loop throughput harness
@@ -31,5 +33,6 @@ pub mod net;
 pub mod prng;
 pub mod runtime;
 pub mod stats;
+pub mod storage;
 pub mod util;
 pub mod workload;

@@ -386,6 +386,11 @@ pub struct FailoverConfig {
     pub replicas: usize,
     /// Replica acks a SET needs while a holder is down (1..=replicas).
     pub write_quorum: usize,
+    /// Replicas probed per GET (1..=replicas): above 1, reads compare
+    /// replica versions and read-repair stale copies in place — the
+    /// fault story's second convergence channel besides background
+    /// repair.
+    pub read_quorum: usize,
     pub keys: u64,
     /// Ops per driver round (the driver loops rounds until the fault
     /// story completes, so total traffic is a multiple of this).
@@ -416,6 +421,7 @@ impl Default for FailoverConfig {
             nodes: 6,
             replicas: 3,
             write_quorum: 2,
+            read_quorum: 2,
             keys: 2_000,
             read_ops: 4_000,
             workers: 4,
@@ -448,6 +454,8 @@ pub struct FailoverReport {
     pub retried: u64,
     /// SETs acked below full RF (quorum met; repair owed a copy).
     pub degraded_writes: u64,
+    /// Stale/missing replica copies quorum reads refreshed in place.
+    pub read_repairs: u64,
     /// Reads that found nothing anywhere — must be 0.
     pub lost: u64,
     /// Suspect transitions the detector reported.
@@ -470,14 +478,16 @@ pub struct FailoverReport {
 impl FailoverReport {
     pub fn line(&self) -> String {
         format!(
-            "{:<9} rf={} q={} {:>8} ops  failover {:>4}  degraded {:>4}  lost {:>2}  \
-             detect {:>6.1} ms  full-rf {:>7.1} ms  repaired {:>5}  audit {}/{}  epochs {}..{}",
+            "{:<9} rf={} q={} {:>8} ops  failover {:>4}  degraded {:>4}  rrep {:>4}  \
+             lost {:>2}  detect {:>6.1} ms  full-rf {:>7.1} ms  repaired {:>5}  \
+             audit {}/{}  epochs {}..{}",
             self.scenario,
             self.replicas,
             self.write_quorum,
             self.ops,
             self.failovers,
             self.degraded_writes,
+            self.read_repairs,
             self.lost,
             self.detect_ms,
             self.time_to_full_rf_ms,
@@ -500,6 +510,7 @@ impl FailoverReport {
             ("failovers", Json::Num(self.failovers as f64)),
             ("retried", Json::Num(self.retried as f64)),
             ("degraded_writes", Json::Num(self.degraded_writes as f64)),
+            ("read_repairs", Json::Num(self.read_repairs as f64)),
             ("lost", Json::Num(self.lost as f64)),
             ("suspect_events", Json::Num(self.suspect_events as f64)),
             ("time_to_detect_ms", Json::Num(self.detect_ms)),
@@ -553,6 +564,10 @@ fn build_cluster(cfg: &FailoverConfig, scenario: &Scenario) -> anyhow::Result<Co
         "write quorum must be within 1..=replicas"
     );
     anyhow::ensure!(
+        cfg.read_quorum >= 1 && cfg.read_quorum <= cfg.replicas,
+        "read quorum must be within 1..=replicas"
+    );
+    anyhow::ensure!(
         cfg.suspect_after >= 1 && cfg.suspect_after < cfg.dead_after,
         "need suspect_after in 1..dead_after (a flap must be observable without a death)"
     );
@@ -592,7 +607,8 @@ pub fn run_failover(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
         pipeline_depth: cfg.pipeline_depth,
         verify_hits: true,
         write_quorum: cfg.write_quorum,
-        ..PoolConfig::default() // registry + repair hints wired by connect_pool
+        read_quorum: cfg.read_quorum,
+        ..PoolConfig::default() // registry + hints + clock wired by connect_pool
     })?;
     let stop = Arc::new(AtomicBool::new(false));
     let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
@@ -691,6 +707,7 @@ pub fn run_failover(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
         failovers: res.failovers,
         retried: res.retried,
         degraded_writes: res.degraded_writes,
+        read_repairs: res.read_repairs,
         lost: res.lost,
         suspect_events,
         detect_ms,
@@ -719,7 +736,8 @@ pub fn run_flapping(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
         pipeline_depth: cfg.pipeline_depth,
         verify_hits: true,
         write_quorum: cfg.write_quorum,
-        ..PoolConfig::default() // registry + repair hints wired by connect_pool
+        read_quorum: cfg.read_quorum,
+        ..PoolConfig::default() // registry + hints + clock wired by connect_pool
     })?;
     let stop = Arc::new(AtomicBool::new(false));
     let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
@@ -778,6 +796,7 @@ pub fn run_flapping(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
         failovers: res.failovers,
         retried: res.retried,
         degraded_writes: res.degraded_writes,
+        read_repairs: res.read_repairs,
         lost: res.lost,
         suspect_events,
         detect_ms: 0.0,
@@ -824,6 +843,7 @@ pub fn write_failover_json(
         ("nodes", Json::Num(cfg.nodes as f64)),
         ("replicas", Json::Num(cfg.replicas as f64)),
         ("write_quorum", Json::Num(cfg.write_quorum as f64)),
+        ("read_quorum", Json::Num(cfg.read_quorum as f64)),
         ("keys", Json::Num(cfg.keys as f64)),
         ("read_ops", Json::Num(cfg.read_ops as f64)),
         ("workers", Json::Num(cfg.workers as f64)),

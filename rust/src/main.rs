@@ -17,10 +17,11 @@
 //!               [--replicas R --workers W --depth D]  single Router vs
 //!               [--seed S --out BENCH_throughput.json] RouterPool, 3 scenarios
 //! asura bench-failover [--nodes N --replicas R]     fault-plane harness:
-//!               [--quorum Q --keys K --reads R]     kill-node + flapping
-//!               [--suspect-after N --dead-after N]  under live traffic,
-//!               [--repair-batch B --seed S]         time-to-detect /
-//!               [--out BENCH_failover.json]         time-to-full-RF
+//!               [--quorum Q --read-quorum Q]        kill-node + flapping
+//!               [--keys K --reads R]                under live traffic
+//!               [--suspect-after N --dead-after N]  (quorum writes+reads,
+//!               [--repair-batch B --seed S]         read repair), emits
+//!               [--out BENCH_failover.json]         detect / full-RF times
 //! asura node    --port P                            standalone storage node
 //! asura place   --id X --nodes N [--algo asura|chash|straw]
 //! asura info    [--artifacts DIR]                   PJRT + artifact info
@@ -315,6 +316,7 @@ fn run_bench_failover(args: &Args) -> anyhow::Result<()> {
         nodes: args.get_u64("nodes", default.nodes as u64) as u32,
         replicas: args.get_u64("replicas", default.replicas as u64) as usize,
         write_quorum: args.get_u64("quorum", default.write_quorum as u64) as usize,
+        read_quorum: args.get_u64("read-quorum", default.read_quorum as u64) as usize,
         keys: args.get_u64("keys", default.keys),
         read_ops: args.get_u64("reads", default.read_ops),
         workers: args.get_u64("workers", default.workers as u64) as usize,
@@ -336,11 +338,12 @@ fn run_bench_failover(args: &Args) -> anyhow::Result<()> {
         "--workers and --depth must be >= 1"
     );
     println!(
-        "bench-failover: {} nodes, rf={}, quorum={}, {} keys, {} reads/round, \
+        "bench-failover: {} nodes, rf={}, wq={}, rq={}, {} keys, {} reads/round, \
          detect {}×{} ms, repair batch {}",
         cfg.nodes,
         cfg.replicas,
         cfg.write_quorum,
+        cfg.read_quorum,
         cfg.keys,
         cfg.read_ops,
         cfg.dead_after,

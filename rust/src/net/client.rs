@@ -1,6 +1,7 @@
 //! Client connection to a storage-node server.
 
-use super::protocol::{read_response, write_request, Request, Response};
+use super::protocol::{read_response, write_request, Request, Response, VdelOutcome, VsetAck};
+use crate::storage::Version;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream};
 
@@ -29,6 +30,39 @@ impl Conn {
     pub fn set(&mut self, key: u64, value: Vec<u8>) -> std::io::Result<()> {
         match self.call(&Request::Set { key, value })? {
             Response::Stored => Ok(()),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// Versioned write (highest-version-wins at the node). A
+    /// non-applied ack means the node already held a strictly newer
+    /// copy — the write did not land, but the key is durable at or
+    /// above this version there, so quorum accounting may still count
+    /// it as an ack; the echoed version tells the writer what won.
+    pub fn vset(&mut self, key: u64, version: Version, value: Vec<u8>) -> std::io::Result<VsetAck> {
+        match self.call(&Request::VSet { key, version, value })? {
+            Response::VStored { applied, version } => Ok(VsetAck { applied, version }),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// Versioned read: the stored bytes plus the write stamp that
+    /// produced them (quorum readers compare these across replicas).
+    pub fn vget(&mut self, key: u64) -> std::io::Result<Option<(Version, Vec<u8>)>> {
+        match self.call(&Request::VGet { key })? {
+            Response::VValue { version, value } => Ok(Some((version, value))),
+            Response::NotFound => Ok(None),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// Version-guarded delete: removes the node's copy only if it is
+    /// not newer than `guard` (the migration delete phase's fence).
+    pub fn vdel(&mut self, key: u64, guard: Version) -> std::io::Result<VdelOutcome> {
+        match self.call(&Request::VDel { key, version: guard })? {
+            Response::Deleted => Ok(VdelOutcome::Deleted),
+            Response::Newer => Ok(VdelOutcome::Newer),
+            Response::NotFound => Ok(VdelOutcome::Missing),
             other => Err(bad(other)),
         }
     }
@@ -70,10 +104,26 @@ impl Conn {
         }
     }
 
-    /// Enumerate every key the node holds (repair-plane holder audits).
+    /// Enumerate every key the node holds in one response. Prefer
+    /// [`Self::keys_chunk`] against large nodes — this materializes the
+    /// whole keyset into a single line.
     pub fn keys(&mut self) -> std::io::Result<Vec<u64>> {
         match self.call(&Request::Keys)? {
             Response::KeyList(keys) => Ok(keys),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// One bounded page of the node's key scan (repair-plane holder
+    /// audits). Pass `None` to start and the returned cursor (while
+    /// `Some`) to continue.
+    pub fn keys_chunk(
+        &mut self,
+        limit: u64,
+        cursor: Option<u64>,
+    ) -> std::io::Result<(Vec<u64>, Option<u64>)> {
+        match self.call(&Request::KeysChunk { cursor, limit })? {
+            Response::KeyPage { keys, next } => Ok((keys, next)),
             other => Err(bad(other)),
         }
     }

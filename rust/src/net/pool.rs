@@ -1,4 +1,4 @@
-//! `RouterPool`: the concurrent, pipelined data plane.
+//! `RouterPool`: the concurrent, pipelined, versioned data plane.
 //!
 //! The seed [`super::router::Router`] is a single thread issuing one
 //! blocking round trip per op. This module shards that work across N
@@ -10,33 +10,33 @@
 //! - **ops are pipelined**: each worker partitions an op group by target
 //!   node and flushes up to `pipeline_depth` requests per connection in a
 //!   single round trip ([`Conn::pipeline`]);
+//! - **writes are versioned**: every SET is stamped once with
+//!   `(snapshot epoch, seq)` — the sequence drawn from the pool's shared
+//!   [`WriteClock`] — and fans out as a `VSET` the nodes apply by
+//!   highest-version-wins. A write racing a migration's copy window can
+//!   therefore never be clobbered by a stale copier, and replays after a
+//!   connection failure reuse the original stamp (idempotent by
+//!   construction, not by payload convention);
+//! - **reads are quorum reads**: a GET fans a `VGET` to the first
+//!   [`PoolConfig::read_quorum`] non-suspect holders, the freshest
+//!   version wins, and any probed replica that answered with a stale or
+//!   missing copy is read-repaired in place
+//!   ([`BatchResult::read_repairs`]);
 //! - **epoch bumps are survived by reads**: a GET that misses because it
 //!   raced the delete phase of a migration refreshes the snapshot and
 //!   replays against the new epoch's replica set; only an op that *still*
 //!   misses counts as lost ([`BatchResult::lost`] — zero across a clean
 //!   rebalance);
 //! - **node death is survived by both directions** (the fault plane,
-//!   [`crate::fault`]): SETs fan out to the full replica set and ack at a
-//!   configurable [`PoolConfig::write_quorum`], so a dead replica degrades
-//!   a write instead of failing it; GETs route to the first non-suspect
-//!   holder and, on a connection failure, fail over to surviving replicas
-//!   ([`BatchResult::failovers`]);
+//!   [`crate::fault`]): SETs ack at a configurable
+//!   [`PoolConfig::write_quorum`], so a dead replica degrades a write
+//!   instead of failing it; GETs fail over to surviving replicas on a
+//!   connection failure ([`BatchResult::failovers`]);
 //! - **acked writes are registered**: with [`PoolConfig::registry`] wired
 //!   (see `Coordinator::connect_pool`), every acked SET key is written
 //!   back to the coordinator, so migration and repair planning cover
 //!   pool-written data — writes no longer strand on their old holders
 //!   when they race a rebalance.
-//!
-//! **Known limits:** values are not versioned — for a key *already under
-//! management*, a SET racing a migration's copy window can still be
-//! superseded by the migrated copy (last-copier-wins). The harnesses
-//! write deterministic per-key values, so the scenarios are insensitive
-//! to this; value fencing would need write versioning on the nodes. And
-//! registration happens in the same call that reads a flush's acks, but
-//! a write whose ack lands in the instants between a migration's final
-//! registry drain and the worker's `register_batch` is absorbed only at
-//! the *next* plan — true write fencing against epoch bumps needs the
-//! same versioning.
 
 use super::client::Conn;
 use super::protocol::{Request, Response};
@@ -44,6 +44,7 @@ use crate::algo::{DatumId, NodeId, Placer};
 use crate::coordinator::registry::KeyRegistry;
 use crate::coordinator::snapshot::{SnapshotCell, SnapshotReader};
 use crate::stats::Summary;
+use crate::storage::{Version, WriteClock};
 use crate::workload::{value_for, Op};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -75,6 +76,21 @@ pub struct PoolConfig {
     /// flowing through a single-node failure; background repair restores
     /// the missing copy once the failure is detected.
     pub write_quorum: usize,
+    /// Replicas probed per GET. `1` (the default) reads the first
+    /// non-suspect holder — the fast path. Larger values fan the read
+    /// out, compare the replicas' versions, serve the freshest copy,
+    /// and read-repair any probed replica that answered stale or
+    /// missing. Capped at the replica set size.
+    pub read_quorum: usize,
+    /// Version-stamp sequence source. Clones share the counter; the
+    /// coordinator passes its own clock via `Coordinator::connect_pool`
+    /// so control-plane writes, every pool worker, and migration copies
+    /// draw from one total order — writers of coordinator-managed data
+    /// should always be built that way. Stand-alone pools default to a
+    /// private clock, which reads advance Lamport-style from every
+    /// version they observe ([`WriteClock::observe`]), but which cannot
+    /// guarantee uniqueness against stamps minted elsewhere.
+    pub clock: WriteClock,
     /// Writer registry for the coordinator write-back (see
     /// [`crate::coordinator::registry`]). `None` = unregistered writes,
     /// invisible to migration/repair planning.
@@ -93,6 +109,8 @@ impl Default for PoolConfig {
             pipeline_depth: 32,
             verify_hits: false,
             write_quorum: 0,
+            read_quorum: 1,
+            clock: WriteClock::new(),
             registry: None,
             repair_hints: None,
         }
@@ -116,6 +134,10 @@ pub struct BatchResult {
     /// SETs acked by their write quorum but fewer than all replicas
     /// (a holder was unreachable; repair owes it a copy).
     pub degraded_writes: u64,
+    /// Stale or missing replica copies refreshed in place by quorum
+    /// reads (`read_quorum > 1`): the reader pushed the freshest
+    /// version back to the lagging holder.
+    pub read_repairs: u64,
     /// Lowest / highest membership epoch observed while executing.
     pub epoch_min: u64,
     pub epoch_max: u64,
@@ -149,6 +171,7 @@ impl BatchResult {
         self.lost += other.lost;
         self.failovers += other.failovers;
         self.degraded_writes += other.degraded_writes;
+        self.read_repairs += other.read_repairs;
         self.epoch_min = self.epoch_min.min(other.epoch_min);
         self.epoch_max = self.epoch_max.max(other.epoch_max);
         self.latency.absorb(&other.latency);
@@ -256,6 +279,24 @@ fn worker_loop(reader: SnapshotReader, rx: mpsc::Receiver<Job>, cfg: PoolConfig)
     }
 }
 
+/// Per-GET fan-out bookkeeping within one pipeline group.
+struct GetProbe {
+    /// Ops in the group reading this key (duplicate GETs of one key
+    /// share a single fan-out and count once per op at resolution).
+    count: u64,
+    /// Answers collected: the replica's versioned copy, or a definitive
+    /// "not found".
+    responses: Vec<(NodeId, Option<(Version, Vec<u8>)>)>,
+    /// At least one probed replica failed at the connection level.
+    conn_failed: bool,
+    /// A SET of this key was enqueued *after* this probe: GETs ordered
+    /// after that SET must not share it (they would read pre-SET state)
+    /// and fall back to a post-flush read instead.
+    closed: bool,
+    /// Max RTT among the flushes that carried this key's probes.
+    rtt_ns: f64,
+}
+
 struct Worker {
     reader: SnapshotReader,
     conns: HashMap<NodeId, (SocketAddr, Conn)>,
@@ -288,31 +329,72 @@ impl Worker {
     /// Execute one pipeline-depth group under a single snapshot.
     fn run_group(&mut self, group: &[Op], res: &mut BatchResult) -> std::io::Result<()> {
         let snap = Arc::clone(self.reader.current());
+        // Generation this group *routed* under — compared against the
+        // live cell at resolution time. Deliberately captured here:
+        // replay paths refresh the reader mid-group, which would make
+        // `observed_generation()` lie about how fresh the routing was.
+        let routed_generation = self.reader.observed_generation();
         res.note_epoch(snap.epoch);
         if snap.placer.node_count() == 0 {
             return Err(other_err("no live nodes in the published snapshot".to_string()));
         }
         // Partition by target node, preserving per-node op order. A SET
-        // fans out to its full replica set; a GET targets the first
-        // non-suspect holder (the primary unless the failure detector
-        // distrusts it).
+        // is stamped once — (snapshot epoch, shared-clock seq) — and
+        // fans the same `VSET` to its full replica set, so every
+        // replica applies the identical version. A GET fans a `VGET` to
+        // its first `read_quorum` non-suspect holders.
         let mut by_node: HashMap<NodeId, Vec<Request>> = HashMap::new();
         let mut replicas: Vec<NodeId> = Vec::new();
+        let mut targets: Vec<NodeId> = Vec::new();
+        let mut probes: HashMap<DatumId, GetProbe> = HashMap::new();
+        // GETs ordered after a SET of the same key whose probe pre-dates
+        // that SET: resolved with a post-flush read instead (rare —
+        // only a GET / SET / GET sandwich on one key in one group).
+        let mut after_write_reads: Vec<DatumId> = Vec::new();
         for op in group {
             match *op {
                 Op::Set { key, size } => {
+                    let version = self.cfg.clock.stamp(snap.epoch);
                     snap.replica_set(key, &mut replicas);
                     for &n in &replicas {
-                        by_node.entry(n).or_default().push(Request::Set {
+                        by_node.entry(n).or_default().push(Request::VSet {
                             key,
+                            version,
                             value: value_for(key, size),
                         });
                     }
+                    // An in-flight probe for this key now reads
+                    // pre-SET state; later GETs must not join it.
+                    if let Some(p) = probes.get_mut(&key) {
+                        p.closed = true;
+                    }
                 }
-                Op::Get { key } => {
-                    let target = snap.read_target(key, &mut replicas);
-                    by_node.entry(target).or_default().push(Request::Get { key });
-                }
+                Op::Get { key } => match probes.entry(key) {
+                    Entry::Occupied(mut e) if !e.get().closed => {
+                        e.get_mut().count += 1;
+                    }
+                    Entry::Occupied(_) => {
+                        after_write_reads.push(key);
+                    }
+                    Entry::Vacant(v) => {
+                        // A fresh probe is FIFO-safe even after a SET of
+                        // this key in the same group: the probe targets
+                        // are a subset of the replica set, so on every
+                        // probed connection the VSET precedes this VGET
+                        // and the read observes the write.
+                        snap.read_targets(key, self.cfg.read_quorum, &mut replicas, &mut targets);
+                        for &n in &targets {
+                            by_node.entry(n).or_default().push(Request::VGet { key });
+                        }
+                        v.insert(GetProbe {
+                            count: 1,
+                            responses: Vec::with_capacity(targets.len()),
+                            conn_failed: false,
+                            closed: false,
+                            rtt_ns: 0.0,
+                        });
+                    }
+                },
             }
         }
         res.ops += group.len() as u64;
@@ -320,29 +402,32 @@ impl Worker {
         // carried op's latency sample. A flush that fails on a connection
         // error fails the *connection*, not its ops: the peer is dead, or
         // left the cluster under a stale route — either way SETs replay
-        // against the freshest replica set at the write quorum, and GETs
-        // fail over to surviving replicas.
+        // against the freshest replica set at the write quorum (reusing
+        // their original stamp), and GETs fail over to surviving replicas.
         let mut node_ids: Vec<NodeId> = by_node.keys().copied().collect();
         node_ids.sort_unstable();
-        let mut missed: Vec<DatumId> = Vec::new();
-        let mut failed_sets: HashMap<DatumId, Vec<u8>> = HashMap::new();
-        let mut failed_gets: Vec<DatumId> = Vec::new();
+        let mut failed_sets: HashMap<DatumId, (Version, Vec<u8>)> = HashMap::new();
         for node in node_ids {
             let reqs = &by_node[&node];
             let addr = snap
                 .addr_of(node)
                 .ok_or_else(|| other_err(format!("no address for node {node}")))?;
-            match self.flush_node(node, addr, reqs, res, &mut missed) {
+            match self.flush_node(node, addr, reqs, res, &mut probes) {
                 Ok(()) => {}
                 Err(e) if is_conn_error(&e) => {
                     for req in reqs {
                         match req {
                             // Keyed map: a SET that fanned out to several
-                            // failed nodes replays once (idempotent).
-                            Request::Set { key, value } => {
-                                failed_sets.insert(*key, value.clone());
+                            // failed nodes replays once (idempotent — the
+                            // replay carries the same version stamp).
+                            Request::VSet { key, version, value } => {
+                                failed_sets.insert(*key, (*version, value.clone()));
                             }
-                            Request::Get { key } => failed_gets.push(*key),
+                            Request::VGet { key } => {
+                                if let Some(p) = probes.get_mut(key) {
+                                    p.conn_failed = true;
+                                }
+                            }
                             other => {
                                 return Err(other_err(format!(
                                     "unexpected request in failover {other:?}"
@@ -354,14 +439,17 @@ impl Worker {
                 Err(e) => return Err(e),
             }
         }
-        for (key, value) in failed_sets {
-            self.replay_set(key, &value, res)?;
+        for (key, (version, value)) in failed_sets {
+            self.replay_set(key, version, &value, res)?;
             res.failovers += 1;
         }
-        for key in failed_gets {
+        // GETs ordered after a SET of the same key within this group:
+        // resolved with a fresh blocking read issued after every flush
+        // above, so they observe the write (read-your-write within a
+        // group, as the per-connection request order used to provide).
+        for key in after_write_reads {
             if self.replay_get(key, res)? {
                 res.hits += 1;
-                res.failovers += 1;
             } else {
                 res.misses += 1;
                 if self.cfg.verify_hits {
@@ -369,15 +457,101 @@ impl Worker {
                 }
             }
         }
-        // Misses under verify_hits: replay over the freshest replica set
-        // (the datum may have migrated under us).
-        for key in missed {
-            res.retried += 1;
-            if self.replay_get(key, res)? {
-                res.hits += 1;
-            } else {
-                res.misses += 1;
-                res.lost += 1;
+        // Resolve the GET fan-outs: the freshest answered version wins;
+        // probed replicas that answered stale or missing are repaired in
+        // place; conn failures without any answer fail over to a
+        // fresh-snapshot replay; a unanimous "not found" is a miss
+        // (replayed under verify_hits in case it raced a migration's
+        // delete phase).
+        let mut keys: Vec<DatumId> = probes.keys().copied().collect();
+        keys.sort_unstable();
+        for key in keys {
+            let probe = probes.remove(&key).expect("probe just listed");
+            let best = probe
+                .responses
+                .iter()
+                .filter_map(|(_, r)| r.as_ref())
+                .max_by_key(|r| r.0);
+            match best {
+                Some(&(best_ver, ref best_bytes)) => {
+                    for (n, resp) in &probe.responses {
+                        let lagging = match resp {
+                            Some((v, _)) => *v < best_ver,
+                            None => true,
+                        };
+                        // Read-repair only under a *current* membership
+                        // view, re-checked before every repair write: if
+                        // an epoch published since this group routed, a
+                        // "missing" answer may be a migration's delete
+                        // phase rather than a lagging replica, and
+                        // re-writing the copy would leak a stray onto a
+                        // former holder. (The check-then-write window
+                        // this narrows cannot be fully closed client
+                        // side; a stray that slips through is version-
+                        // guarded and reconcilable.)
+                        if !lagging || self.reader.cell_generation() != routed_generation {
+                            continue;
+                        }
+                        let Some(addr) = snap.addr_of(*n) else { continue };
+                        match self
+                            .conn(*n, addr)
+                            .and_then(|c| c.vset(key, best_ver, best_bytes.clone()))
+                        {
+                            // Only an *applied* write is a repair; a
+                            // refused one means the replica already
+                            // moved past `best_ver` on its own.
+                            Ok(ack) => {
+                                if ack.applied {
+                                    res.read_repairs += 1;
+                                }
+                            }
+                            Err(_) => {
+                                self.conns.remove(n);
+                            }
+                        }
+                    }
+                    if probe.conn_failed {
+                        // A probed replica was lost at the connection
+                        // level but another answered: the read failed
+                        // over within its quorum fan-out.
+                        res.failovers += probe.count;
+                    }
+                    res.hits += probe.count;
+                    for _ in 0..probe.count {
+                        res.latency.push(probe.rtt_ns);
+                    }
+                }
+                None if probe.conn_failed => {
+                    for _ in 0..probe.count {
+                        if self.replay_get(key, res)? {
+                            res.hits += 1;
+                            res.failovers += 1;
+                        } else {
+                            res.misses += 1;
+                            if self.cfg.verify_hits {
+                                res.lost += 1;
+                            }
+                        }
+                    }
+                }
+                None => {
+                    if self.cfg.verify_hits {
+                        for _ in 0..probe.count {
+                            res.retried += 1;
+                            if self.replay_get(key, res)? {
+                                res.hits += 1;
+                            } else {
+                                res.misses += 1;
+                                res.lost += 1;
+                            }
+                        }
+                    } else {
+                        res.misses += probe.count;
+                        for _ in 0..probe.count {
+                            res.latency.push(probe.rtt_ns);
+                        }
+                    }
+                }
             }
         }
         Ok(())
@@ -394,7 +568,7 @@ impl Worker {
         addr: SocketAddr,
         reqs: &[Request],
         res: &mut BatchResult,
-        missed: &mut Vec<DatumId>,
+        probes: &mut HashMap<DatumId, GetProbe>,
     ) -> std::io::Result<()> {
         let t0 = Instant::now();
         let resps = match self.conn(node, addr).and_then(|c| c.pipeline(reqs)) {
@@ -406,24 +580,35 @@ impl Worker {
         };
         let rtt_ns = t0.elapsed().as_nanos() as f64;
         let mut acked: Vec<DatumId> = Vec::new();
-        for (req, resp) in reqs.iter().zip(&resps) {
+        for (req, resp) in reqs.iter().zip(resps) {
             match (req, resp) {
-                (Request::Set { key, .. }, Response::Stored) => {
+                // Applied and superseded both ack: `applied == false`
+                // means the replica already holds a strictly newer copy
+                // of the key, which satisfies this write's durability
+                // at that replica.
+                (Request::VSet { key, .. }, Response::VStored { applied, version }) => {
+                    if !applied {
+                        // Superseded: catch the clock up to the winner.
+                        self.cfg.clock.observe(version.seq);
+                    }
                     res.latency.push(rtt_ns);
                     acked.push(*key);
                 }
-                (Request::Get { .. }, Response::Value(_)) => {
-                    res.hits += 1;
-                    res.latency.push(rtt_ns);
+                // Responses are consumed by value — the hit's bytes move
+                // into the probe, no clone on the read hot path.
+                (Request::VGet { key }, Response::VValue { version, value }) => {
+                    // Lamport receive rule: stamps minted after seeing
+                    // this version always exceed it.
+                    self.cfg.clock.observe(version.seq);
+                    if let Some(p) = probes.get_mut(key) {
+                        p.responses.push((node, Some((version, value))));
+                        p.rtt_ns = p.rtt_ns.max(rtt_ns);
+                    }
                 }
-                (Request::Get { key }, Response::NotFound) => {
-                    if self.cfg.verify_hits {
-                        // Latency for a deferred GET is recorded by its
-                        // replay, not here — one sample per op.
-                        missed.push(*key);
-                    } else {
-                        res.misses += 1;
-                        res.latency.push(rtt_ns);
+                (Request::VGet { key }, Response::NotFound) => {
+                    if let Some(p) = probes.get_mut(key) {
+                        p.responses.push((node, None));
+                        p.rtt_ns = p.rtt_ns.max(rtt_ns);
                     }
                 }
                 (_, resp) => {
@@ -438,15 +623,18 @@ impl Worker {
     }
 
     /// Replay a SET against the freshest replica set, going around again
-    /// if membership changes under the probe. The write succeeds once its
-    /// quorum acks ([`PoolConfig::write_quorum`]); a holder unreachable
-    /// beyond the quorum is the repair plane's debt, counted in
-    /// [`BatchResult::degraded_writes`]. A write that cannot even reach
-    /// its quorum under stable membership fails loudly — that beats
-    /// silently dropping it.
+    /// if membership changes under the probe. The replay carries the
+    /// op's *original* version stamp, so it is idempotent and can never
+    /// clobber a newer write that landed meanwhile. The write succeeds
+    /// once its quorum acks ([`PoolConfig::write_quorum`]); a holder
+    /// unreachable beyond the quorum is the repair plane's debt, counted
+    /// in [`BatchResult::degraded_writes`]. A write that cannot even
+    /// reach its quorum under stable membership fails loudly — that
+    /// beats silently dropping it.
     fn replay_set(
         &mut self,
         key: DatumId,
+        version: Version,
         value: &[u8],
         res: &mut BatchResult,
     ) -> std::io::Result<()> {
@@ -462,8 +650,16 @@ impl Worker {
                 let addr = snap
                     .addr_of(n)
                     .ok_or_else(|| other_err(format!("no address for node {n}")))?;
-                match self.conn(n, addr).and_then(|c| c.set(key, value.to_vec())) {
-                    Ok(()) => acks += 1,
+                match self
+                    .conn(n, addr)
+                    .and_then(|c| c.vset(key, version, value.to_vec()))
+                {
+                    Ok(ack) => {
+                        if !ack.applied {
+                            self.cfg.clock.observe(ack.version.seq);
+                        }
+                        acks += 1;
+                    }
                     Err(e) if is_conn_error(&e) => {
                         self.conns.remove(&n);
                         last_err = Some(e);
@@ -523,8 +719,9 @@ impl Worker {
                 let addr = snap
                     .addr_of(n)
                     .ok_or_else(|| other_err(format!("no address for node {n}")))?;
-                match self.conn(n, addr).and_then(|c| c.get(key)) {
-                    Ok(Some(_)) => {
+                match self.conn(n, addr).and_then(|c| c.vget(key)) {
+                    Ok(Some((ver, _))) => {
+                        self.cfg.clock.observe(ver.seq);
                         found = true;
                         break 'rounds;
                     }
@@ -636,6 +833,62 @@ mod tests {
             sum
         };
         assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn replicas_of_one_write_carry_the_same_version() {
+        let coord = cluster(4, 3);
+        let cell = coord.snapshot_cell();
+        let pool = RouterPool::connect(&cell, PoolConfig::default()).unwrap();
+        pool.run(vec![Op::Set { key: 77, size: 8 }]).unwrap();
+        let snap = cell.load();
+        let mut replicas = Vec::new();
+        snap.replica_set(77, &mut replicas);
+        let mut versions = Vec::new();
+        for &n in &replicas {
+            let mut c = Conn::connect(snap.addr_of(n).unwrap()).unwrap();
+            let (ver, _) = c.vget(77).unwrap().expect("replica missing the write");
+            versions.push(ver);
+        }
+        assert!(
+            versions.windows(2).all(|w| w[0] == w[1]),
+            "replica versions diverged: {versions:?}"
+        );
+        assert!(versions[0].seq > 0, "stamp must come from the write clock");
+    }
+
+    #[test]
+    fn quorum_reads_read_repair_stale_replicas() {
+        let coord = cluster(4, 2);
+        let cell = coord.snapshot_cell();
+        let pool = RouterPool::connect(
+            &cell,
+            PoolConfig {
+                workers: 1,
+                pipeline_depth: 4,
+                verify_hits: true,
+                read_quorum: 2,
+                ..PoolConfig::default()
+            },
+        )
+        .unwrap();
+        let sets: Vec<Op> = (0..50u64).map(|key| Op::Set { key, size: 8 }).collect();
+        pool.run(sets).unwrap();
+        // Drop key 7's copy on its secondary behind the pool's back.
+        let snap = cell.load();
+        let mut replicas = Vec::new();
+        snap.replica_set(7, &mut replicas);
+        let addr = snap.addr_of(replicas[1]).unwrap();
+        let mut c = Conn::connect(addr).unwrap();
+        assert!(c.del(7).unwrap());
+        // A quorum read serves the surviving copy AND heals the hole.
+        let res = pool.run(vec![Op::Get { key: 7 }]).unwrap();
+        assert_eq!((res.hits, res.lost), (1, 0));
+        assert!(res.read_repairs >= 1, "missing replica must be repaired");
+        assert!(
+            c.get(7).unwrap().is_some(),
+            "secondary must hold the copy again after the read"
+        );
     }
 
     #[test]

@@ -3,29 +3,79 @@
 //!
 //! ```text
 //! SET <key-hex> <len>\n<len bytes>\n     -> STORED\n
+//! VSET <key-hex> <epoch-hex> <seq-hex> <len>\n<len bytes>\n
+//!                                        -> VSTORED <1|0> <epoch-hex> <seq-hex>\n
 //! GET <key-hex>\n                        -> VALUE <len>\n<bytes>\n | NOT_FOUND\n
+//! VGET <key-hex>\n                       -> VVALUE <epoch-hex> <seq-hex> <len>\n<bytes>\n
+//!                                           | NOT_FOUND\n
 //! DEL <key-hex>\n                        -> DELETED\n | NOT_FOUND\n
+//! VDEL <key-hex> <epoch-hex> <seq-hex>\n -> DELETED\n | NEWER\n | NOT_FOUND\n
 //! STATS\n                                -> STATS <keys> <bytes> <sets> <gets>\n
 //! HEARTBEAT <epoch-hex>\n                -> ALIVE <epoch-hex> <keys>\n
 //! KEYS\n                                 -> KEYS <n> <key-hex>...\n
+//! KEYSC <limit-hex> [<cursor-hex>]\n     -> KEYSC <n> <next-hex|-> <key-hex>...\n
 //! PING\n                                 -> PONG\n
 //! QUIT\n                                 -> (close)
 //! ```
 //!
+//! The versioned forms carry the write stamp of
+//! [`crate::storage::Version`] — `(epoch, seq)` — and the node applies
+//! `VSET` by highest-version-wins: `VSTORED 0` means the store already
+//! held a strictly newer copy (which still satisfies the writer's
+//! durability at that replica). `VSTORED` echoes the version the store
+//! holds after the call — the writer's own stamp when applied, the
+//! newer incumbent's when refused — so writers feed refusals through
+//! [`crate::storage::WriteClock::observe`] and a lagging clock catches
+//! up instead of issuing losing stamps forever. `VDEL` is the migration
+//! delete phase's
+//! guard: `NEWER` means a write landed after the copy the guard was
+//! taken from, so the delete must not proceed. The legacy `SET`/`GET`/
+//! `DEL` forms are kept for the seed `Router` baseline and bump the
+//! stored version on every write (last-write-wins).
+//!
 //! `HEARTBEAT` is the failure-detection probe (the node echoes the
-//! coordinator's epoch and reports its key count); `KEYS` enumerates the
-//! node's stored keys for the repair plane's holder audits.
+//! coordinator's epoch and reports its key count). `KEYS` enumerates
+//! the node's full keyset in one response — kept for small stores and
+//! tests; the repair plane's holder audits page through `KEYSC`, whose
+//! cursor is the last key of the previous page (`-` = walk complete;
+//! see [`crate::storage::ShardedStore::keys_page`]).
 
+use crate::storage::Version;
 use std::io::{BufRead, Write};
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Request {
-    Set { key: u64, value: Vec<u8> },
-    Get { key: u64 },
-    Del { key: u64 },
+    Set {
+        key: u64,
+        value: Vec<u8>,
+    },
+    VSet {
+        key: u64,
+        version: Version,
+        value: Vec<u8>,
+    },
+    Get {
+        key: u64,
+    },
+    VGet {
+        key: u64,
+    },
+    Del {
+        key: u64,
+    },
+    VDel {
+        key: u64,
+        version: Version,
+    },
     Stats,
-    Heartbeat { epoch: u64 },
+    Heartbeat {
+        epoch: u64,
+    },
     Keys,
+    KeysChunk {
+        cursor: Option<u64>,
+        limit: u64,
+    },
     Ping,
     Quit,
 }
@@ -33,9 +83,25 @@ pub enum Request {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Response {
     Stored,
+    /// `VSET` outcome: `applied == false` means a strictly newer copy
+    /// was already present (highest-version-wins refused the write).
+    /// `version` is what the store holds after the call — the writer's
+    /// stamp when applied, the newer incumbent's when refused.
+    VStored {
+        applied: bool,
+        version: Version,
+    },
     Value(Vec<u8>),
+    /// `VGET` hit: the stored bytes plus the version of the write that
+    /// produced them.
+    VValue {
+        version: Version,
+        value: Vec<u8>,
+    },
     NotFound,
     Deleted,
+    /// `VDEL` refused: the stored copy is newer than the guard.
+    Newer,
     Stats {
         keys: u64,
         bytes: u64,
@@ -47,59 +113,139 @@ pub enum Response {
         keys: u64,
     },
     KeyList(Vec<u64>),
+    /// One `KEYSC` page: keys in scan order plus the resume cursor
+    /// (`None` = walk complete).
+    KeyPage {
+        keys: Vec<u64>,
+        next: Option<u64>,
+    },
     Pong,
     Error(String),
 }
 
-/// Read one request; `Ok(None)` on clean EOF.
-pub fn read_request<R: BufRead>(r: &mut R) -> std::io::Result<Option<Request>> {
-    let mut line = String::new();
-    if r.read_line(&mut line)? == 0 {
+/// Outcome of a versioned write (`VSET`) at one replica, as seen by a
+/// client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VsetAck {
+    /// Whether this write's stamp applied. `false` = superseded: a
+    /// strictly newer copy was already present, which still satisfies
+    /// the write's durability at that replica.
+    pub applied: bool,
+    /// The version the replica holds after the call — the write's own
+    /// stamp when applied, the newer incumbent's when refused. Writers
+    /// feed this through [`crate::storage::WriteClock::observe`] so a
+    /// lagging clock catches up.
+    pub version: Version,
+}
+
+/// Outcome of a version-guarded delete (`VDEL`), as seen by a client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VdelOutcome {
+    /// The copy was at or below the guard version and was removed.
+    Deleted,
+    /// A strictly newer copy is present; nothing was removed.
+    Newer,
+    /// The node holds no copy.
+    Missing,
+}
+
+fn bad_data(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
+}
+
+fn parse_hex(p: Option<&str>, what: &str) -> std::io::Result<u64> {
+    p.and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| bad_data(what))
+}
+
+/// Upper bound on a single value payload, applied on both sides of the
+/// wire — a corrupt length field must never drive an unchecked
+/// multi-gigabyte allocation.
+const MAX_VALUE_LEN: usize = 64 << 20;
+
+/// Read a length-prefixed payload plus its trailing newline.
+fn read_value<R: BufRead>(r: &mut R, len: usize) -> std::io::Result<Vec<u8>> {
+    if len > MAX_VALUE_LEN {
+        return Err(bad_data("value too large"));
+    }
+    let mut value = vec![0u8; len];
+    r.read_exact(&mut value)?;
+    let mut nl = [0u8; 1];
+    r.read_exact(&mut nl)?;
+    Ok(value)
+}
+
+/// Read one request; `Ok(None)` on clean EOF. `line` is the caller's
+/// reusable line buffer: the serve loop owns one `String` per
+/// connection instead of allocating a fresh one per request (the
+/// hot-path alloc churn the pre-refactor reader had).
+pub fn read_request<R: BufRead>(r: &mut R, line: &mut String) -> std::io::Result<Option<Request>> {
+    line.clear();
+    if r.read_line(line)? == 0 {
         return Ok(None);
     }
     let line = line.trim_end();
     let mut parts = line.split(' ');
     let cmd = parts.next().unwrap_or("");
-    let parse_key = |p: Option<&str>| -> Result<u64, std::io::Error> {
-        p.and_then(|s| u64::from_str_radix(s, 16).ok())
-            .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad key"))
-    };
     match cmd {
         "SET" => {
-            let key = parse_key(parts.next())?;
+            let key = parse_hex(parts.next(), "bad key")?;
             let len: usize = parts
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad len"))?;
-            if len > 64 << 20 {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::InvalidData,
-                    "value too large",
-                ));
-            }
-            let mut value = vec![0u8; len];
-            r.read_exact(&mut value)?;
-            let mut nl = [0u8; 1];
-            r.read_exact(&mut nl)?; // trailing newline
+                .ok_or_else(|| bad_data("bad len"))?;
+            let value = read_value(r, len)?;
             Ok(Some(Request::Set { key, value }))
         }
+        "VSET" => {
+            let key = parse_hex(parts.next(), "bad key")?;
+            let epoch = parse_hex(parts.next(), "bad epoch")?;
+            let seq = parse_hex(parts.next(), "bad seq")?;
+            let len: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| bad_data("bad len"))?;
+            let value = read_value(r, len)?;
+            Ok(Some(Request::VSet {
+                key,
+                version: Version::new(epoch, seq),
+                value,
+            }))
+        }
         "GET" => Ok(Some(Request::Get {
-            key: parse_key(parts.next())?,
+            key: parse_hex(parts.next(), "bad key")?,
+        })),
+        "VGET" => Ok(Some(Request::VGet {
+            key: parse_hex(parts.next(), "bad key")?,
         })),
         "DEL" => Ok(Some(Request::Del {
-            key: parse_key(parts.next())?,
+            key: parse_hex(parts.next(), "bad key")?,
         })),
+        "VDEL" => {
+            let key = parse_hex(parts.next(), "bad key")?;
+            let epoch = parse_hex(parts.next(), "bad epoch")?;
+            let seq = parse_hex(parts.next(), "bad seq")?;
+            Ok(Some(Request::VDel {
+                key,
+                version: Version::new(epoch, seq),
+            }))
+        }
         "STATS" => Ok(Some(Request::Stats)),
         "HEARTBEAT" => Ok(Some(Request::Heartbeat {
-            epoch: parse_key(parts.next())?,
+            epoch: parse_hex(parts.next(), "bad epoch")?,
         })),
         "KEYS" => Ok(Some(Request::Keys)),
+        "KEYSC" => {
+            let limit = parse_hex(parts.next(), "bad limit")?;
+            let cursor = match parts.next() {
+                None => None,
+                Some(s) => Some(u64::from_str_radix(s, 16).map_err(|_| bad_data("bad cursor"))?),
+            };
+            Ok(Some(Request::KeysChunk { cursor, limit }))
+        }
         "PING" => Ok(Some(Request::Ping)),
         "QUIT" => Ok(Some(Request::Quit)),
-        other => Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("unknown command {other:?}"),
-        )),
+        other => Err(bad_data(&format!("unknown command {other:?}"))),
     }
 }
 
@@ -110,11 +256,24 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
             w.write_all(value)?;
             w.write_all(b"\n")
         }
+        Request::VSet { key, version, value } => {
+            writeln!(w, "VSET {key:x} {:x} {:x} {}", version.epoch, version.seq, value.len())?;
+            w.write_all(value)?;
+            w.write_all(b"\n")
+        }
         Request::Get { key } => writeln!(w, "GET {key:x}"),
+        Request::VGet { key } => writeln!(w, "VGET {key:x}"),
         Request::Del { key } => writeln!(w, "DEL {key:x}"),
+        Request::VDel { key, version } => {
+            writeln!(w, "VDEL {key:x} {:x} {:x}", version.epoch, version.seq)
+        }
         Request::Stats => w.write_all(b"STATS\n"),
         Request::Heartbeat { epoch } => writeln!(w, "HEARTBEAT {epoch:x}"),
         Request::Keys => w.write_all(b"KEYS\n"),
+        Request::KeysChunk { cursor, limit } => match cursor {
+            Some(c) => writeln!(w, "KEYSC {limit:x} {c:x}"),
+            None => writeln!(w, "KEYSC {limit:x}"),
+        },
         Request::Ping => w.write_all(b"PING\n"),
         Request::Quit => w.write_all(b"QUIT\n"),
     }
@@ -123,13 +282,26 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
 pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<()> {
     match resp {
         Response::Stored => w.write_all(b"STORED\n"),
+        Response::VStored { applied, version } => writeln!(
+            w,
+            "VSTORED {} {:x} {:x}",
+            if *applied { 1 } else { 0 },
+            version.epoch,
+            version.seq
+        ),
         Response::Value(v) => {
             writeln!(w, "VALUE {}", v.len())?;
             w.write_all(v)?;
             w.write_all(b"\n")
         }
+        Response::VValue { version, value } => {
+            writeln!(w, "VVALUE {:x} {:x} {}", version.epoch, version.seq, value.len())?;
+            w.write_all(value)?;
+            w.write_all(b"\n")
+        }
         Response::NotFound => w.write_all(b"NOT_FOUND\n"),
         Response::Deleted => w.write_all(b"DELETED\n"),
+        Response::Newer => w.write_all(b"NEWER\n"),
         Response::Stats {
             keys,
             bytes,
@@ -139,6 +311,17 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
         Response::Alive { epoch, keys } => writeln!(w, "ALIVE {epoch:x} {keys}"),
         Response::KeyList(keys) => {
             write!(w, "KEYS {}", keys.len())?;
+            for k in keys {
+                write!(w, " {k:x}")?;
+            }
+            w.write_all(b"\n")
+        }
+        Response::KeyPage { keys, next } => {
+            write!(w, "KEYSC {}", keys.len())?;
+            match next {
+                Some(c) => write!(w, " {c:x}")?,
+                None => write!(w, " -")?,
+            }
             for k in keys {
                 write!(w, " {k:x}")?;
             }
@@ -161,26 +344,48 @@ pub fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<Response> {
     let mut parts = line.split(' ');
     match parts.next().unwrap_or("") {
         "STORED" => Ok(Response::Stored),
+        "VSTORED" => {
+            let applied = match parts.next() {
+                Some("1") => true,
+                Some("0") => false,
+                _ => return Err(bad_data("bad VSTORED flag")),
+            };
+            let epoch = parse_hex(parts.next(), "bad epoch")?;
+            let seq = parse_hex(parts.next(), "bad seq")?;
+            Ok(Response::VStored {
+                applied,
+                version: Version::new(epoch, seq),
+            })
+        }
         "NOT_FOUND" => Ok(Response::NotFound),
         "DELETED" => Ok(Response::Deleted),
+        "NEWER" => Ok(Response::Newer),
         "PONG" => Ok(Response::Pong),
         "VALUE" => {
             let len: usize = parts
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad len"))?;
-            let mut value = vec![0u8; len];
-            r.read_exact(&mut value)?;
-            let mut nl = [0u8; 1];
-            r.read_exact(&mut nl)?;
-            Ok(Response::Value(value))
+                .ok_or_else(|| bad_data("bad len"))?;
+            Ok(Response::Value(read_value(r, len)?))
+        }
+        "VVALUE" => {
+            let epoch = parse_hex(parts.next(), "bad epoch")?;
+            let seq = parse_hex(parts.next(), "bad seq")?;
+            let len: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| bad_data("bad len"))?;
+            Ok(Response::VValue {
+                version: Version::new(epoch, seq),
+                value: read_value(r, len)?,
+            })
         }
         "STATS" => {
             let mut next = || -> std::io::Result<u64> {
                 parts
                     .next()
                     .and_then(|s| s.parse().ok())
-                    .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad stat"))
+                    .ok_or_else(|| bad_data("bad stat"))
             };
             Ok(Response::Stats {
                 keys: next()?,
@@ -190,36 +395,42 @@ pub fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<Response> {
             })
         }
         "ALIVE" => {
-            let epoch = parts
-                .next()
-                .and_then(|s| u64::from_str_radix(s, 16).ok())
-                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad epoch"))?;
+            let epoch = parse_hex(parts.next(), "bad epoch")?;
             let keys: u64 = parts
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad keys"))?;
+                .ok_or_else(|| bad_data("bad keys"))?;
             Ok(Response::Alive { epoch, keys })
         }
         "KEYS" => {
             let n: usize = parts
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "bad len"))?;
+                .ok_or_else(|| bad_data("bad len"))?;
             let mut keys = Vec::with_capacity(n.min(1 << 20));
             for _ in 0..n {
-                let k = parts.next().and_then(|s| u64::from_str_radix(s, 16).ok());
-                let k = k.ok_or_else(|| {
-                    std::io::Error::new(std::io::ErrorKind::InvalidData, "bad key list")
-                })?;
-                keys.push(k);
+                keys.push(parse_hex(parts.next(), "bad key list")?);
             }
             Ok(Response::KeyList(keys))
         }
+        "KEYSC" => {
+            let n: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| bad_data("bad len"))?;
+            let next = match parts.next() {
+                Some("-") => None,
+                Some(s) => Some(u64::from_str_radix(s, 16).map_err(|_| bad_data("bad cursor"))?),
+                None => return Err(bad_data("missing cursor")),
+            };
+            let mut keys = Vec::with_capacity(n.min(1 << 20));
+            for _ in 0..n {
+                keys.push(parse_hex(parts.next(), "bad key list")?);
+            }
+            Ok(Response::KeyPage { keys, next })
+        }
         "ERROR" => Ok(Response::Error(parts.collect::<Vec<_>>().join(" "))),
-        other => Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("bad response {other:?}"),
-        )),
+        other => Err(bad_data(&format!("bad response {other:?}"))),
     }
 }
 
@@ -232,7 +443,8 @@ mod tests {
         let mut buf = Vec::new();
         write_request(&mut buf, &req).unwrap();
         let mut r = BufReader::new(&buf[..]);
-        read_request(&mut r).unwrap().unwrap()
+        let mut line = String::new();
+        read_request(&mut r, &mut line).unwrap().unwrap()
     }
 
     fn roundtrip_resp(resp: Response) -> Response {
@@ -253,12 +465,35 @@ mod tests {
                 key: 1,
                 value: vec![],
             },
+            Request::VSet {
+                key: 0xDEADBEEF,
+                version: Version::new(7, 0x1234),
+                value: b"binary\n\0data".to_vec(),
+            },
+            Request::VSet {
+                key: 0,
+                version: Version::new(u64::MAX, u64::MAX),
+                value: vec![],
+            },
             Request::Get { key: u64::MAX },
+            Request::VGet { key: u64::MAX },
             Request::Del { key: 0 },
+            Request::VDel {
+                key: 3,
+                version: Version::new(2, 9),
+            },
             Request::Stats,
             Request::Heartbeat { epoch: 0 },
             Request::Heartbeat { epoch: u64::MAX },
             Request::Keys,
+            Request::KeysChunk {
+                cursor: None,
+                limit: 512,
+            },
+            Request::KeysChunk {
+                cursor: Some(0xABC),
+                limit: 1,
+            },
             Request::Ping,
             Request::Quit,
         ] {
@@ -270,10 +505,27 @@ mod tests {
     fn response_roundtrips() {
         for resp in [
             Response::Stored,
+            Response::VStored {
+                applied: true,
+                version: Version::new(3, 9),
+            },
+            Response::VStored {
+                applied: false,
+                version: Version::new(u64::MAX, 1),
+            },
             Response::Value(b"x\ny".to_vec()),
             Response::Value(vec![]),
+            Response::VValue {
+                version: Version::new(3, 0x77),
+                value: b"x\ny".to_vec(),
+            },
+            Response::VValue {
+                version: Version::ZERO,
+                value: vec![],
+            },
             Response::NotFound,
             Response::Deleted,
+            Response::Newer,
             Response::Stats {
                 keys: 1,
                 bytes: 2,
@@ -287,6 +539,14 @@ mod tests {
             },
             Response::KeyList(vec![0, 1, u64::MAX, 0xDEADBEEF]),
             Response::KeyList(vec![]),
+            Response::KeyPage {
+                keys: vec![0, 5, u64::MAX],
+                next: Some(u64::MAX),
+            },
+            Response::KeyPage {
+                keys: vec![],
+                next: None,
+            },
             Response::Pong,
             Response::Error("boom".into()),
         ] {
@@ -295,14 +555,46 @@ mod tests {
     }
 
     #[test]
+    fn oversized_value_lengths_are_rejected_on_both_sides() {
+        // Request side (server parsing a client line)...
+        let mut line = String::new();
+        let mut r = BufReader::new(&b"SET 1 99999999999\n"[..]);
+        assert!(read_request(&mut r, &mut line).is_err());
+        // ...and response side (client parsing a server line): a corrupt
+        // length must never drive an unchecked allocation.
+        let mut r = BufReader::new(&b"VVALUE 1 1 99999999999\n"[..]);
+        assert!(read_response(&mut r).is_err());
+        let mut r = BufReader::new(&b"VALUE 99999999999\n"[..]);
+        assert!(read_response(&mut r).is_err());
+    }
+
+    #[test]
     fn rejects_unknown_command() {
         let mut r = BufReader::new(&b"FROB 123\n"[..]);
-        assert!(read_request(&mut r).is_err());
+        let mut line = String::new();
+        assert!(read_request(&mut r, &mut line).is_err());
     }
 
     #[test]
     fn eof_is_clean_none() {
         let mut r = BufReader::new(&b""[..]);
-        assert!(read_request(&mut r).unwrap().is_none());
+        let mut line = String::new();
+        assert!(read_request(&mut r, &mut line).unwrap().is_none());
+    }
+
+    #[test]
+    fn line_buffer_is_reused_across_requests() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &Request::Ping).unwrap();
+        write_request(&mut buf, &Request::Get { key: 0xAB }).unwrap();
+        let mut r = BufReader::new(&buf[..]);
+        let mut line = String::new();
+        assert_eq!(read_request(&mut r, &mut line).unwrap(), Some(Request::Ping));
+        assert_eq!(
+            read_request(&mut r, &mut line).unwrap(),
+            Some(Request::Get { key: 0xAB })
+        );
+        assert!(read_request(&mut r, &mut line).unwrap().is_none());
+        assert!(line.capacity() > 0, "buffer survives the loop");
     }
 }

@@ -145,9 +145,7 @@ mod tests {
         }
         // Keys landed exactly where the placer says.
         for (i, s) in servers.iter().enumerate() {
-            let store = s.store();
-            let store = store.lock().unwrap();
-            for key in store.keys() {
+            for key in s.store().keys() {
                 assert_eq!(expected.place(key), i as NodeId);
             }
         }

@@ -1,7 +1,13 @@
 //! Threaded storage-node TCP server (the memcached stand-in).
+//!
+//! Connections are served straight from a shared
+//! [`crate::storage::ShardedStore`]: each serving thread locks only the
+//! stripe its key hashes to, so concurrent clients hammering one node
+//! no longer convoy behind a global store mutex (the pre-refactor
+//! `Arc<Mutex<StorageNode>>` bottleneck).
 
 use super::protocol::{read_request, write_response, Request, Response};
-use crate::cluster::node::StorageNode;
+use crate::storage::ShardedStore;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -11,7 +17,7 @@ use std::thread::JoinHandle;
 /// A running storage-node server.
 pub struct NodeServer {
     addr: SocketAddr,
-    store: Arc<Mutex<StorageNode>>,
+    store: Arc<ShardedStore>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     /// Live accepted streams (tagged by accept order), kept so
@@ -30,7 +36,7 @@ impl NodeServer {
     pub fn spawn_on(addr: impl std::net::ToSocketAddrs) -> std::io::Result<NodeServer> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
-        let store = Arc::new(Mutex::new(StorageNode::new()));
+        let store = Arc::new(ShardedStore::new());
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(Mutex::new(Vec::new()));
         let store2 = store.clone();
@@ -41,10 +47,15 @@ impl NodeServer {
             .spawn(move || {
                 let mut next_id = 0u64;
                 for conn in listener.incoming() {
-                    if stop2.load(Ordering::Relaxed) {
+                    let Ok(stream) = conn else { break };
+                    // Check the stop flag *after* taking the stream:
+                    // the shutdown self-poke (and any connection racing
+                    // it) must be dropped here, never registered into
+                    // `conns` — a registered poke would hold a stray fd
+                    // until the server itself dropped.
+                    if stop2.load(Ordering::SeqCst) {
                         break;
                     }
-                    let Ok(stream) = conn else { break };
                     let id = next_id;
                     next_id += 1;
                     if let Ok(clone) = stream.try_clone() {
@@ -72,17 +83,19 @@ impl NodeServer {
     }
 
     /// Direct handle to the backing store (stats, invariant checks).
-    pub fn store(&self) -> Arc<Mutex<StorageNode>> {
+    pub fn store(&self) -> Arc<ShardedStore> {
         self.store.clone()
     }
 
     pub fn key_count(&self) -> usize {
-        self.store.lock().unwrap().len()
+        self.store.len()
     }
 
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        // Poke the acceptor so it observes the stop flag.
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the acceptor so it observes the stop flag; the poke
+        // stream drops immediately and the acceptor discards its end
+        // without registering it.
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
@@ -107,12 +120,14 @@ impl Drop for NodeServer {
     }
 }
 
-fn serve_conn(stream: TcpStream, store: Arc<Mutex<StorageNode>>) -> std::io::Result<()> {
+fn serve_conn(stream: TcpStream, store: Arc<ShardedStore>) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
+    // One request-line buffer for the connection's lifetime.
+    let mut line = String::new();
     loop {
-        let req = match read_request(&mut reader) {
+        let req = match read_request(&mut reader, &mut line) {
             Ok(Some(r)) => r,
             Ok(None) => {
                 writer.flush()?;
@@ -126,33 +141,56 @@ fn serve_conn(stream: TcpStream, store: Arc<Mutex<StorageNode>>) -> std::io::Res
         };
         let resp = match req {
             Request::Set { key, value } => {
-                store.lock().unwrap().set(key, value);
+                store.set(key, value);
                 Response::Stored
             }
-            Request::Get { key } => match store.lock().unwrap().get(key) {
-                Some(v) => Response::Value(v.to_vec()),
+            // The echoed version is decided in the store's critical
+            // section: ours when applied, the incumbent winner's when
+            // refused (so the writer's clock can catch up).
+            Request::VSet { key, version, value } => match store.vset(key, version, value) {
+                Ok(()) => Response::VStored {
+                    applied: true,
+                    version,
+                },
+                Err(winner) => Response::VStored {
+                    applied: false,
+                    version: winner,
+                },
+            },
+            Request::Get { key } => match store.get(key) {
+                Some(v) => Response::Value(v),
                 None => Response::NotFound,
             },
-            Request::Del { key } => match store.lock().unwrap().remove(key) {
+            Request::VGet { key } => match store.vget(key) {
+                Some((version, value)) => Response::VValue { version, value },
+                None => Response::NotFound,
+            },
+            Request::Del { key } => match store.remove(key) {
                 Some(_) => Response::Deleted,
                 None => Response::NotFound,
             },
-            Request::Stats => {
-                let s = store.lock().unwrap();
-                Response::Stats {
-                    keys: s.len() as u64,
-                    bytes: s.used_bytes(),
-                    sets: s.sets,
-                    gets: s.gets,
+            Request::VDel { key, version } => match store.vdel(key, version) {
+                Some(true) => Response::Deleted,
+                Some(false) => Response::Newer,
+                None => Response::NotFound,
+            },
+            Request::Stats => Response::Stats {
+                keys: store.len() as u64,
+                bytes: store.used_bytes(),
+                sets: store.sets(),
+                gets: store.gets(),
+            },
+            Request::Heartbeat { epoch } => Response::Alive {
+                epoch,
+                keys: store.len() as u64,
+            },
+            Request::Keys => Response::KeyList(store.keys()),
+            Request::KeysChunk { cursor, limit } => {
+                let page = store.keys_page(cursor, limit as usize);
+                Response::KeyPage {
+                    keys: page.keys,
+                    next: page.next,
                 }
-            }
-            Request::Heartbeat { epoch } => {
-                let keys = store.lock().unwrap().len() as u64;
-                Response::Alive { epoch, keys }
-            }
-            Request::Keys => {
-                let keys = store.lock().unwrap().keys().collect();
-                Response::KeyList(keys)
             }
             Request::Ping => Response::Pong,
             Request::Quit => {
@@ -178,6 +216,7 @@ fn serve_conn(stream: TcpStream, store: Arc<Mutex<StorageNode>>) -> std::io::Res
 mod tests {
     use super::*;
     use crate::net::client::Conn;
+    use crate::storage::Version;
 
     #[test]
     fn server_serves_set_get_del_stats() {
@@ -195,6 +234,25 @@ mod tests {
     }
 
     #[test]
+    fn versioned_ops_apply_highest_version_wins_over_the_wire() {
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect(server.addr()).unwrap();
+        let v1 = Version::new(1, 10);
+        let v2 = Version::new(1, 11);
+        assert!(c.vset(5, v2, b"new".to_vec()).unwrap().applied);
+        let ack = c.vset(5, v1, b"old".to_vec()).unwrap();
+        assert!(!ack.applied, "stale copier must be refused");
+        assert_eq!(ack.version, v2, "the refusal names the winning stamp");
+        assert_eq!(c.vget(5).unwrap(), Some((v2, b"new".to_vec())));
+        assert_eq!(c.vget(6).unwrap(), None);
+        // Version-guarded delete refuses when the copy is newer.
+        use crate::net::protocol::VdelOutcome;
+        assert_eq!(c.vdel(5, v1).unwrap(), VdelOutcome::Newer);
+        assert_eq!(c.vdel(5, v2).unwrap(), VdelOutcome::Deleted);
+        assert_eq!(c.vdel(5, v2).unwrap(), VdelOutcome::Missing);
+    }
+
+    #[test]
     fn heartbeat_and_keys_ops() {
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
@@ -205,6 +263,33 @@ mod tests {
         let mut keys = c.keys().unwrap();
         keys.sort_unstable();
         assert_eq!(keys, vec![3, 4]);
+    }
+
+    #[test]
+    fn chunked_keys_walk_matches_full_enumeration() {
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect(server.addr()).unwrap();
+        for k in 0..500u64 {
+            c.set(k, vec![7]).unwrap();
+        }
+        let mut paged: Vec<u64> = Vec::new();
+        let mut cursor = None;
+        let mut pages = 0;
+        loop {
+            let (keys, next) = c.keys_chunk(64, cursor).unwrap();
+            assert!(keys.len() <= 64, "page exceeded its limit");
+            paged.extend(keys);
+            pages += 1;
+            match next {
+                Some(n) => cursor = Some(n),
+                None => break,
+            }
+        }
+        assert!(pages >= 8, "500 keys at limit 64 must take several pages");
+        paged.sort_unstable();
+        let mut full = c.keys().unwrap();
+        full.sort_unstable();
+        assert_eq!(paged, full);
     }
 
     #[test]
@@ -237,6 +322,20 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(10));
         }
         assert!(server.conns.lock().unwrap().is_empty(), "closed conns leaked");
+    }
+
+    #[test]
+    fn shutdown_does_not_register_its_own_poke() {
+        // The self-poke that wakes the acceptor must never land in
+        // `conns` (a stray fd held until drop).
+        for _ in 0..20 {
+            let mut server = NodeServer::spawn().unwrap();
+            server.shutdown();
+            assert!(
+                server.conns.lock().unwrap().is_empty(),
+                "shutdown poke was registered as a live connection"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,32 @@
+//! Node-local storage engine: a lock-striped, versioned key/value store.
+//!
+//! This is the substrate under the networked data plane. Two properties
+//! matter and everything else follows from them:
+//!
+//! - **Lock striping** ([`ShardedStore`]): keys are spread across N
+//!   shards by a hash of the key, each shard behind its own mutex, with
+//!   the lifetime counters (sets/gets/hits/len/bytes) kept in atomics
+//!   outside the locks. A storage node serving many connections never
+//!   convoys every request behind one global `Mutex` — the bottleneck
+//!   the pre-refactor `net::server` had with `Arc<Mutex<StorageNode>>`.
+//! - **Versioned values** ([`Version`], [`VersionedValue`]): every entry
+//!   carries the `(epoch, seq)` stamp of the write that produced it, and
+//!   versioned writes apply by *highest-version-wins* instead of arrival
+//!   order. That single rule is what makes replica state mergeable: a
+//!   live write racing a migration's copy window can never be clobbered
+//!   by a stale copier, quorum reads can tell fresh replicas from stale
+//!   ones (and repair the stale ones), and the repair plane fetches from
+//!   the max-version holder instead of trusting any survivor — the
+//!   correctness condition the DHT replica-maintenance literature
+//!   centers on (Leslie 2005; Sun et al. 2017).
+//!
+//! Version stamps are minted from a [`WriteClock`] — a shared monotone
+//! counter the coordinator hands to every pool it connects — so
+//! sequence numbers are unique across writers and the per-key order is
+//! total.
+
+mod sharded;
+mod version;
+
+pub use sharded::{KeyPage, ShardedStore};
+pub use version::{Version, VersionedValue, WriteClock};

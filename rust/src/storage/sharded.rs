@@ -1,0 +1,398 @@
+//! `ShardedStore`: the lock-striped, versioned node store the TCP
+//! server serves from.
+//!
+//! Keys are spread across a power-of-two number of shards by a mixed
+//! hash of the key; each shard is an independent `Mutex<BTreeMap>`, so
+//! concurrent connections touching different shards never contend.
+//! Lifetime counters live in atomics outside the shard locks.
+//!
+//! Within a shard, entries are ordered by key, which gives the store a
+//! stable scan order — `(shard index, key)` — that [`Self::keys_page`]
+//! exposes as a resumable cursor (the wire `KEYSC` op). The cursor is
+//! just the last key returned: its shard is recomputable from the key,
+//! so a page boundary needs no server-side state. Like redis `SCAN`,
+//! a paged walk under concurrent mutation guarantees every key that
+//! exists for the whole walk is returned exactly once; keys inserted
+//! into already-walked regions mid-walk may be missed.
+
+use super::{Version, VersionedValue};
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::ops::Bound;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One page of a cursor walk: up to `limit` keys in scan order, plus
+/// the cursor to resume from (`None` when the walk is complete).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KeyPage {
+    pub keys: Vec<u64>,
+    pub next: Option<u64>,
+}
+
+/// SplitMix64 finalizer: decorrelates shard choice from key patterns
+/// (sequential datum ids must not all land in one shard).
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Lock-striped versioned KV store. All methods take `&self`; interior
+/// mutability is per-shard, so any number of threads may call in
+/// concurrently.
+pub struct ShardedStore {
+    shards: Vec<Mutex<BTreeMap<u64, VersionedValue>>>,
+    mask: u64,
+    len: AtomicU64,
+    used_bytes: AtomicU64,
+    sets: AtomicU64,
+    gets: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl Default for ShardedStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardedStore {
+    /// Default stripe count: enough that 8–16 serving threads rarely
+    /// collide, small enough that a full scan stays cheap.
+    pub const DEFAULT_SHARDS: usize = 16;
+
+    pub fn new() -> ShardedStore {
+        Self::with_shards(Self::DEFAULT_SHARDS)
+    }
+
+    /// `shards` is rounded up to a power of two (minimum 1).
+    pub fn with_shards(shards: usize) -> ShardedStore {
+        let n = shards.max(1).next_power_of_two();
+        ShardedStore {
+            shards: (0..n).map(|_| Mutex::new(BTreeMap::new())).collect(),
+            mask: (n - 1) as u64,
+            len: AtomicU64::new(0),
+            used_bytes: AtomicU64::new(0),
+            sets: AtomicU64::new(0),
+            gets: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_of(&self, key: u64) -> usize {
+        (mix(key) & self.mask) as usize
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<BTreeMap<u64, VersionedValue>> {
+        &self.shards[self.shard_of(key)]
+    }
+
+    /// Versioned write, highest-version-wins ([`VersionedValue::apply`]
+    /// — ties apply, so stamp-reusing replays stay idempotent; absent
+    /// counts as [`Version::ZERO`]). `Ok(())` = stored; `Err(winner)` =
+    /// refused because the store already holds the strictly newer
+    /// `winner` — which still satisfies the writer's durability at this
+    /// replica, and is echoed on the wire so a lagging clock can catch
+    /// up. The decision and the echoed stamp come from one critical
+    /// section, so the winner can never be a version the store no
+    /// longer holds.
+    pub fn vset(&self, key: u64, version: Version, bytes: Vec<u8>) -> Result<(), Version> {
+        self.sets.fetch_add(1, Ordering::Relaxed);
+        let new_len = bytes.len() as u64;
+        // The aggregate counters are updated while the shard lock is
+        // still held: an insert's `len += 1` must not be reorderable
+        // after a racing remove's `len -= 1`, or the counter transiently
+        // wraps below zero and `len()`/`keys()` go haywire.
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.entry(key) {
+            Entry::Occupied(mut e) => {
+                let old_len = e.get_mut().apply(version, bytes)?;
+                self.used_bytes.fetch_sub(old_len, Ordering::Relaxed);
+                self.used_bytes.fetch_add(new_len, Ordering::Relaxed);
+            }
+            Entry::Vacant(v) => {
+                v.insert(VersionedValue { version, bytes });
+                self.len.fetch_add(1, Ordering::Relaxed);
+                self.used_bytes.fetch_add(new_len, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    /// Legacy unversioned write: stamped one sequence past the stored
+    /// copy and applied under the same shard lock, so it always applies
+    /// (the seed `Router` baseline and direct `SET`s keep their
+    /// last-write-wins semantics — an acked `SET` is never silently
+    /// refused by a versioned write racing the stamp). Returns the
+    /// stamp the value was stored under.
+    pub fn set(&self, key: u64, bytes: Vec<u8>) -> Version {
+        self.sets.fetch_add(1, Ordering::Relaxed);
+        let new_len = bytes.len() as u64;
+        let mut shard = self.shard(key).lock().unwrap();
+        match shard.entry(key) {
+            Entry::Occupied(mut e) => {
+                let version = e.get().version.bump();
+                let old_len = e.get().bytes.len() as u64;
+                e.insert(VersionedValue { version, bytes });
+                self.used_bytes.fetch_sub(old_len, Ordering::Relaxed);
+                self.used_bytes.fetch_add(new_len, Ordering::Relaxed);
+                version
+            }
+            Entry::Vacant(v) => {
+                let version = Version::ZERO.bump();
+                v.insert(VersionedValue { version, bytes });
+                self.len.fetch_add(1, Ordering::Relaxed);
+                self.used_bytes.fetch_add(new_len, Ordering::Relaxed);
+                version
+            }
+        }
+    }
+
+    /// Read with version (bumps the get/hit counters).
+    pub fn vget(&self, key: u64) -> Option<(Version, Vec<u8>)> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        let out = {
+            let shard = self.shard(key).lock().unwrap();
+            shard.get(&key).map(|v| (v.version, v.bytes.clone()))
+        };
+        if out.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Read bytes only (bumps the get/hit counters).
+    pub fn get(&self, key: u64) -> Option<Vec<u8>> {
+        self.vget(key).map(|(_, b)| b)
+    }
+
+    /// Read without touching counters.
+    pub fn peek(&self, key: u64) -> Option<Vec<u8>> {
+        let shard = self.shard(key).lock().unwrap();
+        shard.get(&key).map(|v| v.bytes.clone())
+    }
+
+    pub fn version_of(&self, key: u64) -> Option<Version> {
+        let shard = self.shard(key).lock().unwrap();
+        shard.get(&key).map(|v| v.version)
+    }
+
+    /// Unconditional delete (legacy `DEL`).
+    pub fn remove(&self, key: u64) -> Option<VersionedValue> {
+        let mut shard = self.shard(key).lock().unwrap();
+        let removed = shard.remove(&key);
+        if let Some(ref v) = removed {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+            self.used_bytes
+                .fetch_sub(v.bytes.len() as u64, Ordering::Relaxed);
+        }
+        removed
+    }
+
+    /// Version-guarded delete: remove the copy only if it is not newer
+    /// than `guard`. `Some(true)` = deleted, `Some(false)` = refused (a
+    /// strictly newer copy is present — the migration delete phase must
+    /// not clobber a write that raced the copy window), `None` = no
+    /// copy.
+    pub fn vdel(&self, key: u64, guard: Version) -> Option<bool> {
+        let mut shard = self.shard(key).lock().unwrap();
+        let current = shard.get(&key).map(|v| v.version)?;
+        if current > guard {
+            return Some(false);
+        }
+        if let Some(v) = shard.remove(&key) {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+            self.used_bytes
+                .fetch_sub(v.bytes.len() as u64, Ordering::Relaxed);
+        }
+        Some(true)
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        let shard = self.shard(key).lock().unwrap();
+        shard.contains_key(&key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime write count (attempted, whether or not applied).
+    pub fn sets(&self) -> u64 {
+        self.sets.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime read count.
+    pub fn gets(&self) -> u64 {
+        self.gets.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime read-hit count.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Every stored key, in scan order. Prefer [`Self::keys_page`] on
+    /// the wire — this materializes the full set.
+    pub fn keys(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap().keys().copied());
+        }
+        out
+    }
+
+    /// One bounded page of the key scan: up to `limit` keys strictly
+    /// after `cursor` in `(shard, key)` order. Pass `None` to start and
+    /// the returned `next` (while `Some`) to continue; shards are
+    /// locked one at a time, so a large node never serializes its whole
+    /// keyset under one lock or into one response line.
+    pub fn keys_page(&self, cursor: Option<u64>, limit: usize) -> KeyPage {
+        let limit = limit.max(1);
+        let mut keys: Vec<u64> = Vec::with_capacity(limit.min(4096));
+        let start_shard = cursor.map(|k| self.shard_of(k)).unwrap_or(0);
+        for s in start_shard..self.shards.len() {
+            let lower = match cursor {
+                Some(k) if s == start_shard => Bound::Excluded(k),
+                _ => Bound::Unbounded,
+            };
+            let shard = self.shards[s].lock().unwrap();
+            for (&k, _) in shard.range((lower, Bound::Unbounded)) {
+                if keys.len() == limit {
+                    let next = keys.last().copied();
+                    return KeyPage { keys, next };
+                }
+                keys.push(k);
+            }
+        }
+        KeyPage { keys, next: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip_and_counters() {
+        let s = ShardedStore::new();
+        s.set(1, b"hello".to_vec());
+        assert_eq!(s.get(1), Some(b"hello".to_vec()));
+        assert_eq!(s.get(2), None);
+        assert_eq!((s.sets(), s.gets(), s.hits()), (1, 2, 1));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.used_bytes(), 5);
+    }
+
+    #[test]
+    fn highest_version_wins_regardless_of_arrival_order() {
+        let s = ShardedStore::new();
+        let old = Version::new(3, 10);
+        let new = Version::new(3, 11);
+        assert!(s.vset(7, new, b"new".to_vec()).is_ok());
+        assert_eq!(
+            s.vset(7, old, b"old".to_vec()),
+            Err(new),
+            "stale write must be refused and told the winner"
+        );
+        assert_eq!(s.vget(7), Some((new, b"new".to_vec())));
+        // Idempotent replay of the winning write applies cleanly.
+        assert!(s.vset(7, new, b"new".to_vec()));
+        // A later epoch beats any seq of an earlier epoch.
+        let epoch4 = Version::new(4, 1);
+        assert!(s.vset(7, epoch4, b"e4".to_vec()).is_ok());
+        assert_eq!(s.vset(7, Version::new(3, 999), b"late".to_vec()), Err(epoch4));
+        assert_eq!(s.version_of(7), Some(epoch4));
+    }
+
+    #[test]
+    fn legacy_set_always_applies_over_versioned_copies() {
+        let s = ShardedStore::new();
+        assert!(s.vset(9, Version::new(5, 2), b"v".to_vec()).is_ok());
+        let stamped = s.set(9, b"legacy".to_vec());
+        assert_eq!(stamped, Version::new(5, 3));
+        assert_eq!(s.peek(9), Some(b"legacy".to_vec()));
+    }
+
+    #[test]
+    fn vdel_refuses_newer_copies() {
+        let s = ShardedStore::new();
+        assert_eq!(s.vdel(1, Version::new(9, 9)), None, "absent key");
+        let _ = s.vset(1, Version::new(2, 5), b"x".to_vec());
+        assert_eq!(s.vdel(1, Version::new(2, 4)), Some(false), "guard too old");
+        assert!(s.contains(1));
+        assert_eq!(s.vdel(1, Version::new(2, 5)), Some(true), "exact guard");
+        assert!(!s.contains(1));
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.used_bytes(), 0);
+    }
+
+    #[test]
+    fn used_bytes_tracks_overwrites_removals_and_refusals() {
+        let s = ShardedStore::new();
+        let _ = s.vset(1, Version::new(1, 1), vec![0; 100]);
+        assert_eq!(s.used_bytes(), 100);
+        let _ = s.vset(1, Version::new(1, 2), vec![0; 40]);
+        assert_eq!(s.used_bytes(), 40);
+        let _ = s.vset(1, Version::new(0, 9), vec![0; 500]); // refused
+        assert_eq!(s.used_bytes(), 40);
+        s.remove(1);
+        assert_eq!(s.used_bytes(), 0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn keys_page_walks_everything_exactly_once() {
+        let s = ShardedStore::with_shards(8);
+        for k in 0..1000u64 {
+            s.set(k, vec![1]);
+        }
+        for limit in [1usize, 7, 64, 5000] {
+            let mut seen: Vec<u64> = Vec::new();
+            let mut cursor = None;
+            loop {
+                let page = s.keys_page(cursor, limit);
+                assert!(page.keys.len() <= limit);
+                seen.extend(&page.keys);
+                match page.next {
+                    Some(c) => cursor = Some(c),
+                    None => break,
+                }
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, (0..1000).collect::<Vec<u64>>(), "limit {limit}");
+        }
+        let mut all = s.keys();
+        all.sort_unstable();
+        assert_eq!(all.len(), 1000);
+    }
+
+    #[test]
+    fn keys_spread_across_shards() {
+        let s = ShardedStore::with_shards(16);
+        for k in 0..160u64 {
+            s.set(k, vec![1]);
+        }
+        // Sequential keys must not pile into one stripe.
+        let mut per_shard = vec![0usize; s.shard_count()];
+        for k in 0..160u64 {
+            per_shard[s.shard_of(k)] += 1;
+        }
+        let max = per_shard.iter().max().copied().unwrap();
+        assert!(max < 40, "one shard took {max} of 160 sequential keys");
+    }
+}

@@ -1,0 +1,189 @@
+//! Write versions: the total order that makes replica state mergeable.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A write version: `(membership epoch, write sequence)`, compared
+/// lexicographically (the derived `Ord` follows field order). The epoch
+/// is the snapshot the writer routed by; the sequence comes from a
+/// [`WriteClock`], so two distinct writes never carry the same stamp
+/// and "newer" is well-defined across replicas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Version {
+    pub epoch: u64,
+    pub seq: u64,
+}
+
+impl Version {
+    /// The version "before any write" — what an absent entry compares
+    /// as, so every real write beats it.
+    pub const ZERO: Version = Version { epoch: 0, seq: 0 };
+
+    pub fn new(epoch: u64, seq: u64) -> Version {
+        Version { epoch, seq }
+    }
+
+    /// The smallest version strictly newer than `self` at the same
+    /// epoch — the stamp a legacy (unversioned) write gets so it always
+    /// applies over the copy it observed.
+    pub fn bump(self) -> Version {
+        Version {
+            epoch: self.epoch,
+            seq: self.seq + 1,
+        }
+    }
+
+    /// Does a copy stamped `self` beat `best`, the freshest candidate
+    /// seen so far in a max-version scan? The one fold every
+    /// freshest-copy-wins fetch (migration, repair, quorum reads) runs.
+    pub fn beats<T>(self, best: &Option<(Version, T)>) -> bool {
+        match best {
+            Some((bv, _)) => self > *bv,
+            None => true,
+        }
+    }
+}
+
+impl fmt::Display for Version {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:x}.{:x}", self.epoch, self.seq)
+    }
+}
+
+/// A value plus the version of the write that produced it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VersionedValue {
+    pub version: Version,
+    pub bytes: Vec<u8>,
+}
+
+impl VersionedValue {
+    pub fn new(version: Version, bytes: Vec<u8>) -> VersionedValue {
+        VersionedValue { version, bytes }
+    }
+
+    /// THE highest-version-wins apply rule, in one place for every
+    /// store (the lock-striped engine and the in-process simulator
+    /// node): `(version, bytes)` replaces this entry iff `version` is
+    /// at least the current stamp — ties apply, which keeps
+    /// stamp-reusing replays idempotent. Returns `Ok(old_len)` (the
+    /// replaced payload's length, for byte accounting) when applied,
+    /// `Err(winner)` when refused so the caller can echo the stamp the
+    /// entry kept.
+    pub fn apply(&mut self, version: Version, bytes: Vec<u8>) -> Result<u64, Version> {
+        if version < self.version {
+            return Err(self.version);
+        }
+        let old_len = self.bytes.len() as u64;
+        self.version = version;
+        self.bytes = bytes;
+        Ok(old_len)
+    }
+}
+
+/// Shared monotone write-sequence source (a process-local Lamport-style
+/// clock). Cheap to clone — clones share the counter — so the
+/// coordinator hands one instance to its own control-plane writer and
+/// to every pool worker it connects, and any two stamps drawn from the
+/// same clock are distinct and ordered by draw time. Workers draw their
+/// sequence numbers from disjoint slices of one counter rather than
+/// from private counters, which is what makes `(epoch, seq)` a total
+/// order per key across the whole cluster.
+#[derive(Clone, Debug, Default)]
+pub struct WriteClock {
+    counter: Arc<AtomicU64>,
+}
+
+impl WriteClock {
+    pub fn new() -> WriteClock {
+        WriteClock::default()
+    }
+
+    /// Next unique sequence number (starts at 1; 0 is reserved for
+    /// [`Version::ZERO`]).
+    pub fn next_seq(&self) -> u64 {
+        self.counter.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Stamp a fresh write routed under `epoch`.
+    pub fn stamp(&self, epoch: u64) -> Version {
+        Version {
+            epoch,
+            seq: self.next_seq(),
+        }
+    }
+
+    /// Lamport receive rule: advance the counter to at least `seq`, so
+    /// stamps minted after observing a foreign version always exceed
+    /// it. Readers feed every version they see through this, which lets
+    /// a clock that didn't mint a write (e.g. a stand-alone pool's
+    /// private clock racing coordinator-stamped preloads at the same
+    /// epoch) catch up instead of issuing losing stamps. Writers of
+    /// coordinator-managed data should still share the coordinator's
+    /// clock (`Coordinator::connect_pool`) — that is what makes stamps
+    /// unique, not merely monotone.
+    pub fn observe(&self, seq: u64) {
+        self.counter.fetch_max(seq, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn version_order_is_epoch_then_seq() {
+        let a = Version::new(1, 9);
+        let b = Version::new(2, 1);
+        let c = Version::new(2, 2);
+        assert!(Version::ZERO < a);
+        assert!(a < b);
+        assert!(b < c);
+        assert_eq!(Version::new(3, 4), Version::new(3, 4));
+        assert!(a.bump() > a);
+        assert_eq!(a.bump(), Version::new(1, 10));
+    }
+
+    #[test]
+    fn beats_is_the_max_version_fold() {
+        let mut best: Option<(Version, Vec<u8>)> = None;
+        for (e, s, bytes) in [(1, 5, b"a"), (1, 4, b"b"), (2, 1, b"c"), (1, 9, b"d")] {
+            let ver = Version::new(e, s);
+            if ver.beats(&best) {
+                best = Some((ver, bytes.to_vec()));
+            }
+        }
+        assert_eq!(best, Some((Version::new(2, 1), b"c".to_vec())));
+    }
+
+    #[test]
+    fn observe_advances_the_clock() {
+        let clock = WriteClock::new();
+        clock.observe(100);
+        assert!(clock.stamp(0).seq > 100);
+        clock.observe(50); // never regresses
+        assert!(clock.next_seq() > 101);
+    }
+
+    #[test]
+    fn clock_is_unique_across_clones_and_threads() {
+        let clock = WriteClock::new();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let clock = clock.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..1000).map(|_| clock.next_seq()).collect::<Vec<u64>>()
+            }));
+        }
+        let mut all: Vec<u64> = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate sequence numbers");
+        assert!(clock.stamp(7) > Version::new(7, 4000));
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration: the versioned storage plane, end to end.
+//!
+//! Pins the two contracts the version substrate introduces:
+//! 1. a live `SET` racing a migration's copy window always survives
+//!    with the newer version — the copier's version-guarded `VSET` and
+//!    the delete phase's `VDEL` guard can never clobber it (the closed
+//!    "last-copier-wins" residual of ROADMAP PR 2);
+//! 2. repair propagates the **max-version** holder's copy, not any
+//!    survivor's — a stale replica is converged, never trusted.
+
+use asura::algo::Placer;
+use asura::coordinator::Coordinator;
+use asura::net::client::Conn;
+use asura::net::pool::PoolConfig;
+use asura::storage::Version;
+use asura::workload::{value_for, Op};
+use std::collections::HashMap;
+
+/// Property-style: several seeds, each racing a full-keyspace rewrite
+/// against a join's live migration. After the dust settles, **every**
+/// replica of **every** key must hold the rewritten payload — if any
+/// stale copier had won anywhere, the old (shorter) payload would
+/// surface.
+#[test]
+fn live_set_racing_migration_copy_always_survives() {
+    for seed in 0..3u64 {
+        race_round(seed);
+    }
+}
+
+fn race_round(seed: u64) {
+    let mut coord = Coordinator::new(2);
+    for i in 0..4 {
+        coord.spawn_node(i, 1.0).unwrap();
+    }
+    // Preload under management (size 8) so the join migrates these keys.
+    let keys: Vec<u64> = (0..400u64).map(|k| k.wrapping_mul(7919) ^ seed).collect();
+    for &k in &keys {
+        coord.set(k, &value_for(k, 8)).unwrap();
+    }
+    let pool = coord
+        .connect_pool(PoolConfig {
+            workers: 4,
+            pipeline_depth: 16,
+            verify_hits: true,
+            ..PoolConfig::default()
+        })
+        .unwrap();
+    // The race: rewrite EVERY key (size 24 — a distinguishable payload)
+    // through the pool while the join's copy → publish → delete runs.
+    let sets: Vec<Op> = keys.iter().map(|&key| Op::Set { key, size: 24 }).collect();
+    let pending = pool.submit(sets);
+    coord.spawn_node(4, 1.0).unwrap();
+    let res = pending.wait().unwrap();
+    assert_eq!(res.ops, 400);
+    // Quiesce: converge writes whose acks landed after the migration's
+    // own reconcile drain, then drain any deferred hand-offs.
+    coord.reconcile_writes();
+    while coord.repair_pending() > 0 {
+        coord.repair_step(256).unwrap();
+    }
+    // Every replica of every key holds the REWRITTEN bytes.
+    let snap = coord.snapshot();
+    let mut replicas = Vec::new();
+    let mut conns: HashMap<u32, Conn> = HashMap::new();
+    for &k in &keys {
+        snap.replica_set(k, &mut replicas);
+        for &n in &replicas {
+            let addr = snap.addr_of(n).unwrap();
+            let c = conns
+                .entry(n)
+                .or_insert_with(|| Conn::connect(addr).unwrap());
+            let (_, bytes) = c
+                .vget(k)
+                .unwrap()
+                .unwrap_or_else(|| panic!("seed {seed}: key {k:x} missing on node {n}"));
+            assert_eq!(
+                bytes,
+                value_for(k, 24),
+                "seed {seed}: stale migration copy clobbered the live write \
+                 for key {k:x} on node {n}"
+            );
+        }
+    }
+    // The audit agrees the set is fully replicated.
+    let audit = coord.audit_replication().unwrap();
+    assert!(audit.is_full(), "under-replicated: {:?}", audit.under_keys);
+}
+
+#[test]
+fn repair_propagates_the_freshest_version_not_any_survivor() {
+    let mut coord = Coordinator::new(3);
+    for i in 0..5 {
+        coord.spawn_node(i, 1.0).unwrap();
+    }
+    coord.set(42, b"v1").unwrap();
+    let snap = coord.snapshot();
+    let mut holders = Vec::new();
+    snap.replica_set(42, &mut holders);
+    assert_eq!(holders.len(), 3);
+    // Land a newer write on two of the three holders behind the
+    // coordinator's back, leaving the third stale at v1.
+    let mut c0 = Conn::connect(snap.addr_of(holders[0]).unwrap()).unwrap();
+    let (v1, _) = c0.vget(42).unwrap().unwrap();
+    let newer = Version::new(v1.epoch, v1.seq + 100);
+    for &n in &holders[..2] {
+        let mut c = Conn::connect(snap.addr_of(n).unwrap()).unwrap();
+        assert!(c.vset(42, newer, b"v2-fresh".to_vec()).unwrap().applied);
+    }
+    // Repair must converge the whole set on the freshest copy — the
+    // stale holder would happily have served v1.
+    coord.enqueue_repair([42u64]);
+    let tick = coord.repair_step(8).unwrap();
+    assert_eq!(tick.lost, 0);
+    assert!(tick.copies >= 1, "the stale holder must receive the fresh copy");
+    for &n in &holders {
+        let mut c = Conn::connect(snap.addr_of(n).unwrap()).unwrap();
+        let (ver, bytes) = c.vget(42).unwrap().unwrap();
+        assert_eq!(
+            (ver, bytes),
+            (newer, b"v2-fresh".to_vec()),
+            "node {n} did not converge on the max version"
+        );
+    }
+}
+
+#[test]
+fn stale_copier_is_refused_end_to_end() {
+    // The unit-level guarantee over the wire: a copier that fetched
+    // before a newer write landed cannot overwrite it, even though it
+    // writes later.
+    let mut coord = Coordinator::new(1);
+    coord.spawn_node(0, 1.0).unwrap();
+    coord.set(9, b"original").unwrap();
+    let snap = coord.snapshot();
+    let addr = snap.addr_of(snap.placer.place(9)).unwrap();
+    let mut c = Conn::connect(addr).unwrap();
+    let (v_orig, copied) = c.vget(9).unwrap().unwrap();
+    // A live write supersedes the fetched copy...
+    let v_live = Version::new(v_orig.epoch, v_orig.seq + 1);
+    assert!(c.vset(9, v_live, b"live-write".to_vec()).unwrap().applied);
+    // ...so replaying the copier's stale (version, bytes) is refused,
+    // and the ack names the winner so a lagging clock can catch up.
+    let ack = c.vset(9, v_orig, copied).unwrap();
+    assert!(!ack.applied);
+    assert_eq!(ack.version, v_live);
+    assert_eq!(c.vget(9).unwrap().unwrap().1, b"live-write".to_vec());
+}
