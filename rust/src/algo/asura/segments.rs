@@ -43,6 +43,50 @@ impl SegmentTable {
         Self::default()
     }
 
+    /// Rebuild a table from its replicated wire form: the per-segment
+    /// `(owner, len)` pairs — exactly the paper's Table II `8N` bytes,
+    /// and the entire shared state of the algorithm. This is what makes
+    /// the coordinator role cheap to reassign: a standby that received
+    /// these pairs reconstructs the *identical* placement function
+    /// (same segments, same holes, same free list), independent of the
+    /// add/remove history that produced it. Rejects inconsistent input
+    /// (owner/len arity mismatch, a hole with nonzero length, an owned
+    /// segment with zero length, or a trailing hole — a live table
+    /// trims those, so one in the wire form means corruption).
+    pub fn from_raw(owners: Vec<NodeId>, lens_q24: Vec<u32>) -> Result<SegmentTable, String> {
+        if owners.len() != lens_q24.len() {
+            return Err(format!(
+                "owner/len arity mismatch: {} owners vs {} lens",
+                owners.len(),
+                lens_q24.len()
+            ));
+        }
+        if owners.last() == Some(&NO_SEG) {
+            return Err("trailing hole in segment table (never produced live)".to_string());
+        }
+        let mut by_node: BTreeMap<NodeId, Vec<SegId>> = BTreeMap::new();
+        let mut free: Vec<SegId> = Vec::new();
+        for (s, (&o, &l)) in owners.iter().zip(&lens_q24).enumerate() {
+            if o == NO_SEG {
+                if l != 0 {
+                    return Err(format!("hole at segment {s} carries length {l}"));
+                }
+                free.push(s as SegId);
+            } else {
+                if l == 0 {
+                    return Err(format!("owned segment {s} (node {o}) has zero length"));
+                }
+                by_node.entry(o).or_default().push(s as SegId);
+            }
+        }
+        Ok(SegmentTable {
+            lens: lens_q24.into_iter().map(Q24).collect(),
+            owners,
+            by_node,
+            free,
+        })
+    }
+
     /// `maximum_segment_number_plus_1` from the paper's pseudocode:
     /// the number line `[0, m)` that draws must fall into.
     pub fn m(&self) -> u32 {
@@ -305,6 +349,44 @@ mod tests {
         let segs = t.add_node(0, 1e-9);
         assert_eq!(segs.len(), 1);
         assert!(t.len_q24(segs[0]) >= 1);
+    }
+
+    #[test]
+    fn raw_roundtrip_reconstructs_the_identical_table() {
+        // Table II replication: (owner, len) pairs rebuild the exact
+        // placement state, including interior holes and the free list.
+        let mut t = SegmentTable::new();
+        t.add_node(0, 1.5);
+        t.add_node(1, 1.0);
+        t.add_node(2, 2.3);
+        t.remove_node(1); // interior hole
+        t.add_node(3, 0.4); // reuses the hole
+        t.remove_node(3); // hole again
+        let rebuilt = SegmentTable::from_raw(t.owners_raw().to_vec(), t.lens_q24_raw()).unwrap();
+        assert_eq!(rebuilt.m(), t.m());
+        assert_eq!(rebuilt.free, t.free);
+        assert_eq!(rebuilt.by_node, t.by_node);
+        for s in 0..t.m() {
+            assert_eq!(rebuilt.owner(s), t.owner(s));
+            assert_eq!(rebuilt.len_q24(s), t.len_q24(s));
+        }
+        // The rebuilt table keeps evolving identically: the next add
+        // takes the same smallest-unused segment on both.
+        let mut a = t.clone();
+        let mut b = rebuilt;
+        assert_eq!(a.add_node(9, 1.2), b.add_node(9, 1.2));
+    }
+
+    #[test]
+    fn raw_rejects_inconsistent_tables() {
+        assert!(SegmentTable::from_raw(vec![0], vec![]).is_err());
+        // Hole with a length / owned segment without one.
+        assert!(SegmentTable::from_raw(vec![NO_SEG, 1], vec![5, Q24::ONE.0]).is_err());
+        assert!(SegmentTable::from_raw(vec![0, 1], vec![0, Q24::ONE.0]).is_err());
+        // Trailing hole (a live table trims those).
+        assert!(SegmentTable::from_raw(vec![0, NO_SEG], vec![Q24::ONE.0, 0]).is_err());
+        // Empty is fine (a pre-membership cluster).
+        assert!(SegmentTable::from_raw(vec![], vec![]).unwrap().is_empty());
     }
 
     #[test]

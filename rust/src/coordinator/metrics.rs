@@ -34,6 +34,14 @@ pub struct Metrics {
     pub keys_repaired: Counter,
     /// Fault plane: bytes copied by repair.
     pub repair_bytes: Counter,
+    /// Failover plane: control-state snapshots exported for
+    /// replication to the lease authorities.
+    pub state_exports: Counter,
+    /// Failover plane: standby takeovers applied (`promote_from`).
+    pub promotions: Counter,
+    /// Failover plane: late-writer keys converged by a quiesce-time /
+    /// post-promotion reconcile drain.
+    pub stranded_reconciled: Counter,
 }
 
 impl Metrics {
@@ -44,7 +52,8 @@ impl Metrics {
     pub fn render(&self) -> String {
         format!(
             "sets={} gets={} rebalances={} keys_moved={} suspects={} deaths={} \
-             keys_repaired={} repair_bytes={}",
+             keys_repaired={} repair_bytes={} state_exports={} promotions={} \
+             stranded_reconciled={}",
             self.sets.get(),
             self.gets.get(),
             self.rebalances.get(),
@@ -52,7 +61,10 @@ impl Metrics {
             self.suspects.get(),
             self.deaths.get(),
             self.keys_repaired.get(),
-            self.repair_bytes.get()
+            self.repair_bytes.get(),
+            self.state_exports.get(),
+            self.promotions.get(),
+            self.stranded_reconciled.get()
         )
     }
 }

@@ -52,9 +52,28 @@
 //! their lost replicas restored by paced background repair
 //! ([`Coordinator::repair_step`], audited by
 //! [`Coordinator::audit_replication`]).
+//!
+//! ## Failover plane
+//!
+//! The coordinator process itself is no longer a single point of
+//! failure. Leadership is a term-numbered **lease** granted by a
+//! majority of authority nodes ([`election`]), and the leader's
+//! reassignable state — the segment table (paper Table II), the key
+//! registry, the repair queue — is continuously replicated to the same
+//! authorities ([`replicate`], via
+//! [`Coordinator::export_control_state`]). When the leader stops
+//! renewing, a standby observes the vacancy
+//! ([`crate::fault::HealthMonitor::lease_tick`]), wins the lease at a
+//! bumped term, and [`Coordinator::promote_from`] rebuilds a live
+//! coordinator from the shadowed state: identical placement function,
+//! the current epoch republished under the new term, repair resumed
+//! from the shadowed queue, and interregnum writes converged by
+//! version comparison ([`Coordinator::reconcile_writes`]).
 
+pub mod election;
 pub mod metrics;
 pub mod registry;
+pub mod replicate;
 pub mod snapshot;
 
 use crate::algo::asura::AsuraPlacer;
@@ -70,6 +89,7 @@ use crate::net::server::NodeServer;
 use crate::storage::{Version, WriteClock};
 use metrics::Metrics;
 use registry::KeyRegistry;
+use replicate::ControlState;
 use snapshot::{PlacerSnapshot, SnapshotCell};
 use std::collections::{BTreeSet, HashMap, HashSet};
 use std::net::SocketAddr;
@@ -102,12 +122,31 @@ struct PendingMove {
     new_set: Vec<NodeId>,
 }
 
+/// The shareable attachment points between a coordinator and its data
+/// plane: the snapshot cell pools subscribe to, the writer registry and
+/// repair-hint channel pool workers report into, and the write clock
+/// everything stamps from. A promoted standby adopts them wholesale
+/// ([`Coordinator::promote_from`]), which models what a real hand-off
+/// provides when clients re-attach to the new leader — and is what
+/// makes an acked write registered during the interregnum visible to
+/// the successor.
+#[derive(Clone)]
+pub struct ControlHandles {
+    pub cell: Arc<SnapshotCell>,
+    pub registry: Arc<KeyRegistry>,
+    pub repair_hints: Arc<KeyRegistry>,
+    pub clock: WriteClock,
+}
+
 /// The coordinator process state.
 pub struct Coordinator {
     placer: AsuraPlacer,
     members: HashMap<NodeId, Member>,
     index: MetaIndex,
     epoch: u64,
+    /// Leadership term this coordinator publishes under (0 = unelected
+    /// single leader; see [`election`]).
+    term: u64,
     replicas: usize,
     cell: Arc<SnapshotCell>,
     pub metrics: Metrics,
@@ -140,6 +179,7 @@ impl Coordinator {
             members: HashMap::new(),
             index: MetaIndex::new(replicas),
             epoch: 0,
+            term: 0,
             replicas,
             cell: SnapshotCell::new(PlacerSnapshot::empty(replicas)),
             metrics: Metrics::new(),
@@ -154,6 +194,20 @@ impl Coordinator {
 
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// Leadership term this coordinator publishes under.
+    pub fn term(&self) -> u64 {
+        self.term
+    }
+
+    /// Adopt a won (or bumped) leadership term and republish the
+    /// current epoch under it, so observers can tell a hand-off from a
+    /// rebalance. Terms are monotone.
+    pub fn set_term(&mut self, term: u64) {
+        assert!(term >= self.term, "term regression: {} -> {term}", self.term);
+        self.term = term;
+        self.publish_snapshot();
     }
 
     /// The publication point router threads subscribe to.
@@ -187,6 +241,7 @@ impl Coordinator {
             .collect();
         self.cell.publish(PlacerSnapshot {
             epoch: self.epoch,
+            term: self.term,
             placer: self.placer.clone(),
             addrs,
             replicas: self.replicas,
@@ -198,6 +253,178 @@ impl Coordinator {
     /// [`Self::connect_pool`], which wires it up automatically.
     pub fn key_registry(&self) -> Arc<KeyRegistry> {
         Arc::clone(&self.registry)
+    }
+
+    /// The data-plane attachment points a promoted standby adopts
+    /// ([`Self::promote_from`]).
+    pub fn handles(&self) -> ControlHandles {
+        ControlHandles {
+            cell: Arc::clone(&self.cell),
+            registry: Arc::clone(&self.registry),
+            repair_hints: Arc::clone(&self.repair_hints),
+            clock: self.clock.clone(),
+        }
+    }
+
+    /// Export the reassignable control state for replication to the
+    /// authorities ([`replicate::StateReplicator::publish`]): segment
+    /// table verbatim, address map, managed keys (writer registry and
+    /// repair hints absorbed first, so a key acked just before the
+    /// export is in it), and the repair queue in FIFO order. Leaders
+    /// call this after *every* epoch bump and periodically between —
+    /// a promotion can only be as fresh as the last export.
+    pub fn export_control_state(&mut self) -> ControlState {
+        self.sync_registry();
+        self.drain_repair_hints();
+        let mut keys: Vec<DatumId> = self.keys.iter().copied().collect();
+        keys.sort_unstable();
+        self.metrics.state_exports.inc();
+        ControlState {
+            term: self.term,
+            epoch: self.epoch,
+            replicas: self.replicas,
+            owners: self.placer.table().owners_raw().to_vec(),
+            lens_q24: self.placer.table().lens_q24_raw(),
+            addrs: self.node_addrs(),
+            keys,
+            repair: self.repair.snapshot(),
+        }
+    }
+
+    /// Promotion: rebuild a live coordinator from shadowed control
+    /// state, as the new leader at `new_term`. The placement function
+    /// is reconstructed *identically* from the replicated segment
+    /// table (same segments, same holes — not a lookalike re-added in
+    /// id order), every member is re-connected, the managed keys are
+    /// re-indexed for the §2.D triggers, the repair queue resumes
+    /// where the dead leader stopped, and the current epoch is
+    /// republished bumped under the new term so every router observes
+    /// the hand-off. Callers should follow with
+    /// [`Self::reconcile_writes`] to converge writes acked during the
+    /// interregnum (the shared registry in `handles` carries them).
+    ///
+    /// A member that cannot be reached within a bounded connect does
+    /// **not** wedge the promotion: a storage node and the leader dying
+    /// together — before the leader's detector could remove the node —
+    /// is exactly the correlated failure this plane exists for, so the
+    /// unreachable member is declared dead here (dropped from
+    /// placement, its §2.D-triggered keys queued for repair, all under
+    /// the one bumped epoch). If it was merely slow, it rejoins like
+    /// any recovered node and its stale copies are version-guarded.
+    ///
+    /// Fails only if the state is stale (an epoch was published after
+    /// the export — promoting on it would route by a dead placement),
+    /// inconsistent, or if no member is reachable at all.
+    pub fn promote_from(
+        state: &ControlState,
+        new_term: u64,
+        handles: ControlHandles,
+    ) -> anyhow::Result<Coordinator> {
+        const CONNECT_TIMEOUT: std::time::Duration = std::time::Duration::from_millis(1_000);
+        anyhow::ensure!(
+            new_term > state.term,
+            "promotion term {new_term} must exceed the shadowed term {}",
+            state.term
+        );
+        let published = handles.cell.load().epoch;
+        anyhow::ensure!(
+            state.epoch >= published,
+            "shadowed state is stale: exported at epoch {} but epoch {published} was published",
+            state.epoch
+        );
+        let mut placer = state
+            .placer()
+            .map_err(|e| anyhow::anyhow!("bad shadowed segment table: {e}"))?;
+        // Re-connect every member concurrently (one scoped thread each,
+        // so N dead members cost one connect timeout, not N — the
+        // promotion latency is part of the measured control-plane
+        // outage). The bounded connect proves reachability; the bound
+        // is then lifted, because a *kept* conn carrying a per-op
+        // timeout could desync its request/response pairing on a slow
+        // peer (see [`Conn::set_io_timeout`]).
+        let mut members = HashMap::with_capacity(state.addrs.len());
+        let mut unreachable: Vec<NodeId> = Vec::new();
+        let connected = crate::net::scatter(&state.addrs, |(id, addr)| {
+            let conn = Conn::connect_timeout(addr, CONNECT_TIMEOUT)
+                .ok()
+                .filter(|c| c.set_io_timeout(None).is_ok());
+            (id, addr, conn)
+        });
+        for (id, addr, conn) in connected {
+            match conn {
+                Some(conn) => {
+                    members.insert(
+                        id,
+                        Member {
+                            addr,
+                            conn,
+                            server: None,
+                        },
+                    );
+                }
+                None => unreachable.push(id),
+            }
+        }
+        anyhow::ensure!(
+            !members.is_empty(),
+            "no member of the shadowed cluster is reachable"
+        );
+        for n in placer.nodes() {
+            anyhow::ensure!(
+                members.contains_key(&n) || unreachable.contains(&n),
+                "segment table names node {n} but the address map does not"
+            );
+        }
+        let replicas = state.replicas.max(1);
+        let mut index = MetaIndex::new(replicas);
+        let mut keys = HashSet::with_capacity(state.keys.len());
+        for &k in &state.keys {
+            if keys.insert(k) {
+                index.insert(&placer, k);
+            }
+        }
+        let mut repair = RepairQueue::new();
+        repair.enqueue(state.repair.iter().copied());
+        // Declare the unreachable members dead before publishing, so
+        // the promoted epoch routes only to live nodes: same removal
+        // triggers as `mark_dead`, all folded into the one bump.
+        let mut deaths = 0u64;
+        for &id in &unreachable {
+            if !placer.table().contains_node(id) {
+                continue;
+            }
+            let victim_segs = placer.table().segments_of(id).to_vec();
+            let affected: Vec<DatumId> = index
+                .affected_by_removal(&victim_segs)
+                .into_iter()
+                .collect();
+            placer.remove_node(id);
+            for &k in &affected {
+                index.insert(&placer, k);
+            }
+            repair.enqueue(affected);
+            deaths += 1;
+        }
+        let coord = Coordinator {
+            placer,
+            members,
+            index,
+            epoch: state.epoch + 1,
+            term: new_term,
+            replicas,
+            cell: handles.cell,
+            metrics: Metrics::new(),
+            keys,
+            suspects: BTreeSet::new(),
+            registry: handles.registry,
+            repair_hints: handles.repair_hints,
+            repair,
+            clock: handles.clock,
+        };
+        coord.metrics.promotions.inc();
+        coord.metrics.deaths.add(deaths);
+        coord.publish_snapshot();
+        Ok(coord)
     }
 
     /// Spawn a [`RouterPool`] subscribed to this coordinator's snapshots,
@@ -459,6 +686,7 @@ impl Coordinator {
                 reconciled += 1;
             }
         }
+        self.metrics.stranded_reconciled.add(reconciled as u64);
         reconciled
     }
 
@@ -1161,6 +1389,104 @@ mod tests {
         // Unknown ids are ignored.
         coord.mark_suspect(99);
         assert!(!coord.snapshot().is_suspect(99));
+    }
+
+    #[test]
+    fn promotion_rebuilds_the_identical_coordinator() {
+        // Node servers owned by the harness, as in a real deployment —
+        // they must outlive the crashed leader process.
+        let servers: Vec<NodeServer> = (0..4).map(|_| NodeServer::spawn().unwrap()).collect();
+        let mut leader = Coordinator::new(2);
+        for (i, s) in servers.iter().enumerate() {
+            leader.join_external(i as u32, 1.0, s.addr()).unwrap();
+        }
+        leader.set_term(1);
+        for k in 0..200u64 {
+            leader.set(k, b"payload").unwrap();
+        }
+        // Leave repair work pending so resumption is observable.
+        leader.enqueue_repair([3, 5, 7]);
+        let state = leader.export_control_state();
+        let handles = leader.handles();
+        let epoch = leader.epoch();
+        let expected: Vec<Vec<NodeId>> = (0..200u64).map(|k| leader.replica_set(k)).collect();
+        drop(leader); // the crash: members and handles survive
+
+        let mut promoted = Coordinator::promote_from(&state, 2, handles).unwrap();
+        assert_eq!(promoted.term(), 2);
+        assert_eq!(promoted.epoch(), epoch + 1);
+        assert_eq!(promoted.key_count(), 200);
+        assert_eq!(promoted.repair_pending(), 3, "repair resumes, not restarts");
+        for k in 0..200u64 {
+            assert_eq!(
+                promoted.replica_set(k),
+                expected[k as usize],
+                "promoted placement diverged at key {k}"
+            );
+        }
+        assert_eq!(promoted.verify_all_readable().unwrap(), 200);
+        let snap = promoted.snapshot();
+        assert_eq!((snap.epoch, snap.term), (epoch + 1, 2));
+        assert!(snap.is_coherent());
+        assert_eq!(promoted.metrics.promotions.get(), 1);
+    }
+
+    #[test]
+    fn promotion_survives_a_correlated_member_and_leader_crash() {
+        // A storage node dies *together with* the leader, before the
+        // detector could remove it: promotion must not wedge on the
+        // unreachable member — it is declared dead at promotion, its
+        // keys repair from the survivors, and nothing is lost.
+        let mut servers: Vec<NodeServer> = (0..4).map(|_| NodeServer::spawn().unwrap()).collect();
+        let mut leader = Coordinator::new(2);
+        for (i, s) in servers.iter().enumerate() {
+            leader.join_external(i as u32, 1.0, s.addr()).unwrap();
+        }
+        leader.set_term(1);
+        for k in 0..150u64 {
+            leader.set(k, b"payload").unwrap();
+        }
+        let state = leader.export_control_state();
+        let handles = leader.handles();
+        drop(leader);
+        servers[1].kill(); // correlated, undetected death
+
+        let mut promoted = Coordinator::promote_from(&state, 2, handles).unwrap();
+        assert_eq!(promoted.placer().node_count(), 3, "dead member dropped");
+        assert!(promoted.snapshot().addr_of(1).is_none());
+        assert!(promoted.repair_pending() > 0, "its keys queue for repair");
+        assert_eq!(promoted.metrics.deaths.get(), 1);
+        while promoted.repair_pending() > 0 {
+            let tick = promoted.repair_step(64).unwrap();
+            assert_eq!(tick.lost, 0);
+        }
+        assert_eq!(promoted.verify_all_readable().unwrap(), 150);
+        let audit = promoted.audit_replication().unwrap();
+        assert!(audit.is_full(), "under-replicated: {:?}", audit.under_keys);
+    }
+
+    #[test]
+    fn promotion_rejects_stale_state_and_unbumped_terms() {
+        let servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
+        let mut leader = Coordinator::new(1);
+        for (i, s) in servers.iter().enumerate() {
+            leader.join_external(i as u32, 1.0, s.addr()).unwrap();
+        }
+        leader.set_term(1);
+        let stale = leader.export_control_state();
+        // An epoch published after the export makes the shadow stale.
+        leader.decommission(2).unwrap();
+        let handles = leader.handles();
+        assert!(Coordinator::promote_from(&stale, 2, handles.clone()).is_err());
+        let fresh = leader.export_control_state();
+        assert!(
+            Coordinator::promote_from(&fresh, 1, handles.clone()).is_err(),
+            "promotion must bump the term"
+        );
+        drop(leader);
+        let promoted = Coordinator::promote_from(&fresh, 2, handles).unwrap();
+        assert_eq!(promoted.placer().node_count(), 2);
+        assert_eq!(promoted.snapshot().term, 2);
     }
 
     #[test]

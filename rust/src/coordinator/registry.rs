@@ -53,6 +53,19 @@ impl KeyRegistry {
         pending.drain().collect()
     }
 
+    /// Peek at every pending key without consuming it. Shadow readers
+    /// (a standby exporting or replaying control state) use this so
+    /// observing the registry can never race the leader's own drain
+    /// out of a key — only the control plane's `drain` consumes.
+    pub fn snapshot(&self) -> Vec<DatumId> {
+        self.pending
+            .lock()
+            .expect("registry poisoned")
+            .iter()
+            .copied()
+            .collect()
+    }
+
     pub fn len(&self) -> usize {
         self.pending.lock().expect("registry poisoned").len()
     }
@@ -73,6 +86,11 @@ mod tests {
         reg.register(7);
         reg.register(7); // idempotent
         reg.register_batch(&[1, 2, 7]);
+        assert_eq!(reg.len(), 3);
+        // A snapshot peeks without consuming.
+        let mut peeked = reg.snapshot();
+        peeked.sort_unstable();
+        assert_eq!(peeked, vec![1, 2, 7]);
         assert_eq!(reg.len(), 3);
         let mut keys = reg.drain();
         keys.sort_unstable();

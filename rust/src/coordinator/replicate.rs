@@ -1,0 +1,415 @@
+//! Control-state replication: what a standby coordinator shadows.
+//!
+//! The leader's reassignable state is deliberately tiny — the paper's
+//! whole point about the coordinator role (§2.D, Table II). One
+//! [`ControlState`] carries everything a standby needs to *become* the
+//! coordinator without re-auditing the cluster from zero:
+//!
+//! - the **segment table** verbatim (per-segment owner + Q24 length —
+//!   Table II's 8N bytes), so the promoted placer is the *identical*
+//!   placement function, not a same-membership lookalike rebuilt from
+//!   a different add/remove history;
+//! - the node **address map** at the current epoch;
+//! - the **key registry** (every key under management, with the writer
+//!   registry drained into it at export time), so migration/repair
+//!   planning covers data-plane writes across the hand-off;
+//! - the **repair queue** in FIFO order, so paced repair resumes where
+//!   the dead leader stopped.
+//!
+//! The blob is published through the `STATE` wire op to the same
+//! authority nodes that serve the lease ([`super::election`]), applied
+//! by term comparison (a deposed leader's late publish can never
+//! clobber its successor's), and fetched back max-term-wins at
+//! promotion. Divergence that slips between the last export and the
+//! crash — writes acked during the interregnum — is *not* lost: pool
+//! workers keep registering acked keys, and the promoted coordinator's
+//! reconcile drain converges them by version comparison (the PR 3
+//! substrate doing exactly what it was built for).
+//!
+//! Encoding is the repo's usual line-oriented text (hex fields), so a
+//! blob is inspectable with `nc` like every other wire payload.
+
+use crate::algo::asura::{AsuraPlacer, SegmentTable, NO_SEG};
+use crate::algo::{DatumId, NodeId};
+use crate::net::client::Conn;
+use std::fmt::Write as _;
+use std::net::SocketAddr;
+use std::time::Duration;
+
+/// Everything a standby needs to take the coordinator role over.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControlState {
+    /// Leadership term this state was exported under.
+    pub term: u64,
+    /// Membership epoch the leader had published when it exported.
+    pub epoch: u64,
+    /// Configured replication factor.
+    pub replicas: usize,
+    /// Per-segment owners (`NO_SEG` = hole) — paper Table II, column 1.
+    pub owners: Vec<NodeId>,
+    /// Per-segment Q24 lengths — Table II, column 2.
+    pub lens_q24: Vec<u32>,
+    /// Node id → server address, ascending by node id.
+    pub addrs: Vec<(NodeId, SocketAddr)>,
+    /// Keys under management (sorted ascending).
+    pub keys: Vec<DatumId>,
+    /// Repair queue contents in FIFO order.
+    pub repair: Vec<DatumId>,
+}
+
+impl ControlState {
+    /// Reconstruct the exact placement function from the replicated
+    /// table.
+    pub fn placer(&self) -> Result<AsuraPlacer, String> {
+        SegmentTable::from_raw(self.owners.clone(), self.lens_q24.clone())
+            .map(AsuraPlacer::from_table)
+    }
+
+    /// Serialize to the line-oriented wire form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = String::new();
+        writeln!(out, "ASURACTRL 1").unwrap();
+        writeln!(
+            out,
+            "H {:x} {:x} {:x}",
+            self.term, self.epoch, self.replicas
+        )
+        .unwrap();
+        write!(out, "T {}", self.owners.len()).unwrap();
+        for (&o, &l) in self.owners.iter().zip(&self.lens_q24) {
+            if o == NO_SEG {
+                write!(out, " -:0").unwrap();
+            } else {
+                write!(out, " {o:x}:{l:x}").unwrap();
+            }
+        }
+        out.push('\n');
+        write!(out, "A {}", self.addrs.len()).unwrap();
+        for &(n, a) in &self.addrs {
+            write!(out, " {n:x}={a}").unwrap();
+        }
+        out.push('\n');
+        write!(out, "K {}", self.keys.len()).unwrap();
+        for &k in &self.keys {
+            write!(out, " {k:x}").unwrap();
+        }
+        out.push('\n');
+        write!(out, "R {}", self.repair.len()).unwrap();
+        for &k in &self.repair {
+            write!(out, " {k:x}").unwrap();
+        }
+        out.push('\n');
+        out.into_bytes()
+    }
+
+    /// Parse a blob back. Strict: any malformed field is an error —
+    /// promotion must never run on a half-read table.
+    pub fn decode(bytes: &[u8]) -> Result<ControlState, String> {
+        let text = std::str::from_utf8(bytes).map_err(|e| format!("not utf-8: {e}"))?;
+        let mut lines = text.lines();
+        let magic = lines.next().ok_or("empty blob")?;
+        if magic != "ASURACTRL 1" {
+            return Err(format!("bad magic {magic:?}"));
+        }
+
+        fn hex(p: Option<&str>, what: &str) -> Result<u64, String> {
+            p.and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| format!("bad {what}"))
+        }
+        fn counted<'a>(
+            line: Option<&'a str>,
+            tag: &str,
+        ) -> Result<(usize, std::str::Split<'a, char>), String> {
+            let line = line.ok_or_else(|| format!("missing {tag} line"))?;
+            let mut parts = line.split(' ');
+            if parts.next() != Some(tag) {
+                return Err(format!("expected {tag} line, got {line:?}"));
+            }
+            let n = parts
+                .next()
+                .and_then(|s| s.parse::<usize>().ok())
+                .ok_or_else(|| format!("bad {tag} count"))?;
+            Ok((n, parts))
+        }
+
+        // A section with entries beyond its declared count means the
+        // count itself is corrupt — truncating silently would promote a
+        // coordinator managing a fraction of the keys, so every line
+        // must be consumed exactly.
+        fn done(mut parts: std::str::Split<'_, char>, what: &str) -> Result<(), String> {
+            match parts.next() {
+                None => Ok(()),
+                Some(extra) => Err(format!("trailing data on {what} line: {extra:?}")),
+            }
+        }
+
+        let h = lines.next().ok_or("missing header")?;
+        let mut parts = h.split(' ');
+        if parts.next() != Some("H") {
+            return Err(format!("expected header, got {h:?}"));
+        }
+        let term = hex(parts.next(), "term")?;
+        let epoch = hex(parts.next(), "epoch")?;
+        let replicas = hex(parts.next(), "replicas")? as usize;
+        done(parts, "H")?;
+
+        let (m, mut parts) = counted(lines.next(), "T")?;
+        let mut owners = Vec::with_capacity(m);
+        let mut lens_q24 = Vec::with_capacity(m);
+        for _ in 0..m {
+            let pair = parts.next().ok_or("truncated segment table")?;
+            let (o, l) = pair.split_once(':').ok_or("bad segment pair")?;
+            owners.push(if o == "-" {
+                NO_SEG
+            } else {
+                u32::from_str_radix(o, 16).map_err(|_| "bad segment owner".to_string())?
+            });
+            lens_q24.push(u32::from_str_radix(l, 16).map_err(|_| "bad segment len".to_string())?);
+        }
+        done(parts, "T")?;
+
+        let (n, mut parts) = counted(lines.next(), "A")?;
+        let mut addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let entry = parts.next().ok_or("truncated address map")?;
+            let (id, addr) = entry.split_once('=').ok_or("bad address entry")?;
+            let id = u32::from_str_radix(id, 16).map_err(|_| "bad node id".to_string())?;
+            let addr = addr
+                .parse::<SocketAddr>()
+                .map_err(|e| format!("bad address {addr:?}: {e}"))?;
+            addrs.push((id, addr));
+        }
+        done(parts, "A")?;
+
+        let (n, mut parts) = counted(lines.next(), "K")?;
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            keys.push(hex(parts.next(), "key")?);
+        }
+        done(parts, "K")?;
+
+        let (n, mut parts) = counted(lines.next(), "R")?;
+        let mut repair = Vec::with_capacity(n);
+        for _ in 0..n {
+            repair.push(hex(parts.next(), "repair key")?);
+        }
+        done(parts, "R")?;
+        if let Some(extra) = lines.next() {
+            return Err(format!("trailing line after R section: {extra:?}"));
+        }
+
+        Ok(ControlState {
+            term,
+            epoch,
+            replicas,
+            owners,
+            lens_q24,
+            addrs,
+            keys,
+            repair,
+        })
+    }
+}
+
+/// Publishes/fetches [`ControlState`] blobs against the authority set.
+pub struct StateReplicator {
+    authorities: Vec<SocketAddr>,
+    timeout: Duration,
+}
+
+impl StateReplicator {
+    pub fn new(authorities: Vec<SocketAddr>, timeout: Duration) -> StateReplicator {
+        assert!(!authorities.is_empty(), "need at least one state authority");
+        StateReplicator {
+            authorities,
+            timeout,
+        }
+    }
+
+    pub fn majority(&self) -> usize {
+        self.authorities.len() / 2 + 1
+    }
+
+    /// Push `state` to every authority; succeeds once a majority
+    /// applied it (term rule: applied iff the blob's term is at least
+    /// the stored one). A refusal means a newer-term state exists —
+    /// the publisher has been deposed, which is an error worth
+    /// surfacing loudly, not a retry.
+    pub fn publish(&self, state: &ControlState) -> std::io::Result<usize> {
+        let blob = state.encode();
+        let term = state.term;
+        let mut applied = 0usize;
+        let mut deposed_by = 0u64;
+        let acks = crate::net::scatter(&self.authorities, |addr| {
+            let mut conn = Conn::connect_timeout(addr, self.timeout).ok()?;
+            conn.state_put(term, blob.clone()).ok()
+        });
+        for (ok, term) in acks.into_iter().flatten() {
+            if ok {
+                applied += 1;
+            } else {
+                deposed_by = deposed_by.max(term);
+            }
+        }
+        if applied >= self.majority() {
+            Ok(applied)
+        } else if deposed_by > state.term {
+            Err(std::io::Error::other(format!(
+                "state publish at term {} superseded by term {deposed_by}",
+                state.term
+            )))
+        } else {
+            Err(std::io::Error::other(format!(
+                "state publish reached {applied}/{} authorities (majority {})",
+                self.authorities.len(),
+                self.majority()
+            )))
+        }
+    }
+
+    /// Fetch the freshest replicated state: every authority is asked,
+    /// a majority must answer (quorum intersection with
+    /// [`Self::publish`] guarantees the newest majority-published blob
+    /// is among the answers), and the max-`(term, epoch)` blob wins —
+    /// the epoch tie-break matters because a live leader republishes
+    /// at the *same* term after every epoch bump, and a slow authority
+    /// can still hold the previous same-term blob.
+    /// `Ok(None)` = a majority answered and none holds any state (no
+    /// leader ever published).
+    pub fn fetch_latest(&self) -> std::io::Result<Option<ControlState>> {
+        let mut answered = 0usize;
+        let mut blobs: Vec<Vec<u8>> = Vec::new();
+        let replies = crate::net::scatter(&self.authorities, |addr| {
+            let mut conn = Conn::connect_timeout(addr, self.timeout).ok()?;
+            conn.state_get().ok()
+        });
+        for reply in replies {
+            match reply {
+                Some(Some((_, value))) => {
+                    answered += 1;
+                    blobs.push(value);
+                }
+                Some(None) => answered += 1,
+                None => {}
+            }
+        }
+        if answered < self.majority() {
+            return Err(std::io::Error::other(format!(
+                "state fetch reached {answered}/{} authorities (majority {})",
+                self.authorities.len(),
+                self.majority()
+            )));
+        }
+        let mut best: Option<ControlState> = None;
+        for blob in blobs {
+            let state = ControlState::decode(&blob)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+            let newer = match &best {
+                Some(b) => (state.term, state.epoch) > (b.term, b.epoch),
+                None => true,
+            };
+            if newer {
+                best = Some(state);
+            }
+        }
+        Ok(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::server::NodeServer;
+
+    fn sample_state() -> ControlState {
+        let mut table = SegmentTable::new();
+        table.add_node(0, 1.5);
+        table.add_node(1, 1.0);
+        table.add_node(2, 2.0);
+        table.remove_node(1); // interior hole survives the roundtrip
+        ControlState {
+            term: 3,
+            epoch: 7,
+            replicas: 2,
+            owners: table.owners_raw().to_vec(),
+            lens_q24: table.lens_q24_raw(),
+            addrs: vec![
+                (0, "127.0.0.1:7001".parse().unwrap()),
+                (2, "127.0.0.1:7003".parse().unwrap()),
+            ],
+            keys: vec![1, 2, 0xDEADBEEF, u64::MAX],
+            repair: vec![0xDEADBEEF, 2],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_preserves_everything() {
+        let state = sample_state();
+        let decoded = ControlState::decode(&state.encode()).unwrap();
+        assert_eq!(decoded, state);
+        // And the rebuilt placer is the identical placement function.
+        let placer = decoded.placer().unwrap();
+        let original = state.placer().unwrap();
+        use crate::algo::Placer;
+        for id in 0..500u64 {
+            assert_eq!(placer.place(id), original.place(id));
+        }
+    }
+
+    #[test]
+    fn decode_rejects_malformed_blobs() {
+        assert!(ControlState::decode(b"").is_err());
+        assert!(ControlState::decode(b"WRONG 1\n").is_err());
+        assert!(ControlState::decode(b"ASURACTRL 1\nH 1 1\n").is_err());
+        assert!(ControlState::decode("ASURACTRL 1\nH 1 1 1\nT 2 0:1\n".as_bytes()).is_err());
+        let mut good = sample_state().encode();
+        good.truncate(good.len() / 2);
+        assert!(ControlState::decode(&good).is_err());
+        // A corrupted-low section count must error, never silently
+        // truncate: promoting on a fraction of the key set would drop
+        // the rest out of migration/repair planning forever.
+        let text = String::from_utf8(sample_state().encode()).unwrap();
+        let shrunk = text.replacen("K 4 ", "K 3 ", 1);
+        assert_ne!(shrunk, text, "fixture must carry 4 keys");
+        assert!(ControlState::decode(shrunk.as_bytes()).is_err());
+        // Trailing garbage after the last section is corruption too.
+        let mut padded = text.into_bytes();
+        padded.extend_from_slice(b"X 0\n");
+        assert!(ControlState::decode(&padded).is_err());
+    }
+
+    #[test]
+    fn replicator_publishes_by_majority_and_fetches_max_term() {
+        let servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
+        let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+        let rep = StateReplicator::new(addrs, Duration::from_millis(300));
+        assert_eq!(rep.fetch_latest().unwrap(), None);
+        let mut state = sample_state();
+        state.term = 1;
+        assert!(rep.publish(&state).unwrap() >= rep.majority());
+        let mut newer = sample_state();
+        newer.term = 2;
+        newer.keys.push(42);
+        assert!(rep.publish(&newer).unwrap() >= rep.majority());
+        // A deposed leader's late publish is refused...
+        let err = rep.publish(&state).unwrap_err();
+        assert!(err.to_string().contains("superseded"), "{err}");
+        // ...and the fetch returns the successor's state.
+        assert_eq!(rep.fetch_latest().unwrap(), Some(newer));
+    }
+
+    #[test]
+    fn fetch_tolerates_a_minority_of_dead_authorities() {
+        let mut servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
+        let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+        let rep = StateReplicator::new(addrs, Duration::from_millis(300));
+        let state = sample_state();
+        rep.publish(&state).unwrap();
+        servers[0].kill();
+        assert_eq!(rep.fetch_latest().unwrap(), Some(state));
+        // Losing the majority fails loudly instead of guessing.
+        servers[1].kill();
+        assert!(rep.fetch_latest().is_err());
+        assert!(rep.publish(&sample_state()).is_err());
+    }
+}

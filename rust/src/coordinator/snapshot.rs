@@ -34,6 +34,12 @@ use std::sync::{Arc, RwLock};
 pub struct PlacerSnapshot {
     /// Membership epoch this snapshot was built from (monotone).
     pub epoch: u64,
+    /// Leadership term of the coordinator that published it (0 = an
+    /// unelected, single-leader coordinator). A standby promoting after
+    /// a leader crash republishes the current epoch under a bumped
+    /// term, so observers can tell a hand-off from an ordinary
+    /// rebalance (see [`crate::coordinator::election`]).
+    pub term: u64,
     /// The placement function at this epoch.
     pub placer: AsuraPlacer,
     /// Node id → server address, ascending by node id.
@@ -51,6 +57,7 @@ impl PlacerSnapshot {
     pub fn empty(replicas: usize) -> Self {
         PlacerSnapshot {
             epoch: 0,
+            term: 0,
             placer: AsuraPlacer::new(),
             addrs: Vec::new(),
             replicas: replicas.max(1),
@@ -238,6 +245,7 @@ mod tests {
         }
         PlacerSnapshot {
             epoch,
+            term: 0,
             placer,
             addrs,
             replicas: 1,

@@ -16,12 +16,20 @@
 //! detection latency explicit, deterministic to test, and free of
 //! background threads. Probes open a fresh connection per round so a
 //! wedged data connection can never mask (or fake) liveness.
+//!
+//! Since the coordinator-failover plane, the monitor also watches the
+//! **coordinator lease** ([`HealthMonitor::lease_tick`]): the same
+//! consecutive-miss threshold that turns a silent storage node into a
+//! death verdict turns a lease observed vacant at a majority of
+//! authorities into a [`LeaseVerdict::leader_lost`] — the signal a
+//! standby waits for before bidding (see
+//! [`crate::coordinator::election`]).
 
 use crate::algo::NodeId;
-use crate::net::protocol::{read_response, write_request, Request, Response};
+use crate::coordinator::election;
+use crate::net::client::Conn;
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::net::SocketAddr;
 use std::time::Duration;
 
 /// Detection thresholds and probe budget.
@@ -68,12 +76,30 @@ struct NodeHealth {
     failures: u32,
 }
 
+/// Aggregated verdict of one coordinator-lease watch round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeaseVerdict {
+    /// Authorities that answered the query this round.
+    pub answered: usize,
+    /// Highest lease term observed anywhere.
+    pub term: u64,
+    /// Holder of the freshest *live* lease observed (0 = none live).
+    pub holder: u64,
+    /// True once the lease has read as vacant at a majority for
+    /// [`HealthConfig::dead_after`] consecutive rounds — the leader
+    /// stopped renewing long enough that a takeover is warranted.
+    pub leader_lost: bool,
+}
+
 /// Tick-driven heartbeat prober over the current membership.
 pub struct HealthMonitor {
     cfg: HealthConfig,
     nodes: HashMap<NodeId, NodeHealth>,
     /// Test hook: pending probe results to force-fail per node.
     injected: HashMap<NodeId, u32>,
+    /// Consecutive lease-watch rounds that read the lease as vacant at
+    /// a majority of authorities.
+    lease_strikes: u32,
     /// Total probes attempted (including injected failures).
     pub probes_sent: u64,
 }
@@ -85,6 +111,7 @@ impl HealthMonitor {
             cfg,
             nodes: HashMap::new(),
             injected: HashMap::new(),
+            lease_strikes: 0,
             probes_sent: 0,
         }
     }
@@ -167,26 +194,42 @@ impl HealthMonitor {
         }
         events
     }
+
+    /// Watch the coordinator lease the way members are watched: query
+    /// every authority (read-only `LEASE`, one fresh connection each,
+    /// concurrently), and declare the leader lost only after
+    /// [`HealthConfig::dead_after`] consecutive rounds in which a
+    /// majority of authorities answered and *none* reported a live
+    /// lease. An indeterminate round (fewer than a majority answered)
+    /// neither strikes nor absolves — a partitioned watcher must not
+    /// talk itself into a takeover it could never win.
+    pub fn lease_tick(&mut self, authorities: &[SocketAddr]) -> LeaseVerdict {
+        self.probes_sent += authorities.len() as u64;
+        // Same probe fan-out and the same liveness fold the bidding
+        // standby uses — the watcher's verdict and the bid gate can
+        // never judge a reply set differently.
+        let replies = election::fan_out(authorities, 0, 0, 0, self.cfg.timeout);
+        let answered = replies.len();
+        let (term, holder) = election::observe_replies(&replies);
+        let majority = authorities.len() / 2 + 1;
+        if holder != 0 {
+            self.lease_strikes = 0;
+        } else if answered >= majority {
+            self.lease_strikes += 1;
+        }
+        LeaseVerdict {
+            answered,
+            term,
+            holder,
+            leader_lost: self.lease_strikes >= self.cfg.dead_after,
+        }
+    }
 }
 
 /// One heartbeat round trip on a fresh connection, bounded by `timeout`
 /// at every step. Returns the node's (echoed epoch, key count).
 pub fn probe(addr: SocketAddr, epoch: u64, timeout: Duration) -> std::io::Result<(u64, u64)> {
-    let stream = TcpStream::connect_timeout(&addr, timeout)?;
-    stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(timeout))?;
-    stream.set_write_timeout(Some(timeout))?;
-    let mut writer = BufWriter::new(stream.try_clone()?);
-    write_request(&mut writer, &Request::Heartbeat { epoch })?;
-    writer.flush()?;
-    let mut reader = BufReader::new(stream);
-    match read_response(&mut reader)? {
-        Response::Alive { epoch, keys } => Ok((epoch, keys)),
-        other => Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("bad heartbeat response {other:?}"),
-        )),
-    }
+    Conn::connect_timeout(addr, timeout)?.heartbeat(epoch)
 }
 
 #[cfg(test)]
@@ -228,6 +271,36 @@ mod tests {
         // Once the membership drops it, the id is forgotten.
         assert!(mon.tick(&[], 1).is_empty());
         assert_eq!(mon.state_of(0), HealthState::Alive);
+    }
+
+    #[test]
+    fn lease_watch_declares_loss_only_after_the_threshold() {
+        use crate::coordinator::election::lease_request;
+        let servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
+        let addrs: Vec<SocketAddr> = servers.iter().map(|s| s.addr()).collect();
+        let mut mon = HealthMonitor::new(quick_cfg());
+        // No lease ever granted: vacant rounds strike toward loss.
+        for round in 1..=3u32 {
+            let v = mon.lease_tick(&addrs);
+            assert_eq!(v.holder, 0);
+            assert_eq!(v.leader_lost, round >= 3, "round {round}");
+        }
+        // A leader appears: one live observation absolves everything.
+        for &addr in &addrs {
+            let r = lease_request(addr, 1, 1, 10_000, Duration::from_millis(200)).unwrap();
+            assert!(r.granted);
+        }
+        let v = mon.lease_tick(&addrs);
+        assert_eq!((v.holder, v.term), (1, 1));
+        assert!(!v.leader_lost);
+        // Lease expires (short grant, no renewal): threshold re-arms.
+        for &addr in &addrs {
+            lease_request(addr, 1, 1, 30, Duration::from_millis(200)).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(!mon.lease_tick(&addrs).leader_lost, "one vacant round is grace");
+        mon.lease_tick(&addrs);
+        assert!(mon.lease_tick(&addrs).leader_lost, "third vacant round is loss");
     }
 
     #[test]

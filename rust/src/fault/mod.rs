@@ -27,9 +27,15 @@
 //! `audit_replication`); the failover scenarios in
 //! [`crate::loadgen`] measure time-to-detect and time-to-full-RF end to
 //! end (`BENCH_failover.json`).
+//!
+//! Since the coordinator-failover plane, the detector also watches the
+//! *coordinator lease* ([`HealthMonitor::lease_tick`]): the same
+//! consecutive-miss threshold that declares a storage node dead
+//! declares the leader's lease lost, gating a standby's takeover bid
+//! (see [`crate::coordinator::election`]).
 
 pub mod health;
 pub mod repair;
 
-pub use health::{HealthConfig, HealthEvent, HealthMonitor, HealthState};
+pub use health::{HealthConfig, HealthEvent, HealthMonitor, HealthState, LeaseVerdict};
 pub use repair::{RepairQueue, RepairTick, ReplicationAudit};

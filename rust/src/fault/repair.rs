@@ -49,6 +49,14 @@ impl RepairQueue {
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
+
+    /// The queued keys in FIFO order, without draining them — the
+    /// control-state export a standby coordinator shadows, so a
+    /// promoted leader resumes paced repair from exactly where the
+    /// dead one stopped instead of re-auditing from zero.
+    pub fn snapshot(&self) -> Vec<DatumId> {
+        self.queue.iter().copied().collect()
+    }
 }
 
 /// What one paced repair batch did.
@@ -115,6 +123,8 @@ mod tests {
         q.enqueue([3, 1, 2]);
         q.enqueue([1, 4]); // 1 already queued
         assert_eq!(q.pending(), 4);
+        assert_eq!(q.snapshot(), vec![3, 1, 2, 4], "snapshot preserves FIFO order");
+        assert_eq!(q.pending(), 4, "snapshot must not drain");
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), Some(1));
         // Popped keys may be re-enqueued (a second failure hit them).

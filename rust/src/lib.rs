@@ -11,9 +11,12 @@
 //!   ([`storage`]: `ShardedStore`, highest-version-wins writes), the
 //!   coordinator ([`coordinator`]), a
 //!   fault-tolerance plane ([`fault`]: quorum I/O, heartbeat failure
-//!   detection, background repair), the paper's complete evaluation
-//!   harness ([`experiments`]) and a closed-loop throughput harness
-//!   ([`loadgen`]).
+//!   detection, background repair), a coordinator-failover plane
+//!   ([`coordinator::election`] leased leadership +
+//!   [`coordinator::replicate`] control-state replication, so the
+//!   coordinator role survives its own process dying), the paper's
+//!   complete evaluation harness ([`experiments`]) and a closed-loop
+//!   throughput harness ([`loadgen`]).
 //! - **L2/L1 (build-time python, `python/compile/`)**: JAX batch-placement
 //!   graphs with Pallas kernels, AOT-lowered to HLO text and executed from
 //!   Rust via PJRT ([`runtime`]). Python never runs on the request path.

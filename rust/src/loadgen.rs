@@ -11,10 +11,13 @@
 //! successive PRs can regress against a recorded trajectory.
 
 use crate::algo::{NodeId, Placer};
+use crate::coordinator::election::{LeaderLease, LeaseConfig, Role};
+use crate::coordinator::replicate::StateReplicator;
 use crate::coordinator::Coordinator;
 use crate::fault::health::{HealthConfig, HealthEvent, HealthMonitor};
 use crate::net::pool::{BatchResult, PoolConfig, RouterPool};
 use crate::net::router::Router;
+use crate::net::server::NodeServer;
 use crate::stats::Summary;
 use crate::util::json::Json;
 use crate::workload::{value_for, Op, Scenario, FAILOVER_VALUE_SIZE};
@@ -445,6 +448,10 @@ pub struct FailoverReport {
     pub nodes: u32,
     pub replicas: usize,
     pub write_quorum: usize,
+    /// Replicas probed per GET while the fault story ran — recorded in
+    /// the per-result JSON so a trajectory can never silently measure a
+    /// different read quorum than it claims.
+    pub read_quorum: usize,
     /// Ops driven while the fault story played out.
     pub ops: u64,
     pub hits: u64,
@@ -478,12 +485,13 @@ pub struct FailoverReport {
 impl FailoverReport {
     pub fn line(&self) -> String {
         format!(
-            "{:<9} rf={} q={} {:>8} ops  failover {:>4}  degraded {:>4}  rrep {:>4}  \
+            "{:<9} rf={} wq={} rq={} {:>8} ops  failover {:>4}  degraded {:>4}  rrep {:>4}  \
              lost {:>2}  detect {:>6.1} ms  full-rf {:>7.1} ms  repaired {:>5}  \
              audit {}/{}  epochs {}..{}",
             self.scenario,
             self.replicas,
             self.write_quorum,
+            self.read_quorum,
             self.ops,
             self.failovers,
             self.degraded_writes,
@@ -505,6 +513,7 @@ impl FailoverReport {
             ("nodes", Json::Num(self.nodes as f64)),
             ("replicas", Json::Num(self.replicas as f64)),
             ("write_quorum", Json::Num(self.write_quorum as f64)),
+            ("read_quorum", Json::Num(self.read_quorum as f64)),
             ("ops", Json::Num(self.ops as f64)),
             ("hits", Json::Num(self.hits as f64)),
             ("failovers", Json::Num(self.failovers as f64)),
@@ -702,6 +711,7 @@ pub fn run_failover(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
         nodes: cfg.nodes,
         replicas: cfg.replicas,
         write_quorum: cfg.write_quorum,
+        read_quorum: cfg.read_quorum,
         ops: res.ops,
         hits: res.hits,
         failovers: res.failovers,
@@ -791,6 +801,7 @@ pub fn run_flapping(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
         nodes: cfg.nodes,
         replicas: cfg.replicas,
         write_quorum: cfg.write_quorum,
+        read_quorum: cfg.read_quorum,
         ops: res.ops,
         hits: res.hits,
         failovers: res.failovers,
@@ -850,6 +861,435 @@ pub fn write_failover_json(
         ("suspect_after", Json::Num(cfg.suspect_after as f64)),
         ("dead_after", Json::Num(cfg.dead_after as f64)),
         ("probe_interval_ms", Json::Num(cfg.probe_interval_ms as f64)),
+        ("repair_batch", Json::Num(cfg.repair_batch as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("results", Json::Arr(results)),
+    ];
+    std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Coordinator-failover scenario: kill the *leader* mid-churn.
+// ---------------------------------------------------------------------
+
+/// Configuration for `asura bench-coord-failover`.
+#[derive(Clone, Debug)]
+pub struct CoordFailoverConfig {
+    pub nodes: u32,
+    pub replicas: usize,
+    pub write_quorum: usize,
+    pub read_quorum: usize,
+    pub keys: u64,
+    /// Ops per traffic round (rounds repeat until the story completes).
+    pub read_ops: u64,
+    pub workers: usize,
+    pub pipeline_depth: usize,
+    /// Storage nodes doubling as lease/state authorities (the first
+    /// `authorities` joined nodes; must be fewer than `nodes` so the
+    /// crashed storage node is never an authority).
+    pub authorities: usize,
+    /// Lease TTL — the promotion floor: a standby cannot take over
+    /// faster than this.
+    pub lease_ttl_ms: u64,
+    /// Control-loop cadence (lease renewals, lease watching, probes).
+    pub tick_ms: u64,
+    /// Consecutive vacant lease observations before a standby bids
+    /// (and consecutive missed heartbeats before a storage-node
+    /// death — the shared `HealthConfig::dead_after`).
+    pub dead_after: u32,
+    /// Per-probe connect/read/write timeout.
+    pub probe_timeout_ms: u64,
+    /// Keys re-replicated per repair batch.
+    pub repair_batch: usize,
+    pub seed: u64,
+    pub out_json: Option<String>,
+}
+
+impl Default for CoordFailoverConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 6,
+            replicas: 3,
+            write_quorum: 2,
+            read_quorum: 2,
+            keys: 1_200,
+            read_ops: 3_000,
+            workers: 4,
+            pipeline_depth: 16,
+            authorities: 3,
+            lease_ttl_ms: 300,
+            tick_ms: 20,
+            dead_after: 3,
+            probe_timeout_ms: 500,
+            repair_batch: 96,
+            seed: 0xC0F0,
+            out_json: Some("BENCH_coord_failover.json".to_string()),
+        }
+    }
+}
+
+/// One measured coordinator hand-off.
+#[derive(Clone, Debug)]
+pub struct CoordFailoverReport {
+    pub scenario: String,
+    pub nodes: u32,
+    pub replicas: usize,
+    pub write_quorum: usize,
+    pub read_quorum: usize,
+    pub authorities: usize,
+    /// Ops driven across the whole story (leader alive, interregnum,
+    /// promoted successor).
+    pub ops: u64,
+    pub hits: u64,
+    pub ops_per_sec: f64,
+    pub failovers: u64,
+    pub retried: u64,
+    pub degraded_writes: u64,
+    pub read_repairs: u64,
+    /// Reads that found nothing anywhere — must be 0: a leader crash
+    /// may stall the control plane, never the data.
+    pub lost: u64,
+    /// Term the crashed leader held / the successor won.
+    pub old_term: u64,
+    pub new_term: u64,
+    /// Leader kill → the successor's bumped epoch published (includes
+    /// the lease TTL wait, the election, the state fetch, and the
+    /// promotion itself — the full control-plane outage).
+    pub time_to_new_epoch_ms: f64,
+    /// Keys acked by pool workers that the dead leader never drained —
+    /// the writes a naive hand-off would strand.
+    pub stranded_writes: u64,
+    /// Stranded keys the successor's reconcile drain converged.
+    pub reconciled_writes: u64,
+    /// Repair-queue depth inherited from the shadowed state — the work
+    /// the successor resumed instead of re-auditing from zero.
+    pub resumed_repair_pending: u64,
+    /// Keys restored to full RF (crashed leader + successor combined).
+    pub repaired_keys: u64,
+    /// Keys with no surviving replica — must be 0.
+    pub lost_keys: u64,
+    pub audit_keys: u64,
+    pub audit_under: u64,
+    pub epochs: (u64, u64),
+}
+
+impl CoordFailoverReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<14} rf={} wq={} rq={} {:>8} ops {:>8.0} ops/s  lost {:>2}  \
+             term {}->{}  new-epoch {:>6.1} ms  stranded {:>4} (reconciled {:>4})  \
+             resumed-repair {:>4}  repaired {:>5}  audit {}/{}  epochs {}..{}",
+            self.scenario,
+            self.replicas,
+            self.write_quorum,
+            self.read_quorum,
+            self.ops,
+            self.ops_per_sec,
+            self.lost,
+            self.old_term,
+            self.new_term,
+            self.time_to_new_epoch_ms,
+            self.stranded_writes,
+            self.reconciled_writes,
+            self.resumed_repair_pending,
+            self.repaired_keys,
+            self.audit_keys - self.audit_under,
+            self.audit_keys,
+            self.epochs.0,
+            self.epochs.1
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("write_quorum", Json::Num(self.write_quorum as f64)),
+            ("read_quorum", Json::Num(self.read_quorum as f64)),
+            ("authorities", Json::Num(self.authorities as f64)),
+            ("ops", Json::Num(self.ops as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("ops_per_sec", Json::Num(self.ops_per_sec)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("retried", Json::Num(self.retried as f64)),
+            ("degraded_writes", Json::Num(self.degraded_writes as f64)),
+            ("read_repairs", Json::Num(self.read_repairs as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("old_term", Json::Num(self.old_term as f64)),
+            ("new_term", Json::Num(self.new_term as f64)),
+            ("time_to_new_epoch_ms", Json::Num(self.time_to_new_epoch_ms)),
+            ("stranded_writes", Json::Num(self.stranded_writes as f64)),
+            ("reconciled_writes", Json::Num(self.reconciled_writes as f64)),
+            (
+                "resumed_repair_pending",
+                Json::Num(self.resumed_repair_pending as f64),
+            ),
+            ("repaired_keys", Json::Num(self.repaired_keys as f64)),
+            ("lost_keys", Json::Num(self.lost_keys as f64)),
+            ("audit_keys", Json::Num(self.audit_keys as f64)),
+            ("audit_under", Json::Num(self.audit_under as f64)),
+            ("epoch_min", Json::Num(self.epochs.0 as f64)),
+            ("epoch_max", Json::Num(self.epochs.1 as f64)),
+        ])
+    }
+}
+
+/// Kill-the-leader-mid-churn: a leased leader coordinates live traffic
+/// and a storage-node death; with its repair queue still half-drained
+/// it crashes; the standby watches the lease through the failure
+/// detector, wins it at a bumped term, promotes from the replicated
+/// control state, republishes the epoch, reconciles the interregnum's
+/// writes by version comparison, and resumes paced repair from the
+/// shadowed queue. Measures time-to-new-epoch and the stranded-write
+/// count; gates on zero lost reads, zero lost keys, and a clean
+/// post-story holder audit.
+///
+/// Storage nodes are harness-owned (`join_external`), as in a real
+/// deployment — they must outlive the crashed leader process.
+pub fn run_coord_failover(cfg: &CoordFailoverConfig) -> anyhow::Result<CoordFailoverReport> {
+    anyhow::ensure!(
+        (cfg.nodes as usize) > cfg.replicas,
+        "need more nodes than replicas to survive a death"
+    );
+    anyhow::ensure!(
+        cfg.authorities >= 1 && cfg.authorities < cfg.nodes as usize,
+        "authorities must be within 1..nodes (the killed node is never an authority)"
+    );
+    anyhow::ensure!(
+        cfg.write_quorum >= 1 && cfg.write_quorum <= cfg.replicas,
+        "write quorum must be within 1..=replicas"
+    );
+    anyhow::ensure!(
+        cfg.read_quorum >= 1 && cfg.read_quorum <= cfg.replicas,
+        "read quorum must be within 1..=replicas"
+    );
+    anyhow::ensure!(cfg.dead_after >= 1, "dead_after must be >= 1");
+
+    let mut servers: Vec<NodeServer> = Vec::with_capacity(cfg.nodes as usize);
+    for _ in 0..cfg.nodes {
+        servers.push(NodeServer::spawn()?);
+    }
+    let mut leader = Coordinator::new(cfg.replicas);
+    for (i, s) in servers.iter().enumerate() {
+        leader.join_external(i as u32, 1.0, s.addr())?;
+    }
+    let authorities: Vec<std::net::SocketAddr> = servers
+        .iter()
+        .take(cfg.authorities)
+        .map(|s| s.addr())
+        .collect();
+    let lease_cfg = LeaseConfig {
+        ttl: Duration::from_millis(cfg.lease_ttl_ms.max(1)),
+        timeout: Duration::from_millis(cfg.probe_timeout_ms.max(1)),
+    };
+    let health_cfg = HealthConfig {
+        suspect_after: 1,
+        dead_after: cfg.dead_after,
+        timeout: Duration::from_millis(cfg.probe_timeout_ms.max(1)),
+    };
+    let mut leader_lease = LeaderLease::new(1, authorities.clone(), lease_cfg.clone());
+    let old_term = match leader_lease.tick() {
+        Role::Leader { term } => term,
+        r => anyhow::bail!("initial leader election failed: {r:?}"),
+    };
+    leader.set_term(old_term);
+
+    let scenario = Scenario::Failover {
+        keys: cfg.keys,
+        read_ops: cfg.read_ops,
+        write_every: 8,
+    };
+    for &k in &scenario.preload_keys(cfg.seed) {
+        leader.set(k, &value_for(k, FAILOVER_VALUE_SIZE))?;
+    }
+    let replicator = StateReplicator::new(authorities.clone(), lease_cfg.timeout);
+    replicator.publish(&leader.export_control_state())?;
+
+    let pool = leader.connect_pool(PoolConfig {
+        workers: cfg.workers,
+        pipeline_depth: cfg.pipeline_depth,
+        verify_hits: true,
+        write_quorum: cfg.write_quorum,
+        read_quorum: cfg.read_quorum,
+        ..PoolConfig::default() // registry + hints + clock wired by connect_pool
+    })?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
+
+    // Act 1 — a storage node (never an authority) crashes under load;
+    // the leader detects it, republishes, and starts paced repair.
+    let victim = cfg.nodes - 1;
+    servers[victim as usize].kill();
+    let mut monitor = HealthMonitor::new(health_cfg.clone());
+    let t_node_kill = Instant::now();
+    loop {
+        let events = monitor.tick(&leader.node_addrs(), leader.epoch());
+        let died = events.iter().any(|e| matches!(e, HealthEvent::Died(_)));
+        leader.apply_health_events(&events)?;
+        if died {
+            break;
+        }
+        anyhow::ensure!(
+            t_node_kill.elapsed() < Duration::from_secs(30),
+            "storage-node death never detected"
+        );
+        leader_lease.tick(); // the leader keeps renewing while it waits
+        std::thread::sleep(Duration::from_millis(cfg.tick_ms));
+    }
+    // One paced batch only: the leader must die with the queue
+    // half-drained, so "repair resumes from the shadowed queue" is a
+    // measured claim rather than a vacuous one.
+    let mut repaired = leader.repair_step(cfg.repair_batch)?.repaired as u64;
+    anyhow::ensure!(
+        leader.repair_pending() > 0,
+        "repair drained before the hand-off; shrink repair_batch or grow keys"
+    );
+    replicator.publish(&leader.export_control_state())?;
+
+    // Act 2 — the leader crashes: it stops renewing, its conns drop.
+    let handles = leader.handles();
+    drop(leader);
+    drop(leader_lease);
+    let t_kill = Instant::now();
+
+    // Act 3 — the standby watches the lease through the failure
+    // detector and bids only once it reads as lost.
+    let mut watch = HealthMonitor::new(health_cfg);
+    let mut standby_lease = LeaderLease::new(2, authorities.clone(), lease_cfg);
+    let new_term = loop {
+        let verdict = watch.lease_tick(&authorities);
+        if verdict.leader_lost {
+            if let Role::Leader { term } = standby_lease.tick() {
+                break term;
+            }
+        }
+        anyhow::ensure!(
+            t_kill.elapsed() < Duration::from_secs(30),
+            "standby never won the lease"
+        );
+        std::thread::sleep(Duration::from_millis(cfg.tick_ms));
+    };
+    let state = replicator
+        .fetch_latest()?
+        .ok_or_else(|| anyhow::anyhow!("no replicated control state to promote from"))?;
+    let stranded_writes = handles.registry.len() as u64;
+    let mut coord = Coordinator::promote_from(&state, new_term, handles)?;
+    let time_to_new_epoch_ms = t_kill.elapsed().as_secs_f64() * 1e3;
+    let resumed_repair_pending = coord.repair_pending() as u64;
+    let reconciled_writes = coord.reconcile_writes() as u64;
+
+    // Act 4 — the successor finishes what the dead leader started.
+    let mut lost_keys = 0u64;
+    let t_repair = Instant::now();
+    while coord.repair_pending() > 0 {
+        anyhow::ensure!(
+            t_repair.elapsed() < Duration::from_secs(60),
+            "post-promotion repair did not converge ({} pending)",
+            coord.repair_pending()
+        );
+        let tick = coord.repair_step(cfg.repair_batch)?;
+        repaired += tick.repaired as u64;
+        lost_keys += tick.lost as u64;
+    }
+    stop.store(true, Ordering::Release);
+    let res = join_driver(driver)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    let audit = {
+        let mut attempt = 0;
+        loop {
+            let audit = coord.audit_replication()?;
+            if audit.is_full() {
+                break audit;
+            }
+            attempt += 1;
+            anyhow::ensure!(
+                attempt <= 5,
+                "audit still finds {} under-replicated keys after the hand-off",
+                audit.under_replicated()
+            );
+            coord.enqueue_repair(audit.under_keys.iter().copied());
+            let t_post = Instant::now();
+            while coord.repair_pending() > 0 {
+                anyhow::ensure!(
+                    t_post.elapsed() < Duration::from_secs(60),
+                    "post-audit repair did not converge"
+                );
+                let tick = coord.repair_step(cfg.repair_batch)?;
+                repaired += tick.repaired as u64;
+                lost_keys += tick.lost as u64;
+            }
+        }
+    };
+    anyhow::ensure!(res.lost == 0, "{} reads lost across the hand-off", res.lost);
+    anyhow::ensure!(lost_keys == 0, "{lost_keys} keys lost across the hand-off");
+
+    Ok(CoordFailoverReport {
+        scenario: "coord_failover".to_string(),
+        nodes: cfg.nodes,
+        replicas: cfg.replicas,
+        write_quorum: cfg.write_quorum,
+        read_quorum: cfg.read_quorum,
+        authorities: cfg.authorities,
+        ops: res.ops,
+        hits: res.hits,
+        ops_per_sec: if wall_s > 0.0 { res.ops as f64 / wall_s } else { 0.0 },
+        failovers: res.failovers,
+        retried: res.retried,
+        degraded_writes: res.degraded_writes,
+        read_repairs: res.read_repairs,
+        lost: res.lost,
+        old_term,
+        new_term,
+        time_to_new_epoch_ms,
+        stranded_writes,
+        reconciled_writes,
+        resumed_repair_pending,
+        repaired_keys: repaired,
+        lost_keys,
+        audit_keys: audit.keys as u64,
+        audit_under: audit.under_replicated() as u64,
+        epochs: (res.epoch_min, res.epoch_max),
+    })
+}
+
+/// Run the coordinator-failover scenario, print its line, and emit
+/// `BENCH_coord_failover.json`.
+pub fn run_coord_failover_suite(
+    cfg: &CoordFailoverConfig,
+) -> anyhow::Result<Vec<CoordFailoverReport>> {
+    let report = run_coord_failover(cfg)?;
+    println!("{}", report.line());
+    let reports = vec![report];
+    if let Some(path) = &cfg.out_json {
+        write_coord_failover_json(path, cfg, &reports)?;
+        println!("wrote {path}");
+    }
+    Ok(reports)
+}
+
+/// Serialize the coordinator-failover suite to its trajectory JSON.
+pub fn write_coord_failover_json(
+    path: &str,
+    cfg: &CoordFailoverConfig,
+    reports: &[CoordFailoverReport],
+) -> anyhow::Result<()> {
+    let results: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+    let fields = vec![
+        ("bench", Json::Str("coord_failover".to_string())),
+        ("nodes", Json::Num(cfg.nodes as f64)),
+        ("replicas", Json::Num(cfg.replicas as f64)),
+        ("write_quorum", Json::Num(cfg.write_quorum as f64)),
+        ("read_quorum", Json::Num(cfg.read_quorum as f64)),
+        ("keys", Json::Num(cfg.keys as f64)),
+        ("read_ops", Json::Num(cfg.read_ops as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("authorities", Json::Num(cfg.authorities as f64)),
+        ("lease_ttl_ms", Json::Num(cfg.lease_ttl_ms as f64)),
+        ("tick_ms", Json::Num(cfg.tick_ms as f64)),
+        ("dead_after", Json::Num(cfg.dead_after as f64)),
         ("repair_batch", Json::Num(cfg.repair_batch as f64)),
         ("seed", Json::Num(cfg.seed as f64)),
         ("results", Json::Arr(results)),

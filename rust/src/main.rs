@@ -22,6 +22,13 @@
 //!               [--suspect-after N --dead-after N]  (quorum writes+reads,
 //!               [--repair-batch B --seed S]         read repair), emits
 //!               [--out BENCH_failover.json]         detect / full-RF times
+//! asura bench-coord-failover [--nodes N]            coordinator hand-off:
+//!               [--replicas R --quorum Q]           kill the leased leader
+//!               [--read-quorum Q --keys K --reads R] mid-churn; standby
+//!               [--authorities A --lease-ttl-ms T]  promotes from the
+//!               [--tick-ms T --dead-after N]        replicated state; emits
+//!               [--repair-batch B --seed S]         time-to-new-epoch +
+//!               [--out BENCH_coord_failover.json]   stranded-write count
 //! asura node    --port P                            standalone storage node
 //! asura place   --id X --nodes N [--algo asura|chash|straw]
 //! asura info    [--artifacts DIR]                   PJRT + artifact info
@@ -44,6 +51,7 @@ fn main() {
         "serve" => run_serve(&args),
         "bench-serve" => run_bench_serve(&args),
         "bench-failover" => run_bench_failover(&args),
+        "bench-coord-failover" => run_bench_coord_failover(&args),
         "node" => run_node(&args),
         "place" => run_place(&args),
         "info" => run_info(&args),
@@ -351,6 +359,58 @@ fn run_bench_failover(args: &Args) -> anyhow::Result<()> {
         cfg.repair_batch
     );
     let reports = asura::loadgen::run_failover_suite(&cfg)?;
+    anyhow::ensure!(!reports.is_empty(), "no scenarios ran");
+    Ok(())
+}
+
+/// Coordinator-failover harness: kill the leased leader mid-churn, let
+/// the standby promote from the replicated control state, and emit
+/// time-to-new-epoch + stranded-write count to
+/// `BENCH_coord_failover.json`.
+fn run_bench_coord_failover(args: &Args) -> anyhow::Result<()> {
+    let default = asura::loadgen::CoordFailoverConfig::default();
+    let cfg = asura::loadgen::CoordFailoverConfig {
+        nodes: args.get_u64("nodes", default.nodes as u64) as u32,
+        replicas: args.get_u64("replicas", default.replicas as u64) as usize,
+        write_quorum: args.get_u64("quorum", default.write_quorum as u64) as usize,
+        read_quorum: args.get_u64("read-quorum", default.read_quorum as u64) as usize,
+        keys: args.get_u64("keys", default.keys),
+        read_ops: args.get_u64("reads", default.read_ops),
+        workers: args.get_u64("workers", default.workers as u64) as usize,
+        pipeline_depth: args.get_u64("depth", default.pipeline_depth as u64) as usize,
+        authorities: args.get_u64("authorities", default.authorities as u64) as usize,
+        lease_ttl_ms: args.get_u64("lease-ttl-ms", default.lease_ttl_ms),
+        tick_ms: args.get_u64("tick-ms", default.tick_ms),
+        dead_after: args.get_u64("dead-after", default.dead_after as u64) as u32,
+        probe_timeout_ms: args.get_u64("probe-timeout-ms", default.probe_timeout_ms),
+        repair_batch: args.get_u64("repair-batch", default.repair_batch as u64) as usize,
+        seed: args.get_u64("seed", default.seed),
+        out_json: Some(
+            args.get_or(
+                "out",
+                default.out_json.as_deref().unwrap_or("BENCH_coord_failover.json"),
+            )
+            .to_string(),
+        ),
+    };
+    anyhow::ensure!(
+        cfg.workers >= 1 && cfg.pipeline_depth >= 1,
+        "--workers and --depth must be >= 1"
+    );
+    println!(
+        "bench-coord-failover: {} nodes, rf={}, wq={}, rq={}, {} keys, {} reads/round, \
+         {} authorities, lease ttl {} ms, tick {} ms",
+        cfg.nodes,
+        cfg.replicas,
+        cfg.write_quorum,
+        cfg.read_quorum,
+        cfg.keys,
+        cfg.read_ops,
+        cfg.authorities,
+        cfg.lease_ttl_ms,
+        cfg.tick_ms
+    );
+    let reports = asura::loadgen::run_coord_failover_suite(&cfg)?;
     anyhow::ensure!(!reports.is_empty(), "no scenarios ran");
     Ok(())
 }

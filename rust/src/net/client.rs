@@ -1,6 +1,8 @@
 //! Client connection to a storage-node server.
 
-use super::protocol::{read_response, write_request, Request, Response, VdelOutcome, VsetAck};
+use super::protocol::{
+    read_response, write_request, LeaseReply, Request, Response, VdelOutcome, VsetAck,
+};
 use crate::storage::Version;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -19,6 +21,40 @@ impl Conn {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
         })
+    }
+
+    /// Like [`Self::connect`] but fully bounded: the TCP connect *and*
+    /// every subsequent read/write on the connection observe `timeout`,
+    /// so a peer that is down — or one that accepts the handshake and
+    /// then never answers (SIGSTOP'd, deadlocked serve thread) — fails
+    /// within the bound instead of stalling the caller. The one-shot
+    /// probes (heartbeat, lease, control-state replication) and the
+    /// promotion path build every connection this way.
+    pub fn connect_timeout(
+        addr: SocketAddr,
+        timeout: std::time::Duration,
+    ) -> std::io::Result<Conn> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(Conn {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Re-bound (or, with `None`, lift) the connection's read/write
+    /// timeouts. A *kept* connection must not carry a per-op timeout:
+    /// a mid-response timeout leaves the peer's late reply buffered in
+    /// flight, and the next request on the conn would read the
+    /// previous request's response. The promotion path connects with a
+    /// bound to prove reachability, then lifts it for the adopted
+    /// control connection's lifetime.
+    pub fn set_io_timeout(&self, timeout: Option<std::time::Duration>) -> std::io::Result<()> {
+        let stream = self.writer.get_ref();
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)
     }
 
     fn call(&mut self, req: &Request) -> std::io::Result<Response> {
@@ -124,6 +160,44 @@ impl Conn {
     ) -> std::io::Result<(Vec<u64>, Option<u64>)> {
         match self.call(&Request::KeysChunk { cursor, limit })? {
             Response::KeyPage { keys, next } => Ok((keys, next)),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// Coordinator-lease bid/renewal against this node as an authority
+    /// (`ttl_ms == 0` = read-only query). See
+    /// [`crate::coordinator::election`].
+    pub fn lease(&mut self, candidate: u64, term: u64, ttl_ms: u64) -> std::io::Result<LeaseReply> {
+        match self.call(&Request::Lease {
+            candidate,
+            term,
+            ttl_ms,
+        })? {
+            Response::Leased { granted, term, holder, remaining_ms } => Ok(LeaseReply {
+                granted,
+                term,
+                holder,
+                remaining_ms,
+            }),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// Replicate a control-state blob at `term`. Returns
+    /// `(applied, stored_term)`; a refusal means the node already holds
+    /// a newer-term blob.
+    pub fn state_put(&mut self, term: u64, value: Vec<u8>) -> std::io::Result<(bool, u64)> {
+        match self.call(&Request::StatePut { term, value })? {
+            Response::StateAck { applied, term } => Ok((applied, term)),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// Fetch the latest replicated control-state blob (term + bytes).
+    pub fn state_get(&mut self) -> std::io::Result<Option<(u64, Vec<u8>)>> {
+        match self.call(&Request::StateGet)? {
+            Response::StateValue { term, value } => Ok(Some((term, value))),
+            Response::NotFound => Ok(None),
             other => Err(bad(other)),
         }
     }

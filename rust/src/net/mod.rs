@@ -18,3 +18,27 @@ pub use pool::{BatchResult, PoolConfig, RouterPool};
 pub use protocol::{Request, Response};
 pub use router::Router;
 pub use server::NodeServer;
+
+/// Run `f` once per item concurrently — one scoped thread each — and
+/// collect the results in item order. The one fan-out/join scaffold
+/// every peer-probing round shares (lease bids and queries,
+/// control-state publish/fetch, promotion-time member reconnects): a
+/// partitioned peer costs one timeout per *round*, not one per peer,
+/// and a future change to the fan-out policy (thread caps, panic
+/// handling) lands in exactly one place.
+pub(crate) fn scatter<I: Copy + Send, T: Send>(
+    items: &[I],
+    f: impl Fn(I) -> T + Send + Sync,
+) -> Vec<T> {
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .iter()
+            .map(|&item| s.spawn(move || f(item)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scatter thread panicked"))
+            .collect()
+    })
+}

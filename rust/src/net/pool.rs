@@ -36,7 +36,16 @@
 //!   (see `Coordinator::connect_pool`), every acked SET key is written
 //!   back to the coordinator, so migration and repair planning cover
 //!   pool-written data — writes no longer strand on their old holders
-//!   when they race a rebalance.
+//!   when they race a rebalance;
+//! - **a coordinator hand-off is invisible to the pool**: workers
+//!   subscribe to a [`SnapshotCell`], not to a coordinator, so during
+//!   a leader crash the data plane keeps serving under the last
+//!   published epoch, and a promoted standby that adopts the cell (and
+//!   the shared registry/clock — see
+//!   `Coordinator::promote_from`) picks the workers up mid-flight: its
+//!   bumped epoch arrives like any rebalance epoch, and keys acked
+//!   during the interregnum reach it through the same registry Arc
+//!   (pinned by `pool_survives_coordinator_handoff`).
 
 use super::client::Conn;
 use super::protocol::{Request, Response};
@@ -913,6 +922,51 @@ mod tests {
         let sets: Vec<Op> = (0..100u64).map(|key| Op::Set { key, size: 4 }).collect();
         pool.run(sets).unwrap();
         assert_eq!(coord.key_registry().len(), 100);
+    }
+
+    #[test]
+    fn pool_survives_coordinator_handoff() {
+        // The pool must not notice a leader change: it keeps serving
+        // through the interregnum (no publisher at all) and converges
+        // onto the promoted coordinator's bumped epoch like any other
+        // publication. Nodes are harness-owned so they outlive the
+        // crashed leader.
+        use crate::net::server::NodeServer;
+        let servers: Vec<NodeServer> = (0..4).map(|_| NodeServer::spawn().unwrap()).collect();
+        let mut leader = Coordinator::new(2);
+        for (i, s) in servers.iter().enumerate() {
+            leader.join_external(i as u32, 1.0, s.addr()).unwrap();
+        }
+        let pool = leader
+            .connect_pool(PoolConfig {
+                workers: 2,
+                pipeline_depth: 8,
+                verify_hits: true,
+                ..PoolConfig::default()
+            })
+            .unwrap();
+        let sets: Vec<Op> = (0..200u64).map(|key| Op::Set { key, size: 8 }).collect();
+        assert_eq!(pool.run(sets).unwrap().lost, 0);
+        let state = leader.export_control_state();
+        let handles = leader.handles();
+        let old_epoch = leader.epoch();
+        drop(leader); // leader crash
+
+        // Interregnum: nobody publishes, the pool still serves.
+        let gets: Vec<Op> = (0..200u64).map(|key| Op::Get { key }).collect();
+        let res = pool.run(gets.clone()).unwrap();
+        assert_eq!((res.hits, res.lost), (200, 0));
+        // Writes acked now reach the future leader via the shared
+        // registry Arc.
+        pool.run(vec![Op::Set { key: 777, size: 8 }]).unwrap();
+
+        let mut promoted = Coordinator::promote_from(&state, 1, handles).unwrap();
+        assert_eq!(promoted.reconcile_writes(), 1, "interregnum write absorbed");
+        let res = pool.run(gets).unwrap();
+        assert_eq!((res.hits, res.lost), (200, 0));
+        assert_eq!(res.epoch_max, old_epoch + 1, "pool converged on the hand-off epoch");
+        assert_eq!(promoted.key_count(), 201);
+        assert_eq!(promoted.verify_all_readable().unwrap(), 201);
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! HEARTBEAT <epoch-hex>\n                -> ALIVE <epoch-hex> <keys>\n
 //! KEYS\n                                 -> KEYS <n> <key-hex>...\n
 //! KEYSC <limit-hex> [<cursor-hex>]\n     -> KEYSC <n> <next-hex|-> <key-hex>...\n
+//! LEASE <cand-hex> <term-hex> <ttl-ms-hex>\n
+//!                                        -> LEASED <1|0> <term-hex> <holder-hex> <remain-ms-hex>\n
+//! STATE <term-hex> <len>\n<len bytes>\n  -> SSTORED <1|0> <term-hex>\n
+//! STATE\n                                -> SVALUE <term-hex> <len>\n<bytes>\n | NOT_FOUND\n
 //! PING\n                                 -> PONG\n
 //! QUIT\n                                 -> (close)
 //! ```
@@ -39,6 +43,20 @@
 //! tests; the repair plane's holder audits page through `KEYSC`, whose
 //! cursor is the last key of the previous page (`-` = walk complete;
 //! see [`crate::storage::ShardedStore::keys_page`]).
+//!
+//! `LEASE`/`STATE` are the coordinator-failover control ops (see
+//! [`crate::coordinator::election`] and
+//! [`crate::coordinator::replicate`]): storage nodes act as the lease
+//! authorities and the replicated home of the leader's control state.
+//! A `LEASE` bid names the candidate, its term, and the lease TTL
+//! (`ttl == 0` is a read-only query that never grants); the node grants
+//! a renewal to the current holder at the same-or-higher term, or a
+//! takeover once the held lease has expired at a strictly higher term,
+//! and otherwise echoes the incumbent. `STATE` with a term and payload
+//! stores the leader's serialized control state (applied iff the term
+//! is at least the stored one — a deposed leader's late publish can
+//! never clobber its successor's); bare `STATE` reads the latest blob
+//! back.
 
 use crate::storage::Version;
 use std::io::{BufRead, Write};
@@ -76,6 +94,21 @@ pub enum Request {
         cursor: Option<u64>,
         limit: u64,
     },
+    /// Coordinator-lease bid/renewal (`ttl_ms == 0` = read-only query
+    /// that never grants).
+    Lease {
+        candidate: u64,
+        term: u64,
+        ttl_ms: u64,
+    },
+    /// Replicate the leader's control-state blob at `term` (applied iff
+    /// `term` is at least the stored state's term).
+    StatePut {
+        term: u64,
+        value: Vec<u8>,
+    },
+    /// Fetch the latest replicated control-state blob.
+    StateGet,
     Ping,
     Quit,
 }
@@ -119,6 +152,27 @@ pub enum Response {
         keys: Vec<u64>,
         next: Option<u64>,
     },
+    /// `LEASE` outcome: whether the bid was granted, plus the lease the
+    /// node holds after the call (the bidder's own on a grant, the
+    /// incumbent's on a refusal). `holder == 0` means no lease has ever
+    /// been granted.
+    Leased {
+        granted: bool,
+        term: u64,
+        holder: u64,
+        remaining_ms: u64,
+    },
+    /// `STATE` put outcome: `applied == false` means a newer-term blob
+    /// is already stored; `term` echoes what the node holds now.
+    StateAck {
+        applied: bool,
+        term: u64,
+    },
+    /// `STATE` get hit: the stored control-state blob and its term.
+    StateValue {
+        term: u64,
+        value: Vec<u8>,
+    },
     Pong,
     Error(String),
 }
@@ -136,6 +190,18 @@ pub struct VsetAck {
     /// feed this through [`crate::storage::WriteClock::observe`] so a
     /// lagging clock catches up.
     pub version: Version,
+}
+
+/// Outcome of a coordinator-lease bid (`LEASE`), as seen by a
+/// candidate. On a grant, `term`/`holder` name the candidate's own
+/// lease; on a refusal they name the incumbent the candidate must wait
+/// out (`remaining_ms` of TTL left at the authority).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeaseReply {
+    pub granted: bool,
+    pub term: u64,
+    pub holder: u64,
+    pub remaining_ms: u64,
 }
 
 /// Outcome of a version-guarded delete (`VDEL`), as seen by a client.
@@ -162,6 +228,15 @@ fn parse_hex(p: Option<&str>, what: &str) -> std::io::Result<u64> {
 /// wire — a corrupt length field must never drive an unchecked
 /// multi-gigabyte allocation.
 const MAX_VALUE_LEN: usize = 64 << 20;
+
+/// Upper bound on one lease grant's TTL, shared by both sides of the
+/// wire: the authority clamps what it grants (a corrupt or hostile TTL
+/// must never overflow the expiry arithmetic or wedge the lease until
+/// reboot), and candidates clamp the local deadline they act on — the
+/// two must agree, or a leader configured past the cap would keep
+/// reading `is_leader() == true` after its authority-side lease
+/// expired, splitting the brain.
+pub const MAX_LEASE_TTL_MS: u64 = 3_600_000;
 
 /// Read a length-prefixed payload plus its trailing newline.
 fn read_value<R: BufRead>(r: &mut R, len: usize) -> std::io::Result<Vec<u8>> {
@@ -243,6 +318,29 @@ pub fn read_request<R: BufRead>(r: &mut R, line: &mut String) -> std::io::Result
             };
             Ok(Some(Request::KeysChunk { cursor, limit }))
         }
+        "LEASE" => {
+            let candidate = parse_hex(parts.next(), "bad candidate")?;
+            let term = parse_hex(parts.next(), "bad term")?;
+            let ttl_ms = parse_hex(parts.next(), "bad ttl")?;
+            Ok(Some(Request::Lease {
+                candidate,
+                term,
+                ttl_ms,
+            }))
+        }
+        "STATE" => match parts.next() {
+            // Bare `STATE` reads the stored blob back.
+            None => Ok(Some(Request::StateGet)),
+            Some(t) => {
+                let term = parse_hex(Some(t), "bad term")?;
+                let len: usize = parts
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| bad_data("bad len"))?;
+                let value = read_value(r, len)?;
+                Ok(Some(Request::StatePut { term, value }))
+            }
+        },
         "PING" => Ok(Some(Request::Ping)),
         "QUIT" => Ok(Some(Request::Quit)),
         other => Err(bad_data(&format!("unknown command {other:?}"))),
@@ -274,6 +372,15 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
             Some(c) => writeln!(w, "KEYSC {limit:x} {c:x}"),
             None => writeln!(w, "KEYSC {limit:x}"),
         },
+        Request::Lease { candidate, term, ttl_ms } => {
+            writeln!(w, "LEASE {candidate:x} {term:x} {ttl_ms:x}")
+        }
+        Request::StatePut { term, value } => {
+            writeln!(w, "STATE {term:x} {}", value.len())?;
+            w.write_all(value)?;
+            w.write_all(b"\n")
+        }
+        Request::StateGet => w.write_all(b"STATE\n"),
         Request::Ping => w.write_all(b"PING\n"),
         Request::Quit => w.write_all(b"QUIT\n"),
     }
@@ -325,6 +432,19 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
             for k in keys {
                 write!(w, " {k:x}")?;
             }
+            w.write_all(b"\n")
+        }
+        Response::Leased { granted, term, holder, remaining_ms } => writeln!(
+            w,
+            "LEASED {} {term:x} {holder:x} {remaining_ms:x}",
+            if *granted { 1 } else { 0 }
+        ),
+        Response::StateAck { applied, term } => {
+            writeln!(w, "SSTORED {} {term:x}", if *applied { 1 } else { 0 })
+        }
+        Response::StateValue { term, value } => {
+            writeln!(w, "SVALUE {term:x} {}", value.len())?;
+            w.write_all(value)?;
             w.write_all(b"\n")
         }
         Response::Pong => w.write_all(b"PONG\n"),
@@ -429,6 +549,41 @@ pub fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<Response> {
             }
             Ok(Response::KeyPage { keys, next })
         }
+        "LEASED" => {
+            let granted = match parts.next() {
+                Some("1") => true,
+                Some("0") => false,
+                _ => return Err(bad_data("bad LEASED flag")),
+            };
+            Ok(Response::Leased {
+                granted,
+                term: parse_hex(parts.next(), "bad term")?,
+                holder: parse_hex(parts.next(), "bad holder")?,
+                remaining_ms: parse_hex(parts.next(), "bad remaining")?,
+            })
+        }
+        "SSTORED" => {
+            let applied = match parts.next() {
+                Some("1") => true,
+                Some("0") => false,
+                _ => return Err(bad_data("bad SSTORED flag")),
+            };
+            Ok(Response::StateAck {
+                applied,
+                term: parse_hex(parts.next(), "bad term")?,
+            })
+        }
+        "SVALUE" => {
+            let term = parse_hex(parts.next(), "bad term")?;
+            let len: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| bad_data("bad len"))?;
+            Ok(Response::StateValue {
+                term,
+                value: read_value(r, len)?,
+            })
+        }
         "ERROR" => Ok(Response::Error(parts.collect::<Vec<_>>().join(" "))),
         other => Err(bad_data(&format!("bad response {other:?}"))),
     }
@@ -494,6 +649,25 @@ mod tests {
                 cursor: Some(0xABC),
                 limit: 1,
             },
+            Request::Lease {
+                candidate: 1,
+                term: 7,
+                ttl_ms: 0x1F4,
+            },
+            Request::Lease {
+                candidate: u64::MAX,
+                term: 0,
+                ttl_ms: 0,
+            },
+            Request::StatePut {
+                term: 3,
+                value: b"ctrl\n\0blob".to_vec(),
+            },
+            Request::StatePut {
+                term: u64::MAX,
+                value: vec![],
+            },
+            Request::StateGet,
             Request::Ping,
             Request::Quit,
         ] {
@@ -547,6 +721,34 @@ mod tests {
                 keys: vec![],
                 next: None,
             },
+            Response::Leased {
+                granted: true,
+                term: 2,
+                holder: 1,
+                remaining_ms: 0x1F4,
+            },
+            Response::Leased {
+                granted: false,
+                term: u64::MAX,
+                holder: 0,
+                remaining_ms: 0,
+            },
+            Response::StateAck {
+                applied: true,
+                term: 9,
+            },
+            Response::StateAck {
+                applied: false,
+                term: u64::MAX,
+            },
+            Response::StateValue {
+                term: 4,
+                value: b"line1\nline2\0".to_vec(),
+            },
+            Response::StateValue {
+                term: 0,
+                value: vec![],
+            },
             Response::Pong,
             Response::Error("boom".into()),
         ] {
@@ -565,6 +767,11 @@ mod tests {
         let mut r = BufReader::new(&b"VVALUE 1 1 99999999999\n"[..]);
         assert!(read_response(&mut r).is_err());
         let mut r = BufReader::new(&b"VALUE 99999999999\n"[..]);
+        assert!(read_response(&mut r).is_err());
+        // Control-state blobs ride the same cap.
+        let mut r = BufReader::new(&b"STATE 1 99999999999\n"[..]);
+        assert!(read_request(&mut r, &mut line).is_err());
+        let mut r = BufReader::new(&b"SVALUE 1 99999999999\n"[..]);
         assert!(read_response(&mut r).is_err());
     }
 

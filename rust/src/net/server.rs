@@ -6,13 +6,78 @@
 //! no longer convoy behind a global store mutex (the pre-refactor
 //! `Arc<Mutex<StorageNode>>` bottleneck).
 
-use super::protocol::{read_request, write_response, Request, Response};
+use super::protocol::{read_request, write_response, Request, Response, MAX_LEASE_TTL_MS};
 use crate::storage::ShardedStore;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Per-node coordinator-failover state: the lease register this node
+/// serves as an authority for, and the replicated control-state blob.
+/// See [`crate::coordinator::election`] /
+/// [`crate::coordinator::replicate`] for the client-side protocol.
+#[derive(Debug, Default)]
+struct ControlSlot {
+    /// Highest term a lease was granted at (0 = never granted).
+    term: u64,
+    /// Candidate holding the lease at `term` (0 = none).
+    holder: u64,
+    /// When the held lease runs out.
+    expires: Option<Instant>,
+    /// Term of the stored control-state blob.
+    state_term: u64,
+    /// The blob itself (the leader's serialized control state).
+    state: Option<Vec<u8>>,
+}
+
+impl ControlSlot {
+    fn remaining_ms(&self, now: Instant) -> u64 {
+        self.expires
+            .map_or(0, |e| e.saturating_duration_since(now).as_millis() as u64)
+    }
+
+    /// The `LEASE` rule: renew for the incumbent at a same-or-higher
+    /// term; take over only once the held lease has expired, and only
+    /// at a strictly higher term (so a deposed leader can never
+    /// re-grab its old term). `ttl_ms == 0` never grants — it is the
+    /// read-only query the failure detector and bidding standbys use.
+    fn try_lease(&mut self, candidate: u64, term: u64, ttl_ms: u64, now: Instant) -> Response {
+        let expired = self.holder == 0 || self.remaining_ms(now) == 0;
+        let granted = ttl_ms > 0
+            && candidate != 0
+            && ((candidate == self.holder && term >= self.term) || (expired && term > self.term));
+        if granted {
+            self.term = term;
+            self.holder = candidate;
+            let ttl = std::time::Duration::from_millis(ttl_ms.min(MAX_LEASE_TTL_MS));
+            self.expires = Some(now + ttl);
+        }
+        Response::Leased {
+            granted,
+            term: self.term,
+            holder: if expired && !granted { 0 } else { self.holder },
+            remaining_ms: self.remaining_ms(now),
+        }
+    }
+
+    /// The `STATE` apply rule: a blob replaces the stored one iff its
+    /// term is at least the stored term (same-term republish is the
+    /// live leader refreshing its own state).
+    fn try_state_put(&mut self, term: u64, value: Vec<u8>) -> Response {
+        let applied = term >= self.state_term;
+        if applied {
+            self.state_term = term;
+            self.state = Some(value);
+        }
+        Response::StateAck {
+            applied,
+            term: self.state_term,
+        }
+    }
+}
 
 /// A running storage-node server.
 pub struct NodeServer {
@@ -39,6 +104,11 @@ impl NodeServer {
         let store = Arc::new(ShardedStore::new());
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(Mutex::new(Vec::new()));
+        // The node's coordinator-failover register (lease + replicated
+        // control state). Owned by the accept loop: it lives exactly as
+        // long as the node can be reached, and is only ever touched
+        // through the LEASE/STATE wire ops.
+        let control = Arc::new(Mutex::new(ControlSlot::default()));
         let store2 = store.clone();
         let stop2 = stop.clone();
         let conns2 = conns.clone();
@@ -63,8 +133,9 @@ impl NodeServer {
                     }
                     let store3 = store2.clone();
                     let conns3 = conns2.clone();
+                    let control3 = control.clone();
                     std::thread::spawn(move || {
-                        let _ = serve_conn(stream, store3);
+                        let _ = serve_conn(stream, store3, control3);
                         conns3.lock().unwrap().retain(|&(cid, _)| cid != id);
                     });
                 }
@@ -120,7 +191,11 @@ impl Drop for NodeServer {
     }
 }
 
-fn serve_conn(stream: TcpStream, store: Arc<ShardedStore>) -> std::io::Result<()> {
+fn serve_conn(
+    stream: TcpStream,
+    store: Arc<ShardedStore>,
+    control: Arc<Mutex<ControlSlot>>,
+) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -190,6 +265,24 @@ fn serve_conn(stream: TcpStream, store: Arc<ShardedStore>) -> std::io::Result<()
                 Response::KeyPage {
                     keys: page.keys,
                     next: page.next,
+                }
+            }
+            Request::Lease { candidate, term, ttl_ms } => {
+                let mut slot = control.lock().unwrap();
+                slot.try_lease(candidate, term, ttl_ms, Instant::now())
+            }
+            Request::StatePut { term, value } => {
+                let mut slot = control.lock().unwrap();
+                slot.try_state_put(term, value)
+            }
+            Request::StateGet => {
+                let slot = control.lock().unwrap();
+                match &slot.state {
+                    Some(blob) => Response::StateValue {
+                        term: slot.state_term,
+                        value: blob.clone(),
+                    },
+                    None => Response::NotFound,
                 }
             }
             Request::Ping => Response::Pong,
@@ -290,6 +383,50 @@ mod tests {
         let mut full = c.keys().unwrap();
         full.sort_unstable();
         assert_eq!(paged, full);
+    }
+
+    #[test]
+    fn lease_grants_renews_queries_and_expires() {
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect(server.addr()).unwrap();
+        // Query before any grant: no holder.
+        let q = c.lease(0, 0, 0).unwrap();
+        assert!(!q.granted);
+        assert_eq!((q.term, q.holder), (0, 0));
+        // First bid wins.
+        let g = c.lease(1, 1, 10_000).unwrap();
+        assert!(g.granted);
+        assert_eq!((g.term, g.holder), (1, 1));
+        assert!(g.remaining_ms > 0);
+        // A rival bid at a higher term is refused while the lease lives.
+        let r = c.lease(2, 2, 10_000).unwrap();
+        assert!(!r.granted, "live lease must not be preempted");
+        assert_eq!((r.term, r.holder), (1, 1));
+        // The holder renews at its own term, and may bump it.
+        assert!(c.lease(1, 1, 10_000).unwrap().granted);
+        assert!(c.lease(1, 3, 50).unwrap().granted);
+        // After expiry a strictly higher term takes over...
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        let q = c.lease(0, 0, 0).unwrap();
+        assert_eq!(q.holder, 0, "expired lease reads as vacant");
+        assert_eq!(q.term, 3, "last granted term still visible");
+        assert!(!c.lease(2, 3, 10_000).unwrap().granted, "equal term refused");
+        let g = c.lease(2, 4, 10_000).unwrap();
+        assert!(g.granted);
+        assert_eq!((g.term, g.holder), (4, 2));
+    }
+
+    #[test]
+    fn state_applies_by_term_and_reads_back() {
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect(server.addr()).unwrap();
+        assert_eq!(c.state_get().unwrap(), None);
+        assert_eq!(c.state_put(1, b"one".to_vec()).unwrap(), (true, 1));
+        assert_eq!(c.state_put(1, b"one'".to_vec()).unwrap(), (true, 1));
+        assert_eq!(c.state_put(3, b"three\n\0".to_vec()).unwrap(), (true, 3));
+        // A deposed leader's late publish can never clobber the successor.
+        assert_eq!(c.state_put(2, b"stale".to_vec()).unwrap(), (false, 3));
+        assert_eq!(c.state_get().unwrap(), Some((3, b"three\n\0".to_vec())));
     }
 
     #[test]

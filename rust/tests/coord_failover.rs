@@ -1,0 +1,204 @@
+//! Integration: the coordinator-failover plane.
+//!
+//! Covers the contracts the failover subsystem introduces:
+//! 1. the acceptance scenario — killing the leased leader under live
+//!    churn promotes the standby within its lease TTL budget, zero
+//!    acked writes are lost, and paced repair resumes from the
+//!    shadowed queue instead of re-auditing from zero;
+//! 2. the lease protocol end to end — grant, renewal, refusal while
+//!    live, takeover after expiry, all over the wire against real
+//!    authority nodes;
+//! 3. control-state replication — majority publish, max-term fetch,
+//!    and the deposed-leader refusal;
+//! 4. the full hand-off of control state through `promote_from` with
+//!    traffic-visible continuity (same placement, bumped epoch+term).
+
+use asura::coordinator::election::{LeaderLease, LeaseConfig, Role};
+use asura::coordinator::replicate::StateReplicator;
+use asura::coordinator::Coordinator;
+use asura::fault::health::{HealthConfig, HealthMonitor};
+use asura::loadgen::{run_coord_failover, run_coord_failover_suite, CoordFailoverConfig};
+use asura::net::server::NodeServer;
+use std::time::Duration;
+
+fn quick_cfg() -> CoordFailoverConfig {
+    CoordFailoverConfig {
+        nodes: 5,
+        replicas: 3,
+        write_quorum: 2,
+        read_quorum: 2,
+        keys: 600,
+        read_ops: 1_200,
+        workers: 3,
+        pipeline_depth: 16,
+        authorities: 3,
+        lease_ttl_ms: 200,
+        tick_ms: 10,
+        repair_batch: 48,
+        out_json: None,
+        ..CoordFailoverConfig::default()
+    }
+}
+
+#[test]
+fn leader_crash_mid_churn_promotes_standby_without_losing_acked_writes() {
+    // The acceptance scenario: a storage node dies and the leader starts
+    // repairing it; then the *leader* dies with the queue half-drained;
+    // the standby wins the lease at a bumped term, promotes from the
+    // replicated control state, reconciles the interregnum's writes,
+    // and finishes the repair — with zero reads failing at any point.
+    let report = run_coord_failover(&quick_cfg()).unwrap();
+    assert_eq!(report.lost, 0, "zero failed reads across the hand-off");
+    assert_eq!(report.lost_keys, 0, "zero keys lost across the hand-off");
+    assert_eq!(report.audit_keys, 600);
+    assert_eq!(report.audit_under, 0, "holder audit: full RF restored");
+    assert!(report.new_term > report.old_term, "promotion bumps the term");
+    assert!(
+        report.time_to_new_epoch_ms > 0.0,
+        "hand-off latency must be measured"
+    );
+    // The promotion floor is the lease TTL; the ceiling is TTL plus the
+    // watcher threshold plus election+promotion work. Generous bound so
+    // a loaded CI host cannot flake it, but tight enough to prove the
+    // standby did not sit on an expired lease.
+    assert!(
+        report.time_to_new_epoch_ms < 15_000.0,
+        "promotion took {} ms",
+        report.time_to_new_epoch_ms
+    );
+    assert!(
+        report.resumed_repair_pending > 0,
+        "the successor must inherit the half-drained repair queue"
+    );
+    assert!(report.repaired_keys > 0, "the dead holder's share re-replicates");
+    assert!(
+        report.stranded_writes > 0,
+        "live churn must ack writes the dead leader never drained"
+    );
+    assert!(
+        report.epochs.1 > report.epochs.0,
+        "traffic must observe both the death epoch and the promotion epoch"
+    );
+    assert!(report.ops >= 1_200, "at least one full driver round ran");
+}
+
+#[test]
+fn lease_protocol_round_trips_against_live_authorities() {
+    let servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+    let cfg = LeaseConfig {
+        ttl: Duration::from_millis(150),
+        timeout: Duration::from_millis(300),
+    };
+    let mut a = LeaderLease::new(1, addrs.clone(), cfg.clone());
+    let mut b = LeaderLease::new(2, addrs, cfg);
+    assert_eq!(a.tick(), Role::Leader { term: 1 });
+    // The standby keeps deferring while the leader renews.
+    for _ in 0..3 {
+        assert!(matches!(b.tick(), Role::Follower { holder: 1, .. }));
+        assert_eq!(a.tick(), Role::Leader { term: 1 });
+        std::thread::sleep(Duration::from_millis(40));
+    }
+    // The leader goes silent; the standby takes over at a bumped term
+    // only after expiry, and the deposed leader cannot renew.
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(b.tick(), Role::Leader { term: 2 });
+    assert!(matches!(a.tick(), Role::Follower { holder: 2, .. }));
+    assert!(!a.is_leader());
+    assert!(b.is_leader());
+}
+
+#[test]
+fn health_monitor_lease_watch_gates_the_takeover() {
+    let servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+    let lease_cfg = LeaseConfig {
+        ttl: Duration::from_millis(120),
+        timeout: Duration::from_millis(300),
+    };
+    let mut leader = LeaderLease::new(7, addrs.clone(), lease_cfg);
+    assert!(matches!(leader.tick(), Role::Leader { .. }));
+    let mut watch = HealthMonitor::new(HealthConfig {
+        suspect_after: 1,
+        dead_after: 2,
+        timeout: Duration::from_millis(300),
+    });
+    // Live lease: no strikes accumulate.
+    let v = watch.lease_tick(&addrs);
+    assert_eq!(v.holder, 7);
+    assert!(!v.leader_lost);
+    // The leader stops renewing; after expiry the watcher needs
+    // dead_after consecutive vacant rounds before declaring loss.
+    std::thread::sleep(Duration::from_millis(160));
+    let first = watch.lease_tick(&addrs);
+    assert_eq!(first.holder, 0, "expired lease reads as vacant");
+    assert!(!first.leader_lost, "one vacant round is grace, not loss");
+    assert!(watch.lease_tick(&addrs).leader_lost);
+}
+
+#[test]
+fn replicated_state_survives_an_authority_death_and_rejects_deposed_leaders() {
+    let mut servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
+    let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+    let rep = StateReplicator::new(addrs, Duration::from_millis(300));
+
+    // A real coordinator's exported state, not a synthetic blob.
+    let data: Vec<NodeServer> = (0..4).map(|_| NodeServer::spawn().unwrap()).collect();
+    let mut coord = Coordinator::new(2);
+    for (i, s) in data.iter().enumerate() {
+        coord.join_external(i as u32, 1.0, s.addr()).unwrap();
+    }
+    coord.set_term(1);
+    for k in 0..50u64 {
+        coord.set(k, b"v").unwrap();
+    }
+    let state = coord.export_control_state();
+    rep.publish(&state).unwrap();
+
+    // Majority intact after one authority dies: the fetch still sees it.
+    servers[2].kill();
+    let fetched = rep.fetch_latest().unwrap().expect("state must survive");
+    assert_eq!(fetched, state);
+    assert_eq!(fetched.keys.len(), 50);
+
+    // A successor publishes at term 2; the deposed term-1 leader's late
+    // publish is refused.
+    coord.set_term(2);
+    let newer = coord.export_control_state();
+    rep.publish(&newer).unwrap();
+    let err = rep.publish(&state).unwrap_err();
+    assert!(err.to_string().contains("superseded"), "{err}");
+    assert_eq!(rep.fetch_latest().unwrap(), Some(newer));
+}
+
+#[test]
+fn coord_failover_suite_emits_the_bench_trajectory() {
+    let dir = std::env::temp_dir().join("asura_coord_failover_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_coord_failover.json");
+    let cfg = CoordFailoverConfig {
+        keys: 400,
+        read_ops: 800,
+        out_json: Some(path.to_str().unwrap().to_string()),
+        ..quick_cfg()
+    };
+    let reports = run_coord_failover_suite(&cfg).unwrap();
+    assert_eq!(reports.len(), 1);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = asura::util::json::parse(&text).unwrap();
+    assert_eq!(v.get("bench").unwrap().as_str(), Some("coord_failover"));
+    assert_eq!(v.get("read_quorum").unwrap().as_u64(), Some(2));
+    assert_eq!(v.get("lease_ttl_ms").unwrap().as_u64(), Some(200));
+    let results = v.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 1);
+    let r = &results[0];
+    assert_eq!(r.get("scenario").unwrap().as_str(), Some("coord_failover"));
+    assert_eq!(r.get("lost").unwrap().as_u64(), Some(0));
+    assert_eq!(r.get("lost_keys").unwrap().as_u64(), Some(0));
+    assert!(r.get("time_to_new_epoch_ms").unwrap().as_f64().unwrap() > 0.0);
+    let old_term = r.get("old_term").unwrap().as_u64().unwrap();
+    assert!(r.get("new_term").unwrap().as_u64().unwrap() > old_term);
+    assert!(r.get("ops_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    assert!(r.get("stranded_writes").is_some());
+    assert!(r.get("resumed_repair_pending").unwrap().as_u64().unwrap() > 0);
+}

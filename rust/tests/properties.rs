@@ -11,13 +11,21 @@
 //! 4. Replica sets: distinct, stable, prefix-consistent.
 //! 5. Cluster migration soundness under random membership churn.
 //! 6. §2.D metadata triggers cover every mover (random churn scripts).
+//! 7. Coordinator hand-off: replaying a shadowed writer registry into
+//!    a promoted coordinator is idempotent and never loses an acked
+//!    key (random write mixes, random export timing, random replays).
 
 use asura::algo::asura::AsuraPlacer;
 use asura::algo::chash::ConsistentHash;
 use asura::algo::straw::StrawBuckets;
 use asura::algo::{Membership, NodeId, Placer};
 use asura::cluster::AsuraCluster;
+use asura::coordinator::Coordinator;
+use asura::net::pool::PoolConfig;
+use asura::net::server::NodeServer;
 use asura::prng::SplitMix64;
+use asura::workload::Op;
+use std::collections::HashSet;
 
 /// Deterministic scenario runner: `cases` random cases from `seed`.
 fn for_cases(seed: u64, cases: u64, mut f: impl FnMut(&mut SplitMix64, u64)) {
@@ -279,6 +287,84 @@ fn prop_cluster_churn_never_loses_data() {
                 "case {case}: key {k} lost"
             );
         }
+    });
+}
+
+#[test]
+fn prop_shadow_registry_replay_into_promoted_coordinator_is_lossless() {
+    // The coordinator-failover merge contract: however the crash
+    // interleaves with the leader's last control-state export, replaying
+    // a shadowed writer registry into the promoted coordinator — any
+    // number of times — is idempotent and never loses an acked key.
+    // Randomized over write mixes, whether the export ran before or
+    // after the pool's writes (i.e. whether the shadowed keys are
+    // already in the replicated state), and how often the replay runs.
+    for_cases(0x5AD0, 5, |rng, case| {
+        let servers: Vec<NodeServer> = (0..4).map(|_| NodeServer::spawn().unwrap()).collect();
+        let mut leader = Coordinator::new(2);
+        for (i, s) in servers.iter().enumerate() {
+            leader.join_external(i as u32, 1.0, s.addr()).unwrap();
+        }
+        leader.set_term(1);
+        // Control-plane writes (managed before the crash)...
+        let managed: Vec<u64> = (0..50 + rng.below(80)).map(|_| rng.next_u64()).collect();
+        for &k in &managed {
+            leader.set(k, &k.to_le_bytes()).unwrap();
+        }
+        let export_before_pool_writes = rng.next_f64() < 0.5;
+        let early_state = export_before_pool_writes.then(|| leader.export_control_state());
+        // ...plus data-plane writes acked through a pool, registered in
+        // the shared registry but (in the export-before flavor) never
+        // drained by the crashed leader.
+        let pool = leader
+            .connect_pool(PoolConfig {
+                workers: 2,
+                pipeline_depth: 8,
+                verify_hits: true,
+                ..PoolConfig::default()
+            })
+            .unwrap();
+        let extra: Vec<u64> = (0..30 + rng.below(60)).map(|_| rng.next_u64()).collect();
+        pool.run(extra.iter().map(|&key| Op::Set { key, size: 8 }).collect())
+            .unwrap();
+        let registry = leader.key_registry();
+        let shadowed = registry.snapshot();
+        let state = match early_state {
+            Some(s) => s,
+            // Export-after flavor: the drain already absorbed the pool
+            // keys into the replicated state; the replay must be a
+            // no-op on top of it.
+            None => leader.export_control_state(),
+        };
+        let handles = leader.handles();
+        drop(leader); // the crash (members are harness-owned)
+
+        let mut promoted = Coordinator::promote_from(&state, 2, handles).unwrap();
+        // Replay the shadowed registry 1..=3 times, reconciling after
+        // each — idempotence means the repetition count is invisible.
+        let replays = 1 + rng.below(3);
+        for _ in 0..replays {
+            registry.register_batch(&shadowed);
+            promoted.reconcile_writes();
+        }
+        let expected: HashSet<u64> = managed.iter().chain(&extra).copied().collect();
+        assert_eq!(
+            promoted.key_count(),
+            expected.len(),
+            "case {case}: replay x{replays} (export_before={export_before_pool_writes}) \
+             lost or duplicated keys"
+        );
+        assert_eq!(
+            promoted.verify_all_readable().unwrap(),
+            expected.len(),
+            "case {case}: an acked key became unreadable after the hand-off"
+        );
+        // And the data plane agrees: every acked key is served at the
+        // promoted epoch through the surviving pool.
+        let gets: Vec<Op> = expected.iter().map(|&key| Op::Get { key }).collect();
+        let n = gets.len() as u64;
+        let res = pool.run(gets).unwrap();
+        assert_eq!((res.hits, res.lost), (n, 0), "case {case}");
     });
 }
 

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Bench-artifact shape gate.
+
+CI uploads every BENCH_*.json as a workflow artifact; before this gate, a
+bench that silently emitted garbage (missing metric, NaN, empty results)
+still uploaded green. This script parses each artifact and fails the job
+unless the fields the trajectory exists to record are present and finite.
+
+Usage: check_bench_shape.py BENCH_a.json [BENCH_b.json ...]
+
+Requirements are keyed by the artifact's "bench" field:
+  throughput      -> per-result ops, ops_per_sec, p50_us, p99_us, lost
+  failover        -> top-level read_quorum/write_quorum; the failover
+                     result additionally needs time_to_detect_ms and
+                     time_to_full_rf_ms; every result records its own
+                     read_quorum and a finite lost count
+  coord_failover  -> top-level lease_ttl_ms; per-result
+                     time_to_new_epoch_ms, stranded_writes, lost
+
+Only stdlib; runs on the bare CI python3.
+"""
+
+import json
+import math
+import sys
+
+TOP_REQUIRED = {
+    "throughput": ["nodes", "keys", "workers"],
+    "failover": ["nodes", "read_quorum", "write_quorum"],
+    "coord_failover": ["nodes", "read_quorum", "write_quorum", "lease_ttl_ms"],
+}
+
+RESULT_REQUIRED = {
+    "throughput": ["ops", "ops_per_sec", "p50_us", "p99_us", "lost"],
+    "failover": ["ops", "read_quorum", "lost"],
+    "coord_failover": [
+        "ops",
+        "ops_per_sec",
+        "time_to_new_epoch_ms",
+        "stranded_writes",
+        "lost",
+    ],
+}
+
+# Extra fields required on specific result scenarios.
+SCENARIO_REQUIRED = {
+    ("failover", "failover"): ["time_to_detect_ms", "time_to_full_rf_ms"],
+}
+
+
+def finite_number(value):
+    return isinstance(value, (int, float)) and not isinstance(value, bool) and math.isfinite(value)
+
+
+def check_fields(obj, fields, where, errors):
+    for field in fields:
+        if field not in obj:
+            errors.append(f"{where}: missing {field!r}")
+        elif not finite_number(obj[field]):
+            errors.append(f"{where}: {field!r} is not a finite number ({obj[field]!r})")
+
+
+def check_file(path):
+    errors = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable or invalid JSON: {e}"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+    bench = doc.get("bench")
+    if bench not in TOP_REQUIRED:
+        return [f"{path}: unknown or missing bench kind {bench!r}"]
+    check_fields(doc, TOP_REQUIRED[bench], path, errors)
+    results = doc.get("results")
+    if not isinstance(results, list) or not results:
+        errors.append(f"{path}: results missing or empty")
+        return errors
+    for i, result in enumerate(results):
+        where = f"{path}: results[{i}]"
+        if not isinstance(result, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        scenario = result.get("scenario")
+        if not isinstance(scenario, str) or not scenario:
+            errors.append(f"{where}: missing scenario name")
+        check_fields(result, RESULT_REQUIRED[bench], where, errors)
+        extra = SCENARIO_REQUIRED.get((bench, scenario))
+        if extra:
+            check_fields(result, extra, where, errors)
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print("usage: check_bench_shape.py BENCH_*.json", file=sys.stderr)
+        return 2
+    failures = []
+    for path in argv[1:]:
+        errors = check_file(path)
+        if errors:
+            failures.extend(errors)
+        else:
+            print(f"ok: {path}")
+    if failures:
+        for e in failures:
+            print(f"BAD BENCH SHAPE: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
