@@ -1,0 +1,176 @@
+"""Unit tests for the CI bench-artifact shape gate
+(scripts/check_bench_shape.py).
+
+The gate is the last line of defense between a silently-garbage bench
+run and a green upload, so the gate itself gets tests: a well-shaped
+artifact of every bench kind must pass, and each corruption class the
+gate exists for — missing field, non-finite number, empty/invalid file,
+empty results — must fail with an error naming the problem.
+
+Stdlib only (the gate itself is stdlib only); runs in the non-blocking
+pytest CI job regardless of the optional scientific stack.
+"""
+
+import importlib.util
+import json
+import math
+import os
+import sys
+
+_SCRIPT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "scripts",
+    "check_bench_shape.py",
+)
+_spec = importlib.util.spec_from_file_location("check_bench_shape", _SCRIPT)
+shape = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(shape)
+
+
+def _write(tmp_path, doc, name="bench.json"):
+    path = tmp_path / name
+    if isinstance(doc, (bytes, str)):
+        mode = "wb" if isinstance(doc, bytes) else "w"
+        with open(path, mode) as f:
+            f.write(doc)
+    else:
+        with open(path, "w") as f:
+            json.dump(doc, f)
+    return str(path)
+
+
+def good_throughput():
+    return {
+        "bench": "throughput",
+        "nodes": 4,
+        "keys": 1000,
+        "workers": 4,
+        "results": [
+            {
+                "scenario": "uniform",
+                "ops": 5000,
+                "ops_per_sec": 125000.0,
+                "p50_us": 80.0,
+                "p99_us": 400.0,
+                "lost": 0,
+            }
+        ],
+    }
+
+
+def good_shard():
+    result_common = {
+        "ops": 4000,
+        "ops_per_sec": 90000.0,
+        "shards": 2,
+        "lost": 0,
+    }
+    return {
+        "bench": "shard",
+        "shards": 2,
+        "nodes_per_shard": 3,
+        "read_quorum": 1,
+        "write_quorum": 2,
+        "lease_ttl_ms": 300,
+        "results": [
+            dict(result_common, scenario="shard_scale_k1", shards=1),
+            dict(result_common, scenario="shard_scale_k2"),
+            dict(
+                result_common,
+                scenario="shard_failover",
+                shards=3,
+                time_to_new_epoch_ms=812.5,
+                stranded_writes=17,
+            ),
+        ],
+    }
+
+
+def test_well_shaped_artifacts_pass(tmp_path):
+    assert shape.check_file(_write(tmp_path, good_throughput())) == []
+    assert shape.check_file(_write(tmp_path, good_shard())) == []
+
+
+def test_missing_result_field_fails(tmp_path):
+    doc = good_throughput()
+    del doc["results"][0]["ops_per_sec"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert errors, "missing ops_per_sec must fail"
+    assert any("ops_per_sec" in e for e in errors)
+
+
+def test_missing_top_level_field_fails(tmp_path):
+    doc = good_shard()
+    del doc["lease_ttl_ms"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("lease_ttl_ms" in e for e in errors)
+
+
+def test_shard_failover_scenario_requires_handoff_metrics(tmp_path):
+    doc = good_shard()
+    del doc["results"][2]["time_to_new_epoch_ms"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("time_to_new_epoch_ms" in e for e in errors)
+    # The scale rows do NOT need hand-off metrics: removing nothing
+    # else keeps the artifact otherwise well-shaped.
+    assert all("results[0]" not in e and "results[1]" not in e for e in errors)
+
+
+def test_nan_and_infinity_fail(tmp_path):
+    doc = good_shard()
+    doc["results"][0]["ops_per_sec"] = math.nan
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("ops_per_sec" in e and "finite" in e for e in errors)
+    doc = good_throughput()
+    doc["results"][0]["p99_us"] = math.inf
+    # json.dump writes Infinity (non-strict JSON); the gate's parser
+    # accepts it and the finite check must still reject it.
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("p99_us" in e for e in errors)
+
+
+def test_non_numeric_metric_fails(tmp_path):
+    doc = good_shard()
+    doc["results"][0]["lost"] = "zero"
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("lost" in e for e in errors)
+    # Booleans are ints in python; the gate must not accept them as
+    # metrics.
+    doc = good_shard()
+    doc["results"][0]["ops"] = True
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("ops" in e for e in errors)
+
+
+def test_empty_file_and_invalid_json_fail(tmp_path):
+    errors = shape.check_file(_write(tmp_path, b""))
+    assert errors and "invalid JSON" in errors[0]
+    errors = shape.check_file(_write(tmp_path, "{not json"))
+    assert errors and "invalid JSON" in errors[0]
+    errors = shape.check_file(str(tmp_path / "does_not_exist.json"))
+    assert errors and "unreadable or invalid JSON" in errors[0]
+
+
+def test_empty_or_missing_results_fail(tmp_path):
+    doc = good_shard()
+    doc["results"] = []
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("results missing or empty" in e for e in errors)
+    doc = good_throughput()
+    del doc["results"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("results missing or empty" in e for e in errors)
+
+
+def test_unknown_bench_kind_fails(tmp_path):
+    errors = shape.check_file(_write(tmp_path, {"bench": "mystery", "results": []}))
+    assert any("unknown or missing bench kind" in e for e in errors)
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    good = _write(tmp_path, good_shard(), "good.json")
+    bad = _write(tmp_path, {"bench": "shard"}, "bad.json")
+    assert shape.main(["check_bench_shape.py", good]) == 0
+    assert shape.main(["check_bench_shape.py", good, bad]) == 1
+    assert shape.main(["check_bench_shape.py"]) == 2
+    capsys.readouterr()  # drain captured output

@@ -72,33 +72,36 @@ pub enum Role {
     Follower { term: u64, holder: u64 },
 }
 
-/// One lease round trip on a fresh, timeout-bounded connection.
-/// `ttl_ms == 0` is the read-only query form — it reports the
-/// authority's lease register without ever granting.
+/// One lease round trip on a fresh, timeout-bounded connection,
+/// against the authority's `shard` lease register (`0` = the unsharded
+/// register). `ttl_ms == 0` is the read-only query form — it reports
+/// the register without ever granting.
 pub fn lease_request(
     addr: SocketAddr,
+    shard: u64,
     candidate: u64,
     term: u64,
     ttl_ms: u64,
     timeout: Duration,
 ) -> std::io::Result<LeaseReply> {
-    Conn::connect_timeout(addr, timeout)?.lease(candidate, term, ttl_ms)
+    Conn::connect_timeout(addr, timeout)?.lease(shard, candidate, term, ttl_ms)
 }
 
 /// Fan one lease request out to every authority concurrently (via
 /// [`crate::net::scatter`]). Unreachable authorities simply yield no
 /// reply, so the returned length is the answer count. Shared with the
 /// failure detector's lease watch
-/// ([`crate::fault::HealthMonitor::lease_tick`]).
+/// ([`crate::fault::HealthMonitor::lease_tick_shard`]).
 pub(crate) fn fan_out(
     authorities: &[SocketAddr],
+    shard: u64,
     candidate: u64,
     term: u64,
     ttl_ms: u64,
     timeout: Duration,
 ) -> Vec<LeaseReply> {
     crate::net::scatter(authorities, |addr| {
-        lease_request(addr, candidate, term, ttl_ms, timeout).ok()
+        lease_request(addr, shard, candidate, term, ttl_ms, timeout).ok()
     })
     .into_iter()
     .flatten()
@@ -123,9 +126,15 @@ pub(crate) fn observe_replies(replies: &[LeaseReply]) -> (u64, u64) {
     (term, holder)
 }
 
-/// A candidate's view of the coordinator lease: renew it while leader,
-/// watch and bid while follower.
+/// A candidate's view of one coordinator lease: renew it while leader,
+/// watch and bid while follower. The lease is identified by a **shard
+/// key** on every authority (`0` for a single unsharded coordinator;
+/// the owned range's start in the sharded control plane —
+/// [`crate::coordinator::shard::ShardMap`]), so any number of shard
+/// leaders hold independent leases against one authority set.
 pub struct LeaderLease {
+    /// Lease register this candidate bids for.
+    shard: u64,
     /// This candidate's id (nonzero; 0 is the query sentinel).
     id: u64,
     authorities: Vec<SocketAddr>,
@@ -144,10 +153,22 @@ pub struct LeaderLease {
 }
 
 impl LeaderLease {
+    /// A candidate for the unsharded (shard `0`) coordinator lease.
     pub fn new(id: u64, authorities: Vec<SocketAddr>, cfg: LeaseConfig) -> LeaderLease {
+        Self::for_shard(0, id, authorities, cfg)
+    }
+
+    /// A candidate for one shard's lease register.
+    pub fn for_shard(
+        shard: u64,
+        id: u64,
+        authorities: Vec<SocketAddr>,
+        cfg: LeaseConfig,
+    ) -> LeaderLease {
         assert!(id != 0, "candidate id 0 is reserved for queries");
         assert!(!authorities.is_empty(), "need at least one lease authority");
         LeaderLease {
+            shard,
             id,
             authorities,
             cfg,
@@ -160,6 +181,11 @@ impl LeaderLease {
 
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The lease register (shard key) this candidate bids for.
+    pub fn shard(&self) -> u64 {
+        self.shard
     }
 
     /// Whether this candidate may act as leader *right now*: it won the
@@ -208,7 +234,7 @@ impl LeaderLease {
             return self.bid(self.term, ttl_ms);
         }
         // Follower: watch, then bid only into an observed vacancy.
-        let replies = fan_out(&self.authorities, 0, 0, 0, self.cfg.timeout);
+        let replies = fan_out(&self.authorities, self.shard, 0, 0, 0, self.cfg.timeout);
         let (term, holder) = observe_replies(&replies);
         self.observed = self.observed.max(term);
         if holder != 0 || replies.len() < self.majority() {
@@ -225,7 +251,14 @@ impl LeaderLease {
         // Stamped before the requests leave: the local deadline must be
         // conservative against every authority's copy of the lease.
         let t_bid = std::time::Instant::now();
-        let replies = fan_out(&self.authorities, self.id, term, ttl_ms, self.cfg.timeout);
+        let replies = fan_out(
+            &self.authorities,
+            self.shard,
+            self.id,
+            term,
+            ttl_ms,
+            self.cfg.timeout,
+        );
         let mut grants = 0;
         let mut holder = 0;
         let mut holder_term = 0;
@@ -332,6 +365,23 @@ mod tests {
         // Nobody took over: the next tick renews and re-arms it.
         assert_eq!(lease.tick(), Role::Leader { term: 1 });
         assert!(lease.is_leader());
+    }
+
+    #[test]
+    fn per_shard_leases_are_disjoint() {
+        // Two shard leaders hold independent leases against the same
+        // authority set: winning one register neither deposes nor
+        // blocks the other.
+        let (_servers, addrs) = authorities(3);
+        let mut a = LeaderLease::for_shard(0x10, 1, addrs.clone(), quick_cfg());
+        let mut b = LeaderLease::for_shard(0x20, 2, addrs, quick_cfg());
+        assert_eq!(a.tick(), Role::Leader { term: 1 });
+        assert_eq!(b.tick(), Role::Leader { term: 1 });
+        assert!(a.is_leader());
+        assert!(b.is_leader());
+        // Both renew at their own terms, concurrently.
+        assert_eq!(a.tick(), Role::Leader { term: 1 });
+        assert_eq!(b.tick(), Role::Leader { term: 1 });
     }
 
     #[test]

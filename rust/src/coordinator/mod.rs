@@ -69,11 +69,23 @@
 //! the current epoch republished under the new term, repair resumed
 //! from the shadowed queue, and interregnum writes converged by
 //! version comparison ([`Coordinator::reconcile_writes`]).
+//!
+//! ## Sharded control plane
+//!
+//! The role is also *plural*: a [`shard::ShardMap`] runs K concurrent
+//! coordinators over disjoint contiguous key ranges — each with its
+//! own nodes, epochs, lease (shard-keyed on the authorities), registry
+//! slice and repair queue — publishing one composite snapshot the data
+//! plane resolves per key. Online range hand-offs between shards
+//! (split/merge) compose the primitives this module exposes:
+//! [`Coordinator::keys_in_range`], [`Coordinator::fetch_key`],
+//! [`Coordinator::ingest_copy`] and [`Coordinator::release_key`].
 
 pub mod election;
 pub mod metrics;
 pub mod registry;
 pub mod replicate;
+pub mod shard;
 pub mod snapshot;
 
 use crate::algo::asura::AsuraPlacer;
@@ -113,6 +125,12 @@ const MAX_DELETE_ROUNDS: usize = 8;
 /// Page size for the over-the-wire holder audit's `KEYSC` walk.
 const AUDIT_PAGE: u64 = 1024;
 
+/// Bound on re-stamp rounds when a control-plane write keeps losing to
+/// racing newer incumbents ([`Coordinator::set`]): each extra round
+/// requires yet another strictly newer write landing inside the
+/// fan-out window, so the loop converges as soon as the race does.
+const MAX_STAMP_ROUNDS: usize = 8;
+
 /// A key mid-migration: copied to `new_set` at `version`, not yet
 /// deleted from the `old_set` members it is leaving.
 struct PendingMove {
@@ -120,6 +138,33 @@ struct PendingMove {
     version: Version,
     old_set: Vec<NodeId>,
     new_set: Vec<NodeId>,
+}
+
+/// Whether `key` falls in `[lo, hi)` (`hi == None` = unbounded above).
+/// The one range predicate the sharded control plane routes by.
+pub(crate) fn key_in_range(key: DatumId, lo: DatumId, hi: Option<DatumId>) -> bool {
+    if key < lo {
+        return false;
+    }
+    match hi {
+        Some(h) => key < h,
+        None => true,
+    }
+}
+
+/// Outcome of [`Coordinator::release_key`] — one member's worth of a
+/// cross-shard hand-off's delete phase.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ReleaseOutcome {
+    /// Every member either deleted its copy at the guard or held none.
+    Released,
+    /// A member holds a strictly newer copy (a write raced the
+    /// hand-off): re-ingest this value at the new owner, then retry the
+    /// release at its version.
+    Newer(Version, Vec<u8>),
+    /// A member was unreachable; a stray (stale, version-guarded) copy
+    /// may remain behind.
+    Deferred,
 }
 
 /// The shareable attachment points between a coordinator and its data
@@ -173,6 +218,16 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(replicas: usize) -> Self {
+        Self::with_clock(replicas, WriteClock::new())
+    }
+
+    /// A coordinator whose version stamps draw from a caller-supplied
+    /// clock. The sharded control plane builds every shard coordinator
+    /// this way ([`shard::ShardMap`]): the shards and the one pool
+    /// serving all of them must share a single total write order, or a
+    /// cross-shard hand-off could compare stamps from unrelated
+    /// counters.
+    pub fn with_clock(replicas: usize, clock: WriteClock) -> Self {
         let replicas = replicas.max(1);
         Self {
             placer: AsuraPlacer::new(),
@@ -188,7 +243,7 @@ impl Coordinator {
             registry: Arc::new(KeyRegistry::new()),
             repair_hints: Arc::new(KeyRegistry::new()),
             repair: RepairQueue::new(),
-            clock: WriteClock::new(),
+            clock,
         }
     }
 
@@ -246,6 +301,7 @@ impl Coordinator {
             addrs,
             replicas: self.replicas,
             suspects,
+            shards: Vec::new(),
         });
     }
 
@@ -697,6 +753,98 @@ impl Coordinator {
     /// never masks a live copy).
     fn fetch_best(&mut self, key: DatumId, nodes: &[NodeId]) -> Option<(Version, Vec<u8>)> {
         self.survey_copies(key, nodes).0
+    }
+
+    // ------------------------------------------------------------------
+    // Range hand-off primitives: what a ShardMap split/merge composes.
+    // ------------------------------------------------------------------
+
+    /// Managed keys inside `[lo, hi)` (`hi == None` = to the top of the
+    /// key space), sorted ascending. Pool-acked keys are absorbed first
+    /// so a hand-off plan covers data-plane writes too.
+    pub fn keys_in_range(&mut self, lo: DatumId, hi: Option<DatumId>) -> Vec<DatumId> {
+        self.sync_registry();
+        let mut out: Vec<DatumId> = self
+            .keys
+            .iter()
+            .copied()
+            .filter(|&k| key_in_range(k, lo, hi))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Freshest copy of `key` among *every* member (max version wins),
+    /// whether or not the key is under management here — the fetch side
+    /// of a cross-shard hand-off.
+    pub fn fetch_key(&mut self, key: DatumId) -> Option<(Version, Vec<u8>)> {
+        let mut ids: Vec<NodeId> = self.members.keys().copied().collect();
+        ids.sort_unstable();
+        self.fetch_best(key, &ids)
+    }
+
+    /// Adopt `key` into management and write `value` — version-guarded
+    /// at `version`, so a newer copy already present is never clobbered
+    /// — to its full replica set. Returns the bytes actually applied
+    /// when every member acked (`Some`), or `None` when a member was
+    /// missing or unreachable: the key stays managed and queued for
+    /// background repair, and **the caller must not delete the copy it
+    /// ingested from** — until this side holds the value durably, the
+    /// source's copy may be the only one.
+    pub fn ingest_copy(&mut self, key: DatumId, version: Version, value: &[u8]) -> Option<u64> {
+        if self.keys.insert(key) {
+            self.index.insert(&self.placer, key);
+        }
+        let set = self.replica_set(key);
+        let written = self.write_copies(key, version, value, &set);
+        if written.is_none() {
+            self.repair.enqueue([key]);
+        }
+        written
+    }
+
+    /// Drop `key` from this coordinator's management and guard-delete
+    /// its copies — at `guard` — from every member still holding one
+    /// (the release side of a cross-shard hand-off, the mirror of
+    /// [`Self::ingest_copy`]). [`ReleaseOutcome::Newer`] means a live
+    /// write raced the hand-off onto this side after the copy was
+    /// taken: the fresher value is returned so the caller re-ingests it
+    /// at the new owner and retries the release at that version — the
+    /// same refused-guard loop the in-shard migration delete phase
+    /// runs. [`ReleaseOutcome::Deferred`] leaves a stray copy behind
+    /// (an unreachable member); a stray at or below the guard is stale
+    /// by construction and version-guarded everywhere it could ever be
+    /// re-read.
+    ///
+    /// The guarded delete fans to *every* member (a deferred hand-off
+    /// or reconcile may have left a copy anywhere) — one round trip
+    /// per member per key, deliberate at this plane's shard sizes;
+    /// bound it to a holder survey before growing shards past tens of
+    /// nodes.
+    pub fn release_key(&mut self, key: DatumId, guard: Version) -> ReleaseOutcome {
+        self.keys.remove(&key);
+        self.index.remove_key(key);
+        let mut ids: Vec<NodeId> = self.members.keys().copied().collect();
+        ids.sort_unstable();
+        let mut deferred = false;
+        for n in ids {
+            let Some(m) = self.members.get_mut(&n) else {
+                continue;
+            };
+            match m.conn.vdel(key, guard) {
+                Ok(VdelOutcome::Deleted) | Ok(VdelOutcome::Missing) => {}
+                Ok(VdelOutcome::Newer) => match self.member_vget(n, key) {
+                    Ok(Some((ver, bytes))) => return ReleaseOutcome::Newer(ver, bytes),
+                    _ => deferred = true,
+                },
+                Err(_) => deferred = true,
+            }
+        }
+        if deferred {
+            ReleaseOutcome::Deferred
+        } else {
+            ReleaseOutcome::Released
+        }
     }
 
     /// The scan under [`Self::fetch_best`]: freshest copy found plus
@@ -1193,20 +1341,45 @@ impl Coordinator {
     /// stamped from the shared write clock. (High-throughput clients
     /// use their own [`crate::net::Router`] or a pool; this path also
     /// maintains the §2.D metadata index.)
+    ///
+    /// A refused stamp is never swallowed: an incumbent written under a
+    /// higher epoch scale (e.g. the composite epoch a sharded data
+    /// plane stamps by, which always exceeds any single shard's own
+    /// epoch) would silently win over `clock.stamp(self.epoch)`, so on
+    /// refusal the clock catches up and the write re-fans at the
+    /// winner's epoch with a fresh sequence — replays are idempotent
+    /// (ties apply), so every replica converges on the final stamp.
     pub fn set(&mut self, key: DatumId, value: &[u8]) -> anyhow::Result<()> {
-        let version = self.clock.stamp(self.epoch);
         let targets = self.replica_set(key);
-        for n in &targets {
-            let m = self
-                .members
-                .get_mut(n)
-                .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
-            m.conn.vset(key, version, value.to_vec())?;
+        let mut version = self.clock.stamp(self.epoch);
+        for _ in 0..MAX_STAMP_ROUNDS {
+            let mut winner = Version::ZERO;
+            let mut refused = false;
+            for n in &targets {
+                let m = self
+                    .members
+                    .get_mut(n)
+                    .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
+                let ack = m.conn.vset(key, version, value.to_vec())?;
+                if !ack.applied {
+                    self.clock.observe(ack.version.seq);
+                    refused = true;
+                    if ack.version > winner {
+                        winner = ack.version;
+                    }
+                }
+            }
+            if !refused {
+                self.index.insert(&self.placer, key);
+                self.keys.insert(key);
+                self.metrics.sets.inc();
+                return Ok(());
+            }
+            // Re-stamp above the incumbent: its epoch, a fresh seq
+            // (strictly greater — the clock just observed it).
+            version = Version::new(winner.epoch, self.clock.next_seq());
         }
-        self.index.insert(&self.placer, key);
-        self.keys.insert(key);
-        self.metrics.sets.inc();
-        Ok(())
+        anyhow::bail!("set {key} kept losing to racing newer writes")
     }
 
     pub fn get(&mut self, key: DatumId) -> anyhow::Result<Option<Vec<u8>>> {

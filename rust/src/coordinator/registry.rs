@@ -14,6 +14,12 @@
 //! The registry is deliberately dumb: a mutex'd set, locked once per
 //! pipelined flush on the writer side and drained wholesale on the
 //! (rare) control-plane side.
+//!
+//! Under the sharded control plane the pool stays shard-agnostic: it
+//! registers into one shared registry, and
+//! [`crate::coordinator::shard::ShardMap::dispatch_writes`] drains it
+//! and routes each key to the owning shard coordinator's own registry
+//! slice — the same type, one instance per shard.
 
 use crate::algo::DatumId;
 use std::collections::HashSet;

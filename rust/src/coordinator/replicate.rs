@@ -212,15 +212,30 @@ impl ControlState {
 }
 
 /// Publishes/fetches [`ControlState`] blobs against the authority set.
+/// Keyed by a **shard id** on every authority (`0` = the unsharded
+/// slot; the owned range's start in the sharded control plane), so
+/// independent shard leaders replicate into disjoint slots.
 pub struct StateReplicator {
+    shard: u64,
     authorities: Vec<SocketAddr>,
     timeout: Duration,
 }
 
 impl StateReplicator {
+    /// Replicator for the unsharded (shard `0`) control-state slot.
     pub fn new(authorities: Vec<SocketAddr>, timeout: Duration) -> StateReplicator {
+        Self::for_shard(0, authorities, timeout)
+    }
+
+    /// Replicator for one shard's control-state slot.
+    pub fn for_shard(
+        shard: u64,
+        authorities: Vec<SocketAddr>,
+        timeout: Duration,
+    ) -> StateReplicator {
         assert!(!authorities.is_empty(), "need at least one state authority");
         StateReplicator {
+            shard,
             authorities,
             timeout,
         }
@@ -242,7 +257,7 @@ impl StateReplicator {
         let mut deposed_by = 0u64;
         let acks = crate::net::scatter(&self.authorities, |addr| {
             let mut conn = Conn::connect_timeout(addr, self.timeout).ok()?;
-            conn.state_put(term, blob.clone()).ok()
+            conn.state_put(self.shard, term, blob.clone()).ok()
         });
         for (ok, term) in acks.into_iter().flatten() {
             if ok {
@@ -281,7 +296,7 @@ impl StateReplicator {
         let mut blobs: Vec<Vec<u8>> = Vec::new();
         let replies = crate::net::scatter(&self.authorities, |addr| {
             let mut conn = Conn::connect_timeout(addr, self.timeout).ok()?;
-            conn.state_get().ok()
+            conn.state_get(self.shard).ok()
         });
         for reply in replies {
             match reply {
@@ -396,6 +411,26 @@ mod tests {
         assert!(err.to_string().contains("superseded"), "{err}");
         // ...and the fetch returns the successor's state.
         assert_eq!(rep.fetch_latest().unwrap(), Some(newer));
+    }
+
+    #[test]
+    fn per_shard_state_slots_are_disjoint() {
+        // Two shard leaders replicate into disjoint slots on the same
+        // authorities: terms are compared within a slot, never across.
+        let servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
+        let addrs: Vec<_> = servers.iter().map(|s| s.addr()).collect();
+        let a = StateReplicator::for_shard(0x100, addrs.clone(), Duration::from_millis(300));
+        let b = StateReplicator::for_shard(0x200, addrs, Duration::from_millis(300));
+        let mut sa = sample_state();
+        sa.term = 5;
+        a.publish(&sa).unwrap();
+        assert_eq!(b.fetch_latest().unwrap(), None, "other slot stays empty");
+        let mut sb = sample_state();
+        sb.term = 1; // a lower term in a different slot still applies
+        sb.keys = vec![9];
+        b.publish(&sb).unwrap();
+        assert_eq!(a.fetch_latest().unwrap(), Some(sa));
+        assert_eq!(b.fetch_latest().unwrap(), Some(sb));
     }
 
     #[test]

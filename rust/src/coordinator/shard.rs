@@ -1,0 +1,1152 @@
+//! Range-sharded control plane: K concurrent coordinators, each owning
+//! a contiguous slice of the key-ID space.
+//!
+//! PR 4 made the coordinator role *mobile* (leased leadership,
+//! replicated control state); this module makes it *plural*. A
+//! [`ShardMap`] splits the 64-bit key space into contiguous ranges,
+//! each owned by an independent [`Coordinator`] with its own storage
+//! nodes, membership epochs, writer-registry slice, repair queue, and
+//! term-numbered lease (the lease/state register on the authorities is
+//! keyed by the range's start — see [`super::election`] and the
+//! shard-keyed `LEASE`/`STATE` wire ops). Control-plane work —
+//! planning, migration, failure detection, repair pacing — then scales
+//! with the shard count instead of serializing through one leader,
+//! which is the §2.D "temporary central node" argument taken to its
+//! conclusion: the table is tiny, so run *many* of them.
+//!
+//! ## One data plane over many control planes
+//!
+//! Every shard coordinator publishes epochs into its own
+//! [`SnapshotCell`] exactly as before; the map folds those into one
+//! **composite** [`PlacerSnapshot`] (`shards` = sorted `(start,
+//! placer)` ranges, `addrs` = the union membership) through a single
+//! cell that [`crate::net::pool`] workers subscribe to. A worker
+//! resolves a key by one binary search over the immutable range table,
+//! then places through that shard's segment table — zero extra
+//! allocation on the hot path, and every pool feature (pipelining,
+//! quorum I/O, stale-route replay, write-back registration) works
+//! unchanged. The composite epoch is the sum of shard epochs plus a
+//! floor that absorbs merged-away shards, so it stays monotone.
+//!
+//! Pool write-backs land in one shared registry (the pool knows
+//! nothing of shards) and [`ShardMap::dispatch_writes`] routes each
+//! key to its owner's slice; all shard coordinators and the pool share
+//! one [`WriteClock`], so cross-shard hand-offs compare stamps from a
+//! single total order.
+//!
+//! ## Online split / merge
+//!
+//! [`ShardMap::split_with`] and [`ShardMap::merge`] move a range
+//! between coordinators with the same two-phase discipline as an
+//! in-shard migration: **copy** every key of the range to the new
+//! owner's placement (version-guarded, freshest surviving replica),
+//! **publish** the new composite (readers flip atomically), then
+//! **delete** the old copies behind per-key version guards — a refused
+//! guard means a live write raced the hand-off and the fresher value
+//! is re-copied before the guard retries ([`Coordinator::release_key`]).
+//! A post-publish reconcile drain converges writers that acked against
+//! the pre-hand-off snapshot, and [`ShardMap::reconcile_writes`] is
+//! the quiesce-time N-way sweep (probe every shard, converge on the
+//! owner) that closes the remaining window, exactly like the unsharded
+//! `Coordinator::reconcile_writes`.
+//!
+//! ## Always-on failover
+//!
+//! Each shard leader is shadowed by a [`ShadowStandby`] that watches
+//! the shard's lease through the failure detector
+//! ([`HealthMonitor::lease_tick_shard`]) on every tick — not only when
+//! a bench script decides to promote. When the leader stops renewing,
+//! the standby bids at a bumped term, fetches the shard's replicated
+//! [`ControlState`], and rebuilds the identical coordinator via
+//! [`Coordinator::promote_from`]; [`ShardMap::install`] puts it back
+//! and republishes. The data plane never notices: a headless shard
+//! keeps serving under its last published epoch.
+//!
+//! Known residual: cross-shard transactions (an op spanning two
+//! ranges) are out of scope — each key belongs to exactly one shard
+//! and ops are single-key, so the plane needs no cross-shard commit.
+
+use super::election::{LeaderLease, LeaseConfig, Role};
+use super::registry::KeyRegistry;
+use super::replicate::{ControlState, StateReplicator};
+use super::snapshot::{PlacerSnapshot, SnapshotCell};
+use super::{key_in_range, ControlHandles, Coordinator, ReleaseOutcome};
+use crate::algo::asura::AsuraPlacer;
+use crate::algo::{DatumId, NodeId, Placer};
+use crate::cluster::MigrationReport;
+use crate::fault::health::{HealthConfig, HealthEvent, HealthMonitor};
+use crate::fault::repair::{RepairTick, ReplicationAudit};
+use crate::net::pool::{PoolConfig, RouterPool};
+use crate::storage::{Version, WriteClock};
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+/// Bound on re-copy rounds when a cross-shard delete guard keeps being
+/// refused (same convergence argument as the in-shard migration's
+/// `MAX_DELETE_ROUNDS`: each extra round needs yet another racing
+/// write inside the delete window).
+const MAX_HANDOFF_ROUNDS: usize = 8;
+
+/// One shard of the control plane.
+struct Shard {
+    /// Inclusive lower bound of the owned range; bounded above by the
+    /// next shard's start (or the top of the key space). Doubles as
+    /// the shard's lease/state key on the authorities.
+    start: DatumId,
+    /// Attachment points that outlive the shard's coordinator process
+    /// (snapshot cell, registry/hint slices, shared clock) — what a
+    /// promoted standby adopts, and what keeps a headless shard's last
+    /// epoch serving.
+    handles: ControlHandles,
+    /// The live coordinator (`None` = headless: the leader crashed and
+    /// no standby has been installed yet).
+    coord: Option<Coordinator>,
+}
+
+/// What one range hand-off (split or merge) did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HandoffReport {
+    /// Keys moved across the range boundary.
+    pub moved: usize,
+    /// Bytes applied on the receiving shard.
+    pub bytes: u64,
+    /// Keys whose source-side delete was deferred (a stray stale,
+    /// version-guarded copy was left for repair/reconcile).
+    pub deferred: usize,
+    /// Late-registered writers converged by the post-publish
+    /// reconcile drain.
+    pub reconciled: usize,
+}
+
+/// K concurrent coordinators over disjoint contiguous key ranges,
+/// publishing one composite snapshot for the data plane.
+pub struct ShardMap {
+    /// Ascending by `start`; `shards[0].start == 0` always, so every
+    /// key has exactly one owner.
+    shards: Vec<Shard>,
+    replicas: usize,
+    /// The composite publication point pool workers subscribe to.
+    composite: Arc<SnapshotCell>,
+    /// Pool-facing write-back registry (the pool is shard-agnostic);
+    /// drained and routed per owner by [`Self::dispatch_writes`].
+    registry: Arc<KeyRegistry>,
+    /// Pool-facing degraded-write hints, routed the same way.
+    repair_hints: Arc<KeyRegistry>,
+    /// One total write order shared by every shard coordinator and the
+    /// pool.
+    clock: WriteClock,
+    /// Epochs of merged-away shards, folded into the composite epoch
+    /// so it stays monotone when a shard's contribution leaves the
+    /// sum.
+    epoch_floor: u64,
+    /// Keys a reconcile sweep could not converge yet (owner headless,
+    /// or a holder short of RF). Kept map-level — NOT in the shared
+    /// pool registry, which [`Self::dispatch_writes`] drains into
+    /// per-shard slices — so every subsequent
+    /// [`Self::reconcile_writes`] retries them across *all* shards.
+    unresolved: std::collections::HashSet<DatumId>,
+}
+
+impl ShardMap {
+    /// A sharded control plane with one shard owning the whole key
+    /// space. Grow it with [`Self::split_with`]. Every shard
+    /// coordinator shares this map's write clock and publishes into
+    /// one composite snapshot.
+    pub fn new(replicas: usize) -> ShardMap {
+        let clock = WriteClock::new();
+        let first = Coordinator::with_clock(replicas, clock.clone());
+        let handles = first.handles();
+        let mut map = ShardMap {
+            shards: vec![Shard {
+                start: 0,
+                handles,
+                coord: Some(first),
+            }],
+            replicas: replicas.max(1),
+            composite: SnapshotCell::new(PlacerSnapshot::empty(replicas)),
+            registry: Arc::new(KeyRegistry::new()),
+            repair_hints: Arc::new(KeyRegistry::new()),
+            clock,
+            epoch_floor: 0,
+            unresolved: std::collections::HashSet::new(),
+        };
+        map.republish();
+        map
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// The owned ranges, ascending: `(start, end)` with `end == None`
+    /// for the last shard (to the top of the key space).
+    pub fn ranges(&self) -> Vec<(DatumId, Option<DatumId>)> {
+        let mut out = Vec::with_capacity(self.shards.len());
+        for (i, shard) in self.shards.iter().enumerate() {
+            out.push((shard.start, self.shards.get(i + 1).map(|s| s.start)));
+        }
+        out
+    }
+
+    /// Index of the shard owning `key` (total: every key has one).
+    pub fn shard_of(&self, key: DatumId) -> usize {
+        match self.shards.binary_search_by(|s| s.start.cmp(&key)) {
+            Ok(i) => i,
+            // shards[0].start == 0 makes the insertion point >= 1.
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Range start of shard `idx` — its lease/state key on the
+    /// authorities by convention.
+    pub fn shard_start(&self, idx: usize) -> DatumId {
+        self.shards[idx].start
+    }
+
+    /// The shard's live coordinator, if it has one.
+    pub fn coordinator(&self, idx: usize) -> Option<&Coordinator> {
+        self.shards[idx].coord.as_ref()
+    }
+
+    /// Mutable access for direct control ops; callers that change
+    /// membership through this must follow with [`Self::republish`].
+    pub fn coordinator_mut(&mut self, idx: usize) -> Option<&mut Coordinator> {
+        self.shards[idx].coord.as_mut()
+    }
+
+    /// The shard's durable attachment points (what a [`ShadowStandby`]
+    /// promotes over).
+    pub fn handles(&self, idx: usize) -> ControlHandles {
+        self.shards[idx].handles.clone()
+    }
+
+    /// The composite publication point pool workers subscribe to.
+    pub fn snapshot_cell(&self) -> Arc<SnapshotCell> {
+        Arc::clone(&self.composite)
+    }
+
+    /// The currently published composite snapshot.
+    pub fn snapshot(&self) -> Arc<PlacerSnapshot> {
+        self.composite.load()
+    }
+
+    /// The shared pool-facing writer registry (acked SET keys land
+    /// here until [`Self::dispatch_writes`] routes them to owners).
+    pub fn key_registry(&self) -> Arc<KeyRegistry> {
+        Arc::clone(&self.registry)
+    }
+
+    /// Spawn a [`RouterPool`] over the composite snapshot, wired to
+    /// the map's shared registry, hint channel and write clock — the
+    /// sharded analogue of `Coordinator::connect_pool`.
+    pub fn connect_pool(&self, cfg: PoolConfig) -> std::io::Result<RouterPool> {
+        RouterPool::connect(
+            &self.composite,
+            PoolConfig {
+                registry: Some(Arc::clone(&self.registry)),
+                repair_hints: Some(Arc::clone(&self.repair_hints)),
+                clock: self.clock.clone(),
+                ..cfg
+            },
+        )
+    }
+
+    /// Route every pending pool write-back (and repair hint) to its
+    /// owning shard's registry slice. Runs before every control
+    /// operation, so each shard's planning covers the data-plane
+    /// writes in its range — including a headless shard's, whose slice
+    /// the promoted standby adopts.
+    pub fn dispatch_writes(&mut self) {
+        for key in self.registry.drain() {
+            let owner = self.shard_of(key);
+            self.shards[owner].handles.registry.register(key);
+        }
+        self.route_hints();
+    }
+
+    /// Route every pending degraded-write hint to its owning shard's
+    /// slice (the one hint-routing rule, shared by every drain path).
+    fn route_hints(&mut self) {
+        for key in self.repair_hints.drain() {
+            let owner = self.shard_of(key);
+            self.shards[owner].handles.repair_hints.register(key);
+        }
+    }
+
+    /// Fold every shard's published snapshot into the composite and
+    /// publish it: sorted `(start, placer)` ranges, union address map,
+    /// union suspects, epoch = floor + sum of shard epochs (monotone),
+    /// term = the highest shard term.
+    pub fn republish(&mut self) {
+        let mut shards = Vec::with_capacity(self.shards.len());
+        let mut addrs: Vec<(NodeId, SocketAddr)> = Vec::new();
+        let mut suspects: Vec<NodeId> = Vec::new();
+        let mut epoch = self.epoch_floor;
+        let mut term = 0u64;
+        for shard in &self.shards {
+            let snap = shard.handles.cell.load();
+            shards.push((shard.start, snap.placer.clone()));
+            addrs.extend(snap.addrs.iter().copied());
+            suspects.extend(snap.suspects.iter().copied());
+            epoch += snap.epoch;
+            term = term.max(snap.term);
+        }
+        addrs.sort_unstable_by_key(|&(n, _)| n);
+        suspects.sort_unstable();
+        self.composite.publish(PlacerSnapshot {
+            epoch,
+            term,
+            placer: AsuraPlacer::new(),
+            addrs,
+            replicas: self.replicas,
+            suspects,
+            shards,
+        });
+    }
+
+    fn ensure_new_node(&self, id: NodeId) -> anyhow::Result<()> {
+        for (i, shard) in self.shards.iter().enumerate() {
+            if shard.handles.cell.load().addr_of(id).is_some() {
+                anyhow::bail!("node {id} is already a member of shard {i}");
+            }
+        }
+        Ok(())
+    }
+
+    fn live_coord(&mut self, idx: usize) -> anyhow::Result<&mut Coordinator> {
+        anyhow::ensure!(idx < self.shards.len(), "no shard {idx}");
+        match self.shards[idx].coord.as_mut() {
+            Some(coord) => Ok(coord),
+            None => Err(anyhow::anyhow!("shard {idx} has no live coordinator")),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Membership / fault passthroughs (dispatch first, republish after).
+    // ------------------------------------------------------------------
+
+    /// Spawn an in-process node server and join it to shard `idx`.
+    /// Node ids are globally unique across shards.
+    pub fn spawn_node(
+        &mut self,
+        idx: usize,
+        id: NodeId,
+        capacity: f64,
+    ) -> anyhow::Result<MigrationReport> {
+        self.ensure_new_node(id)?;
+        self.dispatch_writes();
+        let report = self.live_coord(idx)?.spawn_node(id, capacity)?;
+        self.republish();
+        Ok(report)
+    }
+
+    /// Join an externally started node server to shard `idx`.
+    pub fn join_external(
+        &mut self,
+        idx: usize,
+        id: NodeId,
+        capacity: f64,
+        addr: SocketAddr,
+    ) -> anyhow::Result<MigrationReport> {
+        self.ensure_new_node(id)?;
+        self.dispatch_writes();
+        let report = self.live_coord(idx)?.join_external(id, capacity, addr)?;
+        self.republish();
+        Ok(report)
+    }
+
+    /// Decommission a node from shard `idx` (its data drains within
+    /// the shard).
+    pub fn decommission(&mut self, idx: usize, id: NodeId) -> anyhow::Result<MigrationReport> {
+        self.dispatch_writes();
+        let report = self.live_coord(idx)?.decommission(id)?;
+        self.republish();
+        Ok(report)
+    }
+
+    /// Crash an owned node of shard `idx` (the detector has to notice,
+    /// as with a real crash).
+    pub fn kill_node(&mut self, idx: usize, id: NodeId) -> anyhow::Result<()> {
+        self.live_coord(idx)?.kill_node(id)
+    }
+
+    /// Adopt a won lease term for shard `idx` and republish.
+    pub fn set_term(&mut self, idx: usize, term: u64) -> anyhow::Result<()> {
+        self.live_coord(idx)?.set_term(term);
+        self.republish();
+        Ok(())
+    }
+
+    /// Apply a probe round's verdicts to shard `idx` and republish
+    /// (suspects steer reads; deaths bump the shard epoch and queue
+    /// repair). Returns the keys newly queued.
+    pub fn apply_health_events(
+        &mut self,
+        idx: usize,
+        events: &[HealthEvent],
+    ) -> anyhow::Result<usize> {
+        self.dispatch_writes();
+        let queued = self.live_coord(idx)?.apply_health_events(events)?;
+        self.republish();
+        Ok(queued)
+    }
+
+    /// One paced repair batch on shard `idx`.
+    pub fn repair_step(&mut self, idx: usize, max_keys: usize) -> anyhow::Result<RepairTick> {
+        self.dispatch_writes();
+        self.live_coord(idx)?.repair_step(max_keys)
+    }
+
+    /// Keys awaiting re-replication across every live shard.
+    pub fn repair_pending(&self) -> usize {
+        let mut pending = 0;
+        for shard in &self.shards {
+            if let Some(coord) = &shard.coord {
+                pending += coord.repair_pending();
+            }
+        }
+        pending
+    }
+
+    /// Queue keys for repair, each on its owning shard (headless
+    /// shards track them through their registry slice instead).
+    pub fn enqueue_repair(&mut self, keys: impl IntoIterator<Item = DatumId>) {
+        for key in keys {
+            let owner = self.shard_of(key);
+            match self.shards[owner].coord.as_mut() {
+                Some(coord) => coord.enqueue_repair([key]),
+                None => self.shards[owner].handles.repair_hints.register(key),
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Data passthroughs (route by key).
+    // ------------------------------------------------------------------
+
+    /// Control-plane write through the owning shard's coordinator.
+    /// Initially stamped under the *shard's* epoch, which the pool's
+    /// composite-epoch stamps always exceed — `Coordinator::set`
+    /// re-stamps above any refusing incumbent, so the write lands
+    /// either way; still, route live traffic through the pool and keep
+    /// this for preload/admin, like `Coordinator::set` in the
+    /// unsharded plane.
+    pub fn set(&mut self, key: DatumId, value: &[u8]) -> anyhow::Result<()> {
+        let idx = self.shard_of(key);
+        self.live_coord(idx)?.set(key, value)
+    }
+
+    /// Read through the owning shard's coordinator.
+    pub fn get(&mut self, key: DatumId) -> anyhow::Result<Option<Vec<u8>>> {
+        let idx = self.shard_of(key);
+        self.live_coord(idx)?.get(key)
+    }
+
+    /// Keys under management across every live shard.
+    pub fn key_count(&self) -> usize {
+        let mut count = 0;
+        for shard in &self.shards {
+            if let Some(coord) = &shard.coord {
+                count += coord.key_count();
+            }
+        }
+        count
+    }
+
+    /// Verify every registered key readable, shard by shard. Requires
+    /// every shard to have a live coordinator.
+    pub fn verify_all_readable(&mut self) -> anyhow::Result<usize> {
+        self.dispatch_writes();
+        let mut ok = 0;
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            let coord = shard
+                .coord
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("shard {i} has no live coordinator"))?;
+            ok += coord.verify_all_readable()?;
+        }
+        Ok(ok)
+    }
+
+    /// Holder audit across every shard, aggregated. Requires every
+    /// shard to have a live coordinator.
+    pub fn audit_all(&mut self) -> anyhow::Result<ReplicationAudit> {
+        self.dispatch_writes();
+        let mut total = ReplicationAudit::default();
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            let coord = shard
+                .coord
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("shard {i} has no live coordinator"))?;
+            let audit = coord.audit_replication()?;
+            total.keys += audit.keys;
+            total.fully_replicated += audit.fully_replicated;
+            total.under_keys.extend(audit.under_keys);
+        }
+        total.under_keys.sort_unstable();
+        Ok(total)
+    }
+
+    // ------------------------------------------------------------------
+    // Failover: headless shards and standby installation.
+    // ------------------------------------------------------------------
+
+    /// Export shard `idx`'s reassignable control state (for
+    /// [`StateReplicator::publish`] under the shard's key).
+    pub fn export_state(&mut self, idx: usize) -> anyhow::Result<ControlState> {
+        self.dispatch_writes();
+        Ok(self.live_coord(idx)?.export_control_state())
+    }
+
+    /// Take shard `idx`'s coordinator out of the map (simulating —
+    /// or acknowledging — a leader crash). The shard turns headless:
+    /// its last published epoch keeps serving the data plane, its
+    /// registry slice keeps accumulating, and a promoted standby is
+    /// put back via [`Self::install`].
+    pub fn take_coordinator(&mut self, idx: usize) -> Option<Coordinator> {
+        self.shards.get_mut(idx).and_then(|s| s.coord.take())
+    }
+
+    /// Install a promoted coordinator as shard `idx`'s leader and
+    /// publish its bumped epoch through the composite. It must have
+    /// been promoted over this shard's own handles
+    /// ([`Self::handles`]), so the cell, registry slice and clock all
+    /// line up.
+    pub fn install(&mut self, idx: usize, coord: Coordinator) -> anyhow::Result<()> {
+        anyhow::ensure!(idx < self.shards.len(), "no shard {idx}");
+        anyhow::ensure!(
+            self.shards[idx].coord.is_none(),
+            "shard {idx} already has a live coordinator"
+        );
+        self.shards[idx].coord = Some(coord);
+        self.republish();
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Online split / merge.
+    // ------------------------------------------------------------------
+
+    /// Split the shard owning `at` at that key: a new shard takes
+    /// `[at, old end)` on its own storage nodes, which `join` supplies
+    /// by joining them into the fresh coordinator (spawned or
+    /// external). Copy → publish → delete, version-guarded end to end;
+    /// live traffic keeps flowing through both phases.
+    pub fn split_with<F>(&mut self, at: DatumId, join: F) -> anyhow::Result<HandoffReport>
+    where
+        F: FnOnce(&mut Coordinator) -> anyhow::Result<()>,
+    {
+        let src_idx = self.shard_of(at);
+        anyhow::ensure!(
+            at != self.shards[src_idx].start,
+            "split point {at:#x} is already a range boundary"
+        );
+        anyhow::ensure!(
+            self.shards[src_idx].coord.is_some(),
+            "shard {src_idx} has no live coordinator"
+        );
+        // Route pending write-backs under the pre-split map, so the
+        // source shard's key set is current before the plan is taken.
+        self.dispatch_writes();
+        let hi = self.shards.get(src_idx + 1).map(|s| s.start);
+        let mut dst = Coordinator::with_clock(self.replicas, self.clock.clone());
+        join(&mut dst)?;
+        anyhow::ensure!(
+            dst.placer().node_count() >= 1,
+            "a new shard needs at least one storage node"
+        );
+        for (id, _) in dst.node_addrs() {
+            self.ensure_new_node(id)?;
+        }
+        let mut report = HandoffReport::default();
+        // Copy phase: the new shard receives every key of its range
+        // while readers keep routing to the source.
+        let src = self.shards[src_idx].coord.as_mut().expect("checked live");
+        let keys = src.keys_in_range(at, hi);
+        let moves = copy_range(src, &mut dst, &keys, &mut report)?;
+        // Publish: the composite now routes [at, hi) to the new shard.
+        let handles = dst.handles();
+        self.shards.insert(
+            src_idx + 1,
+            Shard {
+                start: at,
+                handles,
+                coord: Some(dst),
+            },
+        );
+        self.republish();
+        // Delete phase: drop the source-side copies behind the guard.
+        {
+            let (left, right) = self.shards.split_at_mut(src_idx + 1);
+            let src = left[src_idx].coord.as_mut().expect("checked live");
+            let dst = right[0].coord.as_mut().expect("just inserted");
+            delete_range(src, dst, moves, &mut report);
+        }
+        // Reconcile writers that acked against the pre-split snapshot.
+        let late = self.drain_moved(at, hi);
+        let (left, right) = self.shards.split_at_mut(src_idx + 1);
+        let src = left[src_idx].coord.as_mut().expect("checked live");
+        let dst = right[0].coord.as_mut().expect("just inserted");
+        for key in late {
+            if converge_pair(dst, src, key) {
+                report.reconciled += 1;
+            } else {
+                self.unresolved.insert(key);
+            }
+        }
+        Ok(report)
+    }
+
+    /// Merge shard `idx + 1` into shard `idx`: its keys move onto the
+    /// absorbing shard's placement (copy → publish → delete), its
+    /// range folds into the absorber, and its coordinator — with any
+    /// owned node servers — is retired. Both coordinators must be
+    /// live.
+    pub fn merge(&mut self, idx: usize) -> anyhow::Result<HandoffReport> {
+        anyhow::ensure!(
+            idx + 1 < self.shards.len(),
+            "merge needs shards {idx} and {}",
+            idx + 1
+        );
+        anyhow::ensure!(
+            self.shards[idx].coord.is_some() && self.shards[idx + 1].coord.is_some(),
+            "merge needs both shard coordinators live"
+        );
+        self.dispatch_writes();
+        let lo = self.shards[idx + 1].start;
+        let hi = self.shards.get(idx + 2).map(|s| s.start);
+        let mut report = HandoffReport::default();
+        // Copy phase: the absorbing shard receives everything the
+        // retiring shard manages; readers still route to the retiree.
+        let moves = {
+            let (left, right) = self.shards.split_at_mut(idx + 1);
+            let dst = left[idx].coord.as_mut().expect("checked live");
+            let src = right[0].coord.as_mut().expect("checked live");
+            let keys = src.keys_in_range(0, None);
+            copy_range(src, dst, &keys, &mut report)?
+        };
+        // Publish: the retiring shard leaves the map; its epoch folds
+        // into the floor so the composite epoch stays monotone.
+        let mut retired = self.shards.remove(idx + 1);
+        self.epoch_floor += retired.handles.cell.load().epoch;
+        self.republish();
+        // Delete phase against the retired coordinator we still own.
+        {
+            let src = retired.coord.as_mut().expect("checked live");
+            let dst = self.shards[idx].coord.as_mut().expect("checked live");
+            delete_range(src, dst, moves, &mut report);
+        }
+        // Late-writer reconcile over the absorbed range: two passes,
+        // so a write acked by an in-flight pre-merge op group during
+        // the first pass still converges while the retiree's nodes
+        // remain probeable — once `retired` drops, they leave the
+        // probe domain for good (callers should merge with traffic
+        // over the retiring range quiesced).
+        for _ in 0..2 {
+            let late = self.drain_moved(lo, hi);
+            let src = retired.coord.as_mut().expect("checked live");
+            let dst = self.shards[idx].coord.as_mut().expect("checked live");
+            for key in late {
+                if converge_pair(dst, src, key) {
+                    report.reconciled += 1;
+                } else {
+                    self.unresolved.insert(key);
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Drain the shared write-back registry around a hand-off: keys in
+    /// the moved range `[lo, hi)` come back for cross-shard
+    /// convergence; everything else routes to its owner, as do all
+    /// pending repair hints.
+    fn drain_moved(&mut self, lo: DatumId, hi: Option<DatumId>) -> Vec<DatumId> {
+        let mut moved = Vec::new();
+        for key in self.registry.drain() {
+            if key_in_range(key, lo, hi) {
+                moved.push(key);
+            } else {
+                let owner = self.shard_of(key);
+                self.shards[owner].handles.registry.register(key);
+            }
+        }
+        self.route_hints();
+        moved
+    }
+
+    /// Quiesce-time write convergence across the whole map: drain the
+    /// shared registry and make each drained key's *owning* shard hold
+    /// its freshest copy, probing **every** shard for it — a write
+    /// routed by a pre-hand-off snapshot may sit on a range's former
+    /// owner, where the owning shard's own planning would never look.
+    /// Strays found on non-owners are guard-deleted at the converged
+    /// version — only after the owner holds the copy at full RF. Keys
+    /// that cannot converge yet (owner headless, a holder unreachable)
+    /// are parked back in the shared registry for the next sweep. Then
+    /// every live shard runs its own reconcile drain. The sharded
+    /// mirror of `Coordinator::reconcile_writes`; batch drivers call
+    /// it once traffic quiesces, with every shard leader installed.
+    pub fn reconcile_writes(&mut self) -> usize {
+        self.route_hints();
+        let mut late = self.registry.drain();
+        late.extend(self.unresolved.drain());
+        let mut reconciled = 0usize;
+        for key in late {
+            let owner = self.shard_of(key);
+            let mut best: Option<(Version, Vec<u8>)> = None;
+            let mut holders: Vec<usize> = Vec::new();
+            for (i, shard) in self.shards.iter_mut().enumerate() {
+                let Some(coord) = shard.coord.as_mut() else {
+                    continue;
+                };
+                if let Some((version, value)) = coord.fetch_key(key) {
+                    if version.beats(&best) {
+                        best = Some((version, value));
+                    }
+                    holders.push(i);
+                }
+            }
+            let Some((version, value)) = best else {
+                // Acked under a quorum unreachable at this instant:
+                // park the key so the next N-way sweep re-probes every
+                // shard for it (an owner's own drain would only ever
+                // look at its own members).
+                self.unresolved.insert(key);
+                continue;
+            };
+            let ingested = match self.shards[owner].coord.as_mut() {
+                Some(dst) => dst.ingest_copy(key, version, &value).is_some(),
+                None => false,
+            };
+            if !ingested {
+                // Headless owner, or the owner's replica set would not
+                // take the copy at full RF: leave every stray in place
+                // (one of them may be the only durable copy) and keep
+                // the key in the N-way domain for the next sweep.
+                self.unresolved.insert(key);
+                continue;
+            }
+            for i in holders {
+                if i == owner {
+                    continue;
+                }
+                // Guard-delete the stray, handling a write that raced
+                // onto it since the survey exactly like the hand-off
+                // delete phase: re-ingest the fresher value at the
+                // owner, then retry the release at its version.
+                let mut guard = version;
+                let mut rounds = 0;
+                loop {
+                    if rounds == MAX_HANDOFF_ROUNDS {
+                        self.unresolved.insert(key);
+                        break;
+                    }
+                    rounds += 1;
+                    let outcome = match self.shards[i].coord.as_mut() {
+                        Some(coord) => coord.release_key(key, guard),
+                        None => break,
+                    };
+                    match outcome {
+                        ReleaseOutcome::Released | ReleaseOutcome::Deferred => break,
+                        ReleaseOutcome::Newer(ver, bytes) => {
+                            let ok = match self.shards[owner].coord.as_mut() {
+                                Some(dst) => dst.ingest_copy(key, ver, &bytes).is_some(),
+                                None => false,
+                            };
+                            if !ok {
+                                self.unresolved.insert(key);
+                                break;
+                            }
+                            guard = ver;
+                        }
+                    }
+                }
+            }
+            reconciled += 1;
+        }
+        for shard in &mut self.shards {
+            if let Some(coord) = shard.coord.as_mut() {
+                coord.reconcile_writes();
+            }
+        }
+        reconciled
+    }
+}
+
+/// Copy every key from `src` to `dst` at its freshest surviving
+/// version (version-guarded on the receiving side — a racing newer
+/// write on `dst`'s nodes is never clobbered). Returns the per-key
+/// guard versions for the delete phase. A copy the receiving side
+/// cannot hold at full RF aborts the hand-off — this runs strictly
+/// before publication, so aborting is safe (readers never routed to
+/// the receiver), whereas proceeding to the delete phase could remove
+/// the only durable copy.
+fn copy_range(
+    src: &mut Coordinator,
+    dst: &mut Coordinator,
+    keys: &[DatumId],
+    report: &mut HandoffReport,
+) -> anyhow::Result<Vec<(DatumId, Version)>> {
+    let mut moves = Vec::with_capacity(keys.len());
+    for &key in keys {
+        let (version, value) = src
+            .fetch_key(key)
+            .ok_or_else(|| anyhow::anyhow!("datum {key} unreadable during range hand-off"))?;
+        let Some(bytes) = dst.ingest_copy(key, version, &value) else {
+            anyhow::bail!("datum {key} could not replicate to the receiving shard");
+        };
+        report.bytes += bytes;
+        report.moved += 1;
+        moves.push((key, version));
+    }
+    Ok(moves)
+}
+
+/// Guard-delete the moved copies from `src`, re-copying to `dst`
+/// whenever a racing write refused a guard — the cross-shard mirror
+/// of the in-shard migration delete phase. Runs strictly after the
+/// new composite is published.
+fn delete_range(
+    src: &mut Coordinator,
+    dst: &mut Coordinator,
+    moves: Vec<(DatumId, Version)>,
+    report: &mut HandoffReport,
+) {
+    for (key, mut guard) in moves {
+        let mut rounds = 0;
+        loop {
+            if rounds == MAX_HANDOFF_ROUNDS {
+                // Outlasted by a pathological racing writer; the
+                // freshest observed value is already on `dst`, and the
+                // quiesce reconcile converges the remainder.
+                report.deferred += 1;
+                break;
+            }
+            rounds += 1;
+            match src.release_key(key, guard) {
+                ReleaseOutcome::Released => break,
+                ReleaseOutcome::Deferred => {
+                    report.deferred += 1;
+                    break;
+                }
+                ReleaseOutcome::Newer(version, value) => {
+                    if dst.ingest_copy(key, version, &value).is_none() {
+                        // The racing write's value is not yet durable
+                        // on the new owner — leave the source copy in
+                        // place (never delete the only fresh copy) and
+                        // let repair/reconcile finish the hand-off.
+                        report.deferred += 1;
+                        break;
+                    }
+                    guard = version;
+                }
+            }
+        }
+    }
+}
+
+/// Converge one late-registered key onto `dst` (its owner after a
+/// hand-off): the freshest copy on either side wins, `dst`'s replica
+/// set receives it, and a source-side stray is guard-deleted at that
+/// version — but only once the owner actually holds the value at full
+/// RF (a stray must never be deleted while it may be the only durable
+/// copy). `false` = not converged (no copy reachable, or the owner
+/// could not take it); the caller keeps the key tracked instead of
+/// dropping it.
+fn converge_pair(dst: &mut Coordinator, src: &mut Coordinator, key: DatumId) -> bool {
+    let best_src = src.fetch_key(key);
+    let src_held = best_src.is_some();
+    let best_dst = dst.fetch_key(key);
+    let best = match (best_src, best_dst) {
+        (Some(a), Some(b)) => Some(if a.0 >= b.0 { a } else { b }),
+        (a, b) => a.or(b),
+    };
+    let Some((version, value)) = best else {
+        return false;
+    };
+    if dst.ingest_copy(key, version, &value).is_none() {
+        return false;
+    }
+    if src_held {
+        // One guarded sweep; a still-racing writer is left for the
+        // quiesce-time reconcile.
+        let _ = src.release_key(key, version);
+    }
+    true
+}
+
+/// Leader-side bundle for one shard: the term-numbered lease the
+/// shard's coordinator acts under, plus the replicator its control
+/// state shadows through — both keyed by the shard's range start on
+/// the authorities.
+pub struct ShardLeader {
+    lease: LeaderLease,
+    replicator: StateReplicator,
+}
+
+impl ShardLeader {
+    /// `shard_key` is the lease/state register on the authorities —
+    /// by convention the shard's range start
+    /// ([`ShardMap::shard_start`]).
+    pub fn new(
+        shard_key: u64,
+        candidate: u64,
+        authorities: Vec<SocketAddr>,
+        cfg: LeaseConfig,
+    ) -> ShardLeader {
+        let timeout = cfg.timeout;
+        ShardLeader {
+            lease: LeaderLease::for_shard(shard_key, candidate, authorities.clone(), cfg),
+            replicator: StateReplicator::for_shard(shard_key, authorities, timeout),
+        }
+    }
+
+    /// Win (or renew) the shard lease; an error names the incumbent.
+    pub fn elect(&mut self) -> anyhow::Result<u64> {
+        match self.lease.tick() {
+            Role::Leader { term } => Ok(term),
+            Role::Follower { term, holder } => {
+                anyhow::bail!("shard lease held by candidate {holder} at term {term}")
+            }
+        }
+    }
+
+    /// One renewal round (call on the control-loop cadence).
+    pub fn renew(&mut self) -> Role {
+        self.lease.tick()
+    }
+
+    /// Whether this leader may act right now (majority grant, local
+    /// TTL unexpired).
+    pub fn is_leader(&self) -> bool {
+        self.lease.is_leader()
+    }
+
+    pub fn term(&self) -> u64 {
+        self.lease.term()
+    }
+
+    /// Replicate the shard's exported control state to the
+    /// authorities.
+    pub fn publish_state(&self, state: &ControlState) -> std::io::Result<usize> {
+        self.replicator.publish(state)
+    }
+}
+
+/// Always-on shadow standby for one shard leader. Each [`Self::tick`]
+/// watches the shard's lease through the failure detector's
+/// consecutive-miss threshold; once the leader reads as lost it bids
+/// at a bumped term and — holding the lease — fetches the shard's
+/// replicated control state and rebuilds the identical coordinator
+/// ([`Coordinator::promote_from`]). This replaces bench-driven
+/// promotion: the standby heartbeats continuously, and failover needs
+/// no external trigger.
+pub struct ShadowStandby {
+    shard_key: u64,
+    authorities: Vec<SocketAddr>,
+    lease: LeaderLease,
+    watch: HealthMonitor,
+    replicator: StateReplicator,
+}
+
+impl ShadowStandby {
+    pub fn new(
+        shard_key: u64,
+        candidate: u64,
+        authorities: Vec<SocketAddr>,
+        lease_cfg: LeaseConfig,
+        health_cfg: HealthConfig,
+    ) -> ShadowStandby {
+        let timeout = lease_cfg.timeout;
+        ShadowStandby {
+            shard_key,
+            authorities: authorities.clone(),
+            lease: LeaderLease::for_shard(shard_key, candidate, authorities.clone(), lease_cfg),
+            watch: HealthMonitor::new(health_cfg),
+            replicator: StateReplicator::for_shard(shard_key, authorities, timeout),
+        }
+    }
+
+    /// One heartbeat of the shadow loop. `Ok(None)` = the leader still
+    /// holds its lease, the vacancy is within grace, or the bid split
+    /// below a majority; `Ok(Some((term, coord)))` = this standby won
+    /// the lease and rebuilt the shard's coordinator — install it with
+    /// [`ShardMap::install`].
+    pub fn tick(
+        &mut self,
+        handles: &ControlHandles,
+    ) -> anyhow::Result<Option<(u64, Coordinator)>> {
+        if !self.lease.is_leader() {
+            let verdict = self.watch.lease_tick_shard(self.shard_key, &self.authorities);
+            if !verdict.leader_lost {
+                return Ok(None);
+            }
+            if !matches!(self.lease.tick(), Role::Leader { .. }) {
+                return Ok(None);
+            }
+        }
+        let term = self.lease.term();
+        let state = self.replicator.fetch_latest()?.ok_or_else(|| {
+            anyhow::anyhow!("no replicated control state for shard {:#x}", self.shard_key)
+        })?;
+        let coord = Coordinator::promote_from(&state, term, handles.clone())?;
+        Ok(Some((term, coord)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::client::Conn;
+
+    /// A map with one shard of `nodes` spawned in-process nodes.
+    fn single_shard_map(replicas: usize, nodes: u32) -> ShardMap {
+        let mut map = ShardMap::new(replicas);
+        for i in 0..nodes {
+            map.spawn_node(0, i, 1.0).unwrap();
+        }
+        map
+    }
+
+    #[test]
+    fn single_shard_map_serves_like_a_coordinator() {
+        let mut map = single_shard_map(1, 3);
+        for k in 0..200u64 {
+            map.set(k, &k.to_le_bytes()).unwrap();
+        }
+        assert_eq!(map.verify_all_readable().unwrap(), 200);
+        assert_eq!(map.shard_of(u64::MAX), 0);
+        let snap = map.snapshot();
+        assert!(snap.is_coherent());
+        assert_eq!(snap.addrs.len(), 3);
+        assert_eq!(map.ranges(), vec![(0, None)]);
+    }
+
+    #[test]
+    fn split_moves_exactly_the_upper_range_and_merge_returns_it() {
+        let mut map = single_shard_map(2, 4);
+        let keys: Vec<u64> = (0..300u64).map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).collect();
+        for &k in &keys {
+            map.set(k, &k.to_le_bytes()).unwrap();
+        }
+        let at = u64::MAX / 2;
+        let upper = keys.iter().filter(|&&k| k >= at).count();
+        let report = map
+            .split_with(at, |coord| {
+                for id in 100..104u32 {
+                    coord.spawn_node(id, 1.0)?;
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(report.moved, upper, "split must move exactly the upper range");
+        assert_eq!(map.ranges(), vec![(0, Some(at)), (at, None)]);
+        assert!(map.snapshot().is_coherent());
+        // Every key readable, each from its owning shard.
+        assert_eq!(map.verify_all_readable().unwrap(), 300);
+        assert_eq!(map.coordinator(1).unwrap().key_count(), upper);
+        let audit = map.audit_all().unwrap();
+        assert_eq!(audit.keys, 300);
+        assert!(audit.is_full(), "under: {:?}", audit.under_keys);
+        // Merge folds the range (and the keys) back.
+        let report = map.merge(0).unwrap();
+        assert_eq!(report.moved, upper);
+        assert_eq!(map.ranges(), vec![(0, None)]);
+        assert_eq!(map.verify_all_readable().unwrap(), 300);
+        assert!(map.audit_all().unwrap().is_full());
+    }
+
+    #[test]
+    fn split_rejects_boundaries_and_duplicate_node_ids() {
+        let mut map = single_shard_map(1, 2);
+        assert!(map.split_with(0, |_| Ok(())).is_err(), "range boundary");
+        let err = map
+            .split_with(1 << 32, |coord| {
+                coord.spawn_node(0, 1.0)?; // id 0 already in shard 0
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("already a member"), "{err}");
+        let err = map.split_with(1 << 32, |_| Ok(())).unwrap_err();
+        assert!(err.to_string().contains("at least one"), "{err}");
+    }
+
+    #[test]
+    fn reconcile_writes_converges_a_cross_shard_stray() {
+        // A writer routed by the pre-split snapshot lands its value on
+        // the *source* shard's nodes after the hand-off; the N-way
+        // quiesce reconcile must find it, converge it onto the owner,
+        // and guard-delete the stray.
+        let mut map = single_shard_map(1, 2);
+        let at = u64::MAX / 2;
+        let key = at + 17;
+        map.set(key, b"old").unwrap();
+        map.split_with(at, |coord| {
+            coord.spawn_node(50, 1.0)?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(map.get(key).unwrap(), Some(b"old".to_vec()));
+        // The stray: a fresher copy on a shard-0 node, registered in
+        // the shared (pool-facing) registry but never dispatched.
+        let src_snap = map.coordinator(0).unwrap().snapshot();
+        let addr = src_snap.addrs[0].1;
+        let mut conn = Conn::connect(addr).unwrap();
+        let fresh = Version::new(u64::MAX, 1);
+        conn.vset(key, fresh, b"new".to_vec()).unwrap();
+        map.key_registry().register(key);
+        let reconciled = map.reconcile_writes();
+        assert_eq!(reconciled, 1);
+        assert_eq!(map.get(key).unwrap(), Some(b"new".to_vec()));
+        assert!(
+            conn.vget(key).unwrap().is_none(),
+            "stray copy must be released from the former owner"
+        );
+        assert!(map.audit_all().unwrap().is_full());
+    }
+
+    #[test]
+    fn control_plane_set_wins_over_a_higher_epoch_incumbent() {
+        // The composite epoch a sharded pool stamps by always exceeds
+        // a single shard's own epoch; a later control-plane set must
+        // re-stamp above such an incumbent instead of being silently
+        // refused behind an Ok(()).
+        let mut map = single_shard_map(1, 2);
+        let key = 7u64;
+        map.set(key, b"old").unwrap();
+        let snap = map.coordinator(0).unwrap().snapshot();
+        let holder = {
+            let mut out = Vec::new();
+            snap.replica_set(key, &mut out);
+            out[0]
+        };
+        let mut conn = Conn::connect(snap.addr_of(holder).unwrap()).unwrap();
+        let incumbent = Version::new(1_000, 1);
+        conn.vset(key, incumbent, b"incumbent".to_vec()).unwrap();
+        map.set(key, b"new").unwrap();
+        assert_eq!(map.get(key).unwrap(), Some(b"new".to_vec()));
+        let (ver, _) = conn.vget(key).unwrap().unwrap();
+        assert!(ver > incumbent, "set must out-stamp the incumbent, got {ver}");
+    }
+
+    #[test]
+    fn headless_shard_keeps_serving_and_install_requires_vacancy() {
+        let mut map = single_shard_map(1, 2);
+        for k in 0..50u64 {
+            map.set(k, b"v").unwrap();
+        }
+        let epoch = map.snapshot().epoch;
+        let taken = map.take_coordinator(0).unwrap();
+        // Headless: control ops fail, the published epoch still serves.
+        assert!(map.set(1, b"x").is_err());
+        assert_eq!(map.snapshot().epoch, epoch);
+        assert!(map.install(1, Coordinator::new(1)).is_err(), "no shard 1");
+        map.install(0, taken).unwrap();
+        assert_eq!(map.verify_all_readable().unwrap(), 50);
+    }
+}

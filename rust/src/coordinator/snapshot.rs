@@ -50,6 +50,18 @@ pub struct PlacerSnapshot {
     /// Suspects are still full members — they hold data and receive
     /// writes — but routers steer *reads* to a healthy replica first.
     pub suspects: Vec<NodeId>,
+    /// Range-sharded control plane (empty = single coordinator, the
+    /// common case): `(range start, placer)` per shard, ascending by
+    /// start with the first start at `0`, so shard *i* owns
+    /// `[start_i, start_{i+1})` and the last shard runs to the top of
+    /// the key space. When non-empty, every per-key resolution
+    /// ([`Self::replica_set`], [`Self::read_targets`]) routes through
+    /// [`Self::placer_for`] — one binary search over this immutable
+    /// vector, zero allocation — and `addrs` is the union of every
+    /// shard's membership (node ids are globally unique). `placer` is
+    /// unused in this mode. Published by
+    /// [`crate::coordinator::shard::ShardMap`].
+    pub shards: Vec<(DatumId, AsuraPlacer)>,
 }
 
 impl PlacerSnapshot {
@@ -62,6 +74,7 @@ impl PlacerSnapshot {
             addrs: Vec::new(),
             replicas: replicas.max(1),
             suspects: Vec::new(),
+            shards: Vec::new(),
         }
     }
 
@@ -73,11 +86,36 @@ impl PlacerSnapshot {
             .map(|i| self.addrs[i].1)
     }
 
+    /// The placement function that owns `key`: the single placer in the
+    /// unsharded case, otherwise the owning range's placer — found by
+    /// one binary search over the sorted shard starts (the data-plane
+    /// hot path's shard lookup; no allocation, no lock).
+    pub fn placer_for(&self, key: DatumId) -> &AsuraPlacer {
+        if self.shards.is_empty() {
+            return &self.placer;
+        }
+        &self.shards[self.shard_index_of(key)].1
+    }
+
+    /// Index of the shard owning `key` (`0` in the unsharded case).
+    pub fn shard_index_of(&self, key: DatumId) -> usize {
+        if self.shards.is_empty() {
+            return 0;
+        }
+        match self.shards.binary_search_by(|&(start, _)| start.cmp(&key)) {
+            Ok(i) => i,
+            // The first start is 0, so the insertion point is >= 1 and
+            // the owner is the range just below it.
+            Err(i) => i - 1,
+        }
+    }
+
     /// Replica set of `key` at this epoch (primary first), capped at the
-    /// live node count.
+    /// owning shard's live node count.
     pub fn replica_set(&self, key: DatumId, out: &mut Vec<NodeId>) {
-        let r = self.replicas.min(self.placer.node_count());
-        self.placer.place_replicas(key, r, out);
+        let placer = self.placer_for(key);
+        let r = self.replicas.min(placer.node_count());
+        placer.place_replicas(key, r, out);
     }
 
     /// Whether the failure detector suspected `node` at publication time.
@@ -120,9 +158,27 @@ impl PlacerSnapshot {
     }
 
     /// Internal consistency check (used by the linearizability tests):
-    /// the address map and the placer must describe the same membership.
+    /// the address map and the placement function(s) must describe the
+    /// same membership. In the sharded case the shard starts must also
+    /// partition the key space: strictly ascending, first at `0`.
     pub fn is_coherent(&self) -> bool {
-        let placer_nodes = self.placer.nodes();
+        let placer_nodes: Vec<NodeId> = if self.shards.is_empty() {
+            self.placer.nodes()
+        } else {
+            if self.shards[0].0 != 0 {
+                return false;
+            }
+            if self.shards.windows(2).any(|w| w[0].0 >= w[1].0) {
+                return false;
+            }
+            let mut nodes: Vec<NodeId> = self
+                .shards
+                .iter()
+                .flat_map(|(_, placer)| placer.nodes())
+                .collect();
+            nodes.sort_unstable();
+            nodes
+        };
         placer_nodes.len() == self.addrs.len()
             && placer_nodes
                 .iter()
@@ -250,6 +306,7 @@ mod tests {
             addrs,
             replicas: 1,
             suspects: Vec::new(),
+            shards: Vec::new(),
         }
     }
 
@@ -297,6 +354,55 @@ mod tests {
         assert_eq!(out, vec![set[0], set[2]]);
         snap.read_targets(42, 99, &mut scratch, &mut out);
         assert_eq!(out.len(), 3, "capped at the replica set size");
+    }
+
+    #[test]
+    fn composite_snapshot_routes_each_key_to_its_shard() {
+        // Two ranges, disjoint memberships: keys below the split
+        // resolve through shard 0's placer, keys at or above it through
+        // shard 1's — and never across.
+        let mut low = AsuraPlacer::new();
+        let mut high = AsuraPlacer::new();
+        let mut addrs = Vec::new();
+        for i in 0..3u32 {
+            low.add_node(i, 1.0);
+            addrs.push((i, format!("127.0.0.1:{}", 7100 + i).parse().unwrap()));
+        }
+        for i in 10..13u32 {
+            high.add_node(i, 1.0);
+            addrs.push((i, format!("127.0.0.1:{}", 7100 + i).parse().unwrap()));
+        }
+        let split = u64::MAX / 2;
+        let snap = PlacerSnapshot {
+            epoch: 1,
+            term: 0,
+            placer: AsuraPlacer::new(),
+            addrs,
+            replicas: 2,
+            suspects: Vec::new(),
+            shards: vec![(0, low), (split, high)],
+        };
+        assert!(snap.is_coherent());
+        let mut out = Vec::new();
+        for key in [0u64, 1, split - 1, split, split + 1, u64::MAX] {
+            let want_low = key < split;
+            assert_eq!(snap.shard_index_of(key), usize::from(!want_low), "key {key:#x}");
+            snap.replica_set(key, &mut out);
+            assert_eq!(out.len(), 2);
+            for &n in &out {
+                assert_eq!(n < 10, want_low, "key {key:#x} crossed its shard");
+            }
+        }
+        // An unsharded snapshot reports shard 0 for everything.
+        let plain = snapshot_with_nodes(1, 3);
+        assert_eq!(plain.shard_index_of(u64::MAX), 0);
+        // A shard map not starting at 0, or out of order, is incoherent.
+        let mut bad = snap.clone();
+        bad.shards[0].0 = 1;
+        assert!(!bad.is_coherent());
+        let mut bad = snap.clone();
+        bad.shards.swap(0, 1);
+        assert!(!bad.is_coherent());
     }
 
     #[test]

@@ -97,9 +97,11 @@ pub struct HealthMonitor {
     nodes: HashMap<NodeId, NodeHealth>,
     /// Test hook: pending probe results to force-fail per node.
     injected: HashMap<NodeId, u32>,
-    /// Consecutive lease-watch rounds that read the lease as vacant at
-    /// a majority of authorities.
-    lease_strikes: u32,
+    /// Consecutive lease-watch rounds that read a lease as vacant at a
+    /// majority of authorities, per watched shard key (`0` = the
+    /// unsharded coordinator lease). One monitor watches any number of
+    /// shard leases without their strikes bleeding into each other.
+    lease_strikes: HashMap<u64, u32>,
     /// Total probes attempted (including injected failures).
     pub probes_sent: u64,
 }
@@ -111,7 +113,7 @@ impl HealthMonitor {
             cfg,
             nodes: HashMap::new(),
             injected: HashMap::new(),
-            lease_strikes: 0,
+            lease_strikes: HashMap::new(),
             probes_sent: 0,
         }
     }
@@ -195,33 +197,42 @@ impl HealthMonitor {
         events
     }
 
-    /// Watch the coordinator lease the way members are watched: query
-    /// every authority (read-only `LEASE`, one fresh connection each,
-    /// concurrently), and declare the leader lost only after
-    /// [`HealthConfig::dead_after`] consecutive rounds in which a
-    /// majority of authorities answered and *none* reported a live
-    /// lease. An indeterminate round (fewer than a majority answered)
-    /// neither strikes nor absolves — a partitioned watcher must not
-    /// talk itself into a takeover it could never win.
+    /// Watch the unsharded (shard `0`) coordinator lease. See
+    /// [`Self::lease_tick_shard`].
     pub fn lease_tick(&mut self, authorities: &[SocketAddr]) -> LeaseVerdict {
+        self.lease_tick_shard(0, authorities)
+    }
+
+    /// Watch one shard's coordinator lease the way members are watched:
+    /// query every authority (read-only `LEASE` against the `shard`
+    /// register, one fresh connection each, concurrently), and declare
+    /// the leader lost only after [`HealthConfig::dead_after`]
+    /// consecutive rounds in which a majority of authorities answered
+    /// and *none* reported a live lease. An indeterminate round (fewer
+    /// than a majority answered) neither strikes nor absolves — a
+    /// partitioned watcher must not talk itself into a takeover it
+    /// could never win. Strikes are tracked per shard key, so one
+    /// monitor can shadow every shard leader at once.
+    pub fn lease_tick_shard(&mut self, shard: u64, authorities: &[SocketAddr]) -> LeaseVerdict {
         self.probes_sent += authorities.len() as u64;
         // Same probe fan-out and the same liveness fold the bidding
         // standby uses — the watcher's verdict and the bid gate can
         // never judge a reply set differently.
-        let replies = election::fan_out(authorities, 0, 0, 0, self.cfg.timeout);
+        let replies = election::fan_out(authorities, shard, 0, 0, 0, self.cfg.timeout);
         let answered = replies.len();
         let (term, holder) = election::observe_replies(&replies);
         let majority = authorities.len() / 2 + 1;
+        let strikes = self.lease_strikes.entry(shard).or_insert(0);
         if holder != 0 {
-            self.lease_strikes = 0;
+            *strikes = 0;
         } else if answered >= majority {
-            self.lease_strikes += 1;
+            *strikes += 1;
         }
         LeaseVerdict {
             answered,
             term,
             holder,
-            leader_lost: self.lease_strikes >= self.cfg.dead_after,
+            leader_lost: *strikes >= self.cfg.dead_after,
         }
     }
 }
@@ -287,7 +298,7 @@ mod tests {
         }
         // A leader appears: one live observation absolves everything.
         for &addr in &addrs {
-            let r = lease_request(addr, 1, 1, 10_000, Duration::from_millis(200)).unwrap();
+            let r = lease_request(addr, 0, 1, 1, 10_000, Duration::from_millis(200)).unwrap();
             assert!(r.granted);
         }
         let v = mon.lease_tick(&addrs);
@@ -295,12 +306,33 @@ mod tests {
         assert!(!v.leader_lost);
         // Lease expires (short grant, no renewal): threshold re-arms.
         for &addr in &addrs {
-            lease_request(addr, 1, 1, 30, Duration::from_millis(200)).unwrap();
+            lease_request(addr, 0, 1, 1, 30, Duration::from_millis(200)).unwrap();
         }
         std::thread::sleep(Duration::from_millis(60));
         assert!(!mon.lease_tick(&addrs).leader_lost, "one vacant round is grace");
         mon.lease_tick(&addrs);
         assert!(mon.lease_tick(&addrs).leader_lost, "third vacant round is loss");
+    }
+
+    #[test]
+    fn lease_watch_strikes_are_tracked_per_shard() {
+        use crate::coordinator::election::lease_request;
+        let servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
+        let addrs: Vec<SocketAddr> = servers.iter().map(|s| s.addr()).collect();
+        let mut mon = HealthMonitor::new(quick_cfg());
+        // Shard 7's leader is live; shard 9 has none. One monitor
+        // watches both, and only the vacant shard accumulates strikes.
+        for &addr in &addrs {
+            lease_request(addr, 7, 1, 1, 10_000, Duration::from_millis(200)).unwrap();
+        }
+        for round in 1..=3u32 {
+            let live = mon.lease_tick_shard(7, &addrs);
+            assert_eq!(live.holder, 1);
+            assert!(!live.leader_lost, "live shard 7 struck at round {round}");
+            let vacant = mon.lease_tick_shard(9, &addrs);
+            assert_eq!(vacant.holder, 0);
+            assert_eq!(vacant.leader_lost, round >= 3, "shard 9 round {round}");
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@
 use crate::algo::{NodeId, Placer};
 use crate::coordinator::election::{LeaderLease, LeaseConfig, Role};
 use crate::coordinator::replicate::StateReplicator;
+use crate::coordinator::shard::{ShadowStandby, ShardLeader, ShardMap};
 use crate::coordinator::Coordinator;
 use crate::fault::health::{HealthConfig, HealthEvent, HealthMonitor};
 use crate::net::pool::{BatchResult, PoolConfig, RouterPool};
@@ -1287,6 +1288,543 @@ pub fn write_coord_failover_json(
         ("read_ops", Json::Num(cfg.read_ops as f64)),
         ("workers", Json::Num(cfg.workers as f64)),
         ("authorities", Json::Num(cfg.authorities as f64)),
+        ("lease_ttl_ms", Json::Num(cfg.lease_ttl_ms as f64)),
+        ("tick_ms", Json::Num(cfg.tick_ms as f64)),
+        ("dead_after", Json::Num(cfg.dead_after as f64)),
+        ("repair_batch", Json::Num(cfg.repair_batch as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("results", Json::Arr(results)),
+    ];
+    std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Sharded-control-plane scenario: concurrent splits under churn plus a
+// shard-leader kill with an always-on shadow standby.
+// ---------------------------------------------------------------------
+
+/// Configuration for `asura bench-shard`.
+#[derive(Clone, Debug)]
+pub struct ShardBenchConfig {
+    /// Shard count for the failover story and the top scale point.
+    pub shards: usize,
+    /// Storage nodes per shard (each shard's nodes double as its lease
+    /// and state authorities).
+    pub nodes_per_shard: u32,
+    pub replicas: usize,
+    pub write_quorum: usize,
+    pub read_quorum: usize,
+    pub keys: u64,
+    /// Ops per traffic round (rounds repeat until the story completes).
+    pub read_ops: u64,
+    pub workers: usize,
+    pub pipeline_depth: usize,
+    /// Per-shard lease TTL — the promotion floor.
+    pub lease_ttl_ms: u64,
+    /// Control-loop cadence (lease renewals, shadow ticks).
+    pub tick_ms: u64,
+    /// Consecutive vacant lease observations before the shadow bids.
+    pub dead_after: u32,
+    pub probe_timeout_ms: u64,
+    pub repair_batch: usize,
+    pub seed: u64,
+    pub out_json: Option<String>,
+}
+
+impl Default for ShardBenchConfig {
+    fn default() -> Self {
+        Self {
+            shards: 3,
+            nodes_per_shard: 3,
+            replicas: 2,
+            write_quorum: 2,
+            read_quorum: 1,
+            keys: 1_500,
+            read_ops: 4_000,
+            workers: 4,
+            pipeline_depth: 16,
+            lease_ttl_ms: 300,
+            tick_ms: 20,
+            dead_after: 3,
+            probe_timeout_ms: 500,
+            repair_batch: 96,
+            seed: 0x5A4D,
+            out_json: Some("BENCH_shard.json".to_string()),
+        }
+    }
+}
+
+/// One measured sharded-control-plane scenario (a throughput scale
+/// point, or the split-racing-leader-kill story).
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    pub scenario: String,
+    /// Concurrent shard coordinators the traffic ran against.
+    pub shards: usize,
+    pub ops: u64,
+    pub hits: u64,
+    pub ops_per_sec: f64,
+    pub failovers: u64,
+    pub retried: u64,
+    pub degraded_writes: u64,
+    pub read_repairs: u64,
+    /// Reads that found nothing anywhere — must be 0.
+    pub lost: u64,
+    /// Online range splits performed while traffic ran.
+    pub splits: u64,
+    /// Keys moved across range boundaries by those splits.
+    pub moved_keys: u64,
+    /// Term the killed shard leader held / its shadow standby won
+    /// (0/0 for scale rows — nothing is killed there).
+    pub old_term: u64,
+    pub new_term: u64,
+    /// Shard-leader kill → the promoted standby's bumped epoch
+    /// published through the composite (0 for scale rows).
+    pub time_to_new_epoch_ms: f64,
+    /// Keys acked into the headless shard's registry slice during the
+    /// interregnum.
+    pub stranded_writes: u64,
+    /// Keys the post-promotion N-way reconcile converged.
+    pub reconciled_writes: u64,
+    pub audit_keys: u64,
+    pub audit_under: u64,
+    pub epochs: (u64, u64),
+}
+
+impl ShardReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<16} k={} {:>8} ops {:>8.0} ops/s  lost {:>2}  splits {} (moved {:>4})  \
+             term {}->{}  new-epoch {:>6.1} ms  stranded {:>4} (reconciled {:>4})  \
+             audit {}/{}  epochs {}..{}",
+            self.scenario,
+            self.shards,
+            self.ops,
+            self.ops_per_sec,
+            self.lost,
+            self.splits,
+            self.moved_keys,
+            self.old_term,
+            self.new_term,
+            self.time_to_new_epoch_ms,
+            self.stranded_writes,
+            self.reconciled_writes,
+            self.audit_keys - self.audit_under,
+            self.audit_keys,
+            self.epochs.0,
+            self.epochs.1
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("shards", Json::Num(self.shards as f64)),
+            ("ops", Json::Num(self.ops as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("ops_per_sec", Json::Num(self.ops_per_sec)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("retried", Json::Num(self.retried as f64)),
+            ("degraded_writes", Json::Num(self.degraded_writes as f64)),
+            ("read_repairs", Json::Num(self.read_repairs as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("splits", Json::Num(self.splits as f64)),
+            ("moved_keys", Json::Num(self.moved_keys as f64)),
+            ("old_term", Json::Num(self.old_term as f64)),
+            ("new_term", Json::Num(self.new_term as f64)),
+            ("time_to_new_epoch_ms", Json::Num(self.time_to_new_epoch_ms)),
+            ("stranded_writes", Json::Num(self.stranded_writes as f64)),
+            ("reconciled_writes", Json::Num(self.reconciled_writes as f64)),
+            ("audit_keys", Json::Num(self.audit_keys as f64)),
+            ("audit_under", Json::Num(self.audit_under as f64)),
+            ("epoch_min", Json::Num(self.epochs.0 as f64)),
+            ("epoch_max", Json::Num(self.epochs.1 as f64)),
+        ])
+    }
+}
+
+fn shard_node_id(shard: usize, j: u32) -> NodeId {
+    shard as u32 * 1000 + j
+}
+
+/// Shard `i`'s slice of the harness-owned node servers (`per` per
+/// shard, groups laid out back to back).
+fn node_group(servers: &[NodeServer], per: usize, i: usize) -> &[NodeServer] {
+    &servers[i * per..(i + 1) * per]
+}
+
+fn check_shard_cfg(cfg: &ShardBenchConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(cfg.shards >= 1, "need at least one shard");
+    anyhow::ensure!(
+        cfg.nodes_per_shard as usize >= cfg.replicas && cfg.replicas >= 1,
+        "each shard needs at least `replicas` nodes"
+    );
+    anyhow::ensure!(
+        cfg.write_quorum >= 1 && cfg.write_quorum <= cfg.replicas,
+        "write quorum must be within 1..=replicas"
+    );
+    anyhow::ensure!(
+        cfg.read_quorum >= 1 && cfg.read_quorum <= cfg.replicas,
+        "read quorum must be within 1..=replicas"
+    );
+    anyhow::ensure!(
+        cfg.workers >= 1 && cfg.pipeline_depth >= 1,
+        "workers and pipeline depth must be >= 1"
+    );
+    anyhow::ensure!(cfg.dead_after >= 1, "dead_after must be >= 1");
+    // Node ids are shard*1000+j, with id group 9 reserved for the
+    // shard the online split carves out.
+    anyhow::ensure!(cfg.shards <= 8, "bench supports at most 8 shards");
+    Ok(())
+}
+
+fn shard_pool_cfg(cfg: &ShardBenchConfig) -> PoolConfig {
+    PoolConfig {
+        workers: cfg.workers,
+        pipeline_depth: cfg.pipeline_depth,
+        verify_hits: true,
+        write_quorum: cfg.write_quorum,
+        read_quorum: cfg.read_quorum,
+        ..PoolConfig::default() // registry + hints + clock wired by connect_pool
+    }
+}
+
+/// Range start of shard `i` when the key space is cut into `k` evenly
+/// spaced shards (shard 0 starts at 0; the builders carve shards 1..k
+/// out with pre-data splits at these starts).
+fn spaced_start(k: usize, i: usize) -> u64 {
+    (u64::MAX / k as u64) * i as u64
+}
+
+/// Drain every shard's repair queue, `repair_batch` keys per shard per
+/// round, within a deadline.
+fn drain_shard_repair(
+    map: &mut ShardMap,
+    cfg: &ShardBenchConfig,
+    what: &str,
+) -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    while map.repair_pending() > 0 {
+        anyhow::ensure!(
+            t0.elapsed() < Duration::from_secs(60),
+            "{what} repair did not converge ({} pending)",
+            map.repair_pending()
+        );
+        for i in 0..map.shard_count() {
+            map.repair_step(i, cfg.repair_batch)?;
+        }
+    }
+    Ok(())
+}
+
+/// Audit every shard until clean, feeding under-replicated keys back
+/// into repair (bounded attempts).
+fn audit_until_full(
+    map: &mut ShardMap,
+    cfg: &ShardBenchConfig,
+) -> anyhow::Result<crate::fault::repair::ReplicationAudit> {
+    let mut attempt = 0;
+    loop {
+        let audit = map.audit_all()?;
+        if audit.is_full() {
+            return Ok(audit);
+        }
+        attempt += 1;
+        anyhow::ensure!(
+            attempt <= 5,
+            "audit still finds {} under-replicated keys",
+            audit.under_replicated()
+        );
+        map.enqueue_repair(audit.under_keys.iter().copied());
+        drain_shard_repair(map, cfg, "post-audit")?;
+    }
+}
+
+/// Throughput scale point: `k` shard coordinators (in-process nodes),
+/// preload, one mixed read/rewrite storm through the composite pool.
+/// The cross-shard scaling claim is the ops/sec trend across `k`.
+pub fn run_shard_scale(cfg: &ShardBenchConfig, k: usize) -> anyhow::Result<ShardReport> {
+    check_shard_cfg(cfg)?;
+    let mut map = ShardMap::new(cfg.replicas);
+    for j in 0..cfg.nodes_per_shard {
+        map.spawn_node(0, shard_node_id(0, j), 1.0)?;
+    }
+    for i in 1..k {
+        map.split_with(spaced_start(k, i), |coord| {
+            for j in 0..cfg.nodes_per_shard {
+                coord.spawn_node(shard_node_id(i, j), 1.0)?;
+            }
+            Ok(())
+        })?;
+    }
+    let scenario = Scenario::Failover {
+        keys: cfg.keys,
+        read_ops: cfg.read_ops,
+        write_every: 8,
+    };
+    for &key in &scenario.preload_keys(cfg.seed) {
+        map.set(key, &value_for(key, FAILOVER_VALUE_SIZE))?;
+    }
+    let pool = map.connect_pool(shard_pool_cfg(cfg))?;
+    let t0 = Instant::now();
+    let res = pool.run(scenario.ops(cfg.seed))?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    map.reconcile_writes();
+    let audit = audit_until_full(&mut map, cfg)?;
+    anyhow::ensure!(res.lost == 0, "{} reads lost at scale k={k}", res.lost);
+    Ok(ShardReport {
+        scenario: format!("shard_scale_k{k}"),
+        shards: k,
+        ops: res.ops,
+        hits: res.hits,
+        ops_per_sec: if wall_s > 0.0 { res.ops as f64 / wall_s } else { 0.0 },
+        failovers: res.failovers,
+        retried: res.retried,
+        degraded_writes: res.degraded_writes,
+        read_repairs: res.read_repairs,
+        lost: res.lost,
+        splits: (k - 1) as u64,
+        moved_keys: 0,
+        old_term: 0,
+        new_term: 0,
+        time_to_new_epoch_ms: 0.0,
+        stranded_writes: 0,
+        reconciled_writes: 0,
+        audit_keys: audit.keys as u64,
+        audit_under: audit.under_replicated() as u64,
+        epochs: (res.epoch_min, res.epoch_max),
+    })
+}
+
+/// The headline story: K shard leaders (leased, state-replicated,
+/// each continuously shadowed), live mixed traffic, an **online range
+/// split racing the load**, then a **shard-leader kill** — the always-
+/// on shadow standby watches the shard's lease through the failure
+/// detector, wins it at a bumped term, promotes from the replicated
+/// state, and the map republishes. Gates: zero lost reads, zero lost
+/// keys, clean post-story holder audit across every shard.
+///
+/// Storage nodes are harness-owned (`join_external`), as in a real
+/// deployment — they must outlive the crashed shard leader.
+pub fn run_shard_failover(cfg: &ShardBenchConfig) -> anyhow::Result<ShardReport> {
+    check_shard_cfg(cfg)?;
+    let k = cfg.shards;
+    let mut servers: Vec<NodeServer> = Vec::new();
+    for _ in 0..k as u32 * cfg.nodes_per_shard + cfg.nodes_per_shard {
+        servers.push(NodeServer::spawn()?);
+    }
+    let lease_cfg = LeaseConfig {
+        ttl: Duration::from_millis(cfg.lease_ttl_ms.max(1)),
+        timeout: Duration::from_millis(cfg.probe_timeout_ms.max(1)),
+    };
+    let health_cfg = HealthConfig {
+        suspect_after: 1,
+        dead_after: cfg.dead_after,
+        timeout: Duration::from_millis(cfg.probe_timeout_ms.max(1)),
+    };
+    // K shards over evenly spaced range starts, each on its own node
+    // group (node ids are globally unique across shards).
+    let per = cfg.nodes_per_shard as usize;
+    let mut map = ShardMap::new(cfg.replicas);
+    for (j, s) in node_group(&servers, per, 0).iter().enumerate() {
+        map.join_external(0, shard_node_id(0, j as u32), 1.0, s.addr())?;
+    }
+    for i in 1..k {
+        map.split_with(spaced_start(k, i), |coord| {
+            for (j, s) in node_group(&servers, per, i).iter().enumerate() {
+                coord.join_external(shard_node_id(i, j as u32), 1.0, s.addr())?;
+            }
+            Ok(())
+        })?;
+    }
+    // Per-shard leased leaders (lease key = range start; authorities =
+    // the shard's own nodes), each replicating its control state.
+    let mut leaders: Vec<ShardLeader> = Vec::new();
+    for i in 0..map.shard_count() {
+        let auth: Vec<std::net::SocketAddr> = node_group(&servers, per, i)
+            .iter()
+            .map(|s| s.addr())
+            .collect();
+        let mut leader = ShardLeader::new(map.shard_start(i), 1, auth, lease_cfg.clone());
+        let term = leader.elect()?;
+        map.set_term(i, term)?;
+        leaders.push(leader);
+    }
+    let scenario = Scenario::Failover {
+        keys: cfg.keys,
+        read_ops: cfg.read_ops,
+        write_every: 8,
+    };
+    for &key in &scenario.preload_keys(cfg.seed) {
+        map.set(key, &value_for(key, FAILOVER_VALUE_SIZE))?;
+    }
+    for i in 0..map.shard_count() {
+        let state = map.export_state(i)?;
+        leaders[i].publish_state(&state)?;
+    }
+
+    let pool = map.connect_pool(shard_pool_cfg(cfg))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
+
+    // Act 1 — an online range split races the live traffic: shard 0's
+    // upper half moves onto a fresh node group while reads and
+    // rewrites keep flowing.
+    let extra = node_group(&servers, per, k);
+    let split_at = spaced_start(k, 1) / 2;
+    let split_report = map.split_with(split_at, |coord| {
+        for (j, s) in extra.iter().enumerate() {
+            coord.join_external(shard_node_id(9, j as u32), 1.0, s.addr())?;
+        }
+        Ok(())
+    })?;
+    let new_idx = map.shard_of(split_at);
+    let auth: Vec<std::net::SocketAddr> = extra.iter().map(|s| s.addr()).collect();
+    let mut new_leader = ShardLeader::new(map.shard_start(new_idx), 1, auth, lease_cfg.clone());
+    let term = new_leader.elect()?;
+    map.set_term(new_idx, term)?;
+    new_leader.publish_state(&map.export_state(new_idx)?)?;
+    leaders.insert(new_idx, new_leader);
+
+    // Act 2 — the shadow standby heartbeats the (still-live) victim
+    // leader: it must not promote while renewals flow.
+    let victim = map.shard_of(spaced_start(k, k - 1));
+    let victim_key = map.shard_start(victim);
+    let victim_auth: Vec<std::net::SocketAddr> = node_group(&servers, per, k - 1)
+        .iter()
+        .map(|s| s.addr())
+        .collect();
+    let mut standby = ShadowStandby::new(
+        victim_key,
+        2,
+        victim_auth,
+        lease_cfg.clone(),
+        health_cfg.clone(),
+    );
+    let handles = map.handles(victim);
+    for _ in 0..3 {
+        for leader in leaders.iter_mut() {
+            leader.renew();
+        }
+        anyhow::ensure!(
+            standby.tick(&handles)?.is_none(),
+            "shadow standby promoted over a live leader"
+        );
+        std::thread::sleep(Duration::from_millis(cfg.tick_ms));
+    }
+    let old_term = leaders[victim].term();
+    leaders[victim].publish_state(&map.export_state(victim)?)?;
+
+    // Act 3 — the shard leader crashes: its coordinator (and lease
+    // renewals) die; the shard turns headless but its last epoch keeps
+    // serving. The standby's continuous watch takes it from here.
+    let dead = map.take_coordinator(victim);
+    anyhow::ensure!(dead.is_some(), "victim shard had no live coordinator");
+    drop(dead);
+    drop(leaders.remove(victim));
+    let t_kill = Instant::now();
+    let (new_term, stranded_writes) = loop {
+        for leader in leaders.iter_mut() {
+            leader.renew();
+        }
+        // Interregnum write-backs keep routing into the headless
+        // shard's registry slice — the promoted standby adopts them.
+        map.dispatch_writes();
+        if let Some((term, coord)) = standby.tick(&handles)? {
+            let stranded = handles.registry.len() as u64;
+            map.install(victim, coord)?;
+            break (term, stranded);
+        }
+        anyhow::ensure!(
+            t_kill.elapsed() < Duration::from_secs(30),
+            "shard standby never promoted"
+        );
+        std::thread::sleep(Duration::from_millis(cfg.tick_ms));
+    };
+    let time_to_new_epoch_ms = t_kill.elapsed().as_secs_f64() * 1e3;
+    let reconciled_writes = map.reconcile_writes() as u64;
+    drain_shard_repair(&mut map, cfg, "post-promotion")?;
+
+    // Act 4 — quiesce, converge, audit every shard.
+    stop.store(true, Ordering::Release);
+    let res = join_driver(driver)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    map.reconcile_writes();
+    let audit = audit_until_full(&mut map, cfg)?;
+    anyhow::ensure!(res.lost == 0, "{} reads lost across the shard story", res.lost);
+    anyhow::ensure!(map.snapshot().is_coherent(), "composite snapshot incoherent");
+
+    Ok(ShardReport {
+        scenario: "shard_failover".to_string(),
+        shards: map.shard_count(),
+        ops: res.ops,
+        hits: res.hits,
+        ops_per_sec: if wall_s > 0.0 { res.ops as f64 / wall_s } else { 0.0 },
+        failovers: res.failovers,
+        retried: res.retried,
+        degraded_writes: res.degraded_writes,
+        read_repairs: res.read_repairs,
+        lost: res.lost,
+        splits: 1,
+        moved_keys: split_report.moved as u64,
+        old_term,
+        new_term,
+        time_to_new_epoch_ms,
+        stranded_writes,
+        reconciled_writes,
+        audit_keys: audit.keys as u64,
+        audit_under: audit.under_replicated() as u64,
+        epochs: (res.epoch_min, res.epoch_max),
+    })
+}
+
+/// Run the shard suite: cross-shard throughput scaling (k = 1 and
+/// k = `cfg.shards`), then the split-racing-leader-kill story; print
+/// one line each, enforce the zero-loss gates, and emit
+/// `BENCH_shard.json`.
+pub fn run_shard_suite(cfg: &ShardBenchConfig) -> anyhow::Result<Vec<ShardReport>> {
+    let mut reports = Vec::new();
+    let r = run_shard_scale(cfg, 1)?;
+    println!("{}", r.line());
+    reports.push(r);
+    if cfg.shards > 1 {
+        let r = run_shard_scale(cfg, cfg.shards)?;
+        println!("{}", r.line());
+        reports.push(r);
+    }
+    let r = run_shard_failover(cfg)?;
+    println!("{}", r.line());
+    reports.push(r);
+    let lost: u64 = reports.iter().map(|r| r.lost).sum();
+    anyhow::ensure!(lost == 0, "{lost} reads lost across the shard suite");
+    let under: u64 = reports.iter().map(|r| r.audit_under).sum();
+    anyhow::ensure!(under == 0, "{under} keys under-replicated after the shard suite");
+    if let Some(path) = &cfg.out_json {
+        write_shard_json(path, cfg, &reports)?;
+        println!("wrote {path}");
+    }
+    Ok(reports)
+}
+
+/// Serialize the shard suite to its perf-trajectory JSON file.
+pub fn write_shard_json(
+    path: &str,
+    cfg: &ShardBenchConfig,
+    reports: &[ShardReport],
+) -> anyhow::Result<()> {
+    let results: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+    let fields = vec![
+        ("bench", Json::Str("shard".to_string())),
+        ("shards", Json::Num(cfg.shards as f64)),
+        ("nodes_per_shard", Json::Num(cfg.nodes_per_shard as f64)),
+        ("replicas", Json::Num(cfg.replicas as f64)),
+        ("write_quorum", Json::Num(cfg.write_quorum as f64)),
+        ("read_quorum", Json::Num(cfg.read_quorum as f64)),
+        ("keys", Json::Num(cfg.keys as f64)),
+        ("read_ops", Json::Num(cfg.read_ops as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
         ("lease_ttl_ms", Json::Num(cfg.lease_ttl_ms as f64)),
         ("tick_ms", Json::Num(cfg.tick_ms as f64)),
         ("dead_after", Json::Num(cfg.dead_after as f64)),

@@ -29,6 +29,13 @@
 //!               [--tick-ms T --dead-after N]        replicated state; emits
 //!               [--repair-batch B --seed S]         time-to-new-epoch +
 //!               [--out BENCH_coord_failover.json]   stranded-write count
+//! asura bench-shard [--shards K]                    sharded control plane:
+//!               [--nodes-per-shard N --replicas R]  throughput scaling at
+//!               [--quorum Q --read-quorum Q]        k=1 vs k=K, then a
+//!               [--keys K --reads R --workers W]    concurrent range split
+//!               [--lease-ttl-ms T --tick-ms T]      + shard-leader kill
+//!               [--dead-after N --repair-batch B]   under churn (shadow
+//!               [--seed S --out BENCH_shard.json]   standby promotes)
 //! asura node    --port P                            standalone storage node
 //! asura place   --id X --nodes N [--algo asura|chash|straw]
 //! asura info    [--artifacts DIR]                   PJRT + artifact info
@@ -52,6 +59,7 @@ fn main() {
         "bench-serve" => run_bench_serve(&args),
         "bench-failover" => run_bench_failover(&args),
         "bench-coord-failover" => run_bench_coord_failover(&args),
+        "bench-shard" => run_bench_shard(&args),
         "node" => run_node(&args),
         "place" => run_place(&args),
         "info" => run_info(&args),
@@ -411,6 +419,50 @@ fn run_bench_coord_failover(args: &Args) -> anyhow::Result<()> {
         cfg.tick_ms
     );
     let reports = asura::loadgen::run_coord_failover_suite(&cfg)?;
+    anyhow::ensure!(!reports.is_empty(), "no scenarios ran");
+    Ok(())
+}
+
+/// Sharded-control-plane harness: cross-shard throughput scaling plus
+/// an online range split racing a shard-leader kill, emitted to
+/// `BENCH_shard.json`.
+fn run_bench_shard(args: &Args) -> anyhow::Result<()> {
+    let default = asura::loadgen::ShardBenchConfig::default();
+    let cfg = asura::loadgen::ShardBenchConfig {
+        shards: args.get_u64("shards", default.shards as u64) as usize,
+        nodes_per_shard: args.get_u64("nodes-per-shard", default.nodes_per_shard as u64) as u32,
+        replicas: args.get_u64("replicas", default.replicas as u64) as usize,
+        write_quorum: args.get_u64("quorum", default.write_quorum as u64) as usize,
+        read_quorum: args.get_u64("read-quorum", default.read_quorum as u64) as usize,
+        keys: args.get_u64("keys", default.keys),
+        read_ops: args.get_u64("reads", default.read_ops),
+        workers: args.get_u64("workers", default.workers as u64) as usize,
+        pipeline_depth: args.get_u64("depth", default.pipeline_depth as u64) as usize,
+        lease_ttl_ms: args.get_u64("lease-ttl-ms", default.lease_ttl_ms),
+        tick_ms: args.get_u64("tick-ms", default.tick_ms),
+        dead_after: args.get_u64("dead-after", default.dead_after as u64) as u32,
+        probe_timeout_ms: args.get_u64("probe-timeout-ms", default.probe_timeout_ms),
+        repair_batch: args.get_u64("repair-batch", default.repair_batch as u64) as usize,
+        seed: args.get_u64("seed", default.seed),
+        out_json: Some(
+            args.get_or("out", default.out_json.as_deref().unwrap_or("BENCH_shard.json"))
+                .to_string(),
+        ),
+    };
+    println!(
+        "bench-shard: {} shards × {} nodes, rf={}, wq={}, rq={}, {} keys, {} reads/round, \
+         lease ttl {} ms, tick {} ms",
+        cfg.shards,
+        cfg.nodes_per_shard,
+        cfg.replicas,
+        cfg.write_quorum,
+        cfg.read_quorum,
+        cfg.keys,
+        cfg.read_ops,
+        cfg.lease_ttl_ms,
+        cfg.tick_ms
+    );
+    let reports = asura::loadgen::run_shard_suite(&cfg)?;
     anyhow::ensure!(!reports.is_empty(), "no scenarios ran");
     Ok(())
 }

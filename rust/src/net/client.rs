@@ -165,10 +165,18 @@ impl Conn {
     }
 
     /// Coordinator-lease bid/renewal against this node as an authority
-    /// (`ttl_ms == 0` = read-only query). See
+    /// for the `shard` lease register (`0` = the unsharded register;
+    /// `ttl_ms == 0` = read-only query). See
     /// [`crate::coordinator::election`].
-    pub fn lease(&mut self, candidate: u64, term: u64, ttl_ms: u64) -> std::io::Result<LeaseReply> {
+    pub fn lease(
+        &mut self,
+        shard: u64,
+        candidate: u64,
+        term: u64,
+        ttl_ms: u64,
+    ) -> std::io::Result<LeaseReply> {
         match self.call(&Request::Lease {
+            shard,
             candidate,
             term,
             ttl_ms,
@@ -183,19 +191,25 @@ impl Conn {
         }
     }
 
-    /// Replicate a control-state blob at `term`. Returns
-    /// `(applied, stored_term)`; a refusal means the node already holds
-    /// a newer-term blob.
-    pub fn state_put(&mut self, term: u64, value: Vec<u8>) -> std::io::Result<(bool, u64)> {
-        match self.call(&Request::StatePut { term, value })? {
+    /// Replicate a `shard` leader's control-state blob at `term`.
+    /// Returns `(applied, stored_term)`; a refusal means the node
+    /// already holds a newer-term blob for that shard.
+    pub fn state_put(
+        &mut self,
+        shard: u64,
+        term: u64,
+        value: Vec<u8>,
+    ) -> std::io::Result<(bool, u64)> {
+        match self.call(&Request::StatePut { shard, term, value })? {
             Response::StateAck { applied, term } => Ok((applied, term)),
             other => Err(bad(other)),
         }
     }
 
-    /// Fetch the latest replicated control-state blob (term + bytes).
-    pub fn state_get(&mut self) -> std::io::Result<Option<(u64, Vec<u8>)>> {
-        match self.call(&Request::StateGet)? {
+    /// Fetch the latest replicated control-state blob of `shard`
+    /// (term + bytes).
+    pub fn state_get(&mut self, shard: u64) -> std::io::Result<Option<(u64, Vec<u8>)>> {
+        match self.call(&Request::StateGet { shard })? {
             Response::StateValue { term, value } => Ok(Some((term, value))),
             Response::NotFound => Ok(None),
             other => Err(bad(other)),

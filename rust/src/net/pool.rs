@@ -45,11 +45,17 @@
 //!   `Coordinator::promote_from`) picks the workers up mid-flight: its
 //!   bumped epoch arrives like any rebalance epoch, and keys acked
 //!   during the interregnum reach it through the same registry Arc
-//!   (pinned by `pool_survives_coordinator_handoff`).
+//!   (pinned by `pool_survives_coordinator_handoff`);
+//! - **a sharded control plane is invisible too**: when the cell is fed
+//!   by a [`crate::coordinator::shard::ShardMap`], every per-key
+//!   resolution (`replica_set` / `read_targets`) routes through the
+//!   snapshot's own shard lookup — one binary search over an immutable
+//!   range table, zero extra allocation — so the same workers serve one
+//!   coordinator or K concurrent ones without a code path forking.
 
 use super::client::Conn;
 use super::protocol::{Request, Response};
-use crate::algo::{DatumId, NodeId, Placer};
+use crate::algo::{DatumId, NodeId};
 use crate::coordinator::registry::KeyRegistry;
 use crate::coordinator::snapshot::{SnapshotCell, SnapshotReader};
 use crate::stats::Summary;
@@ -344,7 +350,7 @@ impl Worker {
         // `observed_generation()` lie about how fresh the routing was.
         let routed_generation = self.reader.observed_generation();
         res.note_epoch(snap.epoch);
-        if snap.placer.node_count() == 0 {
+        if snap.addrs.is_empty() {
             return Err(other_err("no live nodes in the published snapshot".to_string()));
         }
         // Partition by target node, preserving per-node op order. A SET

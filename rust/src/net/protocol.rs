@@ -14,10 +14,11 @@
 //! HEARTBEAT <epoch-hex>\n                -> ALIVE <epoch-hex> <keys>\n
 //! KEYS\n                                 -> KEYS <n> <key-hex>...\n
 //! KEYSC <limit-hex> [<cursor-hex>]\n     -> KEYSC <n> <next-hex|-> <key-hex>...\n
-//! LEASE <cand-hex> <term-hex> <ttl-ms-hex>\n
+//! LEASE <shard-hex> <cand-hex> <term-hex> <ttl-ms-hex>\n
 //!                                        -> LEASED <1|0> <term-hex> <holder-hex> <remain-ms-hex>\n
-//! STATE <term-hex> <len>\n<len bytes>\n  -> SSTORED <1|0> <term-hex>\n
-//! STATE\n                                -> SVALUE <term-hex> <len>\n<bytes>\n | NOT_FOUND\n
+//! STATE <shard-hex> <term-hex> <len>\n<len bytes>\n
+//!                                        -> SSTORED <1|0> <term-hex>\n
+//! STATE <shard-hex>\n                    -> SVALUE <term-hex> <len>\n<bytes>\n | NOT_FOUND\n
 //! PING\n                                 -> PONG\n
 //! QUIT\n                                 -> (close)
 //! ```
@@ -48,14 +49,18 @@
 //! [`crate::coordinator::election`] and
 //! [`crate::coordinator::replicate`]): storage nodes act as the lease
 //! authorities and the replicated home of the leader's control state.
-//! A `LEASE` bid names the candidate, its term, and the lease TTL
-//! (`ttl == 0` is a read-only query that never grants); the node grants
-//! a renewal to the current holder at the same-or-higher term, or a
-//! takeover once the held lease has expired at a strictly higher term,
-//! and otherwise echoes the incumbent. `STATE` with a term and payload
-//! stores the leader's serialized control state (applied iff the term
-//! is at least the stored one — a deposed leader's late publish can
-//! never clobber its successor's); bare `STATE` reads the latest blob
+//! Both are **keyed by a shard id** (the owned range's start key in the
+//! sharded control plane, `0` for a single unsharded coordinator), so
+//! one authority serves any number of independent per-shard lease
+//! registers and state slots. A `LEASE` bid names the shard, the
+//! candidate, its term, and the lease TTL (`ttl == 0` is a read-only
+//! query that never grants); the node grants a renewal to the current
+//! holder at the same-or-higher term, or a takeover once the held lease
+//! has expired at a strictly higher term, and otherwise echoes the
+//! incumbent. `STATE` with a shard, a term and a payload stores the
+//! shard leader's serialized control state (applied iff the term is at
+//! least the stored one — a deposed leader's late publish can never
+//! clobber its successor's); `STATE <shard>` reads the latest blob
 //! back.
 
 use crate::storage::Version;
@@ -94,21 +99,25 @@ pub enum Request {
         cursor: Option<u64>,
         limit: u64,
     },
-    /// Coordinator-lease bid/renewal (`ttl_ms == 0` = read-only query
-    /// that never grants).
+    /// Coordinator-lease bid/renewal against the `shard` lease register
+    /// (`ttl_ms == 0` = read-only query that never grants).
     Lease {
+        shard: u64,
         candidate: u64,
         term: u64,
         ttl_ms: u64,
     },
-    /// Replicate the leader's control-state blob at `term` (applied iff
-    /// `term` is at least the stored state's term).
+    /// Replicate the `shard` leader's control-state blob at `term`
+    /// (applied iff `term` is at least the stored state's term).
     StatePut {
+        shard: u64,
         term: u64,
         value: Vec<u8>,
     },
-    /// Fetch the latest replicated control-state blob.
-    StateGet,
+    /// Fetch the latest replicated control-state blob of `shard`.
+    StateGet {
+        shard: u64,
+    },
     Ping,
     Quit,
 }
@@ -319,28 +328,33 @@ pub fn read_request<R: BufRead>(r: &mut R, line: &mut String) -> std::io::Result
             Ok(Some(Request::KeysChunk { cursor, limit }))
         }
         "LEASE" => {
+            let shard = parse_hex(parts.next(), "bad shard")?;
             let candidate = parse_hex(parts.next(), "bad candidate")?;
             let term = parse_hex(parts.next(), "bad term")?;
             let ttl_ms = parse_hex(parts.next(), "bad ttl")?;
             Ok(Some(Request::Lease {
+                shard,
                 candidate,
                 term,
                 ttl_ms,
             }))
         }
-        "STATE" => match parts.next() {
-            // Bare `STATE` reads the stored blob back.
-            None => Ok(Some(Request::StateGet)),
-            Some(t) => {
-                let term = parse_hex(Some(t), "bad term")?;
-                let len: usize = parts
-                    .next()
-                    .and_then(|s| s.parse().ok())
-                    .ok_or_else(|| bad_data("bad len"))?;
-                let value = read_value(r, len)?;
-                Ok(Some(Request::StatePut { term, value }))
+        "STATE" => {
+            let shard = parse_hex(parts.next(), "bad shard")?;
+            match parts.next() {
+                // `STATE <shard>` reads the stored blob back.
+                None => Ok(Some(Request::StateGet { shard })),
+                Some(t) => {
+                    let term = parse_hex(Some(t), "bad term")?;
+                    let len: usize = parts
+                        .next()
+                        .and_then(|s| s.parse().ok())
+                        .ok_or_else(|| bad_data("bad len"))?;
+                    let value = read_value(r, len)?;
+                    Ok(Some(Request::StatePut { shard, term, value }))
+                }
             }
-        },
+        }
         "PING" => Ok(Some(Request::Ping)),
         "QUIT" => Ok(Some(Request::Quit)),
         other => Err(bad_data(&format!("unknown command {other:?}"))),
@@ -372,15 +386,15 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
             Some(c) => writeln!(w, "KEYSC {limit:x} {c:x}"),
             None => writeln!(w, "KEYSC {limit:x}"),
         },
-        Request::Lease { candidate, term, ttl_ms } => {
-            writeln!(w, "LEASE {candidate:x} {term:x} {ttl_ms:x}")
+        Request::Lease { shard, candidate, term, ttl_ms } => {
+            writeln!(w, "LEASE {shard:x} {candidate:x} {term:x} {ttl_ms:x}")
         }
-        Request::StatePut { term, value } => {
-            writeln!(w, "STATE {term:x} {}", value.len())?;
+        Request::StatePut { shard, term, value } => {
+            writeln!(w, "STATE {shard:x} {term:x} {}", value.len())?;
             w.write_all(value)?;
             w.write_all(b"\n")
         }
-        Request::StateGet => w.write_all(b"STATE\n"),
+        Request::StateGet { shard } => writeln!(w, "STATE {shard:x}"),
         Request::Ping => w.write_all(b"PING\n"),
         Request::Quit => w.write_all(b"QUIT\n"),
     }
@@ -650,24 +664,29 @@ mod tests {
                 limit: 1,
             },
             Request::Lease {
+                shard: 0,
                 candidate: 1,
                 term: 7,
                 ttl_ms: 0x1F4,
             },
             Request::Lease {
+                shard: u64::MAX,
                 candidate: u64::MAX,
                 term: 0,
                 ttl_ms: 0,
             },
             Request::StatePut {
+                shard: 0,
                 term: 3,
                 value: b"ctrl\n\0blob".to_vec(),
             },
             Request::StatePut {
+                shard: 0xDEAD_BEEF,
                 term: u64::MAX,
                 value: vec![],
             },
-            Request::StateGet,
+            Request::StateGet { shard: 0 },
+            Request::StateGet { shard: u64::MAX },
             Request::Ping,
             Request::Quit,
         ] {
@@ -769,7 +788,7 @@ mod tests {
         let mut r = BufReader::new(&b"VALUE 99999999999\n"[..]);
         assert!(read_response(&mut r).is_err());
         // Control-state blobs ride the same cap.
-        let mut r = BufReader::new(&b"STATE 1 99999999999\n"[..]);
+        let mut r = BufReader::new(&b"STATE 0 1 99999999999\n"[..]);
         assert!(read_request(&mut r, &mut line).is_err());
         let mut r = BufReader::new(&b"SVALUE 1 99999999999\n"[..]);
         assert!(read_response(&mut r).is_err());

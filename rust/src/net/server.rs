@@ -8,6 +8,8 @@
 
 use super::protocol::{read_request, write_response, Request, Response, MAX_LEASE_TTL_MS};
 use crate::storage::ShardedStore;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -15,9 +17,12 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Per-node coordinator-failover state: the lease register this node
-/// serves as an authority for, and the replicated control-state blob.
-/// See [`crate::coordinator::election`] /
+/// One coordinator-failover register: the lease this node serves as an
+/// authority for, and the replicated control-state blob. The server
+/// keeps one slot **per shard id** (the `LEASE`/`STATE` key — a range
+/// start in the sharded control plane, `0` for a single unsharded
+/// coordinator), so independent shard leaders never contend for one
+/// register. See [`crate::coordinator::election`] /
 /// [`crate::coordinator::replicate`] for the client-side protocol.
 #[derive(Debug, Default)]
 struct ControlSlot {
@@ -104,11 +109,11 @@ impl NodeServer {
         let store = Arc::new(ShardedStore::new());
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(Mutex::new(Vec::new()));
-        // The node's coordinator-failover register (lease + replicated
-        // control state). Owned by the accept loop: it lives exactly as
-        // long as the node can be reached, and is only ever touched
-        // through the LEASE/STATE wire ops.
-        let control = Arc::new(Mutex::new(ControlSlot::default()));
+        // The node's coordinator-failover registers (lease + replicated
+        // control state, one slot per shard id). Owned by the accept
+        // loop: they live exactly as long as the node can be reached,
+        // and are only ever touched through the LEASE/STATE wire ops.
+        let control: Arc<Mutex<HashMap<u64, ControlSlot>>> = Arc::new(Mutex::new(HashMap::new()));
         let store2 = store.clone();
         let stop2 = stop.clone();
         let conns2 = conns.clone();
@@ -194,7 +199,7 @@ impl Drop for NodeServer {
 fn serve_conn(
     stream: TcpStream,
     store: Arc<ShardedStore>,
-    control: Arc<Mutex<ControlSlot>>,
+    control: Arc<Mutex<HashMap<u64, ControlSlot>>>,
 ) -> std::io::Result<()> {
     stream.set_nodelay(true)?;
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -267,20 +272,38 @@ fn serve_conn(
                     next: page.next,
                 }
             }
-            Request::Lease { candidate, term, ttl_ms } => {
-                let mut slot = control.lock().unwrap();
-                slot.try_lease(candidate, term, ttl_ms, Instant::now())
+            Request::Lease { shard, candidate, term, ttl_ms } => {
+                let mut slots = control.lock().unwrap();
+                match slots.entry(shard) {
+                    // A read-only query (or the id-0 sentinel) against
+                    // a register nobody ever bid for reports it vacant
+                    // without allocating one — the map is sized by
+                    // real shards, not by whatever ids clients probe.
+                    Entry::Vacant(_) if ttl_ms == 0 || candidate == 0 => Response::Leased {
+                        granted: false,
+                        term: 0,
+                        holder: 0,
+                        remaining_ms: 0,
+                    },
+                    entry => {
+                        entry.or_default().try_lease(candidate, term, ttl_ms, Instant::now())
+                    }
+                }
             }
-            Request::StatePut { term, value } => {
-                let mut slot = control.lock().unwrap();
+            Request::StatePut { shard, term, value } => {
+                let mut slots = control.lock().unwrap();
+                let slot = slots.entry(shard).or_default();
                 slot.try_state_put(term, value)
             }
-            Request::StateGet => {
-                let slot = control.lock().unwrap();
-                match &slot.state {
-                    Some(blob) => Response::StateValue {
-                        term: slot.state_term,
-                        value: blob.clone(),
+            Request::StateGet { shard } => {
+                let slots = control.lock().unwrap();
+                match slots.get(&shard) {
+                    Some(slot) => match &slot.state {
+                        Some(blob) => Response::StateValue {
+                            term: slot.state_term,
+                            value: blob.clone(),
+                        },
+                        None => Response::NotFound,
                     },
                     None => Response::NotFound,
                 }
@@ -390,43 +413,70 @@ mod tests {
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
         // Query before any grant: no holder.
-        let q = c.lease(0, 0, 0).unwrap();
+        let q = c.lease(0, 0, 0, 0).unwrap();
         assert!(!q.granted);
         assert_eq!((q.term, q.holder), (0, 0));
         // First bid wins.
-        let g = c.lease(1, 1, 10_000).unwrap();
+        let g = c.lease(0, 1, 1, 10_000).unwrap();
         assert!(g.granted);
         assert_eq!((g.term, g.holder), (1, 1));
         assert!(g.remaining_ms > 0);
         // A rival bid at a higher term is refused while the lease lives.
-        let r = c.lease(2, 2, 10_000).unwrap();
+        let r = c.lease(0, 2, 2, 10_000).unwrap();
         assert!(!r.granted, "live lease must not be preempted");
         assert_eq!((r.term, r.holder), (1, 1));
         // The holder renews at its own term, and may bump it.
-        assert!(c.lease(1, 1, 10_000).unwrap().granted);
-        assert!(c.lease(1, 3, 50).unwrap().granted);
+        assert!(c.lease(0, 1, 1, 10_000).unwrap().granted);
+        assert!(c.lease(0, 1, 3, 50).unwrap().granted);
         // After expiry a strictly higher term takes over...
         std::thread::sleep(std::time::Duration::from_millis(80));
-        let q = c.lease(0, 0, 0).unwrap();
+        let q = c.lease(0, 0, 0, 0).unwrap();
         assert_eq!(q.holder, 0, "expired lease reads as vacant");
         assert_eq!(q.term, 3, "last granted term still visible");
-        assert!(!c.lease(2, 3, 10_000).unwrap().granted, "equal term refused");
-        let g = c.lease(2, 4, 10_000).unwrap();
+        assert!(!c.lease(0, 2, 3, 10_000).unwrap().granted, "equal term refused");
+        let g = c.lease(0, 2, 4, 10_000).unwrap();
         assert!(g.granted);
         assert_eq!((g.term, g.holder), (4, 2));
+    }
+
+    #[test]
+    fn lease_and_state_registers_are_independent_per_shard() {
+        // One authority serves any number of per-shard registers: a
+        // grant or a state blob under one shard id must never be
+        // visible through — or block — another shard's register.
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect(server.addr()).unwrap();
+        let g = c.lease(5, 1, 1, 10_000).unwrap();
+        assert!(g.granted);
+        // A different shard's register is still vacant and grantable by
+        // a different candidate at its own term.
+        let q = c.lease(9, 0, 0, 0).unwrap();
+        assert_eq!((q.term, q.holder), (0, 0));
+        let g = c.lease(9, 2, 7, 10_000).unwrap();
+        assert!(g.granted);
+        assert_eq!((g.term, g.holder), (7, 2));
+        // Shard 5's incumbent is untouched.
+        let q = c.lease(5, 0, 0, 0).unwrap();
+        assert_eq!((q.term, q.holder), (1, 1));
+        // State slots are keyed the same way.
+        assert_eq!(c.state_put(5, 3, b"five".to_vec()).unwrap(), (true, 3));
+        assert_eq!(c.state_get(9).unwrap(), None);
+        assert_eq!(c.state_put(9, 1, b"nine".to_vec()).unwrap(), (true, 1));
+        assert_eq!(c.state_get(5).unwrap(), Some((3, b"five".to_vec())));
+        assert_eq!(c.state_get(9).unwrap(), Some((1, b"nine".to_vec())));
     }
 
     #[test]
     fn state_applies_by_term_and_reads_back() {
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
-        assert_eq!(c.state_get().unwrap(), None);
-        assert_eq!(c.state_put(1, b"one".to_vec()).unwrap(), (true, 1));
-        assert_eq!(c.state_put(1, b"one'".to_vec()).unwrap(), (true, 1));
-        assert_eq!(c.state_put(3, b"three\n\0".to_vec()).unwrap(), (true, 3));
+        assert_eq!(c.state_get(0).unwrap(), None);
+        assert_eq!(c.state_put(0, 1, b"one".to_vec()).unwrap(), (true, 1));
+        assert_eq!(c.state_put(0, 1, b"one'".to_vec()).unwrap(), (true, 1));
+        assert_eq!(c.state_put(0, 3, b"three\n\0".to_vec()).unwrap(), (true, 3));
         // A deposed leader's late publish can never clobber the successor.
-        assert_eq!(c.state_put(2, b"stale".to_vec()).unwrap(), (false, 3));
-        assert_eq!(c.state_get().unwrap(), Some((3, b"three\n\0".to_vec())));
+        assert_eq!(c.state_put(0, 2, b"stale".to_vec()).unwrap(), (false, 3));
+        assert_eq!(c.state_get(0).unwrap(), Some((3, b"three\n\0".to_vec())));
     }
 
     #[test]

@@ -311,7 +311,7 @@ mod tests {
         );
         assert_eq!(s.vget(7), Some((new, b"new".to_vec())));
         // Idempotent replay of the winning write applies cleanly.
-        assert!(s.vset(7, new, b"new".to_vec()));
+        assert!(s.vset(7, new, b"new".to_vec()).is_ok());
         // A later epoch beats any seq of an earlier epoch.
         let epoch4 = Version::new(4, 1);
         assert!(s.vset(7, epoch4, b"e4".to_vec()).is_ok());

@@ -14,12 +14,17 @@
 //! 7. Coordinator hand-off: replaying a shadowed writer registry into
 //!    a promoted coordinator is idempotent and never loses an acked
 //!    key (random write mixes, random export timing, random replays).
+//! 8. Sharded control plane: under random shard counts, random split
+//!    points and random kill/promote interleavings, the shard ranges
+//!    always partition the full key space, and a promoted shard
+//!    rebuilds the identical placement function from its shadow state.
 
 use asura::algo::asura::AsuraPlacer;
 use asura::algo::chash::ConsistentHash;
 use asura::algo::straw::StrawBuckets;
 use asura::algo::{Membership, NodeId, Placer};
 use asura::cluster::AsuraCluster;
+use asura::coordinator::shard::ShardMap;
 use asura::coordinator::Coordinator;
 use asura::net::pool::PoolConfig;
 use asura::net::server::NodeServer;
@@ -365,6 +370,149 @@ fn prop_shadow_registry_replay_into_promoted_coordinator_is_lossless() {
         let n = gets.len() as u64;
         let res = pool.run(gets).unwrap();
         assert_eq!((res.hits, res.lost), (n, 0), "case {case}");
+    });
+}
+
+#[test]
+fn prop_shard_ranges_partition_and_shadow_replay_rebuilds_identical_placement() {
+    // The sharded-control-plane chaos property: however splits and
+    // kill/promote cycles interleave, (a) the shard ranges stay a
+    // partition of the full key-ID space — sorted starts, first at 0,
+    // each end meeting the next start, with `shard_of` and the
+    // composite snapshot agreeing on every probe — and (b) a shard
+    // promoted from its shadowed control state places every id exactly
+    // like the coordinator it replaced. Nodes are harness-owned so a
+    // simulated leader kill never takes storage down with it.
+    fn check_partition(map: &ShardMap, rng: &mut SplitMix64, case: u64) {
+        let ranges = map.ranges();
+        assert_eq!(ranges[0].0, 0, "case {case}: coverage gap below shard 0");
+        for (w, &(lo, hi)) in ranges.iter().enumerate() {
+            match hi {
+                Some(end) => {
+                    assert!(lo < end, "case {case}: inverted range");
+                    assert_eq!(end, ranges[w + 1].0, "case {case}: gap or overlap");
+                }
+                None => assert_eq!(w, ranges.len() - 1, "case {case}: interior unbounded range"),
+            }
+        }
+        let snap = map.snapshot();
+        assert!(snap.is_coherent(), "case {case}: incoherent composite");
+        for _ in 0..64 {
+            let key = rng.next_u64();
+            let idx = map.shard_of(key);
+            let (lo, hi) = ranges[idx];
+            let inside = match hi {
+                Some(end) => key >= lo && key < end,
+                None => key >= lo,
+            };
+            assert!(inside, "case {case}: shard_of({key:#x}) out of its range");
+            assert_eq!(
+                snap.shard_index_of(key),
+                idx,
+                "case {case}: snapshot and map disagree on {key:#x}"
+            );
+        }
+    }
+
+    /// Hands out disjoint groups of harness-owned nodes with globally
+    /// unique ids, one group per new shard.
+    struct NodePool<'a> {
+        servers: &'a [NodeServer],
+        per: usize,
+        next_group: usize,
+        next_node: u32,
+    }
+    impl NodePool<'_> {
+        fn remaining(&self) -> bool {
+            (self.next_group + 1) * self.per <= self.servers.len()
+        }
+        fn join_group(&mut self, coord: &mut Coordinator) {
+            let lo = self.next_group * self.per;
+            for s in &self.servers[lo..lo + self.per] {
+                coord.join_external(self.next_node, 1.0, s.addr()).unwrap();
+                self.next_node += 1;
+            }
+            self.next_group += 1;
+        }
+    }
+
+    for_cases(0x5AAD, 3, |rng, case| {
+        let replicas = 1 + rng.below(2) as usize; // RF 1..=2
+        let per = 2usize;
+        let groups = 3 + rng.below(2) as usize; // node groups available
+        let servers: Vec<NodeServer> = (0..groups * per)
+            .map(|_| NodeServer::spawn().unwrap())
+            .collect();
+        let mut map = ShardMap::new(replicas);
+        let mut pool = NodePool {
+            servers: &servers,
+            per,
+            next_group: 0,
+            next_node: 0,
+        };
+        // Shard 0 takes the first group directly.
+        pool.join_group(map.coordinator_mut(0).unwrap());
+        map.republish();
+        let mut written: HashSet<u64> = HashSet::new();
+        for _ in 0..150 {
+            let key = rng.next_u64();
+            map.set(key, &key.to_le_bytes()).unwrap();
+            written.insert(key);
+        }
+        check_partition(&map, rng, case);
+        // Random interleaving of splits, kill/promote cycles, writes.
+        for _ in 0..5 {
+            let action = rng.below(3);
+            if action == 0 && pool.remaining() {
+                // Split at a random interior point; the carved range
+                // lands on the next free node group.
+                let mut at = rng.next_u64();
+                while map.ranges().iter().any(|&(s, _)| s == at) {
+                    at = rng.next_u64();
+                }
+                map.split_with(at, |coord| {
+                    pool.join_group(coord);
+                    Ok(())
+                })
+                .unwrap();
+            } else if action == 1 {
+                // Kill a random shard leader, then promote from its
+                // shadowed control state: the rebuilt placement must
+                // be identical, not a same-membership lookalike.
+                let idx = rng.below(map.shard_count() as u64) as usize;
+                let state = map.export_state(idx).unwrap();
+                let term = map.coordinator(idx).unwrap().term();
+                let before = map.coordinator(idx).unwrap().placer().clone();
+                let handles = map.handles(idx);
+                drop(map.take_coordinator(idx).expect("shard was live"));
+                let promoted = Coordinator::promote_from(&state, term + 1, handles).unwrap();
+                map.install(idx, promoted).unwrap();
+                let after_map = map.coordinator(idx).unwrap();
+                for _ in 0..100 {
+                    let id = rng.next_u64();
+                    assert_eq!(
+                        after_map.placer().place(id),
+                        before.place(id),
+                        "case {case}: promoted shard placement diverged at {id:#x}"
+                    );
+                }
+            } else {
+                for _ in 0..25 {
+                    let key = rng.next_u64();
+                    map.set(key, &key.to_le_bytes()).unwrap();
+                    written.insert(key);
+                }
+            }
+            check_partition(&map, rng, case);
+        }
+        // Nothing written was ever lost, on any shard.
+        assert_eq!(
+            map.verify_all_readable().unwrap(),
+            written.len(),
+            "case {case}: a written key became unreadable"
+        );
+        let audit = map.audit_all().unwrap();
+        assert!(audit.is_full(), "case {case}: under-replicated {:?}", audit.under_keys);
     });
 }
 

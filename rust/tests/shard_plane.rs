@@ -1,0 +1,114 @@
+//! Integration: the sharded control plane.
+//!
+//! Covers the contracts the multi-coordinator subsystem introduces:
+//! 1. the acceptance scenario — K shard leaders under live write
+//!    churn, a concurrent range split racing a shard-leader kill, the
+//!    always-on shadow standby promoting on its own lease watch —
+//!    loses zero reads and zero keys, deterministically from the
+//!    printed seed;
+//! 2. the suite harness emits a shape-checked `BENCH_shard.json`
+//!    trajectory (cross-shard scaling rows + the failover story).
+//!
+//! The finer-grained mechanics (range partitioning, split/merge
+//! round-trips, cross-shard stray convergence, per-shard lease and
+//! state registers) are pinned by the unit tests in
+//! `coordinator/shard.rs`, `coordinator/election.rs`,
+//! `coordinator/replicate.rs` and `net/server.rs`, plus the seeded
+//! chaos property in `tests/properties.rs`.
+
+use asura::loadgen::{run_shard_failover, run_shard_suite, ShardBenchConfig};
+
+fn quick_cfg() -> ShardBenchConfig {
+    ShardBenchConfig {
+        shards: 2,
+        nodes_per_shard: 3,
+        replicas: 2,
+        write_quorum: 2,
+        read_quorum: 1,
+        keys: 500,
+        read_ops: 1_000,
+        workers: 3,
+        pipeline_depth: 16,
+        lease_ttl_ms: 200,
+        tick_ms: 10,
+        repair_batch: 64,
+        out_json: None,
+        ..ShardBenchConfig::default()
+    }
+}
+
+#[test]
+fn concurrent_split_and_shard_leader_kill_lose_nothing() {
+    // The acceptance scenario. Everything the story does — the op
+    // stream, the preloaded key space, the split point, the victim
+    // shard — derives from this seed, so a failure reproduces by
+    // rerunning with the printed value.
+    let cfg = quick_cfg();
+    println!("shard-plane seed = {:#x}", cfg.seed);
+    let report = run_shard_failover(&cfg).unwrap();
+    println!("{}", report.line());
+    assert_eq!(report.lost, 0, "zero failed reads across split + leader kill");
+    assert_eq!(report.audit_under, 0, "holder audit: full RF on every shard");
+    assert_eq!(report.audit_keys, 500, "zero keys lost across the story");
+    assert_eq!(report.splits, 1, "the online split ran under load");
+    assert!(
+        report.moved_keys > 0,
+        "the split must move the carved range's keys"
+    );
+    assert!(report.new_term > report.old_term, "promotion bumps the term");
+    assert!(
+        report.time_to_new_epoch_ms > 0.0,
+        "shard hand-off latency must be measured"
+    );
+    // Floor = lease TTL + the watcher threshold; generous ceiling so a
+    // loaded CI host cannot flake it.
+    assert!(
+        report.time_to_new_epoch_ms < 15_000.0,
+        "shard promotion took {} ms",
+        report.time_to_new_epoch_ms
+    );
+    assert!(
+        report.stranded_writes > 0,
+        "live churn must ack writes into the headless shard's slice"
+    );
+    assert!(
+        report.epochs.1 > report.epochs.0,
+        "traffic must observe the split epoch and the promotion epoch"
+    );
+    assert!(report.ops >= 1_000, "at least one full driver round ran");
+    assert_eq!(report.shards, 3, "K=2 plus the shard the split carved out");
+}
+
+#[test]
+fn shard_suite_emits_the_bench_trajectory() {
+    let dir = std::env::temp_dir().join("asura_shard_plane_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_shard.json");
+    let cfg = ShardBenchConfig {
+        keys: 300,
+        read_ops: 600,
+        out_json: Some(path.to_str().unwrap().to_string()),
+        ..quick_cfg()
+    };
+    let reports = run_shard_suite(&cfg).unwrap();
+    assert_eq!(reports.len(), 3, "scale k=1, scale k=2, failover");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = asura::util::json::parse(&text).unwrap();
+    assert_eq!(v.get("bench").unwrap().as_str(), Some("shard"));
+    assert_eq!(v.get("shards").unwrap().as_u64(), Some(2));
+    assert_eq!(v.get("lease_ttl_ms").unwrap().as_u64(), Some(200));
+    let results = v.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 3);
+    for r in results {
+        assert_eq!(r.get("lost").unwrap().as_u64(), Some(0));
+        assert!(r.get("ops_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+    assert_eq!(results[0].get("scenario").unwrap().as_str(), Some("shard_scale_k1"));
+    assert_eq!(results[1].get("scenario").unwrap().as_str(), Some("shard_scale_k2"));
+    let failover = &results[2];
+    assert_eq!(failover.get("scenario").unwrap().as_str(), Some("shard_failover"));
+    assert!(failover.get("time_to_new_epoch_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(failover.get("stranded_writes").is_some());
+    let old_term = failover.get("old_term").unwrap().as_u64().unwrap();
+    assert!(failover.get("new_term").unwrap().as_u64().unwrap() > old_term);
+}

@@ -108,6 +108,93 @@ fn concurrent_mixed_ops_keep_accounting_consistent() {
 }
 
 #[test]
+fn keys_page_edge_cases_terminate_without_duplicates() {
+    // Empty store: one empty, terminal page — with or without a cursor
+    // (a `KEYSC` client resuming against a node that lost everything
+    // must terminate, not loop).
+    let store = ShardedStore::new();
+    let page = store.keys_page(None, 16);
+    assert!(page.keys.is_empty());
+    assert!(page.next.is_none());
+    let page = store.keys_page(Some(12_345), 16);
+    assert!(page.keys.is_empty());
+    assert!(page.next.is_none());
+
+    // Cursor at (or past) the end of the scan order: terminal.
+    for k in 0..50u64 {
+        store.set(k, vec![1]);
+    }
+    let mut cursor = None;
+    let mut last = None;
+    loop {
+        let page = store.keys_page(cursor, 7);
+        if let Some(&k) = page.keys.last() {
+            last = Some(k);
+        }
+        match page.next {
+            Some(c) => cursor = Some(c),
+            None => break,
+        }
+    }
+    let page = store.keys_page(last, 7);
+    assert!(page.keys.is_empty(), "resume past the final key must be empty");
+    assert!(page.next.is_none());
+    // A cursor key that no longer exists (deleted between pages) still
+    // resumes — scan position derives from the key, not the entry.
+    let gone = last.unwrap();
+    store.remove(gone);
+    let page = store.keys_page(Some(gone), 7);
+    assert!(page.keys.is_empty());
+    assert!(page.next.is_none());
+}
+
+#[test]
+fn keys_page_delete_during_scan_never_duplicates_and_terminates() {
+    // Walk pages while deleting the cursor key itself plus churn ahead
+    // of the scan: the walk must terminate, return no key twice, and
+    // still return every key that survived the whole walk.
+    let store = ShardedStore::new();
+    for k in 0..500u64 {
+        store.set(k, vec![1]);
+    }
+    let mut seen: Vec<u64> = Vec::new();
+    let mut deleted: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    let mut cursor = None;
+    let mut steps = 0u32;
+    loop {
+        let page = store.keys_page(cursor, 32);
+        assert!(page.keys.len() <= 32);
+        seen.extend(page.keys.iter().copied());
+        match page.next {
+            Some(c) => {
+                // The cursor key vanishes before the resume, plus one
+                // more key elsewhere in the space.
+                if store.remove(c).is_some() {
+                    deleted.insert(c);
+                }
+                let other = (c + 101) % 500;
+                if store.remove(other).is_some() {
+                    deleted.insert(other);
+                }
+                cursor = Some(c);
+            }
+            None => break,
+        }
+        steps += 1;
+        assert!(steps < 1_000, "delete-during-scan walk failed to terminate");
+    }
+    let mut uniq = seen.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), seen.len(), "a key was returned twice");
+    for k in 0..500u64 {
+        if !deleted.contains(&k) {
+            assert!(uniq.binary_search(&k).is_ok(), "surviving key {k} was missed");
+        }
+    }
+}
+
+#[test]
 fn pagination_is_stable_under_concurrent_churn() {
     // A scanner pages through the keyset while a writer churns a
     // disjoint range: every stable key must be returned exactly once

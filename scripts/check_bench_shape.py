@@ -16,6 +16,10 @@ Requirements are keyed by the artifact's "bench" field:
                      read_quorum and a finite lost count
   coord_failover  -> top-level lease_ttl_ms; per-result
                      time_to_new_epoch_ms, stranded_writes, lost
+  shard           -> top-level shards/lease_ttl_ms; per-result ops,
+                     ops_per_sec, shards, lost; the shard_failover
+                     result additionally needs time_to_new_epoch_ms
+                     and stranded_writes
 
 Only stdlib; runs on the bare CI python3.
 """
@@ -28,6 +32,7 @@ TOP_REQUIRED = {
     "throughput": ["nodes", "keys", "workers"],
     "failover": ["nodes", "read_quorum", "write_quorum"],
     "coord_failover": ["nodes", "read_quorum", "write_quorum", "lease_ttl_ms"],
+    "shard": ["shards", "nodes_per_shard", "read_quorum", "write_quorum", "lease_ttl_ms"],
 }
 
 RESULT_REQUIRED = {
@@ -40,11 +45,13 @@ RESULT_REQUIRED = {
         "stranded_writes",
         "lost",
     ],
+    "shard": ["ops", "ops_per_sec", "shards", "lost"],
 }
 
 # Extra fields required on specific result scenarios.
 SCENARIO_REQUIRED = {
     ("failover", "failover"): ["time_to_detect_ms", "time_to_full_rf_ms"],
+    ("shard", "shard_failover"): ["time_to_new_epoch_ms", "stranded_writes"],
 }
 
 
