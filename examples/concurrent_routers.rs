@@ -36,12 +36,7 @@ fn main() -> anyhow::Result<()> {
 
     let pool = RouterPool::connect(
         &coord.snapshot_cell(),
-        PoolConfig {
-            workers: 8,
-            pipeline_depth: 32,
-            verify_hits: true,
-            ..PoolConfig::default()
-        },
+        PoolConfig::new(8).pipeline_depth(32).verify_hits(true),
     )?;
 
     // Launch the read storm, then race it with two membership changes.

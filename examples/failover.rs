@@ -46,13 +46,12 @@ fn main() -> anyhow::Result<()> {
         coord.key_count()
     );
 
-    let pool = coord.connect_pool(PoolConfig {
-        workers: 6,
-        pipeline_depth: 32,
-        verify_hits: true,
-        write_quorum: quorum,
-        ..PoolConfig::default()
-    })?;
+    let pool = coord.connect_pool(
+        PoolConfig::new(6)
+            .pipeline_depth(32)
+            .verify_hits(true)
+            .write_quorum(quorum),
+    )?;
 
     // Continuous traffic on a driver thread.
     let stop = Arc::new(AtomicBool::new(false));

@@ -86,9 +86,61 @@ def good_shard():
     }
 
 
+def good_serve_async():
+    result_common = {
+        "ops": 50000,
+        "wall_s": 1.8,
+        "clients": 1000,
+        "lost": 0,
+    }
+    return {
+        "bench": "serve_async",
+        "clients": 1000,
+        "drivers": 16,
+        "keys": 1000,
+        "read_ops": 50000,
+        "value_size": 16,
+        "pipeline_depth": 16,
+        "seed": 165,
+        "binary_speedup_vs_text": 2.4,
+        "results": [
+            dict(
+                result_common,
+                scenario="text_threaded",
+                ops_per_sec=27000.0,
+                p50_us=420.0,
+                p99_us=4100.0,
+            ),
+            dict(
+                result_common,
+                scenario="binary_reactor",
+                ops_per_sec=65000.0,
+                p50_us=180.0,
+                p99_us=1500.0,
+            ),
+        ],
+    }
+
+
 def test_well_shaped_artifacts_pass(tmp_path):
     assert shape.check_file(_write(tmp_path, good_throughput())) == []
     assert shape.check_file(_write(tmp_path, good_shard())) == []
+    assert shape.check_file(_write(tmp_path, good_serve_async())) == []
+
+
+def test_serve_async_missing_latency_or_clients_fails(tmp_path):
+    doc = good_serve_async()
+    del doc["results"][1]["p99_us"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("results[1]" in e and "p99_us" in e for e in errors)
+    doc = good_serve_async()
+    del doc["results"][0]["clients"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("results[0]" in e and "clients" in e for e in errors)
+    doc = good_serve_async()
+    del doc["pipeline_depth"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("pipeline_depth" in e for e in errors)
 
 
 def test_missing_result_field_fails(tmp_path):

@@ -115,6 +115,27 @@ struct Member {
     server: Option<NodeServer>,
 }
 
+impl Member {
+    /// Versioned GET through the control conn, reconnecting once if the
+    /// cached connection has gone stale (e.g. the node restarted).
+    /// `Err` means the member is genuinely unreachable right now.
+    fn probe_vget(&mut self, key: DatumId) -> std::io::Result<Option<(Version, Vec<u8>)>> {
+        match self.conn.vget(key) {
+            Ok(v) => Ok(v),
+            Err(_) => {
+                self.conn = Conn::connect(self.addr)?;
+                self.conn.vget(key)
+            }
+        }
+    }
+}
+
+/// Concurrency bound on the repair/migration fan-outs
+/// ([`crate::net::scatter_bounded`]): enough overlap to hide loopback
+/// round trips without stampeding a cluster's worth of control conns
+/// from one coordinator thread.
+const PROBE_FANOUT: usize = 8;
+
 /// Bound on re-copy rounds when a migration delete guard keeps being
 /// refused. Each extra round requires yet another live write landing on
 /// the old holder inside the delete window, so the loop converges as
@@ -490,12 +511,9 @@ impl Coordinator {
     pub fn connect_pool(&self, cfg: PoolConfig) -> std::io::Result<RouterPool> {
         RouterPool::connect(
             &self.cell,
-            PoolConfig {
-                registry: Some(Arc::clone(&self.registry)),
-                repair_hints: Some(Arc::clone(&self.repair_hints)),
-                clock: self.clock.clone(),
-                ..cfg
-            },
+            cfg.registry(Arc::clone(&self.registry))
+                .repair_hints(Arc::clone(&self.repair_hints))
+                .clock(self.clock.clone()),
         )
     }
 
@@ -856,10 +874,13 @@ impl Coordinator {
         key: DatumId,
         nodes: &[NodeId],
     ) -> (Option<(Version, Vec<u8>)>, Vec<NodeId>) {
+        let probes = crate::net::scatter_bounded(self.members_mut(nodes), PROBE_FANOUT, |(n, m)| {
+            (n, m.probe_vget(key))
+        });
         let mut best: Option<(Version, Vec<u8>)> = None;
         let mut holders: Vec<NodeId> = Vec::new();
-        for &n in nodes {
-            if let Ok(Some((ver, bytes))) = self.member_vget(n, key) {
+        for (n, res) in probes {
+            if let Ok(Some((ver, bytes))) = res {
                 holders.push(n);
                 if ver.beats(&best) {
                     best = Some((ver, bytes));
@@ -1019,10 +1040,8 @@ impl Coordinator {
         self.repair.enqueue(keys);
     }
 
-    /// Versioned GET through a member's control conn, reconnecting once
-    /// if the cached connection has gone stale (e.g. the node
-    /// restarted). `Err` means the member is genuinely unreachable
-    /// right now.
+    /// [`Member::probe_vget`] by node id; `Err` when the node is not a
+    /// member at all.
     fn member_vget(
         &mut self,
         n: NodeId,
@@ -1032,13 +1051,25 @@ impl Coordinator {
             .members
             .get_mut(&n)
             .ok_or_else(|| std::io::Error::other(format!("no member {n}")))?;
-        match m.conn.vget(key) {
-            Ok(v) => Ok(v),
-            Err(_) => {
-                m.conn = Conn::connect(m.addr)?;
-                m.conn.vget(key)
-            }
-        }
+        m.probe_vget(key)
+    }
+
+    /// Disjoint `&mut Member` borrows for `ids`, in `ids` order —
+    /// unknown ids are silently skipped (callers that must distinguish
+    /// a missing member compare the returned length against `ids`).
+    /// This is what lets the fan-out helpers drive several control
+    /// conns concurrently from one `&mut self`.
+    fn members_mut(&mut self, ids: &[NodeId]) -> Vec<(NodeId, &mut Member)> {
+        let pos: HashMap<NodeId, usize> =
+            ids.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        let mut out: Vec<(NodeId, &mut Member)> = self
+            .members
+            .iter_mut()
+            .filter(|(id, _)| pos.contains_key(*id))
+            .map(|(&id, m)| (id, m))
+            .collect();
+        out.sort_unstable_by_key(|&(id, _)| pos[&id]);
+        out
     }
 
     /// Remove `key`'s copy on `node` without ever clobbering a newer
@@ -1104,26 +1135,35 @@ impl Coordinator {
     pub fn repair_step(&mut self, max_keys: usize) -> anyhow::Result<RepairTick> {
         self.drain_repair_hints();
         let mut tick = RepairTick::default();
-        while tick.checked < max_keys {
-            let Some(key) = self.repair.pop() else { break };
+        // One batch popped up front (rather than pop-as-we-go) so a key
+        // deferred mid-tick is never re-popped inside the same tick.
+        for key in self.repair.pop_batch(max_keys) {
             tick.checked += 1;
             let targets = self.replica_set(key);
-            // Survey the holders: freshest copy wins; note who is
-            // missing one and who holds a stale one.
+            // Survey the holders concurrently: freshest copy wins; note
+            // who is missing one and who holds a stale one.
+            let mut probes: HashMap<NodeId, std::io::Result<Option<(Version, Vec<u8>)>>> =
+                crate::net::scatter_bounded(self.members_mut(&targets), PROBE_FANOUT, |(n, m)| {
+                    (n, m.probe_vget(key))
+                })
+                .into_iter()
+                .collect();
             let mut best: Option<(Version, Vec<u8>)> = None;
             let mut missing: Vec<NodeId> = Vec::new();
             let mut holding: Vec<(NodeId, Version)> = Vec::new();
             let mut unreachable = false;
             for &n in &targets {
-                match self.member_vget(n, key) {
-                    Ok(Some((ver, bytes))) => {
+                match probes.remove(&n) {
+                    Some(Ok(Some((ver, bytes)))) => {
                         if ver.beats(&best) {
                             best = Some((ver, bytes));
                         }
                         holding.push((n, ver));
                     }
-                    Ok(None) => missing.push(n),
-                    Err(_) => {
+                    Some(Ok(None)) => missing.push(n),
+                    // Probe error, or not a member at all: both count as
+                    // unreachable, never as RF exhausted.
+                    Some(Err(_)) | None => {
                         unreachable = true;
                         missing.push(n);
                     }
@@ -1166,21 +1206,24 @@ impl Coordinator {
             }
             let mut failed_write = false;
             let mut wrote = false;
-            for n in missing {
-                if let Some(m) = self.members.get_mut(&n) {
-                    match m.conn.vset(key, best_ver, value.clone()) {
-                        // Only applied copies count as moved bytes; a
-                        // refused one means the holder got something
-                        // newer on its own — nothing is owed there.
-                        Ok(ack) => {
-                            if ack.applied {
-                                tick.copies += 1;
-                                tick.bytes += value.len() as u64;
-                                wrote = true;
-                            }
+            let acks = crate::net::scatter_bounded(
+                self.members_mut(&missing),
+                PROBE_FANOUT,
+                |(_, m)| m.conn.vset(key, best_ver, value.clone()),
+            );
+            for ack in acks {
+                match ack {
+                    // Only applied copies count as moved bytes; a
+                    // refused one means the holder got something newer
+                    // on its own — nothing is owed there.
+                    Ok(ack) => {
+                        if ack.applied {
+                            tick.copies += 1;
+                            tick.bytes += value.len() as u64;
+                            wrote = true;
                         }
-                        Err(_) => failed_write = true,
                     }
+                    Err(_) => failed_write = true,
                 }
             }
             if failed_write {
@@ -1208,21 +1251,32 @@ impl Coordinator {
     pub fn audit_replication(&mut self) -> anyhow::Result<ReplicationAudit> {
         self.sync_registry();
         self.drain_repair_hints();
-        let mut holders: HashMap<DatumId, Vec<NodeId>> = HashMap::new();
         let mut ids: Vec<NodeId> = self.members.keys().copied().collect();
         ids.sort_unstable();
-        for id in ids {
-            let m = self.members.get_mut(&id).expect("member just listed");
-            let mut cursor: Option<u64> = None;
-            loop {
-                let (keys, next) = m.conn.keys_chunk(AUDIT_PAGE, cursor)?;
-                for key in keys {
-                    holders.entry(key).or_default().push(id);
+        // Walk every member's cursor concurrently; each walk is its own
+        // serial KEYSC page loop on its own control conn.
+        let walks = crate::net::scatter_bounded(
+            self.members_mut(&ids),
+            PROBE_FANOUT,
+            |(id, m)| -> std::io::Result<(NodeId, Vec<DatumId>)> {
+                let mut keys: Vec<DatumId> = Vec::new();
+                let mut cursor: Option<u64> = None;
+                loop {
+                    let (page, next) = m.conn.keys_chunk(AUDIT_PAGE, cursor)?;
+                    keys.extend(page);
+                    match next {
+                        Some(c) => cursor = Some(c),
+                        None => break,
+                    }
                 }
-                match next {
-                    Some(c) => cursor = Some(c),
-                    None => break,
-                }
+                Ok((id, keys))
+            },
+        );
+        let mut holders: HashMap<DatumId, Vec<NodeId>> = HashMap::new();
+        for walk in walks {
+            let (id, keys) = walk?;
+            for key in keys {
+                holders.entry(key).or_default().push(id);
             }
         }
         let mut audit = ReplicationAudit {
@@ -1286,32 +1340,47 @@ impl Coordinator {
             }
             report.moved += 1;
             // Fetch the freshest surviving copy (replicas can briefly
-            // diverge under racing quorum writes; max version wins).
+            // diverge under racing quorum writes; max version wins) —
+            // one concurrent probe per surviving holder.
+            let fetched = crate::net::scatter_bounded(
+                self.members_mut(old_set),
+                PROBE_FANOUT,
+                |(_, m)| m.conn.vget(key),
+            );
             let mut best: Option<(Version, Vec<u8>)> = None;
-            for n in old_set {
-                if let Some(m) = self.members.get_mut(n) {
-                    if let Some((ver, bytes)) = m.conn.vget(key)? {
-                        if ver.beats(&best) {
-                            best = Some((ver, bytes));
-                        }
+            for res in fetched {
+                if let Some((ver, bytes)) = res? {
+                    if ver.beats(&best) {
+                        best = Some((ver, bytes));
                     }
                 }
             }
             let (version, value) =
                 best.ok_or_else(|| anyhow::anyhow!("datum {key} lost during migration"))?;
             report.bytes_moved += value.len() as u64 * (new_set.len() as u64);
-            for n in &new_set {
-                if !old_set.contains(n) {
-                    let m = self
-                        .members
-                        .get_mut(n)
-                        .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
-                    // Carries the fetched stamp, so the node's
-                    // highest-version-wins rule refuses this copy
-                    // wherever a racing live write already landed a
-                    // newer value — the copier can never clobber it.
-                    m.conn.vset(key, version, value.clone())?;
-                }
+            let writers: Vec<NodeId> = new_set
+                .iter()
+                .copied()
+                .filter(|n| !old_set.contains(n))
+                .collect();
+            let targets = self.members_mut(&writers);
+            if targets.len() != writers.len() {
+                let present: Vec<NodeId> = targets.iter().map(|&(n, _)| n).collect();
+                let n = writers
+                    .iter()
+                    .copied()
+                    .find(|n| !present.contains(n))
+                    .expect("some writer is absent");
+                anyhow::bail!("no member {n}");
+            }
+            // Each write carries the fetched stamp, so the node's
+            // highest-version-wins rule refuses this copy wherever a
+            // racing live write already landed a newer value — the
+            // copier can never clobber it.
+            for ack in crate::net::scatter_bounded(targets, PROBE_FANOUT, |(_, m)| {
+                m.conn.vset(key, version, value.clone())
+            }) {
+                ack?;
             }
             moves.push(PendingMove {
                 key,

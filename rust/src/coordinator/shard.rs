@@ -246,12 +246,9 @@ impl ShardMap {
     pub fn connect_pool(&self, cfg: PoolConfig) -> std::io::Result<RouterPool> {
         RouterPool::connect(
             &self.composite,
-            PoolConfig {
-                registry: Some(Arc::clone(&self.registry)),
-                repair_hints: Some(Arc::clone(&self.repair_hints)),
-                clock: self.clock.clone(),
-                ..cfg
-            },
+            cfg.registry(Arc::clone(&self.registry))
+                .repair_hints(Arc::clone(&self.repair_hints))
+                .clock(self.clock.clone()),
         )
     }
 

@@ -42,6 +42,18 @@ impl RepairQueue {
         Some(k)
     }
 
+    /// Drain up to `n` keys in FIFO order. A repair tick takes its whole
+    /// batch up front, so a key it re-enqueues (deferred) lands *behind*
+    /// the batch and is never re-examined within the same tick.
+    pub fn pop_batch(&mut self, n: usize) -> Vec<DatumId> {
+        let take = n.min(self.queue.len());
+        let batch: Vec<DatumId> = self.queue.drain(..take).collect();
+        for k in &batch {
+            self.queued.remove(k);
+        }
+        batch
+    }
+
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
@@ -134,6 +146,19 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), None);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_drains_fifo_and_allows_requeue() {
+        let mut q = RepairQueue::new();
+        q.enqueue([5, 6, 7]);
+        assert_eq!(q.pop_batch(2), vec![5, 6]);
+        assert_eq!(q.pending(), 1);
+        // Drained keys may be re-enqueued immediately (deferred repair).
+        q.enqueue([5]);
+        assert_eq!(q.pop_batch(10), vec![7, 5], "cap larger than queue drains all");
+        assert!(q.is_empty());
+        assert_eq!(q.pop_batch(3), Vec::<DatumId>::new());
     }
 
     #[test]

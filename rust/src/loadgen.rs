@@ -16,9 +16,12 @@ use crate::coordinator::replicate::StateReplicator;
 use crate::coordinator::shard::{ShadowStandby, ShardLeader, ShardMap};
 use crate::coordinator::Coordinator;
 use crate::fault::health::{HealthConfig, HealthEvent, HealthMonitor};
+use crate::net::client::Conn;
 use crate::net::pool::{BatchResult, PoolConfig, RouterPool};
+use crate::net::protocol::{Request, Response};
 use crate::net::router::Router;
 use crate::net::server::NodeServer;
+use crate::prng::SplitMix64;
 use crate::stats::Summary;
 use crate::util::json::Json;
 use crate::workload::{value_for, Op, Scenario, FAILOVER_VALUE_SIZE};
@@ -158,10 +161,7 @@ pub fn run_pool(
     scenario: &str,
 ) -> anyhow::Result<ThroughputReport> {
     let engine = format!("pool_w{}_d{}", cfg.workers, cfg.pipeline_depth);
-    let pool = coord.connect_pool(PoolConfig {
-        verify_hits: true,
-        ..cfg.clone()
-    })?;
+    let pool = coord.connect_pool(cfg.clone().verify_hits(true))?;
     let (sets, gets) = split_phases(ops);
     let t0 = Instant::now();
     let mut res = pool.run(sets)?;
@@ -195,10 +195,7 @@ pub fn run_churn(
     let ops = scenario.ops(seed);
     let total = ops.len() as u64;
     let engine = format!("pool_w{}_d{}", cfg.workers, cfg.pipeline_depth);
-    let pool = coord.connect_pool(PoolConfig {
-        verify_hits: true,
-        ..cfg.clone()
-    })?;
+    let pool = coord.connect_pool(cfg.clone().verify_hits(true))?;
     let t0 = Instant::now();
     let pending = pool.submit(ops);
     // Membership churn racing the in-flight batch: grow by one node,
@@ -260,12 +257,9 @@ impl Default for SuiteConfig {
 /// reports. The headline number is the pool-vs-router speedup on the
 /// uniform scenario.
 pub fn run_suite(cfg: &SuiteConfig) -> anyhow::Result<Vec<ThroughputReport>> {
-    let pool_cfg = PoolConfig {
-        workers: cfg.workers,
-        pipeline_depth: cfg.pipeline_depth,
-        verify_hits: true,
-        ..PoolConfig::default()
-    };
+    let pool_cfg = PoolConfig::new(cfg.workers)
+        .pipeline_depth(cfg.pipeline_depth)
+        .verify_hits(true);
     let mut reports = Vec::new();
 
     // -- uniform: seed router baseline vs pool on identical op streams --
@@ -373,6 +367,262 @@ pub fn write_json(
     ];
     if let Some(speedup) = uniform_speedup(reports) {
         fields.push(("uniform_speedup_pool_vs_router", Json::Num(speedup)));
+    }
+    std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Serve-path scenario: many idle-ish connections against ONE node, text
+// (thread-per-connection) vs binary (reactor) framing.
+// ---------------------------------------------------------------------
+
+/// Configuration for the connection-scaling harness (`asura bench-serve
+/// --binary`): `clients` concurrent connections to a single node, driven
+/// by `drivers` threads issuing pipelined GET batches.
+///
+/// The text plane costs the server one thread per connection; the binary
+/// plane parks all `clients` connections on the reactor. Same node, same
+/// preloaded keyset, same op budget — the delta is the serve
+/// architecture.
+#[derive(Clone, Debug)]
+pub struct ServeAsyncConfig {
+    /// Concurrent connections per plane.
+    pub clients: usize,
+    /// Driver threads the connections are multiplexed over (the client
+    /// side must not need a thousand threads to prove the server
+    /// doesn't).
+    pub drivers: usize,
+    /// Preloaded keys (GETs draw from these, so every op is a hit).
+    pub keys: u64,
+    /// Total GETs per plane.
+    pub read_ops: u64,
+    pub value_size: u32,
+    /// GETs pipelined per batch (one latency sample per batch).
+    pub pipeline_depth: usize,
+    pub seed: u64,
+    /// Where to write `BENCH_serve_async.json` (`None` = don't).
+    pub out_json: Option<String>,
+}
+
+impl Default for ServeAsyncConfig {
+    fn default() -> Self {
+        Self {
+            clients: 1_000,
+            drivers: 16,
+            keys: 1_000,
+            read_ops: 50_000,
+            value_size: 16,
+            pipeline_depth: 16,
+            seed: 0xA5,
+            out_json: Some("BENCH_serve_async.json".to_string()),
+        }
+    }
+}
+
+/// One plane's result ("text_threaded" or "binary_reactor").
+#[derive(Clone, Debug)]
+pub struct ServeAsyncReport {
+    pub scenario: String,
+    pub clients: usize,
+    pub ops: u64,
+    pub wall_s: f64,
+    pub ops_per_sec: f64,
+    /// Per-batch round-trip percentiles (µs).
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// GETs that missed a preloaded key (must be 0).
+    pub lost: u64,
+}
+
+impl ServeAsyncReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:>14}: {:>8} ops @ {} conns in {:.2}s = {:>9.0} ops/s  \
+             (batch p50 {:.0}µs p99 {:.0}µs, lost {})",
+            self.scenario,
+            self.ops,
+            self.clients,
+            self.wall_s,
+            self.ops_per_sec,
+            self.p50_us,
+            self.p99_us,
+            self.lost
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("clients", Json::Num(self.clients as f64)),
+            ("ops", Json::Num(self.ops as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("ops_per_sec", Json::Num(self.ops_per_sec)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("lost", Json::Num(self.lost as f64)),
+        ])
+    }
+}
+
+/// Drive one plane: open `cfg.clients` connections (text or binary)
+/// spread over `cfg.drivers` threads, then issue pipelined GET batches
+/// round-robin across each driver's connections until the op budget is
+/// spent. Every connection stays open for the plane's whole run — the
+/// point is the cost of *holding* them, not of opening them.
+fn run_serve_plane(
+    addr: std::net::SocketAddr,
+    cfg: &ServeAsyncConfig,
+    binary: bool,
+) -> anyhow::Result<ServeAsyncReport> {
+    let scenario = if binary { "binary_reactor" } else { "text_threaded" };
+    let dial = if binary { Conn::connect_binary } else { Conn::connect };
+    let per = cfg.clients.div_ceil(cfg.drivers.max(1));
+    let share = cfg.read_ops / cfg.drivers.max(1) as u64;
+    let rem = cfg.read_ops % cfg.drivers.max(1) as u64;
+    let t0 = Instant::now();
+    let results = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for d in 0..cfg.drivers.max(1) {
+            // Distribute clients/ops evenly; the last driver takes the
+            // remainders.
+            let conns_here = per.min(cfg.clients.saturating_sub(d * per));
+            let ops_here = share + if (d as u64) < rem { 1 } else { 0 };
+            if conns_here == 0 {
+                continue;
+            }
+            handles.push(s.spawn(move || -> anyhow::Result<(Summary, u64, u64)> {
+                let mut conns = Vec::with_capacity(conns_here);
+                for _ in 0..conns_here {
+                    conns.push(dial(addr)?);
+                }
+                let mut rng = SplitMix64::new(cfg.seed ^ (d as u64).wrapping_mul(0x9E37));
+                let mut lat = Summary::new();
+                let mut done = 0u64;
+                let mut lost = 0u64;
+                let mut batch_no = 0usize;
+                let mut reqs = Vec::with_capacity(cfg.pipeline_depth);
+                while done < ops_here {
+                    let n = (ops_here - done).min(cfg.pipeline_depth as u64);
+                    reqs.clear();
+                    for _ in 0..n {
+                        let key = rng.next_u64() % cfg.keys;
+                        reqs.push(Request::Get { key });
+                    }
+                    let conn = &mut conns[batch_no % conns.len()];
+                    batch_no += 1;
+                    let t = Instant::now();
+                    let resps = conn.pipeline(&reqs)?;
+                    lat.push(t.elapsed().as_secs_f64() * 1e6);
+                    for r in resps {
+                        match r {
+                            Response::Value(_) => {}
+                            _ => lost += 1,
+                        }
+                    }
+                    done += n;
+                }
+                Ok((lat, done, lost))
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("serve driver panicked"))
+            .collect::<Vec<_>>()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut lat = Summary::new();
+    let mut ops = 0u64;
+    let mut lost = 0u64;
+    for r in results {
+        let (s, o, l) = r?;
+        lat.absorb(&s);
+        ops += o;
+        lost += l;
+    }
+    Ok(ServeAsyncReport {
+        scenario: scenario.to_string(),
+        clients: cfg.clients,
+        ops,
+        wall_s,
+        ops_per_sec: if wall_s > 0.0 { ops as f64 / wall_s } else { 0.0 },
+        p50_us: lat.percentile(50.0),
+        p99_us: lat.percentile(99.0),
+        lost,
+    })
+}
+
+/// The `bench-serve --binary` suite: one node, `cfg.keys` preloaded,
+/// then the text (thread-per-connection) and binary (reactor) planes
+/// back to back at `cfg.clients` concurrent connections each. Emits
+/// `BENCH_serve_async.json` and returns `[text, binary]`.
+pub fn run_serve_async(cfg: &ServeAsyncConfig) -> anyhow::Result<Vec<ServeAsyncReport>> {
+    anyhow::ensure!(cfg.clients >= 1, "need at least one client");
+    anyhow::ensure!(cfg.drivers >= 1, "need at least one driver");
+    anyhow::ensure!(cfg.keys >= 1, "need at least one key");
+    anyhow::ensure!(cfg.pipeline_depth >= 1, "pipeline depth must be >= 1");
+    let server = NodeServer::spawn()?;
+    let addr = server.addr();
+    {
+        let mut seed_conn = Conn::connect_binary(addr)?;
+        for key in 0..cfg.keys {
+            let resp = seed_conn.call(&Request::Set {
+                key,
+                value: value_for(key, cfg.value_size),
+            })?;
+            anyhow::ensure!(matches!(resp, Response::Stored), "preload SET refused");
+        }
+    }
+    let text = run_serve_plane(addr, cfg, false)?;
+    println!("{}", text.line());
+    let binary = run_serve_plane(addr, cfg, true)?;
+    println!("{}", binary.line());
+    let reports = vec![text, binary];
+    let lost: u64 = reports.iter().map(|r| r.lost).sum();
+    if lost > 0 {
+        anyhow::bail!("{lost} reads missed preloaded keys — serve-path bug");
+    }
+    if let Some(speedup) = serve_async_speedup(&reports) {
+        println!("binary reactor vs threaded text at {} conns: {speedup:.2}x ops/s", cfg.clients);
+    }
+    if let Some(path) = &cfg.out_json {
+        write_serve_async_json(path, cfg, &reports)?;
+        println!("wrote {path}");
+    }
+    Ok(reports)
+}
+
+/// Binary-vs-text ops/sec ratio, if both planes ran.
+pub fn serve_async_speedup(reports: &[ServeAsyncReport]) -> Option<f64> {
+    let text = reports.iter().find(|r| r.scenario == "text_threaded")?;
+    let binary = reports.iter().find(|r| r.scenario == "binary_reactor")?;
+    if text.ops_per_sec > 0.0 {
+        Some(binary.ops_per_sec / text.ops_per_sec)
+    } else {
+        None
+    }
+}
+
+/// Serialize the serve-async suite to its perf-trajectory JSON file.
+pub fn write_serve_async_json(
+    path: &str,
+    cfg: &ServeAsyncConfig,
+    reports: &[ServeAsyncReport],
+) -> anyhow::Result<()> {
+    let results: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+    let mut fields = vec![
+        ("bench", Json::Str("serve_async".to_string())),
+        ("clients", Json::Num(cfg.clients as f64)),
+        ("drivers", Json::Num(cfg.drivers as f64)),
+        ("keys", Json::Num(cfg.keys as f64)),
+        ("read_ops", Json::Num(cfg.read_ops as f64)),
+        ("value_size", Json::Num(cfg.value_size as f64)),
+        ("pipeline_depth", Json::Num(cfg.pipeline_depth as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("results", Json::Arr(results)),
+    ];
+    if let Some(speedup) = serve_async_speedup(reports) {
+        fields.push(("binary_speedup_vs_text", Json::Num(speedup)));
     }
     std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
     Ok(())
@@ -612,14 +862,14 @@ pub fn run_failover(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
         write_every: 8,
     };
     let mut coord = build_cluster(cfg, &scenario)?;
-    let pool = coord.connect_pool(PoolConfig {
-        workers: cfg.workers,
-        pipeline_depth: cfg.pipeline_depth,
-        verify_hits: true,
-        write_quorum: cfg.write_quorum,
-        read_quorum: cfg.read_quorum,
-        ..PoolConfig::default() // registry + hints + clock wired by connect_pool
-    })?;
+    let pool = coord.connect_pool(
+        // registry + hints + clock wired by connect_pool
+        PoolConfig::new(cfg.workers)
+            .pipeline_depth(cfg.pipeline_depth)
+            .verify_hits(true)
+            .write_quorum(cfg.write_quorum)
+            .read_quorum(cfg.read_quorum),
+    )?;
     let stop = Arc::new(AtomicBool::new(false));
     let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
 
@@ -742,14 +992,14 @@ pub fn run_flapping(cfg: &FailoverConfig) -> anyhow::Result<FailoverReport> {
         read_ops: cfg.read_ops,
     };
     let mut coord = build_cluster(cfg, &scenario)?;
-    let pool = coord.connect_pool(PoolConfig {
-        workers: cfg.workers,
-        pipeline_depth: cfg.pipeline_depth,
-        verify_hits: true,
-        write_quorum: cfg.write_quorum,
-        read_quorum: cfg.read_quorum,
-        ..PoolConfig::default() // registry + hints + clock wired by connect_pool
-    })?;
+    let pool = coord.connect_pool(
+        // registry + hints + clock wired by connect_pool
+        PoolConfig::new(cfg.workers)
+            .pipeline_depth(cfg.pipeline_depth)
+            .verify_hits(true)
+            .write_quorum(cfg.write_quorum)
+            .read_quorum(cfg.read_quorum),
+    )?;
     let stop = Arc::new(AtomicBool::new(false));
     let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
 
@@ -1108,14 +1358,14 @@ pub fn run_coord_failover(cfg: &CoordFailoverConfig) -> anyhow::Result<CoordFail
     let replicator = StateReplicator::new(authorities.clone(), lease_cfg.timeout);
     replicator.publish(&leader.export_control_state())?;
 
-    let pool = leader.connect_pool(PoolConfig {
-        workers: cfg.workers,
-        pipeline_depth: cfg.pipeline_depth,
-        verify_hits: true,
-        write_quorum: cfg.write_quorum,
-        read_quorum: cfg.read_quorum,
-        ..PoolConfig::default() // registry + hints + clock wired by connect_pool
-    })?;
+    let pool = leader.connect_pool(
+        // registry + hints + clock wired by connect_pool
+        PoolConfig::new(cfg.workers)
+            .pipeline_depth(cfg.pipeline_depth)
+            .verify_hits(true)
+            .write_quorum(cfg.write_quorum)
+            .read_quorum(cfg.read_quorum),
+    )?;
     let stop = Arc::new(AtomicBool::new(false));
     let t0 = Instant::now();
     let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
@@ -1480,14 +1730,12 @@ fn check_shard_cfg(cfg: &ShardBenchConfig) -> anyhow::Result<()> {
 }
 
 fn shard_pool_cfg(cfg: &ShardBenchConfig) -> PoolConfig {
-    PoolConfig {
-        workers: cfg.workers,
-        pipeline_depth: cfg.pipeline_depth,
-        verify_hits: true,
-        write_quorum: cfg.write_quorum,
-        read_quorum: cfg.read_quorum,
-        ..PoolConfig::default() // registry + hints + clock wired by connect_pool
-    }
+    // registry + hints + clock wired by connect_pool
+    PoolConfig::new(cfg.workers)
+        .pipeline_depth(cfg.pipeline_depth)
+        .verify_hits(true)
+        .write_quorum(cfg.write_quorum)
+        .read_quorum(cfg.read_quorum)
 }
 
 /// Range start of shard `i` when the key space is cut into `k` evenly

@@ -16,6 +16,10 @@
 //! asura bench-serve [--nodes N --keys K --reads R]  throughput harness:
 //!               [--replicas R --workers W --depth D]  single Router vs
 //!               [--seed S --out BENCH_throughput.json] RouterPool, 3 scenarios
+//!               --binary [--clients C --drivers D]   serve-path A/B at C
+//!               [--keys K --reads R --depth D]       concurrent conns:
+//!               [--out BENCH_serve_async.json]       threaded text vs
+//!                                                    reactor binary framing
 //! asura bench-failover [--nodes N --replicas R]     fault-plane harness:
 //!               [--quorum Q --read-quorum Q]        kill-node + flapping
 //!               [--keys K --reads R]                under live traffic
@@ -289,6 +293,9 @@ fn run_serve(args: &Args) -> anyhow::Result<()> {
 /// `RouterPool` across the uniform / zipf / churn scenarios, emitting the
 /// `BENCH_throughput.json` perf trajectory.
 fn run_bench_serve(args: &Args) -> anyhow::Result<()> {
+    if args.has("binary") {
+        return run_bench_serve_async(args);
+    }
     let default = asura::loadgen::SuiteConfig::default();
     let cfg = asura::loadgen::SuiteConfig {
         nodes: args.get_u64("nodes", default.nodes as u64) as u32,
@@ -321,6 +328,42 @@ fn run_bench_serve(args: &Args) -> anyhow::Result<()> {
     );
     let reports = asura::loadgen::run_suite(&cfg)?;
     anyhow::ensure!(!reports.is_empty(), "no scenarios ran");
+    Ok(())
+}
+
+/// Connection-scaling harness behind `bench-serve --binary`: the
+/// thread-per-connection text plane vs the reactor binary plane at
+/// `--clients` concurrent connections against one node, emitting
+/// `BENCH_serve_async.json`.
+fn run_bench_serve_async(args: &Args) -> anyhow::Result<()> {
+    let default = asura::loadgen::ServeAsyncConfig::default();
+    let cfg = asura::loadgen::ServeAsyncConfig {
+        clients: args.get_u64("clients", default.clients as u64) as usize,
+        drivers: args.get_u64("drivers", default.drivers as u64) as usize,
+        keys: args.get_u64("keys", default.keys),
+        read_ops: args.get_u64("reads", default.read_ops),
+        value_size: args.get_u64("value-size", default.value_size as u64) as u32,
+        pipeline_depth: args.get_u64("depth", default.pipeline_depth as u64) as usize,
+        seed: args.get_u64("seed", default.seed),
+        out_json: Some(
+            args.get_or("out", default.out_json.as_deref().unwrap_or("BENCH_serve_async.json"))
+                .to_string(),
+        ),
+    };
+    anyhow::ensure!(
+        cfg.clients >= 1 && cfg.drivers >= 1,
+        "--clients and --drivers must be >= 1"
+    );
+    anyhow::ensure!(
+        cfg.keys >= 1 && cfg.pipeline_depth >= 1,
+        "--keys and --depth must be >= 1"
+    );
+    println!(
+        "bench-serve --binary: {} conns over {} drivers, {} keys, {} reads, depth {}",
+        cfg.clients, cfg.drivers, cfg.keys, cfg.read_ops, cfg.pipeline_depth
+    );
+    let reports = asura::loadgen::run_serve_async(&cfg)?;
+    anyhow::ensure!(reports.len() == 2, "both serve planes must run");
     Ok(())
 }
 

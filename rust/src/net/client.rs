@@ -1,5 +1,13 @@
 //! Client connection to a storage-node server.
+//!
+//! One [`Conn`] speaks either framing of the typed codec: the legacy
+//! newline text protocol ([`Conn::connect`]) or the length-prefixed
+//! binary protocol ([`Conn::connect_binary`]), negotiated by sending
+//! [`frame::BINARY_MAGIC`] as the connection's first byte. Everything
+//! above the framing is identical — [`Conn::call`] is the whole API,
+//! and the per-op helpers are thin compatibility wrappers over it.
 
+use super::frame;
 use super::protocol::{
     read_response, write_request, LeaseReply, Request, Response, VdelOutcome, VsetAck,
 };
@@ -7,10 +15,20 @@ use crate::storage::Version;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream};
 
+/// Which framing the connection negotiated at connect time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    Text,
+    Binary,
+}
+
 /// A persistent connection (one per node, pooled by the router).
 pub struct Conn {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    mode: Mode,
+    /// Reused frame-encode buffer (binary mode only).
+    scratch: Vec<u8>,
 }
 
 impl Conn {
@@ -20,6 +38,8 @@ impl Conn {
         Ok(Conn {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            mode: Mode::Text,
+            scratch: Vec::new(),
         })
     }
 
@@ -41,7 +61,31 @@ impl Conn {
         Ok(Conn {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            mode: Mode::Text,
+            scratch: Vec::new(),
         })
+    }
+
+    /// Connect speaking the binary framed protocol. The magic byte is
+    /// buffered ahead of the first request, so negotiation costs zero
+    /// extra round trips.
+    pub fn connect_binary(addr: SocketAddr) -> std::io::Result<Conn> {
+        let mut conn = Self::connect(addr)?;
+        conn.mode = Mode::Binary;
+        conn.writer.write_all(&[frame::BINARY_MAGIC])?;
+        Ok(conn)
+    }
+
+    /// [`Self::connect_binary`] with the [`Self::connect_timeout`]
+    /// bounds.
+    pub fn connect_binary_timeout(
+        addr: SocketAddr,
+        timeout: std::time::Duration,
+    ) -> std::io::Result<Conn> {
+        let mut conn = Self::connect_timeout(addr, timeout)?;
+        conn.mode = Mode::Binary;
+        conn.writer.write_all(&[frame::BINARY_MAGIC])?;
+        Ok(conn)
     }
 
     /// Re-bound (or, with `None`, lift) the connection's read/write
@@ -57,12 +101,37 @@ impl Conn {
         stream.set_write_timeout(timeout)
     }
 
-    fn call(&mut self, req: &Request) -> std::io::Result<Response> {
-        write_request(&mut self.writer, req)?;
-        self.writer.flush()?;
-        read_response(&mut self.reader)
+    /// One request→response round trip in whichever framing the
+    /// connection negotiated. This is the entire client API; every
+    /// typed helper below is a compatibility wrapper over it.
+    pub fn call(&mut self, req: &Request) -> std::io::Result<Response> {
+        match self.mode {
+            Mode::Text => {
+                write_request(&mut self.writer, req)?;
+                self.writer.flush()?;
+                read_response(&mut self.reader)
+            }
+            Mode::Binary => {
+                self.scratch.clear();
+                req.encode_binary(&mut self.scratch);
+                self.writer.write_all(&self.scratch)?;
+                self.writer.flush()?;
+                self.read_binary_response()
+            }
+        }
     }
 
+    fn read_binary_response(&mut self) -> std::io::Result<Response> {
+        match frame::read_frame(&mut self.reader)? {
+            Some(body) => Response::decode_binary(&body),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed",
+            )),
+        }
+    }
+
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn set(&mut self, key: u64, value: Vec<u8>) -> std::io::Result<()> {
         match self.call(&Request::Set { key, value })? {
             Response::Stored => Ok(()),
@@ -75,6 +144,8 @@ impl Conn {
     /// copy — the write did not land, but the key is durable at or
     /// above this version there, so quorum accounting may still count
     /// it as an ack; the echoed version tells the writer what won.
+    ///
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn vset(&mut self, key: u64, version: Version, value: Vec<u8>) -> std::io::Result<VsetAck> {
         match self.call(&Request::VSet { key, version, value })? {
             Response::VStored { applied, version } => Ok(VsetAck { applied, version }),
@@ -84,6 +155,8 @@ impl Conn {
 
     /// Versioned read: the stored bytes plus the write stamp that
     /// produced them (quorum readers compare these across replicas).
+    ///
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn vget(&mut self, key: u64) -> std::io::Result<Option<(Version, Vec<u8>)>> {
         match self.call(&Request::VGet { key })? {
             Response::VValue { version, value } => Ok(Some((version, value))),
@@ -94,6 +167,8 @@ impl Conn {
 
     /// Version-guarded delete: removes the node's copy only if it is
     /// not newer than `guard` (the migration delete phase's fence).
+    ///
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn vdel(&mut self, key: u64, guard: Version) -> std::io::Result<VdelOutcome> {
         match self.call(&Request::VDel { key, version: guard })? {
             Response::Deleted => Ok(VdelOutcome::Deleted),
@@ -103,6 +178,7 @@ impl Conn {
         }
     }
 
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn get(&mut self, key: u64) -> std::io::Result<Option<Vec<u8>>> {
         match self.call(&Request::Get { key })? {
             Response::Value(v) => Ok(Some(v)),
@@ -111,6 +187,7 @@ impl Conn {
         }
     }
 
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn del(&mut self, key: u64) -> std::io::Result<bool> {
         match self.call(&Request::Del { key })? {
             Response::Deleted => Ok(true),
@@ -119,6 +196,7 @@ impl Conn {
         }
     }
 
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn stats(&mut self) -> std::io::Result<(u64, u64, u64, u64)> {
         match self.call(&Request::Stats)? {
             Response::Stats {
@@ -133,6 +211,8 @@ impl Conn {
 
     /// Failure-detection probe: send the coordinator's epoch, get back
     /// the node's echo + key count.
+    ///
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn heartbeat(&mut self, epoch: u64) -> std::io::Result<(u64, u64)> {
         match self.call(&Request::Heartbeat { epoch })? {
             Response::Alive { epoch, keys } => Ok((epoch, keys)),
@@ -142,7 +222,9 @@ impl Conn {
 
     /// Enumerate every key the node holds in one response. Prefer
     /// [`Self::keys_chunk`] against large nodes — this materializes the
-    /// whole keyset into a single line.
+    /// whole keyset into a single response.
+    ///
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn keys(&mut self) -> std::io::Result<Vec<u64>> {
         match self.call(&Request::Keys)? {
             Response::KeyList(keys) => Ok(keys),
@@ -153,6 +235,8 @@ impl Conn {
     /// One bounded page of the node's key scan (repair-plane holder
     /// audits). Pass `None` to start and the returned cursor (while
     /// `Some`) to continue.
+    ///
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn keys_chunk(
         &mut self,
         limit: u64,
@@ -168,6 +252,8 @@ impl Conn {
     /// for the `shard` lease register (`0` = the unsharded register;
     /// `ttl_ms == 0` = read-only query). See
     /// [`crate::coordinator::election`].
+    ///
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn lease(
         &mut self,
         shard: u64,
@@ -194,6 +280,8 @@ impl Conn {
     /// Replicate a `shard` leader's control-state blob at `term`.
     /// Returns `(applied, stored_term)`; a refusal means the node
     /// already holds a newer-term blob for that shard.
+    ///
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn state_put(
         &mut self,
         shard: u64,
@@ -208,6 +296,8 @@ impl Conn {
 
     /// Fetch the latest replicated control-state blob of `shard`
     /// (term + bytes).
+    ///
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn state_get(&mut self, shard: u64) -> std::io::Result<Option<(u64, Vec<u8>)>> {
         match self.call(&Request::StateGet { shard })? {
             Response::StateValue { term, value } => Ok(Some((term, value))),
@@ -216,6 +306,7 @@ impl Conn {
         }
     }
 
+    /// Deprecated: thin compatibility wrapper over [`Self::call`].
     pub fn ping(&mut self) -> std::io::Result<()> {
         match self.call(&Request::Ping)? {
             Response::Pong => Ok(()),
@@ -226,18 +317,35 @@ impl Conn {
     /// Pipeline a batch: write every request back-to-back, flush once,
     /// then read the responses in order.
     ///
-    /// The text protocol is self-delimiting, so any number of requests may
-    /// be in flight on one connection and the server answers strictly in
-    /// request order — this turns N blocking round trips into one. The
-    /// returned vector aligns index-for-index with `reqs`.
+    /// Both framings are self-delimiting, so any number of requests may
+    /// be in flight on one connection and the server answers strictly
+    /// in request order — this turns N blocking round trips into one.
+    /// In binary mode the whole batch is encoded into one contiguous
+    /// buffer and issued as a single write (the scatter-gather batched
+    /// write the framed protocol was designed for). The returned
+    /// vector aligns index-for-index with `reqs`.
     pub fn pipeline(&mut self, reqs: &[Request]) -> std::io::Result<Vec<Response>> {
-        for req in reqs {
-            write_request(&mut self.writer, req)?;
+        match self.mode {
+            Mode::Text => {
+                for req in reqs {
+                    write_request(&mut self.writer, req)?;
+                }
+            }
+            Mode::Binary => {
+                self.scratch.clear();
+                for req in reqs {
+                    req.encode_binary(&mut self.scratch);
+                }
+                self.writer.write_all(&self.scratch)?;
+            }
         }
         self.writer.flush()?;
         let mut out = Vec::with_capacity(reqs.len());
         for _ in reqs {
-            out.push(read_response(&mut self.reader)?);
+            out.push(match self.mode {
+                Mode::Text => read_response(&mut self.reader)?,
+                Mode::Binary => self.read_binary_response()?,
+            });
         }
         Ok(out)
     }

@@ -1,0 +1,647 @@
+//! Length-prefixed binary framing for the wire protocol.
+//!
+//! One frame is `[u32 len (LE)][u8 op][fields]`, where `len` counts the
+//! opcode byte plus the encoded fields (never the prefix itself). A
+//! connection opts in by leading with [`BINARY_MAGIC`] as its very
+//! first byte — a value no text command starts with — and every
+//! request/response after that is one frame. Compared to the line-text
+//! forms the framing kills the per-op parse/alloc cost: fixed-width
+//! little-endian integers instead of hex round-trips, and a payload
+//! length that is known before a single value byte is touched.
+//!
+//! Field encodings, shared by requests and responses:
+//!
+//! * `u64` — 8 bytes little-endian (keys, epochs, seqs, terms, ...).
+//! * version — `epoch` then `seq`, each a `u64`.
+//! * bool — one byte, `0` or `1` (anything else is corrupt).
+//! * bytes — `u32` length then the raw bytes (values, state blobs,
+//!   error strings). Capped at [`MAX_VALUE_LEN`].
+//! * `Option<u64>` — one flag byte (`0`/`1`), then the value if `1`.
+//! * key list — `u32` count then `count` × `u64`.
+//!
+//! Decoding is fully bounds-checked: truncation, unknown opcodes, bad
+//! flags, oversized lengths and trailing garbage all come back as
+//! `InvalidData` — never a panic, never an unchecked allocation (the
+//! fuzz cases in `rust/tests/wire_codec.rs` pin this). A defect *inside*
+//! a frame whose length prefix held is recoverable — the stream is
+//! still aligned on the next frame, so the server answers a structured
+//! [`Response::Error`] and keeps the connection. Only a corrupt length
+//! prefix (over [`MAX_FRAME_LEN`]) is fatal, because the frame boundary
+//! itself can no longer be trusted.
+
+use super::protocol::{Request, Response, MAX_VALUE_LEN};
+use crate::storage::Version;
+use std::io::{self, Read};
+
+/// First byte a binary-framed connection sends. `0xAB` can never open a
+/// text session: every text op starts with an ASCII letter, so the
+/// server's per-connection sniff of byte one is unambiguous.
+pub const BINARY_MAGIC: u8 = 0xAB;
+
+/// Upper bound on one frame body (`op` + fields): the value cap plus
+/// slack for the fixed-width fields around it. A length prefix past
+/// this is treated as corrupt framing and kills the connection.
+pub const MAX_FRAME_LEN: usize = MAX_VALUE_LEN + 64;
+
+// Request opcodes — one per `Request` variant, declaration order.
+pub const OP_SET: u8 = 0x01;
+pub const OP_VSET: u8 = 0x02;
+pub const OP_GET: u8 = 0x03;
+pub const OP_VGET: u8 = 0x04;
+pub const OP_DEL: u8 = 0x05;
+pub const OP_VDEL: u8 = 0x06;
+pub const OP_STATS: u8 = 0x07;
+pub const OP_HEARTBEAT: u8 = 0x08;
+pub const OP_KEYS: u8 = 0x09;
+pub const OP_KEYSC: u8 = 0x0A;
+pub const OP_LEASE: u8 = 0x0B;
+pub const OP_STATE_PUT: u8 = 0x0C;
+pub const OP_STATE_GET: u8 = 0x0D;
+pub const OP_PING: u8 = 0x0E;
+pub const OP_QUIT: u8 = 0x0F;
+
+// Response opcodes — one per `Response` variant, declaration order,
+// offset into 0x81.. so a response frame can never be misread as a
+// request frame.
+pub const OP_STORED: u8 = 0x81;
+pub const OP_VSTORED: u8 = 0x82;
+pub const OP_VALUE: u8 = 0x83;
+pub const OP_VVALUE: u8 = 0x84;
+pub const OP_NOT_FOUND: u8 = 0x85;
+pub const OP_DELETED: u8 = 0x86;
+pub const OP_NEWER: u8 = 0x87;
+pub const OP_STATS_R: u8 = 0x88;
+pub const OP_ALIVE: u8 = 0x89;
+pub const OP_KEY_LIST: u8 = 0x8A;
+pub const OP_KEY_PAGE: u8 = 0x8B;
+pub const OP_LEASED: u8 = 0x8C;
+pub const OP_STATE_ACK: u8 = 0x8D;
+pub const OP_STATE_VALUE: u8 = 0x8E;
+pub const OP_PONG: u8 = 0x8F;
+pub const OP_ERROR: u8 = 0x90;
+
+fn corrupt(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Validate a frame length prefix before anything is allocated for it.
+pub(crate) fn frame_len_ok(len: usize) -> io::Result<()> {
+    if len == 0 {
+        return Err(corrupt("empty frame"));
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(corrupt(&format!(
+            "frame length {len} exceeds cap {MAX_FRAME_LEN}"
+        )));
+    }
+    Ok(())
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(u8::from(v));
+}
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+fn put_opt_u64(out: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(v) => {
+            out.push(1);
+            put_u64(out, v);
+        }
+        None => out.push(0),
+    }
+}
+
+fn put_keys(out: &mut Vec<u8>, keys: &[u64]) {
+    out.extend_from_slice(&(keys.len() as u32).to_le_bytes());
+    for k in keys {
+        put_u64(out, *k);
+    }
+}
+
+fn put_version(out: &mut Vec<u8>, v: Version) {
+    put_u64(out, v.epoch);
+    put_u64(out, v.seq);
+}
+
+/// Reserve the 4-byte length prefix; returns its offset for
+/// [`end_frame`].
+fn begin_frame(out: &mut Vec<u8>) -> usize {
+    let start = out.len();
+    out.extend_from_slice(&[0; 4]);
+    start
+}
+
+/// Patch the reserved prefix with the body length just encoded.
+fn end_frame(out: &mut Vec<u8>, start: usize) {
+    let body = (out.len() - start - 4) as u32;
+    out[start..start + 4].copy_from_slice(&body.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over one frame body. Every read
+/// is validated against the remaining bytes, so corrupt or truncated
+/// frames decode to `InvalidData` — never a panic or an oversized
+/// allocation.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(corrupt("truncated frame"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn bool(&mut self) -> io::Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(corrupt("bad bool")),
+        }
+    }
+
+    fn bytes(&mut self) -> io::Result<Vec<u8>> {
+        let len = self.u32()? as usize;
+        if len > MAX_VALUE_LEN {
+            return Err(corrupt(&format!("value length {len} exceeds cap")));
+        }
+        Ok(self.take(len)?.to_vec())
+    }
+
+    fn opt_u64(&mut self) -> io::Result<Option<u64>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u64()?)),
+            _ => Err(corrupt("bad option flag")),
+        }
+    }
+
+    fn keys(&mut self) -> io::Result<Vec<u64>> {
+        let n = self.u32()? as usize;
+        // Validate the count against the bytes actually present before
+        // allocating for it — a corrupt count must never drive an
+        // unchecked multi-gigabyte reserve.
+        if n.saturating_mul(8) > self.remaining() {
+            return Err(corrupt("truncated key list"));
+        }
+        let mut keys = Vec::with_capacity(n);
+        for _ in 0..n {
+            keys.push(self.u64()?);
+        }
+        Ok(keys)
+    }
+
+    fn version(&mut self) -> io::Result<Version> {
+        Ok(Version::new(self.u64()?, self.u64()?))
+    }
+
+    fn string(&mut self) -> io::Result<String> {
+        String::from_utf8(self.bytes()?).map_err(|_| corrupt("bad utf-8"))
+    }
+
+    fn finish(self) -> io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(corrupt("trailing bytes in frame"));
+        }
+        Ok(())
+    }
+}
+
+/// Append one request as a complete frame (prefix + body) to `out`.
+/// Appending — rather than returning a fresh buffer — lets a pipelined
+/// batch encode every frame into one contiguous buffer and hand the
+/// whole batch to the socket as a single write.
+pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
+    let start = begin_frame(out);
+    match req {
+        Request::Set { key, value } => {
+            out.push(OP_SET);
+            put_u64(out, *key);
+            put_bytes(out, value);
+        }
+        Request::VSet {
+            key,
+            version,
+            value,
+        } => {
+            out.push(OP_VSET);
+            put_u64(out, *key);
+            put_version(out, *version);
+            put_bytes(out, value);
+        }
+        Request::Get { key } => {
+            out.push(OP_GET);
+            put_u64(out, *key);
+        }
+        Request::VGet { key } => {
+            out.push(OP_VGET);
+            put_u64(out, *key);
+        }
+        Request::Del { key } => {
+            out.push(OP_DEL);
+            put_u64(out, *key);
+        }
+        Request::VDel { key, version } => {
+            out.push(OP_VDEL);
+            put_u64(out, *key);
+            put_version(out, *version);
+        }
+        Request::Stats => out.push(OP_STATS),
+        Request::Heartbeat { epoch } => {
+            out.push(OP_HEARTBEAT);
+            put_u64(out, *epoch);
+        }
+        Request::Keys => out.push(OP_KEYS),
+        Request::KeysChunk { cursor, limit } => {
+            out.push(OP_KEYSC);
+            put_u64(out, *limit);
+            put_opt_u64(out, *cursor);
+        }
+        Request::Lease {
+            shard,
+            candidate,
+            term,
+            ttl_ms,
+        } => {
+            out.push(OP_LEASE);
+            put_u64(out, *shard);
+            put_u64(out, *candidate);
+            put_u64(out, *term);
+            put_u64(out, *ttl_ms);
+        }
+        Request::StatePut { shard, term, value } => {
+            out.push(OP_STATE_PUT);
+            put_u64(out, *shard);
+            put_u64(out, *term);
+            put_bytes(out, value);
+        }
+        Request::StateGet { shard } => {
+            out.push(OP_STATE_GET);
+            put_u64(out, *shard);
+        }
+        Request::Ping => out.push(OP_PING),
+        Request::Quit => out.push(OP_QUIT),
+    }
+    end_frame(out, start);
+}
+
+/// Decode one frame body (the bytes after the length prefix) into a
+/// request.
+pub fn decode_request(body: &[u8]) -> io::Result<Request> {
+    let mut c = Cursor::new(body);
+    let req = match c.u8()? {
+        OP_SET => Request::Set {
+            key: c.u64()?,
+            value: c.bytes()?,
+        },
+        OP_VSET => Request::VSet {
+            key: c.u64()?,
+            version: c.version()?,
+            value: c.bytes()?,
+        },
+        OP_GET => Request::Get { key: c.u64()? },
+        OP_VGET => Request::VGet { key: c.u64()? },
+        OP_DEL => Request::Del { key: c.u64()? },
+        OP_VDEL => Request::VDel {
+            key: c.u64()?,
+            version: c.version()?,
+        },
+        OP_STATS => Request::Stats,
+        OP_HEARTBEAT => Request::Heartbeat { epoch: c.u64()? },
+        OP_KEYS => Request::Keys,
+        OP_KEYSC => Request::KeysChunk {
+            limit: c.u64()?,
+            cursor: c.opt_u64()?,
+        },
+        OP_LEASE => Request::Lease {
+            shard: c.u64()?,
+            candidate: c.u64()?,
+            term: c.u64()?,
+            ttl_ms: c.u64()?,
+        },
+        OP_STATE_PUT => Request::StatePut {
+            shard: c.u64()?,
+            term: c.u64()?,
+            value: c.bytes()?,
+        },
+        OP_STATE_GET => Request::StateGet { shard: c.u64()? },
+        OP_PING => Request::Ping,
+        OP_QUIT => Request::Quit,
+        other => return Err(corrupt(&format!("unknown request opcode {other:#04x}"))),
+    };
+    c.finish()?;
+    Ok(req)
+}
+
+/// Append one response as a complete frame (prefix + body) to `out`.
+pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
+    let start = begin_frame(out);
+    match resp {
+        Response::Stored => out.push(OP_STORED),
+        Response::VStored { applied, version } => {
+            out.push(OP_VSTORED);
+            put_bool(out, *applied);
+            put_version(out, *version);
+        }
+        Response::Value(v) => {
+            out.push(OP_VALUE);
+            put_bytes(out, v);
+        }
+        Response::VValue { version, value } => {
+            out.push(OP_VVALUE);
+            put_version(out, *version);
+            put_bytes(out, value);
+        }
+        Response::NotFound => out.push(OP_NOT_FOUND),
+        Response::Deleted => out.push(OP_DELETED),
+        Response::Newer => out.push(OP_NEWER),
+        Response::Stats {
+            keys,
+            bytes,
+            sets,
+            gets,
+        } => {
+            out.push(OP_STATS_R);
+            put_u64(out, *keys);
+            put_u64(out, *bytes);
+            put_u64(out, *sets);
+            put_u64(out, *gets);
+        }
+        Response::Alive { epoch, keys } => {
+            out.push(OP_ALIVE);
+            put_u64(out, *epoch);
+            put_u64(out, *keys);
+        }
+        Response::KeyList(keys) => {
+            out.push(OP_KEY_LIST);
+            put_keys(out, keys);
+        }
+        Response::KeyPage { keys, next } => {
+            out.push(OP_KEY_PAGE);
+            put_keys(out, keys);
+            put_opt_u64(out, *next);
+        }
+        Response::Leased {
+            granted,
+            term,
+            holder,
+            remaining_ms,
+        } => {
+            out.push(OP_LEASED);
+            put_bool(out, *granted);
+            put_u64(out, *term);
+            put_u64(out, *holder);
+            put_u64(out, *remaining_ms);
+        }
+        Response::StateAck { applied, term } => {
+            out.push(OP_STATE_ACK);
+            put_bool(out, *applied);
+            put_u64(out, *term);
+        }
+        Response::StateValue { term, value } => {
+            out.push(OP_STATE_VALUE);
+            put_u64(out, *term);
+            put_bytes(out, value);
+        }
+        Response::Pong => out.push(OP_PONG),
+        Response::Error(e) => {
+            out.push(OP_ERROR);
+            put_bytes(out, e.as_bytes());
+        }
+    }
+    end_frame(out, start);
+}
+
+/// Decode one frame body (the bytes after the length prefix) into a
+/// response.
+pub fn decode_response(body: &[u8]) -> io::Result<Response> {
+    let mut c = Cursor::new(body);
+    let resp = match c.u8()? {
+        OP_STORED => Response::Stored,
+        OP_VSTORED => Response::VStored {
+            applied: c.bool()?,
+            version: c.version()?,
+        },
+        OP_VALUE => Response::Value(c.bytes()?),
+        OP_VVALUE => Response::VValue {
+            version: c.version()?,
+            value: c.bytes()?,
+        },
+        OP_NOT_FOUND => Response::NotFound,
+        OP_DELETED => Response::Deleted,
+        OP_NEWER => Response::Newer,
+        OP_STATS_R => Response::Stats {
+            keys: c.u64()?,
+            bytes: c.u64()?,
+            sets: c.u64()?,
+            gets: c.u64()?,
+        },
+        OP_ALIVE => Response::Alive {
+            epoch: c.u64()?,
+            keys: c.u64()?,
+        },
+        OP_KEY_LIST => Response::KeyList(c.keys()?),
+        OP_KEY_PAGE => Response::KeyPage {
+            keys: c.keys()?,
+            next: c.opt_u64()?,
+        },
+        OP_LEASED => Response::Leased {
+            granted: c.bool()?,
+            term: c.u64()?,
+            holder: c.u64()?,
+            remaining_ms: c.u64()?,
+        },
+        OP_STATE_ACK => Response::StateAck {
+            applied: c.bool()?,
+            term: c.u64()?,
+        },
+        OP_STATE_VALUE => Response::StateValue {
+            term: c.u64()?,
+            value: c.bytes()?,
+        },
+        OP_PONG => Response::Pong,
+        OP_ERROR => Response::Error(c.string()?),
+        other => return Err(corrupt(&format!("unknown response opcode {other:#04x}"))),
+    };
+    c.finish()?;
+    Ok(resp)
+}
+
+/// Read one frame off a blocking stream: `Ok(None)` on clean EOF before
+/// the first prefix byte, the frame body otherwise. The length prefix
+/// is validated against [`MAX_FRAME_LEN`] before any allocation.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    let mut got = 0;
+    while got < header.len() {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    frame_len_ok(len)?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_body(buf: &[u8]) -> &[u8] {
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        assert_eq!(buf.len(), 4 + len, "prefix must cover the whole body");
+        &buf[4..]
+    }
+
+    #[test]
+    fn request_frames_roundtrip() {
+        let reqs = [
+            Request::VSet {
+                key: 0xDEAD_BEEF,
+                version: Version::new(u64::MAX, 7),
+                value: b"binary\n\0data".to_vec(),
+            },
+            Request::KeysChunk {
+                cursor: Some(u64::MAX),
+                limit: 64,
+            },
+            Request::KeysChunk {
+                cursor: None,
+                limit: 1,
+            },
+            Request::Quit,
+        ];
+        for req in reqs {
+            let mut buf = Vec::new();
+            encode_request(&req, &mut buf);
+            assert_eq!(decode_request(frame_body(&buf)).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_frames_roundtrip() {
+        let resps = [
+            Response::VValue {
+                version: Version::new(3, 9),
+                value: b"x\ny".to_vec(),
+            },
+            Response::KeyPage {
+                keys: vec![0, u64::MAX, 17],
+                next: Some(17),
+            },
+            // Binary framing round-trips error strings byte-exact —
+            // including the newlines the text form must flatten.
+            Response::Error("line1\nline2".into()),
+        ];
+        for resp in resps {
+            let mut buf = Vec::new();
+            encode_response(&resp, &mut buf);
+            assert_eq!(decode_response(frame_body(&buf)).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn batched_frames_share_one_buffer() {
+        let mut buf = Vec::new();
+        encode_request(&Request::Ping, &mut buf);
+        encode_request(&Request::Get { key: 0xAB }, &mut buf);
+        let mut r = &buf[..];
+        let first = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(decode_request(&first).unwrap(), Request::Ping);
+        let second = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(decode_request(&second).unwrap(), Request::Get { key: 0xAB });
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn corrupt_frames_are_invalid_data_not_panics() {
+        // Unknown opcodes.
+        assert!(decode_request(&[0x7F]).is_err());
+        assert!(decode_response(&[0x01]).is_err());
+        // Empty body.
+        assert!(decode_request(&[]).is_err());
+        // Truncated fields.
+        assert!(decode_request(&[OP_GET, 1, 2]).is_err());
+        // Trailing garbage after a complete op.
+        assert!(decode_request(&[OP_PING, 0]).is_err());
+        // Oversized value length inside an otherwise-aligned frame.
+        let mut bad = vec![OP_SET];
+        bad.extend_from_slice(&1u64.to_le_bytes());
+        bad.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(decode_request(&bad).is_err());
+        // Corrupt key-list count larger than the frame.
+        let mut bad = vec![OP_KEY_LIST];
+        bad.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(decode_response(&bad).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let mut buf = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes().to_vec();
+        buf.push(OP_PING);
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+        // Zero-length frames are equally corrupt.
+        let buf = 0u32.to_le_bytes();
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_is_unexpected_eof() {
+        let mut buf = Vec::new();
+        encode_request(&Request::Heartbeat { epoch: 9 }, &mut buf);
+        // Cut mid-header and mid-body.
+        for cut in [2, 6] {
+            let mut r = &buf[..cut];
+            let err = read_frame(&mut r).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        }
+    }
+}

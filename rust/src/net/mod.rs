@@ -1,5 +1,14 @@
-//! Networked KV cluster: a memcached-like text protocol over TCP, a
-//! threaded storage-node server and a placement-aware client/router.
+//! Networked KV cluster: one typed request/response codec over TCP in
+//! two framings, a readiness-driven storage-node server and a
+//! placement-aware client/router.
+//!
+//! The wire API is the [`protocol::Request`]/[`protocol::Response`]
+//! pair; each connection negotiates its framing by first byte — the
+//! length-prefixed binary protocol ([`frame`]) behind
+//! [`frame::BINARY_MAGIC`], the legacy memcached-like text protocol
+//! otherwise. The server ([`server::NodeServer`]) drives binary
+//! connections from a single [`reactor::Reactor`] thread and hands text
+//! connections to compat threads.
 //!
 //! This substitutes for the paper's §5.E testbed (memcached-1.4.13 +
 //! libmemcached): the Table III experiment writes 1 M data through the
@@ -8,14 +17,16 @@
 //! (serialize → syscall → parse) while removing cross-machine noise.
 
 pub mod client;
+pub mod frame;
 pub mod pool;
 pub mod protocol;
+pub mod reactor;
 pub mod router;
 pub mod server;
 
 pub use client::Conn;
 pub use pool::{BatchResult, PoolConfig, RouterPool};
-pub use protocol::{Request, Response};
+pub use protocol::{Parsed, Request, Response};
 pub use router::Router;
 pub use server::NodeServer;
 
@@ -39,6 +50,37 @@ pub(crate) fn scatter<I: Copy + Send, T: Send>(
         handles
             .into_iter()
             .map(|h| h.join().expect("scatter thread panicked"))
+            .collect()
+    })
+}
+
+/// [`scatter`] with a concurrency bound: items are split into at most
+/// `cap` contiguous chunks, one scoped thread per chunk, results
+/// flattened back in item order. The repair/migration fan-outs use
+/// this — per-peer and per-key loops overlap their round trips without
+/// spawning a thread per key.
+pub(crate) fn scatter_bounded<I: Send, T: Send>(
+    items: Vec<I>,
+    cap: usize,
+    f: impl Fn(I) -> T + Send + Sync,
+) -> Vec<T> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let chunk = items.len().div_ceil(cap.max(1));
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::new();
+        let mut rest = items;
+        while !rest.is_empty() {
+            let tail = rest.split_off(chunk.min(rest.len()));
+            let head = rest;
+            rest = tail;
+            handles.push(s.spawn(move || head.into_iter().map(f).collect::<Vec<T>>()));
+        }
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("scatter thread panicked"))
             .collect()
     })
 }

@@ -73,30 +73,43 @@ use std::time::Instant;
 /// loops terminate as soon as churn does.
 const MAX_REPLAYS: usize = 8;
 
-/// Pool sizing and behavior knobs.
+/// Pool sizing and behavior knobs, built fluently:
+///
+/// ```
+/// use asura::net::PoolConfig;
+/// let cfg = PoolConfig::new(4).write_quorum(2).read_quorum(2);
+/// ```
+///
+/// Fields are crate-private; external callers configure pools only
+/// through [`PoolConfig::new`] / [`PoolConfig::default`] and the
+/// chainable setters, so knobs can be added without breaking them.
 #[derive(Clone, Debug)]
 pub struct PoolConfig {
     /// Worker threads, each with its own connections to every node.
-    pub workers: usize,
+    pub(crate) workers: usize,
     /// Max requests in flight per connection per flush.
-    pub pipeline_depth: usize,
+    pub(crate) pipeline_depth: usize,
     /// Treat a GET miss as a routing anomaly: refresh the snapshot and
     /// replay against the fresh replica set, counting survivors in
     /// [`BatchResult::lost`]. Scenario drivers enable this when every
     /// read targets a previously written key.
-    pub verify_hits: bool,
+    pub(crate) verify_hits: bool,
     /// Replica acks required before a SET counts as stored. `0` means
     /// *all* replicas (strict — any unreachable holder fails the write,
     /// the pre-fault-plane behavior). At RF=3 a quorum of 2 keeps writes
     /// flowing through a single-node failure; background repair restores
     /// the missing copy once the failure is detected.
-    pub write_quorum: usize,
+    pub(crate) write_quorum: usize,
     /// Replicas probed per GET. `1` (the default) reads the first
     /// non-suspect holder — the fast path. Larger values fan the read
     /// out, compare the replicas' versions, serve the freshest copy,
     /// and read-repair any probed replica that answered stale or
     /// missing. Capped at the replica set size.
-    pub read_quorum: usize,
+    pub(crate) read_quorum: usize,
+    /// Speak the length-prefixed binary framing on every worker
+    /// connection (the readiness-driven path on the server side)
+    /// instead of the legacy text protocol.
+    pub(crate) binary: bool,
     /// Version-stamp sequence source. Clones share the counter; the
     /// coordinator passes its own clock via `Coordinator::connect_pool`
     /// so control-plane writes, every pool worker, and migration copies
@@ -105,16 +118,16 @@ pub struct PoolConfig {
     /// private clock, which reads advance Lamport-style from every
     /// version they observe ([`WriteClock::observe`]), but which cannot
     /// guarantee uniqueness against stamps minted elsewhere.
-    pub clock: WriteClock,
+    pub(crate) clock: WriteClock,
     /// Writer registry for the coordinator write-back (see
     /// [`crate::coordinator::registry`]). `None` = unregistered writes,
     /// invisible to migration/repair planning.
-    pub registry: Option<Arc<KeyRegistry>>,
+    pub(crate) registry: Option<Arc<KeyRegistry>>,
     /// Repair-hint channel: keys acked *below* full RF (degraded quorum
     /// writes) are reported here so the coordinator can restore their
     /// missing copy even when the unreachable holder recovers without
     /// ever being declared dead. Wired by `Coordinator::connect_pool`.
-    pub repair_hints: Option<Arc<KeyRegistry>>,
+    pub(crate) repair_hints: Option<Arc<KeyRegistry>>,
 }
 
 impl Default for PoolConfig {
@@ -125,10 +138,78 @@ impl Default for PoolConfig {
             verify_hits: false,
             write_quorum: 0,
             read_quorum: 1,
+            binary: false,
             clock: WriteClock::new(),
             registry: None,
             repair_hints: None,
         }
+    }
+}
+
+impl PoolConfig {
+    /// Default config with `workers` router threads.
+    pub fn new(workers: usize) -> PoolConfig {
+        PoolConfig {
+            workers,
+            ..PoolConfig::default()
+        }
+    }
+
+    /// Set the worker-thread count.
+    pub fn workers(mut self, workers: usize) -> PoolConfig {
+        self.workers = workers;
+        self
+    }
+
+    /// Set the max requests in flight per connection per flush.
+    pub fn pipeline_depth(mut self, depth: usize) -> PoolConfig {
+        self.pipeline_depth = depth;
+        self
+    }
+
+    /// Treat every GET miss as a routing anomaly to verify and count
+    /// (scenario drivers reading only previously written keys).
+    pub fn verify_hits(mut self, on: bool) -> PoolConfig {
+        self.verify_hits = on;
+        self
+    }
+
+    /// Set the replica acks required per SET (`0` = all replicas).
+    pub fn write_quorum(mut self, quorum: usize) -> PoolConfig {
+        self.write_quorum = quorum;
+        self
+    }
+
+    /// Set the replicas probed per GET (freshest answer wins, lagging
+    /// probed replicas are read-repaired).
+    pub fn read_quorum(mut self, quorum: usize) -> PoolConfig {
+        self.read_quorum = quorum;
+        self
+    }
+
+    /// Speak the length-prefixed binary framing on worker connections.
+    pub fn binary(mut self, on: bool) -> PoolConfig {
+        self.binary = on;
+        self
+    }
+
+    /// Share a version-stamp clock (see the field docs: writers of
+    /// coordinator-managed data should use the coordinator's clock).
+    pub fn clock(mut self, clock: WriteClock) -> PoolConfig {
+        self.clock = clock;
+        self
+    }
+
+    /// Wire the coordinator write-back registry.
+    pub fn registry(mut self, registry: Arc<KeyRegistry>) -> PoolConfig {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Wire the degraded-write repair-hint channel.
+    pub fn repair_hints(mut self, hints: Arc<KeyRegistry>) -> PoolConfig {
+        self.repair_hints = Some(hints);
+        self
     }
 }
 
@@ -319,17 +400,23 @@ struct Worker {
 }
 
 impl Worker {
-    /// Connection to `node`, (re)established if absent or re-addressed.
+    /// Connection to `node`, (re)established if absent or re-addressed,
+    /// in the framing the pool was configured for.
     fn conn(&mut self, node: NodeId, addr: SocketAddr) -> std::io::Result<&mut Conn> {
+        let dial = if self.cfg.binary {
+            Conn::connect_binary
+        } else {
+            Conn::connect
+        };
         match self.conns.entry(node) {
             Entry::Occupied(e) => {
                 let slot = e.into_mut();
                 if slot.0 != addr {
-                    *slot = (addr, Conn::connect(addr)?);
+                    *slot = (addr, dial(addr)?);
                 }
                 Ok(&mut slot.1)
             }
-            Entry::Vacant(v) => Ok(&mut v.insert((addr, Conn::connect(addr)?)).1),
+            Entry::Vacant(v) => Ok(&mut v.insert((addr, dial(addr)?)).1),
         }
     }
 
@@ -805,16 +892,8 @@ mod tests {
     fn pool_writes_and_reads_back() {
         let coord = cluster(4, 1);
         let cell = coord.snapshot_cell();
-        let pool = RouterPool::connect(
-            &cell,
-            PoolConfig {
-                workers: 3,
-                pipeline_depth: 8,
-                verify_hits: true,
-                ..PoolConfig::default()
-            },
-        )
-        .unwrap();
+        let cfg = PoolConfig::new(3).pipeline_depth(8).verify_hits(true);
+        let pool = RouterPool::connect(&cell, cfg).unwrap();
         let sets: Vec<Op> = (0..500u64).map(|key| Op::Set { key, size: 16 }).collect();
         let res = pool.run(sets).unwrap();
         assert_eq!(res.ops, 500);
@@ -826,6 +905,26 @@ mod tests {
         assert_eq!(res.misses, 0);
         assert_eq!(res.lost, 0);
         assert!(res.latency.len() >= 500);
+    }
+
+    #[test]
+    fn binary_pool_round_trips_and_loses_nothing() {
+        // The same data plane over the framed binary protocol: every
+        // worker connection negotiates binary and the reactor serves
+        // the pipelined batches.
+        let coord = cluster(4, 2);
+        let cell = coord.snapshot_cell();
+        let cfg = PoolConfig::new(2)
+            .pipeline_depth(8)
+            .verify_hits(true)
+            .binary(true);
+        let pool = RouterPool::connect(&cell, cfg).unwrap();
+        let sets: Vec<Op> = (0..300u64).map(|key| Op::Set { key, size: 16 }).collect();
+        let res = pool.run(sets).unwrap();
+        assert_eq!((res.ops, res.lost), (300, 0));
+        let gets: Vec<Op> = (0..300u64).map(|key| Op::Get { key }).collect();
+        let res = pool.run(gets).unwrap();
+        assert_eq!((res.hits, res.misses, res.lost), (300, 0, 0));
     }
 
     #[test]
@@ -876,17 +975,11 @@ mod tests {
     fn quorum_reads_read_repair_stale_replicas() {
         let coord = cluster(4, 2);
         let cell = coord.snapshot_cell();
-        let pool = RouterPool::connect(
-            &cell,
-            PoolConfig {
-                workers: 1,
-                pipeline_depth: 4,
-                verify_hits: true,
-                read_quorum: 2,
-                ..PoolConfig::default()
-            },
-        )
-        .unwrap();
+        let cfg = PoolConfig::new(1)
+            .pipeline_depth(4)
+            .verify_hits(true)
+            .read_quorum(2);
+        let pool = RouterPool::connect(&cell, cfg).unwrap();
         let sets: Vec<Op> = (0..50u64).map(|key| Op::Set { key, size: 8 }).collect();
         pool.run(sets).unwrap();
         // Drop key 7's copy on its secondary behind the pool's back.
@@ -919,11 +1012,7 @@ mod tests {
     fn acked_writes_land_in_the_registry() {
         let coord = cluster(3, 2);
         let pool = coord
-            .connect_pool(PoolConfig {
-                workers: 2,
-                pipeline_depth: 8,
-                ..PoolConfig::default()
-            })
+            .connect_pool(PoolConfig::new(2).pipeline_depth(8))
             .unwrap();
         let sets: Vec<Op> = (0..100u64).map(|key| Op::Set { key, size: 4 }).collect();
         pool.run(sets).unwrap();
@@ -944,12 +1033,7 @@ mod tests {
             leader.join_external(i as u32, 1.0, s.addr()).unwrap();
         }
         let pool = leader
-            .connect_pool(PoolConfig {
-                workers: 2,
-                pipeline_depth: 8,
-                verify_hits: true,
-                ..PoolConfig::default()
-            })
+            .connect_pool(PoolConfig::new(2).pipeline_depth(8).verify_hits(true))
             .unwrap();
         let sets: Vec<Op> = (0..200u64).map(|key| Op::Set { key, size: 8 }).collect();
         assert_eq!(pool.run(sets).unwrap().lost, 0);
@@ -979,16 +1063,8 @@ mod tests {
     fn pool_survives_epoch_bump_between_batches() {
         let mut coord = cluster(3, 1);
         let cell = coord.snapshot_cell();
-        let pool = RouterPool::connect(
-            &cell,
-            PoolConfig {
-                workers: 2,
-                pipeline_depth: 4,
-                verify_hits: true,
-                ..PoolConfig::default()
-            },
-        )
-        .unwrap();
+        let cfg = PoolConfig::new(2).pipeline_depth(4).verify_hits(true);
+        let pool = RouterPool::connect(&cell, cfg).unwrap();
         // Preload through the coordinator so migration tracks the keys.
         for k in 0..300u64 {
             coord.set(k, &k.to_le_bytes()).unwrap();

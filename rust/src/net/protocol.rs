@@ -1,5 +1,19 @@
-//! Wire protocol: memcached-flavoured, line-oriented, binary-safe
-//! payloads.
+//! Wire protocol: one typed codec ([`Request`]/[`Response`]), two
+//! framings.
+//!
+//! The enums below are the protocol; how they cross the wire is a
+//! per-connection choice negotiated by the first byte the client
+//! sends. A connection leading with [`super::frame::BINARY_MAGIC`]
+//! speaks the length-prefixed binary framing
+//! ([`Request::encode_binary`] / [`Response::decode_binary`], layout
+//! in [`super::frame`]); anything else is the original
+//! memcached-flavoured line-text framing below, kept as a compat layer
+//! for the seed `Router`, debugging by `nc`, and the legacy tests.
+//! Both framings are binary-safe for payloads and decode to the same
+//! typed values — round-trip equivalence across both is pinned by
+//! `rust/tests/wire_codec.rs`.
+//!
+//! Text framing reference:
 //!
 //! ```text
 //! SET <key-hex> <len>\n<len bytes>\n     -> STORED\n
@@ -64,7 +78,7 @@
 //! back.
 
 use crate::storage::Version;
-use std::io::{BufRead, Write};
+use std::io::{BufRead, Read, Write};
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Request {
@@ -186,6 +200,35 @@ pub enum Response {
     Error(String),
 }
 
+impl Request {
+    /// Append this request to `out` as one binary frame (layout and
+    /// negotiation rules in [`super::frame`]). Appending lets a
+    /// pipelined batch build every frame into one buffer and flush the
+    /// whole batch with a single write.
+    pub fn encode_binary(&self, out: &mut Vec<u8>) {
+        super::frame::encode_request(self, out)
+    }
+
+    /// Decode one binary frame body (the bytes after the length
+    /// prefix) into a request.
+    pub fn decode_binary(body: &[u8]) -> std::io::Result<Request> {
+        super::frame::decode_request(body)
+    }
+}
+
+impl Response {
+    /// Append this response to `out` as one binary frame.
+    pub fn encode_binary(&self, out: &mut Vec<u8>) {
+        super::frame::encode_response(self, out)
+    }
+
+    /// Decode one binary frame body (the bytes after the length
+    /// prefix) into a response.
+    pub fn decode_binary(body: &[u8]) -> std::io::Result<Response> {
+        super::frame::decode_response(body)
+    }
+}
+
 /// Outcome of a versioned write (`VSET`) at one replica, as seen by a
 /// client.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -234,9 +277,9 @@ fn parse_hex(p: Option<&str>, what: &str) -> std::io::Result<u64> {
 }
 
 /// Upper bound on a single value payload, applied on both sides of the
-/// wire — a corrupt length field must never drive an unchecked
-/// multi-gigabyte allocation.
-const MAX_VALUE_LEN: usize = 64 << 20;
+/// wire and in both framings — a corrupt length field must never drive
+/// an unchecked multi-gigabyte allocation.
+pub const MAX_VALUE_LEN: usize = 64 << 20;
 
 /// Upper bound on one lease grant's TTL, shared by both sides of the
 /// wire: the authority clamps what it grants (a corrupt or hostile TTL
@@ -259,105 +302,187 @@ fn read_value<R: BufRead>(r: &mut R, len: usize) -> std::io::Result<Vec<u8>> {
     Ok(value)
 }
 
-/// Read one request; `Ok(None)` on clean EOF. `line` is the caller's
-/// reusable line buffer: the serve loop owns one `String` per
-/// connection instead of allocating a fresh one per request (the
-/// hot-path alloc churn the pre-refactor reader had).
-pub fn read_request<R: BufRead>(r: &mut R, line: &mut String) -> std::io::Result<Option<Request>> {
+/// One parsed wire item, distinguishing *how wrong* a malformed
+/// request was. `Recoverable` means the reader consumed the bad
+/// request entirely — the command line and, for payload-carrying ops,
+/// the (drained, never buffered) payload — and is aligned on the next
+/// request, so the serve loop can answer a structured
+/// [`Response::Error`] and keep the connection alive. Failures that
+/// leave the stream position untrustworthy surface as `Err` from
+/// [`read_request`] instead and kill the connection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Parsed {
+    Req(Request),
+    Recoverable(String),
+}
+
+/// Internal parse failure: recoverable (stream still aligned) vs fatal
+/// (framing lost, or the socket itself failed).
+enum Malformed {
+    Recoverable(String),
+    Fatal(std::io::Error),
+}
+
+impl From<std::io::Error> for Malformed {
+    fn from(e: std::io::Error) -> Malformed {
+        Malformed::Fatal(e)
+    }
+}
+
+/// Parse one hex field; a bad field is recoverable (the whole command
+/// line was already consumed by `read_line`).
+fn field_hex(p: Option<&str>, what: &str) -> Result<u64, Malformed> {
+    p.and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| Malformed::Recoverable(what.to_string()))
+}
+
+/// Parse the `<len>` field of a payload-carrying command. The length
+/// is the stream-framing contract: if it cannot be parsed at all, the
+/// payload boundary is unknown and the connection cannot recover.
+fn payload_len(p: Option<&str>) -> Result<usize, Malformed> {
+    p.and_then(|s| s.parse().ok())
+        .ok_or_else(|| Malformed::Fatal(bad_data("bad len")))
+}
+
+/// Read a `len`-byte payload plus its trailing newline. An oversized
+/// length is *recoverable*: the payload is drained to the sink — never
+/// buffered — so the reader stays aligned on the next request and the
+/// server answers a structured error instead of dropping the
+/// connection (which is what the pre-redesign reader did).
+fn read_payload<R: BufRead>(r: &mut R, len: usize) -> Result<Vec<u8>, Malformed> {
+    if len > MAX_VALUE_LEN {
+        skip_bytes(r, len as u64 + 1)?;
+        return Err(Malformed::Recoverable(format!(
+            "value length {len} exceeds cap {MAX_VALUE_LEN}"
+        )));
+    }
+    Ok(read_value(r, len)?)
+}
+
+/// Drain exactly `n` bytes; EOF mid-drain is fatal (the peer hung up
+/// inside its own payload).
+fn skip_bytes<R: BufRead>(r: &mut R, n: u64) -> std::io::Result<()> {
+    let copied = std::io::copy(&mut r.by_ref().take(n), &mut std::io::sink())?;
+    if copied < n {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "connection closed mid-payload",
+        ));
+    }
+    Ok(())
+}
+
+/// Read one request in the text framing; `Ok(None)` on clean EOF.
+/// Malformed-but-aligned requests come back as
+/// [`Parsed::Recoverable`]; `Err` means the connection must close.
+/// `line` is the caller's reusable line buffer: the serve loop owns
+/// one `String` per connection instead of allocating a fresh one per
+/// request (the hot-path alloc churn the pre-refactor reader had).
+pub fn read_request<R: BufRead>(r: &mut R, line: &mut String) -> std::io::Result<Option<Parsed>> {
     line.clear();
     if r.read_line(line)? == 0 {
         return Ok(None);
     }
-    let line = line.trim_end();
+    match parse_request_line(r, line.trim_end()) {
+        Ok(req) => Ok(Some(Parsed::Req(req))),
+        Err(Malformed::Recoverable(msg)) => Ok(Some(Parsed::Recoverable(msg))),
+        Err(Malformed::Fatal(e)) => Err(e),
+    }
+}
+
+/// Parse one already-read command line (plus, for payload-carrying
+/// ops, the payload that follows it on `r`). For those ops the `<len>`
+/// field is parsed *before* the other fields are validated, so a bad
+/// key/epoch/term still consumes the payload and stays recoverable —
+/// only an unparseable length (or the socket failing) is fatal.
+fn parse_request_line<R: BufRead>(r: &mut R, line: &str) -> Result<Request, Malformed> {
     let mut parts = line.split(' ');
     let cmd = parts.next().unwrap_or("");
     match cmd {
         "SET" => {
-            let key = parse_hex(parts.next(), "bad key")?;
-            let len: usize = parts
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| bad_data("bad len"))?;
-            let value = read_value(r, len)?;
-            Ok(Some(Request::Set { key, value }))
+            let key = field_hex(parts.next(), "bad key");
+            let len = payload_len(parts.next())?;
+            let value = read_payload(r, len)?;
+            Ok(Request::Set { key: key?, value })
         }
         "VSET" => {
-            let key = parse_hex(parts.next(), "bad key")?;
-            let epoch = parse_hex(parts.next(), "bad epoch")?;
-            let seq = parse_hex(parts.next(), "bad seq")?;
-            let len: usize = parts
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| bad_data("bad len"))?;
-            let value = read_value(r, len)?;
-            Ok(Some(Request::VSet {
-                key,
-                version: Version::new(epoch, seq),
+            let key = field_hex(parts.next(), "bad key");
+            let epoch = field_hex(parts.next(), "bad epoch");
+            let seq = field_hex(parts.next(), "bad seq");
+            let len = payload_len(parts.next())?;
+            let value = read_payload(r, len)?;
+            Ok(Request::VSet {
+                key: key?,
+                version: Version::new(epoch?, seq?),
                 value,
-            }))
+            })
         }
-        "GET" => Ok(Some(Request::Get {
-            key: parse_hex(parts.next(), "bad key")?,
-        })),
-        "VGET" => Ok(Some(Request::VGet {
-            key: parse_hex(parts.next(), "bad key")?,
-        })),
-        "DEL" => Ok(Some(Request::Del {
-            key: parse_hex(parts.next(), "bad key")?,
-        })),
+        "GET" => Ok(Request::Get {
+            key: field_hex(parts.next(), "bad key")?,
+        }),
+        "VGET" => Ok(Request::VGet {
+            key: field_hex(parts.next(), "bad key")?,
+        }),
+        "DEL" => Ok(Request::Del {
+            key: field_hex(parts.next(), "bad key")?,
+        }),
         "VDEL" => {
-            let key = parse_hex(parts.next(), "bad key")?;
-            let epoch = parse_hex(parts.next(), "bad epoch")?;
-            let seq = parse_hex(parts.next(), "bad seq")?;
-            Ok(Some(Request::VDel {
+            let key = field_hex(parts.next(), "bad key")?;
+            let epoch = field_hex(parts.next(), "bad epoch")?;
+            let seq = field_hex(parts.next(), "bad seq")?;
+            Ok(Request::VDel {
                 key,
                 version: Version::new(epoch, seq),
-            }))
+            })
         }
-        "STATS" => Ok(Some(Request::Stats)),
-        "HEARTBEAT" => Ok(Some(Request::Heartbeat {
-            epoch: parse_hex(parts.next(), "bad epoch")?,
-        })),
-        "KEYS" => Ok(Some(Request::Keys)),
+        "STATS" => Ok(Request::Stats),
+        "HEARTBEAT" => Ok(Request::Heartbeat {
+            epoch: field_hex(parts.next(), "bad epoch")?,
+        }),
+        "KEYS" => Ok(Request::Keys),
         "KEYSC" => {
-            let limit = parse_hex(parts.next(), "bad limit")?;
+            let limit = field_hex(parts.next(), "bad limit")?;
             let cursor = match parts.next() {
                 None => None,
-                Some(s) => Some(u64::from_str_radix(s, 16).map_err(|_| bad_data("bad cursor"))?),
+                Some(s) => Some(
+                    u64::from_str_radix(s, 16)
+                        .map_err(|_| Malformed::Recoverable("bad cursor".to_string()))?,
+                ),
             };
-            Ok(Some(Request::KeysChunk { cursor, limit }))
+            Ok(Request::KeysChunk { cursor, limit })
         }
         "LEASE" => {
-            let shard = parse_hex(parts.next(), "bad shard")?;
-            let candidate = parse_hex(parts.next(), "bad candidate")?;
-            let term = parse_hex(parts.next(), "bad term")?;
-            let ttl_ms = parse_hex(parts.next(), "bad ttl")?;
-            Ok(Some(Request::Lease {
+            let shard = field_hex(parts.next(), "bad shard")?;
+            let candidate = field_hex(parts.next(), "bad candidate")?;
+            let term = field_hex(parts.next(), "bad term")?;
+            let ttl_ms = field_hex(parts.next(), "bad ttl")?;
+            Ok(Request::Lease {
                 shard,
                 candidate,
                 term,
                 ttl_ms,
-            }))
+            })
         }
         "STATE" => {
-            let shard = parse_hex(parts.next(), "bad shard")?;
+            let shard = field_hex(parts.next(), "bad shard");
             match parts.next() {
                 // `STATE <shard>` reads the stored blob back.
-                None => Ok(Some(Request::StateGet { shard })),
+                None => Ok(Request::StateGet { shard: shard? }),
                 Some(t) => {
-                    let term = parse_hex(Some(t), "bad term")?;
-                    let len: usize = parts
-                        .next()
-                        .and_then(|s| s.parse().ok())
-                        .ok_or_else(|| bad_data("bad len"))?;
-                    let value = read_value(r, len)?;
-                    Ok(Some(Request::StatePut { shard, term, value }))
+                    let term = field_hex(Some(t), "bad term");
+                    let len = payload_len(parts.next())?;
+                    let value = read_payload(r, len)?;
+                    Ok(Request::StatePut {
+                        shard: shard?,
+                        term: term?,
+                        value,
+                    })
                 }
             }
         }
-        "PING" => Ok(Some(Request::Ping)),
-        "QUIT" => Ok(Some(Request::Quit)),
-        other => Err(bad_data(&format!("unknown command {other:?}"))),
+        "PING" => Ok(Request::Ping),
+        "QUIT" => Ok(Request::Quit),
+        other => Err(Malformed::Recoverable(format!("unknown command {other:?}"))),
     }
 }
 
@@ -613,7 +738,10 @@ mod tests {
         write_request(&mut buf, &req).unwrap();
         let mut r = BufReader::new(&buf[..]);
         let mut line = String::new();
-        read_request(&mut r, &mut line).unwrap().unwrap()
+        match read_request(&mut r, &mut line).unwrap() {
+            Some(Parsed::Req(req)) => req,
+            other => panic!("expected a well-formed request, got {other:?}"),
+        }
     }
 
     fn roundtrip_resp(resp: Response) -> Response {
@@ -776,29 +904,78 @@ mod tests {
     }
 
     #[test]
-    fn oversized_value_lengths_are_rejected_on_both_sides() {
-        // Request side (server parsing a client line)...
+    fn oversized_request_value_is_recoverable_and_stays_aligned() {
+        // An oversized-but-parseable length is a recoverable defect:
+        // the payload is drained, the reader stays aligned, and the
+        // next request on the connection parses cleanly.
+        let len = MAX_VALUE_LEN + 1;
+        let mut buf = format!("SET 1 {len}\n").into_bytes();
+        buf.resize(buf.len() + len + 1, b'x');
+        write_request(&mut buf, &Request::Ping).unwrap();
+        let mut r = BufReader::new(&buf[..]);
         let mut line = String::new();
-        let mut r = BufReader::new(&b"SET 1 99999999999\n"[..]);
-        assert!(read_request(&mut r, &mut line).is_err());
-        // ...and response side (client parsing a server line): a corrupt
-        // length must never drive an unchecked allocation.
+        match read_request(&mut r, &mut line).unwrap() {
+            Some(Parsed::Recoverable(msg)) => assert!(msg.contains("exceeds cap")),
+            other => panic!("expected recoverable error, got {other:?}"),
+        }
+        assert_eq!(
+            read_request(&mut r, &mut line).unwrap(),
+            Some(Parsed::Req(Request::Ping))
+        );
+    }
+
+    #[test]
+    fn oversized_response_value_lengths_are_rejected() {
+        // Response side (client parsing a server line): a corrupt
+        // length must never drive an unchecked allocation. The client
+        // reader stays strict — a server emitting garbage lengths is
+        // not a peer worth recovering.
         let mut r = BufReader::new(&b"VVALUE 1 1 99999999999\n"[..]);
         assert!(read_response(&mut r).is_err());
         let mut r = BufReader::new(&b"VALUE 99999999999\n"[..]);
         assert!(read_response(&mut r).is_err());
-        // Control-state blobs ride the same cap.
-        let mut r = BufReader::new(&b"STATE 0 1 99999999999\n"[..]);
-        assert!(read_request(&mut r, &mut line).is_err());
         let mut r = BufReader::new(&b"SVALUE 1 99999999999\n"[..]);
         assert!(read_response(&mut r).is_err());
     }
 
     #[test]
-    fn rejects_unknown_command() {
-        let mut r = BufReader::new(&b"FROB 123\n"[..]);
+    fn unparseable_payload_length_is_fatal() {
+        // Without a parseable <len> the payload boundary is unknown —
+        // the reader cannot resynchronize and must kill the connection.
         let mut line = String::new();
+        let mut r = BufReader::new(&b"SET 1 notanumber\n"[..]);
         assert!(read_request(&mut r, &mut line).is_err());
+        let mut r = BufReader::new(&b"STATE 0 1\n"[..]);
+        assert!(read_request(&mut r, &mut line).is_err());
+    }
+
+    #[test]
+    fn bad_fields_and_unknown_commands_are_recoverable() {
+        // Line-only defects leave the stream aligned: each bad request
+        // reads back as Recoverable and the good one after it parses.
+        let feed = b"FROB 123\nGET zzz\nVDEL 1 2\nKEYSC 10 nothex\nPING\n";
+        let mut r = BufReader::new(&feed[..]);
+        let mut line = String::new();
+        for _ in 0..4 {
+            match read_request(&mut r, &mut line).unwrap() {
+                Some(Parsed::Recoverable(_)) => {}
+                other => panic!("expected recoverable error, got {other:?}"),
+            }
+        }
+        assert_eq!(
+            read_request(&mut r, &mut line).unwrap(),
+            Some(Parsed::Req(Request::Ping))
+        );
+        // A bad key on a payload-carrying op still consumes the payload.
+        let mut r = BufReader::new(&b"SET zzz 3\nabc\nPING\n"[..]);
+        match read_request(&mut r, &mut line).unwrap() {
+            Some(Parsed::Recoverable(msg)) => assert!(msg.contains("bad key")),
+            other => panic!("expected recoverable error, got {other:?}"),
+        }
+        assert_eq!(
+            read_request(&mut r, &mut line).unwrap(),
+            Some(Parsed::Req(Request::Ping))
+        );
     }
 
     #[test]
@@ -815,10 +992,13 @@ mod tests {
         write_request(&mut buf, &Request::Get { key: 0xAB }).unwrap();
         let mut r = BufReader::new(&buf[..]);
         let mut line = String::new();
-        assert_eq!(read_request(&mut r, &mut line).unwrap(), Some(Request::Ping));
         assert_eq!(
             read_request(&mut r, &mut line).unwrap(),
-            Some(Request::Get { key: 0xAB })
+            Some(Parsed::Req(Request::Ping))
+        );
+        assert_eq!(
+            read_request(&mut r, &mut line).unwrap(),
+            Some(Parsed::Req(Request::Get { key: 0xAB }))
         );
         assert!(read_request(&mut r, &mut line).unwrap().is_none());
         assert!(line.capacity() > 0, "buffer survives the loop");

@@ -1,0 +1,396 @@
+//! Readiness-driven connection reactor: the nonblocking serve core.
+//!
+//! One reactor thread owns the listening socket, a [`epoll::Poller`]
+//! and every binary-framed connection, so a node holds thousands of
+//! idle connections at the cost of one thread and one fd apiece —
+//! against the thread-per-connection text plane, whose cost per idle
+//! client is a full stack plus scheduler churn.
+//!
+//! The loop is level-triggered. Each connection is a small state
+//! machine: bytes accumulate in a read buffer, complete frames are
+//! decoded and dispatched to the [`Handler`], and encoded responses
+//! accumulate in a write buffer that drains as the socket accepts them
+//! (`EPOLLOUT` interest is registered only while a flush is actually
+//! pending). A whole pipelined batch therefore turns into one buffer
+//! fill and — usually — one `write` syscall: the scatter-gather batched
+//! write the binary protocol was designed around.
+//!
+//! Framing negotiation happens on byte one: [`frame::BINARY_MAGIC`]
+//! keeps the connection in the reactor; anything else hands the stream
+//! (restored to blocking mode, sniffed bytes included) to the handler's
+//! text compat layer, which serves it on a thread exactly as the
+//! pre-reactor server did.
+//!
+//! Error discipline mirrors the codec's: a bad frame *body* under an
+//! intact length prefix is answered with a structured
+//! [`Response::Error`] and the connection lives on; a corrupt length
+//! prefix poisons the connection — the error is flushed, then the
+//! stream closes, because the frame boundary itself can no longer be
+//! trusted.
+
+use super::frame;
+use super::protocol::{Request, Response};
+use epoll::{Interest, Poller};
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// How a server plugs into the reactor. All callbacks run on the
+/// reactor thread; `request` should not block on anything slower than
+/// the store itself.
+pub trait Handler {
+    /// Serve one decoded request; `None` means an orderly close
+    /// (`QUIT`) — pending responses still flush first.
+    fn request(&mut self, token: u64, req: Request) -> Option<Response>;
+
+    /// A connection was accepted (fires before its first byte, for
+    /// both framings).
+    fn accepted(&mut self, token: u64, stream: &TcpStream);
+
+    /// The connection's first byte was not the binary magic: take
+    /// ownership of the stream (restored to blocking mode) plus every
+    /// byte already consumed, and serve it through the text compat
+    /// layer. The handler is responsible for any `closed`-equivalent
+    /// bookkeeping when the handed-off connection finishes.
+    fn handoff(&mut self, token: u64, stream: TcpStream, sniffed: Vec<u8>);
+
+    /// A reactor-owned connection closed (EOF, error, or poisoned
+    /// framing). Not fired for handed-off connections.
+    fn closed(&mut self, token: u64);
+}
+
+/// Wakes a blocked [`Reactor::run`] from another thread (shutdown).
+/// The wake side of a nonblocking socketpair: a full pipe just means a
+/// wake is already pending, so errors are ignored.
+#[derive(Clone)]
+pub struct Waker {
+    tx: Arc<UnixStream>,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        let _ = (&*self.tx).write(&[1]);
+    }
+}
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Flushed-prefix threshold past which a write buffer is compacted
+/// instead of growing monotonically.
+const WBUF_COMPACT: usize = 64 * 1024;
+
+/// Per-connection state machine for a reactor-owned connection.
+struct ConnState {
+    stream: TcpStream,
+    /// Bytes read but not yet parsed into complete frames.
+    rbuf: Vec<u8>,
+    /// Encoded responses not yet accepted by the socket.
+    wbuf: Vec<u8>,
+    /// How much of `wbuf` has already been written.
+    wpos: usize,
+    /// Whether write interest is currently registered.
+    want_write: bool,
+    /// True once the magic byte proved this a binary connection.
+    negotiated: bool,
+    /// Close once `wbuf` drains (QUIT, fatal framing error, EOF).
+    close_after_flush: bool,
+    /// Stop parsing further frames (fatal framing error / QUIT).
+    poisoned: bool,
+}
+
+impl ConnState {
+    fn new(stream: TcpStream) -> ConnState {
+        ConnState {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            want_write: false,
+            negotiated: false,
+            close_after_flush: false,
+            poisoned: false,
+        }
+    }
+
+    fn flush_pending(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+}
+
+/// What `conn_ready` decided to do with the connection once the
+/// borrow on its state ends.
+enum Outcome {
+    Keep,
+    Close,
+    Handoff,
+}
+
+pub struct Reactor<H: Handler> {
+    listener: TcpListener,
+    poller: Poller,
+    wake_rx: UnixStream,
+    conns: HashMap<u64, ConnState>,
+    next_token: u64,
+    handler: H,
+}
+
+impl<H: Handler> Reactor<H> {
+    /// Wrap a bound listener; returns the reactor plus the [`Waker`]
+    /// that unblocks [`Self::run`] for shutdown.
+    pub fn new(listener: TcpListener, handler: H) -> io::Result<(Reactor<H>, Waker)> {
+        listener.set_nonblocking(true)?;
+        let (wake_tx, wake_rx) = UnixStream::pair()?;
+        wake_tx.set_nonblocking(true)?;
+        wake_rx.set_nonblocking(true)?;
+        let mut poller = Poller::new()?;
+        poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        poller.register(wake_rx.as_raw_fd(), TOKEN_WAKER, Interest::READ)?;
+        Ok((
+            Reactor {
+                listener,
+                poller,
+                wake_rx,
+                conns: HashMap::new(),
+                next_token: FIRST_CONN_TOKEN,
+                handler,
+            },
+            Waker {
+                tx: Arc::new(wake_tx),
+            },
+        ))
+    }
+
+    /// Drive the readiness loop until `stop` reads true (the waker
+    /// makes that observation prompt; the 500 ms poll timeout is only
+    /// the belt-and-braces bound). On exit every reactor-owned
+    /// connection gets a best-effort flush and a FIN.
+    pub fn run(&mut self, stop: &AtomicBool) -> io::Result<()> {
+        let mut events = Vec::new();
+        while !stop.load(Ordering::SeqCst) {
+            events.clear();
+            self.poller.wait(&mut events, 500)?;
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.drain_waker(),
+                    token => self.conn_ready(token, ev.readable, ev.writable, ev.error),
+                }
+            }
+        }
+        for (_, mut conn) in self.conns.drain() {
+            let _ = flush(&mut conn);
+            let _ = conn.stream.shutdown(Shutdown::Both);
+        }
+        Ok(())
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() || stream.set_nodelay(true).is_err() {
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    self.handler.accepted(token, &stream);
+                    if self
+                        .poller
+                        .register(stream.as_raw_fd(), token, Interest::READ)
+                        .is_err()
+                    {
+                        self.handler.closed(token);
+                        continue;
+                    }
+                    self.conns.insert(token, ConnState::new(stream));
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == io::ErrorKind::ConnectionAborted => {}
+                // WouldBlock = accept queue drained; anything else
+                // (EMFILE and friends) waits for the next readiness
+                // round rather than spinning here.
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        while let Ok(n) = (&self.wake_rx).read(&mut buf) {
+            if n == 0 {
+                break;
+            }
+        }
+    }
+
+    fn conn_ready(&mut self, token: u64, readable: bool, writable: bool, error: bool) {
+        let mut outcome = Outcome::Keep;
+        {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return;
+            };
+            let handler = &mut self.handler;
+            if error {
+                outcome = Outcome::Close;
+            }
+            if matches!(outcome, Outcome::Keep) && readable {
+                match fill(conn) {
+                    Ok(eof) => {
+                        if !conn.negotiated && !conn.rbuf.is_empty() {
+                            if conn.rbuf[0] == frame::BINARY_MAGIC {
+                                conn.rbuf.remove(0);
+                                conn.negotiated = true;
+                            } else {
+                                outcome = Outcome::Handoff;
+                            }
+                        }
+                        if matches!(outcome, Outcome::Keep) {
+                            if conn.negotiated {
+                                drain_frames(conn, handler, token);
+                            }
+                            if eof {
+                                conn.close_after_flush = true;
+                                conn.poisoned = true;
+                            }
+                        }
+                    }
+                    Err(_) => outcome = Outcome::Close,
+                }
+            }
+            if matches!(outcome, Outcome::Keep) && (writable || conn.flush_pending()) {
+                // Optimistic flush: freshly-encoded responses go out on
+                // this round; only what the socket refuses waits for
+                // EPOLLOUT.
+                if flush(conn).is_err() {
+                    outcome = Outcome::Close;
+                }
+            }
+            if matches!(outcome, Outcome::Keep) {
+                let pending = conn.flush_pending();
+                if !pending && conn.close_after_flush {
+                    outcome = Outcome::Close;
+                } else if pending != conn.want_write {
+                    conn.want_write = pending;
+                    let interest = if pending {
+                        Interest::BOTH
+                    } else {
+                        Interest::READ
+                    };
+                    let fd = conn.stream.as_raw_fd();
+                    if self.poller.modify(fd, token, interest).is_err() {
+                        outcome = Outcome::Close;
+                    }
+                }
+            }
+        }
+        match outcome {
+            Outcome::Keep => {}
+            Outcome::Close => self.close_conn(token),
+            Outcome::Handoff => self.handoff_conn(token),
+        }
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            self.handler.closed(token);
+        }
+    }
+
+    fn handoff_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            if conn.stream.set_nonblocking(false).is_ok() {
+                self.handler.handoff(token, conn.stream, conn.rbuf);
+            } else {
+                self.handler.closed(token);
+            }
+        }
+    }
+}
+
+/// Read everything currently available into `rbuf`; `Ok(true)` = EOF.
+fn fill(conn: &mut ConnState) -> io::Result<bool> {
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match conn.stream.read(&mut buf) {
+            Ok(0) => return Ok(true),
+            Ok(n) => conn.rbuf.extend_from_slice(&buf[..n]),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Write as much of `wbuf` as the socket accepts right now.
+fn flush(conn: &mut ConnState) -> io::Result<()> {
+    while conn.flush_pending() {
+        match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+            Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "write zero")),
+            Ok(n) => conn.wpos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    if !conn.flush_pending() {
+        conn.wbuf.clear();
+        conn.wpos = 0;
+    } else if conn.wpos > WBUF_COMPACT {
+        // Reclaim the flushed prefix so a long-lived connection's
+        // buffer doesn't grow without bound.
+        conn.wbuf.drain(..conn.wpos);
+        conn.wpos = 0;
+    }
+    Ok(())
+}
+
+/// Decode and serve every complete frame buffered on the connection,
+/// batching the encoded responses into its write buffer.
+fn drain_frames<H: Handler>(conn: &mut ConnState, handler: &mut H, token: u64) {
+    while !conn.poisoned {
+        if conn.rbuf.len() < 4 {
+            return;
+        }
+        let prefix = [conn.rbuf[0], conn.rbuf[1], conn.rbuf[2], conn.rbuf[3]];
+        let len = u32::from_le_bytes(prefix) as usize;
+        if let Err(e) = frame::frame_len_ok(len) {
+            // The boundary itself is untrusted: answer once, flush,
+            // close. (Unlike the text plane there is no payload to
+            // drain past — the declared length is the corruption.)
+            Response::Error(e.to_string()).encode_binary(&mut conn.wbuf);
+            conn.poisoned = true;
+            conn.close_after_flush = true;
+            return;
+        }
+        if conn.rbuf.len() < 4 + len {
+            return;
+        }
+        let body = conn.rbuf[4..4 + len].to_vec();
+        conn.rbuf.drain(..4 + len);
+        match Request::decode_binary(&body) {
+            Ok(req) => match handler.request(token, req) {
+                Some(resp) => resp.encode_binary(&mut conn.wbuf),
+                None => {
+                    conn.poisoned = true;
+                    conn.close_after_flush = true;
+                    return;
+                }
+            },
+            // Structurally bad body under an intact prefix: the stream
+            // is still aligned on the next frame, so answer and keep
+            // the connection (the recoverable-error contract shared
+            // with the text reader).
+            Err(e) => Response::Error(e.to_string()).encode_binary(&mut conn.wbuf),
+        }
+    }
+}

@@ -1,16 +1,33 @@
-//! Threaded storage-node TCP server (the memcached stand-in).
+//! Storage-node TCP server: a readiness-driven reactor core with a
+//! threaded text compat layer.
 //!
-//! Connections are served straight from a shared
-//! [`crate::storage::ShardedStore`]: each serving thread locks only the
-//! stripe its key hashes to, so concurrent clients hammering one node
-//! no longer convoy behind a global store mutex (the pre-refactor
-//! `Arc<Mutex<StorageNode>>` bottleneck).
+//! Every accepted connection starts life inside the node's single
+//! [`Reactor`] thread. Its first byte picks the framing:
+//! [`frame::BINARY_MAGIC`] keeps it in the reactor, where a
+//! per-connection state machine decodes length-prefixed frames and
+//! batches encoded responses into one write; any other first byte hands
+//! the stream (sniffed bytes included, restored to blocking mode) to a
+//! dedicated thread speaking the legacy newline protocol — exactly the
+//! pre-reactor thread-per-connection server, demoted to a compat path.
+//!
+//! Requests on either framing funnel through one [`handle_request`]
+//! against the shared [`crate::storage::ShardedStore`]: each op locks
+//! only the stripe its key hashes to, so concurrent clients hammering
+//! one node don't convoy behind a global store mutex.
+//!
+//! Malformed input on either framing gets the same contract: if the
+//! reader is still aligned on the next request, the server answers a
+//! structured [`Response::Error`] and keeps the connection; only
+//! untrustworthy framing (a corrupt length prefix, a truncated payload)
+//! closes it.
 
-use super::protocol::{read_request, write_response, Request, Response, MAX_LEASE_TTL_MS};
+use super::frame;
+use super::protocol::{read_request, write_response, Parsed, Request, Response, MAX_LEASE_TTL_MS};
+use super::reactor::{Handler, Reactor, Waker};
 use crate::storage::ShardedStore;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -89,10 +106,12 @@ pub struct NodeServer {
     addr: SocketAddr,
     store: Arc<ShardedStore>,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    /// Live accepted streams (tagged by accept order), kept so
-    /// [`Self::kill`] can sever them; each serving thread removes its
-    /// entry on exit so finished connections don't leak descriptors.
+    reactor_thread: Option<JoinHandle<()>>,
+    waker: Waker,
+    /// Live accepted streams (tagged by connection token), kept so
+    /// [`Self::kill`] can sever them; the reactor (for framed
+    /// connections) and each text serving thread remove their entries
+    /// on exit so finished connections don't leak descriptors.
     conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
 }
 
@@ -110,46 +129,28 @@ impl NodeServer {
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(Mutex::new(Vec::new()));
         // The node's coordinator-failover registers (lease + replicated
-        // control state, one slot per shard id). Owned by the accept
-        // loop: they live exactly as long as the node can be reached,
-        // and are only ever touched through the LEASE/STATE wire ops.
+        // control state, one slot per shard id), shared between the
+        // reactor and the text compat threads; only ever touched
+        // through the LEASE/STATE wire ops.
         let control: Arc<Mutex<HashMap<u64, ControlSlot>>> = Arc::new(Mutex::new(HashMap::new()));
-        let store2 = store.clone();
+        let handler = NodeHandler {
+            store: store.clone(),
+            control,
+            conns: conns.clone(),
+        };
+        let (mut reactor, waker) = Reactor::new(listener, handler)?;
         let stop2 = stop.clone();
-        let conns2 = conns.clone();
-        let accept_thread = std::thread::Builder::new()
+        let reactor_thread = std::thread::Builder::new()
             .name(format!("node-{}", addr.port()))
             .spawn(move || {
-                let mut next_id = 0u64;
-                for conn in listener.incoming() {
-                    let Ok(stream) = conn else { break };
-                    // Check the stop flag *after* taking the stream:
-                    // the shutdown self-poke (and any connection racing
-                    // it) must be dropped here, never registered into
-                    // `conns` — a registered poke would hold a stray fd
-                    // until the server itself dropped.
-                    if stop2.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let id = next_id;
-                    next_id += 1;
-                    if let Ok(clone) = stream.try_clone() {
-                        conns2.lock().unwrap().push((id, clone));
-                    }
-                    let store3 = store2.clone();
-                    let conns3 = conns2.clone();
-                    let control3 = control.clone();
-                    std::thread::spawn(move || {
-                        let _ = serve_conn(stream, store3, control3);
-                        conns3.lock().unwrap().retain(|&(cid, _)| cid != id);
-                    });
-                }
+                let _ = reactor.run(&stop2);
             })?;
         Ok(NodeServer {
             addr,
             store,
             stop,
-            accept_thread: Some(accept_thread),
+            reactor_thread: Some(reactor_thread),
+            waker,
             conns,
         })
     }
@@ -169,11 +170,12 @@ impl NodeServer {
 
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Poke the acceptor so it observes the stop flag; the poke
-        // stream drops immediately and the acceptor discards its end
-        // without registering it.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
+        // The waker unblocks the reactor's wait so it observes the stop
+        // flag promptly (no TCP self-poke: nothing ever races into
+        // `conns`). Reactor-owned connections get a flush and a FIN on
+        // exit; handed-off text threads keep serving their clients.
+        self.waker.wake();
+        if let Some(t) = self.reactor_thread.take() {
             let _ = t.join();
         }
     }
@@ -181,7 +183,8 @@ impl NodeServer {
     /// Crash simulation: stop accepting AND sever every open connection,
     /// so peers see a connection error immediately — the failure the
     /// detection plane must notice, as opposed to the graceful
-    /// [`Self::shutdown`] where established clients keep being served.
+    /// [`Self::shutdown`] where established text clients keep being
+    /// served.
     pub fn kill(&mut self) {
         self.shutdown();
         for (_, s) in self.conns.lock().unwrap().drain(..) {
@@ -196,19 +199,172 @@ impl Drop for NodeServer {
     }
 }
 
-fn serve_conn(
+/// Serve one decoded request against the node's store and control
+/// registers — the single dispatch both framings funnel through.
+/// `None` means `QUIT`: flush what's pending, then close.
+fn handle_request(
+    store: &ShardedStore,
+    control: &Mutex<HashMap<u64, ControlSlot>>,
+    req: Request,
+) -> Option<Response> {
+    Some(match req {
+        Request::Set { key, value } => {
+            store.set(key, value);
+            Response::Stored
+        }
+        // The echoed version is decided in the store's critical
+        // section: ours when applied, the incumbent winner's when
+        // refused (so the writer's clock can catch up).
+        Request::VSet { key, version, value } => match store.vset(key, version, value) {
+            Ok(()) => Response::VStored {
+                applied: true,
+                version,
+            },
+            Err(winner) => Response::VStored {
+                applied: false,
+                version: winner,
+            },
+        },
+        Request::Get { key } => match store.get(key) {
+            Some(v) => Response::Value(v),
+            None => Response::NotFound,
+        },
+        Request::VGet { key } => match store.vget(key) {
+            Some((version, value)) => Response::VValue { version, value },
+            None => Response::NotFound,
+        },
+        Request::Del { key } => match store.remove(key) {
+            Some(_) => Response::Deleted,
+            None => Response::NotFound,
+        },
+        Request::VDel { key, version } => match store.vdel(key, version) {
+            Some(true) => Response::Deleted,
+            Some(false) => Response::Newer,
+            None => Response::NotFound,
+        },
+        Request::Stats => Response::Stats {
+            keys: store.len() as u64,
+            bytes: store.used_bytes(),
+            sets: store.sets(),
+            gets: store.gets(),
+        },
+        Request::Heartbeat { epoch } => Response::Alive {
+            epoch,
+            keys: store.len() as u64,
+        },
+        Request::Keys => Response::KeyList(store.keys()),
+        Request::KeysChunk { cursor, limit } => {
+            let page = store.keys_page(cursor, limit as usize);
+            Response::KeyPage {
+                keys: page.keys,
+                next: page.next,
+            }
+        }
+        Request::Lease { shard, candidate, term, ttl_ms } => {
+            let mut slots = control.lock().unwrap();
+            match slots.entry(shard) {
+                // A read-only query (or the id-0 sentinel) against
+                // a register nobody ever bid for reports it vacant
+                // without allocating one — the map is sized by
+                // real shards, not by whatever ids clients probe.
+                Entry::Vacant(_) if ttl_ms == 0 || candidate == 0 => Response::Leased {
+                    granted: false,
+                    term: 0,
+                    holder: 0,
+                    remaining_ms: 0,
+                },
+                entry => entry.or_default().try_lease(candidate, term, ttl_ms, Instant::now()),
+            }
+        }
+        Request::StatePut { shard, term, value } => {
+            let mut slots = control.lock().unwrap();
+            let slot = slots.entry(shard).or_default();
+            slot.try_state_put(term, value)
+        }
+        Request::StateGet { shard } => {
+            let slots = control.lock().unwrap();
+            match slots.get(&shard) {
+                Some(slot) => match &slot.state {
+                    Some(blob) => Response::StateValue {
+                        term: slot.state_term,
+                        value: blob.clone(),
+                    },
+                    None => Response::NotFound,
+                },
+                None => Response::NotFound,
+            }
+        }
+        Request::Ping => Response::Pong,
+        Request::Quit => return None,
+    })
+}
+
+/// The reactor's view of the node: binary requests served inline,
+/// non-binary connections handed off to text compat threads, and the
+/// `conns` kill-list kept in sync with connection lifetimes.
+struct NodeHandler {
+    store: Arc<ShardedStore>,
+    control: Arc<Mutex<HashMap<u64, ControlSlot>>>,
+    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
+}
+
+impl NodeHandler {
+    fn prune(&self, token: u64) {
+        self.conns.lock().unwrap().retain(|&(cid, _)| cid != token);
+    }
+}
+
+impl Handler for NodeHandler {
+    fn request(&mut self, _token: u64, req: Request) -> Option<Response> {
+        handle_request(&self.store, &self.control, req)
+    }
+
+    fn accepted(&mut self, token: u64, stream: &TcpStream) {
+        if let Ok(clone) = stream.try_clone() {
+            self.conns.lock().unwrap().push((token, clone));
+        }
+    }
+
+    fn handoff(&mut self, token: u64, stream: TcpStream, sniffed: Vec<u8>) {
+        let store = self.store.clone();
+        let control = self.control.clone();
+        let conns = self.conns.clone();
+        std::thread::spawn(move || {
+            let _ = serve_text_conn(stream, sniffed, store, control);
+            conns.lock().unwrap().retain(|&(cid, _)| cid != token);
+        });
+    }
+
+    fn closed(&mut self, token: u64) {
+        self.prune(token);
+    }
+}
+
+/// The legacy newline-framed serve loop, one thread per connection.
+/// `sniffed` holds whatever the reactor read before deciding this
+/// wasn't a binary connection; it is replayed ahead of the socket.
+fn serve_text_conn(
     stream: TcpStream,
+    sniffed: Vec<u8>,
     store: Arc<ShardedStore>,
     control: Arc<Mutex<HashMap<u64, ControlSlot>>>,
 ) -> std::io::Result<()> {
-    stream.set_nodelay(true)?;
-    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut reader = BufReader::new(std::io::Cursor::new(sniffed).chain(stream.try_clone()?));
     let mut writer = BufWriter::new(stream);
     // One request-line buffer for the connection's lifetime.
     let mut line = String::new();
     loop {
         let req = match read_request(&mut reader, &mut line) {
-            Ok(Some(r)) => r,
+            Ok(Some(Parsed::Req(r))) => r,
+            // The reader consumed the bad request whole and is aligned
+            // on the next one: answer the error, keep the connection.
+            Ok(Some(Parsed::Recoverable(msg))) => {
+                write_response(&mut writer, &Response::Error(msg))?;
+                if !reader.buffer().contains(&b'\n') {
+                    writer.flush()?;
+                }
+                continue;
+            }
             Ok(None) => {
                 writer.flush()?;
                 return Ok(());
@@ -219,97 +375,9 @@ fn serve_conn(
                 return Err(e);
             }
         };
-        let resp = match req {
-            Request::Set { key, value } => {
-                store.set(key, value);
-                Response::Stored
-            }
-            // The echoed version is decided in the store's critical
-            // section: ours when applied, the incumbent winner's when
-            // refused (so the writer's clock can catch up).
-            Request::VSet { key, version, value } => match store.vset(key, version, value) {
-                Ok(()) => Response::VStored {
-                    applied: true,
-                    version,
-                },
-                Err(winner) => Response::VStored {
-                    applied: false,
-                    version: winner,
-                },
-            },
-            Request::Get { key } => match store.get(key) {
-                Some(v) => Response::Value(v),
-                None => Response::NotFound,
-            },
-            Request::VGet { key } => match store.vget(key) {
-                Some((version, value)) => Response::VValue { version, value },
-                None => Response::NotFound,
-            },
-            Request::Del { key } => match store.remove(key) {
-                Some(_) => Response::Deleted,
-                None => Response::NotFound,
-            },
-            Request::VDel { key, version } => match store.vdel(key, version) {
-                Some(true) => Response::Deleted,
-                Some(false) => Response::Newer,
-                None => Response::NotFound,
-            },
-            Request::Stats => Response::Stats {
-                keys: store.len() as u64,
-                bytes: store.used_bytes(),
-                sets: store.sets(),
-                gets: store.gets(),
-            },
-            Request::Heartbeat { epoch } => Response::Alive {
-                epoch,
-                keys: store.len() as u64,
-            },
-            Request::Keys => Response::KeyList(store.keys()),
-            Request::KeysChunk { cursor, limit } => {
-                let page = store.keys_page(cursor, limit as usize);
-                Response::KeyPage {
-                    keys: page.keys,
-                    next: page.next,
-                }
-            }
-            Request::Lease { shard, candidate, term, ttl_ms } => {
-                let mut slots = control.lock().unwrap();
-                match slots.entry(shard) {
-                    // A read-only query (or the id-0 sentinel) against
-                    // a register nobody ever bid for reports it vacant
-                    // without allocating one — the map is sized by
-                    // real shards, not by whatever ids clients probe.
-                    Entry::Vacant(_) if ttl_ms == 0 || candidate == 0 => Response::Leased {
-                        granted: false,
-                        term: 0,
-                        holder: 0,
-                        remaining_ms: 0,
-                    },
-                    entry => {
-                        entry.or_default().try_lease(candidate, term, ttl_ms, Instant::now())
-                    }
-                }
-            }
-            Request::StatePut { shard, term, value } => {
-                let mut slots = control.lock().unwrap();
-                let slot = slots.entry(shard).or_default();
-                slot.try_state_put(term, value)
-            }
-            Request::StateGet { shard } => {
-                let slots = control.lock().unwrap();
-                match slots.get(&shard) {
-                    Some(slot) => match &slot.state {
-                        Some(blob) => Response::StateValue {
-                            term: slot.state_term,
-                            value: blob.clone(),
-                        },
-                        None => Response::NotFound,
-                    },
-                    None => Response::NotFound,
-                }
-            }
-            Request::Ping => Response::Pong,
-            Request::Quit => {
+        let resp = match handle_request(&store, &control, req) {
+            Some(resp) => resp,
+            None => {
                 writer.flush()?;
                 return Ok(());
             }
@@ -347,6 +415,119 @@ mod tests {
         assert!(c.del(42).unwrap());
         assert!(!c.del(42).unwrap());
         assert_eq!(server.key_count(), 0);
+    }
+
+    #[test]
+    fn binary_connection_serves_the_full_op_set() {
+        // The same `Conn` surface over the framed binary codec: every
+        // op the text plane serves must round-trip through the reactor.
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect_binary(server.addr()).unwrap();
+        c.ping().unwrap();
+        c.set(42, b"value!".to_vec()).unwrap();
+        assert_eq!(c.get(42).unwrap(), Some(b"value!".to_vec()));
+        assert_eq!(c.get(43).unwrap(), None);
+        let (keys, bytes, sets, _gets) = c.stats().unwrap();
+        assert_eq!((keys, bytes, sets), (1, 6, 1));
+        let v = Version::new(2, 9);
+        assert!(c.vset(7, v, b"vv".to_vec()).unwrap().applied);
+        assert_eq!(c.vget(7).unwrap(), Some((v, b"vv".to_vec())));
+        assert_eq!(c.heartbeat(3).unwrap(), (3, 2));
+        let mut keys = c.keys().unwrap();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![7, 42]);
+        let (page, next) = c.keys_chunk(64, None).unwrap();
+        assert_eq!(page.len(), 2);
+        assert_eq!(next, None);
+        assert!(c.lease(0, 1, 1, 10_000).unwrap().granted);
+        assert_eq!(c.state_put(0, 1, b"blob".to_vec()).unwrap(), (true, 1));
+        assert_eq!(c.state_get(0).unwrap(), Some((1, b"blob".to_vec())));
+        assert!(c.del(42).unwrap());
+        assert_eq!(server.key_count(), 1);
+    }
+
+    #[test]
+    fn text_and_binary_connections_share_one_server() {
+        let server = NodeServer::spawn().unwrap();
+        let mut t = Conn::connect(server.addr()).unwrap();
+        let mut b = Conn::connect_binary(server.addr()).unwrap();
+        t.set(1, b"from-text".to_vec()).unwrap();
+        b.set(2, b"from-binary".to_vec()).unwrap();
+        assert_eq!(b.get(1).unwrap(), Some(b"from-text".to_vec()));
+        assert_eq!(t.get(2).unwrap(), Some(b"from-binary".to_vec()));
+        assert_eq!(server.key_count(), 2);
+    }
+
+    #[test]
+    fn recoverable_text_garbage_keeps_the_connection_alive() {
+        // A bad command or bad field is answered with ERROR and the
+        // connection lives on; only untrustworthy framing closes it.
+        use std::io::{BufRead, Write};
+        let server = NodeServer::spawn().unwrap();
+        let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream;
+        w.write_all(b"FROB 1\nGET zzz\nPING\n").unwrap();
+        let mut lines = Vec::new();
+        for _ in 0..3 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            lines.push(line);
+        }
+        assert!(lines[0].starts_with("ERROR "), "got {:?}", lines[0]);
+        assert!(lines[1].starts_with("ERROR "), "got {:?}", lines[1]);
+        assert_eq!(lines[2], "PONG\n");
+    }
+
+    #[test]
+    fn recoverable_binary_garbage_keeps_the_connection_alive() {
+        // A frame body that fails to decode under an intact length
+        // prefix gets a structured Error response; the next frame on
+        // the same connection is still served.
+        use crate::net::frame;
+        use std::io::Write;
+        let server = NodeServer::spawn().unwrap();
+        let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream;
+        let mut out = vec![frame::BINARY_MAGIC];
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.push(0x7F); // no such opcode
+        Request::Ping.encode_binary(&mut out);
+        w.write_all(&out).unwrap();
+        let body = frame::read_frame(&mut reader).unwrap().unwrap();
+        assert!(matches!(
+            Response::decode_binary(&body).unwrap(),
+            Response::Error(_)
+        ));
+        let body = frame::read_frame(&mut reader).unwrap().unwrap();
+        assert_eq!(Response::decode_binary(&body).unwrap(), Response::Pong);
+    }
+
+    #[test]
+    fn corrupt_binary_length_prefix_answers_then_closes() {
+        // An oversized declared length means the frame boundary itself
+        // is untrusted: the server answers one structured Error, then
+        // closes the connection.
+        use crate::net::frame;
+        use std::io::Write;
+        let server = NodeServer::spawn().unwrap();
+        let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut w = stream;
+        let mut out = vec![frame::BINARY_MAGIC];
+        out.extend_from_slice(&((frame::MAX_FRAME_LEN + 1) as u32).to_le_bytes());
+        w.write_all(&out).unwrap();
+        let body = frame::read_frame(&mut reader).unwrap().unwrap();
+        assert!(matches!(
+            Response::decode_binary(&body).unwrap(),
+            Response::Error(_)
+        ));
+        // EOF (or a reset, if our half already closed) follows.
+        match frame::read_frame(&mut reader) {
+            Ok(None) | Err(_) => {}
+            Ok(Some(body)) => panic!("poisoned connection served another frame: {body:?}"),
+        }
     }
 
     #[test]
@@ -484,8 +665,11 @@ mod tests {
         let mut server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
         c.ping().unwrap();
+        let mut b = Conn::connect_binary(server.addr()).unwrap();
+        b.ping().unwrap();
         server.kill();
-        assert!(c.ping().is_err(), "killed node must drop its clients");
+        assert!(c.ping().is_err(), "killed node must drop its text clients");
+        assert!(b.ping().is_err(), "killed node must drop its binary clients");
         // New connections are refused (or at best never served).
         match Conn::connect(server.addr()) {
             Err(_) => {}
@@ -496,10 +680,16 @@ mod tests {
     #[test]
     fn finished_connections_are_pruned() {
         // Heartbeat probes open a fresh connection per tick; the server
-        // must not accumulate an fd per probe for its lifetime.
+        // must not accumulate an fd per probe for its lifetime. Both
+        // framings prune: text threads on exit, binary via the
+        // reactor's close path.
         let server = NodeServer::spawn().unwrap();
-        for _ in 0..20 {
-            let mut c = Conn::connect(server.addr()).unwrap();
+        for i in 0..20 {
+            let mut c = if i % 2 == 0 {
+                Conn::connect(server.addr()).unwrap()
+            } else {
+                Conn::connect_binary(server.addr()).unwrap()
+            };
             c.ping().unwrap();
         }
         for _ in 0..100 {
@@ -512,15 +702,15 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_does_not_register_its_own_poke() {
-        // The self-poke that wakes the acceptor must never land in
-        // `conns` (a stray fd held until drop).
+    fn shutdown_leaves_no_stray_connections() {
+        // Shutdown is waker-driven — nothing (and certainly no TCP
+        // self-poke) may linger in `conns` afterwards.
         for _ in 0..20 {
             let mut server = NodeServer::spawn().unwrap();
             server.shutdown();
             assert!(
                 server.conns.lock().unwrap().is_empty(),
-                "shutdown poke was registered as a live connection"
+                "shutdown left a live connection registered"
             );
         }
     }
@@ -532,7 +722,11 @@ mod tests {
         let handles: Vec<_> = (0..8)
             .map(|t| {
                 std::thread::spawn(move || {
-                    let mut c = Conn::connect(addr).unwrap();
+                    let mut c = if t % 2 == 0 {
+                        Conn::connect(addr).unwrap()
+                    } else {
+                        Conn::connect_binary(addr).unwrap()
+                    };
                     for i in 0..100u64 {
                         let key = t * 1000 + i;
                         c.set(key, vec![t as u8; 16]).unwrap();

@@ -122,12 +122,7 @@ fn pool_places_keys_exactly_where_the_snapshot_says() {
     let cell = coord.snapshot_cell();
     let pool = RouterPool::connect(
         &cell,
-        PoolConfig {
-            workers: 4,
-            pipeline_depth: 16,
-            verify_hits: true,
-            ..PoolConfig::default()
-        },
+        PoolConfig::new(4).pipeline_depth(16).verify_hits(true),
     )
     .unwrap();
     let keys: Vec<u64> = (0..1000u64).collect();
@@ -168,12 +163,7 @@ fn churn_scenario_loses_zero_ops_across_epoch_bumps() {
     }
     let pool = RouterPool::connect(
         &coord.snapshot_cell(),
-        PoolConfig {
-            workers: 6,
-            pipeline_depth: 16,
-            verify_hits: true,
-            ..PoolConfig::default()
-        },
+        PoolConfig::new(6).pipeline_depth(16).verify_hits(true),
     )
     .unwrap();
     let ops = scenario.ops(seed);
@@ -209,12 +199,7 @@ fn pool_scales_across_workers_consistently() {
         }
         let pool = RouterPool::connect(
             &coord.snapshot_cell(),
-            PoolConfig {
-                workers,
-                pipeline_depth: 8,
-                verify_hits: true,
-                ..PoolConfig::default()
-            },
+            PoolConfig::new(workers).pipeline_depth(8).verify_hits(true),
         )
         .unwrap();
         let (sets, gets): (Vec<Op>, Vec<Op>) = scenario

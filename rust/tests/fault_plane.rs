@@ -77,13 +77,12 @@ fn quorum_writes_and_read_failover_with_an_undetected_dead_replica() {
         coord.spawn_node(i, 1.0).unwrap();
     }
     let pool = coord
-        .connect_pool(PoolConfig {
-            workers: 3,
-            pipeline_depth: 8,
-            verify_hits: true,
-            write_quorum: 2,
-            ..PoolConfig::default()
-        })
+        .connect_pool(
+            PoolConfig::new(3)
+                .pipeline_depth(8)
+                .verify_hits(true)
+                .write_quorum(2),
+        )
         .unwrap();
     // Crash a node and keep writing *before* anything detects it.
     coord.kill_node(1).unwrap();
@@ -128,12 +127,7 @@ fn pool_writes_survive_a_rebalance_via_the_writer_registry() {
         coord.spawn_node(i, 1.0).unwrap();
     }
     let pool = coord
-        .connect_pool(PoolConfig {
-            workers: 3,
-            pipeline_depth: 16,
-            verify_hits: true,
-            ..PoolConfig::default()
-        })
+        .connect_pool(PoolConfig::new(3).pipeline_depth(16).verify_hits(true))
         .unwrap();
     let sets: Vec<Op> = (0..400u64).map(|key| Op::Set { key, size: 8 }).collect();
     let res = pool.run(sets).unwrap();

@@ -322,12 +322,7 @@ fn prop_shadow_registry_replay_into_promoted_coordinator_is_lossless() {
         // the shared registry but (in the export-before flavor) never
         // drained by the crashed leader.
         let pool = leader
-            .connect_pool(PoolConfig {
-                workers: 2,
-                pipeline_depth: 8,
-                verify_hits: true,
-                ..PoolConfig::default()
-            })
+            .connect_pool(PoolConfig::new(2).pipeline_depth(8).verify_hits(true))
             .unwrap();
         let extra: Vec<u64> = (0..30 + rng.below(60)).map(|_| rng.next_u64()).collect();
         pool.run(extra.iter().map(|&key| Op::Set { key, size: 8 }).collect())

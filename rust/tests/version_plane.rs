@@ -39,12 +39,7 @@ fn race_round(seed: u64) {
         coord.set(k, &value_for(k, 8)).unwrap();
     }
     let pool = coord
-        .connect_pool(PoolConfig {
-            workers: 4,
-            pipeline_depth: 16,
-            verify_hits: true,
-            ..PoolConfig::default()
-        })
+        .connect_pool(PoolConfig::new(4).pipeline_depth(16).verify_hits(true))
         .unwrap();
     // The race: rewrite EVERY key (size 24 — a distinguishable payload)
     // through the pool while the join's copy → publish → delete runs.

@@ -20,6 +20,10 @@ Requirements are keyed by the artifact's "bench" field:
                      ops_per_sec, shards, lost; the shard_failover
                      result additionally needs time_to_new_epoch_ms
                      and stranded_writes
+  serve_async     -> top-level clients/drivers/pipeline_depth; one
+                     result per serve plane (text_threaded,
+                     binary_reactor) with ops, ops_per_sec, p50_us,
+                     p99_us, its own clients count, and a finite lost
 
 Only stdlib; runs on the bare CI python3.
 """
@@ -33,6 +37,7 @@ TOP_REQUIRED = {
     "failover": ["nodes", "read_quorum", "write_quorum"],
     "coord_failover": ["nodes", "read_quorum", "write_quorum", "lease_ttl_ms"],
     "shard": ["shards", "nodes_per_shard", "read_quorum", "write_quorum", "lease_ttl_ms"],
+    "serve_async": ["clients", "drivers", "keys", "read_ops", "pipeline_depth"],
 }
 
 RESULT_REQUIRED = {
@@ -46,6 +51,7 @@ RESULT_REQUIRED = {
         "lost",
     ],
     "shard": ["ops", "ops_per_sec", "shards", "lost"],
+    "serve_async": ["ops", "ops_per_sec", "p50_us", "p99_us", "clients", "lost"],
 }
 
 # Extra fields required on specific result scenarios.
