@@ -122,10 +122,122 @@ def good_serve_async():
     }
 
 
+def good_obs():
+    result_common = {
+        "ops": 50000,
+        "wall_s": 1.5,
+        "clients": 1000,
+        "lost": 0,
+    }
+    return {
+        "bench": "obs",
+        "clients": 1000,
+        "drivers": 16,
+        "keys": 1000,
+        "read_ops": 50000,
+        "value_size": 16,
+        "pipeline_depth": 16,
+        "seed": 165,
+        "overhead_ratio": 1.03,
+        "p99_baseline_us": 1400.0,
+        "p99_instrumented_us": 1460.0,
+        "op_samples_instrumented": 50000,
+        "results": [
+            dict(
+                result_common,
+                scenario="obs_baseline",
+                ops_per_sec=64000.0,
+                p50_us=180.0,
+                p99_us=1400.0,
+                op_samples=0,
+            ),
+            dict(
+                result_common,
+                scenario="obs_instrumented",
+                ops_per_sec=62000.0,
+                p50_us=185.0,
+                p99_us=1460.0,
+                op_samples=50000,
+            ),
+        ],
+        "events": {
+            "total": 23,
+            "suspect_seq": 7,
+            "dead_seq": 9,
+            "repair_seq": 12,
+        },
+    }
+
+
 def test_well_shaped_artifacts_pass(tmp_path):
     assert shape.check_file(_write(tmp_path, good_throughput())) == []
     assert shape.check_file(_write(tmp_path, good_shard())) == []
     assert shape.check_file(_write(tmp_path, good_serve_async())) == []
+    assert shape.check_file(_write(tmp_path, good_obs(), "BENCH_obs.json")) == []
+
+
+def test_obs_missing_ratio_or_samples_fails(tmp_path):
+    doc = good_obs()
+    del doc["overhead_ratio"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("overhead_ratio" in e for e in errors)
+    doc = good_obs()
+    del doc["results"][1]["op_samples"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("results[1]" in e and "op_samples" in e for e in errors)
+
+
+def test_obs_overhead_ceiling_is_gated(tmp_path):
+    doc = good_obs()
+    doc["overhead_ratio"] = 1.27
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("exceeds" in e and "ceiling" in e for e in errors)
+    # At the ceiling exactly is still acceptable.
+    doc["overhead_ratio"] = shape.OBS_MAX_OVERHEAD
+    assert shape.check_file(_write(tmp_path, doc)) == []
+
+
+def test_obs_events_must_be_causally_ordered(tmp_path):
+    doc = good_obs()
+    doc["events"]["dead_seq"] = doc["events"]["repair_seq"] + 1
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("causal order" in e for e in errors)
+    doc = good_obs()
+    del doc["events"]["repair_seq"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("events" in e and "repair_seq" in e for e in errors)
+    # The events object is optional: an overhead-only artifact passes.
+    doc = good_obs()
+    del doc["events"]
+    assert shape.check_file(_write(tmp_path, doc)) == []
+
+
+def test_bench_named_files_must_match_a_known_prefix(tmp_path):
+    # An artifact named BENCH_<something-unknown> is a CI wiring bug
+    # even if its contents are a valid bench of some kind.
+    errors = shape.check_file(
+        _write(tmp_path, good_throughput(), "BENCH_mystery.json")
+    )
+    assert any("matches no known BENCH_" in e for e in errors)
+    # Suffixed variants of a known family resolve to the family's rule.
+    assert (
+        shape.check_file(
+            _write(tmp_path, good_throughput(), "BENCH_throughput_w8.json")
+        )
+        == []
+    )
+
+
+def test_bench_named_files_must_contain_their_named_kind(tmp_path):
+    # BENCH_failover.json carrying a shard trajectory is mislabelled.
+    errors = shape.check_file(_write(tmp_path, good_shard(), "BENCH_failover.json"))
+    assert any("named for bench 'failover'" in e for e in errors)
+    # Longest prefix wins: BENCH_coord_failover.json must demand
+    # coord_failover, not resolve via the shorter failover family.
+    errors = shape.check_file(
+        _write(tmp_path, good_obs(), "BENCH_coord_failover.json")
+    )
+    assert any("named for bench 'coord_failover'" in e for e in errors)
 
 
 def test_serve_async_missing_latency_or_clients_fails(tmp_path):

@@ -1,52 +1,70 @@
-//! Operational metrics: cheap atomic counters + formatted snapshot.
+//! Operational metrics for the control plane, backed by the shared
+//! observability registry ([`crate::obs::Registry`]).
+//!
+//! Each field is an `Arc` handle into a `coord.*` counter family, so
+//! the call sites keep the plain `metrics.sets.inc()` shape while the
+//! same counters surface in the `METRICS` wire dump of every node
+//! sharing the coordinator's [`crate::obs::Obs`].
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::{Counter, Obs};
+use std::sync::Arc;
 
-#[derive(Debug, Default)]
-pub struct Counter(AtomicU64);
-
-impl Counter {
-    pub fn inc(&self) {
-        self.0.fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn add(&self, n: u64) {
-        self.0.fetch_add(n, Ordering::Relaxed);
-    }
-
-    pub fn get(&self) -> u64 {
-        self.0.load(Ordering::Relaxed)
-    }
-}
-
-/// Coordinator metrics snapshot.
-#[derive(Debug, Default)]
+/// Coordinator metrics: registry-backed counter handles.
+#[derive(Debug)]
 pub struct Metrics {
-    pub sets: Counter,
-    pub gets: Counter,
-    pub rebalances: Counter,
-    pub keys_moved: Counter,
+    pub sets: Arc<Counter>,
+    pub gets: Arc<Counter>,
+    pub rebalances: Arc<Counter>,
+    pub keys_moved: Arc<Counter>,
     /// Fault plane: suspect transitions observed by the detector.
-    pub suspects: Counter,
+    pub suspects: Arc<Counter>,
     /// Fault plane: members declared dead and removed from placement.
-    pub deaths: Counter,
+    pub deaths: Arc<Counter>,
     /// Fault plane: keys restored to full replication by repair.
-    pub keys_repaired: Counter,
+    pub keys_repaired: Arc<Counter>,
     /// Fault plane: bytes copied by repair.
-    pub repair_bytes: Counter,
+    pub repair_bytes: Arc<Counter>,
     /// Failover plane: control-state snapshots exported for
     /// replication to the lease authorities.
-    pub state_exports: Counter,
+    pub state_exports: Arc<Counter>,
     /// Failover plane: standby takeovers applied (`promote_from`).
-    pub promotions: Counter,
+    pub promotions: Arc<Counter>,
     /// Failover plane: late-writer keys converged by a quiesce-time /
     /// post-promotion reconcile drain.
-    pub stranded_reconciled: Counter,
+    pub stranded_reconciled: Arc<Counter>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
 }
 
 impl Metrics {
+    /// Metrics in a private registry (a coordinator built without an
+    /// explicit [`Obs`]; the handles keep the counters alive).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_obs(&Obs::new())
+    }
+
+    /// Register the `coord.*` families in `obs`'s registry — what
+    /// `Coordinator` does with its own handle, so the counters it
+    /// bumps are served by every node sharing that `Obs`.
+    pub fn with_obs(obs: &Obs) -> Self {
+        let r = &obs.registry;
+        Metrics {
+            sets: r.counter("coord.sets"),
+            gets: r.counter("coord.gets"),
+            rebalances: r.counter("coord.rebalances"),
+            keys_moved: r.counter("coord.keys_moved"),
+            suspects: r.counter("coord.suspects"),
+            deaths: r.counter("coord.deaths"),
+            keys_repaired: r.counter("coord.keys_repaired"),
+            repair_bytes: r.counter("coord.repair_bytes"),
+            state_exports: r.counter("coord.state_exports"),
+            promotions: r.counter("coord.promotions"),
+            stranded_reconciled: r.counter("coord.stranded_reconciled"),
+        }
     }
 
     pub fn render(&self) -> String {
@@ -80,5 +98,17 @@ mod tests {
         m.sets.add(4);
         assert_eq!(m.sets.get(), 5);
         assert!(m.render().contains("sets=5"));
+    }
+
+    #[test]
+    fn counters_surface_in_the_shared_registry_dump() {
+        let obs = Obs::new();
+        let m = Metrics::with_obs(&obs);
+        m.keys_repaired.add(7);
+        m.deaths.inc();
+        let dump = obs.registry.dump();
+        assert_eq!(dump.counter("coord.keys_repaired"), Some(7));
+        assert_eq!(dump.counter("coord.deaths"), Some(1));
+        assert_eq!(dump.counter("coord.sets"), Some(0), "registered even if idle");
     }
 }

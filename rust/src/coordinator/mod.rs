@@ -98,6 +98,7 @@ use crate::net::client::Conn;
 use crate::net::pool::{PoolConfig, RouterPool};
 use crate::net::protocol::VdelOutcome;
 use crate::net::server::NodeServer;
+use crate::obs::{EventKind, Obs};
 use crate::storage::{Version, WriteClock};
 use metrics::Metrics;
 use registry::KeyRegistry;
@@ -202,6 +203,11 @@ pub struct ControlHandles {
     pub registry: Arc<KeyRegistry>,
     pub repair_hints: Arc<KeyRegistry>,
     pub clock: WriteClock,
+    /// Observability handle: the event ring outlives the leader (the
+    /// crash story must be readable *through* the crash), so a
+    /// promoted standby adopts the ring while starting a fresh metric
+    /// registry ([`Obs::fork_registry`]).
+    pub obs: Obs,
 }
 
 /// The coordinator process state.
@@ -235,6 +241,10 @@ pub struct Coordinator {
     /// [`crate::storage::WriteClock`]): one total write order across the
     /// control plane and all data-plane workers.
     clock: WriteClock,
+    /// Observability handle: `coord.*` metric families plus the causal
+    /// event ring. Shared with every node this coordinator spawns, so
+    /// any node serves the cluster's `METRICS`/`EVENTS` over the wire.
+    obs: Obs,
 }
 
 impl Coordinator {
@@ -249,6 +259,15 @@ impl Coordinator {
     /// cross-shard hand-off could compare stamps from unrelated
     /// counters.
     pub fn with_clock(replicas: usize, clock: WriteClock) -> Self {
+        Self::with_obs(replicas, clock, Obs::new())
+    }
+
+    /// A coordinator reporting through a caller-supplied observability
+    /// handle: `coord.*` counters register in its registry and control
+    /// transitions land in its event ring. A [`shard::ShardMap`] builds
+    /// every shard coordinator this way, so one registry and one causal
+    /// ring cover the whole sharded plane.
+    pub fn with_obs(replicas: usize, clock: WriteClock, obs: Obs) -> Self {
         let replicas = replicas.max(1);
         Self {
             placer: AsuraPlacer::new(),
@@ -258,13 +277,14 @@ impl Coordinator {
             term: 0,
             replicas,
             cell: SnapshotCell::new(PlacerSnapshot::empty(replicas)),
-            metrics: Metrics::new(),
+            metrics: Metrics::with_obs(&obs),
             keys: HashSet::new(),
             suspects: BTreeSet::new(),
             registry: Arc::new(KeyRegistry::new()),
             repair_hints: Arc::new(KeyRegistry::new()),
             repair: RepairQueue::new(),
             clock,
+            obs,
         }
     }
 
@@ -277,12 +297,20 @@ impl Coordinator {
         self.term
     }
 
+    /// The observability handle this coordinator reports through —
+    /// shared with every node it spawns ([`Self::spawn_node`]), so any
+    /// of them serves the cluster's `METRICS`/`EVENTS` over the wire.
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
     /// Adopt a won (or bumped) leadership term and republish the
     /// current epoch under it, so observers can tell a hand-off from a
     /// rebalance. Terms are monotone.
     pub fn set_term(&mut self, term: u64) {
         assert!(term >= self.term, "term regression: {} -> {term}", self.term);
         self.term = term;
+        self.obs.event(EventKind::LeaseGrant, term, 0);
         self.publish_snapshot();
     }
 
@@ -324,6 +352,7 @@ impl Coordinator {
             suspects,
             shards: Vec::new(),
         });
+        self.obs.event(EventKind::EpochPublish, self.epoch, self.term);
     }
 
     /// Registry pool writers report acked keys into; prefer
@@ -340,6 +369,7 @@ impl Coordinator {
             registry: Arc::clone(&self.registry),
             repair_hints: Arc::clone(&self.repair_hints),
             clock: self.clock.clone(),
+            obs: self.obs.clone(),
         }
     }
 
@@ -482,6 +512,10 @@ impl Coordinator {
             repair.enqueue(affected);
             deaths += 1;
         }
+        // Fresh metric registry (a promotion is a new process in the
+        // model), same event ring: the crash story stays readable
+        // through the hand-off.
+        let obs = handles.obs.fork_registry();
         let coord = Coordinator {
             placer,
             members,
@@ -490,16 +524,18 @@ impl Coordinator {
             term: new_term,
             replicas,
             cell: handles.cell,
-            metrics: Metrics::new(),
+            metrics: Metrics::with_obs(&obs),
             keys,
             suspects: BTreeSet::new(),
             registry: handles.registry,
             repair_hints: handles.repair_hints,
             repair,
             clock: handles.clock,
+            obs,
         };
         coord.metrics.promotions.inc();
         coord.metrics.deaths.add(deaths);
+        coord.obs.event(EventKind::Promotion, new_term, coord.epoch);
         coord.publish_snapshot();
         Ok(coord)
     }
@@ -513,7 +549,8 @@ impl Coordinator {
             &self.cell,
             cfg.registry(Arc::clone(&self.registry))
                 .repair_hints(Arc::clone(&self.repair_hints))
-                .clock(self.clock.clone()),
+                .clock(self.clock.clone())
+                .obs(self.obs.clone()),
         )
     }
 
@@ -543,9 +580,11 @@ impl Coordinator {
         self.keys.len()
     }
 
-    /// Spawn an in-process node server and join it to the cluster.
+    /// Spawn an in-process node server and join it to the cluster. The
+    /// node shares this coordinator's [`Obs`], so its `METRICS` /
+    /// `EVENTS` wire ops serve the cluster-wide registry and ring.
     pub fn spawn_node(&mut self, id: NodeId, capacity: f64) -> anyhow::Result<MigrationReport> {
-        let server = NodeServer::spawn()?;
+        let server = NodeServer::spawn_with_obs(("127.0.0.1", 0), self.obs.clone())?;
         let addr = server.addr();
         self.join_node(id, capacity, addr, Some(server))
     }
@@ -943,6 +982,7 @@ impl Coordinator {
     pub fn mark_suspect(&mut self, id: NodeId) {
         if self.members.contains_key(&id) && self.suspects.insert(id) {
             self.metrics.suspects.inc();
+            self.obs.event(EventKind::Suspect, u64::from(id), self.epoch);
             self.publish_snapshot();
         }
     }
@@ -950,6 +990,7 @@ impl Coordinator {
     /// Detector verdict "recovered": lift the read steering.
     pub fn clear_suspect(&mut self, id: NodeId) {
         if self.suspects.remove(&id) {
+            self.obs.event(EventKind::SuspectClear, u64::from(id), self.epoch);
             self.publish_snapshot();
         }
     }
@@ -977,6 +1018,7 @@ impl Coordinator {
         self.placer.remove_node(id);
         self.suspects.remove(&id);
         self.epoch += 1;
+        self.obs.event(EventKind::Dead, u64::from(id), self.epoch);
         self.publish_snapshot();
         if let Some(mut member) = self.members.remove(&id) {
             if let Some(ref mut s) = member.server {
@@ -1239,6 +1281,10 @@ impl Coordinator {
         }
         self.metrics.keys_repaired.add(tick.repaired as u64);
         self.metrics.repair_bytes.add(tick.bytes);
+        if tick.repaired > 0 {
+            self.obs
+                .event(EventKind::RepairBatch, tick.repaired as u64, self.epoch);
+        }
         Ok(tick)
     }
 
@@ -1631,6 +1677,43 @@ mod tests {
         // Unknown ids are ignored.
         coord.mark_suspect(99);
         assert!(!coord.snapshot().is_suspect(99));
+    }
+
+    #[test]
+    fn fault_cycle_lands_in_the_causal_event_ring() {
+        let mut coord = Coordinator::new(2);
+        for i in 0..4 {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        for k in 0..100u64 {
+            coord.set(k, b"v").unwrap();
+        }
+        coord.kill_node(1).unwrap();
+        coord.mark_suspect(1);
+        coord.mark_dead(1).unwrap();
+        while coord.repair_pending() > 0 {
+            coord.repair_step(64).unwrap();
+        }
+        let (events, _) = coord.obs().events.read_since(0, 1024);
+        assert!(
+            events.windows(2).all(|w| w[1].seq > w[0].seq),
+            "sequence numbers must be monotone"
+        );
+        let pos = |pred: &dyn Fn(&crate::obs::Event) -> bool| {
+            events.iter().position(|e| pred(e)).expect("event recorded")
+        };
+        let suspect = pos(&|e| e.kind == EventKind::Suspect && e.a == 1);
+        let dead = pos(&|e| e.kind == EventKind::Dead && e.a == 1);
+        let repair = pos(&|e| e.kind == EventKind::RepairBatch);
+        assert!(
+            suspect < dead && dead < repair,
+            "causal order suspect->dead->repair violated: {events:?}"
+        );
+        // The death's epoch bump shows up too, after the death event.
+        let epoch_after = events[dead].b;
+        assert!(events[dead + 1..]
+            .iter()
+            .any(|e| e.kind == EventKind::EpochPublish && e.a == epoch_after));
     }
 
     #[test]

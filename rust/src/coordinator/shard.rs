@@ -77,6 +77,7 @@ use crate::cluster::MigrationReport;
 use crate::fault::health::{HealthConfig, HealthEvent, HealthMonitor};
 use crate::fault::repair::{RepairTick, ReplicationAudit};
 use crate::net::pool::{PoolConfig, RouterPool};
+use crate::obs::{EventKind, Obs};
 use crate::storage::{Version, WriteClock};
 use std::net::SocketAddr;
 use std::sync::Arc;
@@ -145,6 +146,12 @@ pub struct ShardMap {
     /// per-shard slices — so every subsequent
     /// [`Self::reconcile_writes`] retries them across *all* shards.
     unresolved: std::collections::HashSet<DatumId>,
+    /// One observability plane for the whole map: every shard
+    /// coordinator (and every node it spawns) shares this registry and
+    /// event ring, so split/merge/fault events from all shards land in
+    /// one causal sequence and `METRICS` from any node shows the
+    /// map-wide counters.
+    obs: Obs,
 }
 
 impl ShardMap {
@@ -154,7 +161,8 @@ impl ShardMap {
     /// one composite snapshot.
     pub fn new(replicas: usize) -> ShardMap {
         let clock = WriteClock::new();
-        let first = Coordinator::with_clock(replicas, clock.clone());
+        let obs = Obs::new();
+        let first = Coordinator::with_obs(replicas, clock.clone(), obs.clone());
         let handles = first.handles();
         let mut map = ShardMap {
             shards: vec![Shard {
@@ -169,6 +177,7 @@ impl ShardMap {
             clock,
             epoch_floor: 0,
             unresolved: std::collections::HashSet::new(),
+            obs,
         };
         map.republish();
         map
@@ -234,6 +243,12 @@ impl ShardMap {
         self.composite.load()
     }
 
+    /// The map-wide observability plane (shared by every shard
+    /// coordinator and every node they spawn).
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
     /// The shared pool-facing writer registry (acked SET keys land
     /// here until [`Self::dispatch_writes`] routes them to owners).
     pub fn key_registry(&self) -> Arc<KeyRegistry> {
@@ -248,7 +263,8 @@ impl ShardMap {
             &self.composite,
             cfg.registry(Arc::clone(&self.registry))
                 .repair_hints(Arc::clone(&self.repair_hints))
-                .clock(self.clock.clone()),
+                .clock(self.clock.clone())
+                .obs(self.obs.clone()),
         )
     }
 
@@ -550,7 +566,7 @@ impl ShardMap {
         // source shard's key set is current before the plan is taken.
         self.dispatch_writes();
         let hi = self.shards.get(src_idx + 1).map(|s| s.start);
-        let mut dst = Coordinator::with_clock(self.replicas, self.clock.clone());
+        let mut dst = Coordinator::with_obs(self.replicas, self.clock.clone(), self.obs.clone());
         join(&mut dst)?;
         anyhow::ensure!(
             dst.placer().node_count() >= 1,
@@ -575,6 +591,7 @@ impl ShardMap {
                 coord: Some(dst),
             },
         );
+        self.obs.event(EventKind::ShardSplit, src_idx as u64, at);
         self.republish();
         // Delete phase: drop the source-side copies behind the guard.
         {
@@ -630,6 +647,7 @@ impl ShardMap {
         // into the floor so the composite epoch stays monotone.
         let mut retired = self.shards.remove(idx + 1);
         self.epoch_floor += retired.handles.cell.load().epoch;
+        self.obs.event(EventKind::ShardMerge, idx as u64, idx as u64 + 1);
         self.republish();
         // Delete phase against the retired coordinator we still own.
         {
@@ -1056,6 +1074,17 @@ mod tests {
         assert_eq!(map.ranges(), vec![(0, None)]);
         assert_eq!(map.verify_all_readable().unwrap(), 300);
         assert!(map.audit_all().unwrap().is_full());
+        // Both hand-offs landed in the map-wide causal ring, in order.
+        let (events, _) = map.obs().events.read_since(0, 1024);
+        let split = events
+            .iter()
+            .position(|e| e.kind == EventKind::ShardSplit && e.b == at)
+            .expect("split recorded");
+        let merge = events
+            .iter()
+            .position(|e| e.kind == EventKind::ShardMerge && e.a == 0)
+            .expect("merge recorded");
+        assert!(split < merge, "split must precede merge in the ring");
     }
 
     #[test]

@@ -28,8 +28,10 @@
 use crate::algo::NodeId;
 use crate::coordinator::election;
 use crate::net::client::Conn;
+use crate::obs::{Counter, EventKind, Obs};
 use std::collections::HashMap;
 use std::net::SocketAddr;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Detection thresholds and probe budget.
@@ -104,17 +106,32 @@ pub struct HealthMonitor {
     lease_strikes: HashMap<u64, u32>,
     /// Total probes attempted (including injected failures).
     pub probes_sent: u64,
+    /// Observability handle: lease-loss verdicts land in the causal
+    /// event ring, probe volume in the `health.probes` counter.
+    obs: Obs,
+    probes: Arc<Counter>,
 }
 
 impl HealthMonitor {
+    /// A monitor with a private (unshared) observability plane.
     pub fn new(cfg: HealthConfig) -> Self {
+        Self::with_obs(cfg, Obs::disabled())
+    }
+
+    /// A monitor reporting through the cluster's shared [`Obs`]: its
+    /// `LeaseLoss` verdicts join the same causal ring the coordinator
+    /// writes suspect/dead transitions into.
+    pub fn with_obs(cfg: HealthConfig, obs: Obs) -> Self {
         assert!(cfg.dead_after >= cfg.suspect_after.max(1));
+        let probes = obs.registry.counter("health.probes");
         Self {
             cfg,
             nodes: HashMap::new(),
             injected: HashMap::new(),
             lease_strikes: HashMap::new(),
             probes_sent: 0,
+            obs,
+            probes,
         }
     }
 
@@ -154,6 +171,7 @@ impl HealthMonitor {
             })
             .collect();
         self.probes_sent += members.len() as u64;
+        self.probes.add(members.len() as u64);
         let timeout = self.cfg.timeout;
         let mut outcomes: Vec<(NodeId, bool)> = Vec::with_capacity(members.len());
         std::thread::scope(|s| {
@@ -215,6 +233,7 @@ impl HealthMonitor {
     /// monitor can shadow every shard leader at once.
     pub fn lease_tick_shard(&mut self, shard: u64, authorities: &[SocketAddr]) -> LeaseVerdict {
         self.probes_sent += authorities.len() as u64;
+        self.probes.add(authorities.len() as u64);
         // Same probe fan-out and the same liveness fold the bidding
         // standby uses — the watcher's verdict and the bid gate can
         // never judge a reply set differently.
@@ -227,6 +246,11 @@ impl HealthMonitor {
             *strikes = 0;
         } else if answered >= majority {
             *strikes += 1;
+            if *strikes == self.cfg.dead_after {
+                // Transition round only: one causal event per loss, not
+                // one per round spent lost.
+                self.obs.event(EventKind::LeaseLoss, term, shard);
+            }
         }
         LeaseVerdict {
             answered,
@@ -289,7 +313,8 @@ mod tests {
         use crate::coordinator::election::lease_request;
         let servers: Vec<NodeServer> = (0..3).map(|_| NodeServer::spawn().unwrap()).collect();
         let addrs: Vec<SocketAddr> = servers.iter().map(|s| s.addr()).collect();
-        let mut mon = HealthMonitor::new(quick_cfg());
+        let obs = Obs::new();
+        let mut mon = HealthMonitor::with_obs(quick_cfg(), obs.clone());
         // No lease ever granted: vacant rounds strike toward loss.
         for round in 1..=3u32 {
             let v = mon.lease_tick(&addrs);
@@ -312,6 +337,16 @@ mod tests {
         assert!(!mon.lease_tick(&addrs).leader_lost, "one vacant round is grace");
         mon.lease_tick(&addrs);
         assert!(mon.lease_tick(&addrs).leader_lost, "third vacant round is loss");
+        // Each loss *transition* recorded exactly once in the shared
+        // ring, and probe volume surfaced through the registry.
+        let (events, _) = obs.events.read_since(0, 64);
+        let losses: Vec<_> = events.iter().filter(|e| e.kind == EventKind::LeaseLoss).collect();
+        assert_eq!(losses.len(), 2, "two loss transitions: {events:?}");
+        assert!(losses.iter().all(|e| e.b == 0), "unsharded lease is shard key 0");
+        assert_eq!(
+            obs.registry.dump().counter("health.probes"),
+            Some(mon.probes_sent)
+        );
     }
 
     #[test]

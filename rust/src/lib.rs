@@ -11,7 +11,10 @@
 //!   ([`storage`]: `ShardedStore`, highest-version-wins writes), the
 //!   coordinator ([`coordinator`]), a
 //!   fault-tolerance plane ([`fault`]: quorum I/O, heartbeat failure
-//!   detection, background repair), a coordinator-failover plane
+//!   detection, background repair), a cluster-wide observability plane
+//!   ([`obs`]: lock-free latency histograms, a named metric registry,
+//!   and a causal event ring exposed over the wire), a
+//!   coordinator-failover plane
 //!   ([`coordinator::election`] leased leadership +
 //!   [`coordinator::replicate`] control-state replication, so the
 //!   coordinator role survives its own process dying), the paper's
@@ -33,6 +36,7 @@ pub mod fault;
 pub mod fixed;
 pub mod loadgen;
 pub mod net;
+pub mod obs;
 pub mod prng;
 pub mod runtime;
 pub mod stats;

@@ -21,6 +21,7 @@ use crate::net::pool::{BatchResult, PoolConfig, RouterPool};
 use crate::net::protocol::{Request, Response};
 use crate::net::router::Router;
 use crate::net::server::NodeServer;
+use crate::obs::{EventKind, Obs};
 use crate::prng::SplitMix64;
 use crate::stats::Summary;
 use crate::util::json::Json;
@@ -2084,6 +2085,367 @@ pub fn write_shard_json(
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Observability-overhead scenario: the identical binary storm with the
+// obs plane enabled vs disabled, plus the kill-mid-storm events smoke.
+// ---------------------------------------------------------------------
+
+/// Configuration for `asura bench-obs`.
+#[derive(Clone, Debug)]
+pub struct ObsBenchConfig {
+    /// Concurrent binary connections per plane.
+    pub clients: usize,
+    pub drivers: usize,
+    /// Preloaded keys (GETs draw from these, so every op is a hit).
+    pub keys: u64,
+    /// GETs per measured storm.
+    pub read_ops: u64,
+    pub value_size: u32,
+    pub pipeline_depth: usize,
+    pub seed: u64,
+    /// Acceptance ceiling on the baseline/instrumented throughput
+    /// ratio (the instrumented plane may cost at most this much).
+    pub max_overhead_ratio: f64,
+    /// Also run the kill-mid-storm causal-event smoke (`--events`).
+    pub events_smoke: bool,
+    /// Where to write `BENCH_obs.json` (`None` = don't).
+    pub out_json: Option<String>,
+}
+
+impl Default for ObsBenchConfig {
+    fn default() -> Self {
+        Self {
+            clients: 1_000,
+            drivers: 16,
+            keys: 1_000,
+            read_ops: 50_000,
+            value_size: 16,
+            pipeline_depth: 16,
+            seed: 0xA5,
+            max_overhead_ratio: 1.10,
+            events_smoke: false,
+            out_json: Some("BENCH_obs.json".to_string()),
+        }
+    }
+}
+
+/// One obs plane's storm result.
+#[derive(Clone, Debug)]
+pub struct ObsReport {
+    /// `obs_baseline` (plane disabled) or `obs_instrumented`.
+    pub scenario: String,
+    pub clients: usize,
+    pub ops: u64,
+    pub wall_s: f64,
+    pub ops_per_sec: f64,
+    /// Client-observed per-batch round-trip percentiles (µs).
+    pub p50_us: f64,
+    pub p99_us: f64,
+    /// GETs that missed a preloaded key (must be 0).
+    pub lost: u64,
+    /// Server-side `serve.binary.op_ns` samples pulled over `METRICS`
+    /// after the storm — 0 on the baseline (a disabled plane must not
+    /// record), >= the op budget on the instrumented plane.
+    pub op_samples: u64,
+}
+
+impl ObsReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:>16}: {:>8} ops @ {} conns in {:.2}s = {:>9.0} ops/s  \
+             (batch p50 {:.0}µs p99 {:.0}µs, server samples {})",
+            self.scenario,
+            self.ops,
+            self.clients,
+            self.wall_s,
+            self.ops_per_sec,
+            self.p50_us,
+            self.p99_us,
+            self.op_samples
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("clients", Json::Num(self.clients as f64)),
+            ("ops", Json::Num(self.ops as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("ops_per_sec", Json::Num(self.ops_per_sec)),
+            ("p50_us", Json::Num(self.p50_us)),
+            ("p99_us", Json::Num(self.p99_us)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("op_samples", Json::Num(self.op_samples as f64)),
+        ])
+    }
+}
+
+/// What the kill-mid-storm smoke reconstructed, from `EVENTS` cursor
+/// pages read over a node connection — never the in-process ring.
+#[derive(Clone, Copy, Debug)]
+pub struct ObsEventsReport {
+    pub events_total: u64,
+    pub suspect_seq: u64,
+    pub dead_seq: u64,
+    pub repair_seq: u64,
+}
+
+/// One plane: a node spawned with `obs`, preloaded, then the binary
+/// storm — run twice, measuring the second pass so both planes compare
+/// steady states (thread ramp and page-in land in the discarded pass).
+fn run_obs_plane(cfg: &ObsBenchConfig, instrumented: bool) -> anyhow::Result<ObsReport> {
+    let obs = if instrumented { Obs::new() } else { Obs::disabled() };
+    let server = NodeServer::spawn_with_obs(("127.0.0.1", 0), obs)?;
+    let addr = server.addr();
+    {
+        let mut seed_conn = Conn::connect_binary(addr)?;
+        for key in 0..cfg.keys {
+            let resp = seed_conn.call(&Request::Set {
+                key,
+                value: value_for(key, cfg.value_size),
+            })?;
+            anyhow::ensure!(matches!(resp, Response::Stored), "preload SET refused");
+        }
+    }
+    let serve_cfg = ServeAsyncConfig {
+        clients: cfg.clients,
+        drivers: cfg.drivers,
+        keys: cfg.keys,
+        read_ops: cfg.read_ops,
+        value_size: cfg.value_size,
+        pipeline_depth: cfg.pipeline_depth,
+        seed: cfg.seed,
+        out_json: None,
+    };
+    run_serve_plane(addr, &serve_cfg, true)?;
+    let plane = run_serve_plane(addr, &serve_cfg, true)?;
+    anyhow::ensure!(plane.lost == 0, "{} reads missed preloaded keys", plane.lost);
+    let dump = Conn::connect_binary(addr)?.metrics()?;
+    let op_samples = dump.histo("serve.binary.op_ns").map_or(0, |h| h.count);
+    if instrumented {
+        anyhow::ensure!(
+            op_samples >= cfg.read_ops,
+            "instrumented plane recorded only {op_samples} op samples"
+        );
+    } else {
+        anyhow::ensure!(op_samples == 0, "disabled plane must not record op timings");
+    }
+    Ok(ObsReport {
+        scenario: if instrumented { "obs_instrumented" } else { "obs_baseline" }.to_string(),
+        clients: cfg.clients,
+        ops: plane.ops,
+        wall_s: plane.wall_s,
+        ops_per_sec: plane.ops_per_sec,
+        p50_us: plane.p50_us,
+        p99_us: plane.p99_us,
+        lost: plane.lost,
+        op_samples,
+    })
+}
+
+/// Kill-a-holder-mid-storm, then reconstruct the fault story from
+/// `EVENTS` cursor pages alone: suspect → dead → repair must appear in
+/// the ring in causal order, read over the wire from a surviving node.
+pub fn run_obs_events_smoke(cfg: &ObsBenchConfig) -> anyhow::Result<ObsEventsReport> {
+    let nodes = 5u32;
+    let mut coord = Coordinator::new(2);
+    for i in 0..nodes {
+        coord.spawn_node(i, 1.0)?;
+    }
+    let keys = cfg.keys.clamp(1, 500);
+    for key in 0..keys {
+        coord.set(key, &value_for(key, cfg.value_size))?;
+    }
+    let pool = coord.connect_pool(
+        // registry + hints + clock wired by connect_pool
+        PoolConfig::new(4)
+            .pipeline_depth(cfg.pipeline_depth)
+            .verify_hits(true),
+    )?;
+    let scenario = Scenario::Failover {
+        keys,
+        read_ops: cfg.read_ops.clamp(1, 4_000),
+        write_every: 8,
+    };
+    let stop = Arc::new(AtomicBool::new(false));
+    let driver = drive_until(pool, scenario.ops(cfg.seed), Arc::clone(&stop));
+
+    // Kill a holder under the storm; detect, declare, repair — every
+    // stage journals into the shared ring as it happens.
+    std::thread::sleep(Duration::from_millis(20));
+    let victim: NodeId = nodes / 2;
+    coord.kill_node(victim)?;
+    let mut monitor = HealthMonitor::with_obs(
+        HealthConfig {
+            suspect_after: 1,
+            dead_after: 3,
+            timeout: Duration::from_millis(500),
+        },
+        coord.obs().clone(),
+    );
+    let t0 = Instant::now();
+    loop {
+        let events = monitor.tick(&coord.node_addrs(), coord.epoch());
+        let died = events.iter().any(|e| matches!(e, HealthEvent::Died(_)));
+        coord.apply_health_events(&events)?;
+        if died {
+            break;
+        }
+        anyhow::ensure!(t0.elapsed() < Duration::from_secs(30), "death never detected");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    while coord.repair_pending() > 0 {
+        anyhow::ensure!(t0.elapsed() < Duration::from_secs(60), "repair did not converge");
+        coord.repair_step(128)?;
+    }
+    stop.store(true, Ordering::Release);
+    join_driver(driver)?;
+
+    // Walk the ring over the wire, cursor page by cursor page.
+    let snap = coord.snapshot();
+    let addr = snap
+        .addrs
+        .iter()
+        .find(|&&(id, _)| id != victim)
+        .map(|&(_, a)| a)
+        .ok_or_else(|| anyhow::anyhow!("no surviving node to read EVENTS from"))?;
+    let mut conn = Conn::connect_binary(addr)?;
+    let mut cursor = 0u64;
+    let mut events = Vec::new();
+    loop {
+        let (page, next) = conn.events(cursor)?;
+        if page.is_empty() {
+            break;
+        }
+        events.extend(page);
+        cursor = next;
+    }
+    let victim = u64::from(victim);
+    let suspect_seq = events
+        .iter()
+        .find(|e| e.kind == EventKind::Suspect && e.a == victim)
+        .map(|e| e.seq)
+        .ok_or_else(|| anyhow::anyhow!("suspect transition never recorded"))?;
+    let dead_seq = events
+        .iter()
+        .find(|e| e.kind == EventKind::Dead && e.a == victim)
+        .map(|e| e.seq)
+        .ok_or_else(|| anyhow::anyhow!("death verdict never recorded"))?;
+    let repair_seq = events
+        .iter()
+        .find(|e| e.kind == EventKind::RepairBatch && e.seq > dead_seq)
+        .map(|e| e.seq)
+        .ok_or_else(|| anyhow::anyhow!("no repair batch recorded after the death"))?;
+    anyhow::ensure!(
+        suspect_seq < dead_seq && dead_seq < repair_seq,
+        "causal order violated: suspect #{suspect_seq}, dead #{dead_seq}, repair #{repair_seq}"
+    );
+    println!(
+        "events smoke: {} events over the wire, suspect #{suspect_seq} -> dead #{dead_seq} \
+         -> repair #{repair_seq}",
+        events.len()
+    );
+    Ok(ObsEventsReport {
+        events_total: events.len() as u64,
+        suspect_seq,
+        dead_seq,
+        repair_seq,
+    })
+}
+
+/// Baseline/instrumented throughput ratio (> 1 = instrumentation cost).
+pub fn obs_overhead_ratio(baseline: &ObsReport, instrumented: &ObsReport) -> Option<f64> {
+    if instrumented.ops_per_sec > 0.0 {
+        Some(baseline.ops_per_sec / instrumented.ops_per_sec)
+    } else {
+        None
+    }
+}
+
+/// The `bench-obs` suite: the identical binary storm against a node
+/// with the obs plane disabled, then enabled; gate the throughput
+/// ratio, optionally run the events smoke, and emit `BENCH_obs.json`.
+pub fn run_obs_suite(cfg: &ObsBenchConfig) -> anyhow::Result<Vec<ObsReport>> {
+    anyhow::ensure!(cfg.clients >= 1, "need at least one client");
+    anyhow::ensure!(cfg.drivers >= 1, "need at least one driver");
+    anyhow::ensure!(cfg.keys >= 1, "need at least one key");
+    anyhow::ensure!(cfg.pipeline_depth >= 1, "pipeline depth must be >= 1");
+    let baseline = run_obs_plane(cfg, false)?;
+    println!("{}", baseline.line());
+    let instrumented = run_obs_plane(cfg, true)?;
+    println!("{}", instrumented.line());
+    let ratio = obs_overhead_ratio(&baseline, &instrumented)
+        .ok_or_else(|| anyhow::anyhow!("instrumented plane measured zero throughput"))?;
+    println!(
+        "obs overhead: {ratio:.3}x baseline/instrumented ops/s (ceiling {:.2}x)",
+        cfg.max_overhead_ratio
+    );
+    anyhow::ensure!(
+        ratio <= cfg.max_overhead_ratio,
+        "observability overhead {ratio:.3}x exceeds the {:.2}x ceiling",
+        cfg.max_overhead_ratio
+    );
+    let events = if cfg.events_smoke {
+        Some(run_obs_events_smoke(cfg)?)
+    } else {
+        None
+    };
+    let reports = vec![baseline, instrumented];
+    if let Some(path) = &cfg.out_json {
+        write_obs_json(path, cfg, &reports, events.as_ref())?;
+        println!("wrote {path}");
+    }
+    Ok(reports)
+}
+
+/// Serialize the obs suite to its perf-trajectory JSON file.
+pub fn write_obs_json(
+    path: &str,
+    cfg: &ObsBenchConfig,
+    reports: &[ObsReport],
+    events: Option<&ObsEventsReport>,
+) -> anyhow::Result<()> {
+    let baseline = reports
+        .iter()
+        .find(|r| r.scenario == "obs_baseline")
+        .ok_or_else(|| anyhow::anyhow!("no baseline report"))?;
+    let instrumented = reports
+        .iter()
+        .find(|r| r.scenario == "obs_instrumented")
+        .ok_or_else(|| anyhow::anyhow!("no instrumented report"))?;
+    let ratio = obs_overhead_ratio(baseline, instrumented)
+        .ok_or_else(|| anyhow::anyhow!("instrumented plane measured zero throughput"))?;
+    let results: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+    let mut fields = vec![
+        ("bench", Json::Str("obs".to_string())),
+        ("clients", Json::Num(cfg.clients as f64)),
+        ("drivers", Json::Num(cfg.drivers as f64)),
+        ("keys", Json::Num(cfg.keys as f64)),
+        ("read_ops", Json::Num(cfg.read_ops as f64)),
+        ("value_size", Json::Num(cfg.value_size as f64)),
+        ("pipeline_depth", Json::Num(cfg.pipeline_depth as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("overhead_ratio", Json::Num(ratio)),
+        ("p99_baseline_us", Json::Num(baseline.p99_us)),
+        ("p99_instrumented_us", Json::Num(instrumented.p99_us)),
+        ("op_samples_instrumented", Json::Num(instrumented.op_samples as f64)),
+        ("results", Json::Arr(results)),
+    ];
+    if let Some(ev) = events {
+        fields.push((
+            "events",
+            Json::obj(vec![
+                ("total", Json::Num(ev.events_total as f64)),
+                ("suspect_seq", Json::Num(ev.suspect_seq as f64)),
+                ("dead_seq", Json::Num(ev.dead_seq as f64)),
+                ("repair_seq", Json::Num(ev.repair_seq as f64)),
+            ]),
+        ));
+    }
+    std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2114,5 +2476,39 @@ mod tests {
         let churn = &v.get("results").unwrap().as_arr().unwrap()[3];
         assert_eq!(churn.get("scenario").unwrap().as_str(), Some("churn"));
         assert_eq!(churn.get("lost").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn obs_suite_runs_small_and_emits_json() {
+        let dir = std::env::temp_dir().join("asura_loadgen_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_obs.json");
+        let cfg = ObsBenchConfig {
+            clients: 40,
+            drivers: 4,
+            keys: 120,
+            read_ops: 800,
+            pipeline_depth: 8,
+            // A debug-build unit test is not the overhead measurement;
+            // the release-mode CI run gates the real ceiling.
+            max_overhead_ratio: 10.0,
+            events_smoke: true,
+            out_json: Some(path.to_str().unwrap().to_string()),
+            ..Default::default()
+        };
+        let reports = run_obs_suite(&cfg).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].op_samples, 0, "baseline must not record");
+        assert!(reports[1].op_samples >= cfg.read_ops);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("obs"));
+        assert!(v.get("overhead_ratio").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.get("p99_instrumented_us").is_some());
+        assert!(v.get("p99_baseline_us").is_some());
+        let ev = v.get("events").expect("events smoke ran");
+        let dead = ev.get("dead_seq").unwrap().as_u64().unwrap();
+        assert!(ev.get("suspect_seq").unwrap().as_u64().unwrap() < dead);
+        assert!(dead < ev.get("repair_seq").unwrap().as_u64().unwrap());
     }
 }

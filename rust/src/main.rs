@@ -40,6 +40,12 @@
 //!               [--lease-ttl-ms T --tick-ms T]      + shard-leader kill
 //!               [--dead-after N --repair-batch B]   under churn (shadow
 //!               [--seed S --out BENCH_shard.json]   standby promotes)
+//! asura bench-obs [--clients C --drivers D]         observability overhead:
+//!               [--keys K --reads R --depth D]      the identical binary
+//!               [--max-overhead RATIO --events]     storm with the obs plane
+//!               [--seed S --out BENCH_obs.json]     off vs on; --events adds
+//!                                                   the kill-mid-storm causal
+//!                                                   EVENTS smoke
 //! asura node    --port P                            standalone storage node
 //! asura place   --id X --nodes N [--algo asura|chash|straw]
 //! asura info    [--artifacts DIR]                   PJRT + artifact info
@@ -64,6 +70,7 @@ fn main() {
         "bench-failover" => run_bench_failover(&args),
         "bench-coord-failover" => run_bench_coord_failover(&args),
         "bench-shard" => run_bench_shard(&args),
+        "bench-obs" => run_bench_obs(&args),
         "node" => run_node(&args),
         "place" => run_place(&args),
         "info" => run_info(&args),
@@ -507,6 +514,43 @@ fn run_bench_shard(args: &Args) -> anyhow::Result<()> {
     );
     let reports = asura::loadgen::run_shard_suite(&cfg)?;
     anyhow::ensure!(!reports.is_empty(), "no scenarios ran");
+    Ok(())
+}
+
+/// Observability-overhead harness: the identical binary storm against a
+/// node with the obs plane disabled vs enabled, gating the throughput
+/// ratio and emitting `BENCH_obs.json`; `--events` adds the
+/// kill-mid-storm causal-event smoke.
+fn run_bench_obs(args: &Args) -> anyhow::Result<()> {
+    let default = asura::loadgen::ObsBenchConfig::default();
+    let cfg = asura::loadgen::ObsBenchConfig {
+        clients: args.get_u64("clients", default.clients as u64) as usize,
+        drivers: args.get_u64("drivers", default.drivers as u64) as usize,
+        keys: args.get_u64("keys", default.keys),
+        read_ops: args.get_u64("reads", default.read_ops),
+        value_size: args.get_u64("value-size", default.value_size as u64) as u32,
+        pipeline_depth: args.get_u64("depth", default.pipeline_depth as u64) as usize,
+        seed: args.get_u64("seed", default.seed),
+        max_overhead_ratio: args.get_f64("max-overhead", default.max_overhead_ratio),
+        events_smoke: args.has("events"),
+        out_json: Some(
+            args.get_or("out", default.out_json.as_deref().unwrap_or("BENCH_obs.json"))
+                .to_string(),
+        ),
+    };
+    println!(
+        "bench-obs: {} conns over {} drivers, {} keys, {} reads, depth {}, \
+         ceiling {:.2}x{}",
+        cfg.clients,
+        cfg.drivers,
+        cfg.keys,
+        cfg.read_ops,
+        cfg.pipeline_depth,
+        cfg.max_overhead_ratio,
+        if cfg.events_smoke { ", events smoke" } else { "" }
+    );
+    let reports = asura::loadgen::run_obs_suite(&cfg)?;
+    anyhow::ensure!(reports.len() == 2, "both obs planes must run");
     Ok(())
 }
 

@@ -11,6 +11,7 @@ use super::frame;
 use super::protocol::{
     read_response, write_request, LeaseReply, Request, Response, VdelOutcome, VsetAck,
 };
+use crate::obs::{Event, MetricsDump};
 use crate::storage::Version;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -197,14 +198,58 @@ impl Conn {
     }
 
     /// Deprecated: thin compatibility wrapper over [`Self::call`].
+    /// Returns the four legacy fields; [`Self::stats_full`] adds the
+    /// epoch/uptime correlation fields.
     pub fn stats(&mut self) -> std::io::Result<(u64, u64, u64, u64)> {
+        let s = self.stats_full()?;
+        Ok((s.keys, s.bytes, s.sets, s.gets))
+    }
+
+    /// The full `STATS` response, including the highest coordinator
+    /// epoch the node has heard and its uptime — the fields an operator
+    /// correlates against coordinator `EVENTS` when diagnosing a node.
+    pub fn stats_full(&mut self) -> std::io::Result<NodeStats> {
         match self.call(&Request::Stats)? {
             Response::Stats {
                 keys,
                 bytes,
                 sets,
                 gets,
-            } => Ok((keys, bytes, sets, gets)),
+                epoch,
+                uptime_ms,
+            } => Ok(NodeStats {
+                keys,
+                bytes,
+                sets,
+                gets,
+                epoch,
+                uptime_ms,
+            }),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// Fetch and parse the node's metric registry dump (the `METRICS`
+    /// op). Works over either framing — the blob is framing-agnostic.
+    pub fn metrics(&mut self) -> std::io::Result<MetricsDump> {
+        match self.call(&Request::Metrics)? {
+            Response::Metrics { dump } => MetricsDump::parse(&dump)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e)),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// One page of the node's causal event ring from cursor `since`
+    /// (the `EVENTS` op). Returns the events plus the next cursor: keep
+    /// calling with it until the page comes back empty to catch up, and
+    /// poll with the last cursor to tail the ring live.
+    pub fn events(&mut self, since: u64) -> std::io::Result<(Vec<Event>, u64)> {
+        match self.call(&Request::Events { since })? {
+            Response::Events { next, events } => {
+                let events = Event::parse_all(&events)
+                    .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+                Ok((events, next))
+            }
             other => Err(bad(other)),
         }
     }
@@ -349,6 +394,20 @@ impl Conn {
         }
         Ok(out)
     }
+}
+
+/// The full `STATS` response as seen by a client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NodeStats {
+    pub keys: u64,
+    pub bytes: u64,
+    pub sets: u64,
+    pub gets: u64,
+    /// Highest coordinator epoch the node has heard (`0` = never
+    /// probed).
+    pub epoch: u64,
+    /// Milliseconds since the node's serving process started.
+    pub uptime_ms: u64,
 }
 
 fn bad(resp: Response) -> std::io::Error {

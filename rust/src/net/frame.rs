@@ -59,6 +59,8 @@ pub const OP_STATE_PUT: u8 = 0x0C;
 pub const OP_STATE_GET: u8 = 0x0D;
 pub const OP_PING: u8 = 0x0E;
 pub const OP_QUIT: u8 = 0x0F;
+pub const OP_METRICS: u8 = 0x10;
+pub const OP_EVENTS: u8 = 0x11;
 
 // Response opcodes — one per `Response` variant, declaration order,
 // offset into 0x81.. so a response frame can never be misread as a
@@ -79,6 +81,8 @@ pub const OP_STATE_ACK: u8 = 0x8D;
 pub const OP_STATE_VALUE: u8 = 0x8E;
 pub const OP_PONG: u8 = 0x8F;
 pub const OP_ERROR: u8 = 0x90;
+pub const OP_METRICS_DUMP: u8 = 0x91;
+pub const OP_EVENTS_PAGE: u8 = 0x92;
 
 fn corrupt(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
@@ -314,6 +318,11 @@ pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
             out.push(OP_STATE_GET);
             put_u64(out, *shard);
         }
+        Request::Metrics => out.push(OP_METRICS),
+        Request::Events { since } => {
+            out.push(OP_EVENTS);
+            put_u64(out, *since);
+        }
         Request::Ping => out.push(OP_PING),
         Request::Quit => out.push(OP_QUIT),
     }
@@ -360,6 +369,8 @@ pub fn decode_request(body: &[u8]) -> io::Result<Request> {
             value: c.bytes()?,
         },
         OP_STATE_GET => Request::StateGet { shard: c.u64()? },
+        OP_METRICS => Request::Metrics,
+        OP_EVENTS => Request::Events { since: c.u64()? },
         OP_PING => Request::Ping,
         OP_QUIT => Request::Quit,
         other => return Err(corrupt(&format!("unknown request opcode {other:#04x}"))),
@@ -395,12 +406,16 @@ pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
             bytes,
             sets,
             gets,
+            epoch,
+            uptime_ms,
         } => {
             out.push(OP_STATS_R);
             put_u64(out, *keys);
             put_u64(out, *bytes);
             put_u64(out, *sets);
             put_u64(out, *gets);
+            put_u64(out, *epoch);
+            put_u64(out, *uptime_ms);
         }
         Response::Alive { epoch, keys } => {
             out.push(OP_ALIVE);
@@ -438,6 +453,15 @@ pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
             put_u64(out, *term);
             put_bytes(out, value);
         }
+        Response::Metrics { dump } => {
+            out.push(OP_METRICS_DUMP);
+            put_bytes(out, dump);
+        }
+        Response::Events { next, events } => {
+            out.push(OP_EVENTS_PAGE);
+            put_u64(out, *next);
+            put_bytes(out, events);
+        }
         Response::Pong => out.push(OP_PONG),
         Response::Error(e) => {
             out.push(OP_ERROR);
@@ -470,6 +494,8 @@ pub fn decode_response(body: &[u8]) -> io::Result<Response> {
             bytes: c.u64()?,
             sets: c.u64()?,
             gets: c.u64()?,
+            epoch: c.u64()?,
+            uptime_ms: c.u64()?,
         },
         OP_ALIVE => Response::Alive {
             epoch: c.u64()?,
@@ -493,6 +519,11 @@ pub fn decode_response(body: &[u8]) -> io::Result<Response> {
         OP_STATE_VALUE => Response::StateValue {
             term: c.u64()?,
             value: c.bytes()?,
+        },
+        OP_METRICS_DUMP => Response::Metrics { dump: c.bytes()? },
+        OP_EVENTS_PAGE => Response::Events {
+            next: c.u64()?,
+            events: c.bytes()?,
         },
         OP_PONG => Response::Pong,
         OP_ERROR => Response::Error(c.string()?),
@@ -555,6 +586,8 @@ mod tests {
                 cursor: None,
                 limit: 1,
             },
+            Request::Metrics,
+            Request::Events { since: u64::MAX },
             Request::Quit,
         ];
         for req in reqs {
@@ -574,6 +607,21 @@ mod tests {
             Response::KeyPage {
                 keys: vec![0, u64::MAX, 17],
                 next: Some(17),
+            },
+            Response::Stats {
+                keys: 1,
+                bytes: 2,
+                sets: 3,
+                gets: 4,
+                epoch: u64::MAX,
+                uptime_ms: 123_456,
+            },
+            Response::Metrics {
+                dump: b"c coord.sets 12\n".to_vec(),
+            },
+            Response::Events {
+                next: u64::MAX,
+                events: b"7 suspect 3 9\n".to_vec(),
             },
             // Binary framing round-trips error strings byte-exact —
             // including the newlines the text form must flatten.

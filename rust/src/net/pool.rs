@@ -51,20 +51,31 @@
 //!   resolution (`replica_set` / `read_targets`) routes through the
 //!   snapshot's own shard lookup — one binary search over an immutable
 //!   range table, zero extra allocation — so the same workers serve one
-//!   coordinator or K concurrent ones without a code path forking.
+//!   coordinator or K concurrent ones without a code path forking;
+//! - **per-replica load is accounted live**: every flush bumps the
+//!   target node's in-flight gauge for the duration of the round trip
+//!   and folds the RTT into that node's EWMA ([`NodeLoad`], shared
+//!   through the pool's [`LoadMap`]) — the signal a load-aware router
+//!   needs to skew reads away from a slow replica. With an [`Obs`]
+//!   wired ([`PoolConfig::obs`]), flush RTTs also land in the shared
+//!   registry's `pool.flush.rtt_ns` histogram so the client-side view
+//!   shows up in the cluster `METRICS` dump next to the serve-side
+//!   numbers.
 
 use super::client::Conn;
 use super::protocol::{Request, Response};
 use crate::algo::{DatumId, NodeId};
 use crate::coordinator::registry::KeyRegistry;
 use crate::coordinator::snapshot::{SnapshotCell, SnapshotReader};
+use crate::obs::{Gauge, Histo, Obs};
 use crate::stats::Summary;
 use crate::storage::{Version, WriteClock};
 use crate::workload::{value_for, Op};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::net::SocketAddr;
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -72,6 +83,80 @@ use std::time::Instant;
 /// extra round requires another concurrent epoch publication, so the
 /// loops terminate as soon as churn does.
 const MAX_REPLAYS: usize = 8;
+
+/// EWMA smoothing divisor: `new = old + (rtt - old) / EWMA_DIV`.
+/// 8 weights the last ~dozen flushes — fast enough to notice a replica
+/// going slow, smooth enough not to chase one outlier round trip.
+const EWMA_DIV: i64 = 8;
+
+/// Live load view of one replica: requests in flight (summed across
+/// every worker) and an integer EWMA of the pipelined flush RTT.
+/// Updates are relaxed atomics — load accounting is a reporting
+/// signal, never a synchronization edge.
+#[derive(Debug, Default)]
+pub struct NodeLoad {
+    /// Requests currently in flight to this replica across the pool.
+    pub in_flight: Gauge,
+    ewma_ns: AtomicU64,
+}
+
+impl NodeLoad {
+    /// EWMA of the flush round-trip time to this replica, in
+    /// nanoseconds. Zero until the first flush completes.
+    pub fn ewma_ns(&self) -> u64 {
+        self.ewma_ns.load(Ordering::Relaxed)
+    }
+
+    /// Fold one flush RTT into the EWMA. The first sample seeds the
+    /// average directly. Load-then-store: two workers racing here can
+    /// drop one sample's weight, which a smoothed estimate absorbs —
+    /// cheaper than a CAS loop on the flush path.
+    fn observe_rtt(&self, rtt_ns: u64) {
+        let old = self.ewma_ns.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            rtt_ns
+        } else {
+            (old as i64 + (rtt_ns as i64 - old as i64) / EWMA_DIV) as u64
+        };
+        self.ewma_ns.store(new, Ordering::Relaxed);
+    }
+}
+
+/// Shared per-replica load directory, fed by every worker in the pool.
+/// Cloning shares the map: read it back with [`RouterPool::loads`], or
+/// pass one in via [`PoolConfig::loads`] to watch several pools (or a
+/// pool plus its coordinator) through a single directory.
+#[derive(Clone, Debug, Default)]
+pub struct LoadMap {
+    nodes: Arc<Mutex<HashMap<NodeId, Arc<NodeLoad>>>>,
+}
+
+impl LoadMap {
+    pub fn new() -> LoadMap {
+        LoadMap::default()
+    }
+
+    /// Get-or-create the load handle for `node`. Workers cache the
+    /// returned `Arc` per node, so the directory mutex is touched once
+    /// per (worker, node) pair — never per flush.
+    pub fn node(&self, node: NodeId) -> Arc<NodeLoad> {
+        let mut nodes = self.nodes.lock().unwrap();
+        Arc::clone(nodes.entry(node).or_default())
+    }
+
+    /// Point-in-time `(node, in_flight, ewma_ns)` rows, sorted by node
+    /// id. The rows are independently-read relaxed atomics, not a
+    /// consistent cut — fine for the load-skew decisions they feed.
+    pub fn snapshot(&self) -> Vec<(NodeId, i64, u64)> {
+        let nodes = self.nodes.lock().unwrap();
+        let mut out: Vec<(NodeId, i64, u64)> = nodes
+            .iter()
+            .map(|(&n, l)| (n, l.in_flight.get(), l.ewma_ns()))
+            .collect();
+        out.sort_unstable_by_key(|&(n, _, _)| n);
+        out
+    }
+}
 
 /// Pool sizing and behavior knobs, built fluently:
 ///
@@ -128,6 +213,16 @@ pub struct PoolConfig {
     /// missing copy even when the unreachable holder recovers without
     /// ever being declared dead. Wired by `Coordinator::connect_pool`.
     pub(crate) repair_hints: Option<Arc<KeyRegistry>>,
+    /// Per-replica load directory every worker feeds (in-flight gauge
+    /// + RTT EWMA per node). Defaults to a fresh shared map; clones of
+    /// one config share it, so all of a pool's workers always land in
+    /// the same directory.
+    pub(crate) loads: LoadMap,
+    /// Observability handle. When set and enabled, workers also record
+    /// flush RTTs into the registry's `pool.flush.rtt_ns` histogram,
+    /// putting the client-side latency view on the cluster `METRICS`
+    /// surface. Wired by `Coordinator::connect_pool`.
+    pub(crate) obs: Option<Obs>,
 }
 
 impl Default for PoolConfig {
@@ -142,6 +237,8 @@ impl Default for PoolConfig {
             clock: WriteClock::new(),
             registry: None,
             repair_hints: None,
+            loads: LoadMap::new(),
+            obs: None,
         }
     }
 }
@@ -209,6 +306,22 @@ impl PoolConfig {
     /// Wire the degraded-write repair-hint channel.
     pub fn repair_hints(mut self, hints: Arc<KeyRegistry>) -> PoolConfig {
         self.repair_hints = Some(hints);
+        self
+    }
+
+    /// Share a per-replica load directory (e.g. one directory watching
+    /// several pools). Without this, the pool gets its own, readable
+    /// via [`RouterPool::loads`].
+    pub fn loads(mut self, loads: LoadMap) -> PoolConfig {
+        self.loads = loads;
+        self
+    }
+
+    /// Wire an observability handle: flush RTTs feed the shared
+    /// registry's `pool.flush.rtt_ns` histogram while
+    /// [`Obs::enabled`] holds.
+    pub fn obs(mut self, obs: Obs) -> PoolConfig {
+        self.obs = Some(obs);
         self
     }
 }
@@ -315,6 +428,7 @@ impl Drop for WorkerHandle {
 /// Sharded, pipelined router pool over a snapshot cell.
 pub struct RouterPool {
     workers: Vec<WorkerHandle>,
+    loads: LoadMap,
 }
 
 impl RouterPool {
@@ -336,7 +450,16 @@ impl RouterPool {
                 handle: Some(handle),
             });
         }
-        Ok(RouterPool { workers })
+        Ok(RouterPool {
+            workers,
+            loads: cfg.loads,
+        })
+    }
+
+    /// The per-replica load directory this pool's workers feed: live
+    /// in-flight counts and RTT EWMAs per node ([`LoadMap::snapshot`]).
+    pub fn loads(&self) -> LoadMap {
+        self.loads.clone()
     }
 
     /// Shard `ops` across the workers and return without blocking; call
@@ -365,9 +488,15 @@ impl RouterPool {
 }
 
 fn worker_loop(reader: SnapshotReader, rx: mpsc::Receiver<Job>, cfg: PoolConfig) {
+    let rtt_histo = cfg
+        .obs
+        .as_ref()
+        .map(|o| o.registry.histo("pool.flush.rtt_ns"));
     let mut worker = Worker {
         reader,
         conns: HashMap::new(),
+        loads: HashMap::new(),
+        rtt_histo,
         cfg,
     };
     while let Ok(Job::Run(ops, done)) = rx.recv() {
@@ -396,6 +525,13 @@ struct GetProbe {
 struct Worker {
     reader: SnapshotReader,
     conns: HashMap<NodeId, (SocketAddr, Conn)>,
+    /// Per-worker cache of the shared [`NodeLoad`] handles: the
+    /// [`LoadMap`] mutex is hit once per node, then flushes update
+    /// through the cached `Arc` lock-free.
+    loads: HashMap<NodeId, Arc<NodeLoad>>,
+    /// Flush-RTT histogram, present iff the pool has an [`Obs`] wired;
+    /// recording is additionally gated on [`Obs::enabled`] per flush.
+    rtt_histo: Option<Arc<Histo>>,
     cfg: PoolConfig,
 }
 
@@ -417,6 +553,14 @@ impl Worker {
                 Ok(&mut slot.1)
             }
             Entry::Vacant(v) => Ok(&mut v.insert((addr, dial(addr)?)).1),
+        }
+    }
+
+    /// Shared load handle for `node`, cached per worker.
+    fn load(&mut self, node: NodeId) -> Arc<NodeLoad> {
+        match self.loads.entry(node) {
+            Entry::Occupied(e) => Arc::clone(e.get()),
+            Entry::Vacant(v) => Arc::clone(v.insert(self.cfg.loads.node(node))),
         }
     }
 
@@ -672,15 +816,25 @@ impl Worker {
         res: &mut BatchResult,
         probes: &mut HashMap<DatumId, GetProbe>,
     ) -> std::io::Result<()> {
+        let load = self.load(node);
+        load.in_flight.add(reqs.len() as i64);
         let t0 = Instant::now();
         let resps = match self.conn(node, addr).and_then(|c| c.pipeline(reqs)) {
             Ok(resps) => resps,
             Err(e) => {
+                load.in_flight.add(-(reqs.len() as i64));
                 self.conns.remove(&node);
                 return Err(e);
             }
         };
         let rtt_ns = t0.elapsed().as_nanos() as f64;
+        load.in_flight.add(-(reqs.len() as i64));
+        load.observe_rtt(rtt_ns as u64);
+        if let Some(h) = &self.rtt_histo {
+            if self.cfg.obs.as_ref().is_some_and(|o| o.enabled()) {
+                h.record(rtt_ns as u64);
+            }
+        }
         let mut acked: Vec<DatumId> = Vec::new();
         for (req, resp) in reqs.iter().zip(resps) {
             match (req, resp) {
@@ -997,6 +1151,41 @@ mod tests {
             c.get(7).unwrap().is_some(),
             "secondary must hold the copy again after the read"
         );
+    }
+
+    #[test]
+    fn pool_feeds_per_replica_load_accounting() {
+        let coord = cluster(3, 2);
+        let cell = coord.snapshot_cell();
+        let obs = Obs::new();
+        let cfg = PoolConfig::new(2).pipeline_depth(8).obs(obs.clone());
+        let pool = RouterPool::connect(&cell, cfg).unwrap();
+        let sets: Vec<Op> = (0..200u64).map(|key| Op::Set { key, size: 8 }).collect();
+        pool.run(sets).unwrap();
+        // 400 placements over 3 nodes: every replica was flushed to, so
+        // every row is present, quiesced, and carries a warmed EWMA.
+        let rows = pool.loads().snapshot();
+        assert_eq!(rows.len(), 3, "load rows: {rows:?}");
+        for (node, in_flight, ewma_ns) in rows {
+            assert_eq!(in_flight, 0, "node {node} not quiesced");
+            assert!(ewma_ns > 0, "node {node} EWMA never fed");
+        }
+        // The flush RTTs also reached the shared metrics registry.
+        let dump = obs.registry.dump();
+        let rtt = dump.histo("pool.flush.rtt_ns").expect("histogram registered");
+        assert!(rtt.count > 0, "no flush RTT recorded: {rtt:?}");
+    }
+
+    #[test]
+    fn ewma_seeds_then_smooths() {
+        let load = NodeLoad::default();
+        assert_eq!(load.ewma_ns(), 0);
+        load.observe_rtt(8000);
+        assert_eq!(load.ewma_ns(), 8000, "first sample seeds directly");
+        load.observe_rtt(16_000);
+        assert_eq!(load.ewma_ns(), 9000, "8000 + (16000 - 8000) / 8");
+        load.observe_rtt(1000);
+        assert_eq!(load.ewma_ns(), 8000, "9000 + (1000 - 9000) / 8");
     }
 
     #[test]

@@ -24,7 +24,9 @@
 //!                                           | NOT_FOUND\n
 //! DEL <key-hex>\n                        -> DELETED\n | NOT_FOUND\n
 //! VDEL <key-hex> <epoch-hex> <seq-hex>\n -> DELETED\n | NEWER\n | NOT_FOUND\n
-//! STATS\n                                -> STATS <keys> <bytes> <sets> <gets>\n
+//! STATS\n                                -> STATS <keys> <bytes> <sets> <gets> <epoch> <uptime-ms>\n
+//! METRICS\n                              -> METRICSD <len>\n<bytes>\n
+//! EVENTS <since-hex>\n                   -> EVENTSD <next-hex> <len>\n<bytes>\n
 //! HEARTBEAT <epoch-hex>\n                -> ALIVE <epoch-hex> <keys>\n
 //! KEYS\n                                 -> KEYS <n> <key-hex>...\n
 //! KEYSC <limit-hex> [<cursor-hex>]\n     -> KEYSC <n> <next-hex|-> <key-hex>...\n
@@ -76,6 +78,15 @@
 //! least the stored one — a deposed leader's late publish can never
 //! clobber its successor's); `STATE <shard>` reads the latest blob
 //! back.
+//!
+//! `METRICS`/`EVENTS` are the observability plane's read ops (see
+//! [`crate::obs`]). `METRICS` dumps the node's metric registry as the
+//! line blob of [`crate::obs::MetricsDump::encode`]; `EVENTS <since>`
+//! pages the causal event ring forward from a sequence cursor and
+//! returns the next cursor plus a page encoded by
+//! [`crate::obs::Event::encode_all`]. Both payloads cross the framing
+//! as opaque length-prefixed bytes — the obs layer owns their schema,
+//! so new metric families and event kinds never touch the wire codec.
 
 use crate::storage::Version;
 use std::io::{BufRead, Read, Write};
@@ -132,6 +143,13 @@ pub enum Request {
     StateGet {
         shard: u64,
     },
+    /// Dump the node's metric registry ([`crate::obs::Registry`]).
+    Metrics,
+    /// Page the node's causal event ring forward from cursor `since`
+    /// (`0` = from the oldest retained event).
+    Events {
+        since: u64,
+    },
     Ping,
     Quit,
 }
@@ -163,6 +181,12 @@ pub enum Response {
         bytes: u64,
         sets: u64,
         gets: u64,
+        /// Highest coordinator epoch this node has heard over
+        /// `HEARTBEAT` (`0` = never probed) — lets an operator
+        /// correlate a node's view with coordinator publishes.
+        epoch: u64,
+        /// Milliseconds since the serving process started.
+        uptime_ms: u64,
     },
     Alive {
         epoch: u64,
@@ -195,6 +219,17 @@ pub enum Response {
     StateValue {
         term: u64,
         value: Vec<u8>,
+    },
+    /// `METRICS` dump: the registry blob of
+    /// [`crate::obs::MetricsDump::encode`], opaque to the framing.
+    Metrics {
+        dump: Vec<u8>,
+    },
+    /// One `EVENTS` page: the resume cursor plus the events encoded by
+    /// [`crate::obs::Event::encode_all`] (empty = caught up).
+    Events {
+        next: u64,
+        events: Vec<u8>,
     },
     Pong,
     Error(String),
@@ -480,6 +515,10 @@ fn parse_request_line<R: BufRead>(r: &mut R, line: &str) -> Result<Request, Malf
                 }
             }
         }
+        "METRICS" => Ok(Request::Metrics),
+        "EVENTS" => Ok(Request::Events {
+            since: field_hex(parts.next(), "bad since")?,
+        }),
         "PING" => Ok(Request::Ping),
         "QUIT" => Ok(Request::Quit),
         other => Err(Malformed::Recoverable(format!("unknown command {other:?}"))),
@@ -520,6 +559,8 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
             w.write_all(b"\n")
         }
         Request::StateGet { shard } => writeln!(w, "STATE {shard:x}"),
+        Request::Metrics => w.write_all(b"METRICS\n"),
+        Request::Events { since } => writeln!(w, "EVENTS {since:x}"),
         Request::Ping => w.write_all(b"PING\n"),
         Request::Quit => w.write_all(b"QUIT\n"),
     }
@@ -553,7 +594,9 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
             bytes,
             sets,
             gets,
-        } => writeln!(w, "STATS {keys} {bytes} {sets} {gets}"),
+            epoch,
+            uptime_ms,
+        } => writeln!(w, "STATS {keys} {bytes} {sets} {gets} {epoch} {uptime_ms}"),
         Response::Alive { epoch, keys } => writeln!(w, "ALIVE {epoch:x} {keys}"),
         Response::KeyList(keys) => {
             write!(w, "KEYS {}", keys.len())?;
@@ -584,6 +627,16 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
         Response::StateValue { term, value } => {
             writeln!(w, "SVALUE {term:x} {}", value.len())?;
             w.write_all(value)?;
+            w.write_all(b"\n")
+        }
+        Response::Metrics { dump } => {
+            writeln!(w, "METRICSD {}", dump.len())?;
+            w.write_all(dump)?;
+            w.write_all(b"\n")
+        }
+        Response::Events { next, events } => {
+            writeln!(w, "EVENTSD {next:x} {}", events.len())?;
+            w.write_all(events)?;
             w.write_all(b"\n")
         }
         Response::Pong => w.write_all(b"PONG\n"),
@@ -651,6 +704,8 @@ pub fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<Response> {
                 bytes: next()?,
                 sets: next()?,
                 gets: next()?,
+                epoch: next()?,
+                uptime_ms: next()?,
             })
         }
         "ALIVE" => {
@@ -721,6 +776,26 @@ pub fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<Response> {
             Ok(Response::StateValue {
                 term,
                 value: read_value(r, len)?,
+            })
+        }
+        "METRICSD" => {
+            let len: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| bad_data("bad len"))?;
+            Ok(Response::Metrics {
+                dump: read_value(r, len)?,
+            })
+        }
+        "EVENTSD" => {
+            let next = parse_hex(parts.next(), "bad cursor")?;
+            let len: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| bad_data("bad len"))?;
+            Ok(Response::Events {
+                next,
+                events: read_value(r, len)?,
             })
         }
         "ERROR" => Ok(Response::Error(parts.collect::<Vec<_>>().join(" "))),
@@ -815,6 +890,9 @@ mod tests {
             },
             Request::StateGet { shard: 0 },
             Request::StateGet { shard: u64::MAX },
+            Request::Metrics,
+            Request::Events { since: 0 },
+            Request::Events { since: u64::MAX },
             Request::Ping,
             Request::Quit,
         ] {
@@ -852,6 +930,16 @@ mod tests {
                 bytes: 2,
                 sets: 3,
                 gets: 4,
+                epoch: 5,
+                uptime_ms: 6,
+            },
+            Response::Stats {
+                keys: 0,
+                bytes: 0,
+                sets: 0,
+                gets: 0,
+                epoch: u64::MAX,
+                uptime_ms: u64::MAX,
             },
             Response::Alive { epoch: 7, keys: 42 },
             Response::Alive {
@@ -896,6 +984,18 @@ mod tests {
                 term: 0,
                 value: vec![],
             },
+            Response::Metrics {
+                dump: b"c coord.sets 12\nh serve.binary.op_ns 9 1 2 3\n".to_vec(),
+            },
+            Response::Metrics { dump: vec![] },
+            Response::Events {
+                next: 42,
+                events: b"7 suspect 3 9\n8 dead 3 a\n".to_vec(),
+            },
+            Response::Events {
+                next: 0,
+                events: vec![],
+            },
             Response::Pong,
             Response::Error("boom".into()),
         ] {
@@ -935,6 +1035,10 @@ mod tests {
         let mut r = BufReader::new(&b"VALUE 99999999999\n"[..]);
         assert!(read_response(&mut r).is_err());
         let mut r = BufReader::new(&b"SVALUE 1 99999999999\n"[..]);
+        assert!(read_response(&mut r).is_err());
+        let mut r = BufReader::new(&b"METRICSD 99999999999\n"[..]);
+        assert!(read_response(&mut r).is_err());
+        let mut r = BufReader::new(&b"EVENTSD 1 99999999999\n"[..]);
         assert!(read_response(&mut r).is_err());
     }
 

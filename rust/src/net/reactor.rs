@@ -47,6 +47,21 @@ pub trait Handler {
     /// (`QUIT`) — pending responses still flush first.
     fn request(&mut self, token: u64, req: Request) -> Option<Response>;
 
+    /// Whether the reactor should time each `request` call and report
+    /// it through [`Handler::served`]. Checked per frame *before* any
+    /// clock is read, so a handler that leaves this `false` (the
+    /// default) pays nothing — the contract the `bench-obs`
+    /// instrumented-vs-baseline gate measures.
+    fn timing_enabled(&self) -> bool {
+        false
+    }
+
+    /// One `request` call took `elapsed_ns`. Fired only when
+    /// [`Handler::timing_enabled`] returned true for the frame; runs on
+    /// the reactor thread, so implementations must be as cheap as the
+    /// op-latency histogram bump they exist for.
+    fn served(&mut self, _token: u64, _elapsed_ns: u64) {}
+
     /// A connection was accepted (fires before its first byte, for
     /// both framings).
     fn accepted(&mut self, token: u64, stream: &TcpStream);
@@ -378,14 +393,22 @@ fn drain_frames<H: Handler>(conn: &mut ConnState, handler: &mut H, token: u64) {
         let body = conn.rbuf[4..4 + len].to_vec();
         conn.rbuf.drain(..4 + len);
         match Request::decode_binary(&body) {
-            Ok(req) => match handler.request(token, req) {
-                Some(resp) => resp.encode_binary(&mut conn.wbuf),
-                None => {
-                    conn.poisoned = true;
-                    conn.close_after_flush = true;
-                    return;
+            Ok(req) => {
+                let t0 = handler.timing_enabled().then(std::time::Instant::now);
+                match handler.request(token, req) {
+                    Some(resp) => {
+                        if let Some(t0) = t0 {
+                            handler.served(token, t0.elapsed().as_nanos() as u64);
+                        }
+                        resp.encode_binary(&mut conn.wbuf)
+                    }
+                    None => {
+                        conn.poisoned = true;
+                        conn.close_after_flush = true;
+                        return;
+                    }
                 }
-            },
+            }
             // Structurally bad body under an intact prefix: the stream
             // is still aligned on the next frame, so answer and keep
             // the connection (the recoverable-error contract shared

@@ -24,12 +24,13 @@
 use super::frame;
 use super::protocol::{read_request, write_response, Parsed, Request, Response, MAX_LEASE_TTL_MS};
 use super::reactor::{Handler, Reactor, Waker};
+use crate::obs::{ring::MAX_EVENT_PAGE, Event, Histo, Obs};
 use crate::storage::ShardedStore;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -101,10 +102,26 @@ impl ControlSlot {
     }
 }
 
+/// Everything one request is served from: the striped store, the
+/// coordinator-failover registers, and the node's observability plane
+/// — shared by the reactor handler and every text compat thread.
+struct NodeCtx {
+    store: Arc<ShardedStore>,
+    control: Mutex<HashMap<u64, ControlSlot>>,
+    obs: Obs,
+    /// Process start, the zero point of the `STATS` uptime field.
+    started: Instant,
+    /// Highest coordinator epoch heard over `HEARTBEAT` — `STATS`
+    /// reports it so an operator can correlate this node's view with
+    /// coordinator publishes.
+    last_epoch: AtomicU64,
+}
+
 /// A running storage-node server.
 pub struct NodeServer {
     addr: SocketAddr,
     store: Arc<ShardedStore>,
+    obs: Obs,
     stop: Arc<AtomicBool>,
     reactor_thread: Option<JoinHandle<()>>,
     waker: Waker,
@@ -123,19 +140,38 @@ impl NodeServer {
 
     /// Bind on an explicit address (standalone `asura node` processes).
     pub fn spawn_on(addr: impl std::net::ToSocketAddrs) -> std::io::Result<NodeServer> {
+        Self::spawn_with_obs(addr, Obs::new())
+    }
+
+    /// Bind with a caller-supplied observability handle. A coordinator
+    /// passes its own [`Obs`] here so every node it spawns serves the
+    /// *cluster's* registry and event ring over `METRICS`/`EVENTS`;
+    /// `bench-obs` passes [`Obs::disabled`] for the baseline run.
+    pub fn spawn_with_obs(
+        addr: impl std::net::ToSocketAddrs,
+        obs: Obs,
+    ) -> std::io::Result<NodeServer> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         let store = Arc::new(ShardedStore::new());
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(Mutex::new(Vec::new()));
-        // The node's coordinator-failover registers (lease + replicated
-        // control state, one slot per shard id), shared between the
-        // reactor and the text compat threads; only ever touched
-        // through the LEASE/STATE wire ops.
-        let control: Arc<Mutex<HashMap<u64, ControlSlot>>> = Arc::new(Mutex::new(HashMap::new()));
-        let handler = NodeHandler {
+        // The node's request context: the store, the coordinator-
+        // failover registers (lease + replicated control state, one
+        // slot per shard id, only ever touched through the LEASE/STATE
+        // wire ops), and the obs plane — shared between the reactor and
+        // the text compat threads.
+        let ctx = Arc::new(NodeCtx {
             store: store.clone(),
-            control,
+            control: Mutex::new(HashMap::new()),
+            obs: obs.clone(),
+            started: Instant::now(),
+            last_epoch: AtomicU64::new(0),
+        });
+        let op_ns = ctx.obs.registry.histo("serve.binary.op_ns");
+        let handler = NodeHandler {
+            ctx,
+            op_ns,
             conns: conns.clone(),
         };
         let (mut reactor, waker) = Reactor::new(listener, handler)?;
@@ -148,6 +184,7 @@ impl NodeServer {
         Ok(NodeServer {
             addr,
             store,
+            obs,
             stop,
             reactor_thread: Some(reactor_thread),
             waker,
@@ -162,6 +199,12 @@ impl NodeServer {
     /// Direct handle to the backing store (stats, invariant checks).
     pub fn store(&self) -> Arc<ShardedStore> {
         self.store.clone()
+    }
+
+    /// The observability handle this node reports through (the one
+    /// `METRICS`/`EVENTS` serve over the wire).
+    pub fn obs(&self) -> &Obs {
+        &self.obs
     }
 
     pub fn key_count(&self) -> usize {
@@ -199,14 +242,12 @@ impl Drop for NodeServer {
     }
 }
 
-/// Serve one decoded request against the node's store and control
-/// registers — the single dispatch both framings funnel through.
-/// `None` means `QUIT`: flush what's pending, then close.
-fn handle_request(
-    store: &ShardedStore,
-    control: &Mutex<HashMap<u64, ControlSlot>>,
-    req: Request,
-) -> Option<Response> {
+/// Serve one decoded request against the node's store, control
+/// registers and obs plane — the single dispatch both framings funnel
+/// through. `None` means `QUIT`: flush what's pending, then close.
+fn handle_request(ctx: &NodeCtx, req: Request) -> Option<Response> {
+    let store = &*ctx.store;
+    let control = &ctx.control;
     Some(match req {
         Request::Set { key, value } => {
             store.set(key, value);
@@ -247,11 +288,18 @@ fn handle_request(
             bytes: store.used_bytes(),
             sets: store.sets(),
             gets: store.gets(),
+            epoch: ctx.last_epoch.load(Ordering::Relaxed),
+            uptime_ms: ctx.started.elapsed().as_millis() as u64,
         },
-        Request::Heartbeat { epoch } => Response::Alive {
-            epoch,
-            keys: store.len() as u64,
-        },
+        Request::Heartbeat { epoch } => {
+            // Coordinator epochs only grow; remember the highest heard
+            // so STATS can report how current this node's view is.
+            ctx.last_epoch.fetch_max(epoch, Ordering::Relaxed);
+            Response::Alive {
+                epoch,
+                keys: store.len() as u64,
+            }
+        }
         Request::Keys => Response::KeyList(store.keys()),
         Request::KeysChunk { cursor, limit } => {
             let page = store.keys_page(cursor, limit as usize);
@@ -294,6 +342,16 @@ fn handle_request(
                 None => Response::NotFound,
             }
         }
+        Request::Metrics => Response::Metrics {
+            dump: ctx.obs.registry.dump().encode(),
+        },
+        Request::Events { since } => {
+            let (events, next) = ctx.obs.events.read_since(since, MAX_EVENT_PAGE);
+            Response::Events {
+                next,
+                events: Event::encode_all(&events),
+            }
+        }
         Request::Ping => Response::Pong,
         Request::Quit => return None,
     })
@@ -303,8 +361,10 @@ fn handle_request(
 /// non-binary connections handed off to text compat threads, and the
 /// `conns` kill-list kept in sync with connection lifetimes.
 struct NodeHandler {
-    store: Arc<ShardedStore>,
-    control: Arc<Mutex<HashMap<u64, ControlSlot>>>,
+    ctx: Arc<NodeCtx>,
+    /// Cached `serve.binary.op_ns` handle — the reactor thread bumps it
+    /// per frame without touching the registry lock.
+    op_ns: Arc<Histo>,
     conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
 }
 
@@ -316,7 +376,15 @@ impl NodeHandler {
 
 impl Handler for NodeHandler {
     fn request(&mut self, _token: u64, req: Request) -> Option<Response> {
-        handle_request(&self.store, &self.control, req)
+        handle_request(&self.ctx, req)
+    }
+
+    fn timing_enabled(&self) -> bool {
+        self.ctx.obs.enabled()
+    }
+
+    fn served(&mut self, _token: u64, elapsed_ns: u64) {
+        self.op_ns.record(elapsed_ns);
     }
 
     fn accepted(&mut self, token: u64, stream: &TcpStream) {
@@ -326,11 +394,10 @@ impl Handler for NodeHandler {
     }
 
     fn handoff(&mut self, token: u64, stream: TcpStream, sniffed: Vec<u8>) {
-        let store = self.store.clone();
-        let control = self.control.clone();
+        let ctx = self.ctx.clone();
         let conns = self.conns.clone();
         std::thread::spawn(move || {
-            let _ = serve_text_conn(stream, sniffed, store, control);
+            let _ = serve_text_conn(stream, sniffed, ctx);
             conns.lock().unwrap().retain(|&(cid, _)| cid != token);
         });
     }
@@ -343,16 +410,14 @@ impl Handler for NodeHandler {
 /// The legacy newline-framed serve loop, one thread per connection.
 /// `sniffed` holds whatever the reactor read before deciding this
 /// wasn't a binary connection; it is replayed ahead of the socket.
-fn serve_text_conn(
-    stream: TcpStream,
-    sniffed: Vec<u8>,
-    store: Arc<ShardedStore>,
-    control: Arc<Mutex<HashMap<u64, ControlSlot>>>,
-) -> std::io::Result<()> {
+fn serve_text_conn(stream: TcpStream, sniffed: Vec<u8>, ctx: Arc<NodeCtx>) -> std::io::Result<()> {
     let mut reader = BufReader::new(std::io::Cursor::new(sniffed).chain(stream.try_clone()?));
     let mut writer = BufWriter::new(stream);
-    // One request-line buffer for the connection's lifetime.
+    // One request-line buffer and one op-latency handle for the
+    // connection's lifetime (the registry lock is paid once, not
+    // per request).
     let mut line = String::new();
+    let op_ns = ctx.obs.registry.histo("serve.text.op_ns");
     loop {
         let req = match read_request(&mut reader, &mut line) {
             Ok(Some(Parsed::Req(r))) => r,
@@ -375,13 +440,19 @@ fn serve_text_conn(
                 return Err(e);
             }
         };
-        let resp = match handle_request(&store, &control, req) {
+        // Check the enable flag before reading any clock: the baseline
+        // (obs disabled) text path pays one relaxed load, nothing more.
+        let t0 = ctx.obs.enabled().then(Instant::now);
+        let resp = match handle_request(&ctx, req) {
             Some(resp) => resp,
             None => {
                 writer.flush()?;
                 return Ok(());
             }
         };
+        if let Some(t0) = t0 {
+            op_ns.record(t0.elapsed().as_nanos() as u64);
+        }
         write_response(&mut writer, &resp)?;
         // Flush unless a further complete command line is already
         // buffered: a pipelined batch of N ops then costs one write
@@ -444,6 +515,58 @@ mod tests {
         assert_eq!(c.state_get(0).unwrap(), Some((1, b"blob".to_vec())));
         assert!(c.del(42).unwrap());
         assert_eq!(server.key_count(), 1);
+    }
+
+    #[test]
+    fn metrics_events_and_extended_stats_serve_over_both_framings() {
+        use crate::obs::EventKind;
+        let server = NodeServer::spawn().unwrap();
+        // Seed the ring as a coordinator sharing this Obs would.
+        server.obs().event(EventKind::Suspect, 7, 3);
+        server.obs().event(EventKind::Dead, 7, 4);
+        for mut c in [
+            Conn::connect(server.addr()).unwrap(),
+            Conn::connect_binary(server.addr()).unwrap(),
+        ] {
+            c.set(1, b"x".to_vec()).unwrap();
+            c.get(1).unwrap();
+            // Extended STATS: epoch tracks the highest heartbeat seen,
+            // uptime only moves forward.
+            c.heartbeat(9).unwrap();
+            c.heartbeat(5).unwrap();
+            let s = c.stats_full().unwrap();
+            assert_eq!(s.epoch, 9, "STATS must report the highest epoch heard");
+            let s2 = c.stats_full().unwrap();
+            assert!(s2.uptime_ms >= s.uptime_ms);
+            // METRICS: the per-op histograms recorded the traffic above.
+            let dump = c.metrics().unwrap();
+            let served: u64 = ["serve.text.op_ns", "serve.binary.op_ns"]
+                .iter()
+                .filter_map(|n| dump.histo(n))
+                .map(|h| h.count)
+                .sum();
+            assert!(served > 0, "op timing must have recorded, got {dump:?}");
+            // EVENTS: cursor pages walk the seeded ring in order.
+            let (events, next) = c.events(0).unwrap();
+            assert_eq!(next, 2);
+            assert_eq!(
+                events.iter().map(|e| e.kind).collect::<Vec<_>>(),
+                vec![EventKind::Suspect, EventKind::Dead]
+            );
+            let (tail, _) = c.events(next).unwrap();
+            assert!(tail.is_empty(), "caught-up cursor must return nothing");
+        }
+    }
+
+    #[test]
+    fn disabled_obs_serves_metrics_but_skips_op_timing() {
+        let server = NodeServer::spawn_with_obs(("127.0.0.1", 0), Obs::disabled()).unwrap();
+        let mut c = Conn::connect_binary(server.addr()).unwrap();
+        c.set(1, b"x".to_vec()).unwrap();
+        c.get(1).unwrap();
+        let dump = c.metrics().unwrap();
+        let timed: u64 = dump.histos.iter().map(|(_, h)| h.count).sum();
+        assert_eq!(timed, 0, "baseline run must record no op timings");
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Lock-free log-bucketed latency histogram.
+//!
+//! Values (nanoseconds) land in buckets whose width grows with
+//! magnitude: every power-of-two octave is split into `2^SUB_BITS`
+//! equal sub-buckets, so the relative error of any quantile read off
+//! the histogram is bounded by one sub-bucket — `2^-SUB_BITS` of the
+//! value (≈3% at `SUB_BITS = 5`) — while the whole `u64` range fits in
+//! [`N_BUCKETS`] buckets (16 KiB of atomics).
+//!
+//! Every bucket is an `AtomicU64` bumped with one relaxed
+//! `fetch_add`: recorders never take a lock and never contend beyond
+//! cache-line traffic on a shared bucket. Two histograms merge
+//! bucket-wise ([`Histo::merge_from`]), so per-thread recording
+//! followed by a merge is *exactly* equivalent to sequential recording
+//! into one instance — the property `tests/obs_plane.rs` and the unit
+//! suite below pin.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: each power-of-two octave splits into
+/// `2^SUB_BITS` buckets.
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS;
+
+/// Bucket count covering the full `u64` range: one linear octave for
+/// values below `SUB`, then `(64 - SUB_BITS)` log octaves.
+pub const N_BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB;
+
+/// Bucket index for a value. Values `< SUB` map linearly (width-1
+/// buckets); above that, the top `SUB_BITS` bits after the leading one
+/// select the sub-bucket within the value's octave.
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let top = 63 - v.leading_zeros(); // floor(log2 v), >= SUB_BITS
+    let shift = top - SUB_BITS;
+    let sub = ((v >> shift) as usize) & (SUB - 1);
+    ((top - SUB_BITS + 1) as usize) * SUB + sub
+}
+
+/// Inclusive lower bound of a bucket (the smallest value mapping to it).
+fn bucket_low(index: usize) -> u64 {
+    let octave = index / SUB;
+    let sub = (index % SUB) as u64;
+    if octave == 0 {
+        sub
+    } else {
+        (SUB as u64 + sub) << (octave - 1)
+    }
+}
+
+/// Width of the bucket containing `v`: the guaranteed absolute error
+/// bound of any quantile read back at that magnitude.
+pub fn bucket_width(v: u64) -> u64 {
+    let octave = bucket_index(v) / SUB;
+    if octave == 0 {
+        1
+    } else {
+        1u64 << (octave - 1)
+    }
+}
+
+/// Lock-free log-bucketed histogram over `u64` nanoseconds.
+pub struct Histo {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo::new()
+    }
+}
+
+impl Histo {
+    pub fn new() -> Histo {
+        Histo {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Four relaxed RMWs; no locks, no allocation.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Fold another histogram's buckets into this one. With `other`
+    /// quiescent this is exact; concurrent with recorders it is the
+    /// usual relaxed-counter approximation.
+    pub fn merge_from(&self, other: &Histo) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let n = theirs.load(Ordering::Relaxed);
+            if n > 0 {
+                mine.fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Quantile by nearest rank over the bucket counts (`q` in
+    /// [0, 100]), returning the bucket's inclusive upper bound — within
+    /// one [`bucket_width`] of the exact sorted-sample quantile.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        // Same nearest-rank rule as `stats::Summary::percentile`, so
+        // the two are directly comparable in tests and benches.
+        let rank = ((q / 100.0) * (total - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen > rank {
+                let width = if i / SUB == 0 { 1 } else { 1u64 << (i / SUB - 1) };
+                return (bucket_low(i) + width - 1).min(self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Point-in-time snapshot of the headline quantiles.
+    pub fn snapshot(&self) -> HistoSnapshot {
+        HistoSnapshot {
+            count: self.count(),
+            p50_ns: self.percentile(50.0),
+            p95_ns: self.percentile(95.0),
+            p99_ns: self.percentile(99.0),
+            max_ns: self.max(),
+        }
+    }
+}
+
+/// The quantiles a histogram dumps over the wire.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistoSnapshot {
+    pub count: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+    use crate::stats::Summary;
+
+    #[test]
+    fn bucket_index_is_monotonic_and_continuous() {
+        // Exhaustive over the low range, sampled above: indices never
+        // decrease and never skip more than one bucket.
+        let mut prev = bucket_index(0);
+        for v in 1..100_000u64 {
+            let i = bucket_index(v);
+            assert!(i == prev || i == prev + 1, "index jumped at {v}");
+            prev = i;
+        }
+        for shift in 17..63 {
+            let v = 1u64 << shift;
+            assert!(bucket_index(v) > bucket_index(v - 1) - 1);
+            assert!(bucket_index(v) < N_BUCKETS);
+        }
+        assert!(bucket_index(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn bucket_low_inverts_index() {
+        for v in [0u64, 1, 31, 32, 33, 1000, 65_535, 1 << 40, u64::MAX] {
+            let i = bucket_index(v);
+            let low = bucket_low(i);
+            assert!(low <= v, "low {low} > v {v}");
+            assert_eq!(bucket_index(low), i, "low of bucket {i} maps elsewhere");
+            assert!(v - low < bucket_width(v), "v {v} outside its bucket");
+        }
+    }
+
+    /// Satellite property: p50/p95/p99 from the bucketed histogram are
+    /// within one bucket width of the exact sorted-sample quantiles,
+    /// across seeded uniform / exponential-ish / heavy-tail shapes.
+    #[test]
+    fn quantiles_within_one_bucket_of_exact() {
+        for seed in 1..=8u64 {
+            let mut rng = SplitMix64::new(seed * 0x9e37);
+            let mut shapes: Vec<Vec<u64>> = vec![Vec::new(), Vec::new(), Vec::new()];
+            for _ in 0..4000 {
+                shapes[0].push(rng.below(1_000_000)); // uniform
+                shapes[1].push(100 + (1u64 << rng.below(20))); // log-spread
+                let x = rng.below(1000);
+                shapes[2].push(if x < 990 { 200 + x } else { 1_000_000 + x * 977 }); // heavy tail
+            }
+            for samples in &shapes {
+                let h = Histo::new();
+                let mut exact = Summary::new();
+                for &v in samples {
+                    h.record(v);
+                    exact.push(v as f64);
+                }
+                for q in [50.0, 95.0, 99.0] {
+                    let approx = h.percentile(q);
+                    let truth = exact.percentile(q) as u64;
+                    let tol = bucket_width(truth);
+                    assert!(
+                        approx.abs_diff(truth) <= tol,
+                        "seed {seed} q{q}: approx {approx} vs exact {truth} (tol {tol})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Satellite property: concurrent recording into per-thread
+    /// histograms then merging equals sequential recording.
+    #[test]
+    fn concurrent_record_then_merge_equals_sequential() {
+        use std::sync::Arc;
+        let mut rng = SplitMix64::new(0xabcdef);
+        let samples: Vec<u64> = (0..8000).map(|_| rng.below(10_000_000)).collect();
+        let sequential = Histo::new();
+        for &v in &samples {
+            sequential.record(v);
+        }
+        let merged = Arc::new(Histo::new());
+        let threads: Vec<_> = samples
+            .chunks(2000)
+            .map(|chunk| {
+                let chunk = chunk.to_vec();
+                std::thread::spawn(move || {
+                    let local = Histo::new();
+                    for v in chunk {
+                        local.record(v);
+                    }
+                    local
+                })
+            })
+            .collect();
+        for t in threads {
+            merged.merge_from(&t.join().unwrap());
+        }
+        assert_eq!(merged.count(), sequential.count());
+        assert_eq!(merged.max(), sequential.max());
+        assert_eq!(merged.mean(), sequential.mean());
+        for q in [10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            assert_eq!(merged.percentile(q), sequential.percentile(q), "q{q} diverged");
+        }
+        // And recording from many threads into ONE shared instance
+        // loses nothing either (the lock-free claim itself).
+        let shared = Arc::new(Histo::new());
+        let threads: Vec<_> = samples
+            .chunks(2000)
+            .map(|chunk| {
+                let chunk = chunk.to_vec();
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    for v in chunk {
+                        shared.record(v);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(shared.count(), sequential.count());
+        for q in [50.0, 99.0] {
+            assert_eq!(shared.percentile(q), sequential.percentile(q));
+        }
+    }
+
+    #[test]
+    fn empty_and_single_sample() {
+        let h = Histo::new();
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.snapshot().count, 0);
+        h.record(777);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 1);
+        assert_eq!(snap.max_ns, 777);
+        // A single sample's quantile is clamped to the observed max.
+        assert_eq!(snap.p99_ns, 777);
+        assert!(snap.p50_ns.abs_diff(777) <= bucket_width(777));
+    }
+}

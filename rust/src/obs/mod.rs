@@ -1,0 +1,380 @@
+//! Cluster observability plane: metrics, latency histograms, and the
+//! causal event ring — zero external dependencies, lock-free on every
+//! hot path.
+//!
+//! Three primitives, one surface:
+//!
+//! - [`Counter`] / [`Gauge`]: relaxed atomics. Counters only go up
+//!   (ops served, keys repaired); gauges go both ways (in-flight
+//!   requests, queue depths).
+//! - [`Histo`] ([`histo`]): a log-bucketed latency histogram whose
+//!   buckets are plain `AtomicU64`s — concurrent recorders never
+//!   contend on a lock, and two histograms merge bucket-wise, so
+//!   per-thread recording followed by a merge equals recording into
+//!   one shared instance.
+//! - [`EventRing`] ([`ring`]): a fixed-capacity seqlock ring of causal
+//!   cluster events (epoch publish, lease grant/loss, shard
+//!   split/merge, suspect/dead transitions, repair batches), each
+//!   stamped with a monotonic sequence number. Readers walk it with a
+//!   cursor (`EVENTS <since_seq>` on the wire); a gap in the returned
+//!   sequence numbers is the honest signal that the ring lapped the
+//!   reader.
+//!
+//! A [`Registry`] names the metric families; [`Obs`] bundles a
+//! registry, a ring, and an enable flag into the handle every plane
+//! (server, pool, coordinator, fault) reports through. The registry
+//! dumps to a line-oriented blob ([`MetricsDump`]) that both wire
+//! framings carry verbatim, so the client-side parse
+//! ([`MetricsDump::parse`]) is framing-agnostic.
+//!
+//! Cost discipline: recording is a handful of relaxed atomic RMWs and
+//! the hot-path timing sites check [`Obs::enabled`] first, so the
+//! `bench-obs` suite can run the identical binary instrumented vs
+//! baseline and gate the overhead ratio in CI.
+
+pub mod histo;
+pub mod ring;
+
+pub use histo::{bucket_width, Histo, HistoSnapshot};
+pub use ring::{Event, EventKind, EventRing};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic event counter. Relaxed ordering: totals are read for
+/// reporting, never for synchronization.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down instantaneous value (in-flight requests, queue depth).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Default)]
+struct Families {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    histos: BTreeMap<String, Arc<Histo>>,
+}
+
+/// Named metric families. The mutex guards only registration (setup
+/// time, or first contact with a node id); the returned `Arc` handles
+/// are what hot paths hold, and updating through them is lock-free.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Families>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter named `name`. Names must be single
+    /// tokens (no whitespace) — they become fields of the line-oriented
+    /// wire dump.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        debug_assert!(!name.contains(char::is_whitespace), "metric name {name:?}");
+        let mut fam = self.families.lock().unwrap();
+        Arc::clone(fam.counters.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-create the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        debug_assert!(!name.contains(char::is_whitespace), "metric name {name:?}");
+        let mut fam = self.families.lock().unwrap();
+        Arc::clone(fam.gauges.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-create the histogram named `name`.
+    pub fn histo(&self, name: &str) -> Arc<Histo> {
+        debug_assert!(!name.contains(char::is_whitespace), "metric name {name:?}");
+        let mut fam = self.families.lock().unwrap();
+        Arc::clone(fam.histos.entry(name.to_string()).or_default())
+    }
+
+    /// Snapshot every family into the structured dump the `METRICS`
+    /// wire op returns.
+    pub fn dump(&self) -> MetricsDump {
+        let fam = self.families.lock().unwrap();
+        MetricsDump {
+            counters: fam.counters.iter().map(|(k, c)| (k.clone(), c.get())).collect(),
+            gauges: fam.gauges.iter().map(|(k, g)| (k.clone(), g.get())).collect(),
+            histos: fam.histos.iter().map(|(k, h)| (k.clone(), h.snapshot())).collect(),
+        }
+    }
+}
+
+/// Point-in-time registry snapshot: what `Conn::metrics()` hands back.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsDump {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub histos: Vec<(String, HistoSnapshot)>,
+}
+
+impl MetricsDump {
+    /// Counter value by name, if present in the dump.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
+    }
+
+    /// Gauge value by name.
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        self.gauges.iter().find(|(k, _)| k == name).map(|&(_, v)| v)
+    }
+
+    /// Histogram snapshot by name.
+    pub fn histo(&self, name: &str) -> Option<&HistoSnapshot> {
+        self.histos.iter().find(|(k, _)| k == name).map(|(_, h)| h)
+    }
+
+    /// Render to the line blob both wire framings carry:
+    /// `c <name> <value>` / `g <name> <value>` /
+    /// `h <name> <count> <p50> <p95> <p99> <max>` (ns domain).
+    pub fn encode(&self) -> Vec<u8> {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "c {name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "g {name} {v}");
+        }
+        for (name, h) in &self.histos {
+            let _ = writeln!(
+                out,
+                "h {name} {} {} {} {} {}",
+                h.count, h.p50_ns, h.p95_ns, h.p99_ns, h.max_ns
+            );
+        }
+        out.into_bytes()
+    }
+
+    /// Parse the wire blob back. Unknown line kinds are skipped (a
+    /// newer server may dump families an older client doesn't know);
+    /// a known kind with malformed fields is an error.
+    pub fn parse(blob: &[u8]) -> Result<MetricsDump, String> {
+        let text = std::str::from_utf8(blob).map_err(|e| format!("metrics dump: {e}"))?;
+        let mut dump = MetricsDump::default();
+        for line in text.lines() {
+            let mut parts = line.split_ascii_whitespace();
+            let kind = match parts.next() {
+                Some(k) => k,
+                None => continue,
+            };
+            let bad = || format!("metrics dump: malformed line {line:?}");
+            match kind {
+                "c" => {
+                    let name = parts.next().ok_or_else(bad)?;
+                    let v = parts.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+                    dump.counters.push((name.to_string(), v));
+                }
+                "g" => {
+                    let name = parts.next().ok_or_else(bad)?;
+                    let v = parts.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+                    dump.gauges.push((name.to_string(), v));
+                }
+                "h" => {
+                    let name = parts.next().ok_or_else(bad)?;
+                    let mut field = || parts.next().and_then(|v| v.parse::<u64>().ok());
+                    let (count, p50, p95, p99, max) = match (field(), field(), field(), field(), field()) {
+                        (Some(c), Some(a), Some(b), Some(d), Some(m)) => (c, a, b, d, m),
+                        _ => return Err(bad()),
+                    };
+                    dump.histos.push((
+                        name.to_string(),
+                        HistoSnapshot {
+                            count,
+                            p50_ns: p50,
+                            p95_ns: p95,
+                            p99_ns: p99,
+                            max_ns: max,
+                        },
+                    ));
+                }
+                _ => {}
+            }
+        }
+        Ok(dump)
+    }
+}
+
+/// The handle every plane reports through: one registry of metric
+/// families, one event ring, one enable flag. Cloning shares all
+/// three, so a coordinator and the node servers it spawns expose the
+/// same surface over the wire.
+#[derive(Clone)]
+pub struct Obs {
+    pub registry: Arc<Registry>,
+    pub events: Arc<EventRing>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::new()
+    }
+}
+
+impl std::fmt::Debug for Obs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Obs")
+            .field("enabled", &self.enabled())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Obs {
+    pub fn new() -> Obs {
+        Obs {
+            registry: Arc::new(Registry::new()),
+            events: Arc::new(EventRing::new()),
+            enabled: Arc::new(AtomicBool::new(true)),
+        }
+    }
+
+    /// An `Obs` whose hot-path timing sites are off: the `bench-obs`
+    /// baseline. Registration and event recording still work — only
+    /// the per-op timing gated on [`Obs::enabled`] is skipped.
+    pub fn disabled() -> Obs {
+        let obs = Obs::new();
+        obs.set_enabled(false);
+        obs
+    }
+
+    /// Whether hot-path op timing should record. One relaxed load —
+    /// check this *before* taking the timestamp so a disabled plane
+    /// pays literally nothing.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Record a causal event; returns its sequence number.
+    pub fn event(&self, kind: EventKind, a: u64, b: u64) -> u64 {
+        self.events.record(kind, a, b)
+    }
+
+    /// A fresh registry sharing this handle's event ring and enable
+    /// flag. What a promoted coordinator adopts: its counters restart
+    /// (it is a new process in the model), while the cluster's causal
+    /// event history — the story of the crash it was promoted through —
+    /// continues in the same ring.
+    pub fn fork_registry(&self) -> Obs {
+        Obs {
+            registry: Arc::new(Registry::new()),
+            events: Arc::clone(&self.events),
+            enabled: Arc::clone(&self.enabled),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_move() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.add(3);
+        g.add(-5);
+        assert_eq!(g.get(), -2);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn registry_names_are_shared_handles() {
+        let reg = Registry::new();
+        let a = reg.counter("ops");
+        let b = reg.counter("ops");
+        a.add(2);
+        b.inc();
+        assert_eq!(reg.counter("ops").get(), 3);
+        assert_eq!(reg.dump().counter("ops"), Some(3));
+        assert_eq!(reg.dump().counter("absent"), None);
+    }
+
+    #[test]
+    fn dump_round_trips_through_the_wire_blob() {
+        let reg = Registry::new();
+        reg.counter("serve.ops").add(41);
+        reg.gauge("pool.inflight").set(-3);
+        let h = reg.histo("serve.op_ns");
+        for v in [100u64, 200, 300, 4000, 50000] {
+            h.record(v);
+        }
+        let dump = reg.dump();
+        let blob = dump.encode();
+        let parsed = MetricsDump::parse(&blob).unwrap();
+        assert_eq!(parsed, dump);
+        assert_eq!(parsed.gauge("pool.inflight"), Some(-3));
+        assert_eq!(parsed.histo("serve.op_ns").unwrap().count, 5);
+    }
+
+    #[test]
+    fn parse_skips_unknown_kinds_and_rejects_garbage() {
+        let parsed = MetricsDump::parse(b"x future-family 1 2 3\nc ops 9\n").unwrap();
+        assert_eq!(parsed.counter("ops"), Some(9));
+        assert!(MetricsDump::parse(b"c ops not-a-number\n").is_err());
+        assert!(MetricsDump::parse(b"h lat 1 2\n").is_err());
+        assert!(MetricsDump::parse(&[0xff, 0xfe]).is_err());
+    }
+
+    #[test]
+    fn disabled_obs_gates_hot_paths_only() {
+        let obs = Obs::disabled();
+        assert!(!obs.enabled());
+        // Events and registration still function for the baseline run.
+        obs.event(EventKind::EpochPublish, 1, 0);
+        let (events, _) = obs.events.read_since(0, 16);
+        assert_eq!(events.len(), 1);
+        obs.set_enabled(true);
+        assert!(obs.enabled());
+    }
+}

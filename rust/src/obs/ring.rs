@@ -1,0 +1,415 @@
+//! Fixed-capacity lock-free ring of causal cluster events.
+//!
+//! Every control-plane transition worth reconstructing a story from —
+//! epoch publishes, lease grants and losses, shard splits/merges,
+//! suspect/dead transitions, repair batches, standby promotions — is
+//! recorded as an [`Event`] with a monotonic sequence number drawn
+//! from one atomic. Writers claim a slot with a `fetch_add` and
+//! publish it seqlock-style (stamp → invalid, write fields, stamp →
+//! seq+1 with `Release`), so recording never blocks and never
+//! allocates. Readers walk a cursor ([`EventRing::read_since`]);
+//! a slot whose stamp doesn't match the expected sequence was lapped
+//! or is mid-write and is simply skipped — the gap in the returned
+//! sequence numbers is the honest signal, never torn data.
+//!
+//! The `EVENTS <since_seq>` wire op pages this ring to clients; the
+//! obs_plane integration test proves a kill→suspect→dead→repair cycle
+//! is reconstructible from those cursors alone.
+
+use std::fmt;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+/// Default ring capacity (events retained before the ring laps).
+pub const DEFAULT_CAPACITY: usize = 1024;
+
+/// Hard cap on events returned per `EVENTS` wire page.
+pub const MAX_EVENT_PAGE: usize = 256;
+
+/// What happened. The two payload words `a`/`b` are kind-specific:
+///
+/// | kind            | a                   | b                  |
+/// |-----------------|---------------------|--------------------|
+/// | `EpochPublish`  | epoch               | term               |
+/// | `LeaseGrant`    | term                | shard              |
+/// | `LeaseLoss`     | term                | shard              |
+/// | `ShardSplit`    | shard id            | split key          |
+/// | `ShardMerge`    | left shard id       | absorbed shard id  |
+/// | `Suspect`       | node id             | epoch              |
+/// | `SuspectClear`  | node id             | epoch              |
+/// | `Dead`          | node id             | epoch after death  |
+/// | `RepairBatch`   | keys repaired       | epoch              |
+/// | `Promotion`     | new term            | epoch              |
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    EpochPublish,
+    LeaseGrant,
+    LeaseLoss,
+    ShardSplit,
+    ShardMerge,
+    Suspect,
+    SuspectClear,
+    Dead,
+    RepairBatch,
+    Promotion,
+}
+
+impl EventKind {
+    /// Wire token (also the human-readable form).
+    pub fn token(self) -> &'static str {
+        match self {
+            EventKind::EpochPublish => "epoch",
+            EventKind::LeaseGrant => "lease_grant",
+            EventKind::LeaseLoss => "lease_loss",
+            EventKind::ShardSplit => "split",
+            EventKind::ShardMerge => "merge",
+            EventKind::Suspect => "suspect",
+            EventKind::SuspectClear => "suspect_clear",
+            EventKind::Dead => "dead",
+            EventKind::RepairBatch => "repair",
+            EventKind::Promotion => "promote",
+        }
+    }
+
+    pub fn from_token(s: &str) -> Option<EventKind> {
+        Some(match s {
+            "epoch" => EventKind::EpochPublish,
+            "lease_grant" => EventKind::LeaseGrant,
+            "lease_loss" => EventKind::LeaseLoss,
+            "split" => EventKind::ShardSplit,
+            "merge" => EventKind::ShardMerge,
+            "suspect" => EventKind::Suspect,
+            "suspect_clear" => EventKind::SuspectClear,
+            "dead" => EventKind::Dead,
+            "repair" => EventKind::RepairBatch,
+            "promote" => EventKind::Promotion,
+            _ => return None,
+        })
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            EventKind::EpochPublish => 0,
+            EventKind::LeaseGrant => 1,
+            EventKind::LeaseLoss => 2,
+            EventKind::ShardSplit => 3,
+            EventKind::ShardMerge => 4,
+            EventKind::Suspect => 5,
+            EventKind::SuspectClear => 6,
+            EventKind::Dead => 7,
+            EventKind::RepairBatch => 8,
+            EventKind::Promotion => 9,
+        }
+    }
+
+    fn from_code(c: u64) -> Option<EventKind> {
+        Some(match c {
+            0 => EventKind::EpochPublish,
+            1 => EventKind::LeaseGrant,
+            2 => EventKind::LeaseLoss,
+            3 => EventKind::ShardSplit,
+            4 => EventKind::ShardMerge,
+            5 => EventKind::Suspect,
+            6 => EventKind::SuspectClear,
+            7 => EventKind::Dead,
+            8 => EventKind::RepairBatch,
+            9 => EventKind::Promotion,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded cluster event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub seq: u64,
+    pub kind: EventKind,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {} {} {}", self.seq, self.kind.token(), self.a, self.b)
+    }
+}
+
+impl Event {
+    /// Parse one `<seq> <kind> <a> <b>` line (the wire blob form).
+    pub fn parse(line: &str) -> Result<Event, String> {
+        let mut parts = line.split_ascii_whitespace();
+        let bad = || format!("malformed event line {line:?}");
+        let seq = parts.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+        let kind = parts
+            .next()
+            .and_then(EventKind::from_token)
+            .ok_or_else(bad)?;
+        let a = parts.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+        let b = parts.next().and_then(|v| v.parse().ok()).ok_or_else(bad)?;
+        Ok(Event { seq, kind, a, b })
+    }
+
+    /// Render a batch to the newline-separated wire blob.
+    pub fn encode_all(events: &[Event]) -> Vec<u8> {
+        use std::fmt::Write;
+        let mut out = String::new();
+        for ev in events {
+            let _ = writeln!(out, "{ev}");
+        }
+        out.into_bytes()
+    }
+
+    /// Parse a wire blob back into events.
+    pub fn parse_all(blob: &[u8]) -> Result<Vec<Event>, String> {
+        let text = std::str::from_utf8(blob).map_err(|e| format!("event blob: {e}"))?;
+        text.lines().map(Event::parse).collect()
+    }
+}
+
+/// Stamp value marking a slot as mid-write / empty (real stamps are
+/// `seq + 1`, so 0 never collides).
+const WRITING: u64 = 0;
+
+struct Slot {
+    stamp: AtomicU64,
+    kind: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+/// The lock-free ring itself.
+pub struct EventRing {
+    slots: Box<[Slot]>,
+    next: AtomicU64,
+}
+
+impl Default for EventRing {
+    fn default() -> Self {
+        EventRing::new()
+    }
+}
+
+impl EventRing {
+    pub fn new() -> EventRing {
+        EventRing::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// `capacity` is rounded up to a power of two (cheap masking).
+    pub fn with_capacity(capacity: usize) -> EventRing {
+        let cap = capacity.max(2).next_power_of_two();
+        EventRing {
+            slots: (0..cap)
+                .map(|_| Slot {
+                    stamp: AtomicU64::new(WRITING),
+                    kind: AtomicU64::new(0),
+                    a: AtomicU64::new(0),
+                    b: AtomicU64::new(0),
+                })
+                .collect(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Sequence number the *next* recorded event will get; everything
+    /// below it has been recorded (though the oldest may be lapped).
+    pub fn head(&self) -> u64 {
+        self.next.load(Ordering::Acquire)
+    }
+
+    /// Record an event; returns its sequence number. Lock-free: one
+    /// `fetch_add` to claim the slot, three relaxed stores, one
+    /// release store to publish.
+    pub fn record(&self, kind: EventKind, a: u64, b: u64) -> u64 {
+        let seq = self.next.fetch_add(1, Ordering::AcqRel);
+        let slot = &self.slots[(seq as usize) & (self.slots.len() - 1)];
+        // Invalidate first so a concurrent reader can never stitch the
+        // old stamp onto the new fields.
+        slot.stamp.store(WRITING, Ordering::Release);
+        slot.kind.store(kind.code(), Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.stamp.store(seq + 1, Ordering::Release);
+        seq
+    }
+
+    /// Cursor read: events with `seq >= since`, oldest first, at most
+    /// `max`. Returns the events plus the next cursor value (pass it
+    /// back to continue; when it equals [`EventRing::head`] the reader
+    /// is caught up). A `since` older than the ring retains is clamped
+    /// forward — the jump in the first returned sequence number tells
+    /// the reader how much it lost.
+    pub fn read_since(&self, since: u64, max: usize) -> (Vec<Event>, u64) {
+        let head = self.head();
+        let cap = self.slots.len() as u64;
+        let oldest = head.saturating_sub(cap);
+        let mut seq = since.max(oldest);
+        let mut out = Vec::new();
+        while seq < head && out.len() < max {
+            if let Some(ev) = self.read_slot(seq) {
+                out.push(ev);
+            }
+            seq += 1;
+        }
+        (out, seq)
+    }
+
+    /// Seqlock read of one slot: accept only if the stamp matches the
+    /// wanted sequence both before and after reading the fields.
+    fn read_slot(&self, seq: u64) -> Option<Event> {
+        let slot = &self.slots[(seq as usize) & (self.slots.len() - 1)];
+        if slot.stamp.load(Ordering::Acquire) != seq + 1 {
+            return None; // lapped, or a writer mid-publish
+        }
+        let kind = slot.kind.load(Ordering::Relaxed);
+        let a = slot.a.load(Ordering::Relaxed);
+        let b = slot.b.load(Ordering::Relaxed);
+        fence(Ordering::Acquire);
+        if slot.stamp.load(Ordering::Relaxed) != seq + 1 {
+            return None; // overwritten underneath us
+        }
+        EventKind::from_code(kind).map(|kind| Event { seq, kind, a, b })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn records_in_order_with_monotonic_seqs() {
+        let ring = EventRing::with_capacity(64);
+        assert_eq!(ring.record(EventKind::Suspect, 3, 10), 0);
+        assert_eq!(ring.record(EventKind::Dead, 3, 11), 1);
+        assert_eq!(ring.record(EventKind::RepairBatch, 40, 11), 2);
+        let (events, next) = ring.read_since(0, 16);
+        assert_eq!(next, 3);
+        assert_eq!(
+            events,
+            vec![
+                Event { seq: 0, kind: EventKind::Suspect, a: 3, b: 10 },
+                Event { seq: 1, kind: EventKind::Dead, a: 3, b: 11 },
+                Event { seq: 2, kind: EventKind::RepairBatch, a: 40, b: 11 },
+            ]
+        );
+        // Cursor resume: nothing new yet.
+        let (events, next2) = ring.read_since(next, 16);
+        assert!(events.is_empty());
+        assert_eq!(next2, next);
+    }
+
+    #[test]
+    fn paging_respects_max_and_resumes() {
+        let ring = EventRing::with_capacity(64);
+        for i in 0..10 {
+            ring.record(EventKind::EpochPublish, i, 0);
+        }
+        let (page1, cur) = ring.read_since(0, 4);
+        assert_eq!(page1.len(), 4);
+        let (page2, cur) = ring.read_since(cur, 4);
+        assert_eq!(page2.len(), 4);
+        let (page3, cur) = ring.read_since(cur, 4);
+        assert_eq!(page3.len(), 2);
+        assert_eq!(cur, ring.head());
+        let all: Vec<u64> = page1
+            .iter()
+            .chain(&page2)
+            .chain(&page3)
+            .map(|e| e.a)
+            .collect();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lapped_reader_sees_a_clamped_gap_not_garbage() {
+        let ring = EventRing::with_capacity(8);
+        for i in 0..20 {
+            ring.record(EventKind::EpochPublish, i, 0);
+        }
+        let (events, next) = ring.read_since(0, 64);
+        assert_eq!(next, 20);
+        // Only the retained window comes back, sequence numbers intact.
+        assert_eq!(events.len(), 8);
+        assert_eq!(events.first().unwrap().seq, 12);
+        assert_eq!(events.last().unwrap().seq, 19);
+        assert!(events.windows(2).all(|w| w[1].seq == w[0].seq + 1));
+    }
+
+    #[test]
+    fn concurrent_writers_never_produce_torn_events() {
+        let ring = Arc::new(EventRing::with_capacity(32));
+        let writers: Vec<_> = (0..4u64)
+            .map(|w| {
+                let ring = Arc::clone(&ring);
+                std::thread::spawn(move || {
+                    for i in 0..2000u64 {
+                        // Self-checking payload: b must always equal a + 1.
+                        let a = w * 1_000_000 + i;
+                        ring.record(EventKind::RepairBatch, a, a + 1);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let ring = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                let mut cursor = 0;
+                let mut seen = 0usize;
+                for _ in 0..10_000 {
+                    let (events, next) = ring.read_since(cursor, 64);
+                    for ev in &events {
+                        assert_eq!(ev.b, ev.a + 1, "torn event {ev:?}");
+                    }
+                    seen += events.len();
+                    cursor = next;
+                }
+                seen
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        reader.join().unwrap();
+        assert_eq!(ring.head(), 8000);
+        let (tail, _) = ring.read_since(0, 64);
+        for ev in tail {
+            assert_eq!(ev.b, ev.a + 1);
+        }
+    }
+
+    #[test]
+    fn event_lines_round_trip() {
+        let events = vec![
+            Event { seq: 5, kind: EventKind::Suspect, a: 2, b: 9 },
+            Event { seq: 6, kind: EventKind::LeaseGrant, a: 4, b: 0 },
+        ];
+        let blob = Event::encode_all(&events);
+        assert_eq!(Event::parse_all(&blob).unwrap(), events);
+        assert!(Event::parse("7 no_such_kind 1 2").is_err());
+        assert!(Event::parse("not-a-seq suspect 1 2").is_err());
+        assert!(Event::parse_all(&[0xff]).is_err());
+        assert_eq!(Event::parse_all(b"").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn kind_tokens_round_trip() {
+        for kind in [
+            EventKind::EpochPublish,
+            EventKind::LeaseGrant,
+            EventKind::LeaseLoss,
+            EventKind::ShardSplit,
+            EventKind::ShardMerge,
+            EventKind::Suspect,
+            EventKind::SuspectClear,
+            EventKind::Dead,
+            EventKind::RepairBatch,
+            EventKind::Promotion,
+        ] {
+            assert_eq!(EventKind::from_token(kind.token()), Some(kind));
+            assert_eq!(EventKind::from_code(kind.code()), Some(kind));
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! The observability plane, observed strictly from outside.
+//!
+//! These tests drive a real cluster over loopback TCP and then look at
+//! it the way an operator would — `METRICS` and `EVENTS` over the wire,
+//! never the in-process handles. The headline claim they pin: a full
+//! kill → suspect → dead → repair cycle is reconstructible from
+//! `EVENTS` cursor pages alone, read from any surviving node, because
+//! every node a coordinator spawns shares the coordinator's causal
+//! event ring.
+
+use asura::coordinator::Coordinator;
+use asura::net::{Conn, NodeServer};
+use asura::obs::{Event, EventKind, Obs};
+use std::net::SocketAddr;
+use std::time::Duration;
+
+/// Walk the `EVENTS` cursor from `since` until a page comes back empty,
+/// returning every event seen plus the final resume cursor.
+fn drain_events(conn: &mut Conn, since: u64) -> (Vec<Event>, u64) {
+    let mut all = Vec::new();
+    let mut cursor = since;
+    loop {
+        let (page, next) = conn.events(cursor).expect("EVENTS page");
+        if page.is_empty() {
+            return (all, next);
+        }
+        all.extend(page);
+        cursor = next;
+    }
+}
+
+#[test]
+fn kill_repair_cycle_reconstructs_from_events_cursors_alone() {
+    let mut coord = Coordinator::new(2);
+    for i in 0..5 {
+        coord.spawn_node(i, 1.0).unwrap();
+    }
+    for k in 0..200u64 {
+        coord.set(k, b"payload").unwrap();
+    }
+
+    let victim = 2;
+    coord.kill_node(victim).unwrap();
+    coord.mark_suspect(victim);
+    coord.mark_dead(victim).unwrap();
+    while coord.repair_pending() > 0 {
+        coord.repair_step(64).unwrap();
+    }
+
+    // Everything below reads ONLY the wire, from a surviving node.
+    let (_, addr): (_, SocketAddr) = *coord
+        .node_addrs()
+        .iter()
+        .find(|(id, _)| *id != victim)
+        .expect("a survivor is listed");
+    let mut conn = Conn::connect_binary(addr).unwrap();
+    let (events, _) = drain_events(&mut conn, 0);
+
+    assert!(
+        events.windows(2).all(|w| w[1].seq > w[0].seq),
+        "cursor pages must yield strictly monotone sequence numbers"
+    );
+    let find = |pred: &dyn Fn(&Event) -> bool| events.iter().find(|e| pred(e)).copied();
+    let suspect = find(&|e| e.kind == EventKind::Suspect && e.a == u64::from(victim))
+        .expect("suspect verdict on the wire");
+    let dead = find(&|e| e.kind == EventKind::Dead && e.a == u64::from(victim))
+        .expect("death verdict on the wire");
+    let repair = find(&|e| e.kind == EventKind::RepairBatch && e.seq > dead.seq)
+        .expect("repair batch after the death");
+    assert!(
+        suspect.seq < dead.seq && dead.seq < repair.seq,
+        "causal order suspect -> dead -> repair violated: {events:?}"
+    );
+    // The death event carries the epoch published after the removal,
+    // and that publish itself is on the ring, after the death.
+    assert!(
+        events
+            .iter()
+            .any(|e| e.kind == EventKind::EpochPublish && e.a == dead.b && e.seq > dead.seq),
+        "post-death epoch publish must follow the death on the ring"
+    );
+
+    // Resuming from a mid-stream cursor replays only what follows it.
+    let (tail, _) = drain_events(&mut conn, suspect.seq);
+    assert!(tail.iter().all(|e| e.seq > suspect.seq));
+    assert!(tail.iter().any(|e| e.seq == dead.seq));
+
+    // The shared registry is equally visible from the survivor: the
+    // coordinator's repair accounting rode the same plane.
+    let dump = conn.metrics().unwrap();
+    assert_eq!(dump.counter("coord.deaths"), Some(1));
+    assert!(dump.counter("coord.keys_repaired").unwrap_or(0) > 0);
+}
+
+#[test]
+fn metrics_families_surface_over_both_framings() {
+    let mut server = NodeServer::spawn_with_obs(("127.0.0.1", 0), Obs::new()).unwrap();
+    let addr = server.addr();
+
+    let mut bin = Conn::connect_binary(addr).unwrap();
+    for k in 0..32u64 {
+        bin.set(k, vec![7u8; 16]).unwrap();
+        assert!(bin.get(k).unwrap().is_some());
+    }
+    let mut text = Conn::connect(addr).unwrap();
+    text.ping().unwrap();
+    text.set(99, b"t".to_vec()).unwrap();
+
+    // Either framing returns the same registry; each serve path has
+    // been timing its own ops into its own family.
+    let from_bin = bin.metrics().unwrap();
+    let from_text = text.metrics().unwrap();
+    for dump in [&from_bin, &from_text] {
+        let bin_ops = dump.histo("serve.binary.op_ns").expect("binary family");
+        assert!(bin_ops.count >= 64, "64 binary ops timed, saw {}", bin_ops.count);
+        assert!(bin_ops.p99_ns >= bin_ops.p50_ns);
+        assert!(bin_ops.max_ns >= bin_ops.p99_ns);
+        let text_ops = dump.histo("serve.text.op_ns").expect("text family");
+        assert!(text_ops.count >= 2, "text ops timed, saw {}", text_ops.count);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn stats_carries_the_heard_epoch_and_a_monotone_uptime() {
+    let mut server = NodeServer::spawn_with_obs(("127.0.0.1", 0), Obs::new()).unwrap();
+    let mut conn = Conn::connect_binary(server.addr()).unwrap();
+
+    let fresh = conn.stats_full().unwrap();
+    assert_eq!(fresh.epoch, 0, "no coordinator heard from yet");
+
+    conn.heartbeat(7).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    let later = conn.stats_full().unwrap();
+    assert_eq!(later.epoch, 7, "STATS reports the heartbeat epoch");
+    assert!(
+        later.uptime_ms >= fresh.uptime_ms,
+        "uptime must be monotone: {} then {}",
+        fresh.uptime_ms,
+        later.uptime_ms
+    );
+
+    // The text framing carries the same two fields.
+    let mut text = Conn::connect(server.addr()).unwrap();
+    let via_text = text.stats_full().unwrap();
+    assert_eq!(via_text.epoch, 7);
+    assert!(via_text.uptime_ms >= later.uptime_ms);
+    server.shutdown();
+}

@@ -18,8 +18,8 @@ use asura::prng::SplitMix64;
 use asura::storage::Version;
 use std::io::BufReader;
 
-const REQUEST_VARIANTS: usize = 15;
-const RESPONSE_VARIANTS: usize = 16;
+const REQUEST_VARIANTS: usize = 17;
+const RESPONSE_VARIANTS: usize = 18;
 
 fn arb_value(rng: &mut SplitMix64, max: usize) -> Vec<u8> {
     let len = (rng.next_u64() % (max as u64 + 1)) as usize;
@@ -102,7 +102,11 @@ fn arb_request(rng: &mut SplitMix64, v: usize) -> Request {
         12 => Request::StateGet {
             shard: rng.next_u64(),
         },
-        13 => Request::Ping,
+        13 => Request::Metrics,
+        14 => Request::Events {
+            since: rng.next_u64(),
+        },
+        15 => Request::Ping,
         _ => Request::Quit,
     }
 }
@@ -128,6 +132,8 @@ fn arb_response(rng: &mut SplitMix64, v: usize) -> Response {
             bytes: rng.next_u64(),
             sets: rng.next_u64(),
             gets: rng.next_u64(),
+            epoch: rng.next_u64(),
+            uptime_ms: rng.next_u64(),
         },
         8 => Response::Alive {
             epoch: rng.next_u64(),
@@ -152,7 +158,16 @@ fn arb_response(rng: &mut SplitMix64, v: usize) -> Response {
             term: rng.next_u64(),
             value: arb_value(rng, 256),
         },
-        14 => Response::Pong,
+        // The metrics/events payloads are length-prefixed blobs in BOTH
+        // framings, so arbitrary bytes (newlines included) must survive.
+        14 => Response::Metrics {
+            dump: arb_value(rng, 256),
+        },
+        15 => Response::Events {
+            next: rng.next_u64(),
+            events: arb_value(rng, 256),
+        },
+        16 => Response::Pong,
         _ => Response::Error(arb_error_text(rng)),
     }
 }

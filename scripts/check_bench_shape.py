@@ -24,12 +24,26 @@ Requirements are keyed by the artifact's "bench" field:
                      result per serve plane (text_threaded,
                      binary_reactor) with ops, ops_per_sec, p50_us,
                      p99_us, its own clients count, and a finite lost
+  obs             -> top-level overhead_ratio (gated against the
+                     OBS_MAX_OVERHEAD ceiling), p99_baseline_us,
+                     p99_instrumented_us; one result per plane
+                     (obs_baseline, obs_instrumented) with ops,
+                     ops_per_sec, percentiles, op_samples, lost; an
+                     optional events object must carry causal
+                     suspect/dead/repair cursors in order
+
+Artifact names are part of the contract: a basename starting with
+``BENCH_`` must match a known ``BENCH_<kind>`` prefix, and the file's
+"bench" field must agree with that prefix — CI renaming an artifact (or
+a bench writing the wrong kind under a known name) fails the gate
+instead of uploading a mislabelled trajectory.
 
 Only stdlib; runs on the bare CI python3.
 """
 
 import json
 import math
+import os
 import sys
 
 TOP_REQUIRED = {
@@ -38,6 +52,16 @@ TOP_REQUIRED = {
     "coord_failover": ["nodes", "read_quorum", "write_quorum", "lease_ttl_ms"],
     "shard": ["shards", "nodes_per_shard", "read_quorum", "write_quorum", "lease_ttl_ms"],
     "serve_async": ["clients", "drivers", "keys", "read_ops", "pipeline_depth"],
+    "obs": [
+        "clients",
+        "drivers",
+        "keys",
+        "read_ops",
+        "pipeline_depth",
+        "overhead_ratio",
+        "p99_baseline_us",
+        "p99_instrumented_us",
+    ],
 }
 
 RESULT_REQUIRED = {
@@ -52,6 +76,7 @@ RESULT_REQUIRED = {
     ],
     "shard": ["ops", "ops_per_sec", "shards", "lost"],
     "serve_async": ["ops", "ops_per_sec", "p50_us", "p99_us", "clients", "lost"],
+    "obs": ["ops", "ops_per_sec", "p50_us", "p99_us", "clients", "lost", "op_samples"],
 }
 
 # Extra fields required on specific result scenarios.
@@ -59,6 +84,41 @@ SCENARIO_REQUIRED = {
     ("failover", "failover"): ["time_to_detect_ms", "time_to_full_rf_ms"],
     ("shard", "shard_failover"): ["time_to_new_epoch_ms", "stranded_writes"],
 }
+
+# The obs bench's acceptance ceiling: a merged observability plane may
+# cost at most this ratio of baseline throughput. Mirrors the default
+# gate inside `bench-obs` itself, so a trajectory produced with a
+# loosened --max-overhead still fails CI here.
+OBS_MAX_OVERHEAD = 1.10
+
+# Artifact basename prefix -> the bench kind it must contain. Matched
+# longest-prefix-first so BENCH_coord_failover.json never resolves via
+# a shorter cousin, and suffixed variants (BENCH_throughput_w8.json)
+# inherit their family's rule.
+FILENAME_BENCH = {
+    "BENCH_throughput": "throughput",
+    "BENCH_failover": "failover",
+    "BENCH_coord_failover": "coord_failover",
+    "BENCH_shard": "shard",
+    "BENCH_serve_async": "serve_async",
+    "BENCH_obs": "obs",
+}
+
+
+def expected_bench_for(path):
+    """(expected kind, is BENCH_-named) for ``path``.
+
+    Files not named ``BENCH_*`` (local scratch outputs) carry no naming
+    contract; BENCH_-named files must match a known prefix.
+    """
+    base = os.path.basename(path)
+    if not base.startswith("BENCH_"):
+        return None, False
+    best = None
+    for prefix, kind in FILENAME_BENCH.items():
+        if base.startswith(prefix) and (best is None or len(prefix) > len(best[0])):
+            best = (prefix, kind)
+    return (best[1] if best else None), True
 
 
 def finite_number(value):
@@ -85,7 +145,33 @@ def check_file(path):
     bench = doc.get("bench")
     if bench not in TOP_REQUIRED:
         return [f"{path}: unknown or missing bench kind {bench!r}"]
+    expected, bench_named = expected_bench_for(path)
+    if bench_named and expected is None:
+        return [f"{path}: BENCH_-named artifact matches no known BENCH_<kind> prefix"]
+    if expected is not None and bench != expected:
+        return [f"{path}: named for bench {expected!r} but contains bench {bench!r}"]
     check_fields(doc, TOP_REQUIRED[bench], path, errors)
+    if bench == "obs":
+        ratio = doc.get("overhead_ratio")
+        if finite_number(ratio) and ratio > OBS_MAX_OVERHEAD:
+            errors.append(
+                f"{path}: overhead_ratio {ratio} exceeds the {OBS_MAX_OVERHEAD}x ceiling"
+            )
+        events = doc.get("events")
+        if events is not None:
+            if not isinstance(events, dict):
+                errors.append(f"{path}: events is not an object")
+            else:
+                where = f"{path}: events"
+                check_fields(
+                    events,
+                    ["total", "suspect_seq", "dead_seq", "repair_seq"],
+                    where,
+                    errors,
+                )
+                seqs = [events.get(k) for k in ("suspect_seq", "dead_seq", "repair_seq")]
+                if all(finite_number(s) for s in seqs) and not seqs[0] < seqs[1] < seqs[2]:
+                    errors.append(f"{where}: suspect/dead/repair cursors out of causal order")
     results = doc.get("results")
     if not isinstance(results, list) or not results:
         errors.append(f"{path}: results missing or empty")
