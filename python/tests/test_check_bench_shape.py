@@ -169,11 +169,51 @@ def good_obs():
     }
 
 
+def good_loadctl():
+    result_common = {
+        "ops": 8000,
+        "wall_s": 0.9,
+        "lost": 0,
+    }
+    results = []
+    for scenario in ("uniform_read", "skewed_read", "flash_crowd", "rolling_hotspot"):
+        for engine in ("baseline", "steered"):
+            results.append(
+                dict(
+                    result_common,
+                    scenario=scenario,
+                    engine=engine,
+                    ops_per_sec=70000.0,
+                    p50_us=110.0,
+                    p99_us=900.0,
+                    cache_hits=0 if engine == "baseline" else 4200,
+                    shed=0,
+                )
+            )
+    return {
+        "bench": "loadctl",
+        "nodes": 6,
+        "replicas": 3,
+        "keys": 2000,
+        "read_ops": 8000,
+        "value_size": 16,
+        "workers": 4,
+        "pipeline_depth": 16,
+        "zipf_alpha": 1.2,
+        "cache_capacity": 256,
+        "seed": 4269,
+        "skew_p99_ratio": 1.4,
+        "skew_p99_ratio_baseline": 2.7,
+        "results": results,
+    }
+
+
 def test_well_shaped_artifacts_pass(tmp_path):
     assert shape.check_file(_write(tmp_path, good_throughput())) == []
     assert shape.check_file(_write(tmp_path, good_shard())) == []
     assert shape.check_file(_write(tmp_path, good_serve_async())) == []
     assert shape.check_file(_write(tmp_path, good_obs(), "BENCH_obs.json")) == []
+    assert shape.check_file(_write(tmp_path, good_loadctl(), "BENCH_loadctl.json")) == []
 
 
 def test_obs_missing_ratio_or_samples_fails(tmp_path):
@@ -210,6 +250,32 @@ def test_obs_events_must_be_causally_ordered(tmp_path):
     doc = good_obs()
     del doc["events"]
     assert shape.check_file(_write(tmp_path, doc)) == []
+
+
+def test_loadctl_skew_ceiling_is_gated(tmp_path):
+    doc = good_loadctl()
+    doc["skew_p99_ratio"] = 3.7
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("skew_p99_ratio" in e and "ceiling" in e for e in errors)
+    # At the ceiling exactly is still acceptable.
+    doc["skew_p99_ratio"] = shape.LOADCTL_MAX_SKEW_RATIO
+    assert shape.check_file(_write(tmp_path, doc)) == []
+    # A non-finite ratio fails the finite check, not the ceiling check.
+    doc = good_loadctl()
+    doc["skew_p99_ratio"] = math.nan
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("skew_p99_ratio" in e and "finite" in e for e in errors)
+
+
+def test_loadctl_missing_fields_fail(tmp_path):
+    doc = good_loadctl()
+    del doc["skew_p99_ratio"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("skew_p99_ratio" in e for e in errors)
+    doc = good_loadctl()
+    del doc["results"][3]["p99_us"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("results[3]" in e and "p99_us" in e for e in errors)
 
 
 def test_bench_named_files_must_match_a_known_prefix(tmp_path):

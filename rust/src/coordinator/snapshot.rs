@@ -157,6 +157,47 @@ impl PlacerSnapshot {
         }
     }
 
+    /// Load-aware variant of [`Self::read_targets`]: the same
+    /// suspect-aware preference order, with power-of-two-choices
+    /// steering applied to the head. The first two candidates — when
+    /// both are healthy — are scored by `score` (lower wins;
+    /// `net::pool` passes the `(in_flight, staleness-decayed EWMA)`
+    /// pair from its shared `LoadMap`) and swapped when the second is
+    /// strictly cheaper, so a read-one probe lands on the less-loaded
+    /// replica while ties keep placement order. Steering never
+    /// promotes a suspect over a healthy replica, and for `quorum >=
+    /// 2` it only reorders the front-runners — the returned *set* is
+    /// identical to the unsteered one. Returns whether the sample
+    /// swapped the leader (feeds the `steer.swapped` counter).
+    ///
+    /// Taking the score as a closure keeps the dependency direction
+    /// clean: this module publishes placement, the pool owns load.
+    pub fn read_targets_steered<S: Ord>(
+        &self,
+        key: DatumId,
+        quorum: usize,
+        scratch: &mut Vec<NodeId>,
+        out: &mut Vec<NodeId>,
+        mut score: impl FnMut(NodeId) -> S,
+    ) -> bool {
+        let q = quorum.max(1);
+        // Ask for one extra candidate so a read-one probe still has a
+        // pair to sample; read_targets caps at the replica set, so
+        // RF=1 degenerates to the unsteered single target.
+        self.read_targets(key, q.max(2), scratch, out);
+        let mut swapped = false;
+        if out.len() >= 2
+            && !self.is_suspect(out[0])
+            && !self.is_suspect(out[1])
+            && score(out[1]) < score(out[0])
+        {
+            out.swap(0, 1);
+            swapped = true;
+        }
+        out.truncate(q);
+        swapped
+    }
+
     /// Internal consistency check (used by the linearizability tests):
     /// the address map and the placement function(s) must describe the
     /// same membership. In the sharded case the shard starts must also
@@ -354,6 +395,114 @@ mod tests {
         assert_eq!(out, vec![set[0], set[2]]);
         snap.read_targets(42, 99, &mut scratch, &mut out);
         assert_eq!(out.len(), 3, "capped at the replica set size");
+    }
+
+    #[test]
+    fn read_targets_rf1_with_suspect_primary_still_serves() {
+        // snapshot_with_nodes builds with replicas = 1: the sole
+        // holder must keep serving even when the detector distrusts
+        // it — there is nowhere else the data lives.
+        let mut snap = snapshot_with_nodes(1, 4);
+        let mut set = Vec::new();
+        snap.replica_set(7, &mut set);
+        assert_eq!(set.len(), 1);
+        let only = set[0];
+        snap.suspects = vec![only];
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        snap.read_targets(7, 1, &mut scratch, &mut out);
+        assert_eq!(out, vec![only], "sole holder serves even when suspect");
+        // The steered variant has no second choice to sample at RF=1.
+        let swapped = snap.read_targets_steered(7, 1, &mut scratch, &mut out, |_| 0u64);
+        assert!(!swapped);
+        assert_eq!(out, vec![only]);
+    }
+
+    #[test]
+    fn read_targets_all_suspect_falls_back_to_placement_order() {
+        let mut snap = snapshot_with_nodes(1, 5);
+        snap.replicas = 3;
+        let mut set = Vec::new();
+        snap.replica_set(9, &mut set);
+        let mut all = set.clone();
+        all.sort_unstable();
+        snap.suspects = all;
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        snap.read_targets(9, 2, &mut scratch, &mut out);
+        assert_eq!(out, vec![set[0], set[1]]);
+        // Both front-runners suspect: steering stands down even when
+        // the scores are wildly skewed.
+        let swapped = snap.read_targets_steered(9, 1, &mut scratch, &mut out, |n| {
+            u64::from(n == set[0]) * 9
+        });
+        assert!(!swapped);
+        assert_eq!(out, vec![set[0]]);
+    }
+
+    #[test]
+    fn steered_read_targets_prefer_less_loaded_healthy_replica() {
+        let mut snap = snapshot_with_nodes(1, 5);
+        snap.replicas = 3;
+        let mut set = Vec::new();
+        snap.replica_set(42, &mut set);
+        let (primary, second) = (set[0], set[1]);
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        // Synthetic LoadMap: the primary carries 7 in-flight ops,
+        // everyone else is idle — the probe must steer to set[1].
+        let swapped = snap.read_targets_steered(42, 1, &mut scratch, &mut out, |n| {
+            if n == primary {
+                (7u64, 0u64)
+            } else {
+                (0, 0)
+            }
+        });
+        assert!(swapped);
+        assert_eq!(out, vec![second]);
+        // Equal scores: keep placement order, no churn on ties.
+        let swapped = snap.read_targets_steered(42, 1, &mut scratch, &mut out, |_| (0u64, 0u64));
+        assert!(!swapped);
+        assert_eq!(out, vec![primary]);
+        // Equal in-flight: the EWMA component breaks the tie.
+        let swapped = snap.read_targets_steered(42, 1, &mut scratch, &mut out, |n| {
+            (1u64, if n == primary { 900u64 } else { 100 })
+        });
+        assert!(swapped);
+        assert_eq!(out, vec![second]);
+        // A suspect never leads over a healthy replica, however cheap
+        // its score looks: with set[1] and set[2] suspect, the healthy
+        // primary pairs with suspect set[1] and the swap is vetoed.
+        let mut sus = vec![set[1], set[2]];
+        sus.sort_unstable();
+        snap.suspects = sus;
+        let swapped = snap.read_targets_steered(42, 1, &mut scratch, &mut out, |n| {
+            if n == primary {
+                (9u64, 9u64)
+            } else {
+                (0, 0)
+            }
+        });
+        assert!(!swapped);
+        assert_eq!(out, vec![primary]);
+        // Quorum >= 2 returns the same set as the unsteered call, at
+        // most reordered at the head.
+        snap.suspects = Vec::new();
+        let mut plain = Vec::new();
+        snap.read_targets(42, 2, &mut scratch, &mut plain);
+        snap.read_targets_steered(42, 2, &mut scratch, &mut out, |n| {
+            if n == primary {
+                (7u64, 0u64)
+            } else {
+                (0, 0)
+            }
+        });
+        let mut a = plain.clone();
+        let mut b = out.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "steering reorders, never reselects");
+        assert_eq!(out[0], second, "busier primary demoted to second probe");
     }
 
     #[test]

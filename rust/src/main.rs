@@ -46,6 +46,12 @@
 //!               [--seed S --out BENCH_obs.json]     off vs on; --events adds
 //!                                                   the kill-mid-storm causal
 //!                                                   EVENTS smoke
+//! asura bench-loadctl [--nodes N --replicas R]      load-control harness:
+//!               [--keys K --reads R --workers W]    uniform / zipf / flash-
+//!               [--depth D --alpha A --phases P]    crowd / rolling-hotspot
+//!               [--cache C --seed S]                reads, baseline vs
+//!               [--out BENCH_loadctl.json]          steered+cached engine;
+//!                                                   emits skew-p99/uniform-p99
 //! asura node    --port P                            standalone storage node
 //! asura place   --id X --nodes N [--algo asura|chash|straw]
 //! asura info    [--artifacts DIR]                   PJRT + artifact info
@@ -71,6 +77,7 @@ fn main() {
         "bench-coord-failover" => run_bench_coord_failover(&args),
         "bench-shard" => run_bench_shard(&args),
         "bench-obs" => run_bench_obs(&args),
+        "bench-loadctl" => run_bench_loadctl(&args),
         "node" => run_node(&args),
         "place" => run_place(&args),
         "info" => run_info(&args),
@@ -551,6 +558,56 @@ fn run_bench_obs(args: &Args) -> anyhow::Result<()> {
     );
     let reports = asura::loadgen::run_obs_suite(&cfg)?;
     anyhow::ensure!(reports.len() == 2, "both obs planes must run");
+    Ok(())
+}
+
+/// Load-control harness: the four read scenarios (uniform / zipf /
+/// flash-crowd / rolling-hotspot) against a baseline primary-read pool
+/// vs the steered + hot-key-cached pool, emitting the skewed-p99 /
+/// uniform-p99 shape to `BENCH_loadctl.json`.
+fn run_bench_loadctl(args: &Args) -> anyhow::Result<()> {
+    let default = asura::loadgen::LoadctlConfig::default();
+    let cfg = asura::loadgen::LoadctlConfig {
+        nodes: args.get_u64("nodes", default.nodes as u64) as u32,
+        replicas: args.get_u64("replicas", default.replicas as u64) as usize,
+        keys: args.get_u64("keys", default.keys),
+        read_ops: args.get_u64("reads", default.read_ops),
+        value_size: args.get_u64("value-size", default.value_size as u64) as u32,
+        workers: args.get_u64("workers", default.workers as u64) as usize,
+        pipeline_depth: args.get_u64("depth", default.pipeline_depth as u64) as usize,
+        zipf_alpha: args.get_f64("alpha", default.zipf_alpha),
+        hotspot_phases: args.get_u64("phases", default.hotspot_phases),
+        cache_capacity: args.get_u64("cache", default.cache_capacity as u64) as usize,
+        seed: args.get_u64("seed", default.seed),
+        out_json: Some(
+            args.get_or("out", default.out_json.as_deref().unwrap_or("BENCH_loadctl.json"))
+                .to_string(),
+        ),
+    };
+    anyhow::ensure!(cfg.nodes >= 2, "--nodes must be >= 2");
+    anyhow::ensure!(
+        cfg.replicas >= 2 && cfg.replicas <= cfg.nodes as usize,
+        "--replicas must be within 2..=nodes (steering needs a choice)"
+    );
+    anyhow::ensure!(cfg.keys >= 1, "--keys must be >= 1");
+    anyhow::ensure!(
+        cfg.workers >= 1 && cfg.pipeline_depth >= 1,
+        "--workers and --depth must be >= 1"
+    );
+    println!(
+        "bench-loadctl: {} nodes, rf={}, {} keys, {} reads/cell, {} workers × depth {}, \
+         zipf {:.2}, cache {}",
+        cfg.nodes,
+        cfg.replicas,
+        cfg.keys,
+        cfg.read_ops,
+        cfg.workers,
+        cfg.pipeline_depth,
+        cfg.zipf_alpha,
+        cfg.cache_capacity
+    );
+    let reports = asura::loadgen::run_loadctl_suite(&cfg)?;
+    anyhow::ensure!(reports.len() == 8, "all (scenario, engine) cells must run");
     Ok(())
 }
 

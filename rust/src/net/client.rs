@@ -166,6 +166,37 @@ impl Conn {
         }
     }
 
+    /// [`Self::vset`] that surfaces admission-control shedding instead
+    /// of treating it as a protocol error: `Ok(Err(retry_ms))` means
+    /// the node refused the write under load and suggests retrying
+    /// after roughly `retry_ms` milliseconds. The router's replay path
+    /// uses this to back off with jitter rather than failing over.
+    pub fn vset_or_busy(
+        &mut self,
+        key: u64,
+        version: Version,
+        value: Vec<u8>,
+    ) -> std::io::Result<MaybeShed<VsetAck>> {
+        match self.call(&Request::VSet { key, version, value })? {
+            Response::VStored { applied, version } => Ok(Ok(VsetAck { applied, version })),
+            Response::Busy { retry_ms } => Ok(Err(retry_ms)),
+            other => Err(bad(other)),
+        }
+    }
+
+    /// [`Self::vget`] that surfaces admission-control shedding:
+    /// `Ok(Err(retry_ms))` means the node shed the read — the key may
+    /// well be held there, so the caller must retry (after backoff)
+    /// rather than count the replica as a miss.
+    pub fn vget_or_busy(&mut self, key: u64) -> std::io::Result<MaybeShed<Option<(Version, Vec<u8>)>>> {
+        match self.call(&Request::VGet { key })? {
+            Response::VValue { version, value } => Ok(Ok(Some((version, value)))),
+            Response::NotFound => Ok(Ok(None)),
+            Response::Busy { retry_ms } => Ok(Err(retry_ms)),
+            other => Err(bad(other)),
+        }
+    }
+
     /// Version-guarded delete: removes the node's copy only if it is
     /// not newer than `guard` (the migration delete phase's fence).
     ///
@@ -395,6 +426,11 @@ impl Conn {
         Ok(out)
     }
 }
+
+/// A response that may instead be an admission-control shed:
+/// `Err(retry_ms)` carries the node's suggested backoff in
+/// milliseconds.
+pub type MaybeShed<T> = Result<T, u64>;
 
 /// The full `STATS` response as seen by a client.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -83,6 +83,7 @@ pub const OP_PONG: u8 = 0x8F;
 pub const OP_ERROR: u8 = 0x90;
 pub const OP_METRICS_DUMP: u8 = 0x91;
 pub const OP_EVENTS_PAGE: u8 = 0x92;
+pub const OP_BUSY: u8 = 0x93;
 
 fn corrupt(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
@@ -462,6 +463,10 @@ pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
             put_u64(out, *next);
             put_bytes(out, events);
         }
+        Response::Busy { retry_ms } => {
+            out.push(OP_BUSY);
+            put_u64(out, *retry_ms);
+        }
         Response::Pong => out.push(OP_PONG),
         Response::Error(e) => {
             out.push(OP_ERROR);
@@ -525,6 +530,7 @@ pub fn decode_response(body: &[u8]) -> io::Result<Response> {
             next: c.u64()?,
             events: c.bytes()?,
         },
+        OP_BUSY => Response::Busy { retry_ms: c.u64()? },
         OP_PONG => Response::Pong,
         OP_ERROR => Response::Error(c.string()?),
         other => return Err(corrupt(&format!("unknown response opcode {other:#04x}"))),
@@ -623,6 +629,7 @@ mod tests {
                 next: u64::MAX,
                 events: b"7 suspect 3 9\n".to_vec(),
             },
+            Response::Busy { retry_ms: u64::MAX },
             // Binary framing round-trips error strings byte-exact —
             // including the newlines the text form must flatten.
             Response::Error("line1\nline2".into()),

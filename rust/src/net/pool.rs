@@ -60,14 +60,29 @@
 //!   wired ([`PoolConfig::obs`]), flush RTTs also land in the shared
 //!   registry's `pool.flush.rtt_ns` histogram so the client-side view
 //!   shows up in the cluster `METRICS` dump next to the serve-side
-//!   numbers.
+//!   numbers;
+//! - **reads are steered by load** ([`PoolConfig::steer_reads`]):
+//!   power-of-two-choices over the two leading healthy replicas of each
+//!   GET, scored `(in_flight, staleness-decayed EWMA)` from the shared
+//!   [`LoadMap`] — balanced placement decides *where copies live*,
+//!   steering decides *which copy answers*, and under zipf-skewed
+//!   traffic that choice is what bounds the tail;
+//! - **detected hot keys are served router-side** ([`HotKeyCache`],
+//!   [`PoolConfig::hot_cache`]): a fixed-capacity, lock-striped LRU fed
+//!   by a sliding-window hot detector, invalidated wholesale on every
+//!   snapshot publication and per-key on every write the pool stamps;
+//! - **overload is shed, not queued**: a node at its admission ceiling
+//!   answers `BUSY` (and the client-side ceiling,
+//!   [`PoolConfig::node_ceiling`], stops flushing to it at all); shed
+//!   ops back off by the server's hint plus deterministic jitter and
+//!   replay — [`BatchResult::shed`] counts them, and none are lost.
 
 use super::client::Conn;
 use super::protocol::{Request, Response};
 use crate::algo::{DatumId, NodeId};
 use crate::coordinator::registry::KeyRegistry;
-use crate::coordinator::snapshot::{SnapshotCell, SnapshotReader};
-use crate::obs::{Gauge, Histo, Obs};
+use crate::coordinator::snapshot::{PlacerSnapshot, SnapshotCell, SnapshotReader};
+use crate::obs::{Counter, Gauge, Histo, Obs, Registry};
 use crate::stats::Summary;
 use crate::storage::{Version, WriteClock};
 use crate::workload::{value_for, Op};
@@ -75,14 +90,49 @@ use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Bound on replay rounds in the retry paths. Defensive only: each
 /// extra round requires another concurrent epoch publication, so the
 /// loops terminate as soon as churn does.
 const MAX_REPLAYS: usize = 8;
+
+/// Bound on admission-control retry rounds per op. Each round backs
+/// off by the server's hint plus jitter, so a node that sheds this
+/// many consecutive probes of one op is effectively unreachable and
+/// the op fails loudly instead of spinning.
+const MAX_BUSY_RETRIES: usize = 16;
+
+/// Steering staleness horizon: an EWMA sample older than this is
+/// halved once per elapsed interval when scoring a replica. Roughly
+/// one probe interval — long enough that an actively-flushed node
+/// never decays, short enough that an idle (or just-recovered) node's
+/// frozen score melts away within a few intervals instead of pinning
+/// the steering decision forever.
+const STALE_AFTER_NS: u64 = 150_000_000;
+
+/// Lock stripes in the hot-key cache.
+const HOT_STRIPES: usize = 8;
+
+/// Sliding-window length, in per-stripe accesses, after which hot-key
+/// access counts are halved — detection tracks recent traffic, not
+/// lifetime totals.
+const HOT_WINDOW: u64 = 1024;
+
+/// Windowed accesses of one key before it counts as hot and its next
+/// fetched value may be admitted to the cache.
+const HOT_THRESHOLD: u32 = 8;
+
+/// Monotonic nanoseconds since the first call (process-local origin),
+/// never zero. Every load stamp shares this origin, so staleness math
+/// is a plain subtraction and `0` stays free as the never-fed
+/// sentinel.
+fn now_ns() -> u64 {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    (ORIGIN.get_or_init(Instant::now).elapsed().as_nanos() as u64).max(1)
+}
 
 /// EWMA smoothing divisor: `new = old + (rtt - old) / EWMA_DIV`.
 /// 8 weights the last ~dozen flushes — fast enough to notice a replica
@@ -98,6 +148,8 @@ pub struct NodeLoad {
     /// Requests currently in flight to this replica across the pool.
     pub in_flight: Gauge,
     ewma_ns: AtomicU64,
+    /// [`now_ns`] stamp of the last EWMA observation (0 = never fed).
+    touched_ns: AtomicU64,
 }
 
 impl NodeLoad {
@@ -105,6 +157,34 @@ impl NodeLoad {
     /// nanoseconds. Zero until the first flush completes.
     pub fn ewma_ns(&self) -> u64 {
         self.ewma_ns.load(Ordering::Relaxed)
+    }
+
+    /// [`now_ns`] stamp of the last RTT observation (0 = never fed).
+    pub fn touched_ns(&self) -> u64 {
+        self.touched_ns.load(Ordering::Relaxed)
+    }
+
+    /// Replica-selection score at `now_ns` — lower is cheaper. Ordered
+    /// comparison ranks by in-flight requests first and breaks ties on
+    /// the RTT EWMA, discounted by one halving per `stale_after_ns`
+    /// elapsed since the last observation. The decay is the starvation
+    /// guard: a replica that went idle (or just recovered from a
+    /// stall) stops being judged by its frozen last score, melts
+    /// toward cold within a few intervals, attracts a probe — and the
+    /// probe itself refreshes the stamp. A never-fed replica scores
+    /// zero RTT for the same reason: cold nodes should *draw* their
+    /// first probe, not wait for one.
+    pub fn score(&self, now_ns: u64, stale_after_ns: u64) -> (u64, u64) {
+        let in_flight = self.in_flight.get().max(0) as u64;
+        let touched = self.touched_ns();
+        let ewma = if touched == 0 {
+            0
+        } else {
+            let idle = now_ns.saturating_sub(touched);
+            let halvings = (idle / stale_after_ns.max(1)).min(63);
+            self.ewma_ns() >> halvings
+        };
+        (in_flight, ewma)
     }
 
     /// Fold one flush RTT into the EWMA. The first sample seeds the
@@ -119,6 +199,7 @@ impl NodeLoad {
             (old as i64 + (rtt_ns as i64 - old as i64) / EWMA_DIV) as u64
         };
         self.ewma_ns.store(new, Ordering::Relaxed);
+        self.touched_ns.store(now_ns(), Ordering::Relaxed);
     }
 }
 
@@ -144,6 +225,18 @@ impl LoadMap {
         Arc::clone(nodes.entry(node).or_default())
     }
 
+    /// Ensure a row exists for every node in `nodes`. Pool
+    /// construction registers the full published membership, so cold
+    /// replicas appear in [`Self::snapshot`] as zeroed rows — and
+    /// score as cold in steering — instead of being silently absent
+    /// until their first flush.
+    pub fn register_all(&self, nodes: impl IntoIterator<Item = NodeId>) {
+        let mut map = self.nodes.lock().unwrap();
+        for n in nodes {
+            map.entry(n).or_default();
+        }
+    }
+
     /// Point-in-time `(node, in_flight, ewma_ns)` rows, sorted by node
     /// id. The rows are independently-read relaxed atomics, not a
     /// consistent cut — fine for the load-skew decisions they feed.
@@ -155,6 +248,175 @@ impl LoadMap {
             .collect();
         out.sort_unstable_by_key(|&(n, _, _)| n);
         out
+    }
+}
+
+/// Router-side cache of detected hot keys: a fixed-capacity,
+/// lock-striped LRU fed by the pool's own read traffic.
+///
+/// **Detection** is a sliding-window access counter: every routed GET
+/// bumps its key's count in the owning stripe, counts are halved each
+/// [`HOT_WINDOW`] stripe accesses (recent traffic dominates), and a
+/// key at [`HOT_THRESHOLD`] is hot — its next fetched value is
+/// admitted.
+///
+/// **Invalidation contract**: the whole cache drops on every snapshot
+/// publication — callers pass the generation they routed under, and a
+/// roll forward clears every stripe, because a rebalance can move a
+/// key's replica set and nothing cached under the old view may
+/// survive it — and a single key drops on every write the pool
+/// stamps. A read racing a concurrent write can still re-admit the
+/// pre-write value for a beat; the *next* write invalidates it again.
+/// The cache absorbs read-dominated hot spots; it is not a coherence
+/// layer.
+pub struct HotKeyCache {
+    /// Snapshot generation the contents are valid under.
+    generation: AtomicU64,
+    /// Max cached entries per stripe.
+    per_stripe: usize,
+    stripes: Vec<Mutex<CacheStripe>>,
+}
+
+#[derive(Default)]
+struct CacheStripe {
+    /// Sliding-window access counts (detection).
+    counts: HashMap<DatumId, u32>,
+    /// Accesses since the window last decayed.
+    window: u64,
+    /// Cached hot values.
+    values: HashMap<DatumId, Vec<u8>>,
+    /// LRU order, coldest first. Stripes hold a handful of entries,
+    /// so the O(len) reorder on hit beats a linked structure.
+    order: Vec<DatumId>,
+}
+
+impl CacheStripe {
+    /// Record one access; returns the key's windowed count.
+    fn touch(&mut self, key: DatumId) -> u32 {
+        self.window += 1;
+        if self.window >= HOT_WINDOW {
+            self.window = 0;
+            self.counts.retain(|_, c| {
+                *c /= 2;
+                *c > 0
+            });
+        }
+        let c = self.counts.entry(key).or_insert(0);
+        *c = c.saturating_add(1);
+        *c
+    }
+
+    /// Move `key` to the warm end of the LRU order (append if new).
+    fn promote(&mut self, key: DatumId) {
+        if let Some(pos) = self.order.iter().position(|&k| k == key) {
+            self.order.remove(pos);
+        }
+        self.order.push(key);
+    }
+}
+
+impl HotKeyCache {
+    /// Cache holding at most ~`capacity` entries across
+    /// [`HOT_STRIPES`] stripes, valid under snapshot `generation`.
+    pub fn new(capacity: usize, generation: u64) -> HotKeyCache {
+        HotKeyCache {
+            generation: AtomicU64::new(generation),
+            per_stripe: capacity.div_ceil(HOT_STRIPES).max(1),
+            stripes: (0..HOT_STRIPES).map(|_| Mutex::default()).collect(),
+        }
+    }
+
+    fn stripe(&self, key: DatumId) -> &Mutex<CacheStripe> {
+        // Fibonacci-mix before taking the top bits: sequential and
+        // range-clustered key spaces still spread across stripes.
+        let h = (key ^ (key >> 32)).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.stripes[(h >> 56) as usize % HOT_STRIPES]
+    }
+
+    /// Roll the cache forward to `generation`, dropping everything
+    /// cached under an older one (the epoch-swap invalidation point).
+    /// Returns whether the caller's view is current — a stale caller
+    /// must neither serve nor admit.
+    fn sync_generation(&self, generation: u64) -> bool {
+        let cur = self.generation.load(Ordering::Acquire);
+        if generation == cur {
+            return true;
+        }
+        if generation < cur {
+            return false;
+        }
+        if self
+            .generation
+            .compare_exchange(cur, generation, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            for stripe in &self.stripes {
+                let mut s = stripe.lock().unwrap();
+                s.counts.clear();
+                s.window = 0;
+                s.values.clear();
+                s.order.clear();
+            }
+        }
+        self.generation.load(Ordering::Acquire) == generation
+    }
+
+    /// Record an access under snapshot `generation` and return the
+    /// cached value on a hit.
+    pub fn get(&self, generation: u64, key: DatumId) -> Option<Vec<u8>> {
+        if !self.sync_generation(generation) {
+            return None;
+        }
+        let mut s = self.stripe(key).lock().unwrap();
+        s.touch(key);
+        let hit = s.values.get(&key).cloned();
+        if hit.is_some() {
+            s.promote(key);
+        }
+        hit
+    }
+
+    /// Offer a value fetched from a replica. Admitted only while the
+    /// key is hot and `generation` is current; at stripe capacity the
+    /// coldest entry is evicted. Returns whether it was admitted.
+    pub fn admit(&self, generation: u64, key: DatumId, value: &[u8]) -> bool {
+        if !self.sync_generation(generation) {
+            return false;
+        }
+        let mut s = self.stripe(key).lock().unwrap();
+        if s.counts.get(&key).copied().unwrap_or(0) < HOT_THRESHOLD {
+            return false;
+        }
+        let existed = s.values.insert(key, value.to_vec()).is_some();
+        s.promote(key);
+        if !existed && s.values.len() > self.per_stripe {
+            let coldest = s.order.remove(0);
+            s.values.remove(&coldest);
+        }
+        true
+    }
+
+    /// Drop `key` — a write the pool stamped just invalidated it.
+    /// Returns whether a cached value was actually dropped.
+    pub fn invalidate_key(&self, key: DatumId) -> bool {
+        let mut s = self.stripe(key).lock().unwrap();
+        if s.values.remove(&key).is_some() {
+            if let Some(pos) = s.order.iter().position(|&k| k == key) {
+                s.order.remove(pos);
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Entries currently cached, across all stripes.
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().values.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -223,6 +485,18 @@ pub struct PoolConfig {
     /// putting the client-side latency view on the cluster `METRICS`
     /// surface. Wired by `Coordinator::connect_pool`.
     pub(crate) obs: Option<Obs>,
+    /// Steer GET fan-outs by live load: power-of-two-choices over the
+    /// two leading healthy replicas, scored `(in_flight,
+    /// staleness-decayed EWMA)` from [`Self::loads`]
+    /// ([`PlacerSnapshot::read_targets_steered`]).
+    pub(crate) steer_reads: bool,
+    /// Hot-key cache capacity in entries (`0` = no cache): detected
+    /// hot keys are served from the router itself ([`HotKeyCache`]).
+    pub(crate) cache_capacity: usize,
+    /// Client-side admission ceiling: a node whose in-flight gauge is
+    /// at or above this is not flushed to — its ops shed straight to
+    /// the replay paths (`0` = off).
+    pub(crate) node_ceiling: i64,
 }
 
 impl Default for PoolConfig {
@@ -239,6 +513,9 @@ impl Default for PoolConfig {
             repair_hints: None,
             loads: LoadMap::new(),
             obs: None,
+            steer_reads: false,
+            cache_capacity: 0,
+            node_ceiling: 0,
         }
     }
 }
@@ -324,6 +601,28 @@ impl PoolConfig {
         self.obs = Some(obs);
         self
     }
+
+    /// Steer reads by live replica load (power-of-two-choices over
+    /// the [`LoadMap`]).
+    pub fn steer_reads(mut self, on: bool) -> PoolConfig {
+        self.steer_reads = on;
+        self
+    }
+
+    /// Serve up to `capacity` detected hot keys from the router's own
+    /// [`HotKeyCache`] (`0` disables it).
+    pub fn hot_cache(mut self, capacity: usize) -> PoolConfig {
+        self.cache_capacity = capacity;
+        self
+    }
+
+    /// Shed client-side when a node's in-flight gauge reaches
+    /// `ceiling` — the ops back off and replay instead of piling onto
+    /// a saturated node (`0` disables the ceiling).
+    pub fn node_ceiling(mut self, ceiling: i64) -> PoolConfig {
+        self.node_ceiling = ceiling;
+        self
+    }
 }
 
 /// Aggregated outcome of an op batch.
@@ -347,6 +646,12 @@ pub struct BatchResult {
     /// reads (`read_quorum > 1`): the reader pushed the freshest
     /// version back to the lagging holder.
     pub read_repairs: u64,
+    /// GETs served straight from the router's hot-key cache — no
+    /// network round trip at all (also counted in [`Self::hits`]).
+    pub cache_hits: u64,
+    /// Ops shed at least once by admission control — a server `BUSY`
+    /// or the client-side ceiling — before resolving on a replay.
+    pub shed: u64,
     /// Lowest / highest membership epoch observed while executing.
     pub epoch_min: u64,
     pub epoch_max: u64,
@@ -381,6 +686,8 @@ impl BatchResult {
         self.failovers += other.failovers;
         self.degraded_writes += other.degraded_writes;
         self.read_repairs += other.read_repairs;
+        self.cache_hits += other.cache_hits;
+        self.shed += other.shed;
         self.epoch_min = self.epoch_min.min(other.epoch_min);
         self.epoch_max = self.epoch_max.max(other.epoch_max);
         self.latency.absorb(&other.latency);
@@ -437,14 +744,22 @@ impl RouterPool {
     pub fn connect(cell: &Arc<SnapshotCell>, cfg: PoolConfig) -> std::io::Result<RouterPool> {
         assert!(cfg.workers >= 1, "pool needs at least one worker");
         assert!(cfg.pipeline_depth >= 1, "pipeline depth must be >= 1");
+        // Every published member gets a load row at build time — a
+        // zeroed row, not a silent absence — so LoadMap snapshots and
+        // steering scores see cold replicas from the first op.
+        cfg.loads
+            .register_all(cell.load().addrs.iter().map(|&(n, _)| n));
+        let cache = (cfg.cache_capacity > 0)
+            .then(|| Arc::new(HotKeyCache::new(cfg.cache_capacity, cell.generation())));
         let mut workers = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let reader = SnapshotReader::new(Arc::clone(cell));
             let cfg = cfg.clone();
+            let cache = cache.clone();
             let (tx, rx) = mpsc::channel::<Job>();
             let handle = std::thread::Builder::new()
                 .name(format!("router-{w}"))
-                .spawn(move || worker_loop(reader, rx, cfg))?;
+                .spawn(move || worker_loop(reader, rx, cfg, cache))?;
             workers.push(WorkerHandle {
                 tx: Some(tx),
                 handle: Some(handle),
@@ -487,21 +802,80 @@ impl RouterPool {
     }
 }
 
-fn worker_loop(reader: SnapshotReader, rx: mpsc::Receiver<Job>, cfg: PoolConfig) {
+fn worker_loop(
+    reader: SnapshotReader,
+    rx: mpsc::Receiver<Job>,
+    cfg: PoolConfig,
+    cache: Option<Arc<HotKeyCache>>,
+) {
     let rtt_histo = cfg
         .obs
         .as_ref()
         .map(|o| o.registry.histo("pool.flush.rtt_ns"));
+    let stats = cfg.obs.as_ref().map(|o| LoadCtlStats::new(&o.registry));
     let mut worker = Worker {
         reader,
         conns: HashMap::new(),
         loads: HashMap::new(),
         rtt_histo,
+        stats,
+        cache,
+        group_gen: 0,
         cfg,
     };
     while let Ok(Job::Run(ops, done)) = rx.recv() {
         let _ = done.send(worker.run_ops(&ops));
     }
+}
+
+/// Load-control metric families, resolved once per worker when an
+/// [`Obs`] is wired. Increments are additionally gated on
+/// [`Obs::enabled`] ([`Worker::stat`]), like every pool-side
+/// recording site.
+struct LoadCtlStats {
+    steer_choices: Arc<Counter>,
+    steer_swapped: Arc<Counter>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    cache_admitted: Arc<Counter>,
+    cache_invalidated: Arc<Counter>,
+    shed_busy: Arc<Counter>,
+    shed_retries: Arc<Counter>,
+    shed_client: Arc<Counter>,
+}
+
+impl LoadCtlStats {
+    fn new(registry: &Registry) -> LoadCtlStats {
+        LoadCtlStats {
+            steer_choices: registry.counter("steer.choices"),
+            steer_swapped: registry.counter("steer.swapped"),
+            cache_hits: registry.counter("cache.hits"),
+            cache_misses: registry.counter("cache.misses"),
+            cache_admitted: registry.counter("cache.admitted"),
+            cache_invalidated: registry.counter("cache.invalidated"),
+            shed_busy: registry.counter("shed.busy"),
+            shed_retries: registry.counter("shed.retries"),
+            shed_client: registry.counter("shed.client"),
+        }
+    }
+}
+
+/// Sleep out an admission-control shed: the server's hint plus
+/// bounded deterministic jitter — a SplitMix64 finalizer over the key
+/// and attempt, so concurrent retries of different keys (and
+/// successive retries of one key) desynchronize without any global
+/// randomness source. Total sleep lands in `[hint, 2*hint)` ms, with
+/// the hint clamped so a wild server value cannot stall a caller.
+fn busy_backoff(attempt: usize, retry_ms: u64, key: DatumId) {
+    let hint = retry_ms.clamp(1, 50);
+    let mut x = key ^ ((attempt as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    let jitter_us = x % (hint * 1000);
+    std::thread::sleep(Duration::from_micros(hint * 1000 + jitter_us));
 }
 
 /// Per-GET fan-out bookkeeping within one pipeline group.
@@ -518,6 +892,11 @@ struct GetProbe {
     /// after that SET must not share it (they would read pre-SET state)
     /// and fall back to a post-flush read instead.
     closed: bool,
+    /// Admission control shed at least one of this key's probes (a
+    /// server `BUSY` or the client-side ceiling): if no other replica
+    /// answered, the probe resolves through the backoff-and-replay
+    /// path instead of counting a miss.
+    shed: bool,
     /// Max RTT among the flushes that carried this key's probes.
     rtt_ns: f64,
 }
@@ -532,10 +911,50 @@ struct Worker {
     /// Flush-RTT histogram, present iff the pool has an [`Obs`] wired;
     /// recording is additionally gated on [`Obs::enabled`] per flush.
     rtt_histo: Option<Arc<Histo>>,
+    /// Load-control counters, present iff the pool has an [`Obs`].
+    stats: Option<LoadCtlStats>,
+    /// Hot-key cache shared by every worker of the pool, present iff
+    /// [`PoolConfig::hot_cache`] was set.
+    cache: Option<Arc<HotKeyCache>>,
+    /// Snapshot generation the current group routed under (set at the
+    /// top of `run_group`); cache admissions validate against it.
+    group_gen: u64,
     cfg: PoolConfig,
 }
 
 impl Worker {
+    /// Bump one load-control counter, gated like every obs site.
+    fn stat(&self, pick: impl Fn(&LoadCtlStats) -> &Arc<Counter>) {
+        if let Some(stats) = &self.stats {
+            if self.cfg.obs.as_ref().is_some_and(|o| o.enabled()) {
+                pick(stats).inc();
+            }
+        }
+    }
+
+    /// Probe targets for one GET: the suspect-aware placement order,
+    /// with the leading pair steered by live load when configured.
+    fn pick_read_targets(
+        &mut self,
+        snap: &PlacerSnapshot,
+        key: DatumId,
+        replicas: &mut Vec<NodeId>,
+        targets: &mut Vec<NodeId>,
+    ) {
+        let quorum = self.cfg.read_quorum;
+        if !self.cfg.steer_reads {
+            snap.read_targets(key, quorum, replicas, targets);
+            return;
+        }
+        let now = now_ns();
+        let swapped = snap.read_targets_steered(key, quorum, replicas, targets, |n| {
+            self.load(n).score(now, STALE_AFTER_NS)
+        });
+        self.stat(|s| &s.steer_choices);
+        if swapped {
+            self.stat(|s| &s.steer_swapped);
+        }
+    }
     /// Connection to `node`, (re)established if absent or re-addressed,
     /// in the framing the pool was configured for.
     fn conn(&mut self, node: NodeId, addr: SocketAddr) -> std::io::Result<&mut Conn> {
@@ -580,6 +999,7 @@ impl Worker {
         // replay paths refresh the reader mid-group, which would make
         // `observed_generation()` lie about how fresh the routing was.
         let routed_generation = self.reader.observed_generation();
+        self.group_gen = routed_generation;
         res.note_epoch(snap.epoch);
         if snap.addrs.is_empty() {
             return Err(other_err("no live nodes in the published snapshot".to_string()));
@@ -600,6 +1020,14 @@ impl Worker {
         for op in group {
             match *op {
                 Op::Set { key, size } => {
+                    // A stamped write invalidates the router cache
+                    // before it is even flushed: any later read must
+                    // refetch from the replicas.
+                    if let Some(cache) = &self.cache {
+                        if cache.invalidate_key(key) {
+                            self.stat(|s| &s.cache_invalidated);
+                        }
+                    }
                     let version = self.cfg.clock.stamp(snap.epoch);
                     snap.replica_set(key, &mut replicas);
                     for &n in &replicas {
@@ -615,32 +1043,53 @@ impl Worker {
                         p.closed = true;
                     }
                 }
-                Op::Get { key } => match probes.entry(key) {
-                    Entry::Occupied(mut e) if !e.get().closed => {
-                        e.get_mut().count += 1;
-                    }
-                    Entry::Occupied(_) => {
-                        after_write_reads.push(key);
-                    }
-                    Entry::Vacant(v) => {
-                        // A fresh probe is FIFO-safe even after a SET of
-                        // this key in the same group: the probe targets
-                        // are a subset of the replica set, so on every
-                        // probed connection the VSET precedes this VGET
-                        // and the read observes the write.
-                        snap.read_targets(key, self.cfg.read_quorum, &mut replicas, &mut targets);
-                        for &n in &targets {
-                            by_node.entry(n).or_default().push(Request::VGet { key });
+                Op::Get { key } => {
+                    // Router-side fast path: a detected hot key under
+                    // the generation this group routed under is served
+                    // with no network round trip at all. Every lookup
+                    // also feeds the sliding-window hot detector.
+                    if let Some(cache) = &self.cache {
+                        let t0 = Instant::now();
+                        if cache.get(routed_generation, key).is_some() {
+                            self.stat(|s| &s.cache_hits);
+                            res.hits += 1;
+                            res.cache_hits += 1;
+                            res.latency.push(t0.elapsed().as_nanos() as f64);
+                            continue;
                         }
-                        v.insert(GetProbe {
-                            count: 1,
-                            responses: Vec::with_capacity(targets.len()),
-                            conn_failed: false,
-                            closed: false,
-                            rtt_ns: 0.0,
-                        });
+                        self.stat(|s| &s.cache_misses);
                     }
-                },
+                    match probes.entry(key) {
+                        Entry::Occupied(mut e) if !e.get().closed => {
+                            e.get_mut().count += 1;
+                        }
+                        Entry::Occupied(_) => {
+                            after_write_reads.push(key);
+                        }
+                        Entry::Vacant(v) => {
+                            // A fresh probe is FIFO-safe even after a SET of
+                            // this key in the same group: the probe targets
+                            // are a subset of the replica set, so on every
+                            // probed connection the VSET precedes this VGET
+                            // and the read observes the write.
+                            let targets_len = {
+                                self.pick_read_targets(&snap, key, &mut replicas, &mut targets);
+                                for &n in &targets {
+                                    by_node.entry(n).or_default().push(Request::VGet { key });
+                                }
+                                targets.len()
+                            };
+                            v.insert(GetProbe {
+                                count: 1,
+                                responses: Vec::with_capacity(targets_len),
+                                conn_failed: false,
+                                closed: false,
+                                shed: false,
+                                rtt_ns: 0.0,
+                            });
+                        }
+                    }
+                }
             }
         }
         res.ops += group.len() as u64;
@@ -653,12 +1102,43 @@ impl Worker {
         let mut node_ids: Vec<NodeId> = by_node.keys().copied().collect();
         node_ids.sort_unstable();
         let mut failed_sets: HashMap<DatumId, (Version, Vec<u8>)> = HashMap::new();
+        // SETs shed by admission control (server `BUSY` or the
+        // client-side ceiling), with the largest retry hint seen for
+        // each: backed off and replayed after the flush fan-out.
+        let mut shed_sets: HashMap<DatumId, (Version, Vec<u8>, u64)> = HashMap::new();
         for node in node_ids {
             let reqs = &by_node[&node];
             let addr = snap
                 .addr_of(node)
                 .ok_or_else(|| other_err(format!("no address for node {node}")))?;
-            match self.flush_node(node, addr, reqs, res, &mut probes) {
+            // Client-side admission: a node already at its in-flight
+            // ceiling is not flushed to at all — its ops go straight
+            // to the backoff-and-replay paths, which retry under a
+            // fresh view once the node has had air to drain.
+            if self.cfg.node_ceiling > 0
+                && self.load(node).in_flight.get() >= self.cfg.node_ceiling
+            {
+                self.stat(|s| &s.shed_client);
+                for req in reqs {
+                    match req {
+                        Request::VSet { key, version, value } => {
+                            shed_sets.insert(*key, (*version, value.clone(), 1));
+                        }
+                        Request::VGet { key } => {
+                            if let Some(p) = probes.get_mut(key) {
+                                p.shed = true;
+                            }
+                        }
+                        other => {
+                            return Err(other_err(format!(
+                                "unexpected request in client shed {other:?}"
+                            )));
+                        }
+                    }
+                }
+                continue;
+            }
+            match self.flush_node(node, addr, reqs, res, &mut probes, &mut shed_sets) {
                 Ok(()) => {}
                 Err(e) if is_conn_error(&e) => {
                     for req in reqs {
@@ -686,8 +1166,18 @@ impl Worker {
             }
         }
         for (key, (version, value)) in failed_sets {
+            // A key both conn-failed and shed replays once, through
+            // the shed path (backoff first).
+            if shed_sets.contains_key(&key) {
+                continue;
+            }
             self.replay_set(key, version, &value, res)?;
             res.failovers += 1;
+        }
+        for (key, (version, value, hint)) in shed_sets {
+            busy_backoff(0, hint, key);
+            self.replay_set(key, version, &value, res)?;
+            res.shed += 1;
         }
         // GETs ordered after a SET of the same key within this group:
         // resolved with a fresh blocking read issued after every flush
@@ -762,16 +1252,29 @@ impl Worker {
                         // over within its quorum fan-out.
                         res.failovers += probe.count;
                     }
+                    if probe.shed {
+                        res.shed += probe.count;
+                    }
                     res.hits += probe.count;
                     for _ in 0..probe.count {
                         res.latency.push(probe.rtt_ns);
                     }
                 }
-                None if probe.conn_failed => {
+                None if probe.conn_failed || probe.shed => {
+                    // No replica answered: every probe either failed at
+                    // the connection level or was shed by admission
+                    // control. The replay path retries with backoff on
+                    // further sheds, so the read resolves rather than
+                    // masquerading as a miss.
+                    if probe.shed {
+                        res.shed += probe.count;
+                    }
                     for _ in 0..probe.count {
                         if self.replay_get(key, res)? {
                             res.hits += 1;
-                            res.failovers += 1;
+                            if probe.conn_failed {
+                                res.failovers += 1;
+                            }
                         } else {
                             res.misses += 1;
                             if self.cfg.verify_hits {
@@ -815,6 +1318,7 @@ impl Worker {
         reqs: &[Request],
         res: &mut BatchResult,
         probes: &mut HashMap<DatumId, GetProbe>,
+        shed_sets: &mut HashMap<DatumId, (Version, Vec<u8>, u64)>,
     ) -> std::io::Result<()> {
         let load = self.load(node);
         load.in_flight.add(reqs.len() as i64);
@@ -850,12 +1354,29 @@ impl Worker {
                     res.latency.push(rtt_ns);
                     acked.push(*key);
                 }
+                // A shed SET goes to the backoff-and-replay queue; a
+                // key already queued keeps the larger retry hint.
+                (Request::VSet { key, version, value }, Response::Busy { retry_ms }) => {
+                    self.stat(|s| &s.shed_busy);
+                    let entry = shed_sets
+                        .entry(*key)
+                        .or_insert_with(|| (*version, value.clone(), retry_ms));
+                    entry.2 = entry.2.max(retry_ms);
+                }
                 // Responses are consumed by value — the hit's bytes move
                 // into the probe, no clone on the read hot path.
                 (Request::VGet { key }, Response::VValue { version, value }) => {
                     // Lamport receive rule: stamps minted after seeing
                     // this version always exceed it.
                     self.cfg.clock.observe(version.seq);
+                    // Offer the fetched value to the hot-key cache
+                    // (admitted only if the detector says hot and the
+                    // routing generation is still current).
+                    if let Some(cache) = &self.cache {
+                        if cache.admit(self.group_gen, *key, &value) {
+                            self.stat(|s| &s.cache_admitted);
+                        }
+                    }
                     if let Some(p) = probes.get_mut(key) {
                         p.responses.push((node, Some((version, value))));
                         p.rtt_ns = p.rtt_ns.max(rtt_ns);
@@ -865,6 +1386,12 @@ impl Worker {
                     if let Some(p) = probes.get_mut(key) {
                         p.responses.push((node, None));
                         p.rtt_ns = p.rtt_ns.max(rtt_ns);
+                    }
+                }
+                (Request::VGet { key }, Response::Busy { .. }) => {
+                    self.stat(|s| &s.shed_busy);
+                    if let Some(p) = probes.get_mut(key) {
+                        p.shed = true;
                     }
                 }
                 (_, resp) => {
@@ -879,13 +1406,16 @@ impl Worker {
     }
 
     /// Replay a SET against the freshest replica set, going around again
-    /// if membership changes under the probe. The replay carries the
-    /// op's *original* version stamp, so it is idempotent and can never
-    /// clobber a newer write that landed meanwhile. The write succeeds
-    /// once its quorum acks ([`PoolConfig::write_quorum`]); a holder
-    /// unreachable beyond the quorum is the repair plane's debt, counted
-    /// in [`BatchResult::degraded_writes`]. A write that cannot even
-    /// reach its quorum under stable membership fails loudly — that
+    /// if membership changes under the probe — or if admission control
+    /// sheds it, after backing off by the server's hint plus jitter.
+    /// The replay carries the op's *original* version stamp, so it is
+    /// idempotent and can never clobber a newer write that landed
+    /// meanwhile. The write succeeds once its quorum acks
+    /// ([`PoolConfig::write_quorum`]); a holder unreachable beyond the
+    /// quorum is the repair plane's debt, counted in
+    /// [`BatchResult::degraded_writes`]. A write that cannot even
+    /// reach its quorum under stable membership — or is still shed
+    /// after [`MAX_BUSY_RETRIES`] backoff rounds — fails loudly; that
     /// beats silently dropping it.
     fn replay_set(
         &mut self,
@@ -897,24 +1427,29 @@ impl Worker {
         let t0 = Instant::now();
         let mut replicas: Vec<NodeId> = Vec::new();
         let mut last_err: Option<std::io::Error> = None;
-        for _ in 0..MAX_REPLAYS {
+        for round in 0..MAX_BUSY_RETRIES {
             let snap = Arc::clone(self.reader.refresh());
             res.note_epoch(snap.epoch);
             snap.replica_set(key, &mut replicas);
             let mut acks = 0usize;
+            let mut busy: Option<u64> = None;
             for &n in &replicas {
                 let addr = snap
                     .addr_of(n)
                     .ok_or_else(|| other_err(format!("no address for node {n}")))?;
                 match self
                     .conn(n, addr)
-                    .and_then(|c| c.vset(key, version, value.to_vec()))
+                    .and_then(|c| c.vset_or_busy(key, version, value.to_vec()))
                 {
-                    Ok(ack) => {
+                    Ok(Ok(ack)) => {
                         if !ack.applied {
                             self.cfg.clock.observe(ack.version.seq);
                         }
                         acks += 1;
+                    }
+                    Ok(Err(retry_ms)) => {
+                        self.stat(|s| &s.shed_busy);
+                        busy = Some(busy.unwrap_or(0).max(retry_ms));
                     }
                     Err(e) if is_conn_error(&e) => {
                         self.conns.remove(&n);
@@ -941,6 +1476,13 @@ impl Worker {
                 }
                 return Ok(());
             }
+            // Shed below quorum: back off and go around again — the
+            // node answered, so it is alive and draining.
+            if let Some(hint) = busy {
+                self.stat(|s| &s.shed_retries);
+                busy_backoff(round, hint, key);
+                continue;
+            }
             if self.reader.cell_generation() == self.reader.observed_generation() {
                 break;
             }
@@ -966,28 +1508,42 @@ impl Worker {
         let mut found = false;
         let mut answered = false;
         let mut last_err: Option<std::io::Error> = None;
-        'rounds: for _ in 0..MAX_REPLAYS {
+        'rounds: for round in 0..MAX_BUSY_RETRIES {
             let snap = Arc::clone(self.reader.refresh());
             res.note_epoch(snap.epoch);
             snap.replica_set(key, &mut replicas);
             answered = false;
+            let mut busy: Option<u64> = None;
             for &n in &replicas {
                 let addr = snap
                     .addr_of(n)
                     .ok_or_else(|| other_err(format!("no address for node {n}")))?;
-                match self.conn(n, addr).and_then(|c| c.vget(key)) {
-                    Ok(Some((ver, _))) => {
+                match self.conn(n, addr).and_then(|c| c.vget_or_busy(key)) {
+                    Ok(Ok(Some((ver, _)))) => {
                         self.cfg.clock.observe(ver.seq);
                         found = true;
                         break 'rounds;
                     }
-                    Ok(None) => answered = true,
+                    Ok(Ok(None)) => answered = true,
+                    Ok(Err(retry_ms)) => {
+                        self.stat(|s| &s.shed_busy);
+                        busy = Some(busy.unwrap_or(0).max(retry_ms));
+                    }
                     Err(e) if is_conn_error(&e) => {
                         self.conns.remove(&n);
                         last_err = Some(e);
                     }
                     Err(e) => return Err(e),
                 }
+            }
+            // Any replica shed the read: back off and go around — a
+            // shed holder may well have the copy (a "not found" from
+            // its peer must not become a miss while the loaded node
+            // was never actually asked).
+            if let Some(hint) = busy {
+                self.stat(|s| &s.shed_retries);
+                busy_backoff(round, hint, key);
+                continue;
             }
             if self.reader.cell_generation() == self.reader.observed_generation() {
                 break; // stable membership and still absent: a real miss
@@ -1264,5 +1820,121 @@ mod tests {
         assert_eq!(res.hits, 300);
         assert_eq!(res.lost, 0);
         assert_eq!(res.epoch_max, coord.epoch());
+    }
+
+    #[test]
+    fn load_rows_exist_before_any_traffic() {
+        // Pool construction registers every published member: cold
+        // replicas appear as zeroed rows, not silent absences.
+        let coord = cluster(3, 2);
+        let cell = coord.snapshot_cell();
+        let pool = RouterPool::connect(&cell, PoolConfig::new(1)).unwrap();
+        let rows = pool.loads().snapshot();
+        assert_eq!(rows.len(), 3, "every member gets a row at build: {rows:?}");
+        for (node, in_flight, ewma_ns) in rows {
+            assert_eq!((in_flight, ewma_ns), (0, 0), "node {node} must start zeroed");
+        }
+    }
+
+    #[test]
+    fn stale_scores_decay_toward_cold() {
+        let load = NodeLoad::default();
+        // Never fed: scores fully cold, so a fresh node draws probes.
+        assert_eq!(load.score(now_ns(), STALE_AFTER_NS), (0, 0));
+        load.observe_rtt(64_000);
+        let t = load.touched_ns();
+        assert!(t > 0, "observation must stamp the load row");
+        // Fresh observation: full weight.
+        assert_eq!(load.score(t, STALE_AFTER_NS), (0, 64_000));
+        // One halving per elapsed staleness interval.
+        assert_eq!(load.score(t + STALE_AFTER_NS, STALE_AFTER_NS), (0, 32_000));
+        assert_eq!(load.score(t + 3 * STALE_AFTER_NS, STALE_AFTER_NS), (0, 8_000));
+        // Long-idle node melts all the way to cold instead of pinning
+        // the steering decision on its frozen last score.
+        assert_eq!(load.score(t + 64 * STALE_AFTER_NS, STALE_AFTER_NS), (0, 0));
+        // In-flight requests always dominate the comparison.
+        load.in_flight.add(5);
+        assert_eq!(load.score(t, STALE_AFTER_NS).0, 5);
+    }
+
+    #[test]
+    fn hot_key_cache_detects_admits_and_invalidates() {
+        let cache = HotKeyCache::new(8, 1);
+        let key = 42u64;
+        // Cold key: not admitted, regardless of the value on offer.
+        assert!(!cache.admit(1, key, b"v0"));
+        // Cross the sliding-window threshold: the key becomes hot.
+        for _ in 0..HOT_THRESHOLD {
+            assert_eq!(cache.get(1, key), None);
+        }
+        assert!(cache.admit(1, key, b"v1"));
+        assert_eq!(cache.get(1, key).as_deref(), Some(&b"v1"[..]));
+        // A write drops exactly that key; heat survives, so the next
+        // fetched value re-admits immediately.
+        assert!(cache.invalidate_key(key));
+        assert_eq!(cache.get(1, key), None);
+        assert!(cache.admit(1, key, b"v2"));
+        // Epoch swap: rolling the generation forward clears values AND
+        // detector counts — nothing cached under the old view survives.
+        assert_eq!(cache.get(2, key), None);
+        assert!(cache.is_empty(), "generation roll must clear the cache");
+        assert!(!cache.admit(2, key, b"v3"), "heat must not survive the roll");
+        // A stale caller (routed under the old generation) can neither
+        // serve nor admit.
+        assert_eq!(cache.get(1, key), None);
+        assert!(!cache.admit(1, key, b"v4"));
+    }
+
+    #[test]
+    fn hot_key_cache_evicts_coldest_at_capacity() {
+        // Capacity of one entry per stripe: every admission of a new
+        // hot key evicts its stripe's previous occupant.
+        let cache = HotKeyCache::new(HOT_STRIPES, 1);
+        for key in 0..32u64 {
+            for _ in 0..HOT_THRESHOLD {
+                cache.get(1, key);
+            }
+            assert!(cache.admit(1, key, b"hot"), "hot key {key} must admit");
+        }
+        assert!(
+            cache.len() <= HOT_STRIPES,
+            "capacity must hold: {} entries",
+            cache.len()
+        );
+        assert!(!cache.is_empty());
+    }
+
+    #[test]
+    fn steered_pool_with_cache_serves_hot_reads() {
+        let coord = cluster(4, 2);
+        let cell = coord.snapshot_cell();
+        let obs = Obs::new();
+        let cfg = PoolConfig::new(2)
+            .pipeline_depth(8)
+            .verify_hits(true)
+            .steer_reads(true)
+            .hot_cache(128)
+            .obs(obs.clone());
+        let pool = RouterPool::connect(&cell, cfg).unwrap();
+        let sets: Vec<Op> = (0..50u64).map(|key| Op::Set { key, size: 16 }).collect();
+        assert_eq!(pool.run(sets).unwrap().lost, 0);
+        // Flash-crowd one key: after the detector warms up, reads come
+        // straight from the router cache — still counted as hits.
+        let mut total = BatchResult::new();
+        for _ in 0..4 {
+            let gets: Vec<Op> = (0..200).map(|_| Op::Get { key: 7 }).collect();
+            total.merge(&pool.run(gets).unwrap());
+        }
+        assert_eq!((total.hits, total.lost), (800, 0));
+        assert!(total.cache_hits > 0, "hot key never served from cache: {total:?}");
+        // A write invalidates the hot key; the next read refetches
+        // from the replicas and still hits.
+        pool.run(vec![Op::Set { key: 7, size: 16 }]).unwrap();
+        let res = pool.run(vec![Op::Get { key: 7 }]).unwrap();
+        assert_eq!((res.hits, res.lost), (1, 0));
+        // The load-control counters reached the shared registry.
+        let dump = obs.registry.dump();
+        assert!(dump.counter("cache.hits").unwrap_or(0) > 0, "cache.hits counter");
+        assert!(dump.counter("steer.choices").unwrap_or(0) > 0, "steer.choices counter");
     }
 }

@@ -35,6 +35,7 @@
 //! STATE <shard-hex> <term-hex> <len>\n<len bytes>\n
 //!                                        -> SSTORED <1|0> <term-hex>\n
 //! STATE <shard-hex>\n                    -> SVALUE <term-hex> <len>\n<bytes>\n | NOT_FOUND\n
+//! (any data op under admission control)  -> BUSY <retry-ms-hex>\n
 //! PING\n                                 -> PONG\n
 //! QUIT\n                                 -> (close)
 //! ```
@@ -230,6 +231,14 @@ pub enum Response {
     Events {
         next: u64,
         events: Vec<u8>,
+    },
+    /// Admission control shed the request: the node is over its
+    /// in-flight ceiling. `retry_ms` is the server's backoff hint;
+    /// clients retry after that long plus jitter (see
+    /// `net::pool`'s busy-retry paths). Only data ops are ever shed —
+    /// control-plane ops (leases, heartbeats, metrics) pass the gate.
+    Busy {
+        retry_ms: u64,
     },
     Pong,
     Error(String),
@@ -639,6 +648,7 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
             w.write_all(events)?;
             w.write_all(b"\n")
         }
+        Response::Busy { retry_ms } => writeln!(w, "BUSY {retry_ms:x}"),
         Response::Pong => w.write_all(b"PONG\n"),
         Response::Error(e) => writeln!(w, "ERROR {}", e.replace('\n', " ")),
     }
@@ -672,6 +682,9 @@ pub fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<Response> {
         "NOT_FOUND" => Ok(Response::NotFound),
         "DELETED" => Ok(Response::Deleted),
         "NEWER" => Ok(Response::Newer),
+        "BUSY" => Ok(Response::Busy {
+            retry_ms: parse_hex(parts.next(), "bad retry hint")?,
+        }),
         "PONG" => Ok(Response::Pong),
         "VALUE" => {
             let len: usize = parts
@@ -996,6 +1009,8 @@ mod tests {
                 next: 0,
                 events: vec![],
             },
+            Response::Busy { retry_ms: 2 },
+            Response::Busy { retry_ms: u64::MAX },
             Response::Pong,
             Response::Error("boom".into()),
         ] {

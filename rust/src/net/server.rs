@@ -24,16 +24,45 @@
 use super::frame;
 use super::protocol::{read_request, write_response, Parsed, Request, Response, MAX_LEASE_TTL_MS};
 use super::reactor::{Handler, Reactor, Waker};
-use crate::obs::{ring::MAX_EVENT_PAGE, Event, Histo, Obs};
+use crate::obs::{ring::MAX_EVENT_PAGE, Counter, Event, Histo, Obs};
 use crate::storage::ShardedStore;
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Retry hint carried by every server-side `BUSY`: long enough that a
+/// backed-off client lets the node drain, short enough that a shed op
+/// resolves within a few milliseconds once load clears.
+const BUSY_RETRY_MS: u64 = 2;
+
+/// Server-side admission control: a ceiling on concurrently-served
+/// *data* ops (SET/VSET/GET/VGET/DEL/VDEL). At or above the ceiling
+/// the node answers [`Response::Busy`] instead of queueing — shedding
+/// keeps the served ops fast and pushes the backlog back to the
+/// caller's backoff-and-retry path, which is the half of load control
+/// the client cannot see on its own (its view of a node's load stops
+/// at its own connections). Control-plane ops (heartbeats, leases,
+/// metrics, key scans) are exempt: detection and failover must keep
+/// working on exactly the overloaded nodes that shed data traffic.
+#[derive(Debug, Default)]
+pub struct AdmissionGate {
+    /// Max concurrently-served data ops (`0` = admission off).
+    ceiling: AtomicI64,
+    /// Data ops currently inside [`handle_request`].
+    in_flight: AtomicI64,
+}
+
+impl AdmissionGate {
+    /// Set (or, with `0`, lift) the data-op ceiling.
+    pub fn set_ceiling(&self, ceiling: i64) {
+        self.ceiling.store(ceiling, Ordering::Relaxed);
+    }
+}
 
 /// One coordinator-failover register: the lease this node serves as an
 /// authority for, and the replicated control-state blob. The server
@@ -115,6 +144,11 @@ struct NodeCtx {
     /// reports it so an operator can correlate this node's view with
     /// coordinator publishes.
     last_epoch: AtomicU64,
+    /// Data-op admission gate (shared with [`NodeServer`] so the
+    /// ceiling can be set after spawn).
+    gate: Arc<AdmissionGate>,
+    /// `shed.server` counter: data ops answered `BUSY` by the gate.
+    shed: Arc<Counter>,
 }
 
 /// A running storage-node server.
@@ -125,6 +159,7 @@ pub struct NodeServer {
     stop: Arc<AtomicBool>,
     reactor_thread: Option<JoinHandle<()>>,
     waker: Waker,
+    gate: Arc<AdmissionGate>,
     /// Live accepted streams (tagged by connection token), kept so
     /// [`Self::kill`] can sever them; the reactor (for framed
     /// connections) and each text serving thread remove their entries
@@ -156,17 +191,20 @@ impl NodeServer {
         let store = Arc::new(ShardedStore::new());
         let stop = Arc::new(AtomicBool::new(false));
         let conns = Arc::new(Mutex::new(Vec::new()));
+        let gate = Arc::new(AdmissionGate::default());
         // The node's request context: the store, the coordinator-
         // failover registers (lease + replicated control state, one
         // slot per shard id, only ever touched through the LEASE/STATE
-        // wire ops), and the obs plane — shared between the reactor and
-        // the text compat threads.
+        // wire ops), the admission gate, and the obs plane — shared
+        // between the reactor and the text compat threads.
         let ctx = Arc::new(NodeCtx {
             store: store.clone(),
             control: Mutex::new(HashMap::new()),
             obs: obs.clone(),
             started: Instant::now(),
             last_epoch: AtomicU64::new(0),
+            gate: gate.clone(),
+            shed: obs.registry.counter("shed.server"),
         });
         let op_ns = ctx.obs.registry.histo("serve.binary.op_ns");
         let handler = NodeHandler {
@@ -188,8 +226,27 @@ impl NodeServer {
             stop,
             reactor_thread: Some(reactor_thread),
             waker,
+            gate,
             conns,
         })
+    }
+
+    /// [`Self::spawn_with_obs`] with a data-op admission ceiling set
+    /// from birth (see [`AdmissionGate`]).
+    pub fn spawn_gated(
+        addr: impl std::net::ToSocketAddrs,
+        obs: Obs,
+        ceiling: i64,
+    ) -> std::io::Result<NodeServer> {
+        let server = Self::spawn_with_obs(addr, obs)?;
+        server.set_admission_ceiling(ceiling);
+        Ok(server)
+    }
+
+    /// Set (or, with `0`, lift) the server-side data-op admission
+    /// ceiling; takes effect on the next request.
+    pub fn set_admission_ceiling(&self, ceiling: i64) {
+        self.gate.set_ceiling(ceiling);
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -246,6 +303,45 @@ impl Drop for NodeServer {
 /// registers and obs plane — the single dispatch both framings funnel
 /// through. `None` means `QUIT`: flush what's pending, then close.
 fn handle_request(ctx: &NodeCtx, req: Request) -> Option<Response> {
+    // Admission control covers data ops only; everything the control
+    // plane needs against an overloaded node stays exempt. An admitted
+    // op holds an in-flight slot for exactly the serve below (no early
+    // return exists on a data-op arm).
+    let admitted = match req {
+        Request::Set { .. }
+        | Request::VSet { .. }
+        | Request::Get { .. }
+        | Request::VGet { .. }
+        | Request::Del { .. }
+        | Request::VDel { .. } => {
+            let ceiling = ctx.gate.ceiling.load(Ordering::Relaxed);
+            if ceiling > 0 {
+                if ctx.gate.in_flight.fetch_add(1, Ordering::Relaxed) >= ceiling {
+                    ctx.gate.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    if ctx.obs.enabled() {
+                        ctx.shed.inc();
+                    }
+                    return Some(Response::Busy {
+                        retry_ms: BUSY_RETRY_MS,
+                    });
+                }
+                true
+            } else {
+                false
+            }
+        }
+        _ => false,
+    };
+    let resp = handle_admitted(ctx, req);
+    if admitted {
+        ctx.gate.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+    resp
+}
+
+/// The post-admission dispatch: serve one request against the store,
+/// control registers and obs plane.
+fn handle_admitted(ctx: &NodeCtx, req: Request) -> Option<Response> {
     let store = &*ctx.store;
     let control = &ctx.control;
     Some(match req {
@@ -836,6 +932,41 @@ mod tests {
                 "shutdown left a live connection registered"
             );
         }
+    }
+
+    #[test]
+    fn admission_gate_sheds_data_ops_but_serves_control_ops() {
+        let obs = Obs::new();
+        let server = NodeServer::spawn_gated(("127.0.0.1", 0), obs.clone(), 2).unwrap();
+        let mut c = Conn::connect(server.addr()).unwrap();
+        let v = Version::new(1, 1);
+        // Below the ceiling everything serves.
+        assert!(matches!(c.vset_or_busy(5, v, b"x".to_vec()).unwrap(), Ok(_)));
+        assert_eq!(c.vget_or_busy(5).unwrap(), Ok(Some((v, b"x".to_vec()))));
+        // Saturate the gate from outside: data ops shed with the
+        // standard retry hint, over either framing.
+        server.gate.in_flight.fetch_add(2, Ordering::Relaxed);
+        assert_eq!(c.vget_or_busy(5).unwrap(), Err(super::BUSY_RETRY_MS));
+        assert!(matches!(c.vset_or_busy(5, v, b"y".to_vec()).unwrap(), Err(_)));
+        let mut b = Conn::connect_binary(server.addr()).unwrap();
+        assert_eq!(b.vget_or_busy(5).unwrap(), Err(super::BUSY_RETRY_MS));
+        // Control ops are exempt: detection and failover keep working
+        // on exactly the node that sheds data traffic.
+        c.ping().unwrap();
+        c.heartbeat(1).unwrap();
+        assert!(c.stats_full().is_ok());
+        assert!(c.metrics().is_ok());
+        assert!(
+            obs.registry.dump().counter("shed.server").unwrap_or(0) >= 3,
+            "sheds must reach the registry"
+        );
+        // Draining reopens the gate; the shed write never landed.
+        server.gate.in_flight.fetch_sub(2, Ordering::Relaxed);
+        assert_eq!(c.vget_or_busy(5).unwrap(), Ok(Some((v, b"x".to_vec()))));
+        // Lifting the ceiling disables admission entirely.
+        server.gate.in_flight.fetch_add(10, Ordering::Relaxed);
+        server.set_admission_ceiling(0);
+        assert_eq!(c.vget_or_busy(5).unwrap(), Ok(Some((v, b"x".to_vec()))));
     }
 
     #[test]

@@ -119,6 +119,35 @@ pub enum Scenario {
         keys: u64,
         read_ops: u64,
     },
+    /// Load-control baseline: uniformly random reads over the preloaded
+    /// key space — no hot spot, the denominator of the skew-p99 ratio.
+    UniformRead {
+        keys: u64,
+        read_ops: u64,
+    },
+    /// Zipf-popular reads (s > 1 for the heavy-skew regime): balanced
+    /// *placement* leaves the few top-ranked keys' replicas carrying an
+    /// outsized share — the regime read steering exists for.
+    SkewedRead {
+        keys: u64,
+        read_ops: u64,
+        alpha: f64,
+    },
+    /// One viral key takes ~90% of reads, the rest stay uniform — the
+    /// single-hot-spot worst case the hot-key cache absorbs.
+    FlashCrowd {
+        keys: u64,
+        read_ops: u64,
+    },
+    /// The hot spot *moves*: the trace splits into `phases` segments,
+    /// each concentrating ~90% of its reads on a different key —
+    /// detection and invalidation must track the front, not just a
+    /// static celebrity.
+    RollingHotspot {
+        keys: u64,
+        read_ops: u64,
+        phases: u64,
+    },
 }
 
 impl Scenario {
@@ -129,6 +158,10 @@ impl Scenario {
             Scenario::Churn { .. } => "churn",
             Scenario::Failover { .. } => "failover",
             Scenario::Flapping { .. } => "flapping",
+            Scenario::UniformRead { .. } => "uniform_read",
+            Scenario::SkewedRead { .. } => "skewed_read",
+            Scenario::FlashCrowd { .. } => "flash_crowd",
+            Scenario::RollingHotspot { .. } => "rolling_hotspot",
         }
     }
 
@@ -138,7 +171,11 @@ impl Scenario {
         match *self {
             Scenario::Churn { keys, .. }
             | Scenario::Failover { keys, .. }
-            | Scenario::Flapping { keys, .. } => keyspace(keys, seed),
+            | Scenario::Flapping { keys, .. }
+            | Scenario::UniformRead { keys, .. }
+            | Scenario::SkewedRead { keys, .. }
+            | Scenario::FlashCrowd { keys, .. }
+            | Scenario::RollingHotspot { keys, .. } => keyspace(keys, seed),
             _ => Vec::new(),
         }
     }
@@ -209,6 +246,75 @@ impl Scenario {
                         } else {
                             Op::Get { key }
                         }
+                    })
+                    .collect()
+            }
+            Scenario::UniformRead { keys, read_ops } => {
+                assert!(
+                    keys >= 1 || read_ops == 0,
+                    "uniform_read needs a non-empty key space (keys={keys})"
+                );
+                let written = keyspace(keys, seed);
+                let mut rng = SplitMix64::new(seed ^ 0x00BA_5E11);
+                (0..read_ops)
+                    .map(|_| Op::Get {
+                        key: written[rng.below(keys) as usize],
+                    })
+                    .collect()
+            }
+            Scenario::SkewedRead { keys, read_ops, alpha } => {
+                assert!(
+                    keys >= 1 || read_ops == 0,
+                    "skewed_read needs a non-empty key space (keys={keys})"
+                );
+                let written = keyspace(keys, seed);
+                let mut zipf = Zipf::new(keys.max(1) as usize, alpha, seed ^ 0x005E_EDED);
+                (0..read_ops)
+                    .map(|_| Op::Get {
+                        key: written[zipf.sample()],
+                    })
+                    .collect()
+            }
+            Scenario::FlashCrowd { keys, read_ops } => {
+                assert!(
+                    keys >= 1 || read_ops == 0,
+                    "flash_crowd needs a non-empty key space (keys={keys})"
+                );
+                let written = keyspace(keys, seed);
+                let viral = written[0];
+                let mut rng = SplitMix64::new(seed ^ 0x00F1_A500);
+                (0..read_ops)
+                    .map(|_| {
+                        // ~90% of reads pile onto the one viral key.
+                        let key = if rng.below(10) != 0 {
+                            viral
+                        } else {
+                            written[rng.below(keys) as usize]
+                        };
+                        Op::Get { key }
+                    })
+                    .collect()
+            }
+            Scenario::RollingHotspot { keys, read_ops, phases } => {
+                assert!(
+                    keys >= 1 || read_ops == 0,
+                    "rolling_hotspot needs a non-empty key space (keys={keys})"
+                );
+                let written = keyspace(keys, seed);
+                let phases = phases.max(1);
+                let phase_len = read_ops.div_ceil(phases).max(1);
+                let mut rng = SplitMix64::new(seed ^ 0x0080_7503);
+                (0..read_ops)
+                    .map(|i| {
+                        // Each phase crowns a different hot key; within
+                        // a phase ~90% of reads hit it.
+                        let hot = written[((i / phase_len) % keys) as usize];
+                        let key = if rng.below(10) != 0 {
+                            hot
+                        } else {
+                            written[rng.below(keys) as usize]
+                        };
+                        Op::Get { key }
                     })
                     .collect()
             }
@@ -357,11 +463,110 @@ mod tests {
                 keys: 100,
                 read_ops: 50,
             },
+            Scenario::UniformRead {
+                keys: 100,
+                read_ops: 50,
+            },
+            Scenario::SkewedRead {
+                keys: 100,
+                read_ops: 50,
+                alpha: 1.2,
+            },
+            Scenario::FlashCrowd {
+                keys: 100,
+                read_ops: 50,
+            },
+            Scenario::RollingHotspot {
+                keys: 100,
+                read_ops: 50,
+                phases: 5,
+            },
         ];
         for s in &scenarios {
             assert_eq!(s.ops(7), s.ops(7), "{} not deterministic", s.name());
             assert_ne!(s.ops(7), s.ops(8), "{} ignores seed", s.name());
         }
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_on_one_key() {
+        let s = Scenario::FlashCrowd {
+            keys: 64,
+            read_ops: 1000,
+        };
+        let keys: std::collections::HashSet<u64> = s.preload_keys(9).into_iter().collect();
+        let mut counts: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+        for op in s.ops(9) {
+            match op {
+                Op::Get { key } => {
+                    assert!(keys.contains(&key), "key {key} never preloaded");
+                    *counts.entry(key).or_insert(0) += 1;
+                }
+                other => panic!("flash_crowd must be read-only, got {other:?}"),
+            }
+        }
+        let top = counts.values().max().copied().unwrap();
+        assert!(top >= 800, "viral key must take ~90% of reads, took {top}/1000");
+    }
+
+    #[test]
+    fn rolling_hotspot_moves_its_front() {
+        let s = Scenario::RollingHotspot {
+            keys: 64,
+            read_ops: 1000,
+            phases: 4,
+        };
+        let keys: std::collections::HashSet<u64> = s.preload_keys(11).into_iter().collect();
+        let ops = s.ops(11);
+        assert_eq!(ops.len(), 1000);
+        // The dominant key of each quarter must differ from the next
+        // quarter's — the hot spot rolls instead of sitting still.
+        let mut phase_tops = Vec::new();
+        for chunk in ops.chunks(250) {
+            let mut counts: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+            for op in chunk {
+                match op {
+                    Op::Get { key } => {
+                        assert!(keys.contains(key), "key {key} never preloaded");
+                        *counts.entry(*key).or_insert(0) += 1;
+                    }
+                    other => panic!("rolling_hotspot must be read-only, got {other:?}"),
+                }
+            }
+            let (&top, &n) = counts.iter().max_by_key(|&(_, &n)| n).unwrap();
+            assert!(n >= 200, "phase hot key must dominate its quarter, took {n}/250");
+            phase_tops.push(top);
+        }
+        phase_tops.dedup();
+        assert!(phase_tops.len() >= 4, "hot key must change per phase: {phase_tops:?}");
+    }
+
+    #[test]
+    fn skewed_read_is_heavier_than_uniform() {
+        let skew = Scenario::SkewedRead {
+            keys: 100,
+            read_ops: 5000,
+            alpha: 1.2,
+        };
+        let flat = Scenario::UniformRead {
+            keys: 100,
+            read_ops: 5000,
+        };
+        let top_share = |ops: Vec<Op>| {
+            let mut counts: std::collections::HashMap<u64, u64> = std::collections::HashMap::new();
+            for op in ops {
+                if let Op::Get { key } = op {
+                    *counts.entry(key).or_insert(0) += 1;
+                }
+            }
+            counts.values().max().copied().unwrap()
+        };
+        let skewed_top = top_share(skew.ops(13));
+        let flat_top = top_share(flat.ops(13));
+        assert!(
+            skewed_top > 4 * flat_top,
+            "zipf(1.2) top key ({skewed_top}) must dwarf uniform's ({flat_top})"
+        );
     }
 
     #[test]

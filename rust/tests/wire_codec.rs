@@ -19,7 +19,7 @@ use asura::storage::Version;
 use std::io::BufReader;
 
 const REQUEST_VARIANTS: usize = 17;
-const RESPONSE_VARIANTS: usize = 18;
+const RESPONSE_VARIANTS: usize = 19;
 
 fn arb_value(rng: &mut SplitMix64, max: usize) -> Vec<u8> {
     let len = (rng.next_u64() % (max as u64 + 1)) as usize;
@@ -168,6 +168,9 @@ fn arb_response(rng: &mut SplitMix64, v: usize) -> Response {
             events: arb_value(rng, 256),
         },
         16 => Response::Pong,
+        17 => Response::Busy {
+            retry_ms: rng.next_u64(),
+        },
         _ => Response::Error(arb_error_text(rng)),
     }
 }

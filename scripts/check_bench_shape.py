@@ -31,6 +31,11 @@ Requirements are keyed by the artifact's "bench" field:
                      ops_per_sec, percentiles, op_samples, lost; an
                      optional events object must carry causal
                      suspect/dead/repair cursors in order
+  loadctl         -> top-level skew_p99_ratio (gated against the
+                     LOADCTL_MAX_SKEW_RATIO ceiling: the steered
+                     engine's worst skewed-scenario p99 over its
+                     uniform-read p99); per-result ops, ops_per_sec,
+                     p50_us, p99_us, lost
 
 Artifact names are part of the contract: a basename starting with
 ``BENCH_`` must match a known ``BENCH_<kind>`` prefix, and the file's
@@ -62,6 +67,7 @@ TOP_REQUIRED = {
         "p99_baseline_us",
         "p99_instrumented_us",
     ],
+    "loadctl": ["nodes", "replicas", "keys", "read_ops", "skew_p99_ratio"],
 }
 
 RESULT_REQUIRED = {
@@ -77,6 +83,7 @@ RESULT_REQUIRED = {
     "shard": ["ops", "ops_per_sec", "shards", "lost"],
     "serve_async": ["ops", "ops_per_sec", "p50_us", "p99_us", "clients", "lost"],
     "obs": ["ops", "ops_per_sec", "p50_us", "p99_us", "clients", "lost", "op_samples"],
+    "loadctl": ["ops", "ops_per_sec", "p50_us", "p99_us", "lost"],
 }
 
 # Extra fields required on specific result scenarios.
@@ -91,6 +98,12 @@ SCENARIO_REQUIRED = {
 # loosened --max-overhead still fails CI here.
 OBS_MAX_OVERHEAD = 1.10
 
+# The loadctl bench's acceptance ceiling: with steering + the hot-key
+# cache on, the worst skewed scenario's p99 may degrade at most this
+# far past the uniform-read p99. Keeps a regression that quietly
+# un-steers the read path from uploading a green trajectory.
+LOADCTL_MAX_SKEW_RATIO = 3.0
+
 # Artifact basename prefix -> the bench kind it must contain. Matched
 # longest-prefix-first so BENCH_coord_failover.json never resolves via
 # a shorter cousin, and suffixed variants (BENCH_throughput_w8.json)
@@ -102,6 +115,7 @@ FILENAME_BENCH = {
     "BENCH_shard": "shard",
     "BENCH_serve_async": "serve_async",
     "BENCH_obs": "obs",
+    "BENCH_loadctl": "loadctl",
 }
 
 
@@ -172,6 +186,12 @@ def check_file(path):
                 seqs = [events.get(k) for k in ("suspect_seq", "dead_seq", "repair_seq")]
                 if all(finite_number(s) for s in seqs) and not seqs[0] < seqs[1] < seqs[2]:
                     errors.append(f"{where}: suspect/dead/repair cursors out of causal order")
+    if bench == "loadctl":
+        ratio = doc.get("skew_p99_ratio")
+        if finite_number(ratio) and ratio > LOADCTL_MAX_SKEW_RATIO:
+            errors.append(
+                f"{path}: skew_p99_ratio {ratio} exceeds the {LOADCTL_MAX_SKEW_RATIO}x ceiling"
+            )
     results = doc.get("results")
     if not isinstance(results, list) or not results:
         errors.append(f"{path}: results missing or empty")
