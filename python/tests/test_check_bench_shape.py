@@ -208,12 +208,65 @@ def good_loadctl():
     }
 
 
+def good_restart():
+    result_common = {
+        "nodes": 6,
+        "replicas": 3,
+        "keys": 100000,
+        "ops": 4000,
+        "hits": 3000,
+        "degraded_writes": 0,
+        "lost": 0,
+        "torn_stripes": 0,
+        "lost_keys": 0,
+        "audit_keys": 100000,
+        "audit_under": 0,
+        "readable": 100000,
+    }
+    return {
+        "bench": "restart",
+        "nodes": 6,
+        "replicas": 3,
+        "write_quorum": 2,
+        "read_quorum": 2,
+        "keys": 100000,
+        "outage_ops": 4000,
+        "workers": 4,
+        "pipeline_depth": 32,
+        "repair_batch": 256,
+        "min_speedup": 5.0,
+        "seed": 45063,
+        "speedup": 9.2,
+        "results": [
+            dict(
+                result_common,
+                scenario="replay",
+                keys_replayed=50000,
+                delta_missing=500,
+                delta_hinted=400,
+                repaired_keys=900,
+                time_to_full_rf_ms=120.5,
+            ),
+            dict(
+                result_common,
+                scenario="rereplicate",
+                keys_replayed=0,
+                delta_missing=0,
+                delta_hinted=0,
+                repaired_keys=50000,
+                time_to_full_rf_ms=1100.0,
+            ),
+        ],
+    }
+
+
 def test_well_shaped_artifacts_pass(tmp_path):
     assert shape.check_file(_write(tmp_path, good_throughput())) == []
     assert shape.check_file(_write(tmp_path, good_shard())) == []
     assert shape.check_file(_write(tmp_path, good_serve_async())) == []
     assert shape.check_file(_write(tmp_path, good_obs(), "BENCH_obs.json")) == []
     assert shape.check_file(_write(tmp_path, good_loadctl(), "BENCH_loadctl.json")) == []
+    assert shape.check_file(_write(tmp_path, good_restart(), "BENCH_restart.json")) == []
 
 
 def test_obs_missing_ratio_or_samples_fails(tmp_path):
@@ -276,6 +329,53 @@ def test_loadctl_missing_fields_fail(tmp_path):
     del doc["results"][3]["p99_us"]
     errors = shape.check_file(_write(tmp_path, doc))
     assert any("results[3]" in e and "p99_us" in e for e in errors)
+
+
+def test_restart_replay_must_beat_rereplication(tmp_path):
+    # Replay slower than (or tied with) re-replication defeats the
+    # bench's whole claim; the gate refuses the trajectory.
+    doc = good_restart()
+    doc["results"][0]["time_to_full_rf_ms"] = 2000.0
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("beat" in e and "re-replication" in e for e in errors)
+    doc = good_restart()
+    doc["results"][0]["time_to_full_rf_ms"] = doc["results"][1]["time_to_full_rf_ms"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("beat" in e for e in errors)
+    # A zero TTF-RF is a stopped clock, not a fast recovery.
+    doc = good_restart()
+    doc["results"][0]["time_to_full_rf_ms"] = 0
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("positive" in e for e in errors)
+
+
+def test_restart_needs_both_recovery_arms(tmp_path):
+    doc = good_restart()
+    doc["results"] = [doc["results"][0]]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("both 'replay' and 'rereplicate'" in e for e in errors)
+    doc = good_restart()
+    doc["results"] = [doc["results"][1]]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("both 'replay' and 'rereplicate'" in e for e in errors)
+
+
+def test_restart_replay_arm_must_recover_keys(tmp_path):
+    doc = good_restart()
+    doc["results"][0]["keys_replayed"] = 0
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("recovered no keys" in e for e in errors)
+
+
+def test_restart_missing_fields_fail(tmp_path):
+    doc = good_restart()
+    del doc["speedup"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("speedup" in e for e in errors)
+    doc = good_restart()
+    del doc["results"][1]["time_to_full_rf_ms"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("results[1]" in e and "time_to_full_rf_ms" in e for e in errors)
 
 
 def test_bench_named_files_must_match_a_known_prefix(tmp_path):

@@ -36,7 +36,7 @@
 //! ([`crate::fault::HealthMonitor::lease_tick`]).
 
 use crate::net::client::Conn;
-use crate::net::protocol::{LeaseReply, MAX_LEASE_TTL_MS};
+use crate::net::protocol::{LeaseReply, Request, Response, MAX_LEASE_TTL_MS};
 use std::net::SocketAddr;
 use std::time::Duration;
 
@@ -84,7 +84,30 @@ pub fn lease_request(
     ttl_ms: u64,
     timeout: Duration,
 ) -> std::io::Result<LeaseReply> {
-    Conn::connect_timeout(addr, timeout)?.lease(shard, candidate, term, ttl_ms)
+    let mut conn = Conn::connect_timeout(addr, timeout)?;
+    let req = Request::Lease {
+        shard,
+        candidate,
+        term,
+        ttl_ms,
+    };
+    match conn.call(&req)? {
+        Response::Leased {
+            granted,
+            term,
+            holder,
+            remaining_ms,
+        } => Ok(LeaseReply {
+            granted,
+            term,
+            holder,
+            remaining_ms,
+        }),
+        other => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unexpected response {other:?}"),
+        )),
+    }
 }
 
 /// Fan one lease request out to every authority concurrently (via

@@ -96,7 +96,7 @@ use crate::fault::health::HealthEvent;
 use crate::fault::repair::{RepairQueue, RepairTick, ReplicationAudit};
 use crate::net::client::Conn;
 use crate::net::pool::{PoolConfig, RouterPool};
-use crate::net::protocol::VdelOutcome;
+use crate::net::protocol::{Request, Response, VdelOutcome, VsetAck};
 use crate::net::server::NodeServer;
 use crate::obs::{EventKind, Obs};
 use crate::storage::{Version, WriteClock};
@@ -121,11 +121,11 @@ impl Member {
     /// cached connection has gone stale (e.g. the node restarted).
     /// `Err` means the member is genuinely unreachable right now.
     fn probe_vget(&mut self, key: DatumId) -> std::io::Result<Option<(Version, Vec<u8>)>> {
-        match self.conn.vget(key) {
+        match vget_call(&mut self.conn, key) {
             Ok(v) => Ok(v),
             Err(_) => {
                 self.conn = Conn::connect(self.addr)?;
-                self.conn.vget(key)
+                vget_call(&mut self.conn, key)
             }
         }
     }
@@ -187,6 +187,27 @@ pub enum ReleaseOutcome {
     /// A member was unreachable; a stray (stale, version-guarded) copy
     /// may remain behind.
     Deferred,
+}
+
+/// Outcome of [`Coordinator::rejoin_node`]: how much of the restarted
+/// node's state survived its local replay, and how much repair work the
+/// delta actually queued (the whole point of rejoin over re-join is
+/// that `missing + hinted` is proportional to the *outage*, not to the
+/// node's keyspace share).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RejoinReport {
+    /// Keys the node advertised after replaying its local log.
+    pub keys_on_node: usize,
+    /// Keys placement says the node must hold that its replay did not
+    /// surface (written while it was down, or lost with an unsynced
+    /// tail) — queued for delta repair.
+    pub missing: usize,
+    /// Degraded-write hints drained into the repair queue alongside the
+    /// scan: keys acked below full RF during the outage, which covers
+    /// copies the node holds at a *stale* version.
+    pub hinted: usize,
+    /// Total repair backlog after the delta enqueue.
+    pub pending: usize,
 }
 
 /// The shareable attachment points between a coordinator and its data
@@ -751,7 +772,7 @@ impl Coordinator {
         let mut incomplete = false;
         for n in set {
             match self.members.get_mut(n) {
-                Some(m) => match m.conn.vset(key, version, value.to_vec()) {
+                Some(m) => match vset_call(&mut m.conn, key, version, value.to_vec()) {
                     Ok(ack) => {
                         if ack.applied {
                             written += value.len() as u64;
@@ -888,7 +909,7 @@ impl Coordinator {
             let Some(m) = self.members.get_mut(&n) else {
                 continue;
             };
-            match m.conn.vdel(key, guard) {
+            match vdel_call(&mut m.conn, key, guard) {
                 Ok(VdelOutcome::Deleted) | Ok(VdelOutcome::Missing) => {}
                 Ok(VdelOutcome::Newer) => match self.member_vget(n, key) {
                     Ok(Some((ver, bytes))) => return ReleaseOutcome::Newer(ver, bytes),
@@ -1037,6 +1058,95 @@ impl Coordinator {
         Ok(queued)
     }
 
+    /// Re-admit a restarted node that replayed its state from a local
+    /// durable log ([`crate::storage::DurableStore`]) — the cheap
+    /// alternative to declaring it dead and re-replicating its whole
+    /// share. The node must still be a member (killed, suspected, but
+    /// never [`Self::mark_dead`]): placement is unchanged, so nothing
+    /// migrates. The coordinator reconnects at `addr` (a restart
+    /// usually lands on a fresh port), republishes the snapshot under a
+    /// bumped epoch so routers re-resolve the address, and then
+    /// delta-repairs only what the outage actually touched:
+    ///
+    /// - **missing** keys, found by paging the node's replayed keyset
+    ///   over the wire (the same `KEYSC` walk the holder audit uses)
+    ///   and diffing it against the keys placement assigns the node;
+    /// - **stale** keys, via the degraded-write hints pool workers
+    ///   recorded for writes acked below full RF while the node was
+    ///   down (the repair tick's max-version fan-out refreshes any
+    ///   lagging copy it finds).
+    ///
+    /// Both sets are proportional to the outage, not to the node's
+    /// keyspace share — the replayed bulk is never re-copied. `server`
+    /// hands ownership of the restarted in-process server back to the
+    /// coordinator (None for an external restart); `keys_replayed` is
+    /// the node's own recovery count, recorded on the event ring as a
+    /// [`EventKind::Rejoin`]. Callers drain the returned backlog with
+    /// [`Self::repair_step`].
+    pub fn rejoin_node(
+        &mut self,
+        id: NodeId,
+        addr: SocketAddr,
+        server: Option<NodeServer>,
+        keys_replayed: u64,
+    ) -> anyhow::Result<RejoinReport> {
+        anyhow::ensure!(
+            self.members.contains_key(&id),
+            "node {id} is not a member (declared dead or never joined); use join_external"
+        );
+        self.sync_registry();
+        let conn = Conn::connect(addr)?;
+        let m = self.members.get_mut(&id).expect("membership checked above");
+        m.addr = addr;
+        m.conn = conn;
+        m.server = server;
+        // Page the node's replayed keyset before publishing anything:
+        // if the restarted node stops answering here the rejoin fails
+        // before routers are ever pointed at it, and a retry re-runs
+        // the whole sequence.
+        let mut has: HashSet<DatumId> = HashSet::new();
+        let mut cursor: Option<u64> = None;
+        loop {
+            let (page, next) = keys_page_call(&mut m.conn, AUDIT_PAGE, cursor)?;
+            has.extend(page);
+            match next {
+                Some(c) => cursor = Some(c),
+                None => break,
+            }
+        }
+        // Republish under a bumped epoch: the address map changed, and
+        // routers only re-resolve on snapshot swaps.
+        self.epoch += 1;
+        self.suspects.remove(&id);
+        self.publish_snapshot();
+        // Stale half of the delta: writes acked below RF while the node
+        // was down, recorded by pool workers as repair hints.
+        let hints = self.repair_hints.drain();
+        let hinted = hints.len();
+        self.repair.enqueue(hints);
+        // Missing half: keys placement assigns the node that its replay
+        // did not surface.
+        let mut missing: Vec<DatumId> = self
+            .keys
+            .iter()
+            .copied()
+            .filter(|&k| !has.contains(&k) && self.replica_set(k).contains(&id))
+            .collect();
+        missing.sort_unstable();
+        let report = RejoinReport {
+            keys_on_node: has.len(),
+            missing: missing.len(),
+            hinted,
+            pending: 0,
+        };
+        self.repair.enqueue(missing);
+        self.obs.event(EventKind::Rejoin, u64::from(id), keys_replayed);
+        Ok(RejoinReport {
+            pending: self.repair.pending(),
+            ..report
+        })
+    }
+
     /// Promote degraded-write hints from pool workers into the repair
     /// queue. Runs from every control-loop entry point (health events,
     /// repair batches, audits), so a write that skipped an unreachable
@@ -1131,7 +1241,7 @@ impl Coordinator {
             let Some(m) = self.members.get_mut(&node) else {
                 return;
             };
-            match m.conn.vdel(key, guard) {
+            match vdel_call(&mut m.conn, key, guard) {
                 Ok(VdelOutcome::Deleted) | Ok(VdelOutcome::Missing) => return,
                 Ok(VdelOutcome::Newer) => {
                     let Ok(Some((ver, bytes))) = self.member_vget(node, key) else {
@@ -1251,7 +1361,7 @@ impl Coordinator {
             let acks = crate::net::scatter_bounded(
                 self.members_mut(&missing),
                 PROBE_FANOUT,
-                |(_, m)| m.conn.vset(key, best_ver, value.clone()),
+                |(_, m)| vset_call(&mut m.conn, key, best_ver, value.clone()),
             );
             for ack in acks {
                 match ack {
@@ -1308,7 +1418,7 @@ impl Coordinator {
                 let mut keys: Vec<DatumId> = Vec::new();
                 let mut cursor: Option<u64> = None;
                 loop {
-                    let (page, next) = m.conn.keys_chunk(AUDIT_PAGE, cursor)?;
+                    let (page, next) = keys_page_call(&mut m.conn, AUDIT_PAGE, cursor)?;
                     keys.extend(page);
                     match next {
                         Some(c) => cursor = Some(c),
@@ -1391,7 +1501,7 @@ impl Coordinator {
             let fetched = crate::net::scatter_bounded(
                 self.members_mut(old_set),
                 PROBE_FANOUT,
-                |(_, m)| m.conn.vget(key),
+                |(_, m)| vget_call(&mut m.conn, key),
             );
             let mut best: Option<(Version, Vec<u8>)> = None;
             for res in fetched {
@@ -1424,7 +1534,7 @@ impl Coordinator {
             // racing live write already landed a newer value — the
             // copier can never clobber it.
             for ack in crate::net::scatter_bounded(targets, PROBE_FANOUT, |(_, m)| {
-                m.conn.vset(key, version, value.clone())
+                vset_call(&mut m.conn, key, version, value.clone())
             }) {
                 ack?;
             }
@@ -1475,7 +1585,7 @@ impl Coordinator {
                     .members
                     .get_mut(n)
                     .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
-                let ack = m.conn.vset(key, version, value.to_vec())?;
+                let ack = vset_call(&mut m.conn, key, version, value.to_vec())?;
                 if !ack.applied {
                     self.clock.observe(ack.version.seq);
                     refused = true;
@@ -1504,7 +1614,7 @@ impl Coordinator {
                 .members
                 .get_mut(&n)
                 .ok_or_else(|| anyhow::anyhow!("no member {n}"))?;
-            if let Some(v) = m.conn.get(key)? {
+            if let Some((_, v)) = vget_call(&mut m.conn, key)? {
                 return Ok(Some(v));
             }
         }
@@ -1518,7 +1628,11 @@ impl Coordinator {
         let mut ids: Vec<NodeId> = self.members.keys().copied().collect();
         ids.sort_unstable();
         for id in ids {
-            let (keys, _, _, _) = self.members.get_mut(&id).unwrap().conn.stats()?;
+            let m = self.members.get_mut(&id).unwrap();
+            let keys = match m.conn.call(&Request::Stats)? {
+                Response::Stats { keys, .. } => keys,
+                other => return Err(unexpected(other).into()),
+            };
             out.push((id, keys));
         }
         Ok(out)
@@ -1542,7 +1656,62 @@ impl Coordinator {
     }
 }
 
+// ----------------------------------------------------------------------
+// Typed control-conn calls. [`Conn::call`] is the one real client
+// surface (the per-op `Conn` helpers are deprecated compatibility
+// wrappers), so the control plane states its requests as [`Request`]
+// values and keeps the response matching in these four adapters.
+// ----------------------------------------------------------------------
+
+fn vget_call(conn: &mut Conn, key: DatumId) -> std::io::Result<Option<(Version, Vec<u8>)>> {
+    match conn.call(&Request::VGet { key })? {
+        Response::VValue { version, value } => Ok(Some((version, value))),
+        Response::NotFound => Ok(None),
+        other => Err(unexpected(other)),
+    }
+}
+
+fn vset_call(
+    conn: &mut Conn,
+    key: DatumId,
+    version: Version,
+    value: Vec<u8>,
+) -> std::io::Result<VsetAck> {
+    match conn.call(&Request::VSet { key, version, value })? {
+        Response::VStored { applied, version } => Ok(VsetAck { applied, version }),
+        other => Err(unexpected(other)),
+    }
+}
+
+fn vdel_call(conn: &mut Conn, key: DatumId, guard: Version) -> std::io::Result<VdelOutcome> {
+    match conn.call(&Request::VDel { key, version: guard })? {
+        Response::Deleted => Ok(VdelOutcome::Deleted),
+        Response::Newer => Ok(VdelOutcome::Newer),
+        Response::NotFound => Ok(VdelOutcome::Missing),
+        other => Err(unexpected(other)),
+    }
+}
+
+fn keys_page_call(
+    conn: &mut Conn,
+    limit: u64,
+    cursor: Option<u64>,
+) -> std::io::Result<(Vec<u64>, Option<u64>)> {
+    match conn.call(&Request::KeysChunk { cursor, limit })? {
+        Response::KeyPage { keys, next } => Ok((keys, next)),
+        other => Err(unexpected(other)),
+    }
+}
+
+fn unexpected(resp: Response) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("unexpected response {resp:?}"),
+    )
+}
+
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::snapshot::SnapshotReader;
     use super::*;
@@ -1837,5 +2006,45 @@ mod tests {
         assert_eq!(tick.repaired, 1);
         assert_eq!(tick.lost, 0);
         assert!(coord.audit_replication().unwrap().is_full());
+    }
+
+    #[test]
+    fn rejoin_delta_repairs_only_what_the_node_lacks() {
+        let mut coord = Coordinator::new(2);
+        for i in 0..3 {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        for k in 0..200u64 {
+            coord.set(k, b"v").unwrap();
+        }
+        let epoch_before = coord.epoch();
+        coord.kill_node(1).unwrap();
+        // The node restarts *empty* (memory engine): every key placement
+        // assigns it is missing, so the delta is its whole share — the
+        // degenerate no-log case. A durable restart shrinks `missing` to
+        // the outage writes (tests/durability_plane.rs pins that).
+        let obs = coord.obs().clone();
+        let server = NodeServer::spawn_with_obs(("127.0.0.1", 0), obs).unwrap();
+        let addr = server.addr();
+        let report = coord.rejoin_node(1, addr, Some(server), 0).unwrap();
+        assert_eq!(report.keys_on_node, 0);
+        assert!(report.missing > 0, "empty restart owes its whole share");
+        assert_eq!(report.pending, report.missing + report.hinted);
+        assert_eq!(coord.epoch(), epoch_before + 1, "routers must re-resolve");
+        assert_eq!(coord.snapshot().addr_of(1), Some(addr));
+        // Rejoining a non-member (never joined, or declared dead) is an
+        // error, not a silent join.
+        assert!(coord.rejoin_node(9, addr, None, 0).is_err());
+        for _ in 0..1000 {
+            if coord.repair_pending() == 0 {
+                break;
+            }
+            let tick = coord.repair_step(64).unwrap();
+            assert_eq!(tick.lost, 0);
+        }
+        assert_eq!(coord.repair_pending(), 0);
+        assert_eq!(coord.verify_all_readable().unwrap(), 200);
+        let audit = coord.audit_replication().unwrap();
+        assert!(audit.is_full(), "under-replicated: {:?}", audit.under_keys);
     }
 }

@@ -32,6 +32,7 @@
 use crate::algo::asura::{AsuraPlacer, SegmentTable, NO_SEG};
 use crate::algo::{DatumId, NodeId};
 use crate::net::client::Conn;
+use crate::net::protocol::{Request, Response};
 use std::fmt::Write as _;
 use std::net::SocketAddr;
 use std::time::Duration;
@@ -257,7 +258,15 @@ impl StateReplicator {
         let mut deposed_by = 0u64;
         let acks = crate::net::scatter(&self.authorities, |addr| {
             let mut conn = Conn::connect_timeout(addr, self.timeout).ok()?;
-            conn.state_put(self.shard, term, blob.clone()).ok()
+            let req = Request::StatePut {
+                shard: self.shard,
+                term,
+                value: blob.clone(),
+            };
+            match conn.call(&req).ok()? {
+                Response::StateAck { applied, term } => Some((applied, term)),
+                _ => None,
+            }
         });
         for (ok, term) in acks.into_iter().flatten() {
             if ok {
@@ -296,7 +305,11 @@ impl StateReplicator {
         let mut blobs: Vec<Vec<u8>> = Vec::new();
         let replies = crate::net::scatter(&self.authorities, |addr| {
             let mut conn = Conn::connect_timeout(addr, self.timeout).ok()?;
-            conn.state_get(self.shard).ok()
+            match conn.call(&Request::StateGet { shard: self.shard }).ok()? {
+                Response::StateValue { term, value } => Some(Some((term, value))),
+                Response::NotFound => Some(None),
+                _ => None,
+            }
         });
         for reply in replies {
             match reply {

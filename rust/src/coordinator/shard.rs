@@ -1015,6 +1015,7 @@ impl ShadowStandby {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // keeps coverage on the compatibility wrappers
 mod tests {
     use super::*;
     use crate::net::client::Conn;

@@ -28,6 +28,7 @@
 use crate::algo::NodeId;
 use crate::coordinator::election;
 use crate::net::client::Conn;
+use crate::net::protocol::{Request, Response};
 use crate::obs::{Counter, EventKind, Obs};
 use std::collections::HashMap;
 use std::net::SocketAddr;
@@ -264,7 +265,14 @@ impl HealthMonitor {
 /// One heartbeat round trip on a fresh connection, bounded by `timeout`
 /// at every step. Returns the node's (echoed epoch, key count).
 pub fn probe(addr: SocketAddr, epoch: u64, timeout: Duration) -> std::io::Result<(u64, u64)> {
-    Conn::connect_timeout(addr, timeout)?.heartbeat(epoch)
+    let mut conn = Conn::connect_timeout(addr, timeout)?;
+    match conn.call(&Request::Heartbeat { epoch })? {
+        Response::Alive { epoch, keys } => Ok((epoch, keys)),
+        other => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unexpected response {other:?}"),
+        )),
+    }
 }
 
 #[cfg(test)]

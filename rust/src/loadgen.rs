@@ -2702,6 +2702,415 @@ pub fn write_loadctl_json(
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Restart scenario: power-loss a durable node, then measure WAL-replay
+// rejoin (delta repair only) against the declare-dead-and-re-replicate
+// baseline on an identical cluster.
+// ---------------------------------------------------------------------
+
+/// Configuration for `asura bench-restart`.
+#[derive(Clone, Debug)]
+pub struct RestartConfig {
+    pub nodes: u32,
+    pub replicas: usize,
+    /// Replica acks a SET needs (must leave slack below `replicas`:
+    /// outage writes have to ack without the downed node).
+    pub write_quorum: usize,
+    pub read_quorum: usize,
+    /// Preloaded key space. The victim's share (~keys·RF/nodes) is what
+    /// re-replication copies and replay does not.
+    pub keys: u64,
+    /// Mixed read/rewrite ops driven while the victim is down — the
+    /// divergence replay's delta repair has to reconcile.
+    pub outage_ops: u64,
+    pub workers: usize,
+    pub pipeline_depth: usize,
+    pub repair_batch: usize,
+    /// Acceptance gate: replay TTF-RF must beat re-replication by at
+    /// least this factor (0 disables, for debug-build smoke runs).
+    pub min_speedup: f64,
+    pub seed: u64,
+    /// Parent for the victim's WAL directories (`None` = OS temp dir).
+    pub data_dir: Option<String>,
+    /// Where to write `BENCH_restart.json` (`None` = don't).
+    pub out_json: Option<String>,
+}
+
+impl Default for RestartConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 6,
+            replicas: 3,
+            write_quorum: 2,
+            read_quorum: 2,
+            keys: 100_000,
+            outage_ops: 4_000,
+            workers: 4,
+            pipeline_depth: 32,
+            repair_batch: 256,
+            min_speedup: 5.0,
+            seed: 0xB007,
+            data_dir: None,
+            out_json: Some("BENCH_restart.json".to_string()),
+        }
+    }
+}
+
+/// One measured recovery arm.
+#[derive(Clone, Debug)]
+pub struct RestartReport {
+    /// `replay` (WAL recovery + delta repair) or `rereplicate`
+    /// (declare dead, copy the whole share to survivors).
+    pub scenario: String,
+    pub nodes: u32,
+    pub replicas: usize,
+    pub keys: u64,
+    /// Outage traffic driven while the victim was down.
+    pub ops: u64,
+    pub hits: u64,
+    /// SETs acked below full RF during the outage (each leaves a hint).
+    pub degraded_writes: u64,
+    /// Reads that found nothing, outage + post-recovery — must be 0.
+    pub lost: u64,
+    /// Keys the restarted node recovered from its own disk (0 for the
+    /// re-replication arm).
+    pub keys_replayed: u64,
+    /// WAL stripes whose torn tail recovery truncated.
+    pub torn_stripes: u64,
+    /// Rejoin delta: keys placement expected that replay didn't surface.
+    pub delta_missing: u64,
+    /// Rejoin delta: degraded-write hints drained into the queue.
+    pub delta_hinted: u64,
+    /// Keys the repair plane copied back to full RF.
+    pub repaired_keys: u64,
+    /// Keys with no surviving replica — must be 0.
+    pub lost_keys: u64,
+    /// Recovery decision (respawn / death verdict) → audit-verified
+    /// full RF. The headline the two arms are compared on.
+    pub time_to_full_rf_ms: f64,
+    pub audit_keys: u64,
+    pub audit_under: u64,
+    /// Post-recovery full read pass: keys that came back readable.
+    pub readable: u64,
+}
+
+impl RestartReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<11} rf={} {:>7} keys  outage {:>6} ops  degraded {:>5}  lost {:>2}  \
+             replayed {:>7}  delta {:>5}+{:<5}  repaired {:>6}  full-rf {:>9.1} ms  audit {}/{}",
+            self.scenario,
+            self.replicas,
+            self.keys,
+            self.ops,
+            self.degraded_writes,
+            self.lost,
+            self.keys_replayed,
+            self.delta_missing,
+            self.delta_hinted,
+            self.repaired_keys,
+            self.time_to_full_rf_ms,
+            self.audit_keys - self.audit_under,
+            self.audit_keys,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("keys", Json::Num(self.keys as f64)),
+            ("ops", Json::Num(self.ops as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("degraded_writes", Json::Num(self.degraded_writes as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+            ("keys_replayed", Json::Num(self.keys_replayed as f64)),
+            ("torn_stripes", Json::Num(self.torn_stripes as f64)),
+            ("delta_missing", Json::Num(self.delta_missing as f64)),
+            ("delta_hinted", Json::Num(self.delta_hinted as f64)),
+            ("repaired_keys", Json::Num(self.repaired_keys as f64)),
+            ("lost_keys", Json::Num(self.lost_keys as f64)),
+            ("time_to_full_rf_ms", Json::Num(self.time_to_full_rf_ms)),
+            ("audit_keys", Json::Num(self.audit_keys as f64)),
+            ("audit_under", Json::Num(self.audit_under as f64)),
+            ("readable", Json::Num(self.readable as f64)),
+        ])
+    }
+}
+
+fn restart_data_dir(cfg: &RestartConfig, arm: &str) -> std::path::PathBuf {
+    let base = cfg
+        .data_dir
+        .as_ref()
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(std::env::temp_dir);
+    base.join(format!("asura-restart-{}-{arm}", std::process::id()))
+}
+
+/// One recovery arm, cradle to grave: cluster with one WAL-backed node,
+/// preload at full RF, power-loss the durable node, drive divergence
+/// while it's down, then recover — by local replay + delta repair
+/// (`replay == true`) or by declaring it dead and re-replicating its
+/// whole share (`replay == false`) — and prove every acked write is
+/// still readable.
+fn run_restart_arm(cfg: &RestartConfig, replay: bool) -> anyhow::Result<RestartReport> {
+    anyhow::ensure!(
+        (cfg.nodes as usize) > cfg.replicas,
+        "need more nodes than replicas to survive the outage"
+    );
+    anyhow::ensure!(cfg.replicas >= 2, "restart needs surviving replicas (replicas >= 2)");
+    anyhow::ensure!(
+        cfg.write_quorum >= 1 && cfg.write_quorum < cfg.replicas,
+        "write quorum must leave slack below replicas so outage writes can ack"
+    );
+    anyhow::ensure!(
+        cfg.read_quorum >= 1 && cfg.read_quorum <= cfg.replicas,
+        "read quorum must be within 1..=replicas"
+    );
+    let arm = if replay { "replay" } else { "rereplicate" };
+    let dir = restart_data_dir(cfg, arm);
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir)?;
+    }
+
+    let mut coord = Coordinator::new(cfg.replicas);
+    for i in 0..cfg.nodes - 1 {
+        coord.spawn_node(i, 1.0)?;
+    }
+    // The victim is the one WAL-backed node, joined externally so this
+    // driver keeps the handle and can cut its power mid-flush.
+    let victim: NodeId = cfg.nodes - 1;
+    let (mut victim_srv, fresh) =
+        NodeServer::spawn_durable(("127.0.0.1", 0), &dir, coord.obs().clone())?;
+    anyhow::ensure!(fresh.keys == 0, "victim data dir was not fresh: {fresh:?}");
+    coord.join_external(victim, 1.0, victim_srv.addr())?;
+
+    let pool = coord.connect_pool(
+        // registry + hints + clock wired by connect_pool
+        PoolConfig::new(cfg.workers)
+            .pipeline_depth(cfg.pipeline_depth)
+            .verify_hits(true)
+            .write_quorum(cfg.write_quorum)
+            .read_quorum(cfg.read_quorum),
+    )?;
+    // Preload at full RF through the pool — the coordinator's one-call-
+    // at-a-time path would dominate the wall clock at 100k keys.
+    let scenario = Scenario::PowerLoss {
+        keys: cfg.keys,
+        read_ops: cfg.outage_ops,
+        write_every: 4,
+    };
+    let keys = scenario.preload_keys(cfg.seed);
+    let sets: Vec<Op> = keys
+        .iter()
+        .map(|&key| Op::Set {
+            key,
+            size: FAILOVER_VALUE_SIZE,
+        })
+        .collect();
+    let preload = pool.run(sets)?;
+    anyhow::ensure!(
+        preload.ops == cfg.keys && preload.lost == 0,
+        "preload dropped writes ({}/{} acked)",
+        preload.ops,
+        cfg.keys
+    );
+    anyhow::ensure!(
+        preload.degraded_writes == 0,
+        "preload must land at full RF ({} degraded)",
+        preload.degraded_writes
+    );
+
+    // Power loss: no flush, no goodbye. The last flush tick's worth of
+    // appends survives only because the page cache outlives the process
+    // model — exactly what recovery's torn-tail handling is for.
+    victim_srv.kill();
+    // Divergence while the victim is down: rewrites ack at quorum on
+    // the survivors (each leaving a repair hint), reads fail over.
+    let outage = pool.run(scenario.ops(cfg.seed))?;
+    anyhow::ensure!(outage.lost == 0, "{} reads lost during the outage", outage.lost);
+
+    // The clock both arms are compared on starts at the recovery
+    // decision and stops when the audit proves full RF.
+    let t0 = Instant::now();
+    let (keys_replayed, torn_stripes, delta_missing, delta_hinted) = if replay {
+        let (srv, rec) = NodeServer::spawn_durable(("127.0.0.1", 0), &dir, coord.obs().clone())?;
+        let addr = srv.addr();
+        let rj = coord.rejoin_node(victim, addr, Some(srv), rec.keys as u64)?;
+        (
+            rec.keys as u64,
+            rec.torn_stripes,
+            rj.missing as u64,
+            rj.hinted as u64,
+        )
+    } else {
+        coord.mark_dead(victim)?;
+        (0, 0, 0, 0)
+    };
+    let mut repaired = 0u64;
+    let mut lost_keys = 0u64;
+    let t_drain = Instant::now();
+    while coord.repair_pending() > 0 {
+        anyhow::ensure!(
+            t_drain.elapsed() < Duration::from_secs(300),
+            "{arm} repair did not converge ({} keys still pending)",
+            coord.repair_pending()
+        );
+        let tick = coord.repair_step(cfg.repair_batch)?;
+        repaired += tick.repaired as u64;
+        lost_keys += tick.lost as u64;
+    }
+    let mut time_to_full_rf_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // Audit holders over the wire; writes that raced the recovery may
+    // owe a copy — feed them back until the audit is clean.
+    let audit = {
+        let mut attempt = 0;
+        loop {
+            let audit = coord.audit_replication()?;
+            if audit.is_full() {
+                break audit;
+            }
+            attempt += 1;
+            anyhow::ensure!(
+                attempt <= 5,
+                "{arm} audit still finds {} under-replicated keys",
+                audit.under_replicated()
+            );
+            coord.enqueue_repair(audit.under_keys.iter().copied());
+            let t_post = Instant::now();
+            while coord.repair_pending() > 0 {
+                anyhow::ensure!(
+                    t_post.elapsed() < Duration::from_secs(300),
+                    "{arm} post-audit repair did not converge"
+                );
+                let tick = coord.repair_step(cfg.repair_batch)?;
+                repaired += tick.repaired as u64;
+                lost_keys += tick.lost as u64;
+            }
+            time_to_full_rf_ms = t0.elapsed().as_secs_f64() * 1e3;
+        }
+    };
+
+    // The durability claim itself: every acked write readable after
+    // recovery, checked key by key through the quorum-read pool.
+    let gets: Vec<Op> = keys.iter().map(|&key| Op::Get { key }).collect();
+    let readback = pool.run(gets)?;
+    anyhow::ensure!(
+        readback.hits == cfg.keys && readback.misses == 0 && readback.lost == 0,
+        "{arm}: acked writes unreadable after recovery \
+         ({} hits / {} misses / {} lost of {})",
+        readback.hits,
+        readback.misses,
+        readback.lost,
+        cfg.keys
+    );
+    std::fs::remove_dir_all(&dir).ok();
+
+    Ok(RestartReport {
+        scenario: arm.to_string(),
+        nodes: cfg.nodes,
+        replicas: cfg.replicas,
+        keys: cfg.keys,
+        ops: outage.ops,
+        hits: outage.hits,
+        degraded_writes: outage.degraded_writes,
+        lost: outage.lost + readback.lost,
+        keys_replayed,
+        torn_stripes,
+        delta_missing,
+        delta_hinted,
+        repaired_keys: repaired,
+        lost_keys,
+        time_to_full_rf_ms,
+        audit_keys: audit.keys as u64,
+        audit_under: audit.under_replicated() as u64,
+        readable: readback.hits,
+    })
+}
+
+/// Re-replication TTF-RF over replay TTF-RF (> 1 = replay is faster).
+pub fn restart_speedup(reports: &[RestartReport]) -> Option<f64> {
+    let replay = reports.iter().find(|r| r.scenario == "replay")?;
+    let rerep = reports.iter().find(|r| r.scenario == "rereplicate")?;
+    if replay.time_to_full_rf_ms > 0.0 {
+        Some(rerep.time_to_full_rf_ms / replay.time_to_full_rf_ms)
+    } else {
+        None
+    }
+}
+
+/// The `bench-restart` suite: both recovery arms on identical clusters
+/// and traffic, one line each, the zero-loss and speedup gates, and
+/// `BENCH_restart.json`.
+pub fn run_restart_suite(cfg: &RestartConfig) -> anyhow::Result<Vec<RestartReport>> {
+    anyhow::ensure!(cfg.keys >= 1, "need a non-empty key space");
+    anyhow::ensure!(cfg.outage_ops >= 4, "outage needs at least one rewrite");
+    anyhow::ensure!(cfg.pipeline_depth >= 1, "pipeline depth must be >= 1");
+    let mut reports = Vec::new();
+    let r = run_restart_arm(cfg, true)?;
+    println!("{}", r.line());
+    reports.push(r);
+    let r = run_restart_arm(cfg, false)?;
+    println!("{}", r.line());
+    reports.push(r);
+
+    let lost: u64 = reports.iter().map(|r| r.lost + r.lost_keys).sum();
+    anyhow::ensure!(lost == 0, "{lost} acked writes/keys lost across the restart suite");
+    let under: u64 = reports.iter().map(|r| r.audit_under).sum();
+    anyhow::ensure!(under == 0, "{under} keys under-replicated after recovery");
+    let replayed = reports
+        .iter()
+        .find(|r| r.scenario == "replay")
+        .map_or(0, |r| r.keys_replayed);
+    anyhow::ensure!(replayed > 0, "replay arm recovered nothing from disk");
+    let speedup = restart_speedup(&reports)
+        .ok_or_else(|| anyhow::anyhow!("replay arm measured a zero TTF-RF"))?;
+    println!(
+        "restart: replay rejoin {speedup:.1}x faster than re-replication (gate {:.1}x)",
+        cfg.min_speedup
+    );
+    anyhow::ensure!(
+        speedup >= cfg.min_speedup,
+        "replay speedup {speedup:.2}x below the {:.2}x gate",
+        cfg.min_speedup
+    );
+    if let Some(path) = &cfg.out_json {
+        write_restart_json(path, cfg, &reports)?;
+        println!("wrote {path}");
+    }
+    Ok(reports)
+}
+
+/// Serialize the restart suite to its perf-trajectory JSON file.
+pub fn write_restart_json(
+    path: &str,
+    cfg: &RestartConfig,
+    reports: &[RestartReport],
+) -> anyhow::Result<()> {
+    let speedup = restart_speedup(reports)
+        .ok_or_else(|| anyhow::anyhow!("need both arms to serialize the restart suite"))?;
+    let results: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+    let fields = vec![
+        ("bench", Json::Str("restart".to_string())),
+        ("nodes", Json::Num(cfg.nodes as f64)),
+        ("replicas", Json::Num(cfg.replicas as f64)),
+        ("write_quorum", Json::Num(cfg.write_quorum as f64)),
+        ("read_quorum", Json::Num(cfg.read_quorum as f64)),
+        ("keys", Json::Num(cfg.keys as f64)),
+        ("outage_ops", Json::Num(cfg.outage_ops as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("pipeline_depth", Json::Num(cfg.pipeline_depth as f64)),
+        ("repair_batch", Json::Num(cfg.repair_batch as f64)),
+        ("min_speedup", Json::Num(cfg.min_speedup)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("speedup", Json::Num(speedup)),
+        ("results", Json::Arr(results)),
+    ];
+    std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2808,5 +3217,46 @@ mod tests {
         let dead = ev.get("dead_seq").unwrap().as_u64().unwrap();
         assert!(ev.get("suspect_seq").unwrap().as_u64().unwrap() < dead);
         assert!(dead < ev.get("repair_seq").unwrap().as_u64().unwrap());
+    }
+
+    #[test]
+    fn restart_suite_runs_small_and_emits_json() {
+        let dir = std::env::temp_dir().join("asura_loadgen_restart_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_restart.json");
+        let cfg = RestartConfig {
+            nodes: 4,
+            replicas: 2,
+            write_quorum: 1,
+            read_quorum: 2,
+            keys: 300,
+            outage_ops: 200,
+            workers: 2,
+            pipeline_depth: 8,
+            repair_batch: 64,
+            // A debug-build unit test is not the speedup measurement —
+            // the release-mode CI bench gates the real 5x floor via
+            // scripts/check_bench_shape.py. Here: both arms complete,
+            // zero loss, sane JSON.
+            min_speedup: 0.0,
+            data_dir: Some(dir.to_str().unwrap().to_string()),
+            out_json: Some(path.to_str().unwrap().to_string()),
+            ..Default::default()
+        };
+        let reports = run_restart_suite(&cfg).unwrap();
+        assert_eq!(reports.len(), 2, "replay + rereplicate arms");
+        assert!(reports.iter().all(|r| r.lost == 0 && r.lost_keys == 0));
+        assert!(reports.iter().all(|r| r.audit_under == 0));
+        assert!(reports.iter().all(|r| r.readable == cfg.keys));
+        let replay = reports.iter().find(|r| r.scenario == "replay").unwrap();
+        assert!(replay.keys_replayed > 0, "replay recovered nothing: {replay:?}");
+        let rerep = reports.iter().find(|r| r.scenario == "rereplicate").unwrap();
+        assert_eq!(rerep.keys_replayed, 0, "re-replication must not replay");
+        assert!(rerep.repaired_keys > 0, "re-replication copied nothing");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("restart"));
+        assert!(v.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 2);
     }
 }

@@ -52,7 +52,16 @@
 //!               [--cache C --seed S]                reads, baseline vs
 //!               [--out BENCH_loadctl.json]          steered+cached engine;
 //!                                                   emits skew-p99/uniform-p99
-//! asura node    --port P                            standalone storage node
+//! asura bench-restart [--nodes N --replicas R]      durability harness:
+//!               [--quorum Q --read-quorum Q]        power-loss a WAL-backed
+//!               [--keys K --outage-ops O]           node under traffic, then
+//!               [--workers W --depth D]             WAL-replay rejoin (delta
+//!               [--repair-batch B --min-speedup X]  repair) vs declare-dead
+//!               [--data-dir DIR --seed S]           re-replication; emits
+//!               [--out BENCH_restart.json]          both TTF-RFs + speedup
+//! asura node    --port P [--data-dir DIR]           standalone storage node
+//!                                                   (--data-dir = WAL-backed,
+//!                                                   replays on restart)
 //! asura place   --id X --nodes N [--algo asura|chash|straw]
 //! asura info    [--artifacts DIR]                   PJRT + artifact info
 //! ```
@@ -78,6 +87,7 @@ fn main() {
         "bench-shard" => run_bench_shard(&args),
         "bench-obs" => run_bench_obs(&args),
         "bench-loadctl" => run_bench_loadctl(&args),
+        "bench-restart" => run_bench_restart(&args),
         "node" => run_node(&args),
         "place" => run_place(&args),
         "info" => run_info(&args),
@@ -180,10 +190,35 @@ fn run_experiment(args: &Args) -> anyhow::Result<()> {
 
 /// Standalone storage-node daemon: `asura node --port 7001`. A leader
 /// elsewhere joins it with `asura serve --join 0=127.0.0.1:7001,...`.
+/// With `--data-dir` the node serves from a WAL-backed [`DurableStore`]:
+/// a restart replays snapshot + log from the directory and the daemon
+/// prints what recovery found, so an operator can hand the coordinator
+/// a rejoin instead of a re-replication.
+///
+/// [`DurableStore`]: asura::storage::DurableStore
 fn run_node(args: &Args) -> anyhow::Result<()> {
     let port = args.get_u64("port", 0) as u16;
-    let server = asura::net::server::NodeServer::spawn_on(("127.0.0.1", port))?;
-    println!("asura node listening on {}", server.addr());
+    let server = if let Some(dir) = args.get("data-dir") {
+        let (server, rec) = asura::net::server::NodeServer::spawn_durable(
+            ("127.0.0.1", port),
+            dir,
+            asura::obs::Obs::new(),
+        )?;
+        println!(
+            "asura node listening on {} (durable at {dir}: {} keys replayed, \
+             {} log records, {} torn stripes truncated)",
+            server.addr(),
+            rec.keys,
+            rec.log_records,
+            rec.torn_stripes
+        );
+        server
+    } else {
+        let server = asura::net::server::NodeServer::spawn_on(("127.0.0.1", port))?;
+        println!("asura node listening on {}", server.addr());
+        server
+    };
+    let _keep = server;
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -608,6 +643,51 @@ fn run_bench_loadctl(args: &Args) -> anyhow::Result<()> {
     );
     let reports = asura::loadgen::run_loadctl_suite(&cfg)?;
     anyhow::ensure!(reports.len() == 8, "all (scenario, engine) cells must run");
+    Ok(())
+}
+
+/// Durability harness: power-loss a WAL-backed node under live traffic,
+/// then recover it twice on identical clusters — WAL replay + delta
+/// repair vs declare-dead re-replication — gating zero acked-write loss
+/// and the replay speedup, emitted to `BENCH_restart.json`.
+fn run_bench_restart(args: &Args) -> anyhow::Result<()> {
+    let default = asura::loadgen::RestartConfig::default();
+    let cfg = asura::loadgen::RestartConfig {
+        nodes: args.get_u64("nodes", default.nodes as u64) as u32,
+        replicas: args.get_u64("replicas", default.replicas as u64) as usize,
+        write_quorum: args.get_u64("quorum", default.write_quorum as u64) as usize,
+        read_quorum: args.get_u64("read-quorum", default.read_quorum as u64) as usize,
+        keys: args.get_u64("keys", default.keys),
+        outage_ops: args.get_u64("outage-ops", default.outage_ops),
+        workers: args.get_u64("workers", default.workers as u64) as usize,
+        pipeline_depth: args.get_u64("depth", default.pipeline_depth as u64) as usize,
+        repair_batch: args.get_u64("repair-batch", default.repair_batch as u64) as usize,
+        min_speedup: args.get_f64("min-speedup", default.min_speedup),
+        seed: args.get_u64("seed", default.seed),
+        data_dir: args.get("data-dir").map(str::to_string),
+        out_json: Some(
+            args.get_or("out", default.out_json.as_deref().unwrap_or("BENCH_restart.json"))
+                .to_string(),
+        ),
+    };
+    anyhow::ensure!(
+        cfg.workers >= 1 && cfg.pipeline_depth >= 1,
+        "--workers and --depth must be >= 1"
+    );
+    println!(
+        "bench-restart: {} nodes, rf={}, wq={}, rq={}, {} keys, {} outage ops, \
+         repair batch {}, speedup gate {:.1}x",
+        cfg.nodes,
+        cfg.replicas,
+        cfg.write_quorum,
+        cfg.read_quorum,
+        cfg.keys,
+        cfg.outage_ops,
+        cfg.repair_batch,
+        cfg.min_speedup
+    );
+    let reports = asura::loadgen::run_restart_suite(&cfg)?;
+    anyhow::ensure!(reports.len() == 2, "both recovery arms must run");
     Ok(())
 }
 

@@ -1229,15 +1229,23 @@ impl Worker {
                             continue;
                         }
                         let Some(addr) = snap.addr_of(*n) else { continue };
-                        match self
-                            .conn(*n, addr)
-                            .and_then(|c| c.vset(key, best_ver, best_bytes.clone()))
-                        {
+                        let repair = Request::VSet {
+                            key,
+                            version: best_ver,
+                            value: best_bytes.clone(),
+                        };
+                        match self.conn(*n, addr).and_then(|c| match c.call(&repair)? {
+                            Response::VStored { applied, version: _ } => Ok(applied),
+                            other => Err(std::io::Error::new(
+                                std::io::ErrorKind::InvalidData,
+                                format!("unexpected response {other:?}"),
+                            )),
+                        }) {
                             // Only an *applied* write is a repair; a
                             // refused one means the replica already
                             // moved past `best_ver` on its own.
-                            Ok(ack) => {
-                                if ack.applied {
+                            Ok(applied) => {
+                                if applied {
                                     res.read_repairs += 1;
                                 }
                             }
@@ -1586,6 +1594,7 @@ fn is_conn_error(e: &std::io::Error) -> bool {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // keeps coverage on the compatibility wrappers
 mod tests {
     use super::*;
     use crate::coordinator::Coordinator;

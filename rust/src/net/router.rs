@@ -8,9 +8,35 @@
 //! round trip (Table III).
 
 use super::client::Conn;
+use super::protocol::{Request, Response};
 use crate::algo::{DatumId, NodeId, Placer};
 use std::collections::HashMap;
 use std::net::SocketAddr;
+
+/// Typed `SET` over one conn ([`Conn::call`] is the client surface;
+/// the per-op wrappers are deprecated).
+fn set_call(conn: &mut Conn, key: DatumId, value: Vec<u8>) -> std::io::Result<()> {
+    match conn.call(&Request::Set { key, value })? {
+        Response::Stored => Ok(()),
+        other => Err(unexpected(other)),
+    }
+}
+
+/// Typed `GET` over one conn.
+fn get_call(conn: &mut Conn, key: DatumId) -> std::io::Result<Option<Vec<u8>>> {
+    match conn.call(&Request::Get { key })? {
+        Response::Value(v) => Ok(Some(v)),
+        Response::NotFound => Ok(None),
+        other => Err(unexpected(other)),
+    }
+}
+
+fn unexpected(resp: Response) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("unexpected response {resp:?}"),
+    )
+}
 
 pub struct Router<P: Placer> {
     placer: P,
@@ -52,13 +78,13 @@ impl<P: Placer> Router<P> {
         let r = self.effective_replicas();
         if r == 1 {
             let node = self.placer.place(key);
-            return self.conn(node)?.set(key, value.to_vec());
+            return set_call(self.conn(node)?, key, value.to_vec());
         }
         let mut targets = std::mem::take(&mut self.scratch);
         self.placer.place_replicas(key, r, &mut targets);
         let mut result = Ok(());
         for &node in &targets {
-            if let Err(e) = self.conn(node).and_then(|c| c.set(key, value.to_vec())) {
+            if let Err(e) = self.conn(node).and_then(|c| set_call(c, key, value.to_vec())) {
                 result = Err(e);
                 break;
             }
@@ -72,13 +98,13 @@ impl<P: Placer> Router<P> {
         let r = self.effective_replicas();
         if r == 1 {
             let node = self.placer.place(key);
-            return self.conn(node)?.get(key);
+            return get_call(self.conn(node)?, key);
         }
         let mut targets = std::mem::take(&mut self.scratch);
         self.placer.place_replicas(key, r, &mut targets);
         let mut out = Ok(None);
         for &node in &targets {
-            match self.conn(node).and_then(|c| c.get(key)) {
+            match self.conn(node).and_then(|c| get_call(c, key)) {
                 Ok(Some(v)) => {
                     out = Ok(Some(v));
                     break;
@@ -100,7 +126,11 @@ impl<P: Placer> Router<P> {
         let mut ids: Vec<NodeId> = self.conns.keys().copied().collect();
         ids.sort_unstable();
         for node in ids {
-            let (keys, bytes, _, _) = self.conns.get_mut(&node).unwrap().stats()?;
+            let conn = self.conns.get_mut(&node).unwrap();
+            let (keys, bytes) = match conn.call(&Request::Stats)? {
+                Response::Stats { keys, bytes, .. } => (keys, bytes),
+                other => return Err(unexpected(other)),
+            };
             out.push((node, keys, bytes));
         }
         Ok(out)

@@ -39,6 +39,7 @@ pub const MAX_EVENT_PAGE: usize = 256;
 /// | `Dead`          | node id             | epoch after death  |
 /// | `RepairBatch`   | keys repaired       | epoch              |
 /// | `Promotion`     | new term            | epoch              |
+/// | `Rejoin`        | node id             | keys replayed      |
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EventKind {
     EpochPublish,
@@ -51,6 +52,9 @@ pub enum EventKind {
     Dead,
     RepairBatch,
     Promotion,
+    /// A restarted node replayed its local log and rejoined; the
+    /// coordinator delta-repairs it instead of treating it as empty.
+    Rejoin,
 }
 
 impl EventKind {
@@ -67,6 +71,7 @@ impl EventKind {
             EventKind::Dead => "dead",
             EventKind::RepairBatch => "repair",
             EventKind::Promotion => "promote",
+            EventKind::Rejoin => "rejoin",
         }
     }
 
@@ -82,6 +87,7 @@ impl EventKind {
             "dead" => EventKind::Dead,
             "repair" => EventKind::RepairBatch,
             "promote" => EventKind::Promotion,
+            "rejoin" => EventKind::Rejoin,
             _ => return None,
         })
     }
@@ -98,6 +104,7 @@ impl EventKind {
             EventKind::Dead => 7,
             EventKind::RepairBatch => 8,
             EventKind::Promotion => 9,
+            EventKind::Rejoin => 10,
         }
     }
 
@@ -113,6 +120,7 @@ impl EventKind {
             7 => EventKind::Dead,
             8 => EventKind::RepairBatch,
             9 => EventKind::Promotion,
+            10 => EventKind::Rejoin,
             _ => return None,
         })
     }
@@ -407,6 +415,7 @@ mod tests {
             EventKind::Dead,
             EventKind::RepairBatch,
             EventKind::Promotion,
+            EventKind::Rejoin,
         ] {
             assert_eq!(EventKind::from_token(kind.token()), Some(kind));
             assert_eq!(EventKind::from_code(kind.code()), Some(kind));

@@ -24,9 +24,142 @@
 //! counter the coordinator hands to every pool it connects — so
 //! sequence numbers are unique across writers and the per-key order is
 //! total.
+//!
+//! The serve path programs against the [`StorageEngine`] trait, not a
+//! concrete store: [`ShardedStore`] is the pure in-memory engine, and
+//! [`DurableStore`] wraps it with a per-stripe write-ahead log plus
+//! compacted snapshots ([`wal`], [`recover`]) so a restarted node
+//! replays its state instead of rejoining empty. The trait is the
+//! extension point for further engines — the ROADMAP's
+//! Sequential-Checking cold tier slots in as a third implementation
+//! without touching the server or coordinator.
 
 mod sharded;
 mod version;
+pub mod recover;
+pub mod wal;
 
+pub use recover::{DurableStore, RecoveryReport};
 pub use sharded::{KeyPage, ShardedStore};
 pub use version::{Version, VersionedValue, WriteClock};
+
+/// The node-local storage engine contract the serve path programs
+/// against ([`crate::net::server::NodeServer`] holds an
+/// `Arc<dyn StorageEngine>`). Semantics are fixed by the versioned
+/// apply rule ([`VersionedValue::apply`]): versioned writes are
+/// highest-version-wins with ties applying, so any engine's replay or
+/// replication path is idempotent by construction.
+///
+/// All methods take `&self` and must be callable from any number of
+/// threads concurrently. `flush` is the only durability hook: a memory
+/// engine answers `Ok(())`, a durable engine syncs its log — the
+/// server's flush tick calls it, data ops never do.
+pub trait StorageEngine: Send + Sync {
+    /// Versioned write, highest-version-wins. `Ok(())` = stored;
+    /// `Err(winner)` = refused, echoing the strictly newer stamp held.
+    fn vset(&self, key: u64, version: Version, bytes: Vec<u8>) -> Result<(), Version>;
+
+    /// Legacy unversioned write: stamped one past the stored copy so it
+    /// always applies. Returns the stamp stored under.
+    fn set(&self, key: u64, bytes: Vec<u8>) -> Version;
+
+    /// Read with version (bumps get/hit counters).
+    fn vget(&self, key: u64) -> Option<(Version, Vec<u8>)>;
+
+    /// Read bytes only (bumps get/hit counters).
+    fn get(&self, key: u64) -> Option<Vec<u8>> {
+        self.vget(key).map(|(_, b)| b)
+    }
+
+    /// Unconditional delete (legacy `DEL`).
+    fn remove(&self, key: u64) -> Option<VersionedValue>;
+
+    /// Version-guarded delete: `Some(true)` = deleted, `Some(false)` =
+    /// refused (strictly newer copy present), `None` = no copy.
+    fn vdel(&self, key: u64, guard: Version) -> Option<bool>;
+
+    /// Stored stamp for `key`, without touching counters.
+    fn version_of(&self, key: u64) -> Option<Version>;
+
+    /// Every stored key in scan order (prefer [`Self::keys_page`]).
+    fn keys(&self) -> Vec<u64>;
+
+    /// One bounded page of the key scan (the wire `KEYSC` op).
+    fn keys_page(&self, cursor: Option<u64>, limit: usize) -> KeyPage;
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn used_bytes(&self) -> u64;
+
+    /// Lifetime write count (attempted, whether or not applied).
+    fn sets(&self) -> u64;
+
+    /// Lifetime read count.
+    fn gets(&self) -> u64;
+
+    /// Make everything acked so far durable (fsync batched log writes,
+    /// compact if due). A memory engine answers `Ok(())`.
+    fn flush(&self) -> std::io::Result<()>;
+}
+
+impl StorageEngine for ShardedStore {
+    fn vset(&self, key: u64, version: Version, bytes: Vec<u8>) -> Result<(), Version> {
+        ShardedStore::vset(self, key, version, bytes)
+    }
+
+    fn set(&self, key: u64, bytes: Vec<u8>) -> Version {
+        ShardedStore::set(self, key, bytes)
+    }
+
+    fn vget(&self, key: u64) -> Option<(Version, Vec<u8>)> {
+        ShardedStore::vget(self, key)
+    }
+
+    fn get(&self, key: u64) -> Option<Vec<u8>> {
+        ShardedStore::get(self, key)
+    }
+
+    fn remove(&self, key: u64) -> Option<VersionedValue> {
+        ShardedStore::remove(self, key)
+    }
+
+    fn vdel(&self, key: u64, guard: Version) -> Option<bool> {
+        ShardedStore::vdel(self, key, guard)
+    }
+
+    fn version_of(&self, key: u64) -> Option<Version> {
+        ShardedStore::version_of(self, key)
+    }
+
+    fn keys(&self) -> Vec<u64> {
+        ShardedStore::keys(self)
+    }
+
+    fn keys_page(&self, cursor: Option<u64>, limit: usize) -> KeyPage {
+        ShardedStore::keys_page(self, cursor, limit)
+    }
+
+    fn len(&self) -> usize {
+        ShardedStore::len(self)
+    }
+
+    fn used_bytes(&self) -> u64 {
+        ShardedStore::used_bytes(self)
+    }
+
+    fn sets(&self) -> u64 {
+        ShardedStore::sets(self)
+    }
+
+    fn gets(&self) -> u64 {
+        ShardedStore::gets(self)
+    }
+
+    fn flush(&self) -> std::io::Result<()> {
+        Ok(())
+    }
+}

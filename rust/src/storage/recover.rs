@@ -1,0 +1,504 @@
+//! Crash-restart recovery: [`DurableStore`], the WAL-backed
+//! [`StorageEngine`] and its snapshot-then-log replay.
+//!
+//! `DurableStore` wraps the in-memory [`ShardedStore`] with a
+//! per-stripe [`Wal`]. Mutations append to the log before (or, for the
+//! legacy stamp-minting `SET`, atomically around) the in-memory apply;
+//! the server's flush tick calls [`StorageEngine::flush`], which
+//! batch-fsyncs dirty stripes and, past a size threshold, compacts the
+//! whole log into one `snapshot.snap` file (write-tmp → fsync → rename,
+//! then truncate the stripes — the hummock shared-buffer→file shape).
+//!
+//! [`DurableStore::recover`] rebuilds the store from disk:
+//!
+//! 1. read `snapshot.snap` (if present) — one record per live key at
+//!    compaction time;
+//! 2. scan every `wal-NN.log`, truncating each at its last whole
+//!    CRC-clean record (a crash tears at most a tail; a torn tail is
+//!    data that was never acked durable, so truncation loses nothing);
+//! 3. replay: snapshot records first, then log records sorted by their
+//!    global record seq — exactly the original apply order, so
+//!    PUT/DEL interleavings reproduce — through the same
+//!    highest-version-wins rule the live ops used (replay is idempotent
+//!    by construction).
+//!
+//! The [`RecoveryReport`] carries what happened; the recovered per-key
+//! version vector ([`DurableStore::version_vector`]) is what a
+//! restarted node advertises so the coordinator delta-repairs only
+//! stale or missing keys instead of treating it as empty.
+
+use super::wal::{read_records, Record, Wal, WalOp, DEFAULT_WAL_STRIPES};
+use super::{KeyPage, ShardedStore, StorageEngine, Version, VersionedValue};
+use std::fs::OpenOptions;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::RwLock;
+
+/// Guard version a legacy unconditional `DEL` is logged with: beats
+/// any real stamp, so replay deletes unconditionally too.
+const DEL_ANY: Version = Version {
+    epoch: u64::MAX,
+    seq: u64::MAX,
+};
+
+/// Compact once the stripe logs exceed this many bytes (checked at
+/// each flush tick, not per append).
+const DEFAULT_COMPACT_THRESHOLD: u64 = 8 << 20;
+
+/// What [`DurableStore::recover`] found and did.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Records replayed from `snapshot.snap`.
+    pub snapshot_records: u64,
+    /// Records replayed from the stripe logs.
+    pub log_records: u64,
+    /// Stripe files that had a torn tail truncated.
+    pub torn_stripes: u64,
+    /// Total bytes dropped by torn-tail truncation.
+    pub truncated_bytes: u64,
+    /// Live keys after replay.
+    pub keys: usize,
+    /// Highest record seq seen (the WAL resumes past it).
+    pub max_seq: u64,
+}
+
+/// WAL-backed storage engine: [`ShardedStore`] semantics plus
+/// crash-restart durability. See the module docs for the recovery
+/// protocol.
+pub struct DurableStore {
+    mem: ShardedStore,
+    wal: Wal,
+    dir: PathBuf,
+    /// Mutations hold this shared; compaction holds it exclusive, so a
+    /// snapshot is a consistent cut and log truncation can never drop
+    /// a record whose apply raced the memory scan.
+    fence: RwLock<()>,
+    compact_threshold: u64,
+}
+
+fn snapshot_path(dir: &Path) -> PathBuf {
+    dir.join("snapshot.snap")
+}
+
+/// Replay one record through the versioned apply rules. Refusals are
+/// expected (the log keeps records the live op refused too) — replay
+/// just re-runs the same decision.
+fn apply_record(mem: &ShardedStore, rec: &Record) {
+    match rec.op {
+        WalOp::Put => {
+            let _ = mem.vset(rec.key, rec.version, rec.value.clone());
+        }
+        WalOp::Del => {
+            let _ = mem.vdel(rec.key, rec.version);
+        }
+    }
+}
+
+impl DurableStore {
+    /// Open (or create) the engine at `dir`, replaying whatever is on
+    /// disk. Returns the live store and the [`RecoveryReport`].
+    pub fn recover(dir: impl AsRef<Path>) -> io::Result<(DurableStore, RecoveryReport)> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let mut report = RecoveryReport::default();
+        let mem = ShardedStore::new();
+
+        // 1. Snapshot first: a consistent cut, one record per key, all
+        // of which predate every surviving log record.
+        let snap = snapshot_path(&dir);
+        if snap.exists() {
+            let (records, _) = read_records(&snap)?;
+            report.snapshot_records = records.len() as u64;
+            for rec in &records {
+                report.max_seq = report.max_seq.max(rec.seq);
+                apply_record(&mem, rec);
+            }
+        }
+
+        // 2. Scan the stripes, truncating torn tails in place so the
+        // reopened appender never writes after garbage. Stripe count
+        // follows what is on disk; a fresh dir gets the default.
+        let mut stripes = 0;
+        while Wal::stripe_path(&dir, stripes).exists() {
+            stripes += 1;
+        }
+        let mut log: Vec<Record> = Vec::new();
+        for i in 0..stripes {
+            let path = Wal::stripe_path(&dir, i);
+            let (records, clean) = read_records(&path)?;
+            let disk = std::fs::metadata(&path)?.len();
+            if clean < disk {
+                report.torn_stripes += 1;
+                report.truncated_bytes += disk - clean;
+                OpenOptions::new().write(true).open(&path)?.set_len(clean)?;
+            }
+            log.extend(records);
+        }
+
+        // 3. Replay the log in global record-seq order — the original
+        // apply order, so per-key PUT/DEL interleavings reproduce.
+        log.sort_by_key(|r| r.seq);
+        report.log_records = log.len() as u64;
+        for rec in &log {
+            report.max_seq = report.max_seq.max(rec.seq);
+            apply_record(&mem, rec);
+        }
+        report.keys = mem.len();
+
+        let wal = Wal::open(
+            &dir,
+            if stripes > 0 { stripes } else { DEFAULT_WAL_STRIPES },
+            report.max_seq + 1,
+        )?;
+        Ok((
+            DurableStore {
+                mem,
+                wal,
+                dir,
+                fence: RwLock::new(()),
+                compact_threshold: DEFAULT_COMPACT_THRESHOLD,
+            },
+            report,
+        ))
+    }
+
+    /// [`Self::recover`], discarding the report.
+    pub fn open(dir: impl AsRef<Path>) -> io::Result<DurableStore> {
+        Self::recover(dir).map(|(s, _)| s)
+    }
+
+    /// Compact once the logs exceed `bytes` at a flush tick (testing
+    /// knob; the default is [`DEFAULT_COMPACT_THRESHOLD`]).
+    pub fn with_compact_threshold(mut self, bytes: u64) -> DurableStore {
+        self.compact_threshold = bytes;
+        self
+    }
+
+    pub fn data_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Current stripe-log bytes (what the compaction trigger reads).
+    pub fn wal_bytes(&self) -> u64 {
+        self.wal.log_bytes()
+    }
+
+    /// The recovered/live per-key version vector — what a rejoining
+    /// node advertises so the coordinator can repair deltas only.
+    pub fn version_vector(&self) -> Vec<(u64, Version)> {
+        let mut out: Vec<(u64, Version)> = self
+            .mem
+            .keys()
+            .into_iter()
+            .filter_map(|k| self.mem.version_of(k).map(|v| (k, v)))
+            .collect();
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
+    }
+
+    /// Fold the whole log into one snapshot and truncate the stripes.
+    /// Exclusive: blocks mutations for the duration (reads proceed).
+    pub fn compact(&self) -> io::Result<()> {
+        let _fence = self.fence.write().unwrap();
+        // The fence stops every mutation, so keys() + peek is a
+        // consistent cut of the store.
+        let mut buf = Vec::new();
+        for key in self.mem.keys() {
+            if let Some((version, value)) = self
+                .mem
+                .version_of(key)
+                .and_then(|v| self.mem.peek(key).map(|b| (v, b)))
+            {
+                super::wal::encode_record(
+                    &mut buf,
+                    &Record {
+                        seq: 0, // snapshot records replay before any log seq
+                        key,
+                        version,
+                        op: WalOp::Put,
+                        value,
+                    },
+                );
+            }
+        }
+        let tmp = self.dir.join("snapshot.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            io::Write::write_all(&mut f, &buf)?;
+            f.sync_data()?;
+        }
+        // Rename-then-truncate: a crash before the rename keeps the
+        // old snapshot + full logs; after it, the new snapshot plus
+        // whatever log tail survives replays to the same state.
+        std::fs::rename(&tmp, snapshot_path(&self.dir))?;
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        self.wal.truncate_all()?;
+        Ok(())
+    }
+}
+
+impl StorageEngine for DurableStore {
+    // WAL I/O failure is deliberately fatal: a node that cannot log a
+    // mutation must crash (and be repaired on rejoin) rather than ack
+    // writes that would silently vanish on restart.
+    fn vset(&self, key: u64, version: Version, bytes: Vec<u8>) -> Result<(), Version> {
+        let _fence = self.fence.read().unwrap();
+        self.wal
+            .append(key, version, WalOp::Put, &bytes)
+            .expect("wal append");
+        self.mem.vset(key, version, bytes)
+    }
+
+    fn set(&self, key: u64, bytes: Vec<u8>) -> Version {
+        // The stamp is minted inside the store's critical section, so
+        // log-after-apply — both sides of the fence guard, so neither
+        // a compaction cut nor a log truncation can split the pair.
+        let _fence = self.fence.read().unwrap();
+        let version = self.mem.set(key, bytes.clone());
+        self.wal
+            .append(key, version, WalOp::Put, &bytes)
+            .expect("wal append");
+        version
+    }
+
+    fn vget(&self, key: u64) -> Option<(Version, Vec<u8>)> {
+        self.mem.vget(key)
+    }
+
+    fn remove(&self, key: u64) -> Option<VersionedValue> {
+        let _fence = self.fence.read().unwrap();
+        self.wal
+            .append(key, DEL_ANY, WalOp::Del, &[])
+            .expect("wal append");
+        self.mem.remove(key)
+    }
+
+    fn vdel(&self, key: u64, guard: Version) -> Option<bool> {
+        let _fence = self.fence.read().unwrap();
+        self.wal
+            .append(key, guard, WalOp::Del, &[])
+            .expect("wal append");
+        self.mem.vdel(key, guard)
+    }
+
+    fn version_of(&self, key: u64) -> Option<Version> {
+        self.mem.version_of(key)
+    }
+
+    fn keys(&self) -> Vec<u64> {
+        self.mem.keys()
+    }
+
+    fn keys_page(&self, cursor: Option<u64>, limit: usize) -> KeyPage {
+        self.mem.keys_page(cursor, limit)
+    }
+
+    fn len(&self) -> usize {
+        self.mem.len()
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.mem.used_bytes()
+    }
+
+    fn sets(&self) -> u64 {
+        self.mem.sets()
+    }
+
+    fn gets(&self) -> u64 {
+        self.mem.gets()
+    }
+
+    /// The flush-tick entry point: batch-fsync dirty stripes, then
+    /// compact if the log has outgrown its threshold.
+    fn flush(&self) -> io::Result<()> {
+        self.wal.flush()?;
+        if self.wal.log_bytes() > self.compact_threshold {
+            self.compact()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::SplitMix64;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "asura-recover-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn recover_empty_dir_is_empty() {
+        let dir = tmpdir("empty");
+        let (store, report) = DurableStore::recover(&dir).unwrap();
+        assert_eq!(report, RecoveryReport::default());
+        assert!(StorageEngine::is_empty(&store));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writes_survive_reopen_at_their_versions() {
+        let dir = tmpdir("roundtrip");
+        let mut expect = Vec::new();
+        {
+            let (store, _) = DurableStore::recover(&dir).unwrap();
+            for k in 0..500u64 {
+                let v = Version::new(2, k + 1);
+                let val = k.to_le_bytes().to_vec();
+                assert!(store.vset(k, v, val.clone()).is_ok());
+                expect.push((k, v, val));
+            }
+            // Overwrites and a deletion must replay to their final state.
+            assert!(store.vset(7, Version::new(2, 1000), b"final".to_vec()).is_ok());
+            expect[7] = (7, Version::new(2, 1000), b"final".to_vec());
+            assert_eq!(store.vdel(3, Version::new(2, 1001)), Some(true));
+            expect.retain(|&(k, _, _)| k != 3);
+            StorageEngine::flush(&store).unwrap();
+        }
+        let (store, report) = DurableStore::recover(&dir).unwrap();
+        assert_eq!(report.log_records, 502);
+        assert_eq!(report.torn_stripes, 0);
+        assert_eq!(report.keys, 499);
+        for (k, v, val) in &expect {
+            assert_eq!(store.vget(*k), Some((*v, val.clone())), "key {k}");
+        }
+        assert_eq!(store.vget(3), None, "deleted key must stay deleted");
+        let vv = store.version_vector();
+        assert_eq!(vv.len(), 499);
+        assert!(vv.windows(2).all(|w| w[0].0 < w[1].0), "vector sorted by key");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn del_then_put_replays_in_original_order() {
+        // Replay is seq-ordered, not file-ordered: a key deleted and
+        // re-put must come back; a key put and then deleted must not.
+        let dir = tmpdir("order");
+        {
+            let (store, _) = DurableStore::recover(&dir).unwrap();
+            store.vset(1, Version::new(1, 1), b"a".to_vec()).unwrap();
+            store.vdel(1, Version::new(1, 2));
+            store.vset(1, Version::new(1, 3), b"back".to_vec()).unwrap();
+            store.vset(2, Version::new(1, 4), b"b".to_vec()).unwrap();
+            store.vdel(2, Version::new(1, 5));
+            store.remove(2); // no-op second delete via the legacy path
+            StorageEngine::flush(&store).unwrap();
+        }
+        let (store, _) = DurableStore::recover(&dir).unwrap();
+        assert_eq!(store.vget(1), Some((Version::new(1, 3), b"back".to_vec())));
+        assert_eq!(store.vget(2), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_survivors_replay() {
+        let dir = tmpdir("torn");
+        {
+            let (store, _) = DurableStore::recover(&dir).unwrap();
+            for k in 0..64u64 {
+                store.vset(k, Version::new(1, k + 1), vec![k as u8; 8]).unwrap();
+            }
+            StorageEngine::flush(&store).unwrap();
+        }
+        // Tear every stripe: append garbage that can never decode.
+        let mut stripes = 0;
+        while Wal::stripe_path(&dir, stripes).exists() {
+            let path = Wal::stripe_path(&dir, stripes);
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            io::Write::write_all(&mut f, &[0xEE; 13]).unwrap();
+            stripes += 1;
+        }
+        let (store, report) = DurableStore::recover(&dir).unwrap();
+        assert_eq!(report.torn_stripes, stripes as u64);
+        assert_eq!(report.truncated_bytes, 13 * stripes as u64);
+        assert_eq!(report.keys, 64, "every whole record survives the tear");
+        for k in 0..64u64 {
+            assert_eq!(store.vget(k), Some((Version::new(1, k + 1), vec![k as u8; 8])));
+        }
+        // The truncated stripes are clean again: a third generation of
+        // appends recovers too.
+        store.vset(99, Version::new(2, 1), b"post-tear".to_vec()).unwrap();
+        StorageEngine::flush(&store).unwrap();
+        drop(store);
+        let (store, report) = DurableStore::recover(&dir).unwrap();
+        assert_eq!(report.torn_stripes, 0);
+        assert_eq!(store.get(99), Some(b"post-tear".to_vec()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_folds_log_into_snapshot_and_recovers() {
+        let dir = tmpdir("compact");
+        let mut rng = SplitMix64::new(0xC0_FFEE);
+        {
+            let (store, _) = DurableStore::recover(&dir).unwrap();
+            let store = store.with_compact_threshold(1); // compact every flush
+            for i in 0..300u64 {
+                let key = rng.below(64);
+                store.vset(key, Version::new(1, i + 1), vec![i as u8; 32]).unwrap();
+                if i % 50 == 49 {
+                    StorageEngine::flush(&store).unwrap();
+                    assert_eq!(store.wal_bytes(), 0, "flush past threshold compacts");
+                }
+            }
+            // Writes after the last compaction live only in the log.
+            store.vset(999, Version::new(2, 1), b"tail".to_vec()).unwrap();
+            crate::storage::wal::read_records(&snapshot_path(&dir)).unwrap();
+            StorageEngine::flush(&store).unwrap();
+        }
+        let (store, report) = DurableStore::recover(&dir).unwrap();
+        assert!(report.snapshot_records > 0, "snapshot must exist");
+        assert_eq!(store.get(999), Some(b"tail".to_vec()));
+        assert!(store.len() <= 65);
+        // Replaying a snapshot + empty log equals replaying it again.
+        drop(store);
+        let (again, _) = DurableStore::recover(&dir).unwrap();
+        assert_eq!(again.get(999), Some(b"tail".to_vec()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_writers_against_compaction_lose_nothing() {
+        use std::sync::Arc;
+        let dir = tmpdir("race");
+        {
+            let (store, _) = DurableStore::recover(&dir).unwrap();
+            let store = Arc::new(store.with_compact_threshold(256));
+            let mut handles = Vec::new();
+            for t in 0..4u64 {
+                let store = store.clone();
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        let key = t * 1000 + i;
+                        store.vset(key, Version::new(1, t * 1000 + i + 1), vec![7; 16]).unwrap();
+                        if i % 32 == 0 {
+                            StorageEngine::flush(&*store).unwrap();
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            StorageEngine::flush(&*store).unwrap();
+        }
+        let (store, _) = DurableStore::recover(&dir).unwrap();
+        assert_eq!(store.len(), 800, "every write survives flush/compaction races");
+        for t in 0..4u64 {
+            for i in 0..200u64 {
+                assert!(store.version_of(t * 1000 + i).is_some(), "key {}", t * 1000 + i);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -148,6 +148,27 @@ pub enum Scenario {
         read_ops: u64,
         phases: u64,
     },
+    /// Durability: the driver hard-kills a durable node mid-stream (no
+    /// flush, no goodbye — the power-loss model) and restarts it from
+    /// its data directory. The mixed read/rewrite stream keeps mutating
+    /// the key space across the outage so WAL replay + delta repair
+    /// have real divergence to reconcile.
+    PowerLoss {
+        keys: u64,
+        read_ops: u64,
+        /// Every `write_every`-th op rewrites its key (0 = read-only),
+        /// same idempotent-rewrite contract as `Failover`.
+        write_every: u64,
+    },
+    /// Durability: the driver restarts every node in turn, one at a
+    /// time, while this stream keeps traffic flowing — the
+    /// zero-downtime upgrade drill. Same mixed read/rewrite shape as
+    /// `PowerLoss`, distinct trace.
+    RollingRestart {
+        keys: u64,
+        read_ops: u64,
+        write_every: u64,
+    },
 }
 
 impl Scenario {
@@ -162,6 +183,8 @@ impl Scenario {
             Scenario::SkewedRead { .. } => "skewed_read",
             Scenario::FlashCrowd { .. } => "flash_crowd",
             Scenario::RollingHotspot { .. } => "rolling_hotspot",
+            Scenario::PowerLoss { .. } => "power_loss",
+            Scenario::RollingRestart { .. } => "rolling_restart",
         }
     }
 
@@ -175,7 +198,9 @@ impl Scenario {
             | Scenario::UniformRead { keys, .. }
             | Scenario::SkewedRead { keys, .. }
             | Scenario::FlashCrowd { keys, .. }
-            | Scenario::RollingHotspot { keys, .. } => keyspace(keys, seed),
+            | Scenario::RollingHotspot { keys, .. }
+            | Scenario::PowerLoss { keys, .. }
+            | Scenario::RollingRestart { keys, .. } => keyspace(keys, seed),
             _ => Vec::new(),
         }
     }
@@ -224,17 +249,36 @@ impl Scenario {
                     })
                     .collect()
             }
+            // The three fault-injection scenarios share one mixed
+            // read/rewrite construction; a per-variant seed tweak keeps
+            // their traces distinct for the same (keys, ops, seed).
             Scenario::Failover {
+                keys,
+                read_ops,
+                write_every,
+            }
+            | Scenario::PowerLoss {
+                keys,
+                read_ops,
+                write_every,
+            }
+            | Scenario::RollingRestart {
                 keys,
                 read_ops,
                 write_every,
             } => {
                 assert!(
                     keys >= 1 || read_ops == 0,
-                    "failover ops need a non-empty key space (keys={keys})"
+                    "{} ops need a non-empty key space (keys={keys})",
+                    self.name()
                 );
+                let tweak = match *self {
+                    Scenario::Failover { .. } => 0x00FA_110E,
+                    Scenario::PowerLoss { .. } => 0x00B1_ACC0,
+                    _ => 0x0080_11E5,
+                };
                 let written = keyspace(keys, seed);
-                let mut rng = SplitMix64::new(seed ^ 0x00FA_110E);
+                let mut rng = SplitMix64::new(seed ^ tweak);
                 (0..read_ops)
                     .map(|i| {
                         let key = written[rng.below(keys) as usize];
@@ -481,6 +525,16 @@ mod tests {
                 read_ops: 50,
                 phases: 5,
             },
+            Scenario::PowerLoss {
+                keys: 100,
+                read_ops: 50,
+                write_every: 4,
+            },
+            Scenario::RollingRestart {
+                keys: 100,
+                read_ops: 50,
+                write_every: 4,
+            },
         ];
         for s in &scenarios {
             assert_eq!(s.ops(7), s.ops(7), "{} not deterministic", s.name());
@@ -591,6 +645,48 @@ mod tests {
             }
         }
         assert_eq!(sets, 50, "every 8th op rewrites");
+    }
+
+    #[test]
+    fn restart_scenarios_share_the_failover_contract_with_distinct_traces() {
+        let mk = |s: Scenario| {
+            let keys: std::collections::HashSet<u64> = s.preload_keys(5).into_iter().collect();
+            let ops = s.ops(5);
+            assert_eq!(ops.len(), 400, "{}", s.name());
+            let mut sets = 0;
+            for op in &ops {
+                match op {
+                    Op::Get { key } => assert!(keys.contains(key), "key {key} never preloaded"),
+                    Op::Set { key, size } => {
+                        assert!(keys.contains(key), "rewrite of unknown key {key}");
+                        assert_eq!(*size, FAILOVER_VALUE_SIZE, "rewrites must be idempotent");
+                        sets += 1;
+                    }
+                }
+            }
+            assert_eq!(sets, 50, "{}: every 8th op rewrites", s.name());
+            ops
+        };
+        let power = mk(Scenario::PowerLoss {
+            keys: 64,
+            read_ops: 400,
+            write_every: 8,
+        });
+        let rolling = mk(Scenario::RollingRestart {
+            keys: 64,
+            read_ops: 400,
+            write_every: 8,
+        });
+        let failover = mk(Scenario::Failover {
+            keys: 64,
+            read_ops: 400,
+            write_every: 8,
+        });
+        // Same parameters, same seed — but each scenario's tweak keeps
+        // its trace distinct from its siblings'.
+        assert_ne!(power, rolling);
+        assert_ne!(power, failover);
+        assert_ne!(rolling, failover);
     }
 
     #[test]

@@ -157,7 +157,15 @@ fn node_server_survives_malformed_input() {
         s.write_all(b"GARBAGE COMMAND\n").unwrap();
     }
     // ...must not take the server down for others.
+    use asura::net::protocol::{Request, Response};
     let mut c = asura::net::client::Conn::connect(server.addr()).unwrap();
-    c.set(1, b"ok".to_vec()).unwrap();
-    assert_eq!(c.get(1).unwrap(), Some(b"ok".to_vec()));
+    let req = Request::Set {
+        key: 1,
+        value: b"ok".to_vec(),
+    };
+    assert_eq!(c.call(&req).unwrap(), Response::Stored);
+    assert_eq!(
+        c.call(&Request::Get { key: 1 }).unwrap(),
+        Response::Value(b"ok".to_vec())
+    );
 }

@@ -48,7 +48,10 @@ fn pipelined_requests_answer_in_order() {
     }
     assert_eq!(*resps.last().unwrap(), Response::Deleted);
     // The connection is still usable for plain blocking calls.
-    assert_eq!(conn.get(1).unwrap(), Some(value_for(1, 24)));
+    assert_eq!(
+        conn.call(&Request::Get { key: 1 }).unwrap(),
+        Response::Value(value_for(1, 24))
+    );
 }
 
 #[test]
@@ -138,7 +141,10 @@ fn pool_places_keys_exactly_where_the_snapshot_says() {
     }
     for &(node, addr) in &snap.addrs {
         let mut conn = Conn::connect(addr).unwrap();
-        let (stored, _, _, _) = conn.stats().unwrap();
+        let stored = match conn.call(&Request::Stats).unwrap() {
+            Response::Stats { keys, .. } => keys,
+            other => panic!("unexpected response {other:?}"),
+        };
         assert_eq!(stored, expected[node as usize], "node {node}");
     }
 }
@@ -214,7 +220,10 @@ fn pool_scales_across_workers_consistently() {
         let mut stored = 0u64;
         for &(_, addr) in &snap.addrs {
             let mut conn = Conn::connect(addr).unwrap();
-            stored += conn.stats().unwrap().0;
+            stored += match conn.call(&Request::Stats).unwrap() {
+                Response::Stats { keys, .. } => keys,
+                other => panic!("unexpected response {other:?}"),
+            };
         }
         totals.push(stored);
     }

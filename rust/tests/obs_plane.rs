@@ -9,6 +9,7 @@
 //! event ring.
 
 use asura::coordinator::Coordinator;
+use asura::net::protocol::{Request, Response};
 use asura::net::{Conn, NodeServer};
 use asura::obs::{Event, EventKind, Obs};
 use std::net::SocketAddr;
@@ -99,12 +100,23 @@ fn metrics_families_surface_over_both_framings() {
 
     let mut bin = Conn::connect_binary(addr).unwrap();
     for k in 0..32u64 {
-        bin.set(k, vec![7u8; 16]).unwrap();
-        assert!(bin.get(k).unwrap().is_some());
+        let req = Request::Set {
+            key: k,
+            value: vec![7u8; 16],
+        };
+        assert_eq!(bin.call(&req).unwrap(), Response::Stored);
+        assert!(matches!(
+            bin.call(&Request::Get { key: k }).unwrap(),
+            Response::Value(_)
+        ));
     }
     let mut text = Conn::connect(addr).unwrap();
-    text.ping().unwrap();
-    text.set(99, b"t".to_vec()).unwrap();
+    assert_eq!(text.call(&Request::Ping).unwrap(), Response::Pong);
+    let req = Request::Set {
+        key: 99,
+        value: b"t".to_vec(),
+    };
+    assert_eq!(text.call(&req).unwrap(), Response::Stored);
 
     // Either framing returns the same registry; each serve path has
     // been timing its own ops into its own family.
@@ -129,7 +141,10 @@ fn stats_carries_the_heard_epoch_and_a_monotone_uptime() {
     let fresh = conn.stats_full().unwrap();
     assert_eq!(fresh.epoch, 0, "no coordinator heard from yet");
 
-    conn.heartbeat(7).unwrap();
+    match conn.call(&Request::Heartbeat { epoch: 7 }).unwrap() {
+        Response::Alive { .. } => {}
+        other => panic!("unexpected response {other:?}"),
+    }
     std::thread::sleep(Duration::from_millis(5));
     let later = conn.stats_full().unwrap();
     assert_eq!(later.epoch, 7, "STATS reports the heartbeat epoch");

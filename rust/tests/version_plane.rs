@@ -12,9 +12,27 @@ use asura::algo::Placer;
 use asura::coordinator::Coordinator;
 use asura::net::client::Conn;
 use asura::net::pool::PoolConfig;
+use asura::net::protocol::{Request, Response};
 use asura::storage::Version;
 use asura::workload::{value_for, Op};
 use std::collections::HashMap;
+
+/// Typed `VGET` ([`Conn::call`] is the client surface).
+fn vget(c: &mut Conn, key: u64) -> Option<(Version, Vec<u8>)> {
+    match c.call(&Request::VGet { key }).unwrap() {
+        Response::VValue { version, value } => Some((version, value)),
+        Response::NotFound => None,
+        other => panic!("unexpected response {other:?}"),
+    }
+}
+
+/// Typed `VSET`; returns `(applied, held_version)`.
+fn vset(c: &mut Conn, key: u64, version: Version, value: Vec<u8>) -> (bool, Version) {
+    match c.call(&Request::VSet { key, version, value }).unwrap() {
+        Response::VStored { applied, version } => (applied, version),
+        other => panic!("unexpected response {other:?}"),
+    }
+}
 
 /// Property-style: several seeds, each racing a full-keyspace rewrite
 /// against a join's live migration. After the dust settles, **every**
@@ -65,9 +83,7 @@ fn race_round(seed: u64) {
             let c = conns
                 .entry(n)
                 .or_insert_with(|| Conn::connect(addr).unwrap());
-            let (_, bytes) = c
-                .vget(k)
-                .unwrap()
+            let (_, bytes) = vget(c, k)
                 .unwrap_or_else(|| panic!("seed {seed}: key {k:x} missing on node {n}"));
             assert_eq!(
                 bytes,
@@ -96,11 +112,12 @@ fn repair_propagates_the_freshest_version_not_any_survivor() {
     // Land a newer write on two of the three holders behind the
     // coordinator's back, leaving the third stale at v1.
     let mut c0 = Conn::connect(snap.addr_of(holders[0]).unwrap()).unwrap();
-    let (v1, _) = c0.vget(42).unwrap().unwrap();
+    let (v1, _) = vget(&mut c0, 42).unwrap();
     let newer = Version::new(v1.epoch, v1.seq + 100);
     for &n in &holders[..2] {
         let mut c = Conn::connect(snap.addr_of(n).unwrap()).unwrap();
-        assert!(c.vset(42, newer, b"v2-fresh".to_vec()).unwrap().applied);
+        let (applied, _) = vset(&mut c, 42, newer, b"v2-fresh".to_vec());
+        assert!(applied);
     }
     // Repair must converge the whole set on the freshest copy — the
     // stale holder would happily have served v1.
@@ -110,7 +127,7 @@ fn repair_propagates_the_freshest_version_not_any_survivor() {
     assert!(tick.copies >= 1, "the stale holder must receive the fresh copy");
     for &n in &holders {
         let mut c = Conn::connect(snap.addr_of(n).unwrap()).unwrap();
-        let (ver, bytes) = c.vget(42).unwrap().unwrap();
+        let (ver, bytes) = vget(&mut c, 42).unwrap();
         assert_eq!(
             (ver, bytes),
             (newer, b"v2-fresh".to_vec()),
@@ -130,14 +147,15 @@ fn stale_copier_is_refused_end_to_end() {
     let snap = coord.snapshot();
     let addr = snap.addr_of(snap.placer.place(9)).unwrap();
     let mut c = Conn::connect(addr).unwrap();
-    let (v_orig, copied) = c.vget(9).unwrap().unwrap();
+    let (v_orig, copied) = vget(&mut c, 9).unwrap();
     // A live write supersedes the fetched copy...
     let v_live = Version::new(v_orig.epoch, v_orig.seq + 1);
-    assert!(c.vset(9, v_live, b"live-write".to_vec()).unwrap().applied);
+    let (applied, _) = vset(&mut c, 9, v_live, b"live-write".to_vec());
+    assert!(applied);
     // ...so replaying the copier's stale (version, bytes) is refused,
     // and the ack names the winner so a lagging clock can catch up.
-    let ack = c.vset(9, v_orig, copied).unwrap();
-    assert!(!ack.applied);
-    assert_eq!(ack.version, v_live);
-    assert_eq!(c.vget(9).unwrap().unwrap().1, b"live-write".to_vec());
+    let (applied, held) = vset(&mut c, 9, v_orig, copied);
+    assert!(!applied);
+    assert_eq!(held, v_live);
+    assert_eq!(vget(&mut c, 9).unwrap().1, b"live-write".to_vec());
 }

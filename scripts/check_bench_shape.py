@@ -36,6 +36,12 @@ Requirements are keyed by the artifact's "bench" field:
                      engine's worst skewed-scenario p99 over its
                      uniform-read p99); per-result ops, ops_per_sec,
                      p50_us, p99_us, lost
+  restart         -> top-level keys/outage_ops/speedup; per-result
+                     keys_replayed, repaired_keys, time_to_full_rf_ms,
+                     lost, audit_under; both recovery arms (replay,
+                     rereplicate) must be present, the replay arm must
+                     have recovered keys from disk, and its TTF-RF must
+                     be positive, finite, and beat re-replication's
 
 Artifact names are part of the contract: a basename starting with
 ``BENCH_`` must match a known ``BENCH_<kind>`` prefix, and the file's
@@ -68,6 +74,7 @@ TOP_REQUIRED = {
         "p99_instrumented_us",
     ],
     "loadctl": ["nodes", "replicas", "keys", "read_ops", "skew_p99_ratio"],
+    "restart": ["nodes", "replicas", "keys", "outage_ops", "min_speedup", "speedup"],
 }
 
 RESULT_REQUIRED = {
@@ -84,6 +91,14 @@ RESULT_REQUIRED = {
     "serve_async": ["ops", "ops_per_sec", "p50_us", "p99_us", "clients", "lost"],
     "obs": ["ops", "ops_per_sec", "p50_us", "p99_us", "clients", "lost", "op_samples"],
     "loadctl": ["ops", "ops_per_sec", "p50_us", "p99_us", "lost"],
+    "restart": [
+        "ops",
+        "keys_replayed",
+        "repaired_keys",
+        "time_to_full_rf_ms",
+        "lost",
+        "audit_under",
+    ],
 }
 
 # Extra fields required on specific result scenarios.
@@ -116,6 +131,7 @@ FILENAME_BENCH = {
     "BENCH_serve_async": "serve_async",
     "BENCH_obs": "obs",
     "BENCH_loadctl": "loadctl",
+    "BENCH_restart": "restart",
 }
 
 
@@ -208,6 +224,31 @@ def check_file(path):
         extra = SCENARIO_REQUIRED.get((bench, scenario))
         if extra:
             check_fields(result, extra, where, errors)
+    if bench == "restart":
+        by_scenario = {
+            r.get("scenario"): r for r in results if isinstance(r, dict)
+        }
+        replay = by_scenario.get("replay")
+        rerep = by_scenario.get("rereplicate")
+        if replay is None or rerep is None:
+            errors.append(
+                f"{path}: restart needs both 'replay' and 'rereplicate' results"
+            )
+        else:
+            t_replay = replay.get("time_to_full_rf_ms")
+            t_rerep = rerep.get("time_to_full_rf_ms")
+            if (
+                finite_number(t_replay)
+                and finite_number(t_rerep)
+                and not 0 < t_replay < t_rerep
+            ):
+                errors.append(
+                    f"{path}: replay TTF-RF {t_replay} ms must be positive and beat "
+                    f"re-replication's {t_rerep} ms"
+                )
+            keys_replayed = replay.get("keys_replayed")
+            if finite_number(keys_replayed) and keys_replayed <= 0:
+                errors.append(f"{path}: replay arm recovered no keys from disk")
     return errors
 
 
