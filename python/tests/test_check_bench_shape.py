@@ -260,6 +260,45 @@ def good_restart():
     }
 
 
+def good_multikey():
+    result_common = {
+        "ops": 4096,
+        "seq_ns": 900000000.0,
+        "batched_ns": 200000000.0,
+        "txn_commits": 0,
+        "txn_aborts": 0,
+        "splits": 0,
+        "lost": 0,
+    }
+    return {
+        "bench": "multikey",
+        "nodes": 6,
+        "replicas": 2,
+        "workers": 4,
+        "batch": 64,
+        "batches": 64,
+        "value_size": 64,
+        "transfers": 200,
+        "min_speedup": 2.0,
+        "seed": 42,
+        "speedup": 4.5,
+        "txn_commits": 200,
+        "txn_aborts": 3,
+        "results": [
+            dict(result_common, scenario="multi_get_batch64", speedup=4.5),
+            dict(
+                result_common,
+                scenario="cross_shard_transfers",
+                ops=400,
+                speedup=1.0,
+                txn_commits=200,
+                txn_aborts=3,
+                splits=1,
+            ),
+        ],
+    }
+
+
 def test_well_shaped_artifacts_pass(tmp_path):
     assert shape.check_file(_write(tmp_path, good_throughput())) == []
     assert shape.check_file(_write(tmp_path, good_shard())) == []
@@ -267,6 +306,7 @@ def test_well_shaped_artifacts_pass(tmp_path):
     assert shape.check_file(_write(tmp_path, good_obs(), "BENCH_obs.json")) == []
     assert shape.check_file(_write(tmp_path, good_loadctl(), "BENCH_loadctl.json")) == []
     assert shape.check_file(_write(tmp_path, good_restart(), "BENCH_restart.json")) == []
+    assert shape.check_file(_write(tmp_path, good_multikey(), "BENCH_multikey.json")) == []
 
 
 def test_obs_missing_ratio_or_samples_fails(tmp_path):
@@ -376,6 +416,41 @@ def test_restart_missing_fields_fail(tmp_path):
     del doc["results"][1]["time_to_full_rf_ms"]
     errors = shape.check_file(_write(tmp_path, doc))
     assert any("results[1]" in e and "time_to_full_rf_ms" in e for e in errors)
+
+
+def test_multikey_speedup_floor_is_gated(tmp_path):
+    # Below the floor fails even though the artifact is well-shaped: a
+    # bench run with a loosened --min-speedup must not upload green.
+    doc = good_multikey()
+    doc["speedup"] = 1.4
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("speedup" in e and "floor" in e for e in errors)
+    # At the floor exactly is still acceptable.
+    doc["speedup"] = shape.MULTIKEY_MIN_SPEEDUP
+    assert shape.check_file(_write(tmp_path, doc)) == []
+    # A non-finite speedup fails the finite check, not the floor check.
+    doc = good_multikey()
+    doc["speedup"] = math.nan
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("speedup" in e and "finite" in e for e in errors)
+
+
+def test_multikey_needs_a_committed_transfer(tmp_path):
+    doc = good_multikey()
+    doc["txn_commits"] = 0
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("no cross-shard transfer" in e for e in errors)
+
+
+def test_multikey_missing_fields_fail(tmp_path):
+    doc = good_multikey()
+    del doc["txn_aborts"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("txn_aborts" in e for e in errors)
+    doc = good_multikey()
+    del doc["results"][0]["batched_ns"]
+    errors = shape.check_file(_write(tmp_path, doc))
+    assert any("results[0]" in e and "batched_ns" in e for e in errors)
 
 
 def test_bench_named_files_must_match_a_known_prefix(tmp_path):

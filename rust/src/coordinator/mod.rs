@@ -925,6 +925,36 @@ impl Coordinator {
         }
     }
 
+    /// Declare the write floor for `[lo, hi)` on every member node
+    /// (the `FENCE` op): versioned writes and transaction prepares
+    /// into the range stamped below `epoch` are refused with `BUSY`
+    /// from this point on, and `epoch == 0` lifts the range instead.
+    /// Range hand-offs install this right after publishing the new
+    /// ownership, so a writer still routing by the pre-hand-off
+    /// snapshot is refused *at write time* and replays against the new
+    /// owner rather than landing a stray copy for reconcile to chase.
+    /// Best-effort per member — an unreachable node cannot take stray
+    /// writes either, and one that restarts without its fences is
+    /// converged by the usual repair/reconcile paths. Returns how many
+    /// members acked the fence.
+    pub fn fence_range(&mut self, epoch: u64, lo: DatumId, hi: Option<DatumId>) -> usize {
+        let req = Request::Fence { epoch, lo, hi };
+        let mut acked = 0;
+        for m in self.members.values_mut() {
+            let resp = match m.conn.call(&req) {
+                Ok(r) => Ok(r),
+                Err(_) => Conn::connect(m.addr).and_then(|c| {
+                    m.conn = c;
+                    m.conn.call(&req)
+                }),
+            };
+            if matches!(resp, Ok(Response::Fenced { .. })) {
+                acked += 1;
+            }
+        }
+        acked
+    }
+
     /// The scan under [`Self::fetch_best`]: freshest copy found plus
     /// the list of members that answered with one — converge paths use
     /// the holder list to bound their delete sweeps to nodes that
@@ -1658,8 +1688,7 @@ impl Coordinator {
 
 // ----------------------------------------------------------------------
 // Typed control-conn calls. [`Conn::call`] is the one real client
-// surface (the per-op `Conn` helpers are deprecated compatibility
-// wrappers), so the control plane states its requests as [`Request`]
+// surface, so the control plane states its requests as [`Request`]
 // values and keeps the response matching in these four adapters.
 // ----------------------------------------------------------------------
 
@@ -1711,7 +1740,6 @@ fn unexpected(resp: Response) -> std::io::Error {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::snapshot::SnapshotReader;
     use super::*;
@@ -1997,7 +2025,10 @@ mod tests {
         let holders = coord.replica_set(victim_key);
         let addr = coord.snapshot().addr_of(holders[1]).unwrap();
         let mut c = Conn::connect(addr).unwrap();
-        assert!(c.del(victim_key).unwrap());
+        assert!(matches!(
+            c.call(&Request::Del { key: victim_key }).unwrap(),
+            Response::Deleted
+        ));
         let audit = coord.audit_replication().unwrap();
         assert_eq!(audit.under_keys, vec![victim_key]);
         // Anti-entropy: feed the audit back into the repair queue.

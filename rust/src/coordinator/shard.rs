@@ -62,9 +62,16 @@
 //! and republishes. The data plane never notices: a headless shard
 //! keeps serving under its last published epoch.
 //!
-//! Known residual: cross-shard transactions (an op spanning two
-//! ranges) are out of scope — each key belongs to exactly one shard
-//! and ops are single-key, so the plane needs no cross-shard commit.
+//! Stray writes at a hand-off are refused *at write time*: the side
+//! losing a range installs an epoch fence on its nodes
+//! ([`Coordinator::fence_range`]) right after the new composite
+//! publishes, so a writer still routing by the pre-hand-off snapshot
+//! — which stamps the pre-hand-off epoch by construction — bounces
+//! with `BUSY` and replays against the new owner instead of landing a
+//! stale copy for the reconcile sweeps to chase. Cross-shard
+//! *operations* live in the data plane: the pool splits `MGET`/`MSET`
+//! batches across shard ranges, and [`crate::net::TxnClient`] commits
+//! atomic two-key writes spanning ranges, fenced on the same epochs.
 
 use super::election::{LeaderLease, LeaseConfig, Role};
 use super::registry::KeyRegistry;
@@ -593,6 +600,19 @@ impl ShardMap {
         );
         self.obs.event(EventKind::ShardSplit, src_idx as u64, at);
         self.republish();
+        // Write-time fence: from here on the source shard's nodes
+        // refuse any write into the moved range stamped below the
+        // post-split composite epoch (`BUSY`). A writer still routing
+        // by the pre-split snapshot — which stamps the pre-split epoch
+        // by construction — is bounced at write time and replays
+        // against the new owner, instead of landing a stray copy that
+        // the delete phase and reconcile sweeps would have to chase.
+        let fence_epoch = self.composite.load().epoch;
+        self.shards[src_idx]
+            .coord
+            .as_mut()
+            .expect("checked live")
+            .fence_range(fence_epoch, at, hi);
         // Delete phase: drop the source-side copies behind the guard.
         {
             let (left, right) = self.shards.split_at_mut(src_idx + 1);
@@ -634,6 +654,15 @@ impl ShardMap {
         let lo = self.shards[idx + 1].start;
         let hi = self.shards.get(idx + 2).map(|s| s.start);
         let mut report = HandoffReport::default();
+        // Ownership of `[lo, hi)` is coming back: lift any write fence
+        // the absorber's nodes still carry from the split that carved
+        // the range out, or the copy phase's re-ingest of the range's
+        // old stamps would bounce off the absorber's own fence.
+        self.shards[idx]
+            .coord
+            .as_mut()
+            .expect("checked live")
+            .fence_range(0, lo, hi);
         // Copy phase: the absorbing shard receives everything the
         // retiring shard manages; readers still route to the retiree.
         let moves = {
@@ -649,6 +678,14 @@ impl ShardMap {
         self.epoch_floor += retired.handles.cell.load().epoch;
         self.obs.event(EventKind::ShardMerge, idx as u64, idx as u64 + 1);
         self.republish();
+        // Fence the retiree's nodes one above the composite epoch (a
+        // merge folds the retired epoch into the floor, so the epoch
+        // itself does not advance): nothing legitimate ever routes to
+        // these nodes again, so every write a stale snapshot still
+        // steers there is refused at write time.
+        if let Some(src) = retired.coord.as_mut() {
+            src.fence_range(self.composite.load().epoch + 1, lo, hi);
+        }
         // Delete phase against the retired coordinator we still own.
         {
             let src = retired.coord.as_mut().expect("checked live");
@@ -1015,10 +1052,10 @@ impl ShadowStandby {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // keeps coverage on the compatibility wrappers
 mod tests {
     use super::*;
     use crate::net::client::Conn;
+    use crate::net::{Request, Response};
 
     /// A map with one shard of `nodes` spawned in-process nodes.
     fn single_shard_map(replicas: usize, nodes: u32) -> ShardMap {
@@ -1125,16 +1162,50 @@ mod tests {
         let addr = src_snap.addrs[0].1;
         let mut conn = Conn::connect(addr).unwrap();
         let fresh = Version::new(u64::MAX, 1);
-        conn.vset(key, fresh, b"new".to_vec()).unwrap();
+        let vset = Request::VSet { key, version: fresh, value: b"new".to_vec() };
+        assert!(matches!(conn.call(&vset).unwrap(), Response::VStored { .. }));
         map.key_registry().register(key);
         let reconciled = map.reconcile_writes();
         assert_eq!(reconciled, 1);
         assert_eq!(map.get(key).unwrap(), Some(b"new".to_vec()));
         assert!(
-            conn.vget(key).unwrap().is_none(),
+            matches!(conn.call(&Request::VGet { key }).unwrap(), Response::NotFound),
             "stray copy must be released from the former owner"
         );
         assert!(map.audit_all().unwrap().is_full());
+    }
+
+    #[test]
+    fn pre_split_stamps_bounce_off_the_source_after_the_split() {
+        let mut map = single_shard_map(1, 2);
+        let at = u64::MAX / 2;
+        let key = at + 5;
+        let stale_epoch = map.snapshot().epoch;
+        map.set(key, b"v").unwrap();
+        map.split_with(at, |coord| {
+            coord.spawn_node(60, 1.0)?;
+            Ok(())
+        })
+        .unwrap();
+        // A writer still routing by the pre-split snapshot stamps the
+        // pre-split composite epoch and lands on a source-shard node:
+        // the fence refuses it at write time instead of letting a
+        // stray copy wait for a reconcile sweep.
+        let src_snap = map.coordinator(0).unwrap().snapshot();
+        let mut conn = Conn::connect(src_snap.addrs[0].1).unwrap();
+        let stale = Request::VSet {
+            key,
+            version: Version::new(stale_epoch, u64::MAX),
+            value: b"stray".to_vec(),
+        };
+        assert!(matches!(conn.call(&stale).unwrap(), Response::Busy { .. }));
+        // The same stamp outside the moved range still lands.
+        let kept = Request::VSet {
+            key: at - 5,
+            version: Version::new(stale_epoch, u64::MAX),
+            value: b"fine".to_vec(),
+        };
+        assert!(matches!(conn.call(&kept).unwrap(), Response::VStored { .. }));
     }
 
     #[test]
@@ -1154,10 +1225,14 @@ mod tests {
         };
         let mut conn = Conn::connect(snap.addr_of(holder).unwrap()).unwrap();
         let incumbent = Version::new(1_000, 1);
-        conn.vset(key, incumbent, b"incumbent".to_vec()).unwrap();
+        let vset = Request::VSet { key, version: incumbent, value: b"incumbent".to_vec() };
+        assert!(matches!(conn.call(&vset).unwrap(), Response::VStored { .. }));
         map.set(key, b"new").unwrap();
         assert_eq!(map.get(key).unwrap(), Some(b"new".to_vec()));
-        let (ver, _) = conn.vget(key).unwrap().unwrap();
+        let ver = match conn.call(&Request::VGet { key }).unwrap() {
+            Response::VValue { version, .. } => version,
+            other => panic!("unexpected response {other:?}"),
+        };
         assert!(ver > incumbent, "set must out-stamp the incumbent, got {ver}");
     }
 

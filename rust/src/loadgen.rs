@@ -21,6 +21,7 @@ use crate::net::pool::{BatchResult, PoolConfig, RouterPool};
 use crate::net::protocol::{Request, Response};
 use crate::net::router::Router;
 use crate::net::server::NodeServer;
+use crate::net::txn::TxnClient;
 use crate::obs::{EventKind, Obs};
 use crate::prng::SplitMix64;
 use crate::stats::Summary;
@@ -111,7 +112,8 @@ fn report(
 /// the barrier: with one flat stream, a worker could execute a read
 /// before another worker has executed its write.
 fn split_phases(ops: Vec<Op>) -> (Vec<Op>, Vec<Op>) {
-    ops.into_iter().partition(|op| matches!(op, Op::Set { .. }))
+    ops.into_iter()
+        .partition(|op| matches!(op, Op::Set { .. } | Op::MultiSet { .. }))
 }
 
 /// Drive `ops` one blocking round trip at a time through the seed
@@ -125,7 +127,16 @@ pub fn run_router_baseline(
     let mut router = Router::connect(snap.placer.clone(), &snap.addrs, snap.replicas)?;
     let mut latency = Summary::new();
     let (sets, gets) = split_phases(ops);
-    let total = (sets.len() + gets.len()) as u64;
+    // Count multi-key ops at their key count, like the pool does.
+    let total: u64 = sets
+        .iter()
+        .chain(gets.iter())
+        .map(|op| match op {
+            Op::MultiGet { keys } => keys.len() as u64,
+            Op::MultiSet { keys, .. } => keys.len() as u64,
+            _ => 1,
+        })
+        .sum();
     let mut lost = 0u64;
     let t0 = Instant::now();
     for op in sets.into_iter().chain(gets) {
@@ -135,6 +146,22 @@ pub fn run_router_baseline(
             Op::Get { key } => {
                 if router.get(key)?.is_none() {
                     lost += 1;
+                }
+            }
+            // The baseline has no batched path by design: a multi-key
+            // op degrades to one blocking round trip per key, which is
+            // exactly what the pool's pipelined fan-out is measured
+            // against.
+            Op::MultiSet { keys, size } => {
+                for key in keys {
+                    router.set(key, &value_for(key, size))?;
+                }
+            }
+            Op::MultiGet { keys } => {
+                for key in keys {
+                    if router.get(key)?.is_none() {
+                        lost += 1;
+                    }
                 }
             }
         }
@@ -3111,6 +3138,335 @@ pub fn write_restart_json(
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Multi-key scenario: pipelined batched reads vs the sequential
+// baseline at a fixed batch size, plus the epoch-fenced two-key
+// transfer loop raced against an online split.
+// ---------------------------------------------------------------------
+
+/// Floor the release-mode CI bench enforces on the batched-vs-
+/// sequential multi-get speedup (also the default `min_speedup`).
+pub const MULTIKEY_MIN_SPEEDUP: f64 = 2.0;
+
+/// Transfer pairs the two-key loop cycles through.
+const TRANSFER_PAIRS: u64 = 8;
+
+/// Configuration for `asura bench-multikey`.
+#[derive(Clone, Debug)]
+pub struct MultikeyConfig {
+    pub nodes: u32,
+    pub replicas: usize,
+    pub workers: usize,
+    /// Keys per multi-key batch (the headline point is batch 64).
+    pub batch: usize,
+    /// Batches measured per arm.
+    pub batches: u64,
+    pub value_size: u32,
+    /// Two-key cross-shard transfers driven against a live split.
+    pub transfers: u64,
+    /// Gate: pipelined multi-get must beat the sequential baseline by
+    /// this factor at `batch` (0.0 disables, for debug-build tests).
+    pub min_speedup: f64,
+    pub seed: u64,
+    pub out_json: Option<String>,
+}
+
+impl Default for MultikeyConfig {
+    fn default() -> MultikeyConfig {
+        MultikeyConfig {
+            nodes: 6,
+            replicas: 2,
+            workers: 4,
+            batch: 64,
+            batches: 64,
+            value_size: 64,
+            transfers: 200,
+            min_speedup: MULTIKEY_MIN_SPEEDUP,
+            seed: 42,
+            out_json: None,
+        }
+    }
+}
+
+/// One measured multi-key row.
+#[derive(Clone, Debug)]
+pub struct MultikeyReport {
+    pub scenario: String,
+    pub ops: u64,
+    /// Wall nanoseconds of the sequential arm (batch row only).
+    pub seq_ns: f64,
+    /// Wall nanoseconds of the pipelined batched arm (batch row only).
+    pub batched_ns: f64,
+    /// `seq_ns / batched_ns` (batch row only).
+    pub speedup: f64,
+    pub txn_commits: u64,
+    pub txn_aborts: u64,
+    /// Online splits raced by the transfer loop.
+    pub splits: u64,
+    /// Reads that found nothing anywhere — must be 0.
+    pub lost: u64,
+}
+
+impl MultikeyReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<22} {:>8} ops  seq {:>7.1} ms  batched {:>7.1} ms  speedup {:>5.2}x  \
+             txn {}/{} (aborts {})  splits {}  lost {}",
+            self.scenario,
+            self.ops,
+            self.seq_ns / 1e6,
+            self.batched_ns / 1e6,
+            self.speedup,
+            self.txn_commits,
+            self.txn_commits + self.txn_aborts,
+            self.txn_aborts,
+            self.splits,
+            self.lost
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("ops", Json::Num(self.ops as f64)),
+            ("seq_ns", Json::Num(self.seq_ns)),
+            ("batched_ns", Json::Num(self.batched_ns)),
+            ("speedup", Json::Num(self.speedup)),
+            ("txn_commits", Json::Num(self.txn_commits as f64)),
+            ("txn_aborts", Json::Num(self.txn_aborts as f64)),
+            ("splits", Json::Num(self.splits as f64)),
+            ("lost", Json::Num(self.lost as f64)),
+        ])
+    }
+}
+
+/// The measured key set: unique (odd-multiplier bijection), spread
+/// over the whole space so every batch straddles many holders.
+fn multikey_keys(cfg: &MultikeyConfig) -> Vec<u64> {
+    (0..cfg.batch as u64 * cfg.batches)
+        .map(|i| (i ^ cfg.seed).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .collect()
+}
+
+/// Batched-read speedup: preload through `multi_set`, then read every
+/// batch twice — one blocking round trip per key through the seed
+/// [`Router`], then one pipelined `multi_get` fan-out per batch.
+pub fn run_multikey_batch(cfg: &MultikeyConfig) -> anyhow::Result<MultikeyReport> {
+    anyhow::ensure!(
+        cfg.batch >= 1 && cfg.batches >= 1 && cfg.workers >= 1,
+        "batch, batches and workers must be >= 1"
+    );
+    anyhow::ensure!(
+        cfg.replicas >= 1 && cfg.nodes as usize >= cfg.replicas,
+        "need at least `replicas` nodes"
+    );
+    let mut coord = Coordinator::new(cfg.replicas);
+    for i in 0..cfg.nodes {
+        coord.spawn_node(i, 1.0)?;
+    }
+    let keys = multikey_keys(cfg);
+    let pool = coord.connect_pool(PoolConfig::new(cfg.workers))?;
+    let items: Vec<(u64, Vec<u8>)> = keys
+        .iter()
+        .map(|&k| (k, value_for(k, cfg.value_size)))
+        .collect();
+    let wres = pool.multi_set(items)?;
+    anyhow::ensure!(
+        wres.ops == keys.len() as u64,
+        "preload acked {} of {} keys",
+        wres.ops,
+        keys.len()
+    );
+    // Sequential arm: the seed router, one blocking round trip per key.
+    let snap = coord.snapshot();
+    let mut router = Router::connect(snap.placer.clone(), &snap.addrs, snap.replicas)?;
+    let mut lost = 0u64;
+    let t0 = Instant::now();
+    for &key in &keys {
+        if router.get(key)?.is_none() {
+            lost += 1;
+        }
+    }
+    let seq_ns = t0.elapsed().as_nanos() as f64;
+    // Batched arm: the same keys, `batch` at a time, each batch one
+    // pipelined fan-out (one flush per (worker, holder node)).
+    let mut hits = 0u64;
+    let t1 = Instant::now();
+    for chunk in keys.chunks(cfg.batch) {
+        let (values, res) = pool.multi_get(chunk)?;
+        lost += res.lost;
+        hits += values.iter().filter(|v| v.is_some()).count() as u64;
+    }
+    let batched_ns = t1.elapsed().as_nanos() as f64;
+    anyhow::ensure!(
+        hits == keys.len() as u64,
+        "batched arm returned {hits} of {} keys",
+        keys.len()
+    );
+    Ok(MultikeyReport {
+        scenario: format!("multi_get_batch{}", cfg.batch),
+        ops: keys.len() as u64 * 2,
+        seq_ns,
+        batched_ns,
+        speedup: seq_ns / batched_ns.max(1.0),
+        txn_commits: 0,
+        txn_aborts: 0,
+        splits: 0,
+        lost,
+    })
+}
+
+/// Key pair `p`: one key in each half of the key space, so every
+/// transfer spans the two shards split at `mid`.
+fn transfer_pair(seed: u64, p: u64, mid: u64) -> (u64, u64) {
+    let h = (seed ^ p).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    (h % mid, mid + h % (u64::MAX - mid))
+}
+
+/// Epoch-fenced two-key transfers across a shard boundary, racing an
+/// online split mid-run: every transfer must commit (through aborts),
+/// and at quiescence each pair holds exactly its last acked transfer
+/// on both keys — matched, never half-applied.
+pub fn run_multikey_transfers(cfg: &MultikeyConfig) -> anyhow::Result<MultikeyReport> {
+    anyhow::ensure!(cfg.transfers >= 1, "transfers must be >= 1");
+    anyhow::ensure!(
+        cfg.replicas >= 1 && cfg.nodes as usize >= cfg.replicas,
+        "need at least `replicas` nodes per shard"
+    );
+    let mut map = ShardMap::new(cfg.replicas);
+    for j in 0..cfg.nodes {
+        map.spawn_node(0, j, 1.0)?;
+    }
+    // Two shards; every transfer pair straddles this boundary.
+    let mid = u64::MAX / 2;
+    map.split_with(mid, |coord| {
+        for j in 0..cfg.nodes {
+            coord.spawn_node(1000 + j, 1.0)?;
+        }
+        Ok(())
+    })?;
+    let cell = map.snapshot_cell();
+    let mut txn = TxnClient::connect(&cell, map.handles(0).clock).registry(map.key_registry());
+    let pair_value = |tag: u8, p: u64, i: u64| {
+        let mut v = vec![tag, p as u8];
+        v.extend_from_slice(&i.to_le_bytes());
+        v
+    };
+    let mut last = vec![None::<u64>; TRANSFER_PAIRS as usize];
+    let mut splits = 0u64;
+    for i in 0..cfg.transfers {
+        let p = i % TRANSFER_PAIRS;
+        let (a, b) = transfer_pair(cfg.seed, p, mid);
+        txn.transfer(a, pair_value(0xA, p, i), b, pair_value(0xB, p, i))?;
+        last[p as usize] = Some(i);
+        // Mid-run, a third shard carves out the top quarter while
+        // transfers keep flowing: prepares racing the hand-off bounce
+        // off the fence and re-drive — never half-apply.
+        if i == cfg.transfers / 2 {
+            map.split_with(mid + mid / 2, |coord| {
+                for j in 0..cfg.replicas as u32 {
+                    coord.spawn_node(2000 + j, 1.0)?;
+                }
+                Ok(())
+            })?;
+            splits += 1;
+        }
+    }
+    // Quiescent check, all replicas consulted: both keys of every pair
+    // carry the pair's last acked transfer.
+    let pool = map.connect_pool(PoolConfig::new(1).read_quorum(0))?;
+    let mut lost = 0u64;
+    for p in 0..TRANSFER_PAIRS {
+        let Some(i) = last[p as usize] else { continue };
+        let (a, b) = transfer_pair(cfg.seed, p, mid);
+        let (values, res) = pool.multi_get(&[a, b])?;
+        lost += res.lost;
+        anyhow::ensure!(
+            values[0].as_deref() == Some(&pair_value(0xA, p, i)[..])
+                && values[1].as_deref() == Some(&pair_value(0xB, p, i)[..]),
+            "pair {p} not at its last acked transfer {i}: {values:?}"
+        );
+    }
+    Ok(MultikeyReport {
+        scenario: "cross_shard_transfers".to_string(),
+        ops: cfg.transfers * 2,
+        seq_ns: 0.0,
+        batched_ns: 0.0,
+        speedup: 0.0,
+        txn_commits: txn.commits(),
+        txn_aborts: txn.aborts(),
+        splits,
+        lost,
+    })
+}
+
+/// Run the multi-key suite: the batch-64 speedup point and the
+/// cross-shard transfer story; print one line each, enforce the
+/// zero-loss and speedup gates, and emit `BENCH_multikey.json`.
+pub fn run_multikey_suite(cfg: &MultikeyConfig) -> anyhow::Result<Vec<MultikeyReport>> {
+    let batch = run_multikey_batch(cfg)?;
+    println!("{}", batch.line());
+    let txn = run_multikey_transfers(cfg)?;
+    println!("{}", txn.line());
+    anyhow::ensure!(
+        batch.lost == 0 && txn.lost == 0,
+        "multi-key traffic lost reads"
+    );
+    anyhow::ensure!(
+        batch.speedup.is_finite() && batch.speedup >= cfg.min_speedup,
+        "batched multi-get speedup {:.2}x below the {:.2}x gate",
+        batch.speedup,
+        cfg.min_speedup
+    );
+    anyhow::ensure!(
+        txn.txn_commits == cfg.transfers,
+        "only {} of {} transfers committed",
+        txn.txn_commits,
+        cfg.transfers
+    );
+    let reports = vec![batch, txn];
+    if let Some(path) = &cfg.out_json {
+        write_multikey_json(path, cfg, &reports)?;
+        println!("wrote {path}");
+    }
+    Ok(reports)
+}
+
+/// Serialize the multi-key suite to its perf-trajectory JSON file.
+pub fn write_multikey_json(
+    path: &str,
+    cfg: &MultikeyConfig,
+    reports: &[MultikeyReport],
+) -> anyhow::Result<()> {
+    let batch = reports
+        .iter()
+        .find(|r| r.scenario.starts_with("multi_get"))
+        .ok_or_else(|| anyhow::anyhow!("multi-get row missing"))?;
+    let txn = reports
+        .iter()
+        .find(|r| r.scenario == "cross_shard_transfers")
+        .ok_or_else(|| anyhow::anyhow!("transfer row missing"))?;
+    let results: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+    let fields = vec![
+        ("bench", Json::Str("multikey".to_string())),
+        ("nodes", Json::Num(cfg.nodes as f64)),
+        ("replicas", Json::Num(cfg.replicas as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("batch", Json::Num(cfg.batch as f64)),
+        ("batches", Json::Num(cfg.batches as f64)),
+        ("value_size", Json::Num(cfg.value_size as f64)),
+        ("transfers", Json::Num(cfg.transfers as f64)),
+        ("min_speedup", Json::Num(cfg.min_speedup)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("speedup", Json::Num(batch.speedup)),
+        ("txn_commits", Json::Num(txn.txn_commits as f64)),
+        ("txn_aborts", Json::Num(txn.txn_aborts as f64)),
+        ("results", Json::Arr(results)),
+    ];
+    std::fs::write(path, format!("{}\n", Json::obj(fields)))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -3217,6 +3573,43 @@ mod tests {
         let dead = ev.get("dead_seq").unwrap().as_u64().unwrap();
         assert!(ev.get("suspect_seq").unwrap().as_u64().unwrap() < dead);
         assert!(dead < ev.get("repair_seq").unwrap().as_u64().unwrap());
+    }
+
+    #[test]
+    fn multikey_suite_runs_small_and_emits_json() {
+        let dir = std::env::temp_dir().join("asura_loadgen_multikey_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_multikey.json");
+        let cfg = MultikeyConfig {
+            nodes: 4,
+            replicas: 2,
+            workers: 2,
+            batch: 16,
+            batches: 4,
+            value_size: 16,
+            transfers: 24,
+            // A debug-build unit test is not the speedup measurement —
+            // the release-mode CI bench gates the real 2x floor via
+            // scripts/check_bench_shape.py. Here: both arms complete,
+            // every transfer commits, zero loss, sane JSON.
+            min_speedup: 0.0,
+            seed: 7,
+            out_json: Some(path.to_str().unwrap().to_string()),
+        };
+        let reports = run_multikey_suite(&cfg).unwrap();
+        assert_eq!(reports.len(), 2, "batch + transfer rows");
+        assert!(reports.iter().all(|r| r.lost == 0));
+        let txn = &reports[1];
+        assert_eq!(txn.txn_commits, cfg.transfers);
+        assert_eq!(txn.splits, 1, "the transfer loop must race a split");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("multikey"));
+        let speedup = v.get("speedup").unwrap().as_f64().unwrap();
+        assert!(speedup.is_finite() && speedup > 0.0);
+        assert_eq!(v.get("txn_commits").unwrap().as_u64(), Some(cfg.transfers));
+        assert!(v.get("txn_aborts").unwrap().as_u64().is_some());
+        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]

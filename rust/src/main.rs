@@ -52,6 +52,11 @@
 //!               [--cache C --seed S]                reads, baseline vs
 //!               [--out BENCH_loadctl.json]          steered+cached engine;
 //!                                                   emits skew-p99/uniform-p99
+//! asura bench-multikey [--nodes N --replicas R]     multi-key harness:
+//!               [--workers W --batch B --batches K]  pipelined MGET at batch
+//!               [--value-size S --transfers T]      B vs sequential reads,
+//!               [--min-speedup X --seed S]          plus epoch-fenced 2-key
+//!               [--out BENCH_multikey.json]         transfers racing a split
 //! asura bench-restart [--nodes N --replicas R]      durability harness:
 //!               [--quorum Q --read-quorum Q]        power-loss a WAL-backed
 //!               [--keys K --outage-ops O]           node under traffic, then
@@ -87,6 +92,7 @@ fn main() {
         "bench-shard" => run_bench_shard(&args),
         "bench-obs" => run_bench_obs(&args),
         "bench-loadctl" => run_bench_loadctl(&args),
+        "bench-multikey" => run_bench_multikey(&args),
         "bench-restart" => run_bench_restart(&args),
         "node" => run_node(&args),
         "place" => run_place(&args),
@@ -643,6 +649,41 @@ fn run_bench_loadctl(args: &Args) -> anyhow::Result<()> {
     );
     let reports = asura::loadgen::run_loadctl_suite(&cfg)?;
     anyhow::ensure!(reports.len() == 8, "all (scenario, engine) cells must run");
+    Ok(())
+}
+
+/// Multi-key harness: the pipelined `multi_get` fan-out vs one blocking
+/// round trip per key at a fixed batch size, plus the epoch-fenced
+/// two-key transfer loop raced against an online split — gating the
+/// batched speedup and all-transfers-commit, emitted to
+/// `BENCH_multikey.json`.
+fn run_bench_multikey(args: &Args) -> anyhow::Result<()> {
+    let default = asura::loadgen::MultikeyConfig::default();
+    let cfg = asura::loadgen::MultikeyConfig {
+        nodes: args.get_u64("nodes", default.nodes as u64) as u32,
+        replicas: args.get_u64("replicas", default.replicas as u64) as usize,
+        workers: args.get_u64("workers", default.workers as u64) as usize,
+        batch: args.get_u64("batch", default.batch as u64) as usize,
+        batches: args.get_u64("batches", default.batches),
+        value_size: args.get_u64("value-size", default.value_size as u64) as u32,
+        transfers: args.get_u64("transfers", default.transfers),
+        min_speedup: args.get_f64("min-speedup", default.min_speedup),
+        seed: args.get_u64("seed", default.seed),
+        out_json: Some(args.get_or("out", "BENCH_multikey.json").to_string()),
+    };
+    println!(
+        "bench-multikey: {} nodes, rf={}, {} workers, batch {} x {}, {} transfers, \
+         speedup gate {:.1}x",
+        cfg.nodes,
+        cfg.replicas,
+        cfg.workers,
+        cfg.batch,
+        cfg.batches,
+        cfg.transfers,
+        cfg.min_speedup
+    );
+    let reports = asura::loadgen::run_multikey_suite(&cfg)?;
+    anyhow::ensure!(reports.len() == 2, "both multi-key rows must run");
     Ok(())
 }
 

@@ -9,25 +9,16 @@
 //! [`Request`], match the typed [`Response`].
 //!
 //! The historical per-op helpers (`conn.set(..)`, `conn.vget(..)`, …)
-//! survive as a single block of `#[deprecated]` compatibility wrappers
-//! at the bottom of this file. They add nothing over `call` — each is
-//! a one-armed match — and they multiplied the client surface by the
-//! op count: every new wire op grew N wrappers across N callers.
-//! Migrate by inlining the request:
-//!
-//! ```ignore
-//! // before                          // after
-//! conn.vget(key)?                    match conn.call(&Request::VGet { key })? {
-//!                                        Response::VValue { version, value } => ..,
-//!                                        Response::NotFound => ..,
-//!                                        other => ..,
-//!                                    }
-//! ```
+//! are gone: each was a one-armed match over `call`, and together they
+//! multiplied the client surface by the op count — every new wire op
+//! grew N wrappers across N callers. A new wire op gets a [`Request`]
+//! variant, not a method. The few helpers that remain earn their keep
+//! by encoding real policy rather than renaming an op: the `_or_busy`
+//! pair surfaces admission-control shedding as data instead of an
+//! error, and the obs fetchers parse their wire blobs.
 
 use super::frame;
-use super::protocol::{
-    read_response, write_request, LeaseReply, Request, Response, VdelOutcome, VsetAck,
-};
+use super::protocol::{read_response, write_request, Request, Response, VsetAck};
 use crate::obs::{Event, MetricsDump};
 use crate::storage::Version;
 use std::io::{BufReader, BufWriter, Write};
@@ -262,211 +253,6 @@ impl Conn {
             });
         }
         Ok(out)
-    }
-}
-
-// ----------------------------------------------------------------------
-// Deprecated per-op compatibility wrappers.
-//
-// Every method below is a one-armed match over [`Conn::call`] and is
-// kept only so out-of-tree callers keep compiling while they migrate.
-// Do not add new wrappers here: a new wire op gets a [`Request`]
-// variant, not a method. Migration is mechanical — see the module doc.
-// The inline test suites still call these (under `allow(deprecated)`)
-// so the wrappers stay covered until they are removed.
-// ----------------------------------------------------------------------
-impl Conn {
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::Set { .. }) and match the Response")]
-    pub fn set(&mut self, key: u64, value: Vec<u8>) -> std::io::Result<()> {
-        match self.call(&Request::Set { key, value })? {
-            Response::Stored => Ok(()),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Versioned write (highest-version-wins at the node). A
-    /// non-applied ack means the node already held a strictly newer
-    /// copy — the write did not land, but the key is durable at or
-    /// above this version there, so quorum accounting may still count
-    /// it as an ack; the echoed version tells the writer what won.
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::VSet { .. }) and match the Response")]
-    pub fn vset(&mut self, key: u64, version: Version, value: Vec<u8>) -> std::io::Result<VsetAck> {
-        match self.call(&Request::VSet { key, version, value })? {
-            Response::VStored { applied, version } => Ok(VsetAck { applied, version }),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Versioned read: the stored bytes plus the write stamp that
-    /// produced them (quorum readers compare these across replicas).
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::VGet { .. }) and match the Response")]
-    pub fn vget(&mut self, key: u64) -> std::io::Result<Option<(Version, Vec<u8>)>> {
-        match self.call(&Request::VGet { key })? {
-            Response::VValue { version, value } => Ok(Some((version, value))),
-            Response::NotFound => Ok(None),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Version-guarded delete: removes the node's copy only if it is
-    /// not newer than `guard` (the migration delete phase's fence).
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::VDel { .. }) and match the Response")]
-    pub fn vdel(&mut self, key: u64, guard: Version) -> std::io::Result<VdelOutcome> {
-        match self.call(&Request::VDel { key, version: guard })? {
-            Response::Deleted => Ok(VdelOutcome::Deleted),
-            Response::Newer => Ok(VdelOutcome::Newer),
-            Response::NotFound => Ok(VdelOutcome::Missing),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::Get { .. }) and match the Response")]
-    pub fn get(&mut self, key: u64) -> std::io::Result<Option<Vec<u8>>> {
-        match self.call(&Request::Get { key })? {
-            Response::Value(v) => Ok(Some(v)),
-            Response::NotFound => Ok(None),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::Del { .. }) and match the Response")]
-    pub fn del(&mut self, key: u64) -> std::io::Result<bool> {
-        match self.call(&Request::Del { key })? {
-            Response::Deleted => Ok(true),
-            Response::NotFound => Ok(false),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// The four legacy `STATS` fields; [`Self::stats_full`] adds the
-    /// epoch/uptime correlation fields.
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use Conn::stats_full (or call with Request::Stats)")]
-    pub fn stats(&mut self) -> std::io::Result<(u64, u64, u64, u64)> {
-        let s = self.stats_full()?;
-        Ok((s.keys, s.bytes, s.sets, s.gets))
-    }
-
-    /// Failure-detection probe: send the coordinator's epoch, get back
-    /// the node's echo + key count.
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::Heartbeat { .. }) and match the Response")]
-    pub fn heartbeat(&mut self, epoch: u64) -> std::io::Result<(u64, u64)> {
-        match self.call(&Request::Heartbeat { epoch })? {
-            Response::Alive { epoch, keys } => Ok((epoch, keys)),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Enumerate every key the node holds in one response. Prefer the
-    /// paged `KeysChunk` against large nodes — this materializes the
-    /// whole keyset into a single response.
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::Keys) and match the Response")]
-    pub fn keys(&mut self) -> std::io::Result<Vec<u64>> {
-        match self.call(&Request::Keys)? {
-            Response::KeyList(keys) => Ok(keys),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// One bounded page of the node's key scan (repair-plane holder
-    /// audits). Pass `None` to start and the returned cursor (while
-    /// `Some`) to continue.
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::KeysChunk { .. }) and match the Response")]
-    pub fn keys_chunk(
-        &mut self,
-        limit: u64,
-        cursor: Option<u64>,
-    ) -> std::io::Result<(Vec<u64>, Option<u64>)> {
-        match self.call(&Request::KeysChunk { cursor, limit })? {
-            Response::KeyPage { keys, next } => Ok((keys, next)),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Coordinator-lease bid/renewal against this node as an authority
-    /// for the `shard` lease register (`0` = the unsharded register;
-    /// `ttl_ms == 0` = read-only query). See
-    /// [`crate::coordinator::election`].
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::Lease { .. }) and match the Response")]
-    pub fn lease(
-        &mut self,
-        shard: u64,
-        candidate: u64,
-        term: u64,
-        ttl_ms: u64,
-    ) -> std::io::Result<LeaseReply> {
-        match self.call(&Request::Lease {
-            shard,
-            candidate,
-            term,
-            ttl_ms,
-        })? {
-            Response::Leased { granted, term, holder, remaining_ms } => Ok(LeaseReply {
-                granted,
-                term,
-                holder,
-                remaining_ms,
-            }),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Replicate a `shard` leader's control-state blob at `term`.
-    /// Returns `(applied, stored_term)`; a refusal means the node
-    /// already holds a newer-term blob for that shard.
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::StatePut { .. }) and match the Response")]
-    pub fn state_put(
-        &mut self,
-        shard: u64,
-        term: u64,
-        value: Vec<u8>,
-    ) -> std::io::Result<(bool, u64)> {
-        match self.call(&Request::StatePut { shard, term, value })? {
-            Response::StateAck { applied, term } => Ok((applied, term)),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Fetch the latest replicated control-state blob of `shard`
-    /// (term + bytes).
-    ///
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::StateGet { .. }) and match the Response")]
-    pub fn state_get(&mut self, shard: u64) -> std::io::Result<Option<(u64, Vec<u8>)>> {
-        match self.call(&Request::StateGet { shard })? {
-            Response::StateValue { term, value } => Ok(Some((term, value))),
-            Response::NotFound => Ok(None),
-            other => Err(bad(other)),
-        }
-    }
-
-    /// Compatibility wrapper over [`Self::call`].
-    #[deprecated(note = "use conn.call(&Request::Ping) and match the Response")]
-    pub fn ping(&mut self) -> std::io::Result<()> {
-        match self.call(&Request::Ping)? {
-            Response::Pong => Ok(()),
-            other => Err(bad(other)),
-        }
     }
 }
 

@@ -18,6 +18,9 @@
 //!   error strings). Capped at [`MAX_VALUE_LEN`].
 //! * `Option<u64>` — one flag byte (`0`/`1`), then the value if `1`.
 //! * key list — `u32` count then `count` × `u64`.
+//! * item list — `u32` count (capped at
+//!   [`MAX_MULTI_ITEMS`](super::protocol::MAX_MULTI_ITEMS)) then
+//!   `count` × the per-op item encoding (`MGET`/`MSET` batches).
 //!
 //! Decoding is fully bounds-checked: truncation, unknown opcodes, bad
 //! flags, oversized lengths and trailing garbage all come back as
@@ -29,7 +32,7 @@
 //! prefix (over [`MAX_FRAME_LEN`]) is fatal, because the frame boundary
 //! itself can no longer be trusted.
 
-use super::protocol::{Request, Response, MAX_VALUE_LEN};
+use super::protocol::{Request, Response, SetItem, VsetAck, MAX_MULTI_ITEMS, MAX_VALUE_LEN};
 use crate::storage::Version;
 use std::io::{self, Read};
 
@@ -61,6 +64,12 @@ pub const OP_PING: u8 = 0x0E;
 pub const OP_QUIT: u8 = 0x0F;
 pub const OP_METRICS: u8 = 0x10;
 pub const OP_EVENTS: u8 = 0x11;
+pub const OP_MGET: u8 = 0x12;
+pub const OP_MSET: u8 = 0x13;
+pub const OP_TPREP: u8 = 0x14;
+pub const OP_TCOMMIT: u8 = 0x15;
+pub const OP_TABORT: u8 = 0x16;
+pub const OP_FENCE: u8 = 0x17;
 
 // Response opcodes — one per `Response` variant, declaration order,
 // offset into 0x81.. so a response frame can never be misread as a
@@ -84,6 +93,11 @@ pub const OP_ERROR: u8 = 0x90;
 pub const OP_METRICS_DUMP: u8 = 0x91;
 pub const OP_EVENTS_PAGE: u8 = 0x92;
 pub const OP_BUSY: u8 = 0x93;
+pub const OP_MVALUE: u8 = 0x94;
+pub const OP_MSTORED: u8 = 0x95;
+pub const OP_TVOTE: u8 = 0x96;
+pub const OP_TDONE: u8 = 0x97;
+pub const OP_FENCED: u8 = 0x98;
 
 fn corrupt(msg: &str) -> io::Error {
     io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
@@ -231,6 +245,20 @@ impl<'a> Cursor<'a> {
         Ok(keys)
     }
 
+    /// Read a batched-op item count, validated against the protocol cap
+    /// and against the bytes actually present (each item needs at least
+    /// `min_item_bytes`) before anything is allocated for it.
+    fn item_count(&mut self, min_item_bytes: usize) -> io::Result<usize> {
+        let n = self.u32()? as usize;
+        if n > MAX_MULTI_ITEMS {
+            return Err(corrupt("item count exceeds cap"));
+        }
+        if n.saturating_mul(min_item_bytes) > self.remaining() {
+            return Err(corrupt("truncated item list"));
+        }
+        Ok(n)
+    }
+
     fn version(&mut self) -> io::Result<Version> {
         Ok(Version::new(self.u64()?, self.u64()?))
     }
@@ -324,6 +352,47 @@ pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
             out.push(OP_EVENTS);
             put_u64(out, *since);
         }
+        Request::MultiGet { keys } => {
+            out.push(OP_MGET);
+            put_keys(out, keys);
+        }
+        Request::MultiSet { items } => {
+            out.push(OP_MSET);
+            out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for it in items {
+                put_u64(out, it.key);
+                put_version(out, it.version);
+                put_bytes(out, &it.value);
+            }
+        }
+        Request::TxnPrepare {
+            txn,
+            epoch,
+            key,
+            version,
+            value,
+        } => {
+            out.push(OP_TPREP);
+            put_u64(out, *txn);
+            put_u64(out, *epoch);
+            put_u64(out, *key);
+            put_version(out, *version);
+            put_bytes(out, value);
+        }
+        Request::TxnCommit { txn } => {
+            out.push(OP_TCOMMIT);
+            put_u64(out, *txn);
+        }
+        Request::TxnAbort { txn } => {
+            out.push(OP_TABORT);
+            put_u64(out, *txn);
+        }
+        Request::Fence { epoch, lo, hi } => {
+            out.push(OP_FENCE);
+            put_u64(out, *epoch);
+            put_u64(out, *lo);
+            put_opt_u64(out, *hi);
+        }
         Request::Ping => out.push(OP_PING),
         Request::Quit => out.push(OP_QUIT),
     }
@@ -372,6 +441,40 @@ pub fn decode_request(body: &[u8]) -> io::Result<Request> {
         OP_STATE_GET => Request::StateGet { shard: c.u64()? },
         OP_METRICS => Request::Metrics,
         OP_EVENTS => Request::Events { since: c.u64()? },
+        OP_MGET => {
+            let keys = c.keys()?;
+            if keys.len() > MAX_MULTI_ITEMS {
+                return Err(corrupt("item count exceeds cap"));
+            }
+            Request::MultiGet { keys }
+        }
+        OP_MSET => {
+            // Per item: key (8) + version (16) + value length prefix (4).
+            let n = c.item_count(28)?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                items.push(SetItem {
+                    key: c.u64()?,
+                    version: c.version()?,
+                    value: c.bytes()?,
+                });
+            }
+            Request::MultiSet { items }
+        }
+        OP_TPREP => Request::TxnPrepare {
+            txn: c.u64()?,
+            epoch: c.u64()?,
+            key: c.u64()?,
+            version: c.version()?,
+            value: c.bytes()?,
+        },
+        OP_TCOMMIT => Request::TxnCommit { txn: c.u64()? },
+        OP_TABORT => Request::TxnAbort { txn: c.u64()? },
+        OP_FENCE => Request::Fence {
+            epoch: c.u64()?,
+            lo: c.u64()?,
+            hi: c.opt_u64()?,
+        },
         OP_PING => Request::Ping,
         OP_QUIT => Request::Quit,
         other => return Err(corrupt(&format!("unknown request opcode {other:#04x}"))),
@@ -463,6 +566,41 @@ pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
             put_u64(out, *next);
             put_bytes(out, events);
         }
+        Response::MultiValue { items } => {
+            out.push(OP_MVALUE);
+            out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+            for item in items {
+                match item {
+                    Some((version, value)) => {
+                        out.push(1);
+                        put_version(out, *version);
+                        put_bytes(out, value);
+                    }
+                    None => out.push(0),
+                }
+            }
+        }
+        Response::MultiStored { acks } => {
+            out.push(OP_MSTORED);
+            out.extend_from_slice(&(acks.len() as u32).to_le_bytes());
+            for a in acks {
+                put_bool(out, a.applied);
+                put_version(out, a.version);
+            }
+        }
+        Response::TxnVote { granted, version } => {
+            out.push(OP_TVOTE);
+            put_bool(out, *granted);
+            put_version(out, *version);
+        }
+        Response::TxnDone { applied } => {
+            out.push(OP_TDONE);
+            put_u64(out, *applied);
+        }
+        Response::Fenced { epoch } => {
+            out.push(OP_FENCED);
+            put_u64(out, *epoch);
+        }
         Response::Busy { retry_ms } => {
             out.push(OP_BUSY);
             put_u64(out, *retry_ms);
@@ -530,6 +668,36 @@ pub fn decode_response(body: &[u8]) -> io::Result<Response> {
             next: c.u64()?,
             events: c.bytes()?,
         },
+        OP_MVALUE => {
+            // Per item: at least the presence flag byte.
+            let n = c.item_count(1)?;
+            let mut items = Vec::with_capacity(n);
+            for _ in 0..n {
+                items.push(match c.bool()? {
+                    true => Some((c.version()?, c.bytes()?)),
+                    false => None,
+                });
+            }
+            Response::MultiValue { items }
+        }
+        OP_MSTORED => {
+            // Per item: applied flag (1) + version (16).
+            let n = c.item_count(17)?;
+            let mut acks = Vec::with_capacity(n);
+            for _ in 0..n {
+                acks.push(VsetAck {
+                    applied: c.bool()?,
+                    version: c.version()?,
+                });
+            }
+            Response::MultiStored { acks }
+        }
+        OP_TVOTE => Response::TxnVote {
+            granted: c.bool()?,
+            version: c.version()?,
+        },
+        OP_TDONE => Response::TxnDone { applied: c.u64()? },
+        OP_FENCED => Response::Fenced { epoch: c.u64()? },
         OP_BUSY => Response::Busy { retry_ms: c.u64()? },
         OP_PONG => Response::Pong,
         OP_ERROR => Response::Error(c.string()?),
@@ -594,6 +762,42 @@ mod tests {
             },
             Request::Metrics,
             Request::Events { since: u64::MAX },
+            Request::MultiGet {
+                keys: vec![0, 7, u64::MAX],
+            },
+            Request::MultiSet {
+                items: vec![
+                    SetItem {
+                        key: 1,
+                        version: Version::new(3, 9),
+                        value: b"bin\n\0ary".to_vec(),
+                    },
+                    SetItem {
+                        key: u64::MAX,
+                        version: Version::new(u64::MAX, u64::MAX),
+                        value: vec![],
+                    },
+                ],
+            },
+            Request::TxnPrepare {
+                txn: 0xFEED,
+                epoch: 12,
+                key: 3,
+                version: Version::new(12, 0x99),
+                value: b"pinned".to_vec(),
+            },
+            Request::TxnCommit { txn: u64::MAX },
+            Request::TxnAbort { txn: 7 },
+            Request::Fence {
+                epoch: 9,
+                lo: 100,
+                hi: Some(200),
+            },
+            Request::Fence {
+                epoch: u64::MAX,
+                lo: 0,
+                hi: None,
+            },
             Request::Quit,
         ];
         for req in reqs {
@@ -630,6 +834,31 @@ mod tests {
                 events: b"7 suspect 3 9\n".to_vec(),
             },
             Response::Busy { retry_ms: u64::MAX },
+            Response::MultiValue {
+                items: vec![
+                    Some((Version::new(3, 9), b"x\ny".to_vec())),
+                    None,
+                    Some((Version::new(u64::MAX, u64::MAX), vec![])),
+                ],
+            },
+            Response::MultiStored {
+                acks: vec![
+                    VsetAck {
+                        applied: true,
+                        version: Version::new(4, 1),
+                    },
+                    VsetAck {
+                        applied: false,
+                        version: Version::new(u64::MAX, 0),
+                    },
+                ],
+            },
+            Response::TxnVote {
+                granted: false,
+                version: Version::new(12, 0x99),
+            },
+            Response::TxnDone { applied: 2 },
+            Response::Fenced { epoch: u64::MAX },
             // Binary framing round-trips error strings byte-exact —
             // including the newlines the text form must flatten.
             Response::Error("line1\nline2".into()),
@@ -673,6 +902,24 @@ mod tests {
         // Corrupt key-list count larger than the frame.
         let mut bad = vec![OP_KEY_LIST];
         bad.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(decode_response(&bad).is_err());
+        // Corrupt batched-op item counts: over the protocol cap, and
+        // over what the frame's bytes could possibly hold.
+        for op in [OP_MGET, OP_MSET] {
+            let mut bad = vec![op];
+            bad.extend_from_slice(&(u32::MAX).to_le_bytes());
+            assert!(decode_request(&bad).is_err());
+        }
+        for op in [OP_MVALUE, OP_MSTORED] {
+            let mut bad = vec![op];
+            bad.extend_from_slice(&(u32::MAX).to_le_bytes());
+            assert!(decode_response(&bad).is_err());
+        }
+        // A plausible count with a truncated item tail.
+        let mut bad = vec![OP_MSTORED];
+        bad.extend_from_slice(&2u32.to_le_bytes());
+        bad.push(1);
+        bad.extend_from_slice(&[0u8; 16]);
         assert!(decode_response(&bad).is_err());
     }
 

@@ -23,12 +23,14 @@ pub mod protocol;
 pub mod reactor;
 pub mod router;
 pub mod server;
+pub mod txn;
 
 pub use client::Conn;
 pub use pool::{BatchResult, PoolConfig, RouterPool};
 pub use protocol::{Parsed, Request, Response};
 pub use router::Router;
 pub use server::NodeServer;
+pub use txn::{TxnClient, TxnReceipt};
 
 /// Run `f` once per item concurrently — one scoped thread each — and
 /// collect the results in item order. The one fan-out/join scaffold

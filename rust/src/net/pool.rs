@@ -75,10 +75,18 @@
 //!   answers `BUSY` (and the client-side ceiling,
 //!   [`PoolConfig::node_ceiling`], stops flushing to it at all); shed
 //!   ops back off by the server's hint plus deterministic jitter and
-//!   replay — [`BatchResult::shed`] counts them, and none are lost.
+//!   replay — [`BatchResult::shed`] counts them, and none are lost;
+//! - **batched multi-key ops keep all of the above**
+//!   ([`RouterPool::multi_get`] / [`RouterPool::multi_set`]): a batch
+//!   splits by shard range and replica set, each target node receives
+//!   one `MGET`/`MSET` carrying its whole sub-batch in a single flush,
+//!   and the per-key quorum, read-repair, registry write-back, and
+//!   Busy/replay semantics apply unchanged — a node that refuses a
+//!   sub-batch (admission control or an epoch fence) sheds all of it
+//!   into the same backoff-and-replay machinery.
 
 use super::client::Conn;
-use super::protocol::{Request, Response};
+use super::protocol::{Request, Response, SetItem};
 use crate::algo::{DatumId, NodeId};
 use crate::coordinator::registry::KeyRegistry;
 use crate::coordinator::snapshot::{PlacerSnapshot, SnapshotCell, SnapshotReader};
@@ -694,8 +702,20 @@ impl BatchResult {
     }
 }
 
+/// One versioned answer per requested key, aligned index-for-index
+/// with the batch that produced it.
+type MultiValues = Vec<Option<(Version, Vec<u8>)>>;
+
 enum Job {
     Run(Vec<Op>, mpsc::Sender<std::io::Result<BatchResult>>),
+    MultiGet(
+        Vec<DatumId>,
+        mpsc::Sender<std::io::Result<(MultiValues, BatchResult)>>,
+    ),
+    MultiSet(
+        Vec<(DatumId, Vec<u8>)>,
+        mpsc::Sender<std::io::Result<BatchResult>>,
+    ),
 }
 
 /// Handle to a batch in flight; `wait` collects every worker's result.
@@ -800,6 +820,74 @@ impl RouterPool {
     pub fn run(&self, ops: Vec<Op>) -> std::io::Result<BatchResult> {
         self.submit(ops).wait()
     }
+
+    /// Batched read: split `keys` across the workers, each worker
+    /// partitions its chunk by shard range and replica set and issues
+    /// ONE pipelined `MGET` per target node, and the answers come back
+    /// aligned index-for-index with `keys`. Per-key semantics match
+    /// [`Op::Get`] exactly — quorum probing, freshest-version-wins,
+    /// read repair of lagging replicas, failover and Busy-shed replay —
+    /// only the round-trip count changes: one flush per (worker, node)
+    /// instead of one per key.
+    pub fn multi_get(
+        &self,
+        keys: &[DatumId],
+    ) -> std::io::Result<(Vec<Option<Vec<u8>>>, BatchResult)> {
+        let shard = keys.len().div_ceil(self.workers.len()).max(1);
+        let mut pending = Vec::new();
+        for (w, chunk) in keys.chunks(shard).enumerate() {
+            let (tx, rx) = mpsc::channel();
+            self.workers[w]
+                .tx
+                .as_ref()
+                .expect("pool live")
+                .send(Job::MultiGet(chunk.to_vec(), tx))
+                .expect("pool worker died");
+            pending.push(rx);
+        }
+        let mut values = Vec::with_capacity(keys.len());
+        let mut res = BatchResult::new();
+        for rx in pending {
+            let (vals, part) = rx
+                .recv()
+                .map_err(|_| other_err("pool worker died before reporting".to_string()))??;
+            values.extend(vals.into_iter().map(|v| v.map(|(_, bytes)| bytes)));
+            res.merge(&part);
+        }
+        Ok((values, res))
+    }
+
+    /// Batched write: split `items` across the workers, each worker
+    /// stamps its chunk from the shared clock, partitions it by replica
+    /// set, and issues ONE `MSET` per holder node. Per-key semantics
+    /// match [`Op::Set`] — same stamp at every replica, write-quorum
+    /// acking with degraded-write repair hints, registry write-back,
+    /// and the Busy/replay machinery applied per sub-batch (a fenced or
+    /// overloaded node sheds its whole sub-batch, which backs off and
+    /// replays key-by-key).
+    pub fn multi_set(&self, items: Vec<(DatumId, Vec<u8>)>) -> std::io::Result<BatchResult> {
+        let shard = items.len().div_ceil(self.workers.len()).max(1);
+        let (tx, rx) = mpsc::channel();
+        let mut expected = 0;
+        for (w, chunk) in items.chunks(shard).enumerate() {
+            self.workers[w]
+                .tx
+                .as_ref()
+                .expect("pool live")
+                .send(Job::MultiSet(chunk.to_vec(), tx.clone()))
+                .expect("pool worker died");
+            expected += 1;
+        }
+        drop(tx);
+        let mut res = BatchResult::new();
+        for _ in 0..expected {
+            let part = rx
+                .recv()
+                .map_err(|_| other_err("pool worker died before reporting".to_string()))??;
+            res.merge(&part);
+        }
+        Ok(res)
+    }
 }
 
 fn worker_loop(
@@ -823,8 +911,24 @@ fn worker_loop(
         group_gen: 0,
         cfg,
     };
-    while let Ok(Job::Run(ops, done)) = rx.recv() {
-        let _ = done.send(worker.run_ops(&ops));
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Run(ops, done) => {
+                let _ = done.send(worker.run_ops(&ops));
+            }
+            Job::MultiGet(keys, done) => {
+                let mut res = BatchResult::new();
+                let out = worker
+                    .multi_get_chunk(&keys, &mut res)
+                    .map(|values| (values, res));
+                let _ = done.send(out);
+            }
+            Job::MultiSet(items, done) => {
+                let mut res = BatchResult::new();
+                let out = worker.multi_set_chunk(&items, &mut res).map(|()| res);
+                let _ = done.send(out);
+            }
+        }
     }
 }
 
@@ -866,7 +970,7 @@ impl LoadCtlStats {
 /// successive retries of one key) desynchronize without any global
 /// randomness source. Total sleep lands in `[hint, 2*hint)` ms, with
 /// the hint clamped so a wild server value cannot stall a caller.
-fn busy_backoff(attempt: usize, retry_ms: u64, key: DatumId) {
+pub(crate) fn busy_backoff(attempt: usize, retry_ms: u64, key: DatumId) {
     let hint = retry_ms.clamp(1, 50);
     let mut x = key ^ ((attempt as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
     x ^= x >> 30;
@@ -985,10 +1089,36 @@ impl Worker {
 
     fn run_ops(&mut self, ops: &[Op]) -> std::io::Result<BatchResult> {
         let mut res = BatchResult::new();
-        for group in ops.chunks(self.cfg.pipeline_depth) {
-            self.run_group(group, &mut res)?;
+        // Multi-key ops are their own sub-batches: runs of single-key
+        // ops between them pipeline through `run_group` unchanged, and
+        // op order is preserved across the boundary.
+        let mut start = 0;
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                Op::MultiGet { keys } => {
+                    self.run_singles(&ops[start..i], &mut res)?;
+                    self.multi_get_chunk(keys, &mut res)?;
+                    start = i + 1;
+                }
+                Op::MultiSet { keys, size } => {
+                    self.run_singles(&ops[start..i], &mut res)?;
+                    let items: Vec<(DatumId, Vec<u8>)> =
+                        keys.iter().map(|&k| (k, value_for(k, *size))).collect();
+                    self.multi_set_chunk(&items, &mut res)?;
+                    start = i + 1;
+                }
+                Op::Set { .. } | Op::Get { .. } => {}
+            }
         }
+        self.run_singles(&ops[start..], &mut res)?;
         Ok(res)
+    }
+
+    fn run_singles(&mut self, ops: &[Op], res: &mut BatchResult) -> std::io::Result<()> {
+        for group in ops.chunks(self.cfg.pipeline_depth) {
+            self.run_group(group, res)?;
+        }
+        Ok(())
     }
 
     /// Execute one pipeline-depth group under a single snapshot.
@@ -1089,6 +1219,9 @@ impl Worker {
                             });
                         }
                     }
+                }
+                Op::MultiGet { .. } | Op::MultiSet { .. } => {
+                    unreachable!("multi-key ops are carved out in run_ops")
                 }
             }
         }
@@ -1210,50 +1343,14 @@ impl Worker {
                 .max_by_key(|r| r.0);
             match best {
                 Some(&(best_ver, ref best_bytes)) => {
-                    for (n, resp) in &probe.responses {
-                        let lagging = match resp {
-                            Some((v, _)) => *v < best_ver,
-                            None => true,
-                        };
-                        // Read-repair only under a *current* membership
-                        // view, re-checked before every repair write: if
-                        // an epoch published since this group routed, a
-                        // "missing" answer may be a migration's delete
-                        // phase rather than a lagging replica, and
-                        // re-writing the copy would leak a stray onto a
-                        // former holder. (The check-then-write window
-                        // this narrows cannot be fully closed client
-                        // side; a stray that slips through is version-
-                        // guarded and reconcilable.)
-                        if !lagging || self.reader.cell_generation() != routed_generation {
-                            continue;
-                        }
-                        let Some(addr) = snap.addr_of(*n) else { continue };
-                        let repair = Request::VSet {
-                            key,
-                            version: best_ver,
-                            value: best_bytes.clone(),
-                        };
-                        match self.conn(*n, addr).and_then(|c| match c.call(&repair)? {
-                            Response::VStored { applied, version: _ } => Ok(applied),
-                            other => Err(std::io::Error::new(
-                                std::io::ErrorKind::InvalidData,
-                                format!("unexpected response {other:?}"),
-                            )),
-                        }) {
-                            // Only an *applied* write is a repair; a
-                            // refused one means the replica already
-                            // moved past `best_ver` on its own.
-                            Ok(applied) => {
-                                if applied {
-                                    res.read_repairs += 1;
-                                }
-                            }
-                            Err(_) => {
-                                self.conns.remove(n);
-                            }
-                        }
-                    }
+                    self.read_repair(
+                        &snap,
+                        routed_generation,
+                        key,
+                        (best_ver, best_bytes),
+                        &probe.responses,
+                        res,
+                    );
                     if probe.conn_failed {
                         // A probed replica was lost at the connection
                         // level but another answered: the read failed
@@ -1308,6 +1405,415 @@ impl Worker {
                             res.latency.push(probe.rtt_ns);
                         }
                     }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Push the winning copy `best` back to every probed replica of
+    /// `key` that answered stale or missing — but only under a
+    /// *current* membership view, re-checked before every repair
+    /// write: if an epoch published since the probes routed, a
+    /// "missing" answer may be a migration's delete phase rather than
+    /// a lagging replica, and re-writing the copy would leak a stray
+    /// onto a former holder. (The check-then-write window this narrows
+    /// cannot be fully closed client side; a stray that slips through
+    /// is version-guarded and reconcilable.)
+    fn read_repair(
+        &mut self,
+        snap: &PlacerSnapshot,
+        routed_generation: u64,
+        key: DatumId,
+        best: (Version, &[u8]),
+        responses: &[(NodeId, Option<(Version, Vec<u8>)>)],
+        res: &mut BatchResult,
+    ) {
+        let (best_ver, best_bytes) = best;
+        for (n, resp) in responses {
+            let lagging = match resp {
+                Some((v, _)) => *v < best_ver,
+                None => true,
+            };
+            if !lagging || self.reader.cell_generation() != routed_generation {
+                continue;
+            }
+            let Some(addr) = snap.addr_of(*n) else { continue };
+            let repair = Request::VSet {
+                key,
+                version: best_ver,
+                value: best_bytes.to_vec(),
+            };
+            match self.conn(*n, addr).and_then(|c| match c.call(&repair)? {
+                Response::VStored { applied, version: _ } => Ok(applied),
+                other => Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("unexpected response {other:?}"),
+                )),
+            }) {
+                // Only an *applied* write is a repair; a refused one
+                // means the replica already moved past `best_ver` on
+                // its own.
+                Ok(applied) => {
+                    if applied {
+                        res.read_repairs += 1;
+                    }
+                }
+                Err(_) => {
+                    self.conns.remove(n);
+                }
+            }
+        }
+    }
+
+    /// One load-accounted round trip to `node` carrying a multi-key
+    /// request. `weight` is the item count the request carries — the
+    /// in-flight gauge and the admission ceiling see batched and
+    /// single-key traffic in the same unit. On a connection error the
+    /// connection is discarded so the next contact reconnects; the RTT
+    /// comes back with the response for per-item latency samples.
+    fn call_counted(
+        &mut self,
+        node: NodeId,
+        addr: SocketAddr,
+        weight: i64,
+        req: &Request,
+    ) -> std::io::Result<(Response, f64)> {
+        let load = self.load(node);
+        load.in_flight.add(weight);
+        let t0 = Instant::now();
+        let resp = self.conn(node, addr).and_then(|c| c.call(req));
+        load.in_flight.add(-weight);
+        match resp {
+            Ok(resp) => {
+                let rtt_ns = t0.elapsed().as_nanos() as f64;
+                load.observe_rtt(rtt_ns as u64);
+                if let Some(h) = &self.rtt_histo {
+                    if self.cfg.obs.as_ref().is_some_and(|o| o.enabled()) {
+                        h.record(rtt_ns as u64);
+                    }
+                }
+                Ok((resp, rtt_ns))
+            }
+            Err(e) => {
+                self.conns.remove(&node);
+                Err(e)
+            }
+        }
+    }
+
+    /// Execute one multi-get sub-batch under a single snapshot: the
+    /// keys partition by read target and each node receives ONE `MGET`
+    /// carrying every key probed there. The single-key path's quorum
+    /// semantics apply per key, unchanged — freshest answered version
+    /// wins, lagging probed replicas are repaired in place — and the
+    /// Busy/replay machinery applies per sub-batch: a `BUSY` (fence or
+    /// overload) sheds the node's whole sub-batch into the
+    /// backoff-and-replay path, as does a connection failure. Returns
+    /// one answer per input key, aligned index-for-index.
+    fn multi_get_chunk(
+        &mut self,
+        keys: &[DatumId],
+        res: &mut BatchResult,
+    ) -> std::io::Result<MultiValues> {
+        let snap = Arc::clone(self.reader.current());
+        let routed_generation = self.reader.observed_generation();
+        self.group_gen = routed_generation;
+        res.note_epoch(snap.epoch);
+        if snap.addrs.is_empty() {
+            return Err(other_err("no live nodes in the published snapshot".to_string()));
+        }
+        res.ops += keys.len() as u64;
+        let mut replicas: Vec<NodeId> = Vec::new();
+        let mut targets: Vec<NodeId> = Vec::new();
+        let mut probes: HashMap<DatumId, GetProbe> = HashMap::new();
+        let mut by_node: HashMap<NodeId, Vec<DatumId>> = HashMap::new();
+        for &key in keys {
+            match probes.entry(key) {
+                Entry::Occupied(mut e) => e.get_mut().count += 1,
+                Entry::Vacant(v) => {
+                    v.insert(GetProbe {
+                        count: 1,
+                        responses: Vec::new(),
+                        conn_failed: false,
+                        closed: false,
+                        shed: false,
+                        rtt_ns: 0.0,
+                    });
+                    self.pick_read_targets(&snap, key, &mut replicas, &mut targets);
+                    for &n in &targets {
+                        by_node.entry(n).or_default().push(key);
+                    }
+                }
+            }
+        }
+        let mut node_ids: Vec<NodeId> = by_node.keys().copied().collect();
+        node_ids.sort_unstable();
+        for node in node_ids {
+            let node_keys = &by_node[&node];
+            let addr = snap
+                .addr_of(node)
+                .ok_or_else(|| other_err(format!("no address for node {node}")))?;
+            if self.cfg.node_ceiling > 0
+                && self.load(node).in_flight.get() >= self.cfg.node_ceiling
+            {
+                self.stat(|s| &s.shed_client);
+                for key in node_keys {
+                    probes.get_mut(key).expect("probe staged").shed = true;
+                }
+                continue;
+            }
+            let req = Request::MultiGet { keys: node_keys.clone() };
+            match self.call_counted(node, addr, node_keys.len() as i64, &req) {
+                Ok((Response::MultiValue { items }, rtt_ns)) => {
+                    if items.len() != node_keys.len() {
+                        return Err(other_err(format!(
+                            "MGET answered {} items for {} keys",
+                            items.len(),
+                            node_keys.len()
+                        )));
+                    }
+                    for (key, item) in node_keys.iter().zip(items) {
+                        if let Some((version, value)) = &item {
+                            self.cfg.clock.observe(version.seq);
+                            if let Some(cache) = &self.cache {
+                                if cache.admit(self.group_gen, *key, value) {
+                                    self.stat(|s| &s.cache_admitted);
+                                }
+                            }
+                        }
+                        let p = probes.get_mut(key).expect("probe staged");
+                        p.responses.push((node, item));
+                        p.rtt_ns = p.rtt_ns.max(rtt_ns);
+                    }
+                }
+                Ok((Response::Busy { .. }, _)) => {
+                    self.stat(|s| &s.shed_busy);
+                    for key in node_keys {
+                        probes.get_mut(key).expect("probe staged").shed = true;
+                    }
+                }
+                Ok((other, _)) => {
+                    return Err(other_err(format!("unexpected response {other:?}")));
+                }
+                Err(e) if is_conn_error(&e) => {
+                    for key in node_keys {
+                        probes.get_mut(key).expect("probe staged").conn_failed = true;
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Per-key resolution, identical in shape to run_group's.
+        let mut resolved: HashMap<DatumId, Option<(Version, Vec<u8>)>> = HashMap::new();
+        let mut ordered: Vec<DatumId> = probes.keys().copied().collect();
+        ordered.sort_unstable();
+        for key in ordered {
+            let probe = probes.remove(&key).expect("probe just listed");
+            let best = probe
+                .responses
+                .iter()
+                .filter_map(|(_, r)| r.as_ref())
+                .max_by_key(|r| r.0)
+                .cloned();
+            match best {
+                Some((best_ver, best_bytes)) => {
+                    self.read_repair(
+                        &snap,
+                        routed_generation,
+                        key,
+                        (best_ver, &best_bytes),
+                        &probe.responses,
+                        res,
+                    );
+                    if probe.conn_failed {
+                        res.failovers += probe.count;
+                    }
+                    if probe.shed {
+                        res.shed += probe.count;
+                    }
+                    res.hits += probe.count;
+                    for _ in 0..probe.count {
+                        res.latency.push(probe.rtt_ns);
+                    }
+                    resolved.insert(key, Some((best_ver, best_bytes)));
+                }
+                None if probe.conn_failed || probe.shed => {
+                    if probe.shed {
+                        res.shed += probe.count;
+                    }
+                    let fetched = self.replay_fetch(key, res)?;
+                    if fetched.is_some() {
+                        res.hits += probe.count;
+                        if probe.conn_failed {
+                            res.failovers += probe.count;
+                        }
+                    } else {
+                        res.misses += probe.count;
+                        if self.cfg.verify_hits {
+                            res.lost += probe.count;
+                        }
+                    }
+                    resolved.insert(key, fetched);
+                }
+                None => {
+                    if self.cfg.verify_hits {
+                        res.retried += probe.count;
+                        let fetched = self.replay_fetch(key, res)?;
+                        if fetched.is_some() {
+                            res.hits += probe.count;
+                        } else {
+                            res.misses += probe.count;
+                            res.lost += probe.count;
+                        }
+                        resolved.insert(key, fetched);
+                    } else {
+                        res.misses += probe.count;
+                        for _ in 0..probe.count {
+                            res.latency.push(probe.rtt_ns);
+                        }
+                        resolved.insert(key, None);
+                    }
+                }
+            }
+        }
+        Ok(keys.iter().map(|k| resolved.get(k).cloned().flatten()).collect())
+    }
+
+    /// Execute one multi-set sub-batch under a single snapshot: every
+    /// item is stamped once from the shared clock, the batch partitions
+    /// by replica set, and each holder node receives ONE `MSET`
+    /// carrying every item it holds. A `BUSY` sheds that node's whole
+    /// sub-batch — the server refuses a partially-fenced batch as a
+    /// unit — and every affected key backs off and replays with the
+    /// standard machinery; a connection failure re-fans the node's
+    /// items the same way. Within one sub-batch a duplicate key keeps
+    /// its LAST item, as if the batch's items executed in order.
+    fn multi_set_chunk(
+        &mut self,
+        items: &[(DatumId, Vec<u8>)],
+        res: &mut BatchResult,
+    ) -> std::io::Result<()> {
+        let snap = Arc::clone(self.reader.current());
+        res.note_epoch(snap.epoch);
+        if snap.addrs.is_empty() {
+            return Err(other_err("no live nodes in the published snapshot".to_string()));
+        }
+        res.ops += items.len() as u64;
+        let mut staged: HashMap<DatumId, (Version, Vec<u8>)> = HashMap::new();
+        let mut order: Vec<DatumId> = Vec::new();
+        for (key, value) in items {
+            if let Some(cache) = &self.cache {
+                if cache.invalidate_key(*key) {
+                    self.stat(|s| &s.cache_invalidated);
+                }
+            }
+            let version = self.cfg.clock.stamp(snap.epoch);
+            if staged.insert(*key, (version, value.clone())).is_none() {
+                order.push(*key);
+            }
+        }
+        let mut replicas: Vec<NodeId> = Vec::new();
+        let mut by_node: HashMap<NodeId, Vec<SetItem>> = HashMap::new();
+        let mut expected: HashMap<DatumId, usize> = HashMap::new();
+        for &key in &order {
+            let (version, value) = &staged[&key];
+            snap.replica_set(key, &mut replicas);
+            expected.insert(key, replicas.len());
+            for &n in &replicas {
+                by_node.entry(n).or_default().push(SetItem {
+                    key,
+                    version: *version,
+                    value: value.clone(),
+                });
+            }
+        }
+        let mut node_ids: Vec<NodeId> = by_node.keys().copied().collect();
+        node_ids.sort_unstable();
+        let mut acks: HashMap<DatumId, usize> = HashMap::new();
+        let mut failed: std::collections::HashSet<DatumId> = std::collections::HashSet::new();
+        let mut shed: HashMap<DatumId, u64> = HashMap::new();
+        for node in node_ids {
+            let node_items = &by_node[&node];
+            let addr = snap
+                .addr_of(node)
+                .ok_or_else(|| other_err(format!("no address for node {node}")))?;
+            if self.cfg.node_ceiling > 0
+                && self.load(node).in_flight.get() >= self.cfg.node_ceiling
+            {
+                self.stat(|s| &s.shed_client);
+                for item in node_items {
+                    let hint = shed.entry(item.key).or_insert(1);
+                    *hint = (*hint).max(1);
+                }
+                continue;
+            }
+            let req = Request::MultiSet { items: node_items.clone() };
+            match self.call_counted(node, addr, node_items.len() as i64, &req) {
+                Ok((Response::MultiStored { acks: node_acks }, rtt_ns)) => {
+                    if node_acks.len() != node_items.len() {
+                        return Err(other_err(format!(
+                            "MSET answered {} acks for {} items",
+                            node_acks.len(),
+                            node_items.len()
+                        )));
+                    }
+                    let mut acked: Vec<DatumId> = Vec::with_capacity(node_items.len());
+                    for (item, ack) in node_items.iter().zip(node_acks) {
+                        // Applied and superseded both ack (the replica
+                        // holds a copy at least this fresh either way);
+                        // a superseded ack catches the clock up.
+                        if !ack.applied {
+                            self.cfg.clock.observe(ack.version.seq);
+                        }
+                        *acks.entry(item.key).or_insert(0) += 1;
+                        res.latency.push(rtt_ns);
+                        acked.push(item.key);
+                    }
+                    if let Some(registry) = &self.cfg.registry {
+                        registry.register_batch(&acked);
+                    }
+                }
+                Ok((Response::Busy { retry_ms }, _)) => {
+                    self.stat(|s| &s.shed_busy);
+                    for item in node_items {
+                        let hint = shed.entry(item.key).or_insert(retry_ms);
+                        *hint = (*hint).max(retry_ms);
+                    }
+                }
+                Ok((other, _)) => {
+                    return Err(other_err(format!("unexpected response {other:?}")));
+                }
+                Err(e) if is_conn_error(&e) => {
+                    for item in node_items {
+                        failed.insert(item.key);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Per-key settlement: shed keys back off first and replay with
+        // their original stamp (a key both shed and conn-failed goes
+        // through the shed path, once); conn-failed or under-quorum
+        // keys re-fan through the same replay; a key acked by its
+        // quorum but not every replica is the repair plane's debt.
+        for &key in &order {
+            let got = acks.get(&key).copied().unwrap_or(0);
+            let all = expected[&key];
+            let needed = effective_quorum(self.cfg.write_quorum, all);
+            if let Some(&hint) = shed.get(&key) {
+                let (version, value) = staged[&key].clone();
+                busy_backoff(0, hint, key);
+                self.replay_set(key, version, &value, res)?;
+                res.shed += 1;
+            } else if failed.contains(&key) || got < needed {
+                let (version, value) = staged[&key].clone();
+                self.replay_set(key, version, &value, res)?;
+                res.failovers += 1;
+            } else if got < all {
+                res.degraded_writes += 1;
+                if let Some(hints) = &self.cfg.repair_hints {
+                    hints.register(key);
                 }
             }
         }
@@ -1428,7 +1934,7 @@ impl Worker {
     fn replay_set(
         &mut self,
         key: DatumId,
-        version: Version,
+        mut version: Version,
         value: &[u8],
         res: &mut BatchResult,
     ) -> std::io::Result<()> {
@@ -1485,10 +1991,21 @@ impl Worker {
                 return Ok(());
             }
             // Shed below quorum: back off and go around again — the
-            // node answered, so it is alive and draining.
+            // node answered, so it is alive and draining. If the
+            // epoch advanced past the op's stamp, the shed may be an
+            // epoch fence refusing the stale stamp (a split moved this
+            // key's range) rather than overload: re-mint the stamp
+            // under the fresh epoch so the retry carries a post-fence
+            // version. The bytes are unchanged, so the rewrite stays
+            // idempotent at the value level; under a stable epoch the
+            // original stamp is kept and the replay stays idempotent
+            // at the version level too.
             if let Some(hint) = busy {
                 self.stat(|s| &s.shed_retries);
                 busy_backoff(round, hint, key);
+                if snap.epoch > version.epoch {
+                    version = self.cfg.clock.stamp(snap.epoch);
+                }
                 continue;
             }
             if self.reader.cell_generation() == self.reader.observed_generation() {
@@ -1511,9 +2028,20 @@ impl Worker {
     /// that is an outage and fails loudly rather than masquerading as an
     /// ordinary miss.
     fn replay_get(&mut self, key: DatumId, res: &mut BatchResult) -> std::io::Result<bool> {
+        Ok(self.replay_fetch(key, res)?.is_some())
+    }
+
+    /// [`Self::replay_get`], keeping the fetched copy: the multi-get
+    /// path resolves shed or failed-over keys through this so the
+    /// batch's answer slot still carries the value.
+    fn replay_fetch(
+        &mut self,
+        key: DatumId,
+        res: &mut BatchResult,
+    ) -> std::io::Result<Option<(Version, Vec<u8>)>> {
         let t0 = Instant::now();
         let mut replicas: Vec<NodeId> = Vec::new();
-        let mut found = false;
+        let mut found: Option<(Version, Vec<u8>)> = None;
         let mut answered = false;
         let mut last_err: Option<std::io::Error> = None;
         'rounds: for round in 0..MAX_BUSY_RETRIES {
@@ -1527,9 +2055,9 @@ impl Worker {
                     .addr_of(n)
                     .ok_or_else(|| other_err(format!("no address for node {n}")))?;
                 match self.conn(n, addr).and_then(|c| c.vget_or_busy(key)) {
-                    Ok(Ok(Some((ver, _)))) => {
+                    Ok(Ok(Some((ver, value)))) => {
                         self.cfg.clock.observe(ver.seq);
-                        found = true;
+                        found = Some((ver, value));
                         break 'rounds;
                     }
                     Ok(Ok(None)) => answered = true,
@@ -1557,7 +2085,7 @@ impl Worker {
                 break; // stable membership and still absent: a real miss
             }
         }
-        if !found && !answered {
+        if found.is_none() && !answered {
             return Err(last_err
                 .unwrap_or_else(|| other_err(format!("no replica of {key} reachable"))));
         }
@@ -1581,7 +2109,7 @@ fn other_err(msg: String) -> std::io::Error {
 }
 
 /// Errors that indicate the peer (not the request) is the problem.
-fn is_conn_error(e: &std::io::Error) -> bool {
+pub(crate) fn is_conn_error(e: &std::io::Error) -> bool {
     matches!(
         e.kind(),
         std::io::ErrorKind::ConnectionRefused
@@ -1594,7 +2122,6 @@ fn is_conn_error(e: &std::io::Error) -> bool {
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // keeps coverage on the compatibility wrappers
 mod tests {
     use super::*;
     use crate::coordinator::Coordinator;
@@ -1659,7 +2186,7 @@ mod tests {
             let mut sum = 0;
             for &(node, addr) in &snap.addrs {
                 let mut c = Conn::connect(addr).unwrap();
-                let (keys, _, _, _) = c.stats().unwrap();
+                let keys = c.stats_full().unwrap().keys;
                 assert!(keys > 0, "node {node} got nothing");
                 sum += keys;
             }
@@ -1680,7 +2207,10 @@ mod tests {
         let mut versions = Vec::new();
         for &n in &replicas {
             let mut c = Conn::connect(snap.addr_of(n).unwrap()).unwrap();
-            let (ver, _) = c.vget(77).unwrap().expect("replica missing the write");
+            let ver = match c.call(&Request::VGet { key: 77 }).unwrap() {
+                Response::VValue { version, .. } => version,
+                other => panic!("replica missing the write: {other:?}"),
+            };
             versions.push(ver);
         }
         assert!(
@@ -1707,13 +2237,13 @@ mod tests {
         snap.replica_set(7, &mut replicas);
         let addr = snap.addr_of(replicas[1]).unwrap();
         let mut c = Conn::connect(addr).unwrap();
-        assert!(c.del(7).unwrap());
+        assert!(matches!(c.call(&Request::Del { key: 7 }).unwrap(), Response::Deleted));
         // A quorum read serves the surviving copy AND heals the hole.
         let res = pool.run(vec![Op::Get { key: 7 }]).unwrap();
         assert_eq!((res.hits, res.lost), (1, 0));
         assert!(res.read_repairs >= 1, "missing replica must be repaired");
         assert!(
-            c.get(7).unwrap().is_some(),
+            matches!(c.call(&Request::Get { key: 7 }).unwrap(), Response::Value(_)),
             "secondary must hold the copy again after the read"
         );
     }
@@ -1945,5 +2475,79 @@ mod tests {
         let dump = obs.registry.dump();
         assert!(dump.counter("cache.hits").unwrap_or(0) > 0, "cache.hits counter");
         assert!(dump.counter("steer.choices").unwrap_or(0) > 0, "steer.choices counter");
+    }
+
+    #[test]
+    fn multi_get_returns_values_in_key_order() {
+        let coord = cluster(4, 2);
+        let cell = coord.snapshot_cell();
+        let cfg = PoolConfig::new(2).read_quorum(2).binary(true);
+        let pool = RouterPool::connect(&cell, cfg).unwrap();
+        let items: Vec<(u64, Vec<u8>)> =
+            (0..200u64).map(|k| (k, k.to_le_bytes().to_vec())).collect();
+        let res = pool.multi_set(items).unwrap();
+        assert_eq!((res.ops, res.lost), (200, 0));
+        let mut keys: Vec<u64> = (0..200u64).collect();
+        keys.push(100_000); // never written
+        let (values, res) = pool.multi_get(&keys).unwrap();
+        assert_eq!(res.ops, 201, "each batched key counts as one op");
+        assert_eq!((res.hits, res.misses, res.lost), (200, 1, 0));
+        assert_eq!(values.len(), 201, "one answer slot per requested key");
+        for (k, v) in keys.iter().zip(&values).take(200) {
+            assert_eq!(v.as_deref(), Some(&k.to_le_bytes()[..]), "key {k}");
+        }
+        assert_eq!(values[200], None, "unwritten key answers None");
+    }
+
+    #[test]
+    fn multi_set_replicas_share_one_stamp_per_key() {
+        let coord = cluster(4, 3);
+        let cell = coord.snapshot_cell();
+        let pool = RouterPool::connect(&cell, PoolConfig::new(1)).unwrap();
+        pool.multi_set(vec![(77, b"a".to_vec()), (78, b"b".to_vec())]).unwrap();
+        let snap = cell.load();
+        let mut replicas = Vec::new();
+        snap.replica_set(77, &mut replicas);
+        let mut versions = Vec::new();
+        for &n in &replicas {
+            let mut c = Conn::connect(snap.addr_of(n).unwrap()).unwrap();
+            match c.call(&Request::VGet { key: 77 }).unwrap() {
+                Response::VValue { version, value } => {
+                    assert_eq!(value, b"a");
+                    versions.push(version);
+                }
+                other => panic!("replica missing the write: {other:?}"),
+            }
+        }
+        assert!(
+            versions.windows(2).all(|w| w[0] == w[1]),
+            "one MSET item must land with one stamp everywhere: {versions:?}"
+        );
+    }
+
+    #[test]
+    fn multi_ops_flow_through_the_op_stream() {
+        let coord = cluster(3, 2);
+        let cell = coord.snapshot_cell();
+        let pool = RouterPool::connect(&cell, PoolConfig::new(1)).unwrap();
+        let res = pool
+            .run(vec![
+                Op::Set { key: 1, size: 8 },
+                Op::MultiSet { keys: vec![2, 3, 4], size: 8 },
+                Op::Get { key: 1 },
+                Op::MultiGet { keys: vec![2, 3, 4, 9999] },
+            ])
+            .unwrap();
+        assert_eq!(res.ops, 9, "each batched key counts as one op");
+        assert_eq!((res.hits, res.misses, res.lost), (4, 1, 0));
+    }
+
+    #[test]
+    fn multi_set_acks_land_in_the_registry() {
+        let coord = cluster(3, 2);
+        let pool = coord.connect_pool(PoolConfig::new(2)).unwrap();
+        let items: Vec<(u64, Vec<u8>)> = (0..100u64).map(|k| (k, vec![7u8; 8])).collect();
+        pool.multi_set(items).unwrap();
+        assert_eq!(coord.key_registry().len(), 100);
     }
 }

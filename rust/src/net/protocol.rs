@@ -35,6 +35,17 @@
 //! STATE <shard-hex> <term-hex> <len>\n<len bytes>\n
 //!                                        -> SSTORED <1|0> <term-hex>\n
 //! STATE <shard-hex>\n                    -> SVALUE <term-hex> <len>\n<bytes>\n | NOT_FOUND\n
+//! MGET <n> <key-hex>...\n               -> MVALUE <n>\n then per key, in order:
+//!                                           M <epoch-hex> <seq-hex> <len>\n<bytes>\n | -\n
+//! MSET <n>\n then per item:
+//!   <key-hex> <epoch-hex> <seq-hex> <len>\n<bytes>\n
+//!                                        -> MSTORED <n> (<1|0> <epoch-hex> <seq-hex>)...\n
+//! TPREP <txn-hex> <epoch-hex> <key-hex> <vepoch-hex> <seq-hex> <len>\n<bytes>\n
+//!                                        -> TVOTE <1|0> <epoch-hex> <seq-hex>\n
+//! TCOMMIT <txn-hex>\n                    -> TDONE <n-hex>\n
+//! TABORT <txn-hex>\n                     -> TDONE <n-hex>\n
+//! FENCE <epoch-hex> <lo-hex> <hi-hex|->\n
+//!                                        -> FENCED <epoch-hex>\n
 //! (any data op under admission control)  -> BUSY <retry-ms-hex>\n
 //! PING\n                                 -> PONG\n
 //! QUIT\n                                 -> (close)
@@ -79,6 +90,21 @@
 //! least the stored one — a deposed leader's late publish can never
 //! clobber its successor's); `STATE <shard>` reads the latest blob
 //! back.
+//!
+//! `MGET`/`MSET` are the batched data ops (see `net::pool`'s
+//! `multi_get`/`multi_set`): one request carries every key of the
+//! caller's batch that this node serves, answered per item **in
+//! request order** with the same versioned semantics as `VGET`/`VSET`.
+//! `TPREP`/`TCOMMIT`/`TABORT` are the two-phase cross-shard write ops
+//! (see `net::txn`): a prepare stages a pinned write under the
+//! composite-snapshot epoch the driver routed by, a commit applies
+//! every pin of the transaction through the normal
+//! highest-version-wins path, an abort drops them. `FENCE` installs a
+//! range-scoped write fence: a versioned write (or prepare) carrying
+//! an epoch older than the fence to a key inside `[lo, hi)` is refused
+//! with `BUSY`, which is what lets a range hand-off reject pre-split
+//! stray writes at write time instead of sweeping them at quiesce (see
+//! [`crate::coordinator::shard`]).
 //!
 //! `METRICS`/`EVENTS` are the observability plane's read ops (see
 //! [`crate::obs`]). `METRICS` dumps the node's metric registry as the
@@ -151,8 +177,59 @@ pub enum Request {
     Events {
         since: u64,
     },
+    /// Batched point reads (`MGET`): every key of the caller's batch
+    /// this node serves, answered per key in request order.
+    MultiGet {
+        keys: Vec<u64>,
+    },
+    /// Batched versioned writes (`MSET`): each item applied by
+    /// highest-version-wins, acked per item in request order.
+    MultiSet {
+        items: Vec<SetItem>,
+    },
+    /// Two-phase commit, phase one (`TPREP`): stage `value` for `key`
+    /// at `version`, fenced on the composite-snapshot `epoch` the
+    /// driver routed by. The node votes no when a newer fence covers
+    /// the key, when the stored version already beats the staged one,
+    /// or when another live transaction holds a pin on the key.
+    TxnPrepare {
+        txn: u64,
+        epoch: u64,
+        key: u64,
+        version: Version,
+        value: Vec<u8>,
+    },
+    /// Phase two (`TCOMMIT`): apply every pin staged under `txn`
+    /// through the normal highest-version-wins write path.
+    TxnCommit {
+        txn: u64,
+    },
+    /// Drop every pin staged under `txn` (`TABORT`).
+    TxnAbort {
+        txn: u64,
+    },
+    /// Install a write fence (`FENCE`): versioned writes and prepares
+    /// carrying an epoch older than `epoch` to a key in `[lo, hi)`
+    /// (`hi == None` = unbounded above) are refused with
+    /// [`Response::Busy`] until the writer refreshes its snapshot.
+    /// Range hand-offs raise this on the source's nodes at publish
+    /// time, so a pre-split stray write bounces at write time instead
+    /// of being swept at quiesce.
+    Fence {
+        epoch: u64,
+        lo: u64,
+        hi: Option<u64>,
+    },
     Ping,
     Quit,
+}
+
+/// One item of a batched versioned write ([`Request::MultiSet`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SetItem {
+    pub key: u64,
+    pub version: Version,
+    pub value: Vec<u8>,
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -232,11 +309,43 @@ pub enum Response {
         next: u64,
         events: Vec<u8>,
     },
+    /// One `MGET` answer: per requested key, in request order, the
+    /// stored version + value or a miss.
+    MultiValue {
+        items: Vec<Option<(Version, Vec<u8>)>>,
+    },
+    /// One `MSET` ack: per item, in request order, the same outcome a
+    /// `VSET` of that item would have produced ([`Response::VStored`]).
+    MultiStored {
+        acks: Vec<VsetAck>,
+    },
+    /// `TPREP` outcome. On a refusal `version` is the newer incumbent
+    /// (stored or pinned) the driver feeds through
+    /// [`crate::storage::WriteClock::observe`], exactly like a refused
+    /// `VSET`.
+    TxnVote {
+        granted: bool,
+        version: Version,
+    },
+    /// `TCOMMIT`/`TABORT` outcome: how many pins were applied or
+    /// dropped (`0` = the transaction held no pins here — an already
+    /// resolved or expired txn, which commit/abort treat as success
+    /// because pin application is idempotent).
+    TxnDone {
+        applied: u64,
+    },
+    /// `FENCE` ack: the highest fence epoch the node now enforces.
+    Fenced {
+        epoch: u64,
+    },
     /// Admission control shed the request: the node is over its
     /// in-flight ceiling. `retry_ms` is the server's backoff hint;
     /// clients retry after that long plus jitter (see
     /// `net::pool`'s busy-retry paths). Only data ops are ever shed —
     /// control-plane ops (leases, heartbeats, metrics) pass the gate.
+    /// Also the refusal a write fence answers with ([`Request::Fence`]):
+    /// the writer's snapshot is stale, and a refresh-and-retry is the
+    /// same recovery path.
     Busy {
         retry_ms: u64,
     },
@@ -325,6 +434,12 @@ fn parse_hex(p: Option<&str>, what: &str) -> std::io::Result<u64> {
 /// an unchecked multi-gigabyte allocation.
 pub const MAX_VALUE_LEN: usize = 64 << 20;
 
+/// Upper bound on the item count of one batched op (`MGET`/`MSET`) in
+/// both framings — a corrupt count must never drive an unchecked
+/// allocation or an unbounded item-consuming loop. Pool workers chunk
+/// far below this; it exists for hostile peers, not honest ones.
+pub const MAX_MULTI_ITEMS: usize = 1 << 16;
+
 /// Upper bound on one lease grant's TTL, shared by both sides of the
 /// wire: the authority clamps what it grants (a corrupt or hostile TTL
 /// must never overflow the expiry arithmetic or wedge the lease until
@@ -401,6 +516,21 @@ fn read_payload<R: BufRead>(r: &mut R, len: usize) -> Result<Vec<u8>, Malformed>
         )));
     }
     Ok(read_value(r, len)?)
+}
+
+/// Capture a recoverable field defect without aborting the batch walk:
+/// the first defect is recorded and a placeholder value returned, so a
+/// multi-item parse keeps consuming its remaining (self-framing) items
+/// and the stream stays aligned. Fatal errors still propagate.
+fn soft_field(res: Result<u64, Malformed>, defect: &mut Option<String>) -> Result<u64, Malformed> {
+    match res {
+        Ok(v) => Ok(v),
+        Err(Malformed::Recoverable(msg)) => {
+            defect.get_or_insert(msg);
+            Ok(0)
+        }
+        Err(fatal) => Err(fatal),
+    }
 }
 
 /// Drain exactly `n` bytes; EOF mid-drain is fatal (the peer hung up
@@ -528,6 +658,107 @@ fn parse_request_line<R: BufRead>(r: &mut R, line: &str) -> Result<Request, Malf
         "EVENTS" => Ok(Request::Events {
             since: field_hex(parts.next(), "bad since")?,
         }),
+        "MGET" => {
+            let n: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| Malformed::Recoverable("bad count".to_string()))?;
+            if n > MAX_MULTI_ITEMS {
+                return Err(Malformed::Recoverable(format!(
+                    "item count {n} exceeds cap {MAX_MULTI_ITEMS}"
+                )));
+            }
+            let mut keys = Vec::with_capacity(n);
+            for _ in 0..n {
+                keys.push(field_hex(parts.next(), "bad key list")?);
+            }
+            Ok(Request::MultiGet { keys })
+        }
+        "MSET" => {
+            // The item count is framing: it says how many payload
+            // groups follow, so an unparseable (or absurd) count loses
+            // the stream position and must kill the connection.
+            let n: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| Malformed::Fatal(bad_data("bad count")))?;
+            if n > MAX_MULTI_ITEMS {
+                return Err(Malformed::Fatal(bad_data("item count exceeds cap")));
+            }
+            // Per-item field defects are recoverable, but alignment
+            // demands every remaining item still be consumed — each
+            // item line + payload is self-framing, so the walk records
+            // the first defect and keeps draining.
+            let mut defect: Option<String> = None;
+            let mut items = Vec::with_capacity(n);
+            let mut item_line = String::new();
+            for _ in 0..n {
+                item_line.clear();
+                if r.read_line(&mut item_line)? == 0 {
+                    return Err(Malformed::Fatal(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-batch",
+                    )));
+                }
+                let mut f = item_line.trim_end().split(' ');
+                let key = soft_field(field_hex(f.next(), "bad item key"), &mut defect)?;
+                let epoch = soft_field(field_hex(f.next(), "bad item epoch"), &mut defect)?;
+                let seq = soft_field(field_hex(f.next(), "bad item seq"), &mut defect)?;
+                let len = payload_len(f.next())?;
+                let value = match read_payload(r, len) {
+                    Ok(v) => v,
+                    Err(Malformed::Recoverable(msg)) => {
+                        defect.get_or_insert(msg);
+                        Vec::new()
+                    }
+                    Err(fatal) => return Err(fatal),
+                };
+                items.push(SetItem {
+                    key,
+                    version: Version::new(epoch, seq),
+                    value,
+                });
+            }
+            match defect {
+                None => Ok(Request::MultiSet { items }),
+                Some(msg) => Err(Malformed::Recoverable(msg)),
+            }
+        }
+        "TPREP" => {
+            let txn = field_hex(parts.next(), "bad txn");
+            let epoch = field_hex(parts.next(), "bad epoch");
+            let key = field_hex(parts.next(), "bad key");
+            let vepoch = field_hex(parts.next(), "bad version epoch");
+            let seq = field_hex(parts.next(), "bad seq");
+            let len = payload_len(parts.next())?;
+            let value = read_payload(r, len)?;
+            Ok(Request::TxnPrepare {
+                txn: txn?,
+                epoch: epoch?,
+                key: key?,
+                version: Version::new(vepoch?, seq?),
+                value,
+            })
+        }
+        "TCOMMIT" => Ok(Request::TxnCommit {
+            txn: field_hex(parts.next(), "bad txn")?,
+        }),
+        "TABORT" => Ok(Request::TxnAbort {
+            txn: field_hex(parts.next(), "bad txn")?,
+        }),
+        "FENCE" => {
+            let epoch = field_hex(parts.next(), "bad epoch")?;
+            let lo = field_hex(parts.next(), "bad lo")?;
+            let hi = match parts.next() {
+                Some("-") => None,
+                Some(s) => Some(
+                    u64::from_str_radix(s, 16)
+                        .map_err(|_| Malformed::Recoverable("bad hi".to_string()))?,
+                ),
+                None => return Err(Malformed::Recoverable("missing hi".to_string())),
+            };
+            Ok(Request::Fence { epoch, lo, hi })
+        }
         "PING" => Ok(Request::Ping),
         "QUIT" => Ok(Request::Quit),
         other => Err(Malformed::Recoverable(format!("unknown command {other:?}"))),
@@ -570,6 +801,52 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
         Request::StateGet { shard } => writeln!(w, "STATE {shard:x}"),
         Request::Metrics => w.write_all(b"METRICS\n"),
         Request::Events { since } => writeln!(w, "EVENTS {since:x}"),
+        Request::MultiGet { keys } => {
+            write!(w, "MGET {}", keys.len())?;
+            for k in keys {
+                write!(w, " {k:x}")?;
+            }
+            w.write_all(b"\n")
+        }
+        Request::MultiSet { items } => {
+            writeln!(w, "MSET {}", items.len())?;
+            for it in items {
+                writeln!(
+                    w,
+                    "{:x} {:x} {:x} {}",
+                    it.key,
+                    it.version.epoch,
+                    it.version.seq,
+                    it.value.len()
+                )?;
+                w.write_all(&it.value)?;
+                w.write_all(b"\n")?;
+            }
+            Ok(())
+        }
+        Request::TxnPrepare {
+            txn,
+            epoch,
+            key,
+            version,
+            value,
+        } => {
+            writeln!(
+                w,
+                "TPREP {txn:x} {epoch:x} {key:x} {:x} {:x} {}",
+                version.epoch,
+                version.seq,
+                value.len()
+            )?;
+            w.write_all(value)?;
+            w.write_all(b"\n")
+        }
+        Request::TxnCommit { txn } => writeln!(w, "TCOMMIT {txn:x}"),
+        Request::TxnAbort { txn } => writeln!(w, "TABORT {txn:x}"),
+        Request::Fence { epoch, lo, hi } => match hi {
+            Some(h) => writeln!(w, "FENCE {epoch:x} {lo:x} {h:x}"),
+            None => writeln!(w, "FENCE {epoch:x} {lo:x} -"),
+        },
         Request::Ping => w.write_all(b"PING\n"),
         Request::Quit => w.write_all(b"QUIT\n"),
     }
@@ -648,6 +925,42 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
             w.write_all(events)?;
             w.write_all(b"\n")
         }
+        Response::MultiValue { items } => {
+            writeln!(w, "MVALUE {}", items.len())?;
+            for item in items {
+                match item {
+                    Some((version, value)) => {
+                        writeln!(w, "M {:x} {:x} {}", version.epoch, version.seq, value.len())?;
+                        w.write_all(value)?;
+                        w.write_all(b"\n")?;
+                    }
+                    None => w.write_all(b"-\n")?,
+                }
+            }
+            Ok(())
+        }
+        Response::MultiStored { acks } => {
+            write!(w, "MSTORED {}", acks.len())?;
+            for a in acks {
+                write!(
+                    w,
+                    " {} {:x} {:x}",
+                    if a.applied { 1 } else { 0 },
+                    a.version.epoch,
+                    a.version.seq
+                )?;
+            }
+            w.write_all(b"\n")
+        }
+        Response::TxnVote { granted, version } => writeln!(
+            w,
+            "TVOTE {} {:x} {:x}",
+            if *granted { 1 } else { 0 },
+            version.epoch,
+            version.seq
+        ),
+        Response::TxnDone { applied } => writeln!(w, "TDONE {applied:x}"),
+        Response::Fenced { epoch } => writeln!(w, "FENCED {epoch:x}"),
         Response::Busy { retry_ms } => writeln!(w, "BUSY {retry_ms:x}"),
         Response::Pong => w.write_all(b"PONG\n"),
         Response::Error(e) => writeln!(w, "ERROR {}", e.replace('\n', " ")),
@@ -811,6 +1124,88 @@ pub fn read_response<R: BufRead>(r: &mut R) -> std::io::Result<Response> {
                 events: read_value(r, len)?,
             })
         }
+        "MVALUE" => {
+            let n: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| bad_data("bad len"))?;
+            if n > MAX_MULTI_ITEMS {
+                return Err(bad_data("item count exceeds cap"));
+            }
+            let mut items = Vec::with_capacity(n);
+            let mut item_line = String::new();
+            for _ in 0..n {
+                item_line.clear();
+                if r.read_line(&mut item_line)? == 0 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-batch",
+                    ));
+                }
+                let trimmed = item_line.trim_end();
+                if trimmed == "-" {
+                    items.push(None);
+                    continue;
+                }
+                let mut f = trimmed.split(' ');
+                if f.next() != Some("M") {
+                    return Err(bad_data("bad MVALUE item"));
+                }
+                let epoch = parse_hex(f.next(), "bad epoch")?;
+                let seq = parse_hex(f.next(), "bad seq")?;
+                let len: usize = f
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| bad_data("bad len"))?;
+                items.push(Some((Version::new(epoch, seq), read_value(r, len)?)));
+            }
+            Ok(Response::MultiValue { items })
+        }
+        "MSTORED" => {
+            let n: usize = parts
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| bad_data("bad len"))?;
+            if n > MAX_MULTI_ITEMS {
+                return Err(bad_data("item count exceeds cap"));
+            }
+            let mut acks = Vec::with_capacity(n);
+            for _ in 0..n {
+                let applied = match parts.next() {
+                    Some("1") => true,
+                    Some("0") => false,
+                    _ => return Err(bad_data("bad MSTORED flag")),
+                };
+                acks.push(VsetAck {
+                    applied,
+                    version: Version::new(
+                        parse_hex(parts.next(), "bad epoch")?,
+                        parse_hex(parts.next(), "bad seq")?,
+                    ),
+                });
+            }
+            Ok(Response::MultiStored { acks })
+        }
+        "TVOTE" => {
+            let granted = match parts.next() {
+                Some("1") => true,
+                Some("0") => false,
+                _ => return Err(bad_data("bad TVOTE flag")),
+            };
+            Ok(Response::TxnVote {
+                granted,
+                version: Version::new(
+                    parse_hex(parts.next(), "bad epoch")?,
+                    parse_hex(parts.next(), "bad seq")?,
+                ),
+            })
+        }
+        "TDONE" => Ok(Response::TxnDone {
+            applied: parse_hex(parts.next(), "bad count")?,
+        }),
+        "FENCED" => Ok(Response::Fenced {
+            epoch: parse_hex(parts.next(), "bad epoch")?,
+        }),
         "ERROR" => Ok(Response::Error(parts.collect::<Vec<_>>().join(" "))),
         other => Err(bad_data(&format!("bad response {other:?}"))),
     }
@@ -906,6 +1301,52 @@ mod tests {
             Request::Metrics,
             Request::Events { since: 0 },
             Request::Events { since: u64::MAX },
+            Request::MultiGet {
+                keys: vec![0, 7, u64::MAX],
+            },
+            Request::MultiGet { keys: vec![] },
+            Request::MultiSet {
+                items: vec![
+                    SetItem {
+                        key: 1,
+                        version: Version::new(3, 9),
+                        value: b"bin\n\0ary".to_vec(),
+                    },
+                    SetItem {
+                        key: u64::MAX,
+                        version: Version::new(u64::MAX, u64::MAX),
+                        value: vec![],
+                    },
+                ],
+            },
+            Request::MultiSet { items: vec![] },
+            Request::TxnPrepare {
+                txn: 0xFEED,
+                epoch: 12,
+                key: 3,
+                version: Version::new(12, 0x99),
+                value: b"pinned\n\0".to_vec(),
+            },
+            Request::TxnPrepare {
+                txn: u64::MAX,
+                epoch: 0,
+                key: u64::MAX,
+                version: Version::ZERO,
+                value: vec![],
+            },
+            Request::TxnCommit { txn: 0 },
+            Request::TxnCommit { txn: u64::MAX },
+            Request::TxnAbort { txn: 7 },
+            Request::Fence {
+                epoch: 9,
+                lo: 100,
+                hi: Some(200),
+            },
+            Request::Fence {
+                epoch: u64::MAX,
+                lo: 0,
+                hi: None,
+            },
             Request::Ping,
             Request::Quit,
         ] {
@@ -1009,6 +1450,39 @@ mod tests {
                 next: 0,
                 events: vec![],
             },
+            Response::MultiValue {
+                items: vec![
+                    Some((Version::new(3, 9), b"x\ny".to_vec())),
+                    None,
+                    Some((Version::new(u64::MAX, u64::MAX), vec![])),
+                ],
+            },
+            Response::MultiValue { items: vec![] },
+            Response::MultiStored {
+                acks: vec![
+                    VsetAck {
+                        applied: true,
+                        version: Version::new(4, 1),
+                    },
+                    VsetAck {
+                        applied: false,
+                        version: Version::new(u64::MAX, 0),
+                    },
+                ],
+            },
+            Response::MultiStored { acks: vec![] },
+            Response::TxnVote {
+                granted: true,
+                version: Version::new(12, 0x99),
+            },
+            Response::TxnVote {
+                granted: false,
+                version: Version::new(u64::MAX, u64::MAX),
+            },
+            Response::TxnDone { applied: 0 },
+            Response::TxnDone { applied: u64::MAX },
+            Response::Fenced { epoch: 0 },
+            Response::Fenced { epoch: u64::MAX },
             Response::Busy { retry_ms: 2 },
             Response::Busy { retry_ms: u64::MAX },
             Response::Pong,
@@ -1095,6 +1569,34 @@ mod tests {
             read_request(&mut r, &mut line).unwrap(),
             Some(Parsed::Req(Request::Ping))
         );
+    }
+
+    #[test]
+    fn multiset_item_defects_drain_the_whole_batch() {
+        // A bad field inside one MSET item is recoverable: the walk
+        // keeps consuming the remaining (self-framing) items so the
+        // request after the batch parses cleanly.
+        let feed = b"MSET 2\nzz 1 2 3\nabc\n4 5 6 2\nhi\nPING\n";
+        let mut r = BufReader::new(&feed[..]);
+        let mut line = String::new();
+        match read_request(&mut r, &mut line).unwrap() {
+            Some(Parsed::Recoverable(msg)) => assert!(msg.contains("bad item key")),
+            other => panic!("expected recoverable error, got {other:?}"),
+        }
+        assert_eq!(
+            read_request(&mut r, &mut line).unwrap(),
+            Some(Parsed::Req(Request::Ping))
+        );
+        // An unparseable item count is framing loss: fatal.
+        let mut r = BufReader::new(&b"MSET what\n"[..]);
+        assert!(read_request(&mut r, &mut line).is_err());
+        // So is an absurd one (the drain loop must stay bounded).
+        let huge = format!("MSET {}\n", MAX_MULTI_ITEMS + 1);
+        let mut r = BufReader::new(huge.as_bytes());
+        assert!(read_request(&mut r, &mut line).is_err());
+        // Truncation mid-batch is fatal, not a short batch.
+        let mut r = BufReader::new(&b"MSET 2\n1 2 3 2\nhi\n"[..]);
+        assert!(read_request(&mut r, &mut line).is_err());
     }
 
     #[test]

@@ -13,8 +13,7 @@ use crate::algo::{DatumId, NodeId, Placer};
 use std::collections::HashMap;
 use std::net::SocketAddr;
 
-/// Typed `SET` over one conn ([`Conn::call`] is the client surface;
-/// the per-op wrappers are deprecated).
+/// Typed `SET` over one conn ([`Conn::call`] is the client surface).
 fn set_call(conn: &mut Conn, key: DatumId, value: Vec<u8>) -> std::io::Result<()> {
     match conn.call(&Request::Set { key, value })? {
         Response::Stored => Ok(()),

@@ -24,10 +24,12 @@
 //! closes it.
 
 use super::frame;
-use super::protocol::{read_request, write_response, Parsed, Request, Response, MAX_LEASE_TTL_MS};
+use super::protocol::{
+    read_request, write_response, Parsed, Request, Response, VsetAck, MAX_LEASE_TTL_MS,
+};
 use super::reactor::{Handler, Reactor, Waker};
 use crate::obs::{ring::MAX_EVENT_PAGE, Counter, Event, Histo, Obs};
-use crate::storage::{DurableStore, RecoveryReport, ShardedStore, StorageEngine};
+use crate::storage::{DurableStore, RecoveryReport, ShardedStore, StorageEngine, Version};
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -42,8 +44,26 @@ use std::time::Instant;
 /// resolves within a few milliseconds once load clears.
 const BUSY_RETRY_MS: u64 = 2;
 
+/// How long a staged transaction pin blocks rival prepares and stays
+/// committable. A driver that dies between prepare and commit stops
+/// holding its keys hostage after this long; a live driver resolves in
+/// milliseconds, so the window is generous.
+const TXN_PIN_TTL: std::time::Duration = std::time::Duration::from_secs(5);
+
+/// One staged two-phase write ([`Request::TxnPrepare`]): the value
+/// waits here, invisible to readers, until `TCOMMIT` applies it through
+/// the normal versioned write path — or `TABORT`, a covering fence, or
+/// the TTL drops it.
+struct TxnPin {
+    key: u64,
+    version: Version,
+    value: Vec<u8>,
+    staged_at: Instant,
+}
+
 /// Server-side admission control: a ceiling on concurrently-served
-/// *data* ops (SET/VSET/GET/VGET/DEL/VDEL). At or above the ceiling
+/// *data* ops (single-key SET/VSET/GET/VGET/DEL/VDEL, the batched
+/// MGET/MSET, and the transaction trio). At or above the ceiling
 /// the node answers [`Response::Busy`] instead of queueing — shedding
 /// keeps the served ops fast and pushes the backlog back to the
 /// caller's backoff-and-retry path, which is the half of load control
@@ -151,6 +171,29 @@ struct NodeCtx {
     gate: Arc<AdmissionGate>,
     /// `shed.server` counter: data ops answered `BUSY` by the gate.
     shed: Arc<Counter>,
+    /// Range-scoped write fences (`FENCE`): a versioned write or
+    /// prepare stamped before a fence's epoch to a key in its range
+    /// bounces with [`Response::Busy`]. Range hand-offs install these
+    /// at publish time; a node carries a handful at most, so the
+    /// per-write linear scan is cheaper than any index.
+    fences: Mutex<Vec<(u64, u64, Option<u64>)>>,
+    /// Staged transaction pins by txn id (`TPREP` → `TCOMMIT`/`TABORT`).
+    txns: Mutex<HashMap<u64, Vec<TxnPin>>>,
+}
+
+impl NodeCtx {
+    /// Whether a write stamped (or routed) at `epoch` against `key`
+    /// falls behind an installed fence — the writer's snapshot predates
+    /// a hand-off of the key's range, so the write must bounce and
+    /// retry against a refreshed snapshot instead of landing on a node
+    /// that no longer owns the key.
+    fn fenced(&self, key: u64, epoch: u64) -> bool {
+        self.fences
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|&(e, lo, hi)| epoch < e && key >= lo && hi.map_or(true, |h| key < h))
+    }
 }
 
 /// Interval of the durable engine's flush tick: appended records are
@@ -257,6 +300,8 @@ impl NodeServer {
             last_epoch: AtomicU64::new(0),
             gate: gate.clone(),
             shed: obs.registry.counter("shed.server"),
+            fences: Mutex::new(Vec::new()),
+            txns: Mutex::new(HashMap::new()),
         });
         let op_ns = ctx.obs.registry.histo("serve.binary.op_ns");
         let handler = NodeHandler {
@@ -370,7 +415,12 @@ fn handle_request(ctx: &NodeCtx, req: Request) -> Option<Response> {
         | Request::Get { .. }
         | Request::VGet { .. }
         | Request::Del { .. }
-        | Request::VDel { .. } => {
+        | Request::VDel { .. }
+        | Request::MultiGet { .. }
+        | Request::MultiSet { .. }
+        | Request::TxnPrepare { .. }
+        | Request::TxnCommit { .. }
+        | Request::TxnAbort { .. } => {
             let ceiling = ctx.gate.ceiling.load(Ordering::Relaxed);
             if ceiling > 0 {
                 if ctx.gate.in_flight.fetch_add(1, Ordering::Relaxed) >= ceiling {
@@ -408,17 +458,28 @@ fn handle_admitted(ctx: &NodeCtx, req: Request) -> Option<Response> {
         }
         // The echoed version is decided in the store's critical
         // section: ours when applied, the incumbent winner's when
-        // refused (so the writer's clock can catch up).
-        Request::VSet { key, version, value } => match store.vset(key, version, value) {
-            Ok(()) => Response::VStored {
-                applied: true,
-                version,
-            },
-            Err(winner) => Response::VStored {
-                applied: false,
-                version: winner,
-            },
-        },
+        // refused (so the writer's clock can catch up). A write whose
+        // stamp falls behind an installed range fence bounces first:
+        // the writer routed by a snapshot that predates a hand-off of
+        // this key, and the copy must land on the new owner instead.
+        Request::VSet { key, version, value } => {
+            if ctx.fenced(key, version.epoch) {
+                Response::Busy {
+                    retry_ms: BUSY_RETRY_MS,
+                }
+            } else {
+                match store.vset(key, version, value) {
+                    Ok(()) => Response::VStored {
+                        applied: true,
+                        version,
+                    },
+                    Err(winner) => Response::VStored {
+                        applied: false,
+                        version: winner,
+                    },
+                }
+            }
+        }
         Request::Get { key } => match store.get(key) {
             Some(v) => Response::Value(v),
             None => Response::NotFound,
@@ -504,6 +565,151 @@ fn handle_admitted(ctx: &NodeCtx, req: Request) -> Option<Response> {
                 next,
                 events: Event::encode_all(&events),
             }
+        }
+        Request::MultiGet { keys } => Response::MultiValue {
+            items: keys.into_iter().map(|k| store.vget(k)).collect(),
+        },
+        Request::MultiSet { items } => {
+            // A fenced item refuses the whole batch before anything
+            // lands: the pool sheds and replays a busy sub-batch as a
+            // unit, and a mid-batch refusal would read as half-applied.
+            let fenced = items.iter().any(|i| ctx.fenced(i.key, i.version.epoch));
+            if fenced {
+                Response::Busy {
+                    retry_ms: BUSY_RETRY_MS,
+                }
+            } else {
+                Response::MultiStored {
+                    acks: items
+                        .into_iter()
+                        .map(|it| match store.vset(it.key, it.version, it.value) {
+                            Ok(()) => VsetAck {
+                                applied: true,
+                                version: it.version,
+                            },
+                            Err(winner) => VsetAck {
+                                applied: false,
+                                version: winner,
+                            },
+                        })
+                        .collect(),
+                }
+            }
+        }
+        Request::TxnPrepare { txn, epoch, key, version, value } => {
+            if ctx.fenced(key, epoch) || ctx.fenced(key, version.epoch) {
+                // The driver's snapshot predates a hand-off of this
+                // key's range: bounce like any fenced write so it
+                // refreshes and re-drives against the new owner.
+                Response::Busy {
+                    retry_ms: BUSY_RETRY_MS,
+                }
+            } else {
+                let mut txns = ctx.txns.lock().unwrap();
+                // Lazy expiry: a crashed driver's pins stop blocking
+                // rivals (and stop being committable) after the TTL.
+                txns.retain(|_, pins| {
+                    pins.retain(|p| p.staged_at.elapsed() < TXN_PIN_TTL);
+                    !pins.is_empty()
+                });
+                let conflict = txns
+                    .iter()
+                    .any(|(id, pins)| *id != txn && pins.iter().any(|p| p.key == key));
+                let fresh = match store.version_of(key) {
+                    Some(stored) => version > stored,
+                    None => true,
+                };
+                if conflict || !fresh {
+                    // The refusal names the newest incumbent — pinned
+                    // or stored — so the driver's clock catches up
+                    // before it re-stamps and retries.
+                    let best = txns
+                        .iter()
+                        .filter(|(id, _)| **id != txn)
+                        .flat_map(|(_, pins)| pins.iter())
+                        .filter(|p| p.key == key)
+                        .map(|p| p.version)
+                        .chain(store.version_of(key))
+                        .max()
+                        .unwrap_or(Version::ZERO);
+                    Response::TxnVote {
+                        granted: false,
+                        version: best,
+                    }
+                } else {
+                    let pins = txns.entry(txn).or_default();
+                    // A re-sent prepare replaces this txn's own pin.
+                    pins.retain(|p| p.key != key);
+                    pins.push(TxnPin {
+                        key,
+                        version,
+                        value,
+                        staged_at: Instant::now(),
+                    });
+                    Response::TxnVote {
+                        granted: true,
+                        version,
+                    }
+                }
+            }
+        }
+        Request::TxnCommit { txn } => {
+            // Pins covered by a fence raised since the prepare are
+            // skipped, not applied: the staged write would land on a
+            // range this node no longer owns. The driver reads the
+            // short count as a failed commit and re-drives the whole
+            // transaction under a fresh snapshot and a higher stamp.
+            let pins = ctx.txns.lock().unwrap().remove(&txn).unwrap_or_default();
+            let mut applied = 0u64;
+            for p in pins {
+                if p.staged_at.elapsed() < TXN_PIN_TTL
+                    && !ctx.fenced(p.key, p.version.epoch)
+                    && store.vset(p.key, p.version, p.value).is_ok()
+                {
+                    applied += 1;
+                }
+            }
+            Response::TxnDone { applied }
+        }
+        Request::TxnAbort { txn } => Response::TxnDone {
+            applied: ctx
+                .txns
+                .lock()
+                .unwrap()
+                .remove(&txn)
+                .map_or(0, |pins| pins.len() as u64),
+        },
+        Request::Fence { epoch, lo, hi } => {
+            let newest = {
+                let mut fences = ctx.fences.lock().unwrap();
+                // Installing a fence REPLACES every fence its range
+                // intersects: the control plane declares a range's
+                // current write floor — raised at hand-off publish
+                // time, re-declared lower when ownership of the range
+                // comes back (a merge absorbing a formerly split-away
+                // range must re-admit the old stamps it re-ingests).
+                // A zero-epoch declaration refuses nothing and is not
+                // stored: installing it simply lifts the range.
+                fences.retain(|&(_, l, h)| {
+                    !(hi.map_or(true, |x| l < x) && h.map_or(true, |x| lo < x))
+                });
+                if epoch > 0 {
+                    fences.push((epoch, lo, hi));
+                }
+                fences.iter().map(|&(e, _, _)| e).max().unwrap_or(epoch)
+            };
+            // Staged pins the new fence covers are dropped right away:
+            // their commit would be skipped anyway, and holding them
+            // would block fresh prepares for the whole TTL.
+            let covers = |p: &TxnPin| {
+                p.version.epoch < epoch && p.key >= lo && hi.map_or(true, |h| p.key < h)
+            };
+            let mut txns = ctx.txns.lock().unwrap();
+            txns.retain(|_, pins| {
+                pins.retain(|p| !covers(p));
+                !pins.is_empty()
+            });
+            Response::Fenced { epoch: newest }
         }
         Request::Ping => Response::Pong,
         Request::Quit => return None,
@@ -621,24 +827,119 @@ fn serve_text_conn(stream: TcpStream, sniffed: Vec<u8>, ctx: Arc<NodeCtx>) -> st
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // keeps coverage on the compatibility wrappers
 mod tests {
     use super::*;
     use crate::net::client::Conn;
-    use crate::storage::Version;
+    use crate::net::protocol::{LeaseReply, SetItem};
+
+    // Test-local per-op helpers over `Conn::call` — the typed codec is
+    // the whole client API, and these keep each test body at one line
+    // per wire op.
+    fn ping(c: &mut Conn) {
+        assert_eq!(c.call(&Request::Ping).unwrap(), Response::Pong);
+    }
+
+    fn set(c: &mut Conn, key: u64, value: Vec<u8>) {
+        assert_eq!(c.call(&Request::Set { key, value }).unwrap(), Response::Stored);
+    }
+
+    fn get(c: &mut Conn, key: u64) -> Option<Vec<u8>> {
+        match c.call(&Request::Get { key }).unwrap() {
+            Response::Value(v) => Some(v),
+            Response::NotFound => None,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn del(c: &mut Conn, key: u64) -> bool {
+        match c.call(&Request::Del { key }).unwrap() {
+            Response::Deleted => true,
+            Response::NotFound => false,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn vset(c: &mut Conn, key: u64, version: Version, value: Vec<u8>) -> VsetAck {
+        match c.call(&Request::VSet { key, version, value }).unwrap() {
+            Response::VStored { applied, version } => VsetAck { applied, version },
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn vget(c: &mut Conn, key: u64) -> Option<(Version, Vec<u8>)> {
+        match c.call(&Request::VGet { key }).unwrap() {
+            Response::VValue { version, value } => Some((version, value)),
+            Response::NotFound => None,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn heartbeat(c: &mut Conn, epoch: u64) -> (u64, u64) {
+        match c.call(&Request::Heartbeat { epoch }).unwrap() {
+            Response::Alive { epoch, keys } => (epoch, keys),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn keys(c: &mut Conn) -> Vec<u64> {
+        match c.call(&Request::Keys).unwrap() {
+            Response::KeyList(keys) => keys,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn keys_chunk(c: &mut Conn, limit: u64, cursor: Option<u64>) -> (Vec<u64>, Option<u64>) {
+        match c.call(&Request::KeysChunk { cursor, limit }).unwrap() {
+            Response::KeyPage { keys, next } => (keys, next),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn lease(c: &mut Conn, shard: u64, candidate: u64, term: u64, ttl_ms: u64) -> LeaseReply {
+        let req = Request::Lease {
+            shard,
+            candidate,
+            term,
+            ttl_ms,
+        };
+        match c.call(&req).unwrap() {
+            Response::Leased { granted, term, holder, remaining_ms } => LeaseReply {
+                granted,
+                term,
+                holder,
+                remaining_ms,
+            },
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn state_put(c: &mut Conn, shard: u64, term: u64, value: Vec<u8>) -> (bool, u64) {
+        match c.call(&Request::StatePut { shard, term, value }).unwrap() {
+            Response::StateAck { applied, term } => (applied, term),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    fn state_get(c: &mut Conn, shard: u64) -> Option<(u64, Vec<u8>)> {
+        match c.call(&Request::StateGet { shard }).unwrap() {
+            Response::StateValue { term, value } => Some((term, value)),
+            Response::NotFound => None,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
 
     #[test]
     fn server_serves_set_get_del_stats() {
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
-        c.ping().unwrap();
-        c.set(42, b"value!".to_vec()).unwrap();
-        assert_eq!(c.get(42).unwrap(), Some(b"value!".to_vec()));
-        assert_eq!(c.get(43).unwrap(), None);
-        let (keys, bytes, sets, _gets) = c.stats().unwrap();
-        assert_eq!((keys, bytes, sets), (1, 6, 1));
-        assert!(c.del(42).unwrap());
-        assert!(!c.del(42).unwrap());
+        ping(&mut c);
+        set(&mut c, 42, b"value!".to_vec());
+        assert_eq!(get(&mut c, 42), Some(b"value!".to_vec()));
+        assert_eq!(get(&mut c, 43), None);
+        let s = c.stats_full().unwrap();
+        assert_eq!((s.keys, s.bytes, s.sets), (1, 6, 1));
+        assert!(del(&mut c, 42));
+        assert!(!del(&mut c, 42));
         assert_eq!(server.key_count(), 0);
     }
 
@@ -648,26 +949,26 @@ mod tests {
         // op the text plane serves must round-trip through the reactor.
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect_binary(server.addr()).unwrap();
-        c.ping().unwrap();
-        c.set(42, b"value!".to_vec()).unwrap();
-        assert_eq!(c.get(42).unwrap(), Some(b"value!".to_vec()));
-        assert_eq!(c.get(43).unwrap(), None);
-        let (keys, bytes, sets, _gets) = c.stats().unwrap();
-        assert_eq!((keys, bytes, sets), (1, 6, 1));
+        ping(&mut c);
+        set(&mut c, 42, b"value!".to_vec());
+        assert_eq!(get(&mut c, 42), Some(b"value!".to_vec()));
+        assert_eq!(get(&mut c, 43), None);
+        let s = c.stats_full().unwrap();
+        assert_eq!((s.keys, s.bytes, s.sets), (1, 6, 1));
         let v = Version::new(2, 9);
-        assert!(c.vset(7, v, b"vv".to_vec()).unwrap().applied);
-        assert_eq!(c.vget(7).unwrap(), Some((v, b"vv".to_vec())));
-        assert_eq!(c.heartbeat(3).unwrap(), (3, 2));
-        let mut keys = c.keys().unwrap();
-        keys.sort_unstable();
-        assert_eq!(keys, vec![7, 42]);
-        let (page, next) = c.keys_chunk(64, None).unwrap();
+        assert!(vset(&mut c, 7, v, b"vv".to_vec()).applied);
+        assert_eq!(vget(&mut c, 7), Some((v, b"vv".to_vec())));
+        assert_eq!(heartbeat(&mut c, 3), (3, 2));
+        let mut held = keys(&mut c);
+        held.sort_unstable();
+        assert_eq!(held, vec![7, 42]);
+        let (page, next) = keys_chunk(&mut c, 64, None);
         assert_eq!(page.len(), 2);
         assert_eq!(next, None);
-        assert!(c.lease(0, 1, 1, 10_000).unwrap().granted);
-        assert_eq!(c.state_put(0, 1, b"blob".to_vec()).unwrap(), (true, 1));
-        assert_eq!(c.state_get(0).unwrap(), Some((1, b"blob".to_vec())));
-        assert!(c.del(42).unwrap());
+        assert!(lease(&mut c, 0, 1, 1, 10_000).granted);
+        assert_eq!(state_put(&mut c, 0, 1, b"blob".to_vec()), (true, 1));
+        assert_eq!(state_get(&mut c, 0), Some((1, b"blob".to_vec())));
+        assert!(del(&mut c, 42));
         assert_eq!(server.key_count(), 1);
     }
 
@@ -682,12 +983,12 @@ mod tests {
             Conn::connect(server.addr()).unwrap(),
             Conn::connect_binary(server.addr()).unwrap(),
         ] {
-            c.set(1, b"x".to_vec()).unwrap();
-            c.get(1).unwrap();
+            set(&mut c, 1, b"x".to_vec());
+            get(&mut c, 1);
             // Extended STATS: epoch tracks the highest heartbeat seen,
             // uptime only moves forward.
-            c.heartbeat(9).unwrap();
-            c.heartbeat(5).unwrap();
+            heartbeat(&mut c, 9);
+            heartbeat(&mut c, 5);
             let s = c.stats_full().unwrap();
             assert_eq!(s.epoch, 9, "STATS must report the highest epoch heard");
             let s2 = c.stats_full().unwrap();
@@ -716,8 +1017,8 @@ mod tests {
     fn disabled_obs_serves_metrics_but_skips_op_timing() {
         let server = NodeServer::spawn_with_obs(("127.0.0.1", 0), Obs::disabled()).unwrap();
         let mut c = Conn::connect_binary(server.addr()).unwrap();
-        c.set(1, b"x".to_vec()).unwrap();
-        c.get(1).unwrap();
+        set(&mut c, 1, b"x".to_vec());
+        get(&mut c, 1);
         let dump = c.metrics().unwrap();
         let timed: u64 = dump.histos.iter().map(|(_, h)| h.count).sum();
         assert_eq!(timed, 0, "baseline run must record no op timings");
@@ -728,10 +1029,10 @@ mod tests {
         let server = NodeServer::spawn().unwrap();
         let mut t = Conn::connect(server.addr()).unwrap();
         let mut b = Conn::connect_binary(server.addr()).unwrap();
-        t.set(1, b"from-text".to_vec()).unwrap();
-        b.set(2, b"from-binary".to_vec()).unwrap();
-        assert_eq!(b.get(1).unwrap(), Some(b"from-text".to_vec()));
-        assert_eq!(t.get(2).unwrap(), Some(b"from-binary".to_vec()));
+        set(&mut t, 1, b"from-text".to_vec());
+        set(&mut b, 2, b"from-binary".to_vec());
+        assert_eq!(get(&mut b, 1), Some(b"from-text".to_vec()));
+        assert_eq!(get(&mut t, 2), Some(b"from-binary".to_vec()));
         assert_eq!(server.key_count(), 2);
     }
 
@@ -813,30 +1114,30 @@ mod tests {
         let mut c = Conn::connect(server.addr()).unwrap();
         let v1 = Version::new(1, 10);
         let v2 = Version::new(1, 11);
-        assert!(c.vset(5, v2, b"new".to_vec()).unwrap().applied);
-        let ack = c.vset(5, v1, b"old".to_vec()).unwrap();
+        assert!(vset(&mut c, 5, v2, b"new".to_vec()).applied);
+        let ack = vset(&mut c, 5, v1, b"old".to_vec());
         assert!(!ack.applied, "stale copier must be refused");
         assert_eq!(ack.version, v2, "the refusal names the winning stamp");
-        assert_eq!(c.vget(5).unwrap(), Some((v2, b"new".to_vec())));
-        assert_eq!(c.vget(6).unwrap(), None);
+        assert_eq!(vget(&mut c, 5), Some((v2, b"new".to_vec())));
+        assert_eq!(vget(&mut c, 6), None);
         // Version-guarded delete refuses when the copy is newer.
-        use crate::net::protocol::VdelOutcome;
-        assert_eq!(c.vdel(5, v1).unwrap(), VdelOutcome::Newer);
-        assert_eq!(c.vdel(5, v2).unwrap(), VdelOutcome::Deleted);
-        assert_eq!(c.vdel(5, v2).unwrap(), VdelOutcome::Missing);
+        let vdel = |c: &mut Conn, key, version| c.call(&Request::VDel { key, version }).unwrap();
+        assert_eq!(vdel(&mut c, 5, v1), Response::Newer);
+        assert_eq!(vdel(&mut c, 5, v2), Response::Deleted);
+        assert_eq!(vdel(&mut c, 5, v2), Response::NotFound);
     }
 
     #[test]
     fn heartbeat_and_keys_ops() {
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
-        assert_eq!(c.heartbeat(9).unwrap(), (9, 0));
-        c.set(3, b"x".to_vec()).unwrap();
-        c.set(4, b"y".to_vec()).unwrap();
-        assert_eq!(c.heartbeat(10).unwrap(), (10, 2));
-        let mut keys = c.keys().unwrap();
-        keys.sort_unstable();
-        assert_eq!(keys, vec![3, 4]);
+        assert_eq!(heartbeat(&mut c, 9), (9, 0));
+        set(&mut c, 3, b"x".to_vec());
+        set(&mut c, 4, b"y".to_vec());
+        assert_eq!(heartbeat(&mut c, 10), (10, 2));
+        let mut held = keys(&mut c);
+        held.sort_unstable();
+        assert_eq!(held, vec![3, 4]);
     }
 
     #[test]
@@ -844,15 +1145,15 @@ mod tests {
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
         for k in 0..500u64 {
-            c.set(k, vec![7]).unwrap();
+            set(&mut c, k, vec![7]);
         }
         let mut paged: Vec<u64> = Vec::new();
         let mut cursor = None;
         let mut pages = 0;
         loop {
-            let (keys, next) = c.keys_chunk(64, cursor).unwrap();
-            assert!(keys.len() <= 64, "page exceeded its limit");
-            paged.extend(keys);
+            let (page, next) = keys_chunk(&mut c, 64, cursor);
+            assert!(page.len() <= 64, "page exceeded its limit");
+            paged.extend(page);
             pages += 1;
             match next {
                 Some(n) => cursor = Some(n),
@@ -861,7 +1162,7 @@ mod tests {
         }
         assert!(pages >= 8, "500 keys at limit 64 must take several pages");
         paged.sort_unstable();
-        let mut full = c.keys().unwrap();
+        let mut full = keys(&mut c);
         full.sort_unstable();
         assert_eq!(paged, full);
     }
@@ -871,28 +1172,28 @@ mod tests {
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
         // Query before any grant: no holder.
-        let q = c.lease(0, 0, 0, 0).unwrap();
+        let q = lease(&mut c, 0, 0, 0, 0);
         assert!(!q.granted);
         assert_eq!((q.term, q.holder), (0, 0));
         // First bid wins.
-        let g = c.lease(0, 1, 1, 10_000).unwrap();
+        let g = lease(&mut c, 0, 1, 1, 10_000);
         assert!(g.granted);
         assert_eq!((g.term, g.holder), (1, 1));
         assert!(g.remaining_ms > 0);
         // A rival bid at a higher term is refused while the lease lives.
-        let r = c.lease(0, 2, 2, 10_000).unwrap();
+        let r = lease(&mut c, 0, 2, 2, 10_000);
         assert!(!r.granted, "live lease must not be preempted");
         assert_eq!((r.term, r.holder), (1, 1));
         // The holder renews at its own term, and may bump it.
-        assert!(c.lease(0, 1, 1, 10_000).unwrap().granted);
-        assert!(c.lease(0, 1, 3, 50).unwrap().granted);
+        assert!(lease(&mut c, 0, 1, 1, 10_000).granted);
+        assert!(lease(&mut c, 0, 1, 3, 50).granted);
         // After expiry a strictly higher term takes over...
         std::thread::sleep(std::time::Duration::from_millis(80));
-        let q = c.lease(0, 0, 0, 0).unwrap();
+        let q = lease(&mut c, 0, 0, 0, 0);
         assert_eq!(q.holder, 0, "expired lease reads as vacant");
         assert_eq!(q.term, 3, "last granted term still visible");
-        assert!(!c.lease(0, 2, 3, 10_000).unwrap().granted, "equal term refused");
-        let g = c.lease(0, 2, 4, 10_000).unwrap();
+        assert!(!lease(&mut c, 0, 2, 3, 10_000).granted, "equal term refused");
+        let g = lease(&mut c, 0, 2, 4, 10_000);
         assert!(g.granted);
         assert_eq!((g.term, g.holder), (4, 2));
     }
@@ -904,53 +1205,54 @@ mod tests {
         // visible through — or block — another shard's register.
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
-        let g = c.lease(5, 1, 1, 10_000).unwrap();
+        let g = lease(&mut c, 5, 1, 1, 10_000);
         assert!(g.granted);
         // A different shard's register is still vacant and grantable by
         // a different candidate at its own term.
-        let q = c.lease(9, 0, 0, 0).unwrap();
+        let q = lease(&mut c, 9, 0, 0, 0);
         assert_eq!((q.term, q.holder), (0, 0));
-        let g = c.lease(9, 2, 7, 10_000).unwrap();
+        let g = lease(&mut c, 9, 2, 7, 10_000);
         assert!(g.granted);
         assert_eq!((g.term, g.holder), (7, 2));
         // Shard 5's incumbent is untouched.
-        let q = c.lease(5, 0, 0, 0).unwrap();
+        let q = lease(&mut c, 5, 0, 0, 0);
         assert_eq!((q.term, q.holder), (1, 1));
         // State slots are keyed the same way.
-        assert_eq!(c.state_put(5, 3, b"five".to_vec()).unwrap(), (true, 3));
-        assert_eq!(c.state_get(9).unwrap(), None);
-        assert_eq!(c.state_put(9, 1, b"nine".to_vec()).unwrap(), (true, 1));
-        assert_eq!(c.state_get(5).unwrap(), Some((3, b"five".to_vec())));
-        assert_eq!(c.state_get(9).unwrap(), Some((1, b"nine".to_vec())));
+        assert_eq!(state_put(&mut c, 5, 3, b"five".to_vec()), (true, 3));
+        assert_eq!(state_get(&mut c, 9), None);
+        assert_eq!(state_put(&mut c, 9, 1, b"nine".to_vec()), (true, 1));
+        assert_eq!(state_get(&mut c, 5), Some((3, b"five".to_vec())));
+        assert_eq!(state_get(&mut c, 9), Some((1, b"nine".to_vec())));
     }
 
     #[test]
     fn state_applies_by_term_and_reads_back() {
         let server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
-        assert_eq!(c.state_get(0).unwrap(), None);
-        assert_eq!(c.state_put(0, 1, b"one".to_vec()).unwrap(), (true, 1));
-        assert_eq!(c.state_put(0, 1, b"one'".to_vec()).unwrap(), (true, 1));
-        assert_eq!(c.state_put(0, 3, b"three\n\0".to_vec()).unwrap(), (true, 3));
+        assert_eq!(state_get(&mut c, 0), None);
+        assert_eq!(state_put(&mut c, 0, 1, b"one".to_vec()), (true, 1));
+        assert_eq!(state_put(&mut c, 0, 1, b"one'".to_vec()), (true, 1));
+        assert_eq!(state_put(&mut c, 0, 3, b"three\n\0".to_vec()), (true, 3));
         // A deposed leader's late publish can never clobber the successor.
-        assert_eq!(c.state_put(0, 2, b"stale".to_vec()).unwrap(), (false, 3));
-        assert_eq!(c.state_get(0).unwrap(), Some((3, b"three\n\0".to_vec())));
+        assert_eq!(state_put(&mut c, 0, 2, b"stale".to_vec()), (false, 3));
+        assert_eq!(state_get(&mut c, 0), Some((3, b"three\n\0".to_vec())));
     }
 
     #[test]
     fn kill_severs_established_connections() {
         let mut server = NodeServer::spawn().unwrap();
         let mut c = Conn::connect(server.addr()).unwrap();
-        c.ping().unwrap();
+        ping(&mut c);
         let mut b = Conn::connect_binary(server.addr()).unwrap();
-        b.ping().unwrap();
+        ping(&mut b);
         server.kill();
-        assert!(c.ping().is_err(), "killed node must drop its text clients");
-        assert!(b.ping().is_err(), "killed node must drop its binary clients");
+        let probe = |c: &mut Conn| c.call(&Request::Ping);
+        assert!(probe(&mut c).is_err(), "killed node must drop its text clients");
+        assert!(probe(&mut b).is_err(), "killed node must drop its binary clients");
         // New connections are refused (or at best never served).
         match Conn::connect(server.addr()) {
             Err(_) => {}
-            Ok(mut c2) => assert!(c2.ping().is_err()),
+            Ok(mut c2) => assert!(probe(&mut c2).is_err()),
         }
     }
 
@@ -967,7 +1269,7 @@ mod tests {
             } else {
                 Conn::connect_binary(server.addr()).unwrap()
             };
-            c.ping().unwrap();
+            ping(&mut c);
         }
         for _ in 0..100 {
             if server.conns.lock().unwrap().is_empty() {
@@ -1010,8 +1312,8 @@ mod tests {
         assert_eq!(b.vget_or_busy(5).unwrap(), Err(super::BUSY_RETRY_MS));
         // Control ops are exempt: detection and failover keep working
         // on exactly the node that sheds data traffic.
-        c.ping().unwrap();
-        c.heartbeat(1).unwrap();
+        ping(&mut c);
+        heartbeat(&mut c, 1);
         assert!(c.stats_full().is_ok());
         assert!(c.metrics().is_ok());
         assert!(
@@ -1038,7 +1340,7 @@ mod tests {
             assert_eq!(report.keys, 0, "fresh dir recovers empty");
             let mut c = Conn::connect_binary(server.addr()).unwrap();
             assert_eq!(
-                c.call(Request::VSet { key: 11, version: v, value: b"durable".to_vec() })
+                c.call(&Request::VSet { key: 11, version: v, value: b"durable".to_vec() })
                     .unwrap(),
                 Response::VStored { applied: true, version: v }
             );
@@ -1049,7 +1351,7 @@ mod tests {
         assert_eq!(report.keys, 1, "the acked write must replay");
         let mut c = Conn::connect_binary(server.addr()).unwrap();
         assert_eq!(
-            c.call(Request::VGet { key: 11 }).unwrap(),
+            c.call(&Request::VGet { key: 11 }).unwrap(),
             Response::VValue { version: v, value: b"durable".to_vec() }
         );
         let _ = std::fs::remove_dir_all(&dir);
@@ -1069,8 +1371,8 @@ mod tests {
                     };
                     for i in 0..100u64 {
                         let key = t * 1000 + i;
-                        c.set(key, vec![t as u8; 16]).unwrap();
-                        assert_eq!(c.get(key).unwrap(), Some(vec![t as u8; 16]));
+                        set(&mut c, key, vec![t as u8; 16]);
+                        assert_eq!(get(&mut c, key), Some(vec![t as u8; 16]));
                     }
                 })
             })
@@ -1079,5 +1381,223 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(server.key_count(), 800);
+    }
+
+    #[test]
+    fn multi_ops_round_trip_over_both_framings() {
+        let server = NodeServer::spawn().unwrap();
+        let conns = [
+            Conn::connect(server.addr()).unwrap(),
+            Conn::connect_binary(server.addr()).unwrap(),
+        ];
+        for (i, mut c) in conns.into_iter().enumerate() {
+            let base = 10 * i as u64;
+            let v = Version::new(1, 1);
+            let item = |key, value: &[u8]| SetItem {
+                key,
+                version: v,
+                value: value.to_vec(),
+            };
+            let items = vec![item(base + 1, b"a"), item(base + 2, b"b")];
+            match c.call(&Request::MultiSet { items }).unwrap() {
+                Response::MultiStored { acks } => {
+                    assert_eq!(acks.len(), 2);
+                    assert!(acks.iter().all(|a| a.applied), "fresh items must land");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            let keys = vec![base + 1, base + 2, base + 9];
+            match c.call(&Request::MultiGet { keys }).unwrap() {
+                Response::MultiValue { items } => {
+                    let hit = |b: &[u8]| Some((v, b.to_vec()));
+                    assert_eq!(items, vec![hit(b"a"), hit(b"b"), None]);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            // A stale re-send acks per item without applying, echoing
+            // the incumbent stamp exactly like a refused VSET.
+            let stale = vec![item(base + 1, b"zz")];
+            match c.call(&Request::MultiSet { items: stale }).unwrap() {
+                Response::MultiStored { acks } => {
+                    assert!(!acks[0].applied, "equal stamp must be refused");
+                    assert_eq!(acks[0].version, v, "refusal names the incumbent");
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(server.key_count(), 4);
+    }
+
+    #[test]
+    fn fence_bounces_stale_in_range_writes_only() {
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect_binary(server.addr()).unwrap();
+        let fence = Request::Fence {
+            epoch: 5,
+            lo: 100,
+            hi: Some(200),
+        };
+        assert_eq!(c.call(&fence).unwrap(), Response::Fenced { epoch: 5 });
+        let old = Version::new(4, 9);
+        let fresh = Version::new(5, 1);
+        // A pre-fence stamp inside the fenced range bounces with the
+        // standard busy retry hint.
+        assert_eq!(
+            c.call(&Request::VSet { key: 150, version: old, value: b"x".to_vec() }).unwrap(),
+            Response::Busy { retry_ms: BUSY_RETRY_MS }
+        );
+        // The same stamp outside the range — a repair of the retained
+        // range, say — and a post-fence stamp inside it both land.
+        assert!(vset(&mut c, 99, old, b"y".to_vec()).applied);
+        assert!(vset(&mut c, 150, fresh, b"z".to_vec()).applied);
+        // One fenced item refuses a whole MSET before anything lands.
+        let item = |key, version| SetItem {
+            key,
+            version,
+            value: b"vv".to_vec(),
+        };
+        let batch = vec![item(1, fresh), item(150, old)];
+        match c.call(&Request::MultiSet { items: batch }).unwrap() {
+            Response::Busy { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(vget(&mut c, 1), None, "refused batch must not half-apply");
+    }
+
+    #[test]
+    fn txn_prepare_commit_applies_pins_and_votes_honestly() {
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect_binary(server.addr()).unwrap();
+        let v = Version::new(3, 5);
+        let prep = |key, value: &[u8]| Request::TxnPrepare {
+            txn: 7,
+            epoch: 3,
+            key,
+            version: v,
+            value: value.to_vec(),
+        };
+        // Both keys vote yes; nothing is readable until commit.
+        for (key, value) in [(10, b"a" as &[u8]), (900, b"b")] {
+            assert_eq!(
+                c.call(&prep(key, value)).unwrap(),
+                Response::TxnVote { granted: true, version: v }
+            );
+        }
+        assert_eq!(vget(&mut c, 10), None, "staged pins must stay invisible");
+        // A rival transaction on a pinned key is refused and told the
+        // incumbent stamp so its clock can catch up.
+        let rival = Request::TxnPrepare {
+            txn: 8,
+            epoch: 3,
+            key: 10,
+            version: Version::new(3, 9),
+            value: b"r".to_vec(),
+        };
+        assert_eq!(
+            c.call(&rival).unwrap(),
+            Response::TxnVote { granted: false, version: v }
+        );
+        // Commit applies both pins through the versioned write path;
+        // a re-sent commit finds nothing left and still succeeds.
+        assert_eq!(
+            c.call(&Request::TxnCommit { txn: 7 }).unwrap(),
+            Response::TxnDone { applied: 2 }
+        );
+        assert_eq!(vget(&mut c, 10), Some((v, b"a".to_vec())));
+        assert_eq!(vget(&mut c, 900), Some((v, b"b".to_vec())));
+        assert_eq!(
+            c.call(&Request::TxnCommit { txn: 7 }).unwrap(),
+            Response::TxnDone { applied: 0 }
+        );
+        // A prepare whose stamp does not beat the stored copy votes no.
+        let stale = Request::TxnPrepare {
+            txn: 9,
+            epoch: 3,
+            key: 10,
+            version: v,
+            value: b"s".to_vec(),
+        };
+        assert_eq!(
+            c.call(&stale).unwrap(),
+            Response::TxnVote { granted: false, version: v }
+        );
+        // Abort drops pins without applying and releases the key.
+        let w = Version::new(3, 6);
+        let held = Request::TxnPrepare {
+            txn: 11,
+            epoch: 3,
+            key: 20,
+            version: w,
+            value: b"h".to_vec(),
+        };
+        assert_eq!(
+            c.call(&held).unwrap(),
+            Response::TxnVote { granted: true, version: w }
+        );
+        assert_eq!(
+            c.call(&Request::TxnAbort { txn: 11 }).unwrap(),
+            Response::TxnDone { applied: 1 }
+        );
+        assert_eq!(vget(&mut c, 20), None, "aborted pin must never apply");
+        let free = Request::TxnPrepare {
+            txn: 12,
+            epoch: 3,
+            key: 20,
+            version: Version::new(3, 7),
+            value: b"f".to_vec(),
+        };
+        assert!(matches!(
+            c.call(&free).unwrap(),
+            Response::TxnVote { granted: true, .. }
+        ));
+    }
+
+    #[test]
+    fn fence_between_prepare_and_commit_drops_the_pin() {
+        let server = NodeServer::spawn().unwrap();
+        let mut c = Conn::connect_binary(server.addr()).unwrap();
+        let v = Version::new(2, 1);
+        let prep = Request::TxnPrepare {
+            txn: 1,
+            epoch: 2,
+            key: 50,
+            version: v,
+            value: b"x".to_vec(),
+        };
+        assert_eq!(
+            c.call(&prep).unwrap(),
+            Response::TxnVote { granted: true, version: v }
+        );
+        // A range hand-off fences [0, 100) at a later epoch: the staged
+        // pin would land on a range this node no longer owns, so commit
+        // must skip it and report the short count to the driver.
+        let fence = Request::Fence {
+            epoch: 3,
+            lo: 0,
+            hi: Some(100),
+        };
+        assert_eq!(c.call(&fence).unwrap(), Response::Fenced { epoch: 3 });
+        assert_eq!(
+            c.call(&Request::TxnCommit { txn: 1 }).unwrap(),
+            Response::TxnDone { applied: 0 }
+        );
+        assert_eq!(vget(&mut c, 50), None, "fenced pin must never apply");
+        // The driver re-drives under the post-fence epoch and lands.
+        let retry = Request::TxnPrepare {
+            txn: 2,
+            epoch: 3,
+            key: 50,
+            version: Version::new(3, 1),
+            value: b"x".to_vec(),
+        };
+        assert!(matches!(
+            c.call(&retry).unwrap(),
+            Response::TxnVote { granted: true, .. }
+        ));
+        assert_eq!(
+            c.call(&Request::TxnCommit { txn: 2 }).unwrap(),
+            Response::TxnDone { applied: 1 }
+        );
+        assert_eq!(vget(&mut c, 50), Some((Version::new(3, 1), b"x".to_vec())));
     }
 }

@@ -1,0 +1,389 @@
+//! Atomic two-key cross-shard writes: the client half of the light
+//! two-phase protocol (`TPREP` / `TCOMMIT` / `TABORT`).
+//!
+//! A [`TxnClient`] drives one transfer at a time: both keys' new
+//! values are stamped with a SINGLE version drawn from the shared
+//! [`WriteClock`] under the current composite-snapshot epoch, prepared
+//! at every replica of both keys, and committed only if every replica
+//! granted its pin and the snapshot generation did not move between
+//! prepare and commit. The matched stamp is the atomicity witness: a
+//! reader that observes the two keys carrying the same version is
+//! looking at one transfer's complete effect, and a mismatched pair is
+//! detectably in-flight (a re-drive is still owed).
+//!
+//! Every failure mode funnels into abort-and-retry under a fresh
+//! snapshot:
+//!
+//! - a **vote refusal** (conflicting pin, newer stored version, or an
+//!   epoch fence on a just-moved range) aborts the attempt and feeds
+//!   the refusal version through [`WriteClock::observe`], so the next
+//!   attempt's stamp beats the incumbent;
+//! - an **epoch change between prepare and commit** — a split, merge,
+//!   or promotion republished the shard table — aborts cleanly before
+//!   anything applies;
+//! - a **short commit** (a fence or node restart dropped pins after
+//!   the vote) re-drives the whole transfer with a fresh stamp: pin
+//!   application is idempotent highest-version-wins, so the re-drive
+//!   converges both keys onto the new matched pair.
+//!
+//! The driver acks a transfer only after every replica of both keys
+//! reports its pin applied — an acked transfer is durable at full
+//! replication and can never be half-applied at quiescence.
+
+use super::client::Conn;
+use super::pool::{busy_backoff, is_conn_error};
+use super::protocol::{Request, Response};
+use crate::algo::{DatumId, NodeId};
+use crate::coordinator::registry::KeyRegistry;
+use crate::coordinator::snapshot::{SnapshotCell, SnapshotReader};
+use crate::storage::{Version, WriteClock};
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Bound on abort-and-retry rounds per transfer. Each round runs under
+/// a freshly refreshed snapshot with a growing backoff, so the loop
+/// outlives any single splits-merge-kill burst; a transfer that still
+/// cannot land is reported as an error instead of spinning forever.
+const MAX_TXN_ATTEMPTS: usize = 64;
+
+/// Process-wide transaction id source. Ids must be unique across every
+/// concurrent driver in the process — the server keys its pin table by
+/// them — and a plain counter gives that without coordination.
+static TXN_IDS: AtomicU64 = AtomicU64::new(1);
+
+/// Outcome of a committed transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TxnReceipt {
+    /// The stamp BOTH keys committed under — the matched-pair witness.
+    pub version: Version,
+    /// Aborted attempts this transfer burned before committing.
+    pub aborts: u64,
+}
+
+/// Client-side driver for atomic two-key writes over the data plane.
+pub struct TxnClient {
+    reader: SnapshotReader,
+    conns: HashMap<NodeId, (SocketAddr, Conn)>,
+    clock: WriteClock,
+    registry: Option<Arc<KeyRegistry>>,
+    binary: bool,
+    commits: u64,
+    aborts: u64,
+}
+
+impl TxnClient {
+    /// Driver subscribed to `cell`, stamping from `clock` — pass the
+    /// coordinator's clock (or the pool's) so transactional writes
+    /// share the cluster's version order. Connections open lazily.
+    pub fn connect(cell: &Arc<SnapshotCell>, clock: WriteClock) -> TxnClient {
+        TxnClient {
+            reader: SnapshotReader::new(Arc::clone(cell)),
+            conns: HashMap::new(),
+            clock,
+            registry: None,
+            binary: false,
+            commits: 0,
+            aborts: 0,
+        }
+    }
+
+    /// Speak the length-prefixed binary framing on every connection.
+    pub fn binary(mut self, on: bool) -> TxnClient {
+        self.binary = on;
+        self
+    }
+
+    /// Register committed keys with the coordinator write-back
+    /// registry, like the pool does for acked SETs.
+    pub fn registry(mut self, registry: Arc<KeyRegistry>) -> TxnClient {
+        self.registry = Some(registry);
+        self
+    }
+
+    /// Transfers committed by this driver.
+    pub fn commits(&self) -> u64 {
+        self.commits
+    }
+
+    /// Attempts aborted by this driver (each committed transfer may
+    /// have burned several).
+    pub fn aborts(&self) -> u64 {
+        self.aborts
+    }
+
+    /// Connection to `node`, (re)established if absent or re-addressed.
+    fn conn(&mut self, node: NodeId, addr: SocketAddr) -> std::io::Result<&mut Conn> {
+        let dial = if self.binary {
+            Conn::connect_binary
+        } else {
+            Conn::connect
+        };
+        match self.conns.entry(node) {
+            Entry::Occupied(e) => {
+                let slot = e.into_mut();
+                if slot.0 != addr {
+                    *slot = (addr, dial(addr)?);
+                }
+                Ok(&mut slot.1)
+            }
+            Entry::Vacant(v) => Ok(&mut v.insert((addr, dial(addr)?)).1),
+        }
+    }
+
+    /// Atomically write `value_a` to `key_a` and `value_b` to `key_b`
+    /// (the keys may live on different shards), retrying through
+    /// aborts until the transfer commits at full replication. Returns
+    /// the stamp both keys now carry.
+    pub fn transfer(
+        &mut self,
+        key_a: DatumId,
+        value_a: Vec<u8>,
+        key_b: DatumId,
+        value_b: Vec<u8>,
+    ) -> std::io::Result<TxnReceipt> {
+        let mut burned = 0u64;
+        for attempt in 0..MAX_TXN_ATTEMPTS {
+            let snap = Arc::clone(self.reader.refresh());
+            let routed_generation = self.reader.observed_generation();
+            let txn = TXN_IDS.fetch_add(1, Ordering::Relaxed);
+            // ONE stamp for both keys: matching versions on the pair
+            // are the committed-together witness.
+            let stamp = self.clock.stamp(snap.epoch);
+            let mut by_node: HashMap<NodeId, Vec<Request>> = HashMap::new();
+            let mut replicas: Vec<NodeId> = Vec::new();
+            for (key, value) in [(key_a, &value_a), (key_b, &value_b)] {
+                snap.replica_set(key, &mut replicas);
+                if replicas.is_empty() {
+                    return Err(std::io::Error::other(format!("no replicas for key {key}")));
+                }
+                for &n in &replicas {
+                    by_node.entry(n).or_default().push(Request::TxnPrepare {
+                        txn,
+                        epoch: snap.epoch,
+                        key,
+                        version: stamp,
+                        value: value.clone(),
+                    });
+                }
+            }
+            let mut node_ids: Vec<NodeId> = by_node.keys().copied().collect();
+            node_ids.sort_unstable();
+            // Phase one: every replica of both keys must grant its pin.
+            let mut granted = true;
+            for &node in &node_ids {
+                let Some(addr) = snap.addr_of(node) else {
+                    granted = false;
+                    break;
+                };
+                let reqs = &by_node[&node];
+                match self.conn(node, addr).and_then(|c| c.pipeline(reqs)) {
+                    Ok(resps) => {
+                        for resp in resps {
+                            match resp {
+                                Response::TxnVote { granted: true, .. } => {}
+                                Response::TxnVote { granted: false, version } => {
+                                    // Next attempt's stamp must beat
+                                    // the incumbent that refused us.
+                                    self.clock.observe(version.seq);
+                                    granted = false;
+                                }
+                                // An epoch fence refused the prepare:
+                                // the snapshot is stale, refresh wins.
+                                Response::Busy { .. } => granted = false,
+                                other => {
+                                    return Err(std::io::Error::other(format!(
+                                        "unexpected response {other:?}"
+                                    )));
+                                }
+                            }
+                        }
+                    }
+                    Err(e) if is_conn_error(&e) => {
+                        self.conns.remove(&node);
+                        granted = false;
+                    }
+                    Err(e) => return Err(e),
+                }
+                if !granted {
+                    break;
+                }
+            }
+            // The epoch-change fence between the phases: a shard table
+            // republished since the prepares routed (split, merge,
+            // promotion) aborts cleanly — nothing has applied yet.
+            if granted && self.reader.cell_generation() != routed_generation {
+                granted = false;
+            }
+            if granted {
+                // Phase two: apply every pin. A node answering short —
+                // a fence or restart dropped pins after the vote —
+                // voids the attempt, and the re-drive (fresh stamp,
+                // same values) converges both keys.
+                let mut complete = true;
+                for &node in &node_ids {
+                    let expected = by_node[&node].len() as u64;
+                    let Some(addr) = snap.addr_of(node) else {
+                        complete = false;
+                        continue;
+                    };
+                    match self
+                        .conn(node, addr)
+                        .and_then(|c| c.call(&Request::TxnCommit { txn }))
+                    {
+                        Ok(Response::TxnDone { applied }) => {
+                            if applied < expected {
+                                complete = false;
+                            }
+                        }
+                        Ok(other) => {
+                            return Err(std::io::Error::other(format!(
+                                "unexpected response {other:?}"
+                            )));
+                        }
+                        Err(e) if is_conn_error(&e) => {
+                            self.conns.remove(&node);
+                            complete = false;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                if complete {
+                    if let Some(registry) = &self.registry {
+                        registry.register(key_a);
+                        registry.register(key_b);
+                    }
+                    self.commits += 1;
+                    return Ok(TxnReceipt {
+                        version: stamp,
+                        aborts: burned,
+                    });
+                }
+            } else {
+                // Release whatever pins the refused attempt staged; a
+                // node that never heard of `txn` answers zero, and an
+                // unreachable one expires the pins by TTL.
+                for &node in &node_ids {
+                    let Some(addr) = snap.addr_of(node) else { continue };
+                    let abort = Request::TxnAbort { txn };
+                    if self.conn(node, addr).and_then(|c| c.call(&abort)).is_err() {
+                        self.conns.remove(&node);
+                    }
+                }
+            }
+            self.aborts += 1;
+            burned += 1;
+            // Growing, jittered backoff desynchronizes rival drivers
+            // (the retry loop is the livelock guard: conflicts vote no
+            // instead of deadlocking, so someone always proceeds).
+            busy_backoff(attempt, (attempt as u64 + 1).min(20), key_a ^ key_b);
+        }
+        Err(std::io::Error::other(format!(
+            "transfer {key_a}<->{key_b} still aborting after {MAX_TXN_ATTEMPTS} attempts"
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Coordinator;
+    use crate::net::pool::PoolConfig;
+    use crate::net::RouterPool;
+
+    fn cluster(nodes: u32, replicas: usize) -> Coordinator {
+        let mut coord = Coordinator::new(replicas);
+        for i in 0..nodes {
+            coord.spawn_node(i, 1.0).unwrap();
+        }
+        coord
+    }
+
+    fn read_pair(pool: &RouterPool, a: u64, b: u64) -> (Option<Vec<u8>>, Option<Vec<u8>>) {
+        let (mut values, _) = pool.multi_get(&[a, b]).unwrap();
+        let vb = values.pop().unwrap();
+        let va = values.pop().unwrap();
+        (va, vb)
+    }
+
+    #[test]
+    fn transfer_commits_both_keys_with_one_stamp() {
+        let coord = cluster(4, 2);
+        let cell = coord.snapshot_cell();
+        let mut txn = TxnClient::connect(&cell, coord.handles().clock).binary(true);
+        let receipt = txn.transfer(10, b"a1".to_vec(), 20, b"b1".to_vec()).unwrap();
+        assert_eq!((txn.commits(), txn.aborts()), (1, 0));
+        // Every replica of both keys carries the SAME stamp.
+        let snap = cell.load();
+        let mut replicas = Vec::new();
+        for key in [10u64, 20] {
+            snap.replica_set(key, &mut replicas);
+            for &n in &replicas {
+                let mut c = Conn::connect(snap.addr_of(n).unwrap()).unwrap();
+                match c.call(&Request::VGet { key }).unwrap() {
+                    Response::VValue { version, .. } => assert_eq!(
+                        version, receipt.version,
+                        "key {key} on node {n} missed the pair stamp"
+                    ),
+                    other => panic!("replica missing the write: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_retries_past_a_conflicting_incumbent() {
+        let coord = cluster(3, 2);
+        let cell = coord.snapshot_cell();
+        // Seed both keys through the pool with fresher-than-zero stamps.
+        let pool =
+            RouterPool::connect(&cell, PoolConfig::new(1).clock(coord.handles().clock)).unwrap();
+        pool.multi_set(vec![(5, b"x".to_vec()), (6, b"y".to_vec())])
+            .unwrap();
+        // A driver with its own cold clock must observe the incumbents
+        // (vote-no feedback) and still land the transfer.
+        let mut txn = TxnClient::connect(&cell, WriteClock::new());
+        let receipt = txn.transfer(5, b"x2".to_vec(), 6, b"y2".to_vec()).unwrap();
+        assert!(txn.commits() == 1);
+        assert!(receipt.version.seq > 0);
+        let (va, vb) = read_pair(&pool, 5, 6);
+        assert_eq!(
+            (va.as_deref(), vb.as_deref()),
+            (Some(&b"x2"[..]), Some(&b"y2"[..]))
+        );
+    }
+
+    #[test]
+    fn rival_drivers_of_one_pair_serialize_through_votes() {
+        let coord = cluster(4, 2);
+        let cell = coord.snapshot_cell();
+        let clock = coord.handles().clock;
+        let a = TxnClient::connect(&cell, clock.clone());
+        let b = TxnClient::connect(&cell, clock.clone()).binary(true);
+        let mut handles = Vec::new();
+        for (i, mut driver) in [(0u8, a), (1u8, b)] {
+            handles.push(std::thread::spawn(move || {
+                for round in 0..20u64 {
+                    driver
+                        .transfer(100, vec![i, round as u8], 200, vec![i, round as u8, 1])
+                        .unwrap();
+                }
+                driver.commits()
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 40, "every racing transfer must eventually commit");
+        // Quiescent state: both keys agree on the last committed pair.
+        let pool = RouterPool::connect(&cell, PoolConfig::new(1).read_quorum(2)).unwrap();
+        let (mut values, _) = pool.multi_get(&[100, 200]).unwrap();
+        let vb = values.pop().unwrap().expect("key 200 present");
+        let va = values.pop().unwrap().expect("key 100 present");
+        assert_eq!(
+            &va[..2],
+            &vb[..2],
+            "pair written by different transfers: {va:?} {vb:?}"
+        );
+    }
+}

@@ -66,6 +66,14 @@ impl Zipf {
 pub enum Op {
     Set { key: u64, size: u32 },
     Get { key: u64 },
+    /// One batched read: the pool splits the keys by shard range and
+    /// replica set and pipelines one `MGET` per target node, counting
+    /// `keys.len()` ops toward the batch result.
+    MultiGet { keys: Vec<u64> },
+    /// One batched write: every key takes `value_for(key, size)`, the
+    /// batch is stamped from the shared clock and fanned as one `MSET`
+    /// per holder node.
+    MultiSet { keys: Vec<u64>, size: u32 },
 }
 
 /// Deterministic payload for `key` (`size` bytes), shared by every

@@ -16,7 +16,11 @@
 //! `coordinator/replicate.rs` and `net/server.rs`, plus the seeded
 //! chaos property in `tests/properties.rs`.
 
+use asura::coordinator::shard::ShardMap;
 use asura::loadgen::{run_shard_failover, run_shard_suite, ShardBenchConfig};
+use asura::net::{Conn, Request, Response};
+use asura::prng::SplitMix64;
+use asura::storage::Version;
 
 fn quick_cfg() -> ShardBenchConfig {
     ShardBenchConfig {
@@ -111,4 +115,64 @@ fn shard_suite_emits_the_bench_trajectory() {
     assert!(failover.get("stranded_writes").is_some());
     let old_term = failover.get("old_term").unwrap().as_u64().unwrap();
     assert!(failover.get("new_term").unwrap().as_u64().unwrap() > old_term);
+}
+
+#[test]
+fn pre_split_stray_writes_bounce_at_write_time_for_every_seed() {
+    // Regression for the write-time epoch fence `split_with` installs
+    // on the source shard's nodes: a writer still routing by the
+    // pre-split snapshot gets `Busy` when it stamps the moved range,
+    // instead of landing a stray that reconcile must sweep later. The
+    // stale stamp carries a huge sequence number so the only thing
+    // that can refuse it is the fence — highest-version-wins alone
+    // would have applied it.
+    for seed in [1u64, 0xFACE, 0xDEAD_BEEF] {
+        println!("fence regression seed = {seed:#x}");
+        let mut rng = SplitMix64::new(seed);
+        let mut map = ShardMap::new(2);
+        for j in 0..4 {
+            map.spawn_node(0, j, 1.0).unwrap();
+        }
+        let stale_epoch = map.snapshot().epoch;
+        let at = u64::MAX / 2;
+        map.split_with(at, |coord| {
+            for j in 0..4 {
+                coord.spawn_node(100 + j, 1.0)?;
+            }
+            Ok(())
+        })
+        .unwrap();
+        let sources = map.coordinator(0).unwrap().node_addrs();
+        for (n, &(_, addr)) in sources.iter().enumerate() {
+            let mut conn = Conn::connect(addr).unwrap();
+            // Seed-derived key in the carved range [at, MAX].
+            let moved = at + rng.next_u64() % (u64::MAX - at);
+            let stale = Request::VSet {
+                key: moved,
+                version: Version::new(stale_epoch, u64::MAX),
+                value: vec![0xBA, n as u8],
+            };
+            assert!(
+                matches!(conn.call(&stale).unwrap(), Response::Busy { .. }),
+                "source node {n} must fence the pre-split stamp at {moved:#x}"
+            );
+            // The same stale stamp below the split point is untouched:
+            // the fence covers exactly the range that moved.
+            let kept = rng.next_u64() % at;
+            let below = Request::VSet {
+                key: kept,
+                version: Version::new(stale_epoch, u64::MAX),
+                value: vec![0xBB, n as u8],
+            };
+            assert!(
+                matches!(conn.call(&below).unwrap(), Response::VStored { .. }),
+                "key {kept:#x} below the split point must not be fenced"
+            );
+        }
+        // A writer on the post-split map reaches the moved range fine.
+        let fresh_key = at + 12_345;
+        map.set(fresh_key, b"post-split").unwrap();
+        let got = map.get(fresh_key).unwrap();
+        assert_eq!(got.as_deref(), Some(&b"post-split"[..]));
+    }
 }

@@ -1,0 +1,298 @@
+//! Integration: the cross-shard transaction plane.
+//!
+//! Pins the atomicity contract of [`asura::net::TxnClient`]: a two-key
+//! transfer whose keys straddle a shard boundary either lands on both
+//! keys with one matched version stamp or not at all, and once the
+//! driver has an ack the pair survives everything the control plane
+//! does afterwards.
+//!
+//! The scenario: driver threads run back-to-back transfers over
+//! boundary-straddling key pairs while the main thread executes a
+//! fixed chaos script against the shard map — online splits through
+//! the live pair space (the write-fence path), splits and merges of a
+//! quiet upper range (ownership hand-offs both directions), and shard
+//! leader kill/promote cycles with a deliberate headless window. The
+//! pair shards run on harness-owned external node servers so a leader
+//! kill takes down exactly the control plane, never the data plane.
+//!
+//! Every key, split point and victim derives from the printed seed, so
+//! a failure reproduces by rerunning with that value. Merges only ever
+//! retire ranges above every pair key: a merge requires traffic over
+//! the retiring range to be quiesced (see `ShardMap::merge`), and the
+//! test's background keys — not its transfer pairs — are what ride
+//! those hand-offs.
+
+use asura::coordinator::shard::ShardMap;
+use asura::coordinator::Coordinator;
+use asura::net::pool::PoolConfig;
+use asura::net::server::NodeServer;
+use asura::net::TxnClient;
+use asura::prng::SplitMix64;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+const SEED: u64 = 0x7A0_C0FFEE;
+const DRIVERS: usize = 3;
+const PAIRS_PER_DRIVER: usize = 2;
+/// Every driver completes at least this many rounds, even if the
+/// chaos script finishes first.
+const MIN_ROUNDS: u64 = 30;
+/// Runaway backstop if the chaos script stalls; never the common case.
+const MAX_ROUNDS: u64 = 2_000;
+
+const MID: u64 = u64::MAX / 2;
+/// Pair high keys stay below this line; chaos splits and merges of the
+/// upper range all happen at or above it.
+const CHAOS_FLOOR: u64 = MID + MID / 2;
+
+/// What the chaos script can do between driver rounds.
+#[derive(Clone, Copy)]
+enum Chaos {
+    /// Carve a range at or above [`CHAOS_FLOOR`] onto fresh in-process
+    /// nodes, then write background keys into it.
+    SplitHigh,
+    /// Split through the live pair space below `MID`: racing prepares
+    /// bounce off the write fence until they refresh and re-route.
+    SplitLow,
+    /// Merge the deepest all-quiet upper shard back into its
+    /// predecessor (moves the background keys, lifts + installs
+    /// fences).
+    MergeHigh,
+    /// Kill the leader of the shard owning key 0 (external data
+    /// nodes), hold it headless under live transfers, promote from its
+    /// shadowed control state.
+    KillLow,
+    /// Same cycle against the shard starting at `MID`.
+    KillHigh,
+}
+
+/// Fixed script so every arm provably runs; all the *parameters* (split
+/// points, keys) still derive from the seed. Split/merge counts are
+/// balanced so each merge always has an upper shard to retire.
+const CHAOS_SCRIPT: &[Chaos] = &[
+    Chaos::SplitHigh,
+    Chaos::KillLow,
+    Chaos::SplitLow,
+    Chaos::KillHigh,
+    Chaos::SplitHigh,
+    Chaos::MergeHigh,
+    Chaos::SplitLow,
+    Chaos::KillLow,
+    Chaos::SplitHigh,
+    Chaos::MergeHigh,
+    Chaos::KillHigh,
+    Chaos::MergeHigh,
+];
+
+/// Transfer payload: identifies (driver, pair, side) and carries the
+/// round, so the quiescent read proves exactly which transfer each key
+/// last saw — a half-applied transfer would leave the sides on
+/// different rounds.
+fn pair_value(driver: usize, pair: usize, side: u8, round: u64) -> Vec<u8> {
+    let mut v = vec![driver as u8, pair as u8, side];
+    v.extend_from_slice(&round.to_le_bytes());
+    v
+}
+
+/// A split point in `[lo, hi)` that is not already a range boundary.
+fn fresh_boundary(rng: &mut SplitMix64, map: &ShardMap, lo: u64, hi: u64) -> u64 {
+    loop {
+        let at = lo + rng.next_u64() % (hi - lo);
+        if !map.ranges().iter().any(|&(s, _)| s == at) {
+            return at;
+        }
+    }
+}
+
+/// Kill the leader of the shard owning `anchor`, leave it headless
+/// for a beat, then promote a replacement from the shadowed state.
+fn kill_and_promote(map: &mut ShardMap, anchor: u64) {
+    let idx = map.shard_of(anchor);
+    let state = map.export_state(idx).unwrap();
+    let term = map.coordinator(idx).unwrap().term();
+    let handles = map.handles(idx);
+    drop(map.take_coordinator(idx).expect("shard was live"));
+    // Headless window: the data plane keeps serving the drivers.
+    thread::sleep(Duration::from_millis(30));
+    let promoted = Coordinator::promote_from(&state, term + 1, handles).unwrap();
+    map.install(idx, promoted).unwrap();
+}
+
+#[test]
+fn chaos_transfers_are_atomic_and_never_lose_an_ack() {
+    println!("txn-plane seed = {SEED:#x}");
+    let mut rng = SplitMix64::new(SEED);
+
+    // The two pair shards run on external node servers: a leader kill
+    // must take down the control plane only (a coordinator owns the
+    // servers it spawned itself and would drop them with it).
+    let servers: Vec<NodeServer> = (0..4).map(|_| NodeServer::spawn().unwrap()).collect();
+    let mut map = ShardMap::new(2);
+    map.join_external(0, 0, 1.0, servers[0].addr()).unwrap();
+    map.join_external(0, 1, 1.0, servers[1].addr()).unwrap();
+    map.split_with(MID, |coord| {
+        coord.join_external(2, 1.0, servers[2].addr())?;
+        coord.join_external(3, 1.0, servers[3].addr())?;
+        Ok(())
+    })
+    .unwrap();
+
+    // Seed-derived boundary-straddling pairs, globally distinct.
+    let mut used: HashSet<u64> = HashSet::new();
+    let mut pairs: Vec<Vec<(u64, u64)>> = Vec::new();
+    for _ in 0..DRIVERS {
+        let mut mine = Vec::new();
+        for _ in 0..PAIRS_PER_DRIVER {
+            let a = loop {
+                let k = rng.next_u64() % MID;
+                if used.insert(k) {
+                    break k;
+                }
+            };
+            let b = loop {
+                let k = MID + rng.next_u64() % (CHAOS_FLOOR - MID);
+                if used.insert(k) {
+                    break k;
+                }
+            };
+            mine.push((a, b));
+        }
+        pairs.push(mine);
+    }
+
+    let cell = map.snapshot_cell();
+    let registry = map.key_registry();
+    let clock = map.handles(0).clock;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let drivers: Vec<_> = pairs
+        .iter()
+        .enumerate()
+        .map(|(d, mine)| {
+            let cell = Arc::clone(&cell);
+            let registry = Arc::clone(&registry);
+            let clock = clock.clone();
+            let stop = Arc::clone(&stop);
+            let mine = mine.clone();
+            thread::spawn(move || {
+                let mut txn = TxnClient::connect(&cell, clock).registry(registry);
+                let mut round = 0u64;
+                while round < MIN_ROUNDS || (!stop.load(Ordering::Relaxed) && round < MAX_ROUNDS) {
+                    for (p, &(a, b)) in mine.iter().enumerate() {
+                        let va = pair_value(d, p, 0, round);
+                        let vb = pair_value(d, p, 1, round);
+                        txn.transfer(a, va, b, vb).unwrap_or_else(|e| {
+                            panic!("driver {d} pair {p} round {round}: {e}")
+                        });
+                    }
+                    round += 1;
+                }
+                (round, txn.commits(), txn.aborts())
+            })
+        })
+        .collect();
+
+    // The chaos script, raced against the drivers.
+    let mut next_node: u32 = 100;
+    let mut background: Vec<u64> = Vec::new();
+    let mut merges = 0u32;
+    for &action in CHAOS_SCRIPT {
+        thread::sleep(Duration::from_millis(15));
+        match action {
+            Chaos::SplitHigh => {
+                let at = fresh_boundary(&mut rng, &map, CHAOS_FLOOR, u64::MAX);
+                let (n0, n1) = (next_node, next_node + 1);
+                next_node += 2;
+                map.split_with(at, |coord| {
+                    coord.spawn_node(n0, 1.0)?;
+                    coord.spawn_node(n1, 1.0)?;
+                    Ok(())
+                })
+                .unwrap();
+                // Seed the carved range with keys a later merge moves.
+                for _ in 0..4 {
+                    let key = at + rng.next_u64() % (u64::MAX - at);
+                    map.set(key, &key.to_le_bytes()).unwrap();
+                    background.push(key);
+                }
+            }
+            Chaos::SplitLow => {
+                let at = fresh_boundary(&mut rng, &map, 1, MID);
+                let (n0, n1) = (next_node, next_node + 1);
+                next_node += 2;
+                map.split_with(at, |coord| {
+                    coord.spawn_node(n0, 1.0)?;
+                    coord.spawn_node(n1, 1.0)?;
+                    Ok(())
+                })
+                .unwrap();
+            }
+            Chaos::MergeHigh => {
+                let ranges = map.ranges();
+                let idx = (0..ranges.len() - 1)
+                    .rev()
+                    .find(|&i| ranges[i + 1].0 >= CHAOS_FLOOR)
+                    .expect("script keeps an upper shard available to merge");
+                map.merge(idx).unwrap();
+                merges += 1;
+            }
+            Chaos::KillLow => kill_and_promote(&mut map, 0),
+            Chaos::KillHigh => kill_and_promote(&mut map, MID),
+        }
+    }
+    assert_eq!(merges, 3, "every merge in the script must have run");
+
+    stop.store(true, Ordering::Relaxed);
+    let outcomes: Vec<(u64, u64, u64)> = drivers.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // Quiesce: converge every registered stray onto its owning shard,
+    // then read with read quorum 0 (= all replicas) so nothing hides
+    // behind a lucky replica choice.
+    map.reconcile_writes();
+    map.reconcile_writes();
+    let pool = map.connect_pool(PoolConfig::new(1).read_quorum(0)).unwrap();
+
+    let mut total_commits = 0u64;
+    let mut total_aborts = 0u64;
+    for (d, &(rounds, commits, aborts)) in outcomes.iter().enumerate() {
+        assert!(rounds >= MIN_ROUNDS, "driver {d} ran only {rounds} rounds");
+        assert_eq!(
+            commits,
+            rounds * PAIRS_PER_DRIVER as u64,
+            "driver {d}: every acked round is a committed transfer"
+        );
+        total_commits += commits;
+        total_aborts += aborts;
+        let last = rounds - 1;
+        for (p, &(a, b)) in pairs[d].iter().enumerate() {
+            let (values, res) = pool.multi_get(&[a, b]).unwrap();
+            assert_eq!(res.lost, 0, "driver {d} pair {p}: a pair key vanished");
+            assert_eq!(
+                values[0].as_deref(),
+                Some(&pair_value(d, p, 0, last)[..]),
+                "driver {d} pair {p}: key A lost the last acked transfer"
+            );
+            assert_eq!(
+                values[1].as_deref(),
+                Some(&pair_value(d, p, 1, last)[..]),
+                "driver {d} pair {p}: key B lost the last acked transfer"
+            );
+        }
+    }
+    println!("txn-plane: {total_commits} commits, {total_aborts} aborted attempts");
+
+    // The background keys rode a split out and a merge back; none may
+    // be lost or stale.
+    let (values, res) = pool.multi_get(&background).unwrap();
+    assert_eq!(res.lost, 0, "background keys lost in the upper hand-offs");
+    for (key, value) in background.iter().zip(values) {
+        assert_eq!(
+            value.as_deref(),
+            Some(&key.to_le_bytes()[..]),
+            "background key {key:#x} went stale"
+        );
+    }
+}

@@ -13,13 +13,14 @@
 use asura::net::frame;
 use asura::net::protocol::{
     read_request, read_response, write_request, write_response, Parsed, Request, Response,
+    SetItem, VsetAck,
 };
 use asura::prng::SplitMix64;
 use asura::storage::Version;
 use std::io::BufReader;
 
-const REQUEST_VARIANTS: usize = 17;
-const RESPONSE_VARIANTS: usize = 19;
+const REQUEST_VARIANTS: usize = 23;
+const RESPONSE_VARIANTS: usize = 24;
 
 fn arb_value(rng: &mut SplitMix64, max: usize) -> Vec<u8> {
     let len = (rng.next_u64() % (max as u64 + 1)) as usize;
@@ -41,6 +42,17 @@ fn arb_opt(rng: &mut SplitMix64) -> Option<u64> {
     } else {
         Some(rng.next_u64())
     }
+}
+
+fn arb_items(rng: &mut SplitMix64) -> Vec<SetItem> {
+    let n = (rng.next_u64() % 5) as usize;
+    (0..n)
+        .map(|_| SetItem {
+            key: rng.next_u64(),
+            version: arb_version(rng),
+            value: arb_value(rng, 64),
+        })
+        .collect()
 }
 
 /// Error text that survives the *text* framing, which flattens newlines
@@ -107,6 +119,30 @@ fn arb_request(rng: &mut SplitMix64, v: usize) -> Request {
             since: rng.next_u64(),
         },
         15 => Request::Ping,
+        16 => Request::MultiGet {
+            keys: arb_keys(rng),
+        },
+        17 => Request::MultiSet {
+            items: arb_items(rng),
+        },
+        18 => Request::TxnPrepare {
+            txn: rng.next_u64(),
+            epoch: rng.next_u64(),
+            key: rng.next_u64(),
+            version: arb_version(rng),
+            value: arb_value(rng, 256),
+        },
+        19 => Request::TxnCommit {
+            txn: rng.next_u64(),
+        },
+        20 => Request::TxnAbort {
+            txn: rng.next_u64(),
+        },
+        21 => Request::Fence {
+            epoch: rng.next_u64(),
+            lo: rng.next_u64(),
+            hi: arb_opt(rng),
+        },
         _ => Request::Quit,
     }
 }
@@ -170,6 +206,41 @@ fn arb_response(rng: &mut SplitMix64, v: usize) -> Response {
         16 => Response::Pong,
         17 => Response::Busy {
             retry_ms: rng.next_u64(),
+        },
+        18 => Response::MultiValue {
+            items: {
+                let n = (rng.next_u64() % 5) as usize;
+                (0..n)
+                    .map(|_| {
+                        if rng.next_u64() % 3 == 0 {
+                            None
+                        } else {
+                            Some((arb_version(rng), arb_value(rng, 64)))
+                        }
+                    })
+                    .collect()
+            },
+        },
+        19 => Response::MultiStored {
+            acks: {
+                let n = (rng.next_u64() % 5) as usize;
+                (0..n)
+                    .map(|_| VsetAck {
+                        applied: rng.next_u64() % 2 == 0,
+                        version: arb_version(rng),
+                    })
+                    .collect()
+            },
+        },
+        20 => Response::TxnVote {
+            granted: rng.next_u64() % 2 == 0,
+            version: arb_version(rng),
+        },
+        21 => Response::TxnDone {
+            applied: rng.next_u64(),
+        },
+        22 => Response::Fenced {
+            epoch: rng.next_u64(),
         },
         _ => Response::Error(arb_error_text(rng)),
     }

@@ -42,6 +42,13 @@ Requirements are keyed by the artifact's "bench" field:
                      rereplicate) must be present, the replay arm must
                      have recovered keys from disk, and its TTF-RF must
                      be positive, finite, and beat re-replication's
+  multikey        -> top-level batch/transfers/speedup/txn_commits/
+                     txn_aborts; the pipelined multi-get speedup over
+                     the sequential baseline must be finite and at
+                     least the MULTIKEY_MIN_SPEEDUP floor, and at
+                     least one cross-shard transfer must have
+                     committed; per-result ops, seq_ns, batched_ns,
+                     speedup, txn_commits, txn_aborts, lost
 
 Artifact names are part of the contract: a basename starting with
 ``BENCH_`` must match a known ``BENCH_<kind>`` prefix, and the file's
@@ -75,6 +82,17 @@ TOP_REQUIRED = {
     ],
     "loadctl": ["nodes", "replicas", "keys", "read_ops", "skew_p99_ratio"],
     "restart": ["nodes", "replicas", "keys", "outage_ops", "min_speedup", "speedup"],
+    "multikey": [
+        "nodes",
+        "replicas",
+        "workers",
+        "batch",
+        "transfers",
+        "min_speedup",
+        "speedup",
+        "txn_commits",
+        "txn_aborts",
+    ],
 }
 
 RESULT_REQUIRED = {
@@ -99,6 +117,15 @@ RESULT_REQUIRED = {
         "lost",
         "audit_under",
     ],
+    "multikey": [
+        "ops",
+        "seq_ns",
+        "batched_ns",
+        "speedup",
+        "txn_commits",
+        "txn_aborts",
+        "lost",
+    ],
 }
 
 # Extra fields required on specific result scenarios.
@@ -119,6 +146,12 @@ OBS_MAX_OVERHEAD = 1.10
 # un-steers the read path from uploading a green trajectory.
 LOADCTL_MAX_SKEW_RATIO = 3.0
 
+# The multikey bench's acceptance floor: pipelined multi-get at the
+# headline batch size must beat one blocking round trip per key by at
+# least this factor. Mirrors MULTIKEY_MIN_SPEEDUP inside the bench, so
+# a trajectory produced with a loosened --min-speedup still fails here.
+MULTIKEY_MIN_SPEEDUP = 2.0
+
 # Artifact basename prefix -> the bench kind it must contain. Matched
 # longest-prefix-first so BENCH_coord_failover.json never resolves via
 # a shorter cousin, and suffixed variants (BENCH_throughput_w8.json)
@@ -132,6 +165,7 @@ FILENAME_BENCH = {
     "BENCH_obs": "obs",
     "BENCH_loadctl": "loadctl",
     "BENCH_restart": "restart",
+    "BENCH_multikey": "multikey",
 }
 
 
@@ -208,6 +242,15 @@ def check_file(path):
             errors.append(
                 f"{path}: skew_p99_ratio {ratio} exceeds the {LOADCTL_MAX_SKEW_RATIO}x ceiling"
             )
+    if bench == "multikey":
+        speedup = doc.get("speedup")
+        if finite_number(speedup) and speedup < MULTIKEY_MIN_SPEEDUP:
+            errors.append(
+                f"{path}: speedup {speedup} is below the {MULTIKEY_MIN_SPEEDUP}x floor"
+            )
+        commits = doc.get("txn_commits")
+        if finite_number(commits) and commits < 1:
+            errors.append(f"{path}: no cross-shard transfer ever committed")
     results = doc.get("results")
     if not isinstance(results, list) or not results:
         errors.append(f"{path}: results missing or empty")
